@@ -1,0 +1,174 @@
+//! Ablations A1–A5 (DESIGN.md §3) — the design choices behind the paper's
+//! framework, each isolated:
+//!
+//! * **A1 compression** — accuracy vs codebook size k (Theorem 3 predicts
+//!   the extra error decays like k^{-2/d});
+//! * **A2 weighting** — group-size-weighted vs unweighted affinity;
+//! * **A3 comm** — bytes on the wire vs accuracy across compression, with
+//!   the modeled WAN transfer time;
+//! * **A4 backend** — native Lanczos vs XLA artifact embedding (accuracy
+//!   parity + central-step latency);
+//! * **A5 algo** — recursive ncut vs NJW embedding clustering.
+//!
+//! Filter: `cargo bench --bench ablations -- compression|weighting|comm|backend|algo`.
+
+use dsc::bench::Table;
+use dsc::data::gmm;
+use dsc::prelude::*;
+
+fn want(filter: &Option<String>, key: &str) -> bool {
+    filter.as_deref().map(|f| key.contains(f)).unwrap_or(true)
+}
+
+fn mk_cfg(codes: usize) -> PipelineConfig {
+    PipelineConfig {
+        total_codes: codes,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: 61,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let n: usize = std::env::var("DSC_N").ok().and_then(|v| v.parse().ok()).unwrap_or(20_000);
+    let ds = gmm::paper_mixture_10d(n, 0.3, 67);
+    let parts = scenario::split(&ds, Scenario::D2, 2, 67);
+
+    if want(&filter, "compression") {
+        let mut t = Table::new(
+            "A1 — accuracy vs codebook size (Theorem 3: error ~ k^{-2/d})",
+            &["codewords", "compression", "accuracy", "distortion_site0", "wire_bytes"],
+        );
+        for codes in [50usize, 100, 200, 400, 800, 1600] {
+            let r = run_pipeline(&parts, &mk_cfg(codes))?;
+            t.row(&[
+                codes.to_string(),
+                format!("{}:1", n / codes),
+                format!("{:.4}", r.accuracy),
+                format!("{:.4}", r.site_distortion[0]),
+                r.net.total_bytes().to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv("ablation_compression")?;
+    }
+
+    if want(&filter, "weighting") {
+        let mut t = Table::new(
+            "A2 — weighted vs unweighted codeword affinity",
+            &["codewords", "unweighted acc", "weighted acc"],
+        );
+        for codes in [100usize, 400, 1000] {
+            let r_u = run_pipeline(&parts, &mk_cfg(codes))?;
+            let mut cfg_w = mk_cfg(codes);
+            cfg_w.weighted_affinity = true;
+            let r_w = run_pipeline(&parts, &cfg_w)?;
+            t.row(&[
+                codes.to_string(),
+                format!("{:.4}", r_u.accuracy),
+                format!("{:.4}", r_w.accuracy),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv("ablation_weighting")?;
+    }
+
+    if want(&filter, "comm") {
+        let mut t = Table::new(
+            "A3 — communication vs accuracy (link: 100 Mbit/s, 20 ms)",
+            &["codewords", "wire_bytes", "full_data_bytes", "reduction", "transfer_ms", "accuracy"],
+        );
+        for codes in [50usize, 200, 800, 3200.min(n / 8)] {
+            let r = run_pipeline(&parts, &mk_cfg(codes))?;
+            t.row(&[
+                codes.to_string(),
+                r.net.total_bytes().to_string(),
+                r.full_data_bytes.to_string(),
+                format!("{}x", r.full_data_bytes / r.net.total_bytes().max(1)),
+                format!("{:.1}", r.net.max_link_time().as_secs_f64() * 1e3),
+                format!("{:.4}", r.accuracy),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv("ablation_comm")?;
+    }
+
+    if want(&filter, "backend") {
+        let has_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+        if !has_artifacts {
+            eprintln!("A4 skipped: artifacts missing (run `make artifacts`)");
+        } else {
+            let mut t = Table::new(
+                "A4 — central-step backend: native Lanczos vs XLA artifact",
+                &["backend", "accuracy", "central_s", "total_s"],
+            );
+            for backend in [Backend::Native, Backend::Xla, Backend::XlaFull] {
+                let mut cfg = mk_cfg(400);
+                cfg.backend = backend;
+                cfg.algo = Algo::Njw; // compare like against like
+                let r = run_pipeline(&parts, &cfg)?;
+                t.row(&[
+                    format!("{backend:?}"),
+                    format!("{:.4}", r.accuracy),
+                    format!("{:.3}", r.central.as_secs_f64()),
+                    format!("{:.3}", r.elapsed_model.as_secs_f64()),
+                ]);
+            }
+            print!("{}", t.render());
+            t.save_csv("ablation_backend")?;
+        }
+    }
+
+    if want(&filter, "baseline") {
+        let mut t = Table::new(
+            "A6 — DML codewords vs random-landmark baseline (equal budget)",
+            &["dml", "codewords", "accuracy", "distortion_site0", "max_dml_s"],
+        );
+        for kind in [
+            dsc::dml::DmlKind::KMeans,
+            dsc::dml::DmlKind::RpTree,
+            dsc::dml::DmlKind::RandomSample,
+        ] {
+            let mut cfg = mk_cfg(400);
+            cfg.dml = kind;
+            let r = run_pipeline(&parts, &cfg)?;
+            t.row(&[
+                kind.to_string(),
+                r.n_codes.to_string(),
+                format!("{:.4}", r.accuracy),
+                format!("{:.4}", r.site_distortion[0]),
+                format!(
+                    "{:.3}",
+                    r.site_dml.iter().copied().max().unwrap_or_default().as_secs_f64()
+                ),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv("ablation_baseline")?;
+    }
+
+    if want(&filter, "algo") {
+        let mut t = Table::new(
+            "A5 — recursive normalized cuts vs NJW embedding",
+            &["algo", "codewords", "accuracy", "central_s"],
+        );
+        for codes in [200usize, 800] {
+            for algo in [Algo::RecursiveNcut, Algo::Njw] {
+                let mut cfg = mk_cfg(codes);
+                cfg.algo = algo;
+                let r = run_pipeline(&parts, &cfg)?;
+                t.row(&[
+                    format!("{algo:?}"),
+                    codes.to_string(),
+                    format!("{:.4}", r.accuracy),
+                    format!("{:.3}", r.central.as_secs_f64()),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+        t.save_csv("ablation_algo")?;
+    }
+    Ok(())
+}

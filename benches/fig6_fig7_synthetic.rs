@@ -1,0 +1,113 @@
+//! Regenerates the paper's synthetic-data evaluation:
+//!
+//! * **Fig. 5** — the 2-D 4-component mixture scatter with representative
+//!   points from 2 sites (emitted as CSVs for plotting);
+//! * **Fig. 6** — clustering accuracy on the 10-D mixture, ρ ∈
+//!   {0.1, 0.3, 0.6}, scenarios D1/D2/D3 vs non-distributed, K-means DML;
+//! * **Fig. 7** — the same with rpTrees DML.
+//!
+//! Protocol as in §5.1: 40 000 points, compression 40:1 (1000 codewords),
+//! two sites. Run a subset with `cargo bench --bench fig6_fig7_synthetic --
+//! fig5|fig6|fig7`. `DSC_N` scales the point count down for quick runs.
+//!
+//! Expected shape vs the paper: every distributed accuracy within ~±0.02
+//! of non-distributed; D1 often slightly *above* (the paper's
+//! regularization-effect remark); rpTrees a notch below K-means.
+
+use dsc::bench::Table;
+use dsc::data::{csvio, gmm};
+use dsc::dml::{self, DmlKind, DmlParams};
+use dsc::prelude::*;
+
+fn want(filter: &Option<String>, key: &str) -> bool {
+    filter.as_deref().map(|f| key.contains(f)).unwrap_or(true)
+}
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let n: usize = std::env::var("DSC_N").ok().and_then(|v| v.parse().ok()).unwrap_or(40_000);
+    let codes = (n / 40).max(16); // the paper's 40:1 compression
+
+    if want(&filter, "fig5") {
+        fig5()?;
+    }
+    if want(&filter, "fig6") {
+        figure(DmlKind::KMeans, "fig6", n, codes)?;
+    }
+    if want(&filter, "fig7") {
+        figure(DmlKind::RpTree, "fig7", n, codes)?;
+    }
+    Ok(())
+}
+
+/// Fig. 5: scatter + codewords of the 2-D mixture, sites = {C1+C2, C3+C4}.
+fn fig5() -> anyhow::Result<()> {
+    let ds = gmm::paper_mixture_2d(4_000, 5);
+    csvio::save_dataset(
+        std::path::Path::new("bench_out/fig5_points.csv"),
+        &ds,
+        &["Fig.5 scatter: 2-D 4-component mixture, label = component"],
+    )?;
+
+    // Site 1 = components {0,1}, Site 2 = components {2,3} (paper setup)
+    let frac = vec![vec![1.0, 1.0, 0.0, 0.0], vec![0.0, 0.0, 1.0, 1.0]];
+    let parts = scenario::split_by_fractions(&ds, &frac, 5);
+    let mut reps = Dataset::new("fig5_reps", 2, 2);
+    for part in &parts {
+        let cb = dml::apply(
+            &part.data,
+            &DmlParams { target_codes: 50, seed: 5, ..Default::default() },
+        );
+        for c in 0..cb.n_codes() {
+            let cw = cb.codeword(c);
+            reps.push(&[cw[0], cw[1]], part.site_id as u16);
+        }
+    }
+    csvio::save_dataset(
+        std::path::Path::new("bench_out/fig5_codewords.csv"),
+        &reps,
+        &["Fig.5 representative points, label = site"],
+    )?;
+    println!("fig5: wrote bench_out/fig5_points.csv and bench_out/fig5_codewords.csv");
+    Ok(())
+}
+
+/// Figs. 6/7: accuracy across ρ × scenario for one DML.
+fn figure(dmlk: DmlKind, name: &str, n: usize, codes: usize) -> anyhow::Result<()> {
+    let mut table = Table::new(
+        format!(
+            "{} — 10-D mixture accuracy, {dmlk} DML, n={n}, {codes} codewords, 2 sites",
+            if dmlk == DmlKind::KMeans { "Fig. 6" } else { "Fig. 7" }
+        ),
+        &["rho", "non-distributed", "D1", "D2", "D3"],
+    );
+    for rho in [0.1, 0.3, 0.6] {
+        let ds = gmm::paper_mixture_10d(n, rho, 7);
+        let cfg = PipelineConfig {
+            dml: dmlk,
+            total_codes: codes,
+            k_clusters: 4,
+            bandwidth: Bandwidth::MedianScale(0.5),
+            seed: 11,
+            ..Default::default()
+        };
+        let base = run_pipeline(
+            &[SitePart {
+                site_id: 0,
+                data: ds.clone(),
+                global_idx: (0..ds.len() as u32).collect(),
+            }],
+            &cfg,
+        )?;
+        let mut cells = vec![format!("{rho}"), format!("{:.4}", base.accuracy)];
+        for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+            let parts = scenario::split(&ds, sc, 2, 13);
+            let r = run_pipeline(&parts, &cfg)?;
+            cells.push(format!("{:.4}", r.accuracy));
+        }
+        table.row(&cells);
+    }
+    print!("{}", table.render());
+    table.save_csv(name)?;
+    Ok(())
+}

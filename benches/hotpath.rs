@@ -1,0 +1,170 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf) — the quantities the
+//! optimization pass tracks:
+//!
+//! * K-means assignment throughput (the per-site hot loop), in
+//!   point·dims/µs;
+//! * affinity-matrix build (the central O(n²d) kernel, native);
+//! * Lanczos top-2 on the normalized affinity (recursive ncut's engine);
+//! * XLA embed-artifact execution (the PJRT path incl. padding);
+//! * end-to-end pipeline at the paper's 40:1 setting.
+//!
+//! Filter: `cargo bench --bench hotpath -- assign|affinity|lanczos|xla|pipeline`.
+
+use std::time::Duration;
+
+use dsc::bench::{time_it, Table};
+use dsc::data::gmm;
+use dsc::dml::{self, DmlKind, DmlParams};
+use dsc::prelude::*;
+use dsc::rng::Rng;
+use dsc::spectral::{affinity, njw};
+
+fn want(filter: &Option<String>, key: &str) -> bool {
+    filter.as_deref().map(|f| key.contains(f)).unwrap_or(true)
+}
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let mut table = Table::new(
+        format!("Hot paths ({} threads)", dsc::par::threads()),
+        &["bench", "config", "mean", "throughput"],
+    );
+
+    if want(&filter, "assign") {
+        for (n, k, d) in [(40_000usize, 338usize, 42usize), (40_000, 1000, 10), (100_000, 500, 28)]
+        {
+            let ds = gmm::paper_mixture_10d(n, 0.3, 3);
+            let mut ds = ds;
+            // reshape to arbitrary d by tiling (throughput test only)
+            if d != 10 {
+                let mut pts = vec![0.0f32; n * d];
+                for i in 0..n {
+                    for j in 0..d {
+                        pts[i * d + j] = ds.points[i * 10 + (j % 10)];
+                    }
+                }
+                ds.points = pts;
+                ds.dim = d;
+            }
+            let params =
+                DmlParams { kind: DmlKind::KMeans, target_codes: k, max_iters: 1, tol: 0.0, seed: 1 };
+            let stats = time_it(1, 5, || {
+                let _ = dml::apply(&ds, &params);
+            });
+            // one sweep ≈ n·k·d mul-adds (plus seeding, amortized)
+            let ops = (n as f64) * (k as f64) * (d as f64);
+            table.row(&[
+                "kmeans_assign_sweep".into(),
+                format!("n={n} k={k} d={d}"),
+                format!("{stats}"),
+                format!("{:.1} Mops/ms", ops / stats.mean_secs() / 1e9),
+            ]);
+        }
+    }
+
+    if want(&filter, "affinity") {
+        for (n, d) in [(500usize, 10usize), (1000, 10), (2000, 28)] {
+            let ds = gmm::paper_mixture_10d(n, 0.3, 5);
+            let pts = if d == 10 {
+                ds.points.clone()
+            } else {
+                let mut p = vec![0.0f32; n * d];
+                for i in 0..n {
+                    for j in 0..d {
+                        p[i * d + j] = ds.points[i * 10 + (j % 10)];
+                    }
+                }
+                p
+            };
+            let w = vec![1.0f32; n];
+            let stats = time_it(1, 7, || {
+                let _ = affinity::build(&pts, d, &w, 1.5);
+            });
+            let cells = (n as f64) * (n as f64);
+            table.row(&[
+                "affinity_build".into(),
+                format!("n={n} d={d}"),
+                format!("{stats}"),
+                format!("{:.1} Mcell/s", cells / stats.mean_secs() / 1e6),
+            ]);
+        }
+    }
+
+    if want(&filter, "lanczos") {
+        for n in [500usize, 1000, 2000] {
+            let ds = gmm::paper_mixture_10d(n, 0.3, 7);
+            let w = vec![1.0f32; n];
+            let aff = affinity::build(&ds.points, 10, &w, 2.0);
+            let stats = time_it(1, 5, || {
+                let mut rng = Rng::new(9);
+                let _ = njw::top_eigenvalues(&aff, 2, &mut rng);
+            });
+            table.row(&[
+                "lanczos_top2".into(),
+                format!("n={n}"),
+                format!("{stats}"),
+                String::new(),
+            ]);
+        }
+    }
+
+    if want(&filter, "xla") {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let rt = dsc::runtime::XlaRuntime::new("artifacts")?;
+            for n in [256usize, 1024, 2048] {
+                let ds = gmm::paper_mixture_10d(n, 0.3, 11);
+                let w = vec![1.0f32; n];
+                // warm the executable cache before timing execution
+                let _ = rt.embed(&ds.points, 10, &w, 1.5)?;
+                let stats = time_it(1, 5, || {
+                    let _ = rt.embed(&ds.points, 10, &w, 1.5).unwrap();
+                });
+                table.row(&[
+                    "xla_embed_exec".into(),
+                    format!("n={n} d=10→16"),
+                    format!("{stats}"),
+                    String::new(),
+                ]);
+            }
+        } else {
+            eprintln!("xla bench skipped: artifacts missing");
+        }
+    }
+
+    if want(&filter, "pipeline") {
+        let n: usize =
+            std::env::var("DSC_N").ok().and_then(|v| v.parse().ok()).unwrap_or(40_000);
+        let ds = gmm::paper_mixture_10d(n, 0.3, 13);
+        let parts = scenario::split(&ds, Scenario::D3, 2, 13);
+        let cfg = PipelineConfig {
+            total_codes: n / 40,
+            k_clusters: 4,
+            bandwidth: Bandwidth::MedianScale(0.5),
+            seed: 15,
+            ..Default::default()
+        };
+        let mut phase = (Duration::ZERO, Duration::ZERO, 0usize);
+        let stats = time_it(0, 3, || {
+            let r = run_pipeline(&parts, &cfg).unwrap();
+            phase = (
+                r.site_dml.iter().copied().max().unwrap_or_default(),
+                r.central,
+                r.n_codes,
+            );
+        });
+        table.row(&[
+            "pipeline_e2e".into(),
+            format!("n={n} codes={} sites=2", phase.2),
+            format!("{stats}"),
+            format!(
+                "dml {:.2}s + central {:.2}s",
+                phase.0.as_secs_f64(),
+                phase.1.as_secs_f64()
+            ),
+        ]);
+    }
+
+    print!("{}", table.render());
+    table.save_csv("hotpath")?;
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Regenerates Tables 3 and 4: accuracy + elapsed time for the eight UC
+//! Irvine datasets (proxies — DESIGN.md §5) under non-distributed vs
+//! D1/D2/D3 with two sites.
+//!
+//! * `cargo bench --bench table3_table4_uci -- kmeans`   → Table 3
+//! * `cargo bench --bench table3_table4_uci -- rptrees`  → Table 4
+//! * `cargo bench --bench table3_table4_uci -- summary`  → Tables 1–2
+//!
+//! `DSC_N` caps the per-dataset point count (default: each spec's scaled
+//! `default_n`; the paper's full sizes via `DSC_FULL_SCALE=1`).
+//!
+//! Expected shape vs the paper: per-row distributed accuracy within noise
+//! of non-distributed; elapsed time of distributed runs roughly half the
+//! non-distributed row (two sites working in parallel); Table-4 (rpTrees)
+//! times several× lower than Table-3 at slightly lower accuracy.
+
+use dsc::bench::Table;
+use dsc::data::uci_proxy;
+use dsc::dml::DmlKind;
+use dsc::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let which = filter.as_deref().unwrap_or("all");
+
+    if which == "summary" || which == "all" {
+        summary();
+    }
+    if ["kmeans", "table3", "all"].contains(&which) {
+        run_table(DmlKind::KMeans, "table3")?;
+    }
+    if ["rptrees", "table4", "all"].contains(&which) {
+        run_table(DmlKind::RpTree, "table4")?;
+    }
+    Ok(())
+}
+
+/// Tables 1 + 2: dataset inventory and site configurations.
+fn summary() {
+    let mut t1 = Table::new(
+        "Table 1 — UCI dataset proxies",
+        &["dataset", "features", "paper_n", "bench_n", "classes", "ratio", "codewords"],
+    );
+    for s in uci_proxy::specs() {
+        t1.row(&[
+            s.name.to_string(),
+            s.dim.to_string(),
+            s.paper_n.to_string(),
+            bench_n(s).to_string(),
+            s.n_classes.to_string(),
+            s.paper_ratio.to_string(),
+            s.target_codewords().to_string(),
+        ]);
+    }
+    print!("{}", t1.render());
+
+    let mut t2 = Table::new(
+        "Table 2 — site-fraction matrices (share of each class per site)",
+        &["classes", "scenario", "site fractions [site][class]"],
+    );
+    for classes in [2usize, 3, 5] {
+        for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+            let f = dsc::data::scenario::fractions(sc, 2, classes);
+            t2.row(&[classes.to_string(), sc.to_string(), format!("{f:?}")]);
+        }
+    }
+    print!("{}", t2.render());
+}
+
+fn bench_n(spec: &uci_proxy::UciSpec) -> usize {
+    if std::env::var("DSC_FULL_SCALE").is_ok() {
+        return spec.paper_n;
+    }
+    let cap: usize =
+        std::env::var("DSC_N").ok().and_then(|v| v.parse().ok()).unwrap_or(usize::MAX);
+    spec.default_n().min(cap)
+}
+
+fn run_table(dml: DmlKind, name: &str) -> anyhow::Result<()> {
+    let mut table = Table::new(
+        format!(
+            "{} — UCI proxies, {dml} DML, 2 sites (paper acc in parens)",
+            if dml == DmlKind::KMeans { "Table 3" } else { "Table 4" }
+        ),
+        &["dataset", "non-dist acc", "non-dist s", "D1 acc", "D1 s", "D2 acc", "D2 s", "D3 acc", "D3 s"],
+    );
+
+    for spec in uci_proxy::specs() {
+        let n = bench_n(spec);
+        let ds = spec.generate(n, 41);
+        let cfg = PipelineConfig {
+            dml,
+            total_codes: spec.target_codewords().min(n / 4).max(16),
+            k_clusters: spec.n_classes,
+            bandwidth: Bandwidth::MedianScale(0.75),
+            seed: 43,
+            ..Default::default()
+        };
+
+        let base = run_pipeline(
+            &[SitePart {
+                site_id: 0,
+                data: ds.clone(),
+                global_idx: (0..ds.len() as u32).collect(),
+            }],
+            &cfg,
+        )?;
+        let paper_acc = match dml {
+            DmlKind::KMeans => spec.paper_acc_kmeans,
+            DmlKind::RpTree => spec.paper_acc_rptrees,
+        };
+        let mut cells = vec![
+            format!("{} (paper {:.3})", spec.name, paper_acc),
+            format!("{:.4}", base.accuracy),
+            format!("{:.2}", base.elapsed_model.as_secs_f64()),
+        ];
+        for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+            let parts = scenario::split(&ds, sc, 2, 47);
+            let r = run_pipeline(&parts, &cfg)?;
+            cells.push(format!("{:.4}", r.accuracy));
+            cells.push(format!("{:.2}", r.elapsed_model.as_secs_f64()));
+        }
+        table.row(&cells);
+        eprintln!("  done {}", spec.name);
+    }
+    print!("{}", table.render());
+    table.save_csv(name)?;
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Regenerates Table 6 (+ Table 5's configurations): HEPMASS with 2, 3 and
+//! 4 distributed sites, both DMLs, accuracy and elapsed time per scenario.
+//!
+//! Expected shape vs the paper: accuracy flat in the number of sites;
+//! elapsed time decreasing in sites with diminishing returns (the central
+//! spectral step doesn't shrink), more pronounced for rpTrees whose local
+//! phase is already cheap.
+//!
+//! `DSC_N` scales the proxy size (default 40 000).
+
+use dsc::bench::Table;
+use dsc::data::uci_proxy;
+use dsc::dml::DmlKind;
+use dsc::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let spec = uci_proxy::by_name("hepmass").unwrap();
+    let n: usize = std::env::var("DSC_N").ok().and_then(|v| v.parse().ok()).unwrap_or(40_000);
+    let ds = spec.generate(n, 51);
+
+    let mut table = Table::new(
+        format!("Table 6 — HEPMASS proxy (n={n}), accuracy / elapsed s"),
+        &["dml", "sites", "non-dist", "D1", "D2", "D3"],
+    );
+
+    for dml in [DmlKind::KMeans, DmlKind::RpTree] {
+        let cfg = PipelineConfig {
+            dml,
+            total_codes: spec.target_codewords().min(n / 8),
+            k_clusters: 2,
+            bandwidth: Bandwidth::MedianScale(0.75),
+            seed: 53,
+            ..Default::default()
+        };
+        let base = run_pipeline(
+            &[SitePart {
+                site_id: 0,
+                data: ds.clone(),
+                global_idx: (0..ds.len() as u32).collect(),
+            }],
+            &cfg,
+        )?;
+        let base_cell =
+            format!("{:.4} / {:.2}", base.accuracy, base.elapsed_model.as_secs_f64());
+
+        for sites in [2usize, 3, 4] {
+            let mut cells =
+                vec![format!("{dml}_{sites}"), sites.to_string(), base_cell.clone()];
+            for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+                let parts = scenario::split(&ds, sc, sites, 59);
+                let r = run_pipeline(&parts, &cfg)?;
+                cells.push(format!(
+                    "{:.4} / {:.2}",
+                    r.accuracy,
+                    r.elapsed_model.as_secs_f64()
+                ));
+            }
+            table.row(&cells);
+            eprintln!("  done {dml} × {sites} sites");
+        }
+    }
+    print!("{}", table.render());
+    table.save_csv("table6")?;
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! End-to-end driver (DESIGN.md §4): the full system exercised on a real
+//! small workload, proving all three layers compose.
+//!
+//! Part A — **real data**: Fisher's Iris (embedded, 150×4, 3 classes),
+//! split across 2 sites, clustered through the **XLA backend** so the run
+//! traverses Rust coordinator → simulated network → PJRT-compiled HLO
+//! (with the Pallas affinity kernel inside) → label population.
+//!
+//! Part B — **paper-scale synthetic**: the §5.1 10-D mixture, 40 000
+//! points, compression 40:1 (1000 codewords), all three scenarios and both
+//! DMLs, distributed vs non-distributed — the headline comparison of
+//! Figs. 6–7 in one run. Results land in `bench_out/e2e_summary.csv` and
+//! are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example e2e_distributed
+//! ```
+
+use anyhow::Result;
+use dsc::bench::Table;
+use dsc::data::{gmm, iris};
+use dsc::dml::DmlKind;
+use dsc::prelude::*;
+
+fn nondistributed(ds: &Dataset) -> Vec<SitePart> {
+    vec![SitePart { site_id: 0, data: ds.clone(), global_idx: (0..ds.len() as u32).collect() }]
+}
+
+fn main() -> Result<()> {
+    // ── Part A: real data through the full three-layer stack ────────────
+    println!("=== Part A: Iris (real data), 2 sites, XLA backend ===");
+    let ds = iris::load();
+    let parts = scenario::split(&ds, Scenario::D3, 2, 3);
+    let cfg = PipelineConfig {
+        total_codes: 40,
+        k_clusters: 3,
+        algo: Algo::Njw,
+        bandwidth: Bandwidth::EigengapSearch { k: 3 },
+        backend: if std::path::Path::new("artifacts/manifest.json").exists() {
+            Backend::Xla
+        } else {
+            eprintln!("(artifacts missing — falling back to native backend)");
+            Backend::Native
+        },
+        seed: 5,
+        ..Default::default()
+    };
+    let report = run_pipeline(&parts, &cfg)?;
+    println!(
+        "iris: accuracy {:.4} | ARI {:.4} | NMI {:.4} | {} codewords | σ {:.3} | {} B on wire",
+        report.accuracy,
+        report.ari,
+        report.nmi,
+        report.n_codes,
+        report.sigma,
+        report.net.total_bytes()
+    );
+    assert!(report.accuracy > 0.80, "iris sanity floor");
+
+    // ── Part B: the paper's synthetic workload at full spec ─────────────
+    println!("\n=== Part B: 10-D mixture, 40k points, 1000 codewords (40:1) ===");
+    let mut table = Table::new(
+        "Distributed vs non-distributed (paper Figs. 6–7 protocol, ρ = 0.3)",
+        &["dml", "setting", "accuracy", "gap", "elapsed_s", "wire_bytes"],
+    );
+
+    let ds = gmm::paper_mixture_10d(40_000, 0.3, 11);
+    for dml in [DmlKind::KMeans, DmlKind::RpTree] {
+        let cfg = PipelineConfig {
+            dml,
+            total_codes: 1000,
+            k_clusters: 4,
+            bandwidth: Bandwidth::MedianScale(0.5),
+            seed: 13,
+            ..Default::default()
+        };
+        let base = run_pipeline(&nondistributed(&ds), &cfg)?;
+        table.row(&[
+            dml.to_string(),
+            "non-distributed".into(),
+            format!("{:.4}", base.accuracy),
+            "—".into(),
+            format!("{:.3}", base.elapsed_model.as_secs_f64()),
+            "0".into(),
+        ]);
+        for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+            let parts = scenario::split(&ds, sc, 2, 17);
+            let r = run_pipeline(&parts, &cfg)?;
+            table.row(&[
+                dml.to_string(),
+                sc.to_string(),
+                format!("{:.4}", r.accuracy),
+                format!("{:+.4}", r.accuracy - base.accuracy),
+                format!("{:.3}", r.elapsed_model.as_secs_f64()),
+                r.net.total_bytes().to_string(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    let path = table.save_csv("e2e_summary")?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

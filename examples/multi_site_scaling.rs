@@ -1,0 +1,94 @@
+//! Multi-site scaling (the paper's §5.2.1 / Table 6 shape): HEPMASS proxy
+//! with 2, 3 and 4 distributed sites, both DMLs.
+//!
+//! Expected shape (paper): accuracy flat as sites increase; elapsed time
+//! keeps dropping but with diminishing returns, because the central
+//! spectral step — which does not parallelize across sites — starts to
+//! dominate. The printed "central share" column makes that mechanism
+//! visible directly.
+//!
+//! ```bash
+//! cargo run --release --offline --example multi_site_scaling
+//! ```
+
+use anyhow::Result;
+use dsc::bench::Table;
+use dsc::data::uci_proxy;
+use dsc::dml::DmlKind;
+use dsc::prelude::*;
+
+fn main() -> Result<()> {
+    let spec = uci_proxy::by_name("hepmass").unwrap();
+    let n = std::env::var("DSC_N").ok().and_then(|v| v.parse().ok()).unwrap_or(40_000);
+    let ds = spec.generate(n, 21);
+    println!(
+        "HEPMASS proxy: n={} dim={} classes={} codewords={}",
+        ds.len(),
+        ds.dim,
+        ds.n_classes,
+        spec.target_codewords()
+    );
+
+    let mut table = Table::new(
+        "HEPMASS proxy, multi-site scaling (paper Table 6 protocol)",
+        &["dml", "sites", "scenario", "accuracy", "elapsed_s", "central_share", "max_dml_s"],
+    );
+
+    for dml in [DmlKind::KMeans, DmlKind::RpTree] {
+        let cfg = PipelineConfig {
+            dml,
+            total_codes: spec.target_codewords().min(n / 8),
+            k_clusters: spec.n_classes,
+            bandwidth: Bandwidth::MedianScale(0.75),
+            seed: 23,
+            ..Default::default()
+        };
+        // non-distributed reference row
+        let base = run_pipeline(
+            &[SitePart {
+                site_id: 0,
+                data: ds.clone(),
+                global_idx: (0..ds.len() as u32).collect(),
+            }],
+            &cfg,
+        )?;
+        table.row(&[
+            format!("{dml}"),
+            "1".into(),
+            "—".into(),
+            format!("{:.4}", base.accuracy),
+            format!("{:.3}", base.elapsed_model.as_secs_f64()),
+            format!(
+                "{:.0}%",
+                100.0 * base.central.as_secs_f64() / base.elapsed_model.as_secs_f64().max(1e-9)
+            ),
+            format!("{:.3}", base.site_dml[0].as_secs_f64()),
+        ]);
+
+        for sites in [2, 3, 4] {
+            for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+                let parts = scenario::split(&ds, sc, sites, 29);
+                let r = run_pipeline(&parts, &cfg)?;
+                let max_dml =
+                    r.site_dml.iter().copied().max().unwrap_or_default().as_secs_f64();
+                table.row(&[
+                    format!("{dml}"),
+                    sites.to_string(),
+                    sc.to_string(),
+                    format!("{:.4}", r.accuracy),
+                    format!("{:.3}", r.elapsed_model.as_secs_f64()),
+                    format!(
+                        "{:.0}%",
+                        100.0 * r.central.as_secs_f64()
+                            / r.elapsed_model.as_secs_f64().max(1e-9)
+                    ),
+                    format!("{max_dml:.3}"),
+                ]);
+            }
+        }
+    }
+    print!("{}", table.render());
+    let path = table.save_csv("multi_site_scaling")?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Privacy audit — the paper's §6 claim that "as the transmitted data are
+//! not in their original form, data privacy may also be preserved".
+//!
+//! This driver inspects exactly what crosses the wire under both DMLs and
+//! reports:
+//!
+//! * whether any transmitted codeword *is* an original point (exact hit);
+//! * the distribution of distances from each codeword to its nearest
+//!   original point (a codeword sitting on top of a point leaks it);
+//! * the minimum group size (a k-anonymity-style floor: a codeword
+//!   averaging one point IS that point).
+//!
+//! The audit makes the paper's caveat concrete: K-means codewords with
+//! group size 1 do leak single points, so deployments wanting privacy
+//! should enforce a minimum leaf/cluster size — which this binary measures.
+//!
+//! ```bash
+//! cargo run --release --offline --example privacy_audit
+//! ```
+
+use anyhow::Result;
+use dsc::bench::Table;
+use dsc::data::gmm;
+use dsc::dml::{self, DmlKind, DmlParams};
+use dsc::prelude::*;
+
+fn main() -> Result<()> {
+    let ds = gmm::paper_mixture_10d(20_000, 0.3, 31);
+    let parts = scenario::split(&ds, Scenario::D2, 2, 31);
+
+    let mut table = Table::new(
+        "What leaves a site: codeword-to-data proximity audit",
+        &["dml", "site", "codes", "exact_hits", "min_nn_dist", "med_nn_dist", "min_group", "groups=1"],
+    );
+
+    for dml in [DmlKind::KMeans, DmlKind::RpTree] {
+        for part in &parts {
+            let params = DmlParams {
+                kind: dml,
+                target_codes: 250,
+                max_iters: 30,
+                tol: 1e-6,
+                seed: 37 + part.site_id as u64,
+            };
+            let cb = dml::apply(&part.data, &params);
+
+            // nearest original point per codeword
+            let mut exact_hits = 0usize;
+            let mut nn_dists: Vec<f64> = Vec::with_capacity(cb.n_codes());
+            for c in 0..cb.n_codes() {
+                let cw = cb.codeword(c);
+                let mut best = f64::INFINITY;
+                for i in 0..part.data.len() {
+                    let p = part.data.point(i);
+                    let d2: f64 = cw
+                        .iter()
+                        .zip(p)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum();
+                    best = best.min(d2);
+                }
+                let d = best.sqrt();
+                if d == 0.0 {
+                    exact_hits += 1;
+                }
+                nn_dists.push(d);
+            }
+            nn_dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let min_nn = nn_dists.first().copied().unwrap_or(0.0);
+            let med_nn = nn_dists[nn_dists.len() / 2];
+            let min_group = cb.weights.iter().min().copied().unwrap_or(0);
+            let singletons = cb.weights.iter().filter(|&&w| w == 1).count();
+
+            table.row(&[
+                dml.to_string(),
+                part.site_id.to_string(),
+                cb.n_codes().to_string(),
+                exact_hits.to_string(),
+                format!("{min_nn:.4}"),
+                format!("{med_nn:.4}"),
+                min_group.to_string(),
+                singletons.to_string(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    println!(
+        "\nReading the table: `exact_hits` > 0 or `groups=1` > 0 would mean raw points leak \
+         verbatim; positive nearest-neighbour distances show transmitted codewords are \
+         averages, not originals. Enforce a minimum group size for a k-anonymity floor."
+    );
+    let path = table.save_csv("privacy_audit")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT compiler: lower the Layer-2 programs to HLO *text* artifacts.
+
+Run once by ``make artifacts`` (build time only — python is never on the
+request path).  For every shape bucket it writes
+
+    artifacts/embed_n{n}_d{d}.hlo.txt       spectral_embedding
+    artifacts/kstep_n{n}_k{K}_d{d}.hlo.txt  kmeans_step
+    artifacts/manifest.json                 parameter/output schemas
+
+The Rust runtime (rust/src/runtime/) reads the manifest, pads its inputs to
+the nearest bucket, compiles the text with ``HloModuleProto::from_text_file``
+on a PJRT CPU client, and caches the executable.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Lowered with ``return_tuple=True``; the Rust side unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import EMBED_ITERS, EMBED_K, kmeans_step, spectral_embedding
+
+# Shape buckets. n must be a multiple of the Pallas tiles (128 / 256).
+EMBED_NS = (256, 512, 1024, 2048)
+EMBED_DS = (4, 8, 16, 32, 64)
+KSTEP_NS = (256, 512, 1024, 2048)
+KSTEP_K = EMBED_K  # k-means over the embedding: centroid count bucket
+KSTEP_D = EMBED_K  # embedding width
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_embed(n: int, d: int) -> str:
+    spec_x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((n,), jnp.float32)
+    spec_s = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(cw, w, sigma):
+        return spectral_embedding(cw, w, sigma, k_eig=EMBED_K, iters=EMBED_ITERS)
+
+    return to_hlo_text(jax.jit(fn).lower(spec_x, spec_w, spec_s))
+
+
+def lower_kstep(n: int, k: int, d: int) -> str:
+    spec_p = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    spec_c = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    spec_pm = jax.ShapeDtypeStruct((n,), jnp.float32)
+    spec_cm = jax.ShapeDtypeStruct((k,), jnp.float32)
+    return to_hlo_text(jax.jit(kmeans_step).lower(spec_p, spec_c, spec_pm, spec_cm))
+
+
+def check_no_custom_calls(text: str, name: str) -> None:
+    """The PJRT CPU client cannot execute Mosaic/LAPACK custom-calls."""
+    if "custom-call" in text:
+        raise RuntimeError(
+            f"{name}: lowered HLO contains a custom-call — it would not run "
+            "on the PJRT CPU client. Check interpret=True on all pallas_call "
+            "sites and avoid jnp.linalg.* factorizations."
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="emit only the smallest bucket of each program (CI smoke)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    embed_ns = EMBED_NS[:1] if args.quick else EMBED_NS
+    embed_ds = EMBED_DS[1:2] if args.quick else EMBED_DS
+    kstep_ns = KSTEP_NS[:1] if args.quick else KSTEP_NS
+
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "embed_k": EMBED_K,
+        "embed_iters": EMBED_ITERS,
+        "programs": [],
+    }
+
+    for n in embed_ns:
+        for d in embed_ds:
+            name = f"embed_n{n}_d{d}"
+            text = lower_embed(n, d)
+            check_no_custom_calls(text, name)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["programs"].append(
+                {
+                    "name": name,
+                    "kind": "embed",
+                    "file": f"{name}.hlo.txt",
+                    "n": n,
+                    "d": d,
+                    "params": [
+                        {"name": "cw", "shape": [n, d], "dtype": "f32"},
+                        {"name": "w", "shape": [n], "dtype": "f32"},
+                        {"name": "sigma", "shape": [], "dtype": "f32"},
+                    ],
+                    "outputs": [
+                        {"name": "evecs", "shape": [n, EMBED_K], "dtype": "f32"},
+                        {"name": "evals", "shape": [EMBED_K], "dtype": "f32"},
+                        {"name": "deg", "shape": [n], "dtype": "f32"},
+                    ],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    for n in kstep_ns:
+        name = f"kstep_n{n}_k{KSTEP_K}_d{KSTEP_D}"
+        text = lower_kstep(n, KSTEP_K, KSTEP_D)
+        check_no_custom_calls(text, name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["programs"].append(
+            {
+                "name": name,
+                "kind": "kstep",
+                "file": f"{name}.hlo.txt",
+                "n": n,
+                "k": KSTEP_K,
+                "d": KSTEP_D,
+                "params": [
+                    {"name": "p", "shape": [n, KSTEP_D], "dtype": "f32"},
+                    {"name": "c", "shape": [KSTEP_K, KSTEP_D], "dtype": "f32"},
+                    {"name": "pmask", "shape": [n], "dtype": "f32"},
+                    {"name": "cmask", "shape": [KSTEP_K], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {"name": "new_c", "shape": [KSTEP_K, KSTEP_D], "dtype": "f32"},
+                    {"name": "idx", "shape": [n], "dtype": "s32"},
+                    {"name": "shift", "shape": [], "dtype": "f32"},
+                    {"name": "inertia", "shape": [], "dtype": "f32"},
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['programs'])} programs)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

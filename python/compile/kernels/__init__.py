@@ -1,0 +1,12 @@
+"""Pallas kernels (Layer 1) and their pure-jnp oracles.
+
+``affinity``       — tiled weighted Gaussian affinity (the central hot spot)
+``kmeans_assign``  — tiled nearest-centroid assignment (the site hot loop)
+``ref``            — correctness oracles for both
+"""
+
+from .affinity import affinity
+from .kmeans import kmeans_assign
+from . import ref
+
+__all__ = ["affinity", "kmeans_assign", "ref"]

@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernel: tiled weighted Gaussian affinity matrix.
+
+This is the O(n^2 d) hot spot of the central spectral-clustering step the
+paper runs over the union of codewords collected from all distributed sites.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the pairwise squared
+distance decomposes as  |x_i|^2 + |x_j|^2 - 2 x_i . x_j , so the dominant
+cost of each (TILE x TILE) output block is a single (TILE,d)x(d,TILE)
+matmul — exactly the MXU's job — followed by a VPU elementwise
+exp/mask/scale pass over the same block.  The BlockSpec grid walks the
+(row-tile, col-tile) plane; each program pulls one row-block and one
+col-block of the codeword matrix from HBM into VMEM.
+
+VMEM budget per program at TILE=128, d<=64:
+  2 * 128*64*4 B (inputs) + 128*128*4 B (output) + 2*128*4 B (weights)
+  ~= 131 KB  — far under the ~16 MB VMEM ceiling, leaving room for the
+compiler to double-buffer the HBM->VMEM streams.
+
+The kernel MUST be lowered with ``interpret=True`` in this environment:
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md).  Numerics are validated against
+``ref.affinity_ref`` by python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["affinity", "DEFAULT_TILE"]
+
+DEFAULT_TILE = 128
+
+
+def _affinity_kernel(x_row_ref, x_col_ref, w_row_ref, w_col_ref, sigma_ref, o_ref):
+    """One (TILE x TILE) block of the affinity matrix.
+
+    Refs:
+      x_row_ref : (TILE, d) row-block of codewords
+      x_col_ref : (TILE, d) col-block of codewords
+      w_row_ref : (TILE,)   row weights (0.0 marks padding)
+      w_col_ref : (TILE,)   col weights
+      sigma_ref : (1, 1)    Gaussian bandwidth
+      o_ref     : (TILE, TILE) output block
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tile = o_ref.shape[0]
+
+    x = x_row_ref[...]
+    y = x_col_ref[...]
+
+    # |x|^2 + |y|^2 - 2 x.y^T : one MXU matmul per block + rank-1 updates.
+    sx = jnp.sum(x * x, axis=1)
+    sy = jnp.sum(y * y, axis=1)
+    d2 = sx[:, None] + sy[None, :] - 2.0 * jnp.dot(
+        x, y.T, preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(d2, 0.0)  # cancellation guard
+
+    sigma = sigma_ref[0, 0]
+    a = jnp.exp(-d2 / (2.0 * sigma * sigma))
+
+    # Weight / padding mask (w == 0 rows and cols vanish).
+    wr = w_row_ref[...]
+    wc = w_col_ref[...]
+    a = a * (wr[:, None] * wc[None, :])
+
+    # Zero the global diagonal. Row/col global indices from the grid position.
+    row_ids = i * tile + jax.lax.iota(jnp.int32, tile)
+    col_ids = j * tile + jax.lax.iota(jnp.int32, tile)
+    on_diag = row_ids[:, None] == col_ids[None, :]
+    o_ref[...] = jnp.where(on_diag, 0.0, a)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def affinity(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    sigma: jnp.ndarray,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Weighted Gaussian affinity A (n,n) over codewords ``x`` (n,d).
+
+    Semantics identical to ``ref.affinity_ref``: A[i,j] = w_i w_j
+    exp(-|x_i-x_j|^2 / 2 sigma^2) with zero diagonal; ``n`` must be a
+    multiple of ``tile`` (the AOT shape buckets guarantee this).
+    """
+    n, _d = x.shape
+    if n % tile != 0:
+        raise ValueError(f"n={n} not a multiple of tile={tile}")
+    grid = (n // tile, n // tile)
+    sigma2d = jnp.asarray(sigma, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        _affinity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, x.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, x.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x, x, w, w, sigma2d)

@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest/hypothesis sweeps
+(see python/tests/test_kernels.py).  They are also what the L2 model would
+use if the Pallas path were disabled, so they define the exact semantics:
+
+- ``affinity_ref``  : masked, weighted Gaussian affinity with zero diagonal.
+- ``kmeans_assign_ref`` : nearest-centroid assignment with centroid masking.
+
+Conventions shared with the kernels and the Rust runtime:
+
+* ``w`` is the per-row weight vector. Real rows carry the codeword group
+  size (weighted mode) or 1.0 (unweighted mode); **padding rows carry 0.0**
+  so that the same vector doubles as the validity mask. Pad rows/cols of the
+  affinity matrix are exactly zero.
+* The affinity diagonal is zero (normalized-cuts convention; also keeps the
+  trivial self-similarity from dominating small codebooks).
+* ``cmask`` marks active centroids with 1.0; inactive centroids are pushed
+  to +inf distance so no point selects them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["affinity_ref", "kmeans_assign_ref", "pairwise_sqdist_ref", "BIG"]
+
+# Distance offset used to disable masked-out centroids in argmin races.
+BIG = 1e30
+
+
+def pairwise_sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances between rows of ``x`` (n,d) and ``y`` (m,d).
+
+    Uses the expanded form ``|x|^2 + |y|^2 - 2 x.y`` — the same algebra the
+    Pallas kernels use so that rounding behaviour is comparable — and clamps
+    tiny negatives produced by cancellation back to zero.
+    """
+    sx = jnp.sum(x * x, axis=-1)
+    sy = jnp.sum(y * y, axis=-1)
+    d2 = sx[:, None] + sy[None, :] - 2.0 * (x @ y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def affinity_ref(x: jnp.ndarray, w: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Weighted Gaussian affinity matrix over codewords.
+
+    A[i,j] = w_i * w_j * exp(-|x_i - x_j|^2 / (2 sigma^2)),  A[i,i] = 0.
+
+    ``sigma`` is a scalar (or shape-(1,1)) bandwidth. Rows with w == 0 are
+    padding and produce all-zero rows/columns.
+    """
+    sigma = jnp.asarray(sigma, jnp.float32).reshape(())
+    d2 = pairwise_sqdist_ref(x, x)
+    a = jnp.exp(-d2 / (2.0 * sigma * sigma))
+    a = a * (w[:, None] * w[None, :])
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=a.dtype)
+    return a * (1.0 - eye)
+
+
+def kmeans_assign_ref(p, c, cmask):
+    """Nearest-centroid assignment.
+
+    Returns ``(idx, mind)`` where ``idx[i]`` is the int32 index of the
+    nearest *active* centroid to point ``p[i]`` and ``mind[i]`` the squared
+    distance to it. Inactive centroids (cmask == 0) never win.
+    """
+    d2 = pairwise_sqdist_ref(p, c)
+    d2 = d2 + (1.0 - cmask)[None, :] * BIG
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind = jnp.min(d2, axis=1)
+    return idx, mind

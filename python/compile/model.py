@@ -1,0 +1,181 @@
+"""Layer-2 JAX model: the central-node compute graph of the paper.
+
+Two programs are lowered to HLO text by ``aot.py`` and executed from the
+Rust coordinator (Layer 3) via PJRT:
+
+``spectral_embedding``
+    codewords (n,d) + weights (n,) + bandwidth  ->  top-K eigenvectors of the
+    normalized affinity  M = D^{-1/2} A D^{-1/2}, its Ritz eigenvalues, and
+    the degree vector.  A is produced by the Layer-1 Pallas affinity kernel,
+    so the kernel lowers into the same HLO module.  Eigenvectors are computed
+    by orthogonal (subspace) iteration with Gram–Schmidt re-orthonormalization
+    inside ``lax.fori_loop`` — deliberately *not* ``jnp.linalg.eigh``, which
+    lowers to a LAPACK custom-call the PJRT CPU client of xla_extension 0.5.1
+    cannot execute.  Smallest eigenvectors of the normalized Laplacian
+    L = I - M are the largest of M, so top-of-M is exactly what normalized
+    cuts / NJW need.
+
+``kmeans_step``
+    one Lloyd iteration over masked points/centroids, with the Layer-1
+    assignment kernel for the distance/argmin part and one-hot matmuls for
+    the centroid update (plain HLO, no scatter).
+
+Padding convention (shared with ref.py and the Rust runtime): rows beyond
+the real problem size carry weight 0. Their affinity rows/cols are zero; the
+degree of such rows is clamped to 1 before the inverse square root so the
+iteration stays finite, and the Rust side drops their embedding rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.affinity import affinity
+from .kernels.kmeans import kmeans_assign
+from .kernels import ref
+
+__all__ = ["spectral_embedding", "kmeans_step", "EMBED_K", "EMBED_ITERS"]
+
+# Embedding width baked into the artifacts. The paper's experiments use
+# 2..5 clusters; 8 eigenvectors cover all of them with headroom.
+EMBED_K = 8
+# Orthogonal-iteration sweeps baked into the artifacts. Convergence is
+# geometric in (lambda_{K+1}/lambda_K)^iters; 150 sweeps is conservative for
+# the eigengaps of clusterable affinity graphs (validated in tests against
+# numpy.linalg.eigh).
+EMBED_ITERS = 150
+
+
+def _init_subspace(n: int, k: int) -> jnp.ndarray:
+    """Deterministic full-rank start for subspace iteration.
+
+    Baked into the HLO as a constant. A fixed PRNG draw (key 0) is almost
+    surely non-orthogonal to every eigenvector we care about; determinism
+    keeps artifacts reproducible bit-for-bit.
+    """
+    return jax.random.normal(jax.random.PRNGKey(0), (n, k), dtype=jnp.float32)
+
+
+def _gram_schmidt(v: jnp.ndarray) -> jnp.ndarray:
+    """Modified Gram–Schmidt orthonormalization of the columns of ``v`` (n,k).
+
+    k is small (EMBED_K) and static, so the python loop unrolls into a short
+    chain of matvecs in the HLO. Degenerate columns are replaced by a safe
+    normalization guard (norm clamped away from 0) rather than re-drawn —
+    subspace iteration recovers rank on the next multiply.
+    """
+    n, k = v.shape
+    cols = []
+    for j in range(k):
+        c = v[:, j]
+        for q in cols:
+            c = c - jnp.dot(q, c) * q
+        norm = jnp.sqrt(jnp.maximum(jnp.dot(c, c), 1e-30))
+        cols.append(c / norm)
+    return jnp.stack(cols, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_eig", "iters", "use_pallas", "interpret")
+)
+def spectral_embedding(
+    cw: jnp.ndarray,
+    w: jnp.ndarray,
+    sigma: jnp.ndarray,
+    *,
+    k_eig: int = EMBED_K,
+    iters: int = EMBED_ITERS,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """Spectral embedding of the codeword set.
+
+    Args:
+      cw:    (n, d) codewords collected from all sites (padded).
+      w:     (n,)   weights; group sizes or 1.0, 0.0 for padding rows.
+      sigma: scalar Gaussian bandwidth.
+
+    Returns:
+      evecs: (n, k_eig) orthonormal Ritz vectors of M = D^-1/2 A D^-1/2,
+             ordered by decreasing Ritz value (column 0 ~ trivial vector).
+      evals: (k_eig,) Ritz values (eigenvalues of M; lap eigs are 1 - these).
+      deg:   (n,) degrees of the affinity graph (0 for padding rows).
+    """
+    if use_pallas:
+        a = affinity(cw, w, sigma, interpret=interpret)
+    else:
+        a = ref.affinity_ref(cw, w, sigma)
+
+    deg = jnp.sum(a, axis=1)
+    # Padding rows (and fully isolated codewords) get degree 1 so D^-1/2 is
+    # finite; their affinity rows are zero so they do not couple back.
+    safe_deg = jnp.where(deg <= 1e-12, 1.0, deg)
+    dinv = jax.lax.rsqrt(safe_deg)
+    m = a * dinv[:, None] * dinv[None, :]
+
+    v0 = _gram_schmidt(_init_subspace(cw.shape[0], k_eig))
+
+    def sweep(_, v):
+        return _gram_schmidt(m @ v)
+
+    v = jax.lax.fori_loop(0, iters, sweep, v0)
+
+    # Ritz values + a final rotation to sort columns by decreasing value.
+    mv = m @ v
+    ritz = jnp.sum(v * mv, axis=0)
+    order = jnp.argsort(-ritz)
+    v = jnp.take(v, order, axis=1)
+    ritz = jnp.take(ritz, order)
+    return v, ritz, deg
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def kmeans_step(
+    p: jnp.ndarray,
+    c: jnp.ndarray,
+    pmask: jnp.ndarray,
+    cmask: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """One Lloyd iteration over masked points.
+
+    Args:
+      p:     (n, d) points (padded rows arbitrary).
+      c:     (K, d) current centroids.
+      pmask: (n,)  1.0 for real points, 0.0 for padding.
+      cmask: (K,)  1.0 for active centroids.
+
+    Returns:
+      new_c:  (K, d) updated centroids (inactive/empty keep their old value).
+      idx:    (n,)  int32 assignment of every row (padding rows assign to the
+              nearest active centroid too, but carry zero weight in updates).
+      shift:  scalar, squared movement of active centroids — the Rust driver
+              uses it as the convergence signal.
+      inertia: scalar, weighted within-cluster sum of squares of real points.
+    """
+    if use_pallas:
+        idx, mind = kmeans_assign(p, c, cmask, interpret=interpret)
+    else:
+        idx, mind = ref.kmeans_assign_ref(p, c, cmask)
+
+    k = c.shape[0]
+    onehot = (idx[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(
+        jnp.float32
+    )
+    onehot = onehot * pmask[:, None]
+
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ p
+    new_c = sums / jnp.maximum(counts, 1.0)[:, None]
+    # Empty or inactive clusters keep their previous centroid.
+    keep_old = (counts < 0.5) | (cmask < 0.5)
+    new_c = jnp.where(keep_old[:, None], c, new_c)
+
+    shift = jnp.sum((new_c - c) ** 2 * cmask[:, None])
+    inertia = jnp.sum(mind * pmask)
+    return new_c, idx, shift, inertia

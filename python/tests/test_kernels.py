@@ -1,0 +1,168 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, bandwidths, weight patterns and data scales; every
+case asserts allclose against ref.py. These are the core correctness signal
+for the compute the Rust coordinator executes via the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.affinity import affinity
+from compile.kernels.kmeans import kmeans_assign
+
+F32 = np.float32
+
+
+def rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(F32)
+
+
+# ---------------------------------------------------------------- affinity
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 3),
+    d=st.sampled_from([1, 2, 4, 8, 16, 33, 64]),
+    sigma=st.floats(0.05, 50.0),
+    scale=st.floats(0.1, 10.0),
+    pad=st.integers(0, 100),
+    weighted=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_affinity_matches_ref(n_tiles, d, sigma, scale, pad, weighted, seed):
+    tile = 128
+    n = n_tiles * tile
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, d, scale=scale)
+    w = np.ones(n, F32)
+    if weighted:
+        w = rng.integers(1, 500, n).astype(F32)
+    pad = min(pad, n - 1)
+    if pad:
+        w[n - pad :] = 0.0
+
+    got = np.asarray(affinity(jnp.array(x), jnp.array(w), jnp.float32(sigma), tile=tile))
+    want = np.asarray(ref.affinity_ref(jnp.array(x), jnp.array(w), jnp.float32(sigma)))
+    # Error model: the expanded-form d² carries ~eps·max|x|² absolute error,
+    # which propagates through exp(−d²/2σ²) as ≤ Δd²/(2σ²) in both relative
+    # and (×w²) absolute terms. Capped so the test still bites: a genuine
+    # kernel bug produces O(1) mismatches, far above 1%.
+    m = scale * scale * (d + 6.0 * np.sqrt(d))
+    dx = 2e-6 * m / (2.0 * sigma * sigma)
+    tol = float(np.clip(dx, 1e-5, 1e-2))
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * float(w.max()) ** 2)
+
+
+def test_affinity_diagonal_zero_and_symmetric():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 256, 8)
+    w = rng.integers(1, 40, 256).astype(F32)
+    a = np.asarray(affinity(jnp.array(x), jnp.array(w), jnp.float32(1.5)))
+    assert np.all(np.diag(a) == 0.0)
+    np.testing.assert_allclose(a, a.T, rtol=1e-6, atol=1e-6)
+    assert np.all(a >= 0.0)
+
+
+def test_affinity_padding_rows_zero():
+    rng = np.random.default_rng(8)
+    x = rand(rng, 128, 4)
+    w = np.ones(128, F32)
+    w[100:] = 0.0
+    a = np.asarray(affinity(jnp.array(x), jnp.array(w), jnp.float32(1.0)))
+    assert np.all(a[100:, :] == 0.0)
+    assert np.all(a[:, 100:] == 0.0)
+
+
+def test_affinity_pad_invariance():
+    """Real block of A must not depend on the *values* in padding rows."""
+    rng = np.random.default_rng(9)
+    x1 = rand(rng, 128, 8)
+    x2 = x1.copy()
+    x2[100:] = rng.standard_normal((28, 8)).astype(F32) * 100
+    w = np.ones(128, F32)
+    w[100:] = 0.0
+    a1 = np.asarray(affinity(jnp.array(x1), jnp.array(w), jnp.float32(2.0)))
+    a2 = np.asarray(affinity(jnp.array(x2), jnp.array(w), jnp.float32(2.0)))
+    np.testing.assert_array_equal(a1[:100, :100], a2[:100, :100])
+
+
+def test_affinity_rejects_bad_tile():
+    import pytest
+
+    x = jnp.zeros((100, 4), jnp.float32)
+    w = jnp.ones((100,), jnp.float32)
+    with pytest.raises(ValueError):
+        affinity(x, w, jnp.float32(1.0), tile=128)
+
+
+# ------------------------------------------------------------- kmeans_assign
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 3),
+    k=st.sampled_from([1, 2, 3, 8, 17, 64]),
+    d=st.sampled_from([1, 2, 5, 8, 32]),
+    scale=st.floats(0.1, 10.0),
+    inactive=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_matches_ref(n_tiles, k, d, scale, inactive, seed):
+    tile = 256
+    n = n_tiles * tile
+    rng = np.random.default_rng(seed)
+    p = rand(rng, n, d, scale=scale)
+    c = rand(rng, k, d, scale=scale)
+    cmask = np.ones(k, F32)
+    inactive = min(inactive, k - 1)
+    if inactive:
+        off = rng.choice(k, size=inactive, replace=False)
+        cmask[off] = 0.0
+
+    gi, gm = kmeans_assign(jnp.array(p), jnp.array(c), jnp.array(cmask), tile=tile)
+    wi, wm = ref.kmeans_assign_ref(jnp.array(p), jnp.array(c), jnp.array(cmask))
+    gi, gm, wi, wm = map(np.asarray, (gi, gm, wi, wm))
+    # Index can differ only on (near-)distance ties; distances must agree.
+    # The expanded |p|^2+|c|^2-2pc form loses ~eps * |coords|^2 absolute
+    # precision, so atol scales with the squared data magnitude.
+    atol = 1e-4 * max(1.0, scale * scale)
+    np.testing.assert_allclose(gm, wm, rtol=1e-5, atol=atol)
+    same = gi == wi
+    if not same.all():
+        # tolerate only genuine (near-)ties
+        d2 = np.asarray(ref.pairwise_sqdist_ref(jnp.array(p), jnp.array(c)))
+        for i in np.where(~same)[0]:
+            assert np.isclose(d2[i, gi[i]], d2[i, wi[i]], rtol=1e-5, atol=atol)
+
+
+def test_assign_never_picks_inactive():
+    rng = np.random.default_rng(3)
+    p = rand(rng, 256, 4)
+    c = rand(rng, 8, 4)
+    cmask = np.array([1, 0, 1, 0, 1, 0, 1, 0], F32)
+    gi, _ = kmeans_assign(jnp.array(p), jnp.array(c), jnp.array(cmask))
+    assert set(np.asarray(gi).tolist()) <= {0, 2, 4, 6}
+
+
+def test_assign_known_case():
+    p = np.array([[0.0, 0], [10, 0], [0, 10], [10, 10]], F32)
+    p = np.tile(p, (64, 1))  # n=256
+    c = np.array([[0.0, 0], [10, 0], [0, 10], [10, 10]], F32)
+    gi, gm = kmeans_assign(jnp.array(p), jnp.array(c), jnp.ones(4, dtype=jnp.float32))
+    assert np.array_equal(np.asarray(gi), np.tile(np.arange(4, dtype=np.int32), 64))
+    assert np.allclose(np.asarray(gm), 0.0, atol=1e-5)
+
+
+def test_assign_shape_mismatch_raises():
+    import pytest
+
+    with pytest.raises(ValueError):
+        kmeans_assign(
+            jnp.zeros((256, 4), jnp.float32),
+            jnp.zeros((8, 5), jnp.float32),
+            jnp.ones((8,), jnp.float32),
+        )

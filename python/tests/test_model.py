@@ -1,0 +1,171 @@
+"""Layer-2 correctness: spectral embedding + kmeans_step semantics.
+
+Checks against dense numpy linear algebra (eigh) on small problems and
+verifies the masking/padding contract the Rust runtime relies on.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import EMBED_K, kmeans_step, spectral_embedding
+
+F32 = np.float32
+
+
+def two_blobs(n, d, real, sep=4.0, seed=0, scale=0.3):
+    """Two well-separated Gaussian blobs + (n - real) padding rows."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, d), F32)
+    half = real // 2
+    x[:half] = (rng.standard_normal((half, d)) * scale + sep / 2).astype(F32)
+    x[half:real] = (rng.standard_normal((real - half, d)) * scale - sep / 2).astype(F32)
+    w = np.zeros(n, F32)
+    w[:real] = 1.0
+    return x, w
+
+
+def dense_m(x, w, sigma):
+    a = np.asarray(ref.affinity_ref(jnp.array(x), jnp.array(w), jnp.float32(sigma)))
+    deg = a.sum(1)
+    sd = np.where(deg <= 1e-12, 1.0, deg)
+    return a / np.sqrt(sd)[:, None] / np.sqrt(sd)[None, :], deg
+
+
+def test_embedding_matches_dense_eigh():
+    x, w = two_blobs(256, 8, 200)
+    v, ritz, deg = spectral_embedding(jnp.array(x), jnp.array(w), jnp.float32(1.0))
+    v, ritz, deg = map(np.asarray, (v, ritz, deg))
+
+    m, deg_ref = dense_m(x, w, 1.0)
+    evals = np.linalg.eigvalsh(m)[::-1]
+    np.testing.assert_allclose(np.sort(ritz)[::-1][:4], evals[:4], atol=2e-3)
+    np.testing.assert_allclose(deg, deg_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_embedding_orthonormal_and_sorted():
+    x, w = two_blobs(256, 16, 256, seed=2)
+    v, ritz, _ = spectral_embedding(jnp.array(x), jnp.array(w), jnp.float32(1.5))
+    v, ritz = np.asarray(v), np.asarray(ritz)
+    gram = v.T @ v
+    np.testing.assert_allclose(gram, np.eye(EMBED_K), atol=1e-4)
+    assert np.all(np.diff(ritz) <= 1e-6), "Ritz values must be sorted descending"
+    # eigenvalues of M lie in [-1, 1]
+    assert np.all(ritz <= 1.0 + 1e-4) and np.all(ritz >= -1.0 - 1e-4)
+
+
+def test_embedding_separates_two_blobs():
+    """Sign pattern of the 2nd eigenvector must split the two blobs."""
+    x, w = two_blobs(256, 8, 200, seed=5)
+    v, _, _ = spectral_embedding(jnp.array(x), jnp.array(w), jnp.float32(1.0))
+    v = np.asarray(v)
+    v2 = v[:200, 1]
+    s1, s2 = np.sign(v2[:100]), np.sign(v2[100:200])
+    # each blob has a coherent sign and the two differ
+    assert np.abs(s1.sum()) == 100
+    assert np.abs(s2.sum()) == 100
+    assert s1[0] != s2[0]
+
+
+def test_embedding_pad_value_invariance():
+    x1, w = two_blobs(256, 8, 180, seed=6)
+    x2 = x1.copy()
+    rng = np.random.default_rng(7)
+    x2[180:] = rng.standard_normal((76, 8)).astype(F32) * 50
+    v1, r1, _ = spectral_embedding(jnp.array(x1), jnp.array(w), jnp.float32(1.0))
+    v2, r2, _ = spectral_embedding(jnp.array(x2), jnp.array(w), jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+    # eigenvectors defined up to sign per column on real rows
+    a, b = np.asarray(v1)[:180], np.asarray(v2)[:180]
+    for j in range(EMBED_K):
+        s = np.sign(np.dot(a[:, j], b[:, j])) or 1.0
+        np.testing.assert_allclose(a[:, j], s * b[:, j], atol=1e-3)
+
+
+def test_embedding_weighted_mode_runs():
+    x, w = two_blobs(256, 8, 200, seed=8)
+    w[:200] = np.random.default_rng(0).integers(1, 100, 200).astype(F32)
+    v, ritz, deg = spectral_embedding(jnp.array(x), jnp.array(w), jnp.float32(1.0))
+    assert np.all(np.isfinite(np.asarray(v)))
+    assert np.all(np.isfinite(np.asarray(ritz)))
+    assert np.all(np.asarray(deg)[200:] == 0.0)
+
+
+# -------------------------------------------------------------- kmeans_step
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([2, 3, 8]))
+def test_kmeans_step_decreases_inertia(seed, k):
+    rng = np.random.default_rng(seed)
+    n, d = 256, 8
+    p = rng.standard_normal((n, d)).astype(F32)
+    pmask = np.ones(n, F32)
+    pmask[240:] = 0.0
+    c = p[rng.choice(240, k, replace=False)]
+    cmask = np.zeros(8, F32)
+    cmask[:k] = 1.0
+    cpad = np.zeros((8, d), F32)
+    cpad[:k] = c
+
+    prev = np.inf
+    cc = cpad
+    for _ in range(8):
+        cc, idx, shift, inertia = kmeans_step(
+            jnp.array(p), jnp.array(cc), jnp.array(pmask), jnp.array(cmask)
+        )
+        cc = np.asarray(cc)
+        inertia = float(inertia)
+        assert inertia <= prev + 1e-3, "Lloyd iterations must not increase inertia"
+        prev = inertia
+    assert float(shift) < 1.0  # should be (near) converged on n=240
+
+
+def test_kmeans_step_fixed_point():
+    """Perfectly centered centroids are a fixed point with shift 0."""
+    p = np.array([[0.0, 0], [0, 0], [10, 10], [10, 10]], F32)
+    p = np.tile(p, (64, 1))
+    c = np.zeros((8, 2), F32)
+    c[0] = [0, 0]
+    c[1] = [10, 10]
+    cmask = np.zeros(8, F32)
+    cmask[:2] = 1.0
+    pmask = np.ones(256, F32)
+    new_c, idx, shift, inertia = kmeans_step(
+        jnp.array(p), jnp.array(c), jnp.array(pmask), jnp.array(cmask)
+    )
+    assert float(shift) == 0.0
+    assert float(inertia) == 0.0
+    np.testing.assert_array_equal(np.asarray(new_c), c)
+
+
+def test_kmeans_step_empty_cluster_keeps_centroid():
+    rng = np.random.default_rng(1)
+    p = (rng.standard_normal((256, 4)) * 0.1).astype(F32)  # all near origin
+    c = np.zeros((8, 4), F32)
+    c[1] = [100, 100, 100, 100]  # will be empty
+    cmask = np.zeros(8, F32)
+    cmask[:2] = 1.0
+    new_c, idx, _, _ = kmeans_step(
+        jnp.array(p), jnp.array(c), jnp.ones(256, dtype=jnp.float32), jnp.array(cmask)
+    )
+    np.testing.assert_array_equal(np.asarray(new_c)[1], c[1])
+    assert np.all(np.asarray(idx) == 0)
+
+
+def test_kmeans_step_pmask_excludes_padding():
+    """Padding rows must not drag centroids."""
+    p = np.zeros((256, 2), F32)
+    p[:128] = [1.0, 1.0]
+    p[128:] = [1000.0, 1000.0]  # padding junk
+    pmask = np.zeros(256, F32)
+    pmask[:128] = 1.0
+    c = np.zeros((8, 2), F32)
+    c[0] = [0.5, 0.5]
+    cmask = np.zeros(8, F32)
+    cmask[0] = 1.0
+    new_c, _, _, inertia = kmeans_step(
+        jnp.array(p), jnp.array(c), jnp.array(pmask), jnp.array(cmask)
+    )
+    np.testing.assert_allclose(np.asarray(new_c)[0], [1.0, 1.0], atol=1e-5)

@@ -1,0 +1,181 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! [`time_it`] measures a closure with warmup and repeated samples and
+//! returns robust statistics; [`Table`] renders the paper-style result
+//! tables every `benches/*.rs` binary prints (and optionally dumps CSV
+//! next to them for plotting).
+//!
+//! These are *macro* benches by design: the quantities the paper reports
+//! (elapsed seconds per pipeline stage) are tenths-of-seconds to minutes,
+//! so wall-clock sampling with a handful of repetitions is the right tool —
+//! no need for criterion's nanosecond machinery.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Sample standard deviation.
+    pub sd: Duration,
+    pub samples: usize,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:.3}s ±{:.3} (min {:.3}, n={})",
+            self.mean.as_secs_f64(),
+            self.sd.as_secs_f64(),
+            self.min.as_secs_f64(),
+            self.samples
+        )
+    }
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `samples` recorded ones.
+pub fn time_it(warmup: usize, samples: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples = samples.max(1);
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    stats_of(&times)
+}
+
+/// Compute [`Stats`] from raw durations.
+pub fn stats_of(times: &[Duration]) -> Stats {
+    assert!(!times.is_empty());
+    let n = times.len();
+    let sum: Duration = times.iter().sum();
+    let mean = sum / n as u32;
+    let min = *times.iter().min().unwrap();
+    let max = *times.iter().max().unwrap();
+    let mean_s = mean.as_secs_f64();
+    let var = times
+        .iter()
+        .map(|t| (t.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / (n.max(2) - 1) as f64;
+    Stats { mean, min, max, sd: Duration::from_secs_f64(var.sqrt()), samples: n }
+}
+
+/// A paper-style results table with markdown rendering and CSV dumping.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as a markdown table (what the bench binaries print).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Dump as CSV under `bench_out/` for plotting.
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("bench_out");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut body = format!("# {}\n{}\n", self.title, self.columns.join(","));
+        for row in &self.rows {
+            body.push_str(&row.join(","));
+            body.push('\n');
+        }
+        std::fs::write(&path, body)?;
+        Ok(path)
+    }
+}
+
+/// Format a duration as seconds with milli precision (table cells).
+pub fn secs(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let s = time_it(1, 3, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(s.mean >= Duration::from_millis(1));
+        assert_eq!(s.samples, 3);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn stats_of_constant_has_zero_sd() {
+        let s = stats_of(&[Duration::from_millis(5); 4]);
+        assert_eq!(s.sd, Duration::ZERO);
+        assert_eq!(s.mean, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn table_renders_and_saves() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(&["1".into(), "long cell".into()]);
+        let md = t.render();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1 | long cell |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

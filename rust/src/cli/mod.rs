@@ -1,0 +1,404 @@
+//! Command-line launcher (offline stand-in for `clap`).
+//!
+//! Subcommands:
+//!
+//! * `dsc run`       — one distributed run; prints a report table.
+//! * `dsc datasets`  — the Table-1 proxy inventory.
+//! * `dsc artifacts` — verify the AOT artifact set is loadable.
+//!
+//! `parse_flags` is a tiny `--key value` / `--flag` parser with typed
+//! accessors; unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{Backend, PipelineConfig};
+use crate::coordinator::run_pipeline;
+use crate::data::scenario::{self, Scenario};
+use crate::data::{gmm, iris, uci_proxy, Dataset};
+use crate::dml::DmlKind;
+use crate::spectral::{Algo, Bandwidth};
+
+/// Parsed `--key value` flags (flags without values map to "true").
+#[derive(Debug, Default)]
+pub struct Flags {
+    map: BTreeMap<String, String>,
+}
+
+/// Flags that take no value.
+const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "help"];
+
+pub fn parse_flags(args: &[String]) -> Result<Flags> {
+    let mut map = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected positional argument {a:?}");
+        };
+        if BOOL_FLAGS.contains(&key) {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        let Some(val) = args.get(i + 1) else {
+            bail!("flag --{key} needs a value");
+        };
+        map.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    Ok(Flags { map })
+}
+
+impl Flags {
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+    pub fn usize(&self, key: &str) -> Result<Option<usize>> {
+        self.map
+            .get(key)
+            .map(|s| s.parse::<usize>().map_err(|_| anyhow!("--{key} expects an integer")))
+            .transpose()
+    }
+    pub fn f64(&self, key: &str) -> Result<Option<f64>> {
+        self.map
+            .get(key)
+            .map(|s| s.parse::<f64>().map_err(|_| anyhow!("--{key} expects a number")))
+            .transpose()
+    }
+    pub fn u64(&self, key: &str) -> Result<Option<u64>> {
+        self.map
+            .get(key)
+            .map(|s| s.parse::<u64>().map_err(|_| anyhow!("--{key} expects an integer")))
+            .transpose()
+    }
+    pub fn bool(&self, key: &str) -> bool {
+        self.map.get(key).map(|s| s == "true").unwrap_or(false)
+    }
+    /// Error on flags this command does not understand.
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in self.map.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (see `dsc help`)");
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+dsc — distributed spectral clustering (Yan et al., TBDATA 2019)
+
+USAGE:
+  dsc run [FLAGS]       run one distributed clustering pipeline
+  dsc datasets          list the UCI dataset proxies (paper Table 1)
+  dsc artifacts         check the AOT artifact set loads
+  dsc help              this text
+
+RUN FLAGS:
+  --dataset NAME    gmm2d | gmm10d | iris | connect4 | skinseg | usci |
+                    covertype | htsensor | pokerhand | gassensor | hepmass
+  --n N             points to generate (default: dataset-specific)
+  --rho R           gmm10d covariance decay (0.1/0.3/0.6; default 0.3)
+  --sites S         number of distributed sites (default 2)
+  --scenario D      d1 | d2 | d3 (default d3)
+  --dml KIND        kmeans | rptrees (default kmeans)
+  --codes N         total codeword budget (default: paper's ratio)
+  --k K             clusters (default: dataset classes)
+  --algo A          ncut | njw (default ncut)
+  --backend B       native | xla | xla-full (default native)
+  --bandwidth SPEC  fixed:σ | median:scale | eigengap:k (default median:1)
+  --weighted        weight affinity by codeword group sizes
+  --seed N          master seed (default 7)
+  --config FILE     TOML config (flags override it)
+  --full-scale      use the paper's full dataset sizes
+";
+
+/// Materialize the dataset a `run` invocation asks for.
+pub fn load_dataset(flags: &Flags) -> Result<(Dataset, usize)> {
+    let name = flags.str("dataset").unwrap_or("gmm10d");
+    let seed = flags.u64("seed")?.unwrap_or(7);
+    match name {
+        "gmm2d" => {
+            let n = flags.usize("n")?.unwrap_or(10_000);
+            Ok((gmm::paper_mixture_2d(n, seed), 4))
+        }
+        "gmm10d" => {
+            let n = flags.usize("n")?.unwrap_or(40_000);
+            let rho = flags.f64("rho")?.unwrap_or(0.3);
+            Ok((gmm::paper_mixture_10d(n, rho, seed), 4))
+        }
+        "iris" => Ok((iris::load(), 3)),
+        other => {
+            let spec = uci_proxy::by_name(other)
+                .ok_or_else(|| anyhow!("unknown dataset {other:?} (see `dsc datasets`)"))?;
+            let n = if flags.bool("full-scale") {
+                spec.paper_n
+            } else {
+                flags.usize("n")?.unwrap_or_else(|| spec.default_n())
+            };
+            Ok((spec.generate(n, seed), spec.n_classes))
+        }
+    }
+}
+
+/// Build a [`PipelineConfig`] from `--config` + flag overrides.
+pub fn build_config(flags: &Flags, default_k: usize, n_points: usize) -> Result<PipelineConfig> {
+    let mut cfg = match flags.str("config") {
+        Some(path) => PipelineConfig::from_file(std::path::Path::new(path))?,
+        None => PipelineConfig::default(),
+    };
+    if let Some(v) = flags.str("dml") {
+        cfg.dml = DmlKind::parse(v).ok_or_else(|| anyhow!("bad --dml {v:?}"))?;
+    }
+    if let Some(v) = flags.usize("codes")? {
+        cfg.total_codes = v;
+    } else if flags.str("dataset").map(|d| uci_proxy::by_name(d).is_some()).unwrap_or(false) {
+        // default to the paper's compression ratio target for UCI proxies
+        let spec = uci_proxy::by_name(flags.str("dataset").unwrap()).unwrap();
+        cfg.total_codes = spec.target_codewords().min(n_points);
+    } else {
+        cfg.total_codes = cfg.total_codes.min(n_points / 4).max(16.min(n_points));
+    }
+    cfg.k_clusters = flags.usize("k")?.unwrap_or(default_k);
+    if let Some(v) = flags.str("algo") {
+        cfg.algo = Algo::parse(v).ok_or_else(|| anyhow!("bad --algo {v:?}"))?;
+    }
+    if let Some(v) = flags.str("backend") {
+        cfg.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad --backend {v:?}"))?;
+    }
+    if let Some(v) = flags.str("bandwidth") {
+        cfg.bandwidth = parse_bandwidth(v)?;
+    }
+    if flags.bool("weighted") {
+        cfg.weighted_affinity = true;
+    }
+    if let Some(v) = flags.u64("seed")? {
+        cfg.seed = v;
+    }
+    Ok(cfg)
+}
+
+/// `fixed:2.5 | median:0.5 | eigengap:4`
+pub fn parse_bandwidth(s: &str) -> Result<Bandwidth> {
+    let (kind, val) = s.split_once(':').unwrap_or((s, ""));
+    match kind {
+        "fixed" => Ok(Bandwidth::Fixed(
+            val.parse().map_err(|_| anyhow!("fixed:<σ> needs a number"))?,
+        )),
+        "median" => Ok(Bandwidth::MedianScale(if val.is_empty() {
+            1.0
+        } else {
+            val.parse().map_err(|_| anyhow!("median:<scale> needs a number"))?
+        })),
+        "eigengap" => Ok(Bandwidth::EigengapSearch {
+            k: if val.is_empty() {
+                2
+            } else {
+                val.parse().map_err(|_| anyhow!("eigengap:<k> needs an integer"))?
+            },
+        }),
+        other => bail!("unknown bandwidth policy {other:?}"),
+    }
+}
+
+/// The `dsc run` subcommand.
+pub fn cmd_run(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    flags.reject_unknown(&[
+        "dataset", "n", "rho", "sites", "scenario", "dml", "codes", "k", "algo", "backend",
+        "bandwidth", "weighted", "seed", "config", "full-scale", "help",
+    ])?;
+    if flags.bool("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+
+    let (ds, default_k) = load_dataset(&flags)?;
+    let cfg = build_config(&flags, default_k, ds.len())?;
+    let sites = flags.usize("sites")?.unwrap_or(2);
+    let sc = match flags.str("scenario") {
+        None => Scenario::D3,
+        Some(s) => Scenario::parse(s).ok_or_else(|| anyhow!("bad --scenario {s:?}"))?,
+    };
+    let seed = cfg.seed;
+
+    println!(
+        "dataset={} n={} dim={} classes={} | sites={sites} scenario={sc} dml={} codes={} k={} backend={:?}",
+        ds.name,
+        ds.len(),
+        ds.dim,
+        ds.n_classes,
+        cfg.dml,
+        cfg.total_codes,
+        cfg.k_clusters,
+        cfg.backend,
+    );
+
+    let parts = if sites == 1 {
+        vec![scenario::SitePart {
+            site_id: 0,
+            data: ds.clone(),
+            global_idx: (0..ds.len() as u32).collect(),
+        }]
+    } else {
+        scenario::split(&ds, sc, sites, seed ^ 0x5C)
+    };
+    let report = run_pipeline(&parts, &cfg)?;
+
+    println!("── result ─────────────────────────────");
+    println!("accuracy        {:.4}", report.accuracy);
+    println!("ARI / NMI       {:.4} / {:.4}", report.ari, report.nmi);
+    println!("codewords       {}", report.n_codes);
+    println!("sigma           {:.4}", report.sigma);
+    println!(
+        "elapsed (model) {:.3}s  (max DML {:.3}s + central {:.3}s + populate {:.3}s)",
+        report.elapsed_model.as_secs_f64(),
+        report.site_dml.iter().copied().max().unwrap_or_default().as_secs_f64(),
+        report.central.as_secs_f64(),
+        report.populate.as_secs_f64(),
+    );
+    println!("wall clock      {:.3}s", report.wall.as_secs_f64());
+    println!(
+        "comm            {} B on the wire vs {} B full-data ({}x less), modeled transfer {:.1} ms",
+        report.net.total_bytes(),
+        report.full_data_bytes,
+        report.full_data_bytes / report.net.total_bytes().max(1),
+        report.net.max_link_time().as_secs_f64() * 1e3,
+    );
+    Ok(())
+}
+
+/// The `dsc datasets` subcommand (Table 1).
+pub fn cmd_datasets() {
+    println!(
+        "{:<11} {:>4} {:>8} {:>8} {:>7} {:>8} {:>9}",
+        "dataset", "dim", "paper_n", "classes", "ratio", "codes", "default_n"
+    );
+    for s in uci_proxy::specs() {
+        println!(
+            "{:<11} {:>4} {:>8} {:>8} {:>7} {:>8} {:>9}",
+            s.name,
+            s.dim,
+            s.paper_n,
+            s.n_classes,
+            s.paper_ratio,
+            s.target_codewords(),
+            s.default_n()
+        );
+    }
+}
+
+/// The `dsc artifacts` subcommand.
+pub fn cmd_artifacts() -> Result<()> {
+    let dir = crate::runtime::default_artifact_dir();
+    let arts = crate::runtime::Artifacts::load(&dir)?;
+    println!("artifact dir: {} ({} programs, embed_k={})", dir.display(), arts.programs.len(), arts.embed_k);
+    for p in &arts.programs {
+        println!("  {:<22} {:?} n={} d={} k={}", p.name, p.kind, p.n, p.d, p.k);
+    }
+    Ok(())
+}
+
+/// Top-level dispatch (called by `main`).
+pub fn dispatch(argv: Vec<String>) -> Result<()> {
+    match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("datasets") => {
+            cmd_datasets();
+            Ok(())
+        }
+        Some("artifacts") => cmd_artifacts(),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (see `dsc help`)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(args: &[&str]) -> Flags {
+        parse_flags(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parse_typed_flags() {
+        let f = flags(&["--sites", "3", "--weighted", "--rho", "0.6", "--dataset", "hepmass"]);
+        assert_eq!(f.usize("sites").unwrap(), Some(3));
+        assert!(f.bool("weighted"));
+        assert_eq!(f.f64("rho").unwrap(), Some(0.6));
+        assert_eq!(f.str("dataset"), Some("hepmass"));
+        assert_eq!(f.usize("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let args = vec!["--sites".to_string()];
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        let args = vec!["oops".to_string()];
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let f = flags(&["--bogus", "1"]);
+        assert!(f.reject_unknown(&["sites"]).is_err());
+        assert!(f.reject_unknown(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn bandwidth_specs() {
+        assert!(matches!(parse_bandwidth("fixed:2.5").unwrap(), Bandwidth::Fixed(s) if s == 2.5));
+        assert!(
+            matches!(parse_bandwidth("median:0.3").unwrap(), Bandwidth::MedianScale(s) if s == 0.3)
+        );
+        assert!(matches!(
+            parse_bandwidth("eigengap:4").unwrap(),
+            Bandwidth::EigengapSearch { k: 4 }
+        ));
+        assert!(parse_bandwidth("magic").is_err());
+        assert!(parse_bandwidth("fixed:abc").is_err());
+    }
+
+    #[test]
+    fn dataset_loading_iris_and_proxies() {
+        let f = flags(&["--dataset", "iris"]);
+        let (ds, k) = load_dataset(&f).unwrap();
+        assert_eq!(ds.len(), 150);
+        assert_eq!(k, 3);
+
+        let f = flags(&["--dataset", "skinseg", "--n", "2000"]);
+        let (ds, k) = load_dataset(&f).unwrap();
+        assert_eq!(ds.len(), 2000);
+        assert_eq!(k, 2);
+
+        let f = flags(&["--dataset", "nope"]);
+        assert!(load_dataset(&f).is_err());
+    }
+
+    #[test]
+    fn config_overrides() {
+        let f = flags(&["--dml", "rptrees", "--k", "5", "--backend", "xla", "--codes", "99"]);
+        let cfg = build_config(&f, 2, 10_000).unwrap();
+        assert_eq!(cfg.dml, DmlKind::RpTree);
+        assert_eq!(cfg.k_clusters, 5);
+        assert_eq!(cfg.backend, Backend::Xla);
+        assert_eq!(cfg.total_codes, 99);
+    }
+
+    #[test]
+    fn uci_default_codes_follow_paper_ratio() {
+        let f = flags(&["--dataset", "hepmass"]);
+        let cfg = build_config(&f, 2, 100_000).unwrap();
+        assert_eq!(cfg.total_codes, 1500); // 10.5M / 7000
+    }
+}

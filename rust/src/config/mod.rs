@@ -1,0 +1,271 @@
+//! Typed experiment/pipeline configuration with a TOML file format.
+//!
+//! [`PipelineConfig`] carries every knob of Algorithm 1 plus the execution
+//! environment (backend, link model, seeds). It can be built in code
+//! (examples/benches), loaded from a TOML file (`dsc run --config`), or
+//! tweaked via CLI overrides — the launcher merges all three.
+
+pub mod toml;
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dml::DmlKind;
+use crate::net::LinkSpec;
+use crate::spectral::{Algo, Bandwidth};
+
+pub use crate::data::scenario::Scenario;
+
+/// Where the central spectral step executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust Lanczos/ncut path.
+    Native,
+    /// AOT XLA artifact for the embedding (PJRT), native K-means finish.
+    Xla,
+    /// XLA artifacts for both the embedding and the Lloyd steps.
+    XlaFull,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(Backend::Native),
+            "xla" => Some(Backend::Xla),
+            "xla-full" | "xlafull" => Some(Backend::XlaFull),
+            _ => None,
+        }
+    }
+}
+
+/// Full pipeline configuration (Algorithm 1 + environment).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// DML transform run at every site.
+    pub dml: DmlKind,
+    /// Total codeword budget across all sites, split proportionally to
+    /// site sizes (the paper fixes the data-compression ratio; budget =
+    /// N / ratio).
+    pub total_codes: usize,
+    /// Lloyd sweep cap for K-means DML.
+    pub kmeans_max_iters: usize,
+    /// Relative centroid-shift tolerance for K-means DML.
+    pub kmeans_tol: f64,
+    /// Number of output clusters.
+    pub k_clusters: usize,
+    /// Affinity bandwidth policy for the central step.
+    pub bandwidth: Bandwidth,
+    /// Central spectral algorithm.
+    pub algo: Algo,
+    /// Weight the affinity by codeword group sizes (ablation A2).
+    pub weighted_affinity: bool,
+    /// Execution backend for the central step.
+    pub backend: Backend,
+    /// Site↔leader link model.
+    pub link: LinkSpec,
+    /// Master seed; per-site seeds fork from it.
+    pub seed: u64,
+    /// Artifact directory for XLA backends.
+    pub artifact_dir: std::path::PathBuf,
+    /// How long the leader waits for all codebooks before declaring the
+    /// missing sites failed (straggler/crash protection).
+    pub collect_timeout: Duration,
+    /// Chaos hook: make this site crash before reporting (tests/drills).
+    pub inject_site_failure: Option<usize>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            dml: DmlKind::KMeans,
+            total_codes: 1000,
+            kmeans_max_iters: 30,
+            kmeans_tol: 1e-6,
+            k_clusters: 2,
+            bandwidth: Bandwidth::default(),
+            algo: Algo::RecursiveNcut,
+            weighted_affinity: false,
+            backend: Backend::Native,
+            link: LinkSpec::default(),
+            seed: 0,
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            collect_timeout: Duration::from_secs(300),
+            inject_site_failure: None,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Load from a TOML file; missing keys keep their defaults.
+    pub fn from_file(path: &Path) -> Result<PipelineConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text. Recognized keys (all optional):
+    ///
+    /// ```toml
+    /// [pipeline]
+    /// dml = "kmeans"            # or "rptrees"
+    /// total_codes = 1000
+    /// kmeans_max_iters = 30
+    /// kmeans_tol = 1e-6
+    /// k_clusters = 4
+    /// algo = "ncut"             # or "njw"
+    /// weighted_affinity = false
+    /// backend = "native"        # or "xla", "xla-full"
+    /// seed = 42
+    /// artifact_dir = "artifacts"
+    ///
+    /// [bandwidth]
+    /// policy = "median"         # "fixed" | "median" | "eigengap"
+    /// value = 1.0               # σ for fixed, scale for median, k for eigengap
+    ///
+    /// [link]
+    /// bandwidth_mbps = 100.0
+    /// latency_ms = 20.0
+    /// ```
+    pub fn from_toml(text: &str) -> Result<PipelineConfig> {
+        let map = toml::parse(text)?;
+        let mut cfg = PipelineConfig::default();
+
+        let get = |k: &str| map.get(k);
+        if let Some(v) = get("pipeline.dml") {
+            let s = v.as_str().ok_or_else(|| anyhow!("pipeline.dml must be a string"))?;
+            cfg.dml = DmlKind::parse(s).ok_or_else(|| anyhow!("unknown dml {s:?}"))?;
+        }
+        if let Some(v) = get("pipeline.total_codes") {
+            cfg.total_codes =
+                v.as_i64().ok_or_else(|| anyhow!("total_codes must be int"))? as usize;
+        }
+        if let Some(v) = get("pipeline.kmeans_max_iters") {
+            cfg.kmeans_max_iters =
+                v.as_i64().ok_or_else(|| anyhow!("kmeans_max_iters must be int"))? as usize;
+        }
+        if let Some(v) = get("pipeline.kmeans_tol") {
+            cfg.kmeans_tol = v.as_f64().ok_or_else(|| anyhow!("kmeans_tol must be float"))?;
+        }
+        if let Some(v) = get("pipeline.k_clusters") {
+            cfg.k_clusters =
+                v.as_i64().ok_or_else(|| anyhow!("k_clusters must be int"))? as usize;
+        }
+        if let Some(v) = get("pipeline.algo") {
+            let s = v.as_str().ok_or_else(|| anyhow!("pipeline.algo must be a string"))?;
+            cfg.algo = Algo::parse(s).ok_or_else(|| anyhow!("unknown algo {s:?}"))?;
+        }
+        if let Some(v) = get("pipeline.weighted_affinity") {
+            cfg.weighted_affinity =
+                v.as_bool().ok_or_else(|| anyhow!("weighted_affinity must be bool"))?;
+        }
+        if let Some(v) = get("pipeline.backend") {
+            let s = v.as_str().ok_or_else(|| anyhow!("pipeline.backend must be a string"))?;
+            cfg.backend = Backend::parse(s).ok_or_else(|| anyhow!("unknown backend {s:?}"))?;
+        }
+        if let Some(v) = get("pipeline.seed") {
+            cfg.seed = v.as_i64().ok_or_else(|| anyhow!("seed must be int"))? as u64;
+        }
+        if let Some(v) = get("pipeline.artifact_dir") {
+            cfg.artifact_dir =
+                v.as_str().ok_or_else(|| anyhow!("artifact_dir must be a string"))?.into();
+        }
+
+        match get("bandwidth.policy").and_then(|v| v.as_str()) {
+            None => {}
+            Some("fixed") => {
+                let s = get("bandwidth.value")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow!("fixed bandwidth needs bandwidth.value"))?;
+                cfg.bandwidth = Bandwidth::Fixed(s);
+            }
+            Some("median") => {
+                let s = get("bandwidth.value").and_then(|v| v.as_f64()).unwrap_or(1.0);
+                cfg.bandwidth = Bandwidth::MedianScale(s);
+            }
+            Some("eigengap") => {
+                let k = get("bandwidth.value").and_then(|v| v.as_f64()).unwrap_or(2.0) as usize;
+                cfg.bandwidth = Bandwidth::EigengapSearch { k };
+            }
+            Some(other) => bail!("unknown bandwidth policy {other:?}"),
+        }
+
+        if let Some(v) = get("pipeline.collect_timeout_s") {
+            let secs = v.as_f64().ok_or_else(|| anyhow!("collect_timeout_s must be a number"))?;
+            cfg.collect_timeout = Duration::from_secs_f64(secs);
+        }
+        if let Some(v) = get("link.bandwidth_mbps") {
+            let mbps = v.as_f64().ok_or_else(|| anyhow!("bandwidth_mbps must be float"))?;
+            cfg.link.bandwidth_bps = mbps * 1e6 / 8.0;
+        }
+        if let Some(v) = get("link.latency_ms") {
+            let ms = v.as_f64().ok_or_else(|| anyhow!("latency_ms must be float"))?;
+            cfg.link.latency = Duration::from_secs_f64(ms / 1000.0);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_keys() {
+        let cfg = PipelineConfig::from_toml("").unwrap();
+        assert_eq!(cfg.k_clusters, 2);
+        assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(cfg.dml, DmlKind::KMeans);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = PipelineConfig::from_toml(
+            r#"
+            [pipeline]
+            dml = "rptrees"
+            total_codes = 500
+            k_clusters = 4
+            algo = "njw"
+            weighted_affinity = true
+            backend = "xla"
+            seed = 9
+
+            [bandwidth]
+            policy = "fixed"
+            value = 2.5
+
+            [link]
+            bandwidth_mbps = 1000.0
+            latency_ms = 1.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dml, DmlKind::RpTree);
+        assert_eq!(cfg.total_codes, 500);
+        assert_eq!(cfg.k_clusters, 4);
+        assert_eq!(cfg.algo, Algo::Njw);
+        assert!(cfg.weighted_affinity);
+        assert_eq!(cfg.backend, Backend::Xla);
+        assert_eq!(cfg.seed, 9);
+        match cfg.bandwidth {
+            Bandwidth::Fixed(s) => assert_eq!(s, 2.5),
+            other => panic!("{other:?}"),
+        }
+        assert!((cfg.link.bandwidth_bps - 1.25e8).abs() < 1.0);
+        assert_eq!(cfg.link.latency, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn rejects_unknown_enum_values() {
+        assert!(PipelineConfig::from_toml("[pipeline]\ndml = \"dbscan\"").is_err());
+        assert!(PipelineConfig::from_toml("[pipeline]\nbackend = \"gpu\"").is_err());
+        assert!(PipelineConfig::from_toml("[bandwidth]\npolicy = \"magic\"").is_err());
+    }
+
+    #[test]
+    fn fixed_bandwidth_requires_value() {
+        assert!(PipelineConfig::from_toml("[bandwidth]\npolicy = \"fixed\"").is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Minimal TOML-subset parser (offline stand-in for the `toml` crate).
+//!
+//! Supports what experiment configs need: `[section]` / `[a.b]` tables,
+//! `key = value` with strings, integers, floats, booleans and flat arrays,
+//! `#` comments and blank lines. Keys are flattened to `section.key` paths
+//! in a single map — the typed config layer does its own lookups.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar (or flat array) value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a TOML-subset document into a flat `section.key → value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: malformed section header", lineno + 1);
+            };
+            let name = name.trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        map.insert(full, value);
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respects '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            bail!("unterminated array");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(v) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value {s:?}");
+}
+
+/// Split on commas that are not inside quotes (arrays are flat — no nesting).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = r#"
+            # experiment config
+            seed = 42
+            name = "hepmass"   # dataset
+
+            [pipeline]
+            sites = 3
+            weighted = false
+            tol = 1e-6
+            scales = [0.5, 1.0, 2.0]
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["seed"], TomlValue::Int(42));
+        assert_eq!(m["name"].as_str(), Some("hepmass"));
+        assert_eq!(m["pipeline.sites"], TomlValue::Int(3));
+        assert_eq!(m["pipeline.weighted"], TomlValue::Bool(false));
+        assert_eq!(m["pipeline.tol"].as_f64(), Some(1e-6));
+        let arr = match &m["pipeline.scales"] {
+            TomlValue::Array(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let m = parse(r##"tag = "a#b" # comment"##).unwrap();
+        assert_eq!(m["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let m = parse("n = 1_000_000").unwrap();
+        assert_eq!(m["n"].as_i64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("bad").is_err());
+        assert!(parse("s = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn int_as_f64_coerces() {
+        let m = parse("x = 3").unwrap();
+        assert_eq!(m["x"].as_f64(), Some(3.0));
+    }
+}

@@ -1,0 +1,549 @@
+//! The distributed coordinator — Algorithm 1 as a leader/worker runtime.
+//!
+//! One leader thread and one worker thread per site, talking over the
+//! simulated star network ([`crate::net`]):
+//!
+//! ```text
+//! site s:  DML(local data) ──codebook──▶ leader
+//! leader:  collect S codebooks → spectral clustering on the union
+//! leader:  ──codeword labels──▶ site s
+//! site s:  populate: point label = label of its codeword
+//! ```
+//!
+//! Timing follows the paper's §5 protocol: sites run in parallel, so the
+//! *elapsed* model sums `max_s(DML) + central + max_s(populate)` — the wall
+//! clock of the run itself is also reported (they agree up to thread
+//! scheduling). Communication is whatever crossed the wire, byte-exact.
+//!
+//! The evaluation channel (per-point labels returned to the caller) is NOT
+//! part of the protocol: in production those labels stay at the sites; the
+//! driver only needs them to score accuracy against ground truth, so they
+//! travel through the thread join, not the network.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Backend, PipelineConfig};
+use crate::data::scenario::SitePart;
+use crate::dml::{self, DmlParams};
+use crate::net::{self, Message, NetReport};
+use crate::rng::Rng;
+use crate::runtime::XlaRuntime;
+use crate::spectral::{self, njw, SpectralParams};
+
+/// Outcome of one distributed run.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    /// Predicted label for every point of the *full* dataset (global index).
+    pub labels: Vec<u16>,
+    /// Paper metric (Eq. 5) against the ground-truth labels.
+    pub accuracy: f64,
+    pub ari: f64,
+    pub nmi: f64,
+    /// Modeled elapsed time: max site DML + central + max site populate.
+    pub elapsed_model: Duration,
+    /// Actual wall-clock time of the run.
+    pub wall: Duration,
+    /// Per-site DML seconds (max of these is the parallel-phase cost).
+    pub site_dml: Vec<Duration>,
+    /// Central spectral time.
+    pub central: Duration,
+    /// Max site populate time.
+    pub populate: Duration,
+    /// Codewords that reached the leader.
+    pub n_codes: usize,
+    /// Bytes on the (simulated) wire + modeled transfer time.
+    pub net: NetReport,
+    /// Bytes a ship-all-the-data baseline would need.
+    pub full_data_bytes: u64,
+    /// Bandwidth used by the central step.
+    pub sigma: f64,
+    /// Quantization distortion per site (Theorem 2/3 quantity).
+    pub site_distortion: Vec<f64>,
+}
+
+struct SiteOutcome {
+    site_id: usize,
+    dml_time: Duration,
+    populate_time: Duration,
+    distortion: f64,
+    /// (global point index, predicted label)
+    labels: Vec<(u32, u16)>,
+}
+
+/// Run the full distributed pipeline over pre-split site data.
+///
+/// `parts` is the output of [`crate::data::scenario::split`] (or any
+/// user-provided partition); ground truth inside `parts` is used only for
+/// the report's metrics.
+pub fn run_pipeline(parts: &[SitePart], cfg: &PipelineConfig) -> Result<PipelineReport> {
+    if parts.is_empty() {
+        bail!("no sites");
+    }
+    let dim = parts[0].data.dim;
+    let total_points: usize = parts.iter().map(|p| p.data.len()).sum();
+    if total_points == 0 {
+        bail!("no data");
+    }
+    for p in parts {
+        if p.data.dim != dim {
+            bail!("site {} has dim {}, expected {dim}", p.site_id, p.data.dim);
+        }
+    }
+    let full_data_bytes: u64 = parts.iter().map(|p| p.data.wire_bytes()).sum();
+
+    // Per-site codeword budgets ∝ site size (paper: fixed compression ratio).
+    let budgets: Vec<usize> = parts
+        .iter()
+        .map(|p| {
+            ((cfg.total_codes as f64 * p.data.len() as f64 / total_points as f64).round()
+                as usize)
+                .max(1)
+                .min(p.data.len().max(1))
+        })
+        .collect();
+
+    let wall_start = Instant::now();
+    let (leader, mut site_nets) = net::star(parts.len(), cfg.link);
+    let root_rng = Rng::new(cfg.seed);
+
+    // XLA runtime resolved before threads spawn; the thread-local shared
+    // cache keeps compiled executables alive across pipeline runs on this
+    // (leader) thread.
+    let xla = match cfg.backend {
+        Backend::Native => None,
+        Backend::Xla | Backend::XlaFull => Some(
+            crate::runtime::shared(&cfg.artifact_dir)
+                .context("init XLA runtime (run `make artifacts`?)")?,
+        ),
+    };
+
+    let mut central_time = Duration::ZERO;
+    let mut n_codes_total = 0usize;
+    let mut sigma_used = 0.0f64;
+
+    // Runs the whole leader protocol inside the thread scope. On ANY error
+    // path (straggler timeout, corrupt frame, central failure) the leader
+    // handle is dropped *before* the scope ends, which closes every site's
+    // downlink and unblocks workers still waiting for labels — error
+    // returns never deadlock the scope join.
+    let (outcomes, net_report): (Vec<SiteOutcome>, NetReport) =
+        std::thread::scope(|scope| -> Result<(Vec<SiteOutcome>, NetReport)> {
+        // ---- spawn site workers ----
+        let mut handles = Vec::with_capacity(parts.len());
+        for part in parts {
+            let site_net = site_nets.remove(0);
+            let budget = budgets[part.site_id];
+            let params = DmlParams {
+                kind: cfg.dml,
+                target_codes: budget,
+                max_iters: cfg.kmeans_max_iters,
+                tol: cfg.kmeans_tol,
+                seed: root_rng.fork(part.site_id as u64 + 1).next_u64_seed(),
+            };
+            let fail = cfg.inject_site_failure == Some(part.site_id);
+            handles.push(scope.spawn(move || site_worker(part, params, site_net, fail)));
+        }
+
+        let leader_work = || -> Result<Vec<SiteOutcome>> {
+        // ---- leader: collect codebooks (with straggler deadline) ----
+        // Buffered per site, then concatenated in site order so the
+        // codeword union (and everything downstream of it) is independent
+        // of message arrival order — a determinism guarantee the tests and
+        // benches rely on.
+        let deadline = Instant::now() + cfg.collect_timeout;
+        let mut inbox: Vec<Option<(Vec<f32>, Vec<u32>)>> = vec![None; parts.len()];
+        let mut received = 0usize;
+        while received < parts.len() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let (sid, msg) = leader.recv_timeout(remaining).map_err(|e| {
+                let missing: Vec<usize> = inbox
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.is_none())
+                    .map(|(i, _)| i)
+                    .collect();
+                anyhow!(
+                    "collect failed after {:?} — sites {missing:?} never \
+                     reported ({e})",
+                    cfg.collect_timeout
+                )
+            })?;
+            match msg {
+                Message::Codebook { site, dim: d, codewords, weights } => {
+                    if site as usize != sid {
+                        bail!("site id mismatch on codebook frame");
+                    }
+                    if d as usize != dim {
+                        bail!("site {sid} sent dim {d}, expected {dim}");
+                    }
+                    if inbox[sid].replace((codewords, weights)).is_some() {
+                        bail!("site {sid} sent two codebooks");
+                    }
+                    received += 1;
+                }
+                other => bail!("unexpected message during collect: {other:?}"),
+            }
+        }
+        let mut cw_all: Vec<f32> = Vec::new();
+        let mut w_all: Vec<f32> = Vec::new();
+        // per-site (offset, count) into the codeword union
+        let mut spans = vec![(0usize, 0usize); parts.len()];
+        for (sid, slot) in inbox.into_iter().enumerate() {
+            let (codewords, weights) = slot.expect("all sites received");
+            spans[sid] = (w_all.len(), weights.len());
+            cw_all.extend_from_slice(&codewords);
+            w_all.extend(weights.iter().map(|&w| w as f32));
+        }
+        n_codes_total = w_all.len();
+
+        // ---- leader: central spectral clustering on the codeword union ----
+        // Wall time, not thread CPU: this phase runs alone on the host
+        // (after the site barrier) and may fan out over the `par` pool, so
+        // its wall clock is exactly the elapsed contribution. Sites use
+        // thread CPU instead because *their* contention is a simulation
+        // artifact (see site_worker).
+        let t0 = Instant::now();
+        let (code_labels, sigma) = central_cluster(&cw_all, dim, &w_all, cfg, xla.as_deref())?;
+        central_time = t0.elapsed();
+        sigma_used = sigma;
+
+        // ---- leader: populate labels back ----
+        for (sid, &(off, len)) in spans.iter().enumerate() {
+            let labels: Vec<u16> = code_labels[off..off + len].to_vec();
+            leader.send(sid, &Message::Labels { site: sid as u32, labels })?;
+        }
+
+        let mut outcomes = Vec::with_capacity(parts.len());
+        for h in handles {
+            outcomes.push(h.join().map_err(|_| anyhow!("site worker panicked"))??);
+        }
+        Ok(outcomes)
+        };
+
+        let result = leader_work();
+        let report = leader.report();
+        drop(leader); // close downlinks: unblocks workers on the error path
+        result.map(|outcomes| (outcomes, report))
+    })?;
+
+    let wall = wall_start.elapsed();
+
+    // ---- assemble the global label vector + metrics ----
+    let mut labels = vec![0u16; total_points];
+    for o in &outcomes {
+        for &(g, l) in &o.labels {
+            labels[g as usize] = l;
+        }
+    }
+    let mut truth = vec![0u16; total_points];
+    for p in parts {
+        for (local, &g) in p.global_idx.iter().enumerate() {
+            truth[g as usize] = p.data.labels[local];
+        }
+    }
+
+    let mut site_dml = vec![Duration::ZERO; parts.len()];
+    let mut site_distortion = vec![0.0f64; parts.len()];
+    let mut populate = Duration::ZERO;
+    for o in &outcomes {
+        site_dml[o.site_id] = o.dml_time;
+        site_distortion[o.site_id] = o.distortion;
+        populate = populate.max(o.populate_time);
+    }
+    let max_dml = site_dml.iter().copied().max().unwrap_or_default();
+
+    Ok(PipelineReport {
+        accuracy: crate::metrics::clustering_accuracy(&truth, &labels),
+        ari: crate::metrics::adjusted_rand_index(&truth, &labels),
+        nmi: crate::metrics::normalized_mutual_info(&truth, &labels),
+        labels,
+        elapsed_model: max_dml + central_time + populate,
+        wall,
+        site_dml,
+        central: central_time,
+        populate,
+        n_codes: n_codes_total,
+        net: net_report,
+        full_data_bytes,
+        sigma: sigma_used,
+        site_distortion,
+    })
+}
+
+/// What one site does: DML, ship codebook, await labels, populate.
+///
+/// Per-phase costs are **thread CPU time**: sites are independent machines
+/// in the paper's model, so scheduler contention between site threads on
+/// this (possibly single-core) host must not leak into the max-over-sites
+/// elapsed model. See [`crate::metrics::thread_cpu_time`].
+fn site_worker(
+    part: &SitePart,
+    params: DmlParams,
+    net: net::SiteNet,
+    inject_failure: bool,
+) -> Result<SiteOutcome> {
+    if inject_failure {
+        // Chaos hook (PipelineConfig::inject_site_failure): simulate a site
+        // crashing before it reports — the leader must time out cleanly.
+        bail!("injected failure at site {}", part.site_id);
+    }
+    let t0 = crate::metrics::thread_cpu_time();
+    let cb = dml::apply(&part.data, &params);
+    let dml_time = crate::metrics::thread_cpu_time().saturating_sub(t0);
+    debug_assert!(cb.validate(part.data.len()).is_ok());
+    let distortion = cb.distortion(&part.data);
+
+    net.send(&Message::Codebook {
+        site: part.site_id as u32,
+        dim: cb.dim as u32,
+        codewords: cb.codewords.clone(),
+        weights: cb.weights.clone(),
+    })?;
+
+    let msg = net.recv()?;
+    let code_labels = match msg {
+        Message::Labels { site, labels } => {
+            if site as usize != part.site_id {
+                bail!("label frame for wrong site");
+            }
+            if labels.len() != cb.n_codes() {
+                bail!(
+                    "leader sent {} labels for {} codewords",
+                    labels.len(),
+                    cb.n_codes()
+                );
+            }
+            labels
+        }
+        other => bail!("unexpected message at site: {other:?}"),
+    };
+
+    let t1 = crate::metrics::thread_cpu_time();
+    let labels: Vec<(u32, u16)> = part
+        .global_idx
+        .iter()
+        .enumerate()
+        .map(|(local, &g)| (g, code_labels[cb.assign[local] as usize]))
+        .collect();
+    let populate_time = crate::metrics::thread_cpu_time().saturating_sub(t1);
+
+    Ok(SiteOutcome { site_id: part.site_id, dml_time, populate_time, distortion, labels })
+}
+
+/// Central spectral step with backend dispatch. Returns codeword labels and
+/// the bandwidth used.
+fn central_cluster(
+    cw: &[f32],
+    dim: usize,
+    weights: &[f32],
+    cfg: &PipelineConfig,
+    xla: Option<&XlaRuntime>,
+) -> Result<(Vec<u16>, f64)> {
+    let n = weights.len();
+    let params = SpectralParams {
+        k: cfg.k_clusters,
+        bandwidth: cfg.bandwidth,
+        algo: cfg.algo,
+        weighted: cfg.weighted_affinity,
+        seed: cfg.seed ^ 0xC0FFEE,
+    };
+
+    match cfg.backend {
+        Backend::Native => {
+            let (labels, info) =
+                spectral::cluster_codewords(cw, dim, Some(weights), &params);
+            Ok((labels, info.sigma))
+        }
+        Backend::Xla | Backend::XlaFull => {
+            let rt = xla.expect("runtime present for XLA backends");
+            let mut rng = Rng::new(params.seed);
+            let sigma = spectral::resolve_sigma(
+                cw,
+                dim,
+                Some(weights),
+                params.bandwidth,
+                params.k,
+                &mut rng,
+            );
+            // weights double as the pad mask; the unweighted variant sends 1s
+            let w_eff: Vec<f32> =
+                if params.weighted { weights.to_vec() } else { vec![1.0; n] };
+            let out = rt.embed(cw, dim, &w_eff, sigma as f32)?;
+            let k_cols = out.k_cols;
+
+            let labels = if cfg.backend == Backend::Xla {
+                // native K-means finish on the embedding
+                let emb: Vec<f64> = out.evecs.iter().map(|&v| v as f64).collect();
+                njw::labels_from_embedding(&emb, n, k_cols, params.k, &mut rng)
+            } else {
+                // XLA Lloyd steps on the row-normalized embedding
+                xla_kmeans_labels(rt, &out.evecs, n, k_cols, params.k, &mut rng)?
+            };
+            Ok((labels, sigma))
+        }
+    }
+}
+
+/// Backend::XlaFull finish: row-normalize, run the kstep artifact to a
+/// fixed point, return labels.
+fn xla_kmeans_labels(
+    rt: &XlaRuntime,
+    evecs: &[f32],
+    n: usize,
+    k_cols: usize,
+    k_clusters: usize,
+    rng: &mut Rng,
+) -> Result<Vec<u16>> {
+    let use_cols = k_clusters.clamp(2, k_cols);
+    let mut rows = vec![0.0f32; n * k_cols]; // kstep artifact expects d = k_cols
+    for i in 0..n {
+        let src = &evecs[i * k_cols..i * k_cols + use_cols];
+        let norm = src.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
+        for (j, &s) in src.iter().enumerate() {
+            rows[i * k_cols + j] = s / norm;
+        }
+    }
+    // Several restarts from random distinct rows, keeping the lowest
+    // inertia — Lloyd on spectral embeddings is cheap (n ≤ 2048, d = 8)
+    // but sensitive to seeding, exactly like the native NJW finisher.
+    let k = k_clusters.min(n);
+    let mut best: Option<(f32, Vec<i32>)> = None;
+    for _restart in 0..6 {
+        let picks = rng.sample_indices(n, k);
+        let mut c = vec![0.0f32; k * k_cols];
+        for (slot, &p) in picks.iter().enumerate() {
+            c[slot * k_cols..(slot + 1) * k_cols]
+                .copy_from_slice(&rows[p * k_cols..(p + 1) * k_cols]);
+        }
+        let mut idx = vec![0i32; n];
+        let mut inertia = f32::INFINITY;
+        for _ in 0..60 {
+            let (newc, assign, shift, inert) = rt.kmeans_step(&rows, k_cols, &c, k)?;
+            c = newc;
+            idx = assign;
+            inertia = inert;
+            if shift < 1e-10 {
+                break;
+            }
+        }
+        if best.as_ref().is_none_or(|(b, _)| inertia < *b) {
+            best = Some((inertia, idx));
+        }
+    }
+    let (_, idx) = best.expect("at least one restart");
+    Ok(idx.into_iter().map(|v| v as u16).collect())
+}
+
+/// Seed-derivation helper so site seeds come from the master seed's fork.
+trait SeedFork {
+    fn next_u64_seed(self) -> u64;
+}
+
+impl SeedFork for Rng {
+    fn next_u64_seed(mut self) -> u64 {
+        self.next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gmm, scenario, scenario::Scenario};
+    use crate::dml::DmlKind;
+    use crate::spectral::{Algo, Bandwidth};
+
+    fn blob_mixture(n: usize, seed: u64) -> crate::data::Dataset {
+        // 2 tight blobs in 2-D — easy ground truth for pipeline smoke tests
+        let comps = vec![
+            gmm::Component::isotropic(vec![0.0, 0.0], 0.5, 1.0),
+            gmm::Component::isotropic(vec![10.0, 10.0], 0.5, 1.0),
+        ];
+        gmm::sample("blobs", &comps, n, seed)
+    }
+
+    fn base_cfg() -> PipelineConfig {
+        PipelineConfig {
+            total_codes: 64,
+            k_clusters: 2,
+            bandwidth: Bandwidth::MedianScale(0.5),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn two_site_pipeline_clusters_blobs() {
+        let ds = blob_mixture(4_000, 3);
+        for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+            let parts = scenario::split(&ds, sc, 2, 5);
+            let report = run_pipeline(&parts, &base_cfg()).unwrap();
+            assert!(report.accuracy > 0.99, "{sc}: accuracy {}", report.accuracy);
+            assert_eq!(report.labels.len(), 4_000);
+            assert!(report.n_codes >= 60 && report.n_codes <= 68, "{}", report.n_codes);
+            // codewords are *much* smaller than the data on the wire
+            assert!(report.net.total_bytes() < report.full_data_bytes / 10);
+        }
+    }
+
+    #[test]
+    fn rptree_dml_works_too() {
+        let ds = blob_mixture(4_000, 7);
+        let parts = scenario::split(&ds, Scenario::D3, 2, 9);
+        let cfg = PipelineConfig { dml: DmlKind::RpTree, ..base_cfg() };
+        let report = run_pipeline(&parts, &cfg).unwrap();
+        assert!(report.accuracy > 0.99, "accuracy {}", report.accuracy);
+    }
+
+    #[test]
+    fn njw_algo_works() {
+        let ds = blob_mixture(2_000, 11);
+        let parts = scenario::split(&ds, Scenario::D2, 2, 13);
+        let cfg = PipelineConfig { algo: Algo::Njw, ..base_cfg() };
+        let report = run_pipeline(&parts, &cfg).unwrap();
+        assert!(report.accuracy > 0.99, "accuracy {}", report.accuracy);
+    }
+
+    #[test]
+    fn four_sites_conserve_everything() {
+        let ds = blob_mixture(3_000, 17);
+        let parts = scenario::split(&ds, Scenario::D3, 4, 19);
+        let report = run_pipeline(&parts, &base_cfg()).unwrap();
+        assert!(report.accuracy > 0.99);
+        assert_eq!(report.site_dml.len(), 4);
+        assert_eq!(report.net.per_site.len(), 4);
+        // every site transmitted exactly one codebook and received one
+        // label frame
+        for l in &report.net.per_site {
+            assert_eq!(l.to_leader.frames, 1);
+            assert_eq!(l.to_site.frames, 1);
+        }
+    }
+
+    #[test]
+    fn single_site_is_the_nondistributed_baseline() {
+        let ds = blob_mixture(2_000, 23);
+        let parts = vec![scenario::SitePart {
+            site_id: 0,
+            data: ds.clone(),
+            global_idx: (0..ds.len() as u32).collect(),
+        }];
+        let report = run_pipeline(&parts, &base_cfg()).unwrap();
+        assert!(report.accuracy > 0.99);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = blob_mixture(1_000, 29);
+        let parts = scenario::split(&ds, Scenario::D3, 2, 31);
+        let a = run_pipeline(&parts, &base_cfg()).unwrap();
+        let b = run_pipeline(&parts, &base_cfg()).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.n_codes, b.n_codes);
+    }
+
+    #[test]
+    fn empty_parts_rejected() {
+        assert!(run_pipeline(&[], &base_cfg()).is_err());
+    }
+}

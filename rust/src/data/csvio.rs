@@ -1,0 +1,156 @@
+//! Minimal CSV I/O for datasets and benchmark dumps.
+//!
+//! Format: one row per point, `dim` float columns followed by an integer
+//! label column. No quoting/escaping — the data this pipeline touches is
+//! purely numeric. Lines starting with `#` and blank lines are skipped on
+//! read (benchmark dumps use `#` headers for provenance).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Read a labeled dataset from `path`. `n_classes` is inferred as
+/// `max(label) + 1` unless `n_classes_hint` is given.
+pub fn load_dataset(path: &Path, name: &str, n_classes_hint: Option<usize>) -> Result<Dataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+
+    let mut dim: Option<usize> = None;
+    let mut points: Vec<f32> = Vec::new();
+    let mut labels: Vec<u16> = Vec::new();
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split(',').map(str::trim).collect();
+        if toks.len() < 2 {
+            bail!("{}:{}: need at least one feature + label", path.display(), lineno + 1);
+        }
+        let d = toks.len() - 1;
+        match dim {
+            None => dim = Some(d),
+            Some(d0) if d0 != d => {
+                bail!("{}:{}: ragged row ({} cols, expected {})", path.display(), lineno + 1, d, d0)
+            }
+            _ => {}
+        }
+        for tok in &toks[..d] {
+            let v: f32 = tok
+                .parse()
+                .with_context(|| format!("{}:{}: bad float {tok:?}", path.display(), lineno + 1))?;
+            points.push(v);
+        }
+        let label: u16 = toks[d]
+            .parse()
+            .with_context(|| format!("{}:{}: bad label {:?}", path.display(), lineno + 1, toks[d]))?;
+        labels.push(label);
+    }
+
+    let dim = dim.context("empty csv")?;
+    let n_classes =
+        n_classes_hint.unwrap_or_else(|| labels.iter().map(|&l| l as usize + 1).max().unwrap_or(1));
+    if let Some(&bad) = labels.iter().find(|&&l| (l as usize) >= n_classes) {
+        bail!("label {bad} out of range for n_classes={n_classes}");
+    }
+    Ok(Dataset { name: name.to_string(), dim, points, labels, n_classes })
+}
+
+/// Write a dataset as CSV (features…, label). `header` lines are emitted as
+/// `# `-prefixed comments.
+pub fn save_dataset(path: &Path, ds: &Dataset, header: &[&str]) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for h in header {
+        writeln!(w, "# {h}")?;
+    }
+    for i in 0..ds.len() {
+        let mut first = true;
+        for v in ds.point(i) {
+            if !first {
+                write!(w, ",")?;
+            }
+            write!(w, "{v}")?;
+            first = false;
+        }
+        writeln!(w, ",{}", ds.labels[i])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write an arbitrary numeric table (bench series dumps for plotting).
+pub fn save_table(path: &Path, header: &[&str], columns: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for h in header {
+        writeln!(w, "# {h}")?;
+    }
+    writeln!(w, "{}", columns.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dsc_csv_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.csv");
+
+        let mut ds = Dataset::new("rt", 3, 2);
+        ds.push(&[1.5, -2.0, 0.25], 0);
+        ds.push(&[0.0, 7.0, -1.0], 1);
+        save_dataset(&path, &ds, &["roundtrip test"]).unwrap();
+
+        let back = load_dataset(&path, "rt", None).unwrap();
+        assert_eq!(back.dim, 3);
+        assert_eq!(back.points, ds.points);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.n_classes, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let dir = std::env::temp_dir().join(format!("dsc_csv_test2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.csv");
+        std::fs::write(&path, "# header\n\n1.0,2.0,0\n# mid comment\n3.0,4.0,1\n").unwrap();
+        let ds = load_dataset(&path, "c", None).unwrap();
+        assert_eq!(ds.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let dir = std::env::temp_dir().join(format!("dsc_csv_test3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.csv");
+        std::fs::write(&path, "1.0,2.0,0\n1.0,0\n").unwrap();
+        assert!(load_dataset(&path, "r", None).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_label() {
+        let dir = std::env::temp_dir().join(format!("dsc_csv_test4_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("l.csv");
+        std::fs::write(&path, "1.0,5\n").unwrap();
+        assert!(load_dataset(&path, "l", Some(2)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

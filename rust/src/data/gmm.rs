@@ -1,0 +1,195 @@
+//! Gaussian-mixture samplers, including the paper's synthetic benchmarks.
+//!
+//! §5.1 of the paper uses two mixtures:
+//!
+//! * **Fig. 5** — 2-D, 4 components at μ = (±2, ±2), Σ = [[3,1],[1,3]];
+//! * **Figs. 6–7** — 10-D, 4 components at μᵢ = 2.5·eᵢ (i = 1..4),
+//!   Σᵢⱼ = ρ^{|i−j|} for ρ ∈ {0.1, 0.3, 0.6}; 40 000 points, compression
+//!   40:1 (1000 codewords).
+//!
+//! Sampling with a general covariance goes through its Cholesky factor:
+//! x = μ + L z with z ~ N(0, I).
+
+use crate::linalg::{cholesky, Mat};
+use crate::rng::Rng;
+
+use super::Dataset;
+
+/// Specification of one mixture component.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub mean: Vec<f64>,
+    /// Lower Cholesky factor of the covariance.
+    pub chol: Mat,
+    /// Mixing proportion (will be normalized across components).
+    pub weight: f64,
+}
+
+impl Component {
+    /// Component with an arbitrary SPD covariance matrix.
+    pub fn new(mean: Vec<f64>, cov: &Mat, weight: f64) -> Self {
+        assert_eq!(cov.rows, mean.len());
+        Component { mean, chol: cholesky(cov), weight }
+    }
+
+    /// Component with isotropic covariance σ²·I.
+    pub fn isotropic(mean: Vec<f64>, sigma: f64, weight: f64) -> Self {
+        let d = mean.len();
+        let mut l = Mat::zeros(d, d);
+        for i in 0..d {
+            l[(i, i)] = sigma;
+        }
+        Component { mean, chol: l, weight }
+    }
+
+    fn sample_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        let d = self.mean.len();
+        debug_assert_eq!(out.len(), d);
+        // z ~ N(0, I), x = mean + L z
+        let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        for i in 0..d {
+            let mut acc = self.mean[i];
+            for j in 0..=i {
+                acc += self.chol[(i, j)] * z[j];
+            }
+            out[i] = acc as f32;
+        }
+    }
+}
+
+/// Draw `n` labeled points from the mixture; the label of a point is its
+/// component index (the paper's ground truth for the synthetic runs).
+pub fn sample(name: &str, components: &[Component], n: usize, seed: u64) -> Dataset {
+    assert!(!components.is_empty());
+    let dim = components[0].mean.len();
+    for c in components {
+        assert_eq!(c.mean.len(), dim, "gmm: mixed dimensions");
+    }
+    let mut cum = Vec::with_capacity(components.len());
+    let mut acc = 0.0;
+    for c in components {
+        assert!(c.weight >= 0.0);
+        acc += c.weight;
+        cum.push(acc);
+    }
+    assert!(acc > 0.0, "gmm: zero total weight");
+
+    let mut rng = Rng::new(seed);
+    let mut ds = Dataset::new(name, dim, components.len());
+    ds.points.resize(n * dim, 0.0);
+    ds.labels.resize(n, 0);
+    let mut buf = vec![0.0f32; dim];
+    for i in 0..n {
+        let k = rng.discrete_cum(&cum);
+        components[k].sample_into(&mut rng, &mut buf);
+        ds.points[i * dim..(i + 1) * dim].copy_from_slice(&buf);
+        ds.labels[i] = k as u16;
+    }
+    ds
+}
+
+/// The paper's Fig. 5 toy mixture: 2-D, means (±2, ±2), Σ = [[3,1],[1,3]].
+/// Component order: (2,2), (−2,−2), (−2,2), (2,−2) — matching the text.
+pub fn paper_mixture_2d(n: usize, seed: u64) -> Dataset {
+    let cov = Mat::from_rows(2, 2, &[3.0, 1.0, 1.0, 3.0]);
+    let comps = vec![
+        Component::new(vec![2.0, 2.0], &cov, 1.0),
+        Component::new(vec![-2.0, -2.0], &cov, 1.0),
+        Component::new(vec![-2.0, 2.0], &cov, 1.0),
+        Component::new(vec![2.0, -2.0], &cov, 1.0),
+    ];
+    sample("gmm2d", &comps, n, seed)
+}
+
+/// The paper's Figs. 6–7 mixture: 10-D, 4 equally-weighted components with
+/// μᵢ = 2.5·eᵢ and Σᵢⱼ = ρ^{|i−j|}.
+pub fn paper_mixture_10d(n: usize, rho: f64, seed: u64) -> Dataset {
+    let d = 10;
+    let cov = Mat::from_fn(d, d, |i, j| rho.powi((i as i32 - j as i32).abs()));
+    let comps: Vec<Component> = (0..4)
+        .map(|k| {
+            let mut mean = vec![0.0; d];
+            mean[k] = 2.5;
+            Component::new(mean, &cov, 1.0)
+        })
+        .collect();
+    sample(&format!("gmm10d_rho{rho}"), &comps, n, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_has_right_shape_and_labels() {
+        let ds = paper_mixture_2d(1000, 3);
+        assert_eq!(ds.dim, 2);
+        assert_eq!(ds.len(), 1000);
+        assert_eq!(ds.n_classes, 4);
+        assert!(ds.labels.iter().all(|&l| l < 4));
+        // all four components show up with roughly equal mass
+        let counts = ds.class_counts();
+        for c in counts {
+            assert!(c > 150, "component mass too low: {c}");
+        }
+    }
+
+    #[test]
+    fn component_means_recovered() {
+        let ds = paper_mixture_2d(40_000, 5);
+        let counts = ds.class_counts();
+        let mut sums = [[0.0f64; 2]; 4];
+        for i in 0..ds.len() {
+            let l = ds.labels[i] as usize;
+            sums[l][0] += ds.point(i)[0] as f64;
+            sums[l][1] += ds.point(i)[1] as f64;
+        }
+        let want = [[2.0, 2.0], [-2.0, -2.0], [-2.0, 2.0], [2.0, -2.0]];
+        for k in 0..4 {
+            let mx = sums[k][0] / counts[k] as f64;
+            let my = sums[k][1] / counts[k] as f64;
+            assert!((mx - want[k][0]).abs() < 0.1, "mean x of comp {k}: {mx}");
+            assert!((my - want[k][1]).abs() < 0.1, "mean y of comp {k}: {my}");
+        }
+    }
+
+    #[test]
+    fn covariance_structure_10d() {
+        let rho = 0.6;
+        let ds = paper_mixture_10d(60_000, rho, 9);
+        // pool component 0 and estimate cov of adjacent coords 5,6 (mean 0
+        // for both in that component)
+        let idx = ds.class_indices(0);
+        let mut c55 = 0.0f64;
+        let mut c56 = 0.0f64;
+        for &i in &idx {
+            let p = ds.point(i);
+            c55 += (p[5] as f64) * (p[5] as f64);
+            c56 += (p[5] as f64) * (p[6] as f64);
+        }
+        c55 /= idx.len() as f64;
+        c56 /= idx.len() as f64;
+        assert!((c55 - 1.0).abs() < 0.06, "var {c55}");
+        assert!((c56 - rho).abs() < 0.06, "cov {c56}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = paper_mixture_10d(100, 0.3, 42);
+        let b = paper_mixture_10d(100, 0.3, 42);
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn weights_respected() {
+        let comps = vec![
+            Component::isotropic(vec![0.0], 1.0, 9.0),
+            Component::isotropic(vec![10.0], 1.0, 1.0),
+        ];
+        let ds = sample("w", &comps, 20_000, 1);
+        let counts = ds.class_counts();
+        let frac = counts[1] as f64 / 20_000.0;
+        assert!((frac - 0.1).abs() < 0.02, "frac {frac}");
+    }
+}

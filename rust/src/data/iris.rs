@@ -1,0 +1,71 @@
+//! Fisher's Iris dataset, embedded (150 × 4, 3 classes).
+//!
+//! The one *real* labeled dataset shipped with the repo, used by the
+//! end-to-end example to prove the full distributed pipeline on non-
+//! synthetic data. Values are the canonical UCI `iris.data` table
+//! (public domain); label 0 = setosa, 1 = versicolor, 2 = virginica.
+
+use super::Dataset;
+
+const IRIS_CSV: &str = include_str!("iris.csv");
+
+/// Load the embedded Iris table.
+pub fn load() -> Dataset {
+    let mut ds = Dataset::new("iris", 4, 3);
+    for (lineno, line) in IRIS_CSV.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut coords = [0.0f32; 4];
+        let mut label = 0u16;
+        for (k, tok) in line.split(',').enumerate() {
+            if k < 4 {
+                coords[k] = tok.parse().unwrap_or_else(|_| {
+                    panic!("iris.csv line {}: bad float {tok:?}", lineno + 1)
+                });
+            } else {
+                label = tok.parse().unwrap_or_else(|_| {
+                    panic!("iris.csv line {}: bad label {tok:?}", lineno + 1)
+                });
+            }
+        }
+        ds.push(&coords, label);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_classes() {
+        let ds = load();
+        assert_eq!(ds.len(), 150);
+        assert_eq!(ds.dim, 4);
+        assert_eq!(ds.class_counts(), vec![50, 50, 50]);
+    }
+
+    #[test]
+    fn known_rows() {
+        let ds = load();
+        assert_eq!(ds.point(0), &[5.1, 3.5, 1.4, 0.2]);
+        assert_eq!(ds.labels[0], 0);
+        assert_eq!(ds.point(50), &[7.0, 3.2, 4.7, 1.4]);
+        assert_eq!(ds.labels[50], 1);
+        assert_eq!(ds.point(149), &[5.9, 3.0, 5.1, 1.8]);
+        assert_eq!(ds.labels[149], 2);
+    }
+
+    #[test]
+    fn setosa_is_linearly_separated() {
+        // petal length < 2.5 iff setosa — a structural property of the real
+        // table that a typo would likely break.
+        let ds = load();
+        for i in 0..150 {
+            let petal_len = ds.point(i)[2];
+            assert_eq!(ds.labels[i] == 0, petal_len < 2.5, "row {i}");
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Dataset substrate: in-memory labeled point sets, generators, splitters.
+//!
+//! * [`Dataset`] — flat row-major `f32` points with ground-truth labels
+//!   (labels are used only for *evaluation*, exactly as in the paper's
+//!   clustering-accuracy metric).
+//! * [`gmm`] — Gaussian-mixture samplers, including the paper's two
+//!   synthetic benchmarks (§5.1): the 2-D 4-component mixture of Fig. 5 and
+//!   the 10-D mixture with Σᵢⱼ = ρ^{|i−j|} of Figs. 6–7.
+//! * [`uci_proxy`] — synthetic stand-ins for the eight UC Irvine datasets
+//!   of Table 1 (the real files are not available offline; see DESIGN.md §5
+//!   for the substitution argument).
+//! * [`scenario`] — the D1/D2/D3 distributed-site splits of Tables 2 and 5.
+//! * [`csvio`] — tiny CSV reader/writer for external data and bench dumps.
+//! * [`iris`] — the classic Fisher Iris table embedded for the end-to-end
+//!   example (a real, labeled, small dataset).
+
+pub mod csvio;
+pub mod gmm;
+pub mod iris;
+pub mod scenario;
+pub mod uci_proxy;
+
+/// A labeled point set. Points are row-major `n × dim` `f32` (the pipeline
+/// storage type — matches the AOT artifacts' dtype).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    /// `n * dim` row-major coordinates.
+    pub points: Vec<f32>,
+    /// Ground-truth class per point, `0..n_classes`. Evaluation only.
+    pub labels: Vec<u16>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, dim: usize, n_classes: usize) -> Self {
+        Dataset { name: name.into(), dim, points: Vec::new(), labels: Vec::new(), n_classes }
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Borrow point `i` as a `dim`-length slice.
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Append one labeled point.
+    pub fn push(&mut self, coords: &[f32], label: u16) {
+        debug_assert_eq!(coords.len(), self.dim);
+        self.points.extend_from_slice(coords);
+        self.labels.push(label);
+    }
+
+    /// Bytes a full-data transmission would cost (f32 coords + u16 label):
+    /// the paper's communication baseline.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.points.len() * 4 + self.labels.len() * 2) as u64
+    }
+
+    /// Per-class point counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    /// Indices of every point of class `c`.
+    pub fn class_indices(&self, c: u16) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] == c).collect()
+    }
+
+    /// New dataset from a subset of indices (order preserved).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::new(self.name.clone(), self.dim, self.n_classes);
+        out.points.reserve(idx.len() * self.dim);
+        out.labels.reserve(idx.len());
+        for &i in idx {
+            out.points.extend_from_slice(self.point(i));
+            out.labels.push(self.labels[i]);
+        }
+        out
+    }
+
+    /// Standardize every feature to mean 0 / sd 1 in place (the paper does
+    /// this to Connect-4, USCI, Gas Sensor and the first 10 Cover Type
+    /// features). Constant features are left centered.
+    pub fn standardize(&mut self) {
+        let n = self.len();
+        if n == 0 {
+            return;
+        }
+        for j in 0..self.dim {
+            let mut mean = 0.0f64;
+            for i in 0..n {
+                mean += self.points[i * self.dim + j] as f64;
+            }
+            mean /= n as f64;
+            let mut var = 0.0f64;
+            for i in 0..n {
+                let d = self.points[i * self.dim + j] as f64 - mean;
+                var += d * d;
+            }
+            var /= n as f64;
+            let sd = var.sqrt();
+            let inv = if sd > 1e-12 { 1.0 / sd } else { 1.0 };
+            for i in 0..n {
+                let v = &mut self.points[i * self.dim + j];
+                *v = ((*v as f64 - mean) * inv) as f32;
+            }
+        }
+    }
+
+    /// Deterministic subsample of `k` points (for scaled-down runs).
+    pub fn subsample(&self, k: usize, seed: u64) -> Dataset {
+        if k >= self.len() {
+            return self.clone();
+        }
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(k);
+        idx.sort_unstable();
+        self.select(&idx)
+    }
+
+    /// Concatenate datasets with identical schema.
+    pub fn concat(parts: &[&Dataset]) -> Dataset {
+        assert!(!parts.is_empty());
+        let d0 = parts[0];
+        let mut out = Dataset::new(d0.name.clone(), d0.dim, d0.n_classes);
+        for p in parts {
+            assert_eq!(p.dim, d0.dim, "concat: dim mismatch");
+            assert_eq!(p.n_classes, d0.n_classes, "concat: class-count mismatch");
+            out.points.extend_from_slice(&p.points);
+            out.labels.extend_from_slice(&p.labels);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let mut d = Dataset::new("toy", 2, 2);
+        d.push(&[0.0, 1.0], 0);
+        d.push(&[2.0, 3.0], 1);
+        d.push(&[4.0, 5.0], 0);
+        d
+    }
+
+    #[test]
+    fn push_and_index() {
+        let d = toy();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.point(1), &[2.0, 3.0]);
+        assert_eq!(d.labels, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn class_counts_and_indices() {
+        let d = toy();
+        assert_eq!(d.class_counts(), vec![2, 1]);
+        assert_eq!(d.class_indices(0), vec![0, 2]);
+    }
+
+    #[test]
+    fn select_preserves_order() {
+        let d = toy();
+        let s = d.select(&[2, 0]);
+        assert_eq!(s.point(0), &[4.0, 5.0]);
+        assert_eq!(s.labels, vec![0, 0]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = Dataset::new("s", 1, 1);
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0] {
+            d.push(&[v], 0);
+        }
+        d.standardize();
+        let mean: f32 = d.points.iter().sum::<f32>() / 5.0;
+        let var: f32 = d.points.iter().map(|x| x * x).sum::<f32>() / 5.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn subsample_size_and_determinism() {
+        let mut d = Dataset::new("s", 1, 1);
+        for i in 0..100 {
+            d.push(&[i as f32], 0);
+        }
+        let a = d.subsample(10, 7);
+        let b = d.subsample(10, 7);
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.len(), 10);
+        assert_ne!(a.points, d.subsample(10, 8).points);
+    }
+
+    #[test]
+    fn concat_roundtrip() {
+        let d = toy();
+        let c = Dataset::concat(&[&d, &d]);
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.point(4), d.point(1));
+    }
+
+    #[test]
+    fn wire_bytes_counts_floats_and_labels() {
+        let d = toy();
+        assert_eq!(d.wire_bytes(), (3 * 2 * 4 + 3 * 2) as u64);
+    }
+}

@@ -1,0 +1,302 @@
+//! Distributed-site splits: the paper's D1/D2/D3 scenarios (Tables 2 & 5).
+//!
+//! These are *not* load-balancing splits — each models a way data ends up
+//! distributed in the wild (paper §5.1):
+//!
+//! * **D1** — sites hold (nearly) disjoint class supports;
+//! * **D2** — class supports overlap across sites;
+//! * **D3** — every site is a random sample of the full distribution.
+//!
+//! A split is expressed as a *site-fraction matrix* `frac[s][c]` — the
+//! fraction of class `c`'s points that go to site `s` (columns sum to 1) —
+//! and realized by [`split_by_fractions`], which shuffles each class once
+//! and deals out contiguous runs. [`split`] builds the paper's exact
+//! configurations for 2 sites (Table 2) and the HEPMASS 3/4-site variants
+//! (Table 5).
+
+use crate::rng::Rng;
+
+use super::Dataset;
+
+/// Distributed-data scenario from the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// Disjoint class supports per site.
+    D1,
+    /// Overlapping class supports.
+    D2,
+    /// Random uniform split.
+    D3,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "d1" => Some(Scenario::D1),
+            "d2" => Some(Scenario::D2),
+            "d3" => Some(Scenario::D3),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scenario::D1 => write!(f, "D1"),
+            Scenario::D2 => write!(f, "D2"),
+            Scenario::D3 => write!(f, "D3"),
+        }
+    }
+}
+
+/// One site's share of the data, with the provenance needed to evaluate the
+/// recovered labels globally.
+#[derive(Clone, Debug)]
+pub struct SitePart {
+    pub site_id: usize,
+    pub data: Dataset,
+    /// For every local point, its index in the original full dataset.
+    pub global_idx: Vec<u32>,
+}
+
+/// Split `ds` according to an explicit site-fraction matrix
+/// (`frac[s][c]` = share of class `c` at site `s`; columns must sum to ≤ 1,
+/// any remainder goes to the last site).
+pub fn split_by_fractions(ds: &Dataset, frac: &[Vec<f64>], seed: u64) -> Vec<SitePart> {
+    let n_sites = frac.len();
+    assert!(n_sites >= 1);
+    for row in frac {
+        assert_eq!(row.len(), ds.n_classes, "fraction row arity != n_classes");
+    }
+    for c in 0..ds.n_classes {
+        let col: f64 = frac.iter().map(|r| r[c]).sum();
+        assert!(col <= 1.0 + 1e-9, "class {c} oversubscribed: {col}");
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut site_indices: Vec<Vec<usize>> = vec![Vec::new(); n_sites];
+
+    for c in 0..ds.n_classes {
+        let mut idx = ds.class_indices(c as u16);
+        rng.shuffle(&mut idx);
+        let total = idx.len();
+        let mut cursor = 0usize;
+        for (s, row) in frac.iter().enumerate() {
+            let want = if s + 1 == n_sites {
+                total - cursor // absorb rounding remainder
+            } else {
+                ((row[c] * total as f64).round() as usize).min(total - cursor)
+            };
+            site_indices[s].extend_from_slice(&idx[cursor..cursor + want]);
+            cursor += want;
+        }
+    }
+
+    site_indices
+        .into_iter()
+        .enumerate()
+        .map(|(s, mut idx)| {
+            idx.sort_unstable(); // stable point order within a site
+            let data = ds.select(&idx);
+            SitePart {
+                site_id: s,
+                data,
+                global_idx: idx.into_iter().map(|i| i as u32).collect(),
+            }
+        })
+        .collect()
+}
+
+/// The paper's site-fraction matrix for `scenario` with `n_sites` sites over
+/// a dataset with `n_classes` classes (Tables 2 and 5).
+pub fn fractions(scenario: Scenario, n_sites: usize, n_classes: usize) -> Vec<Vec<f64>> {
+    assert!(n_sites >= 2, "need at least two sites");
+    match scenario {
+        // Every site a random 1/S sample, any class structure.
+        Scenario::D3 => vec![vec![1.0 / n_sites as f64; n_classes]; n_sites],
+
+        Scenario::D1 => match (n_sites, n_classes) {
+            // Site1: C1, Site2: C2 (2 classes)
+            (2, 2) => vec![vec![1.0, 0.0], vec![0.0, 1.0]],
+            // Site1: C1, Site2: C2+C3 (3 classes — Connect-4 / HT / Poker)
+            (2, 3) => vec![vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 1.0]],
+            // Cover Type row of Table 2: Site1: C2, Site2: C1 + C3–C5
+            (2, 5) => vec![
+                vec![0.0, 1.0, 0.0, 0.0, 0.0],
+                vec![1.0, 0.0, 1.0, 1.0, 1.0],
+            ],
+            // Table 5, 3 sites, 2 classes: C1/2 | C1/2 | C2
+            (3, 2) => vec![vec![0.5, 0.0], vec![0.5, 0.0], vec![0.0, 1.0]],
+            // Table 5, 4 sites, 2 classes: C1/2 | C1/2 | C2/2 | C2/2
+            (4, 2) => vec![
+                vec![0.5, 0.0],
+                vec![0.5, 0.0],
+                vec![0.0, 0.5],
+                vec![0.0, 0.5],
+            ],
+            // General fallback: classes dealt round-robin to sites whole.
+            _ => {
+                let mut f = vec![vec![0.0; n_classes]; n_sites];
+                for c in 0..n_classes {
+                    f[c % n_sites][c] = 1.0;
+                }
+                f
+            }
+        },
+
+        Scenario::D2 => match (n_sites, n_classes) {
+            // Site1: 0.7C1+0.3C2, Site2: 0.3C1+0.7C2
+            (2, 2) => vec![vec![0.7, 0.3], vec![0.3, 0.7]],
+            // Site1: 0.5C1 + C2, Site2: 0.5C1 + C3
+            (2, 3) => vec![vec![0.5, 1.0, 0.0], vec![0.5, 0.0, 1.0]],
+            // Cover Type: Site1: 0.7C1+0.3C2+C3–5, Site2: 0.3C1+0.7C2
+            (2, 5) => vec![
+                vec![0.7, 0.3, 1.0, 1.0, 1.0],
+                vec![0.3, 0.7, 0.0, 0.0, 0.0],
+            ],
+            // Table 5, 3 sites: C1/2+C2/4 | C1/4+C2/4 | C1/4+C2/2
+            (3, 2) => vec![vec![0.5, 0.25], vec![0.25, 0.25], vec![0.25, 0.5]],
+            // Table 5, 4 sites: 3/8C1+1/8C2 ×2 | 1/8C1+3/8C2 ×2
+            (4, 2) => vec![
+                vec![0.375, 0.125],
+                vec![0.375, 0.125],
+                vec![0.125, 0.375],
+                vec![0.125, 0.375],
+            ],
+            // General fallback: 70% of a "home" class + the rest spread.
+            _ => {
+                let mut f = vec![vec![0.0; n_classes]; n_sites];
+                for c in 0..n_classes {
+                    let home = c % n_sites;
+                    for (s, row) in f.iter_mut().enumerate() {
+                        row[c] = if s == home {
+                            0.7
+                        } else {
+                            0.3 / (n_sites - 1) as f64
+                        };
+                    }
+                }
+                f
+            }
+        },
+    }
+}
+
+/// Split `ds` across `n_sites` per the paper's `scenario` configuration.
+pub fn split(ds: &Dataset, scenario: Scenario, n_sites: usize, seed: u64) -> Vec<SitePart> {
+    let frac = fractions(scenario, n_sites, ds.n_classes);
+    split_by_fractions(ds, &frac, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm;
+
+    fn toy(n_classes: usize, per_class: usize) -> Dataset {
+        let mut d = Dataset::new("toy", 1, n_classes);
+        for c in 0..n_classes {
+            for i in 0..per_class {
+                d.push(&[(c * 1000 + i) as f32], c as u16);
+            }
+        }
+        d
+    }
+
+    fn total_points(parts: &[SitePart]) -> usize {
+        parts.iter().map(|p| p.data.len()).sum()
+    }
+
+    #[test]
+    fn split_conserves_points_exactly() {
+        let ds = toy(3, 997); // awkward size to stress rounding
+        for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+            let parts = split(&ds, sc, 2, 7);
+            assert_eq!(total_points(&parts), ds.len(), "{sc}");
+            // global indices form a partition of 0..n
+            let mut seen = vec![false; ds.len()];
+            for p in &parts {
+                for &g in &p.global_idx {
+                    assert!(!seen[g as usize], "duplicate global index {g}");
+                    seen[g as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn d1_two_class_is_disjoint() {
+        let ds = toy(2, 500);
+        let parts = split(&ds, Scenario::D1, 2, 3);
+        assert!(parts[0].data.labels.iter().all(|&l| l == 0));
+        assert!(parts[1].data.labels.iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn d2_two_class_has_paper_mix() {
+        let ds = toy(2, 1000);
+        let parts = split(&ds, Scenario::D2, 2, 3);
+        let c = parts[0].data.class_counts();
+        assert_eq!(c, vec![700, 300]);
+        let c = parts[1].data.class_counts();
+        assert_eq!(c, vec![300, 700]);
+    }
+
+    #[test]
+    fn d1_three_class_follows_table2() {
+        let ds = toy(3, 400);
+        let parts = split(&ds, Scenario::D1, 2, 3);
+        assert_eq!(parts[0].data.class_counts(), vec![400, 0, 0]);
+        assert_eq!(parts[1].data.class_counts(), vec![0, 400, 400]);
+    }
+
+    #[test]
+    fn d3_roughly_even() {
+        let ds = gmm::paper_mixture_2d(10_000, 5);
+        let parts = split(&ds, Scenario::D3, 2, 9);
+        let n0 = parts[0].data.len() as f64;
+        assert!((n0 / 10_000.0 - 0.5).abs() < 0.02, "{n0}");
+    }
+
+    #[test]
+    fn hepmass_three_site_d2_matches_table5() {
+        let ds = toy(2, 4000);
+        let parts = split(&ds, Scenario::D2, 3, 1);
+        assert_eq!(parts[0].data.class_counts(), vec![2000, 1000]);
+        assert_eq!(parts[1].data.class_counts(), vec![1000, 1000]);
+        assert_eq!(parts[2].data.class_counts(), vec![1000, 2000]);
+    }
+
+    #[test]
+    fn four_site_d1_matches_table5() {
+        let ds = toy(2, 1000);
+        let parts = split(&ds, Scenario::D1, 4, 1);
+        assert_eq!(parts[0].data.class_counts(), vec![500, 0]);
+        assert_eq!(parts[1].data.class_counts(), vec![500, 0]);
+        assert_eq!(parts[2].data.class_counts(), vec![0, 500]);
+        assert_eq!(parts[3].data.class_counts(), vec![0, 500]);
+    }
+
+    #[test]
+    fn global_idx_maps_back_to_same_coords() {
+        let ds = gmm::paper_mixture_2d(2_000, 11);
+        let parts = split(&ds, Scenario::D2, 2, 13);
+        for p in &parts {
+            for (local, &g) in p.global_idx.iter().enumerate() {
+                assert_eq!(p.data.point(local), ds.point(g as usize));
+                assert_eq!(p.data.labels[local], ds.labels[g as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn seed_changes_assignment_but_not_counts() {
+        let ds = toy(2, 1000);
+        let a = split(&ds, Scenario::D2, 2, 1);
+        let b = split(&ds, Scenario::D2, 2, 2);
+        assert_eq!(a[0].data.class_counts(), b[0].data.class_counts());
+        assert_ne!(a[0].global_idx, b[0].global_idx);
+    }
+}

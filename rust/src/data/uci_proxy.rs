@@ -1,0 +1,242 @@
+//! Synthetic proxies for the eight UC Irvine datasets of Table 1.
+//!
+//! The real files are not available in this offline environment, so each
+//! dataset is replaced by a Gaussian-mixture generator matched on what the
+//! paper's claims actually depend on (DESIGN.md §5):
+//!
+//! * dimension and number of classes (Table 1, after the paper's
+//!   preprocessing — e.g. Cover Type drops classes 4–5, Poker merges the
+//!   small hands into 3 classes);
+//! * class proportions (they set the accuracy ceiling on the unbalanced
+//!   sets — USCI's 0.94 is essentially its majority share);
+//! * cluster separability, tuned via `sep` so the *non-distributed*
+//!   spectral accuracy lands near the paper's Table 3 column 1 — the
+//!   distributed-vs-local comparison (the actual claim) is then measured on
+//!   the same geometry the paper had;
+//! * the codeword budget: the paper's compression ratios imply a target
+//!   number of representative points per dataset (`target_codewords`),
+//!   which we keep fixed while the default point counts are scaled down
+//!   (`default_n`) to laptop-bench size; `paper_n` restores full scale.
+//!
+//! Class `c`'s component is centred at `sep · e_c` with unit isotropic
+//! covariance — the same geometry as the paper's own synthetic §5.1 model,
+//! so Theorem 3's analysis applies verbatim.
+
+use super::{gmm, Dataset};
+
+/// Static description of one UCI dataset proxy.
+#[derive(Clone, Debug)]
+pub struct UciSpec {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_classes: usize,
+    /// Class proportions (sum 1), matching the paper's preprocessing notes.
+    pub proportions: &'static [f64],
+    /// Instance count in the paper (Table 1, after preprocessing).
+    pub paper_n: usize,
+    /// Paper's data-compression ratio for K-means DML (Table 3 text).
+    pub paper_ratio: usize,
+    /// Cluster separation of the proxy (see module docs).
+    pub sep: f64,
+    /// Paper's non-distributed accuracy, K-means DML (Table 3) — recorded
+    /// for EXPERIMENTS.md comparison, not used by the generator.
+    pub paper_acc_kmeans: f64,
+    /// Same for rpTrees DML (Table 4).
+    pub paper_acc_rptrees: f64,
+}
+
+impl UciSpec {
+    /// Codeword budget the paper's compression ratio implies.
+    pub fn target_codewords(&self) -> usize {
+        self.paper_n.div_ceil(self.paper_ratio)
+    }
+
+    /// Default scaled-down instance count for laptop benches: keeps every
+    /// dataset ≥ 40 points per codeword but caps the biggest runs.
+    pub fn default_n(&self) -> usize {
+        self.paper_n.min(40_000).max(self.target_codewords() * 20)
+    }
+
+    /// Generate the proxy at `n` points.
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        let comps: Vec<gmm::Component> = (0..self.n_classes)
+            .map(|c| {
+                let mut mean = vec![0.0; self.dim];
+                mean[c % self.dim] = self.sep;
+                gmm::Component::isotropic(mean, 1.0, self.proportions[c])
+            })
+            .collect();
+        let mut ds = gmm::sample(self.name, &comps, n, seed);
+        ds.name = self.name.to_string();
+        ds
+    }
+}
+
+/// The eight datasets of Table 1, in paper order.
+pub fn specs() -> &'static [UciSpec] {
+    // Class proportions follow the paper's notes: Poker is merged to
+    // 50.12/42.25/7.63; Cover Type keeps classes {2,1,3,7,6} of the original
+    // (relabelled 0..4); USCI is the >50k/<=50k split; SkinSeg is the
+    // skin/non-skin pixel ratio; Gas Sensor's two gas mixtures are roughly
+    // even, as are HEPMASS signal/background and HT Sensor's stimuli.
+    const SPECS: &[UciSpec] = &[
+        UciSpec {
+            name: "connect4",
+            dim: 42,
+            n_classes: 3,
+            proportions: &[0.6565, 0.2460, 0.0975],
+            paper_n: 67_557,
+            paper_ratio: 200,
+            sep: 1.35,
+            paper_acc_kmeans: 0.6569,
+            paper_acc_rptrees: 0.6577,
+        },
+        UciSpec {
+            name: "skinseg",
+            dim: 3,
+            n_classes: 2,
+            proportions: &[0.2075, 0.7925],
+            paper_n: 245_057,
+            paper_ratio: 800,
+            sep: 2.4,
+            paper_acc_kmeans: 0.9482,
+            paper_acc_rptrees: 0.9492,
+        },
+        UciSpec {
+            name: "usci",
+            dim: 37,
+            n_classes: 2,
+            proportions: &[0.9380, 0.0620],
+            paper_n: 285_779,
+            paper_ratio: 500,
+            sep: 2.0,
+            paper_acc_kmeans: 0.9356,
+            paper_acc_rptrees: 0.9394,
+        },
+        UciSpec {
+            name: "covertype",
+            dim: 54,
+            n_classes: 5,
+            proportions: &[0.4976, 0.3725, 0.0629, 0.0360, 0.0310],
+            paper_n: 568_772,
+            paper_ratio: 500,
+            sep: 1.1,
+            paper_acc_kmeans: 0.4984,
+            paper_acc_rptrees: 0.4978,
+        },
+        UciSpec {
+            name: "htsensor",
+            dim: 11,
+            n_classes: 3,
+            proportions: &[0.3720, 0.3320, 0.2960],
+            paper_n: 928_991,
+            paper_ratio: 3000,
+            sep: 0.8,
+            paper_acc_kmeans: 0.4960,
+            paper_acc_rptrees: 0.4957,
+        },
+        UciSpec {
+            name: "pokerhand",
+            dim: 10,
+            n_classes: 3,
+            proportions: &[0.5012, 0.4225, 0.0763],
+            paper_n: 1_000_000,
+            paper_ratio: 3000,
+            sep: 0.65,
+            paper_acc_kmeans: 0.4977,
+            paper_acc_rptrees: 0.4990,
+        },
+        UciSpec {
+            name: "gassensor",
+            dim: 18,
+            n_classes: 2,
+            proportions: &[0.5320, 0.4680],
+            paper_n: 8_386_765,
+            paper_ratio: 16_000,
+            sep: 3.6,
+            paper_acc_kmeans: 0.9865,
+            paper_acc_rptrees: 0.9828,
+        },
+        UciSpec {
+            name: "hepmass",
+            dim: 28,
+            n_classes: 2,
+            proportions: &[0.5, 0.5],
+            paper_n: 10_500_000,
+            paper_ratio: 7000,
+            sep: 1.5,
+            paper_acc_kmeans: 0.7929,
+            paper_acc_rptrees: 0.7906,
+        },
+    ];
+    SPECS
+}
+
+/// Look a spec up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static UciSpec> {
+    let lower = name.to_ascii_lowercase();
+    specs().iter().find(|s| s.name == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_specs_in_paper_order() {
+        let names: Vec<&str> = specs().iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "connect4", "skinseg", "usci", "covertype", "htsensor", "pokerhand",
+                "gassensor", "hepmass"
+            ]
+        );
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        for s in specs() {
+            let sum: f64 = s.proportions.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "{}: {sum}", s.name);
+            assert_eq!(s.proportions.len(), s.n_classes, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn target_codewords_match_paper_arithmetic() {
+        // e.g. HEPMASS 10.5M / 7000 = 1500 representatives
+        assert_eq!(by_name("hepmass").unwrap().target_codewords(), 1500);
+        assert_eq!(by_name("connect4").unwrap().target_codewords(), 338);
+        assert_eq!(by_name("skinseg").unwrap().target_codewords(), 307);
+    }
+
+    #[test]
+    fn generate_matches_spec() {
+        let s = by_name("htsensor").unwrap();
+        let ds = s.generate(5_000, 3);
+        assert_eq!(ds.dim, 11);
+        assert_eq!(ds.n_classes, 3);
+        assert_eq!(ds.len(), 5_000);
+        let counts = ds.class_counts();
+        for (c, &p) in counts.iter().zip(s.proportions) {
+            let frac = *c as f64 / 5_000.0;
+            assert!((frac - p).abs() < 0.05, "class fraction {frac} vs {p}");
+        }
+    }
+
+    #[test]
+    fn default_n_bounded() {
+        for s in specs() {
+            let n = s.default_n();
+            assert!(n <= s.paper_n);
+            assert!(n >= s.target_codewords() * 20, "{}: n={n} too small", s.name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("mnist").is_none());
+        assert!(by_name("HEPMASS").is_some()); // case-insensitive
+    }
+}

@@ -1,0 +1,229 @@
+//! Distortion-minimizing local (DML) transformations — the paper's §2.2.
+//!
+//! A DML compresses a site's local data into a [`Codebook`]: a small set of
+//! representative points (codewords), the size of each group, and the
+//! point→codeword correspondence the site keeps for label population. Two
+//! implementations, as in the paper:
+//!
+//! * [`kmeans`] — Lloyd's algorithm (with incremental k-means++ seeding on
+//!   a subsample); codewords are cluster centroids. O(n·k·d) per sweep,
+//!   parallelized over points.
+//! * [`rptree`] — random-projection trees (the paper's Algorithm 3);
+//!   codewords are leaf centroids. O(n log(n/leaf)) — much cheaper than
+//!   K-means at equal compression, at slightly higher distortion, exactly
+//!   the trade the paper reports (Tables 3 vs 4).
+//!
+//! The *local* property that makes the framework work: building a codebook
+//! touches only the site's own data — no cross-site information.
+
+pub mod kmeans;
+pub mod rptree;
+pub mod sample;
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// Which DML transform to run at the sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DmlKind {
+    KMeans,
+    RpTree,
+    /// Random-landmark baseline (not a DML — kept for the A6 ablation).
+    RandomSample,
+}
+
+impl DmlKind {
+    pub fn parse(s: &str) -> Option<DmlKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "kmeans" | "k-means" => Some(DmlKind::KMeans),
+            "rptree" | "rptrees" | "rp-tree" => Some(DmlKind::RpTree),
+            "sample" | "random-sample" | "landmarks" => Some(DmlKind::RandomSample),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DmlKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DmlKind::KMeans => write!(f, "kmeans"),
+            DmlKind::RpTree => write!(f, "rptrees"),
+            DmlKind::RandomSample => write!(f, "sample"),
+        }
+    }
+}
+
+/// The product of a DML transform at one site.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub dim: usize,
+    /// `n_codes × dim` row-major codewords (group centroids).
+    pub codewords: Vec<f32>,
+    /// Group size per codeword (`W_i` in Algorithm 1).
+    pub weights: Vec<u32>,
+    /// For every local point, the index of its codeword. This is the
+    /// correspondence table kept *at the site* — it is never transmitted.
+    pub assign: Vec<u32>,
+}
+
+impl Codebook {
+    pub fn n_codes(&self) -> usize {
+        self.weights.len()
+    }
+
+    #[inline]
+    pub fn codeword(&self, i: usize) -> &[f32] {
+        &self.codewords[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Bytes this codebook costs on the wire (codewords + weights). The
+    /// assignment table stays local, so it does not count.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.codewords.len() * 4 + self.weights.len() * 4) as u64
+    }
+
+    /// Mean squared quantization distortion E‖X − q(X)‖² over `data` —
+    /// the quantity Theorem 2/3 bound.
+    pub fn distortion(&self, data: &Dataset) -> f64 {
+        assert_eq!(data.len(), self.assign.len());
+        if data.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0f64;
+        for i in 0..data.len() {
+            let cw = self.codeword(self.assign[i] as usize);
+            let p = data.point(i);
+            let mut d2 = 0.0f64;
+            for j in 0..self.dim {
+                let d = (p[j] - cw[j]) as f64;
+                d2 += d * d;
+            }
+            total += d2;
+        }
+        total / data.len() as f64
+    }
+
+    /// Internal consistency check (used by tests and debug assertions):
+    /// weights sum to the site size and match the assignment histogram.
+    pub fn validate(&self, n_points: usize) -> Result<(), String> {
+        if self.codewords.len() != self.n_codes() * self.dim {
+            return Err("codeword buffer size mismatch".into());
+        }
+        if self.assign.len() != n_points {
+            return Err(format!(
+                "assignment table covers {} points, site has {n_points}",
+                self.assign.len()
+            ));
+        }
+        let mut hist = vec![0u32; self.n_codes()];
+        for &a in &self.assign {
+            let a = a as usize;
+            if a >= self.n_codes() {
+                return Err(format!("assignment {a} out of range"));
+            }
+            hist[a] += 1;
+        }
+        if hist != self.weights {
+            return Err("weights disagree with assignment histogram".into());
+        }
+        if self.weights.iter().map(|&w| w as usize).sum::<usize>() != n_points {
+            return Err("weights do not sum to site size".into());
+        }
+        Ok(())
+    }
+}
+
+/// Parameters shared by both DML implementations.
+#[derive(Clone, Debug)]
+pub struct DmlParams {
+    pub kind: DmlKind,
+    /// Codeword budget. For K-means this is the exact number of clusters;
+    /// for rpTrees it sets the max leaf size to `ceil(n / target_codes)`
+    /// (matching how the paper equalizes compression across the two DMLs).
+    pub target_codes: usize,
+    /// Lloyd sweep cap (K-means only).
+    pub max_iters: usize,
+    /// Relative centroid-shift tolerance for early exit (K-means only).
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for DmlParams {
+    fn default() -> Self {
+        DmlParams { kind: DmlKind::KMeans, target_codes: 256, max_iters: 30, tol: 1e-6, seed: 0 }
+    }
+}
+
+/// Run the configured DML on one site's data.
+pub fn apply(data: &Dataset, params: &DmlParams) -> Codebook {
+    let mut rng = Rng::new(params.seed);
+    match params.kind {
+        DmlKind::KMeans => kmeans::lloyd(
+            data,
+            params.target_codes.min(data.len().max(1)),
+            params.max_iters,
+            params.tol,
+            &mut rng,
+        ),
+        DmlKind::RpTree => {
+            let max_leaf = data.len().div_ceil(params.target_codes.max(1)).max(1);
+            rptree::build(data, max_leaf, &mut rng)
+        }
+        DmlKind::RandomSample => {
+            sample::build(data, params.target_codes.min(data.len().max(1)), &mut rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm;
+
+    #[test]
+    fn apply_kmeans_validates() {
+        let ds = gmm::paper_mixture_2d(2_000, 3);
+        let cb = apply(&ds, &DmlParams { target_codes: 50, ..Default::default() });
+        assert_eq!(cb.n_codes(), 50);
+        cb.validate(ds.len()).unwrap();
+    }
+
+    #[test]
+    fn apply_rptree_validates_and_respects_budget() {
+        let ds = gmm::paper_mixture_2d(2_000, 4);
+        let cb = apply(
+            &ds,
+            &DmlParams { kind: DmlKind::RpTree, target_codes: 50, ..Default::default() },
+        );
+        cb.validate(ds.len()).unwrap();
+        // leaf size cap = ceil(2000/50) = 40 ⇒ at least 50 leaves
+        assert!(cb.n_codes() >= 50, "{} codes", cb.n_codes());
+        assert!(cb.weights.iter().all(|&w| w <= 40));
+    }
+
+    #[test]
+    fn distortion_decreases_with_budget() {
+        let ds = gmm::paper_mixture_2d(4_000, 5);
+        let lo = apply(&ds, &DmlParams { target_codes: 10, ..Default::default() });
+        let hi = apply(&ds, &DmlParams { target_codes: 200, ..Default::default() });
+        assert!(
+            hi.distortion(&ds) < lo.distortion(&ds),
+            "more codewords must mean less distortion"
+        );
+    }
+
+    #[test]
+    fn wire_bytes_excludes_assignment() {
+        let ds = gmm::paper_mixture_2d(1_000, 6);
+        let cb = apply(&ds, &DmlParams { target_codes: 32, ..Default::default() });
+        assert_eq!(cb.wire_bytes(), (32 * 2 * 4 + 32 * 4) as u64);
+        assert!(cb.wire_bytes() < ds.wire_bytes() / 10);
+    }
+
+    #[test]
+    fn parse_kind() {
+        assert_eq!(DmlKind::parse("kmeans"), Some(DmlKind::KMeans));
+        assert_eq!(DmlKind::parse("rpTrees"), Some(DmlKind::RpTree));
+        assert_eq!(DmlKind::parse("dbscan"), None);
+    }
+}

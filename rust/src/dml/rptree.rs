@@ -1,0 +1,231 @@
+//! Random-projection trees — the paper's Algorithm 3 (§2.2.2, from [59]).
+//!
+//! A node is split by projecting its points onto a random unit direction
+//! `r` and cutting at `c ~ U[min, max]` of the projections; recursion stops
+//! when a node holds fewer than `n_T` points. Leaf centroids become the
+//! codewords. rpTrees adapt to intrinsic dimension (Dasgupta–Freund) and
+//! cost O(n log(n/leaf)) — the cheap-but-slightly-coarser DML of Table 4.
+//!
+//! Robustness beyond the paper's pseudocode: a uniform cut can land so that
+//! one side is empty (duplicate-heavy projections); we retry a few fresh
+//! directions and fall back to a median split, and declare a leaf if the
+//! node is constant. This keeps the tree finite on degenerate data without
+//! changing behaviour on continuous data (empty sides have probability 0).
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+use super::Codebook;
+
+/// Retries of (direction, cut) before falling back to the median split.
+const SPLIT_RETRIES: usize = 4;
+
+/// Build an rpTree codebook with leaves of at most `max_leaf` points.
+pub fn build(data: &Dataset, max_leaf: usize, rng: &mut Rng) -> Codebook {
+    let n = data.len();
+    let dim = data.dim;
+    if n == 0 {
+        return Codebook { dim, codewords: vec![], weights: vec![], assign: vec![] };
+    }
+    let max_leaf = max_leaf.max(1);
+
+    let mut assign = vec![0u32; n];
+    let mut codewords: Vec<f32> = Vec::new();
+    let mut weights: Vec<u32> = Vec::new();
+
+    // worklist of (point-index buffers); explicit stack instead of recursion
+    let mut stack: Vec<Vec<u32>> = vec![(0..n as u32).collect()];
+    let mut proj: Vec<f32> = Vec::new();
+    let mut dir: Vec<f32> = vec![0.0; dim];
+
+    while let Some(node) = stack.pop() {
+        if node.len() <= max_leaf {
+            emit_leaf(data, &node, &mut assign, &mut codewords, &mut weights);
+            continue;
+        }
+
+        let mut split: Option<(Vec<u32>, Vec<u32>)> = None;
+        for _try in 0..SPLIT_RETRIES {
+            // random unit direction
+            let mut norm = 0.0f64;
+            for v in dir.iter_mut() {
+                let z = rng.normal();
+                *v = z as f32;
+                norm += z * z;
+            }
+            let norm = norm.sqrt().max(1e-12) as f32;
+            for v in dir.iter_mut() {
+                *v /= norm;
+            }
+
+            // project node points
+            proj.clear();
+            proj.reserve(node.len());
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &i in &node {
+                let p = data.point(i as usize);
+                let mut s = 0.0f32;
+                for j in 0..dim {
+                    s += p[j] * dir[j];
+                }
+                proj.push(s);
+                lo = lo.min(s);
+                hi = hi.max(s);
+            }
+            if hi - lo <= 1e-12 {
+                continue; // degenerate direction; try another
+            }
+
+            let c = lo + (hi - lo) * rng.f32();
+            let mut left = Vec::new();
+            let mut right = Vec::new();
+            for (k, &i) in node.iter().enumerate() {
+                if proj[k] < c {
+                    left.push(i);
+                } else {
+                    right.push(i);
+                }
+            }
+            if !left.is_empty() && !right.is_empty() {
+                split = Some((left, right));
+                break;
+            }
+        }
+
+        let (left, right) = match split {
+            Some(s) => s,
+            None => {
+                // All retries failed: either the node is constant (leaf) or
+                // we median-split the last projection.
+                let distinct = node
+                    .iter()
+                    .any(|&i| data.point(i as usize) != data.point(node[0] as usize));
+                if !distinct {
+                    emit_leaf(data, &node, &mut assign, &mut codewords, &mut weights);
+                    continue;
+                }
+                // median split on the last computed projection
+                let mut order: Vec<usize> = (0..node.len()).collect();
+                order.sort_by(|&a, &b| proj[a].partial_cmp(&proj[b]).unwrap());
+                let mid = node.len() / 2;
+                let left: Vec<u32> = order[..mid].iter().map(|&k| node[k]).collect();
+                let right: Vec<u32> = order[mid..].iter().map(|&k| node[k]).collect();
+                if left.is_empty() || right.is_empty() {
+                    emit_leaf(data, &node, &mut assign, &mut codewords, &mut weights);
+                    continue;
+                }
+                (left, right)
+            }
+        };
+        stack.push(left);
+        stack.push(right);
+    }
+
+    Codebook { dim, codewords, weights, assign }
+}
+
+fn emit_leaf(
+    data: &Dataset,
+    node: &[u32],
+    assign: &mut [u32],
+    codewords: &mut Vec<f32>,
+    weights: &mut Vec<u32>,
+) {
+    let dim = data.dim;
+    let code_id = weights.len() as u32;
+    let mut mean = vec![0.0f64; dim];
+    for &i in node {
+        let p = data.point(i as usize);
+        for j in 0..dim {
+            mean[j] += p[j] as f64;
+        }
+        assign[i as usize] = code_id;
+    }
+    let inv = 1.0 / node.len() as f64;
+    codewords.extend(mean.iter().map(|&s| (s * inv) as f32));
+    weights.push(node.len() as u32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm;
+    use crate::data::Dataset;
+
+    #[test]
+    fn leaf_size_respected() {
+        let ds = gmm::paper_mixture_2d(5_000, 3);
+        let mut rng = Rng::new(7);
+        let cb = build(&ds, 40, &mut rng);
+        cb.validate(ds.len()).unwrap();
+        assert!(cb.weights.iter().all(|&w| w <= 40), "oversized leaf");
+        // compression roughly n / max_leaf .. a few ×
+        assert!(cb.n_codes() >= 125);
+        assert!(cb.n_codes() <= 2_000);
+    }
+
+    #[test]
+    fn codewords_are_leaf_means() {
+        let ds = gmm::paper_mixture_2d(1_000, 9);
+        let mut rng = Rng::new(2);
+        let cb = build(&ds, 25, &mut rng);
+        let mut sums = vec![0.0f64; cb.n_codes() * 2];
+        let mut counts = vec![0u64; cb.n_codes()];
+        for i in 0..ds.len() {
+            let a = cb.assign[i] as usize;
+            counts[a] += 1;
+            sums[a * 2] += ds.point(i)[0] as f64;
+            sums[a * 2 + 1] += ds.point(i)[1] as f64;
+        }
+        for c in 0..cb.n_codes() {
+            let cw = cb.codeword(c);
+            assert!((cw[0] as f64 - sums[c * 2] / counts[c] as f64).abs() < 1e-4);
+            assert!((cw[1] as f64 - sums[c * 2 + 1] / counts[c] as f64).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn constant_data_single_leaf_per_bucket() {
+        let mut ds = Dataset::new("const", 3, 1);
+        for _ in 0..500 {
+            ds.push(&[1.0, 2.0, 3.0], 0);
+        }
+        let mut rng = Rng::new(5);
+        let cb = build(&ds, 40, &mut rng);
+        cb.validate(500).unwrap();
+        // cannot split constant data: one leaf, even though it exceeds max_leaf
+        assert_eq!(cb.n_codes(), 1);
+        assert_eq!(cb.codeword(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn distortion_shrinks_with_smaller_leaves() {
+        let ds = gmm::paper_mixture_2d(4_000, 11);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let coarse = build(&ds, 400, &mut r1);
+        let fine = build(&ds, 20, &mut r2);
+        assert!(fine.distortion(&ds) < coarse.distortion(&ds));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = gmm::paper_mixture_2d(1_000, 13);
+        let mut r1 = Rng::new(21);
+        let mut r2 = Rng::new(21);
+        let a = build(&ds, 50, &mut r1);
+        let b = build(&ds, 50, &mut r2);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.codewords, b.codewords);
+    }
+
+    #[test]
+    fn empty_input() {
+        let ds = Dataset::new("e", 2, 1);
+        let mut rng = Rng::new(0);
+        let cb = build(&ds, 10, &mut rng);
+        assert_eq!(cb.n_codes(), 0);
+        assert!(cb.assign.is_empty());
+    }
+}

@@ -1,0 +1,188 @@
+//! Random-sampling "DML" — the naive baseline the paper's framework is
+//! implicitly compared against.
+//!
+//! Landmark/subsampling methods (paper §3: Chen–Cai landmark spectral
+//! clustering, Nyström selection, …) reduce data by keeping a *random
+//! subset of original points* as representatives. Implementing it as a
+//! third [`super::DmlKind`] lets the ablation bench answer: at the same
+//! communication budget, how much accuracy do distortion-minimizing
+//! codewords buy over plain random landmarks?
+//!
+//! (Spoiler, DESIGN.md A6: on well-separated data both work; as overlap
+//! grows, K-means codewords — which sit at local centers of mass — give a
+//! cleaner codeword graph than raw samples, and they also don't leak
+//! original points.)
+//!
+//! Construction: choose `k` distinct points uniformly, assign every point
+//! to its nearest landmark (parallel chunks), weights = Voronoi cell
+//! sizes. O(n·k·d) — same assignment cost as one Lloyd sweep.
+
+use crate::data::Dataset;
+use crate::par;
+use crate::rng::Rng;
+
+use super::Codebook;
+
+/// Build a random-landmark codebook of `k` codewords.
+pub fn build(data: &Dataset, k: usize, rng: &mut Rng) -> Codebook {
+    let n = data.len();
+    let dim = data.dim;
+    if n == 0 {
+        return Codebook { dim, codewords: vec![], weights: vec![], assign: vec![] };
+    }
+    let k = k.min(n).max(1);
+
+    let picks = rng.sample_indices(n, k);
+    let mut codewords = Vec::with_capacity(k * dim);
+    for &p in &picks {
+        codewords.extend_from_slice(data.point(p));
+    }
+
+    // nearest-landmark assignment, transposed-axpy form (same scheme as
+    // the Lloyd hot loop)
+    let mut landmarks_t = vec![0.0f32; k * dim];
+    for c in 0..k {
+        for j in 0..dim {
+            landmarks_t[j * k + c] = codewords[c * dim + j];
+        }
+    }
+    let c_norm: Vec<f32> = (0..k)
+        .map(|c| codewords[c * dim..(c + 1) * dim].iter().map(|v| v * v).sum())
+        .collect();
+
+    let mut assign = vec![0u32; n];
+    let points = &data.points;
+    let lt = &landmarks_t;
+    let cn = &c_norm;
+    par::par_chunks_mut(&mut assign, 1024, |start, chunk| {
+        let mut scores = vec![0.0f32; k];
+        for (off, slot) in chunk.iter_mut().enumerate() {
+            let i = start + off;
+            let p = &points[i * dim..(i + 1) * dim];
+            scores.copy_from_slice(cn);
+            for (j, &pj) in p.iter().enumerate() {
+                let coef = -2.0 * pj;
+                let row = &lt[j * k..(j + 1) * k];
+                for (s, &cv) in scores.iter_mut().zip(row) {
+                    *s += coef * cv;
+                }
+            }
+            let mut best = 0u32;
+            let mut best_score = f32::INFINITY;
+            for (c, &s) in scores.iter().enumerate() {
+                if s < best_score {
+                    best_score = s;
+                    best = c as u32;
+                }
+            }
+            *slot = best;
+        }
+    });
+
+    let mut weights = vec![0u32; k];
+    for &a in &assign {
+        weights[a as usize] += 1;
+    }
+
+    // Landmarks with empty Voronoi cells can occur (a landmark strictly
+    // closer to another landmark than any point is to it — rare but real);
+    // compact them out like the Lloyd path does.
+    if weights.iter().any(|&w| w == 0) {
+        let mut remap = vec![u32::MAX; k];
+        let mut cw = Vec::new();
+        let mut wts = Vec::new();
+        let mut next = 0u32;
+        for c in 0..k {
+            if weights[c] > 0 {
+                remap[c] = next;
+                next += 1;
+                cw.extend_from_slice(&codewords[c * dim..(c + 1) * dim]);
+                wts.push(weights[c]);
+            }
+        }
+        for a in assign.iter_mut() {
+            *a = remap[*a as usize];
+        }
+        return Codebook { dim, codewords: cw, weights: wts, assign };
+    }
+
+    Codebook { dim, codewords, weights, assign }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm;
+
+    #[test]
+    fn codebook_is_consistent() {
+        let ds = gmm::paper_mixture_2d(2_000, 3);
+        let mut rng = Rng::new(5);
+        let cb = build(&ds, 64, &mut rng);
+        cb.validate(ds.len()).unwrap();
+        assert!(cb.n_codes() <= 64);
+    }
+
+    #[test]
+    fn codewords_are_original_points() {
+        // the defining property (and the privacy weakness) of the baseline
+        let ds = gmm::paper_mixture_2d(500, 7);
+        let mut rng = Rng::new(9);
+        let cb = build(&ds, 20, &mut rng);
+        for c in 0..cb.n_codes() {
+            let cw = cb.codeword(c);
+            let hit = (0..ds.len()).any(|i| ds.point(i) == cw);
+            assert!(hit, "codeword {c} is not an original point");
+        }
+    }
+
+    #[test]
+    fn assignment_is_nearest_landmark() {
+        let ds = gmm::paper_mixture_2d(300, 11);
+        let mut rng = Rng::new(13);
+        let cb = build(&ds, 10, &mut rng);
+        for i in 0..ds.len() {
+            let p = ds.point(i);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..cb.n_codes() {
+                let cw = cb.codeword(c);
+                let d: f64 =
+                    p.iter().zip(cw).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            // allow exact ties to go either way
+            let chosen = cb.assign[i] as usize;
+            if chosen != best {
+                let cw = cb.codeword(chosen);
+                let d: f64 =
+                    p.iter().zip(cw).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+                assert!((d - best_d).abs() < 1e-3, "point {i} misassigned");
+            }
+        }
+    }
+
+    #[test]
+    fn higher_distortion_than_kmeans() {
+        // the quantity Theorem 2 says K-means optimizes and sampling doesn't
+        let ds = gmm::paper_mixture_2d(4_000, 17);
+        let mut r1 = Rng::new(1);
+        let sample_cb = build(&ds, 100, &mut r1);
+        let mut r2 = Rng::new(1);
+        let kmeans_cb = super::super::kmeans::lloyd(&ds, 100, 30, 1e-6, &mut r2);
+        assert!(
+            sample_cb.distortion(&ds) > kmeans_cb.distortion(&ds),
+            "random landmarks should quantize worse than Lloyd centroids"
+        );
+    }
+
+    #[test]
+    fn empty_input() {
+        let ds = crate::data::Dataset::new("e", 2, 1);
+        let mut rng = Rng::new(0);
+        assert_eq!(build(&ds, 5, &mut rng).n_codes(), 0);
+    }
+}

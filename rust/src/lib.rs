@@ -1,0 +1,69 @@
+//! # dsc — Distributed Spectral Clustering
+//!
+//! A production-oriented reproduction of *"Fast Communication-efficient
+//! Spectral Clustering Over Distributed Data"* (Yan, Wang, Wang, Wu, Wang —
+//! IEEE Transactions on Big Data, 2019).
+//!
+//! The paper's framework clusters data that lives on `S` distributed sites
+//! without moving the raw data:
+//!
+//! 1. every site compresses its local data into *codewords* with a
+//!    distortion-minimizing local (DML) transform — K-means or rpTrees
+//!    ([`dml`]);
+//! 2. a leader collects the codewords (the only communication, accounted by
+//!    [`net`]) and runs normalized-cuts spectral clustering on their union
+//!    ([`spectral`], optionally executing the eigensolver as an AOT-compiled
+//!    XLA program through [`runtime`]);
+//! 3. codeword labels are populated back so each site recovers the label of
+//!    every original point ([`coordinator`]).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack: the Gaussian-affinity and k-means-assignment hot spots are Pallas
+//! kernels (Layer 1), the spectral-embedding / Lloyd-step compute graphs are
+//! JAX programs (Layer 2), AOT-lowered to HLO text in `artifacts/` and
+//! executed from Rust via PJRT. Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dsc::prelude::*;
+//!
+//! // 40k points from a 4-component Gaussian mixture, split across 2 sites.
+//! let ds = dsc::data::gmm::paper_mixture_10d(40_000, 0.3, 7);
+//! let parts = dsc::data::scenario::split(&ds, Scenario::D3, 2, 7);
+//! let cfg = PipelineConfig::default();
+//! let report = run_pipeline(&parts, &cfg).unwrap();
+//! println!("accuracy = {:.4}", report.accuracy);
+//! ```
+//!
+//! Offline-environment note: only the crates vendored for the `xla`
+//! dependency are available, so the usual ecosystem pieces are implemented
+//! as first-class substrates here: [`par`] (thread pool), [`rng`] (PRNG),
+//! [`config`] (TOML subset), [`bench`] (micro-benchmark harness),
+//! [`prop`] (property-testing harness), [`cli`] (argument parsing).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dml;
+pub mod linalg;
+pub mod metrics;
+pub mod net;
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod spectral;
+
+/// Convenience re-exports for the common pipeline surface.
+pub mod prelude {
+    pub use crate::config::{Backend, PipelineConfig};
+    pub use crate::coordinator::{run_pipeline, PipelineReport};
+    pub use crate::data::scenario::{self, Scenario, SitePart};
+    pub use crate::data::Dataset;
+    pub use crate::dml::DmlKind;
+    pub use crate::metrics::clustering_accuracy;
+    pub use crate::spectral::{Algo, Bandwidth};
+}

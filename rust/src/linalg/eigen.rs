@@ -1,0 +1,493 @@
+//! Symmetric eigensolvers: dense (tred2 + tql2) and Krylov (Lanczos).
+//!
+//! `sym_eig` is the classic EISPACK pair — Householder reduction to
+//! tridiagonal form followed by the implicit-QL algorithm with Wilkinson
+//! shifts — ported to safe Rust. It is O(n³) and rock-solid; the pipeline
+//! uses it for Ritz problems and as the reference in tests.
+//!
+//! `lanczos_topk` computes the largest eigenpairs of a symmetric operator
+//! given only a mat-vec closure, with *full* reorthogonalization (the
+//! codebook problems are ≤ a few thousand dims, so the O(m²n) reorth cost
+//! is irrelevant next to the matvec and buys unconditional numerical
+//! stability — no ghost eigenvalues).
+
+use super::{dot, norm2, normalize, Mat};
+use crate::rng::Rng;
+
+/// Full eigendecomposition of a symmetric matrix.
+///
+/// Returns `(evals, evecs)` with eigenvalues **ascending** and `evecs`
+/// column `k` (i.e. `evecs[(i, k)]`) the unit eigenvector for `evals[k]`.
+///
+/// Panics if `a` is not square; symmetry is the caller's contract (only the
+/// lower triangle is referenced during reduction).
+pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "sym_eig: matrix must be square");
+    let n = a.rows;
+    if n == 0 {
+        return (vec![], Mat::zeros(0, 0));
+    }
+    let mut z = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut z, &mut d, &mut e);
+    tql2(&mut d, &mut e, &mut z);
+    // sort ascending, permuting eigenvector columns with the values
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let evals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut v = Mat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            v[(r, newc)] = z[(r, oldc)];
+        }
+    }
+    (evals, v)
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form
+/// (Numerical Recipes tred2, with eigenvector accumulation).
+/// On exit: `d` holds the diagonal, `e[1..]` the subdiagonal, and `z` the
+/// accumulated orthogonal transform Q with A = Q T Qᵀ.
+fn tred2(z: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = z.rows;
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let upd = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= upd;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let upd = g * z[(k, i)];
+                    z[(k, j)] -= upd;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-QL with shifts on a symmetric tridiagonal matrix, accumulating
+/// the transform into `z` (Numerical Recipes tql2).
+fn tql2(d: &mut [f64], e: &mut [f64], z: &mut Mat) {
+    let n = d.len();
+    if n <= 1 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small subdiagonal element
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tql2: too many iterations (pathological input?)");
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate transform
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+/// Eigendecomposition of a symmetric tridiagonal matrix given its diagonal
+/// and subdiagonal (`off.len() == diag.len() - 1`). Ascending eigenvalues.
+pub fn tridiag_eig(diag: &[f64], off: &[f64]) -> (Vec<f64>, Mat) {
+    let n = diag.len();
+    assert!(off.len() + 1 == n || (n == 0 && off.is_empty()));
+    let mut d = diag.to_vec();
+    let mut e = vec![0.0; n];
+    e[1..].copy_from_slice(off);
+    // tql2 expects e[i] as subdiag below d[i-1]... it shifts internally.
+    let mut z = Mat::identity(n);
+    tql2(&mut d, &mut e, &mut z);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let evals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut v = Mat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            v[(r, newc)] = z[(r, oldc)];
+        }
+    }
+    (evals, v)
+}
+
+/// Largest `k` eigenpairs of a symmetric operator via Lanczos with full
+/// reorthogonalization.
+///
+/// * `n` — operator dimension;
+/// * `matvec(x, y)` — writes `A x` into `y`;
+/// * `k` — number of pairs wanted;
+/// * `max_iters` — Krylov dimension cap (clamped to `n`);
+/// * `tol` — residual tolerance on the Ritz pairs for early exit.
+///
+/// Returns `(evals, vecs)` with eigenvalues **descending**; `vecs[j]` is the
+/// unit Ritz vector for `evals[j]`.
+pub fn lanczos_topk(
+    n: usize,
+    mut matvec: impl FnMut(&[f64], &mut [f64]),
+    k: usize,
+    max_iters: usize,
+    tol: f64,
+    rng: &mut Rng,
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    assert!(k >= 1 && n >= 1);
+    let k = k.min(n);
+    let m_cap = max_iters.max(k + 2).min(n);
+
+    // Krylov basis (full reorthogonalization keeps it orthonormal).
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(m_cap);
+    let mut alphas: Vec<f64> = Vec::with_capacity(m_cap);
+    let mut betas: Vec<f64> = Vec::with_capacity(m_cap);
+
+    let mut q = vec![0.0; n];
+    for v in q.iter_mut() {
+        *v = rng.normal();
+    }
+    normalize(&mut q);
+    basis.push(q);
+
+    let mut w = vec![0.0; n];
+    let mut m = 0usize;
+    while m < m_cap {
+        let qm = basis[m].clone();
+        matvec(&qm, &mut w);
+        let alpha = dot(&qm, &w);
+        alphas.push(alpha);
+        // w ← w − α qm − β q_{m−1}, then full reorth (twice is enough)
+        for _pass in 0..2 {
+            for qb in &basis {
+                let c = dot(qb, &w);
+                for i in 0..n {
+                    w[i] -= c * qb[i];
+                }
+            }
+        }
+        let beta = norm2(&w);
+        m += 1;
+        if m >= m_cap {
+            break;
+        }
+        if beta < 1e-12 {
+            // invariant subspace found — restart with a fresh random vector
+            let mut fresh = vec![0.0; n];
+            for v in fresh.iter_mut() {
+                *v = rng.normal();
+            }
+            for _pass in 0..2 {
+                for qb in &basis {
+                    let c = dot(qb, &fresh);
+                    for i in 0..n {
+                        fresh[i] -= c * qb[i];
+                    }
+                }
+            }
+            if normalize(&mut fresh) < 1e-12 {
+                break; // space exhausted
+            }
+            betas.push(0.0);
+            basis.push(fresh);
+            continue;
+        }
+        betas.push(beta);
+        let mut next = w.clone();
+        for v in next.iter_mut() {
+            *v /= beta;
+        }
+        basis.push(next);
+
+        // convergence check every few steps once we have k Ritz pairs
+        if m >= k + 2 && m.is_multiple_of(4) {
+            let (tev, _tv) = tridiag_eig(&alphas, &betas[..m - 1]);
+            let beta_last = *betas.last().unwrap();
+            // crude residual bound: β_m · |last component of Ritz vector|
+            // cheap proxy: if β is already tiny relative to the spectrum span
+            let span = tev.last().unwrap() - tev.first().unwrap();
+            if beta_last <= tol * span.max(1e-30) {
+                break;
+            }
+        }
+    }
+
+    let m = alphas.len();
+    let (tev, tv) = tridiag_eig(&alphas, &betas[..m.saturating_sub(1)]);
+    // top-k Ritz pairs (tridiag_eig returns ascending)
+    let mut evals = Vec::with_capacity(k);
+    let mut vecs = Vec::with_capacity(k);
+    for j in 0..k.min(m) {
+        let col = m - 1 - j; // descending
+        evals.push(tev[col]);
+        let mut v = vec![0.0; n];
+        for (r, qb) in basis.iter().take(m).enumerate() {
+            let c = tv[(r, col)];
+            if c != 0.0 {
+                for i in 0..n {
+                    v[i] += c * qb[i];
+                }
+            }
+        }
+        normalize(&mut v);
+        vecs.push(v);
+    }
+    (evals, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    fn check_decomposition(a: &Mat, evals: &[f64], v: &Mat, tol: f64) {
+        let n = a.rows;
+        // A V = V Λ
+        for k in 0..n {
+            let col: Vec<f64> = (0..n).map(|i| v[(i, k)]).collect();
+            let av = a.matvec(&col);
+            for i in 0..n {
+                assert!(
+                    (av[i] - evals[k] * col[i]).abs() < tol,
+                    "residual too big at ({i},{k}): {} vs {}",
+                    av[i],
+                    evals[k] * col[i]
+                );
+            }
+        }
+        // V orthonormal
+        let vtv = v.transpose().matmul(v);
+        assert!(vtv.max_abs_diff(&Mat::identity(n)) < tol, "V not orthonormal");
+    }
+
+    #[test]
+    fn sym_eig_2x2_known() {
+        let a = Mat::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let (evals, v) = sym_eig(&a);
+        assert!((evals[0] - 1.0).abs() < 1e-12);
+        assert!((evals[1] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &evals, &v, 1e-10);
+    }
+
+    #[test]
+    fn sym_eig_diagonal() {
+        let a = Mat::from_fn(5, 5, |i, j| if i == j { (i as f64) - 2.0 } else { 0.0 });
+        let (evals, v) = sym_eig(&a);
+        let want = [-2.0, -1.0, 0.0, 1.0, 2.0];
+        for (g, w) in evals.iter().zip(want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        check_decomposition(&a, &evals, &v, 1e-10);
+    }
+
+    #[test]
+    fn sym_eig_random_sizes() {
+        for (n, seed) in [(3, 1u64), (8, 2), (17, 3), (40, 4), (83, 5)] {
+            let a = random_sym(n, seed);
+            let (evals, v) = sym_eig(&a);
+            // ascending
+            for w in evals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+            check_decomposition(&a, &evals, &v, 1e-8 * (n as f64));
+        }
+    }
+
+    #[test]
+    fn sym_eig_trace_preserved() {
+        let a = random_sym(30, 9);
+        let (evals, _) = sym_eig(&a);
+        let trace: f64 = (0..30).map(|i| a[(i, i)]).sum();
+        let sum: f64 = evals.iter().sum();
+        assert!((trace - sum).abs() < 1e-8);
+    }
+
+    #[test]
+    fn tridiag_eig_matches_dense() {
+        let n = 12;
+        let mut rng = Rng::new(21);
+        let diag: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let off: Vec<f64> = (0..n - 1).map(|_| rng.normal()).collect();
+        let a = Mat::from_fn(n, n, |i, j| {
+            if i == j {
+                diag[i]
+            } else if i + 1 == j || j + 1 == i {
+                off[i.min(j)]
+            } else {
+                0.0
+            }
+        });
+        let (tev, tv) = tridiag_eig(&diag, &off);
+        let (dev, _) = sym_eig(&a);
+        for (t, d) in tev.iter().zip(&dev) {
+            assert!((t - d).abs() < 1e-9, "{t} vs {d}");
+        }
+        check_decomposition(&a, &tev, &tv, 1e-8);
+    }
+
+    #[test]
+    fn lanczos_matches_dense_topk() {
+        let n = 60;
+        let a = {
+            // positive-definite-ish with a clear top cluster
+            let r = random_sym(n, 31);
+            let mut m = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    m[(i, j)] = r[(i, j)] / (n as f64);
+                }
+                m[(i, i)] += 1.0 + (i as f64) / (n as f64);
+            }
+            m
+        };
+        let (dense_ev, _) = sym_eig(&a);
+        let mut rng = Rng::new(77);
+        let (lev, lv) = lanczos_topk(n, |x, y| y.copy_from_slice(&a.matvec(x)), 4, 60, 1e-12, &mut rng);
+        for j in 0..4 {
+            let want = dense_ev[n - 1 - j];
+            assert!((lev[j] - want).abs() < 1e-7, "eval {j}: {} vs {want}", lev[j]);
+            let av = a.matvec(&lv[j]);
+            for i in 0..n {
+                assert!((av[i] - lev[j] * lv[j][i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn lanczos_handles_degenerate_operator() {
+        // rank-1 operator: only one nonzero eigenvalue
+        let n = 20;
+        let u: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).sqrt()).collect();
+        let nn = dot(&u, &u);
+        let mut rng = Rng::new(5);
+        let (ev, _vecs) = lanczos_topk(
+            n,
+            |x, y| {
+                let c = dot(&u, x);
+                for i in 0..n {
+                    y[i] = c * u[i];
+                }
+            },
+            3,
+            20,
+            1e-12,
+            &mut rng,
+        );
+        assert!((ev[0] - nn).abs() < 1e-7);
+        assert!(ev[1].abs() < 1e-7);
+    }
+}

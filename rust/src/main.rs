@@ -1,0 +1,13 @@
+//! `dsc` — leader entrypoint for distributed spectral clustering.
+//!
+//! See `dsc help` (or [`dsc::cli::USAGE`]) for the launcher surface. The
+//! heavy lifting lives in the library crate; this binary is the thin
+//! process shell around [`dsc::cli::dispatch`].
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dsc::cli::dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

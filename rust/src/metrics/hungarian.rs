@@ -1,0 +1,210 @@
+//! Hungarian (Kuhn–Munkres) assignment via the potentials formulation.
+//!
+//! [`hungarian_max`] maximizes total profit over one-to-one assignments of
+//! rows to columns — used to evaluate the paper's Eq. (5) exactly in O(K³)
+//! instead of enumerating K! permutations.
+//!
+//! Implementation: the classic shortest-augmenting-path algorithm with row
+//! and column potentials (the "e-maxx" formulation) on the *cost* matrix
+//! `cost = max_profit − profit`, padded to square.
+
+/// Maximize `Σ profit[r][assignment[r]]` over injective row→column
+/// assignments. Returns `(total_profit, cols)` where `cols[r]` is the
+/// column assigned to row `r` (`usize::MAX` for rows left unmatched when
+/// there are more rows than columns — padding handles the reverse case).
+pub fn hungarian_max(profit: &[Vec<f64>]) -> (f64, Vec<usize>) {
+    let rows = profit.len();
+    if rows == 0 {
+        return (0.0, vec![]);
+    }
+    let cols = profit[0].len();
+    for row in profit {
+        assert_eq!(row.len(), cols, "profit matrix must be rectangular");
+    }
+    if cols == 0 {
+        return (0.0, vec![usize::MAX; rows]);
+    }
+
+    let n = rows.max(cols); // pad to square with zero-profit cells
+    let maxp = profit
+        .iter()
+        .flat_map(|r| r.iter().copied())
+        .fold(0.0f64, f64::max)
+        .max(0.0);
+    let cost = |r: usize, c: usize| -> f64 {
+        if r < rows && c < cols {
+            maxp - profit[r][c]
+        } else {
+            maxp // zero profit for padding cells
+        }
+    };
+
+    // potentials u (rows), v (cols); way[c] = previous column on aug path;
+    // match_col[c] = row matched to column c. 1-indexed internally.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut match_col = vec![0usize; n + 1]; // 0 = free
+    let mut way = vec![0usize; n + 1];
+
+    for r in 1..=n {
+        match_col[0] = r;
+        let mut j0 = 0usize;
+        let mut minv = vec![f64::INFINITY; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = match_col[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost(i0 - 1, j - 1) - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[match_col[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if match_col[j0] == 0 {
+                break;
+            }
+        }
+        // augment along the path
+        loop {
+            let j1 = way[j0];
+            match_col[j0] = match_col[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assignment = vec![usize::MAX; rows];
+    let mut total = 0.0;
+    for c in 1..=n {
+        let r = match_col[c];
+        if r >= 1 && r <= rows && c <= cols {
+            assignment[r - 1] = c - 1;
+            total += profit[r - 1][c - 1];
+        }
+    }
+    (total, assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn brute_force_max(profit: &[Vec<f64>]) -> f64 {
+        // permutations over the padded square, rows ≤ 8
+        let rows = profit.len();
+        let cols = profit[0].len();
+        let n = rows.max(cols);
+        let mut cols_perm: Vec<usize> = (0..n).collect();
+        let mut best = f64::NEG_INFINITY;
+        permute(&mut cols_perm, 0, &mut |perm| {
+            let mut s = 0.0;
+            for (r, item) in perm.iter().enumerate().take(rows) {
+                if *item < cols {
+                    s += profit[r][*item];
+                }
+            }
+            best = best.max(s);
+        });
+        best
+    }
+
+    fn permute(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+        if k == v.len() {
+            f(v);
+            return;
+        }
+        for i in k..v.len() {
+            v.swap(k, i);
+            permute(v, k + 1, f);
+            v.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn identity_matrix_prefers_diagonal() {
+        let p = vec![
+            vec![10.0, 0.0, 0.0],
+            vec![0.0, 10.0, 0.0],
+            vec![0.0, 0.0, 10.0],
+        ];
+        let (total, cols) = hungarian_max(&p);
+        assert_eq!(total, 30.0);
+        assert_eq!(cols, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn known_tricky_case() {
+        // greedy (row-wise argmax) fails here
+        let p = vec![vec![9.0, 8.0], vec![8.0, 1.0]];
+        let (total, cols) = hungarian_max(&p);
+        assert_eq!(total, 16.0);
+        assert_eq!(cols, vec![1, 0]);
+    }
+
+    #[test]
+    fn rectangular_wide() {
+        let p = vec![vec![1.0, 5.0, 3.0]];
+        let (total, cols) = hungarian_max(&p);
+        assert_eq!(total, 5.0);
+        assert_eq!(cols, vec![1]);
+    }
+
+    #[test]
+    fn rectangular_tall() {
+        let p = vec![vec![1.0], vec![5.0], vec![3.0]];
+        let (total, cols) = hungarian_max(&p);
+        assert_eq!(total, 5.0);
+        let matched: Vec<usize> = cols.iter().filter(|&&c| c != usize::MAX).copied().collect();
+        assert_eq!(matched, vec![0]);
+        assert_eq!(cols[1], 0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        let mut rng = Rng::new(19);
+        for trial in 0..50 {
+            let rows = 1 + rng.index(6);
+            let cols = 1 + rng.index(6);
+            let p: Vec<Vec<f64>> = (0..rows)
+                .map(|_| (0..cols).map(|_| (rng.f64() * 20.0).round()).collect())
+                .collect();
+            let (got, assign) = hungarian_max(&p);
+            let want = brute_force_max(&p);
+            assert!((got - want).abs() < 1e-9, "trial {trial}: {got} vs {want} on {p:?}");
+            // assignment must be injective over matched columns
+            let mut seen = std::collections::HashSet::new();
+            for &c in assign.iter().filter(|&&c| c != usize::MAX) {
+                assert!(seen.insert(c), "column {c} used twice");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let (t, a) = hungarian_max(&[]);
+        assert_eq!(t, 0.0);
+        assert!(a.is_empty());
+    }
+}

@@ -1,0 +1,262 @@
+//! Simulated site↔leader network with exact byte accounting.
+//!
+//! The paper runs all "sites" on one laptop and reasons about communication
+//! qualitatively ("only those codewords need to be transmitted"). This
+//! module makes that quantitative: every protocol message is serialized
+//! through [`wire`], counted per link and direction, and assigned a
+//! simulated transfer time `latency + bytes / bandwidth` under a
+//! configurable [`LinkSpec`]. Benchmarks report both the byte totals and
+//! the modeled transfer times (DESIGN.md ablation A3).
+//!
+//! Transport is in-process (`mpsc` channels between the leader and each
+//! site thread); the wire format is the real ABI, so swapping in TCP later
+//! only replaces this file.
+
+pub mod wire;
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+pub use wire::Message;
+
+/// Bandwidth/latency model of one site↔leader link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// Sustained bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// One-way latency.
+    pub latency: Duration,
+}
+
+impl Default for LinkSpec {
+    /// A WAN-ish default: 100 Mbit/s, 20 ms one way — the regime the paper
+    /// targets (geo-distributed business sites).
+    fn default() -> Self {
+        LinkSpec { bandwidth_bps: 12.5e6, latency: Duration::from_millis(20) }
+    }
+}
+
+impl LinkSpec {
+    /// Modeled one-way transfer time for a frame of `bytes`.
+    pub fn transfer_time(&self, bytes: u64) -> Duration {
+        self.latency + Duration::from_secs_f64(bytes as f64 / self.bandwidth_bps)
+    }
+}
+
+/// Byte/time counters for one direction of one link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DirStats {
+    pub frames: u64,
+    pub bytes: u64,
+    /// Accumulated modeled transfer time (not wall clock).
+    pub sim_time: Duration,
+}
+
+/// Counters for one site's link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkStats {
+    pub to_leader: DirStats,
+    pub to_site: DirStats,
+}
+
+/// Aggregated communication report for a pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct NetReport {
+    pub per_site: Vec<LinkStats>,
+}
+
+impl NetReport {
+    pub fn total_bytes(&self) -> u64 {
+        self.per_site.iter().map(|l| l.to_leader.bytes + l.to_site.bytes).sum()
+    }
+
+    /// Max over sites of the modeled transfer time (links operate in
+    /// parallel, mirroring the paper's max-over-sites timing).
+    pub fn max_link_time(&self) -> Duration {
+        self.per_site
+            .iter()
+            .map(|l| l.to_leader.sim_time + l.to_site.sim_time)
+            .max()
+            .unwrap_or_default()
+    }
+}
+
+struct Shared {
+    stats: Mutex<Vec<LinkStats>>,
+    spec: LinkSpec,
+}
+
+/// Leader-side handle to the star network.
+pub struct LeaderNet {
+    shared: Arc<Shared>,
+    from_sites: Receiver<(usize, Vec<u8>)>,
+    to_sites: Vec<Sender<Vec<u8>>>,
+}
+
+/// Site-side handle (moved into the site's thread).
+pub struct SiteNet {
+    shared: Arc<Shared>,
+    site_id: usize,
+    to_leader: Sender<(usize, Vec<u8>)>,
+    from_leader: Receiver<Vec<u8>>,
+}
+
+/// Build a star topology: one leader, `n_sites` sites, all links sharing
+/// `spec`. Returns the leader handle plus one handle per site.
+pub fn star(n_sites: usize, spec: LinkSpec) -> (LeaderNet, Vec<SiteNet>) {
+    let shared = Arc::new(Shared { stats: Mutex::new(vec![LinkStats::default(); n_sites]), spec });
+    let (up_tx, up_rx) = std::sync::mpsc::channel::<(usize, Vec<u8>)>();
+    let mut to_sites = Vec::with_capacity(n_sites);
+    let mut site_handles = Vec::with_capacity(n_sites);
+    for site_id in 0..n_sites {
+        let (down_tx, down_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+        to_sites.push(down_tx);
+        site_handles.push(SiteNet {
+            shared: shared.clone(),
+            site_id,
+            to_leader: up_tx.clone(),
+            from_leader: down_rx,
+        });
+    }
+    (LeaderNet { shared, from_sites: up_rx, to_sites }, site_handles)
+}
+
+impl LeaderNet {
+    /// Send `msg` to `site`.
+    pub fn send(&self, site: usize, msg: &Message) -> Result<()> {
+        let frame = wire::encode(msg);
+        {
+            let mut stats = self.shared.stats.lock().unwrap();
+            let dir = &mut stats[site].to_site;
+            dir.frames += 1;
+            dir.bytes += frame.len() as u64;
+            dir.sim_time += self.shared.spec.transfer_time(frame.len() as u64);
+        }
+        self.to_sites[site].send(frame).context("site channel closed")?;
+        Ok(())
+    }
+
+    /// Blocking receive of the next message from any site.
+    pub fn recv(&self) -> Result<(usize, Message)> {
+        let (site, frame) = self.from_sites.recv().context("all site channels closed")?;
+        let msg = wire::decode(&frame)?;
+        Ok((site, msg))
+    }
+
+    /// Receive with a timeout (failure-injection tests use this).
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<(usize, Message)> {
+        let (site, frame) =
+            self.from_sites.recv_timeout(timeout).context("timed out waiting for sites")?;
+        let msg = wire::decode(&frame)?;
+        Ok((site, msg))
+    }
+
+    /// Snapshot of the per-link counters.
+    pub fn report(&self) -> NetReport {
+        NetReport { per_site: self.shared.stats.lock().unwrap().clone() }
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.to_sites.len()
+    }
+}
+
+impl SiteNet {
+    pub fn site_id(&self) -> usize {
+        self.site_id
+    }
+
+    /// Send `msg` up to the leader.
+    pub fn send(&self, msg: &Message) -> Result<()> {
+        let frame = wire::encode(msg);
+        {
+            let mut stats = self.shared.stats.lock().unwrap();
+            let dir = &mut stats[self.site_id].to_leader;
+            dir.frames += 1;
+            dir.bytes += frame.len() as u64;
+            dir.sim_time += self.shared.spec.transfer_time(frame.len() as u64);
+        }
+        self.to_leader.send((self.site_id, frame)).context("leader channel closed")?;
+        Ok(())
+    }
+
+    /// Blocking receive of the next leader message.
+    pub fn recv(&self) -> Result<Message> {
+        let frame = self.from_leader.recv().context("leader channel closed")?;
+        wire::decode(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_accounting() {
+        let (leader, sites) = star(2, LinkSpec::default());
+        let s0 = &sites[0];
+        s0.send(&Message::Sigma(1.0)).unwrap();
+        let (id, msg) = leader.recv().unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(msg, Message::Sigma(1.0));
+
+        leader.send(0, &Message::Ack).unwrap();
+        assert_eq!(s0.recv().unwrap(), Message::Ack);
+
+        let rep = leader.report();
+        assert_eq!(rep.per_site[0].to_leader.frames, 1);
+        assert_eq!(rep.per_site[0].to_leader.bytes, 5); // tag + f32
+        assert_eq!(rep.per_site[0].to_site.frames, 1);
+        assert_eq!(rep.per_site[0].to_site.bytes, 1);
+        assert_eq!(rep.per_site[1].to_leader.frames, 0);
+        assert_eq!(rep.total_bytes(), 6);
+    }
+
+    #[test]
+    fn transfer_time_model() {
+        let spec = LinkSpec { bandwidth_bps: 1000.0, latency: Duration::from_millis(10) };
+        let t = spec.transfer_time(500);
+        assert_eq!(t, Duration::from_millis(510));
+    }
+
+    #[test]
+    fn concurrent_sites_to_leader() {
+        let (leader, sites) = star(4, LinkSpec::default());
+        std::thread::scope(|s| {
+            for site in sites {
+                s.spawn(move || {
+                    site.send(&Message::Labels {
+                        site: site.site_id() as u32,
+                        labels: vec![site.site_id() as u16; 3],
+                    })
+                    .unwrap();
+                });
+            }
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..4 {
+                let (id, msg) = leader.recv().unwrap();
+                match msg {
+                    Message::Labels { site, labels } => {
+                        assert_eq!(site as usize, id);
+                        assert_eq!(labels, vec![id as u16; 3]);
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+                seen.insert(id);
+            }
+            assert_eq!(seen.len(), 4);
+        });
+        let rep = leader.report();
+        assert!(rep.max_link_time() > Duration::ZERO);
+    }
+
+    #[test]
+    fn recv_timeout_fires() {
+        let (leader, _sites) = star(1, LinkSpec::default());
+        let err = leader.recv_timeout(Duration::from_millis(20));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Binary wire format for coordinator ⇄ site traffic.
+//!
+//! Everything that crosses a (simulated) link is serialized through this
+//! codec, so the byte counts the benchmarks report are the real size of
+//! the protocol messages, not estimates. Little-endian, length-prefixed:
+//!
+//! ```text
+//! frame   := tag:u8 payload
+//! CODEBOOK(1) := site:u32 dim:u32 n:u32 codewords:[f32; n*dim] weights:[u32; n]
+//! LABELS(2)   := site:u32 n:u32 labels:[u16; n]
+//! SIGMA(3)    := sigma:f32            (leader → sites broadcast, D3 tuning)
+//! ACK(4)      :=
+//! ```
+//!
+//! Codebook frames are exactly what the paper transmits (codewords + group
+//! sizes); label frames are the populated memberships coming back.
+
+use anyhow::{bail, Result};
+
+/// A protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Site → leader: the DML output (Algorithm 1, line 8 input).
+    Codebook { site: u32, dim: u32, codewords: Vec<f32>, weights: Vec<u32> },
+    /// Leader → site: cluster label per codeword (Algorithm 1, line 10).
+    Labels { site: u32, labels: Vec<u16> },
+    /// Leader → sites: broadcast of the affinity bandwidth (when sites
+    /// pre-scale data) — small control traffic, counted like the rest.
+    Sigma(f32),
+    Ack,
+}
+
+const TAG_CODEBOOK: u8 = 1;
+const TAG_LABELS: u8 = 2;
+const TAG_SIGMA: u8 = 3;
+const TAG_ACK: u8 = 4;
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame: need {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Serialize a message to a frame.
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut w = Writer::new();
+    match msg {
+        Message::Codebook { site, dim, codewords, weights } => {
+            assert_eq!(codewords.len(), (*dim as usize) * weights.len());
+            w.u8(TAG_CODEBOOK);
+            w.u32(*site);
+            w.u32(*dim);
+            w.u32(weights.len() as u32);
+            for v in codewords {
+                w.f32(*v);
+            }
+            for v in weights {
+                w.u32(*v);
+            }
+        }
+        Message::Labels { site, labels } => {
+            w.u8(TAG_LABELS);
+            w.u32(*site);
+            w.u32(labels.len() as u32);
+            for v in labels {
+                w.u16(*v);
+            }
+        }
+        Message::Sigma(s) => {
+            w.u8(TAG_SIGMA);
+            w.f32(*s);
+        }
+        Message::Ack => w.u8(TAG_ACK),
+    }
+    w.buf
+}
+
+/// Deserialize a frame. Errors on truncation, trailing garbage, overflow or
+/// unknown tags (a hostile/corrupt frame must not panic the coordinator).
+pub fn decode(frame: &[u8]) -> Result<Message> {
+    let mut r = Reader::new(frame);
+    let tag = r.u8()?;
+    let msg = match tag {
+        TAG_CODEBOOK => {
+            let site = r.u32()?;
+            let dim = r.u32()?;
+            let n = r.u32()?;
+            let total = (dim as u64) * (n as u64);
+            if total > 100_000_000 {
+                bail!("codebook too large: {n} codes × {dim} dims");
+            }
+            let mut codewords = Vec::with_capacity(total as usize);
+            for _ in 0..total {
+                codewords.push(r.f32()?);
+            }
+            let mut weights = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                weights.push(r.u32()?);
+            }
+            Message::Codebook { site, dim, codewords, weights }
+        }
+        TAG_LABELS => {
+            let site = r.u32()?;
+            let n = r.u32()?;
+            if n > 500_000_000 {
+                bail!("label frame too large: {n}");
+            }
+            let mut labels = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                labels.push(r.u16()?);
+            }
+            Message::Labels { site, labels }
+        }
+        TAG_SIGMA => Message::Sigma(r.f32()?),
+        TAG_ACK => Message::Ack,
+        t => bail!("unknown message tag {t}"),
+    };
+    if !r.done() {
+        bail!("trailing bytes after frame");
+    }
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codebook_roundtrip() {
+        let msg = Message::Codebook {
+            site: 3,
+            dim: 2,
+            codewords: vec![1.5, -2.0, 0.0, 7.25],
+            weights: vec![10, 20],
+        };
+        let frame = encode(&msg);
+        assert_eq!(decode(&frame).unwrap(), msg);
+        // frame size = 1 + 4 + 4 + 4 + 4*4 + 2*4 = 37
+        assert_eq!(frame.len(), 37);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let msg = Message::Labels { site: 0, labels: vec![0, 1, 2, 65535] };
+        assert_eq!(decode(&encode(&msg)).unwrap(), msg);
+    }
+
+    #[test]
+    fn sigma_and_ack_roundtrip() {
+        assert_eq!(decode(&encode(&Message::Sigma(0.75))).unwrap(), Message::Sigma(0.75));
+        assert_eq!(decode(&encode(&Message::Ack)).unwrap(), Message::Ack);
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let frame = encode(&Message::Labels { site: 0, labels: vec![1, 2, 3] });
+        for cut in 0..frame.len() {
+            assert!(decode(&frame[..cut]).is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_error() {
+        let mut frame = encode(&Message::Ack);
+        frame.push(0);
+        assert!(decode(&frame).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_errors() {
+        assert!(decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn hostile_length_does_not_allocate() {
+        // tag CODEBOOK with dim and n at u32::MAX must error, not OOM
+        let mut frame = vec![1u8];
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&frame).is_err());
+    }
+}

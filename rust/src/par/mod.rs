@@ -1,0 +1,267 @@
+//! Structured-parallelism substrate (the offline stand-in for `rayon`).
+//!
+//! Everything is built on `std::thread::scope`, so closures may borrow from
+//! the caller's stack — no `'static` bounds, no unsafe. Three primitives
+//! cover the crate's needs:
+//!
+//! * [`par_map`] — run one closure per item on its own thread (bounded by
+//!   [`threads`]); used for *sites*, which is exactly the parallelism the
+//!   paper exploits ("local computation at individual nodes in parallel").
+//! * [`par_chunks_mut`] — split an output slice into per-thread chunks and
+//!   fill them concurrently; used by the K-means assignment hot loop and
+//!   the native affinity builder.
+//! * [`par_reduce_chunks`] — chunked map-reduce over an input slice.
+//!
+//! Thread count defaults to the machine's available parallelism and can be
+//! pinned with `DSC_THREADS` (benchmarks use this for scaling curves).
+
+use std::sync::OnceLock;
+
+/// Number of worker threads to use for data-parallel loops.
+pub fn threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("DSC_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Apply `f` to every item, each on its own scoped thread (at most
+/// [`threads`] in flight), preserving input order in the output.
+///
+/// Intended for coarse tasks — e.g. one per distributed site. Panics in a
+/// worker propagate to the caller.
+pub fn par_map<I, O, F>(items: Vec<I>, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(usize, I) -> O + Sync,
+{
+    let max = threads().max(1);
+    let mut out: Vec<Option<O>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+
+    // Process in waves of `max` to bound concurrency.
+    let mut idx = 0usize;
+    let mut items = items.into_iter();
+    while idx < out.len() {
+        let wave: Vec<(usize, I)> = (&mut items)
+            .take(max)
+            .enumerate()
+            .map(|(k, it)| (idx + k, it))
+            .collect();
+        let wave_len = wave.len();
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(wave_len);
+            for (i, item) in wave {
+                let f = &f;
+                handles.push(s.spawn(move || (i, f(i, item))));
+            }
+            for h in handles {
+                let (i, v) = h.join().expect("par_map worker panicked");
+                out[i] = Some(v);
+            }
+        });
+        idx += wave_len;
+    }
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+/// Fill `out` in parallel: the slice is split into ~[`threads`] contiguous
+/// chunks (each at least `min_chunk` long) and `f(start_index, chunk)` runs
+/// on its own scoped thread.
+pub fn par_chunks_mut<T, F>(out: &mut [T], min_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let nthreads = threads().max(1);
+    let chunk = (n.div_ceil(nthreads)).max(min_chunk.max(1));
+    if chunk >= n {
+        f(0, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut start = 0usize;
+        let mut rest = out;
+        let mut handles = Vec::new();
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let begin = start;
+            handles.push(s.spawn(move || f(begin, head)));
+            start += take;
+            rest = tail;
+        }
+        for h in handles {
+            h.join().expect("par_chunks_mut worker panicked");
+        }
+    });
+}
+
+/// Row-aligned variant of [`par_chunks_mut`]: `out` is an `R × row_len`
+/// row-major matrix; chunks always cover whole rows, and `f(first_row,
+/// rows_slice)` receives a slice whose length is a multiple of `row_len`.
+pub fn par_rows_mut<T, F>(out: &mut [T], row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0);
+    assert_eq!(out.len() % row_len, 0, "buffer not a whole number of rows");
+    let n_rows = out.len() / row_len;
+    if n_rows == 0 {
+        return;
+    }
+    let nthreads = threads().max(1);
+    let rows_per_chunk = n_rows.div_ceil(nthreads).max(1);
+    if rows_per_chunk >= n_rows {
+        f(0, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut first_row = 0usize;
+        let mut rest = out;
+        let mut handles = Vec::new();
+        while !rest.is_empty() {
+            let take_rows = rows_per_chunk.min(rest.len() / row_len);
+            let (head, tail) = rest.split_at_mut(take_rows * row_len);
+            let f = &f;
+            let begin = first_row;
+            handles.push(s.spawn(move || f(begin, head)));
+            first_row += take_rows;
+            rest = tail;
+        }
+        for h in handles {
+            h.join().expect("par_rows_mut worker panicked");
+        }
+    });
+}
+
+/// Chunked map-reduce: `map(start, chunk) -> A`, combined left-to-right with
+/// `reduce`. Chunk boundaries are deterministic for a fixed thread count, so
+/// use an order-insensitive `reduce` (or pin `DSC_THREADS`) when exact
+/// reproducibility across machines matters.
+pub fn par_reduce_chunks<T, A, M, R>(xs: &[T], min_chunk: usize, map: M, reduce: R) -> Option<A>
+where
+    T: Sync,
+    A: Send,
+    M: Fn(usize, &[T]) -> A + Sync,
+    R: Fn(A, A) -> A,
+{
+    let n = xs.len();
+    if n == 0 {
+        return None;
+    }
+    let nthreads = threads().max(1);
+    let chunk = (n.div_ceil(nthreads)).max(min_chunk.max(1));
+    if chunk >= n {
+        return Some(map(0, xs));
+    }
+    let mut partials: Vec<A> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let slice = &xs[start..end];
+            let map = &map;
+            let begin = start;
+            handles.push(s.spawn(move || map(begin, slice)));
+            start = end;
+        }
+        for h in handles {
+            partials.push(h.join().expect("par_reduce worker panicked"));
+        }
+    });
+    partials.into_iter().reduce(reduce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = par_map(items, |i, x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..37).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_chunks_mut_fills_everything() {
+        let mut v = vec![0usize; 10_000];
+        par_chunks_mut(&mut v, 16, |start, chunk| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                *slot = start + k;
+            }
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| i == x));
+    }
+
+    #[test]
+    fn par_chunks_mut_small_input_single_thread() {
+        let mut v = vec![1u8; 3];
+        par_chunks_mut(&mut v, 64, |start, chunk| {
+            assert_eq!(start, 0);
+            assert_eq!(chunk.len(), 3);
+            chunk.fill(9);
+        });
+        assert_eq!(v, vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn par_rows_mut_whole_rows_only() {
+        let row_len = 7;
+        let n_rows = 53;
+        let mut m = vec![0usize; row_len * n_rows];
+        par_rows_mut(&mut m, row_len, |first_row, rows| {
+            assert_eq!(rows.len() % row_len, 0);
+            for (r, row) in rows.chunks_exact_mut(row_len).enumerate() {
+                row.fill(first_row + r);
+            }
+        });
+        for (i, &v) in m.iter().enumerate() {
+            assert_eq!(v, i / row_len);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of rows")]
+    fn par_rows_mut_rejects_ragged() {
+        let mut m = vec![0u8; 10];
+        par_rows_mut(&mut m, 3, |_, _| {});
+    }
+
+    #[test]
+    fn par_reduce_sums() {
+        let xs: Vec<u64> = (0..100_000).collect();
+        let got = par_reduce_chunks(&xs, 1, |_, c| c.iter().sum::<u64>(), |a, b| a + b);
+        assert_eq!(got, Some(4999950000));
+    }
+
+    #[test]
+    fn par_reduce_empty_is_none() {
+        let xs: Vec<u64> = vec![];
+        assert_eq!(par_reduce_chunks(&xs, 1, |_, c| c.len(), |a, b| a + b), None);
+    }
+
+    #[test]
+    fn threads_at_least_one() {
+        assert!(threads() >= 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Mini property-testing harness (offline stand-in for `proptest`).
+//!
+//! [`forall`] runs a property over `cases` generated inputs; every case is
+//! seeded from `(suite seed, case index)`, so a failure report's case index
+//! reproduces exactly. There is no shrinking — generators are kept small
+//! and structured instead (generate *parameters*, not giant blobs), which
+//! in practice localizes failures well enough for this crate.
+//!
+//! ```no_run
+//! # // no_run: rustdoc's runner lacks the xla rpath (see .cargo/config.toml)
+//! use dsc::prop::{forall, Gen};
+//! forall("sorting is idempotent", 100, 42, |g: &mut Gen| {
+//!     let n = g.usize_in(0, 50);
+//!     let mut v = g.vec_f32(n, -10.0, 10.0);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let mut w = v.clone();
+//!     w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     if v == w { Ok(()) } else { Err("not idempotent".into()) }
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Case-local generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Which case this is (for error messages / conditioning).
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Uniform f32 vector.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + (hi - lo) * self.rng.f32()).collect()
+    }
+
+    /// Vector of labels in `[0, k)`.
+    pub fn labels(&mut self, len: usize, k: usize) -> Vec<u16> {
+        (0..len).map(|_| self.rng.index(k) as u16).collect()
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut v);
+        v
+    }
+
+    /// Coin flip.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Access the underlying PRNG for bespoke generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `property` over `cases` generated inputs; panics (test failure) on
+/// the first counter-example with enough context to reproduce it.
+pub fn forall(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    property: impl Fn(&mut Gen) -> Result<(), String>,
+) {
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let mut g = Gen { rng: root.fork(case as u64), case };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property {name:?} failed on case {case}/{cases} (suite seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("x + 0 == x", 50, 1, |g| {
+            let x = g.f64_in(-10.0, 10.0);
+            if x + 0.0 == x {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn reports_counterexample() {
+        forall("all ints are even", 50, 2, |g| {
+            let x = g.usize_in(0, 100);
+            if x % 2 == 0 {
+                Ok(())
+            } else {
+                Err(format!("{x} is odd"))
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_reproducible() {
+        let mut firsts = Vec::new();
+        for _ in 0..2 {
+            let root = Rng::new(9);
+            let mut g = Gen { rng: root.fork(3), case: 3 };
+            firsts.push(g.usize_in(0, 1_000_000));
+        }
+        assert_eq!(firsts[0], firsts[1]);
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        forall("permutation covers 0..n", 30, 4, |g| {
+            let n = g.usize_in(0, 64);
+            let p = g.permutation(n);
+            let mut seen = vec![false; n];
+            for &i in &p {
+                if seen[i] {
+                    return Err(format!("dup {i}"));
+                }
+                seen[i] = true;
+            }
+            if seen.iter().all(|&b| b) {
+                Ok(())
+            } else {
+                Err("missing index".into())
+            }
+        });
+    }
+}

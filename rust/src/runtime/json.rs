@@ -1,0 +1,297 @@
+//! Minimal JSON parser (offline stand-in for `serde_json`).
+//!
+//! Parses the artifact manifest emitted by `python/compile/aot.py`. Full
+//! JSON value model (objects, arrays, strings with escapes, numbers,
+//! booleans, null); no serialization beyond what the crate needs. Errors
+//! carry byte offsets for debuggability.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|x| {
+            if x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64 {
+                Some(x as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a complete JSON document.
+pub fn parse(text: &str) -> Result<Value> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != bytes.len() {
+        bail!("trailing characters at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at offset {}", c as char, self.i);
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.keyword("true", Value::Bool(true)),
+            Some(b'f') => self.keyword("false", Value::Bool(false)),
+            Some(b'n') => self.keyword("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at offset {}", other.map(|c| c as char), self.i),
+        }
+    }
+
+    fn keyword(&mut self, kw: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(kw.as_bytes()) {
+            self.i += kw.len();
+            Ok(v)
+        } else {
+            bail!("bad keyword at offset {}", self.i);
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Object(map));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Array(items));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            // surrogate pairs unsupported (manifest is ASCII)
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        other => bail!("bad escape {:?}", other.map(|c| c as char)),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar
+                    let rest = std::str::from_utf8(&self.b[self.i..])?;
+                    let ch = rest.chars().next().unwrap();
+                    s.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])?;
+        let num: f64 = txt.parse()?;
+        Ok(Value::Num(num))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let doc = r#"{
+          "format": "hlo-text/return-tuple",
+          "embed_k": 8,
+          "programs": [
+            {"name": "embed_n256_d8", "kind": "embed", "n": 256, "d": 8,
+             "params": [{"name": "cw", "shape": [256, 8], "dtype": "f32"}]}
+          ]
+        }"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("format").unwrap().as_str().unwrap(), "hlo-text/return-tuple");
+        assert_eq!(v.get("embed_k").unwrap().as_usize().unwrap(), 8);
+        let progs = v.get("programs").unwrap().as_array().unwrap();
+        assert_eq!(progs.len(), 1);
+        let shape = progs[0].get("params").unwrap().as_array().unwrap()[0]
+            .get("shape")
+            .unwrap()
+            .as_array()
+            .unwrap();
+        assert_eq!(shape[0].as_usize(), Some(256));
+    }
+
+    #[test]
+    fn scalars_and_literals() {
+        assert_eq!(parse("42").unwrap().as_f64(), Some(42.0));
+        assert_eq!(parse("-1.5e2").unwrap().as_f64(), Some(-150.0));
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse(r#""a\nb""#).unwrap().as_str(), Some("a\nb"));
+    }
+
+    #[test]
+    fn unicode_escape() {
+        assert_eq!(parse(r#""A""#).unwrap().as_str(), Some("A"));
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("{}extra").is_err());
+        assert!(parse("{'single': 1}").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("[[1,2],[3]]").unwrap();
+        let a = v.as_array().unwrap();
+        assert_eq!(a[0].as_array().unwrap().len(), 2);
+        assert_eq!(a[1].as_array().unwrap()[0].as_usize(), Some(3));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Value::Array(vec![]));
+        assert_eq!(parse("{}").unwrap(), Value::Object(BTreeMap::new()));
+    }
+}

@@ -1,0 +1,415 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! This is the bridge to Layers 1+2. `make artifacts` (python, build time)
+//! lowers the spectral-embedding and Lloyd-step compute graphs — with the
+//! Pallas kernels inlined — to HLO *text* under `artifacts/`, one file per
+//! shape bucket, plus `manifest.json` describing the parameter/output ABI.
+//! At run time this module:
+//!
+//! 1. parses the manifest ([`json`] — no serde offline);
+//! 2. picks the smallest bucket that fits a request (`n` and `d` round up;
+//!    extra rows carry weight 0, extra feature columns are zero — both are
+//!    exact no-ops for the math, see `python/compile/model.py`);
+//! 3. compiles the HLO with the PJRT CPU client on first use and caches
+//!    the executable (compilation is milliseconds-to-seconds; steady-state
+//!    calls are pure execution);
+//! 4. pads inputs, executes, unpads outputs.
+//!
+//! HLO **text** is the interchange format because jax ≥ 0.5 serialized
+//! protos carry 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod json;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One AOT program described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub kind: ProgramKind,
+    pub file: PathBuf,
+    /// Row bucket (codewords / points).
+    pub n: usize,
+    /// Feature bucket (embed) or embedding width (kstep).
+    pub d: usize,
+    /// Centroid bucket (kstep only).
+    pub k: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgramKind {
+    Embed,
+    KStep,
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub embed_k: usize,
+    pub programs: Vec<ProgramSpec>,
+}
+
+impl Artifacts {
+    /// Load `manifest.json` from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {} (run `make artifacts` first?)", mpath.display()))?;
+        let doc = json::parse(&text).context("parse manifest.json")?;
+
+        let format = doc.get("format").and_then(|v| v.as_str()).unwrap_or("");
+        if format != "hlo-text/return-tuple" {
+            bail!("unsupported artifact format {format:?}");
+        }
+        let embed_k = doc
+            .get("embed_k")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing embed_k"))?;
+
+        let mut programs = Vec::new();
+        for p in doc
+            .get("programs")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow!("manifest missing programs"))?
+        {
+            let name = p
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("program missing name"))?
+                .to_string();
+            let kind = match p.get("kind").and_then(|v| v.as_str()) {
+                Some("embed") => ProgramKind::Embed,
+                Some("kstep") => ProgramKind::KStep,
+                other => bail!("program {name}: unknown kind {other:?}"),
+            };
+            let file = dir.join(
+                p.get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("program {name}: missing file"))?,
+            );
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            let n = p.get("n").and_then(|v| v.as_usize()).unwrap_or(0);
+            let d = p.get("d").and_then(|v| v.as_usize()).unwrap_or(0);
+            let k = p.get("k").and_then(|v| v.as_usize()).unwrap_or(0);
+            programs.push(ProgramSpec { name, kind, file, n, d, k });
+        }
+        if programs.is_empty() {
+            bail!("manifest lists no programs");
+        }
+        Ok(Artifacts { dir, embed_k, programs })
+    }
+
+    /// Smallest embed bucket with `n_bucket ≥ n` and `d_bucket ≥ d`.
+    pub fn embed_bucket(&self, n: usize, d: usize) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .filter(|p| p.kind == ProgramKind::Embed && p.n >= n && p.d >= d)
+            .min_by_key(|p| (p.n, p.d))
+    }
+
+    /// Smallest kstep bucket with `n_bucket ≥ n` (embedding width is fixed).
+    pub fn kstep_bucket(&self, n: usize) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .filter(|p| p.kind == ProgramKind::KStep && p.n >= n)
+            .min_by_key(|p| p.n)
+    }
+}
+
+/// Output of the embed artifact (unpadded).
+#[derive(Clone, Debug)]
+pub struct EmbedOut {
+    /// `n × embed_k` row-major eigenvectors of M (decreasing eigenvalue).
+    pub evecs: Vec<f32>,
+    pub evals: Vec<f32>,
+    pub deg: Vec<f32>,
+    pub k_cols: usize,
+    /// Which bucket ran (for logging/benches).
+    pub bucket: String,
+}
+
+/// PJRT executor with an executable cache.
+pub struct XlaRuntime {
+    artifacts: Artifacts,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let artifacts = Artifacts::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(XlaRuntime { artifacts, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    fn executable(&self, spec: &ProgramSpec) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&spec.name) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", spec.name))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Run the spectral-embedding artifact on `n = points.len()/dim`
+    /// codewords. `weights` follow the padding convention (0 ⇒ pad row);
+    /// real rows must have positive weight.
+    pub fn embed(&self, points: &[f32], dim: usize, weights: &[f32], sigma: f32) -> Result<EmbedOut> {
+        let n = weights.len();
+        if points.len() != n * dim {
+            bail!("points buffer {} != n {} × dim {}", points.len(), n, dim);
+        }
+        if n == 0 {
+            bail!("embed of empty codeword set");
+        }
+        let spec = self
+            .artifacts
+            .embed_bucket(n, dim)
+            .ok_or_else(|| anyhow!("no embed bucket fits n={n}, d={dim}"))?
+            .clone();
+        let exe = self.executable(&spec)?;
+
+        // pad points (nb × db) and weights (nb)
+        let (nb, db) = (spec.n, spec.d);
+        let mut cw = vec![0.0f32; nb * db];
+        for i in 0..n {
+            cw[i * db..i * db + dim].copy_from_slice(&points[i * dim..(i + 1) * dim]);
+        }
+        let mut w = vec![0.0f32; nb];
+        w[..n].copy_from_slice(weights);
+
+        let cw_lit = xla::Literal::vec1(&cw)
+            .reshape(&[nb as i64, db as i64])
+            .map_err(|e| anyhow!("reshape cw: {e}"))?;
+        let w_lit = xla::Literal::vec1(&w);
+        let sigma_lit = xla::Literal::from(sigma);
+
+        let result = exe
+            .execute::<xla::Literal>(&[cw_lit, w_lit, sigma_lit])
+            .map_err(|e| anyhow!("execute {}: {e}", spec.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let (evecs_l, evals_l, deg_l) =
+            result.to_tuple3().map_err(|e| anyhow!("untuple: {e}"))?;
+
+        let k_cols = self.artifacts.embed_k;
+        let evecs_pad: Vec<f32> = evecs_l.to_vec().map_err(|e| anyhow!("evecs: {e}"))?;
+        let evals: Vec<f32> = evals_l.to_vec().map_err(|e| anyhow!("evals: {e}"))?;
+        let deg_pad: Vec<f32> = deg_l.to_vec().map_err(|e| anyhow!("deg: {e}"))?;
+
+        // unpad rows
+        let mut evecs = vec![0.0f32; n * k_cols];
+        evecs.copy_from_slice(&evecs_pad[..n * k_cols]);
+        let deg = deg_pad[..n].to_vec();
+        Ok(EmbedOut { evecs, evals, deg, k_cols, bucket: spec.name.clone() })
+    }
+
+    /// Run one Lloyd step of the kstep artifact over `n` embedding rows
+    /// (`d` must equal the artifact's embedding width). Returns
+    /// `(new_centroids, assignment, shift, inertia)` unpadded.
+    #[allow(clippy::type_complexity)]
+    pub fn kmeans_step(
+        &self,
+        points: &[f32],
+        d: usize,
+        centroids: &[f32],
+        k_active: usize,
+    ) -> Result<(Vec<f32>, Vec<i32>, f32, f32)> {
+        let n = points.len() / d;
+        let spec = self
+            .artifacts
+            .kstep_bucket(n)
+            .ok_or_else(|| anyhow!("no kstep bucket fits n={n}"))?
+            .clone();
+        if d != spec.d {
+            bail!("kstep expects d={}, got {d}", spec.d);
+        }
+        if k_active > spec.k {
+            bail!("kstep supports ≤ {} centroids, got {k_active}", spec.k);
+        }
+        if centroids.len() != k_active * d {
+            bail!("centroid buffer size mismatch");
+        }
+        let exe = self.executable(&spec)?;
+
+        let (nb, kb) = (spec.n, spec.k);
+        let mut p = vec![0.0f32; nb * d];
+        p[..n * d].copy_from_slice(points);
+        let mut c = vec![0.0f32; kb * d];
+        c[..k_active * d].copy_from_slice(centroids);
+        // park inactive centroids far away so padding rows (pmask 0) assign
+        // harmlessly and active points never pick them (cmask also guards)
+        for slot in c[k_active * d..].iter_mut() {
+            *slot = 1e6;
+        }
+        let mut pmask = vec![0.0f32; nb];
+        pmask[..n].fill(1.0);
+        let mut cmask = vec![0.0f32; kb];
+        cmask[..k_active].fill(1.0);
+
+        let p_lit = xla::Literal::vec1(&p)
+            .reshape(&[nb as i64, d as i64])
+            .map_err(|e| anyhow!("reshape p: {e}"))?;
+        let c_lit = xla::Literal::vec1(&c)
+            .reshape(&[kb as i64, d as i64])
+            .map_err(|e| anyhow!("reshape c: {e}"))?;
+        let pm_lit = xla::Literal::vec1(&pmask);
+        let cm_lit = xla::Literal::vec1(&cmask);
+
+        let result = exe
+            .execute::<xla::Literal>(&[p_lit, c_lit, pm_lit, cm_lit])
+            .map_err(|e| anyhow!("execute {}: {e}", spec.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let (newc_l, idx_l, shift_l, inertia_l) =
+            result.to_tuple4().map_err(|e| anyhow!("untuple: {e}"))?;
+
+        let newc_pad: Vec<f32> = newc_l.to_vec().map_err(|e| anyhow!("new_c: {e}"))?;
+        let idx_pad: Vec<i32> = idx_l.to_vec().map_err(|e| anyhow!("idx: {e}"))?;
+        let shift: f32 = shift_l.get_first_element().map_err(|e| anyhow!("shift: {e}"))?;
+        let inertia: f32 =
+            inertia_l.get_first_element().map_err(|e| anyhow!("inertia: {e}"))?;
+
+        Ok((newc_pad[..k_active * d].to_vec(), idx_pad[..n].to_vec(), shift, inertia))
+    }
+}
+
+thread_local! {
+    static RUNTIME_CACHE: std::cell::RefCell<HashMap<PathBuf, std::rc::Rc<XlaRuntime>>> =
+        std::cell::RefCell::new(HashMap::new());
+}
+
+/// Thread-local shared runtime for `artifact_dir`.
+///
+/// PJRT executables are not `Send`, so the cache is per-thread — which
+/// matches how the coordinator uses it (the leader thread owns the central
+/// step). Compiling an embed bucket costs ~1 s; with this cache a process
+/// running many pipelines (benches, sweeps, long-lived servers) pays it
+/// once per bucket instead of once per run (EXPERIMENTS.md §Perf, change 4).
+pub fn shared(artifact_dir: impl AsRef<Path>) -> Result<std::rc::Rc<XlaRuntime>> {
+    let key = artifact_dir.as_ref().to_path_buf();
+    RUNTIME_CACHE.with(|cache| {
+        if let Some(rt) = cache.borrow().get(&key) {
+            return Ok(rt.clone());
+        }
+        let rt = std::rc::Rc::new(XlaRuntime::new(&key)?);
+        cache.borrow_mut().insert(key, rt.clone());
+        Ok(rt)
+    })
+}
+
+/// Default artifact directory: `$DSC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("DSC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pure-manifest tests (no PJRT). Execution tests live in
+    // rust/tests/runtime_exec.rs because they need artifacts on disk.
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in ["embed_n256_d8.hlo.txt", "embed_n512_d16.hlo.txt", "kstep_n256_k8_d8.hlo.txt"] {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "format": "hlo-text/return-tuple",
+              "embed_k": 8,
+              "embed_iters": 150,
+              "programs": [
+                {"name":"embed_n256_d8","kind":"embed","file":"embed_n256_d8.hlo.txt","n":256,"d":8,"params":[],"outputs":[]},
+                {"name":"embed_n512_d16","kind":"embed","file":"embed_n512_d16.hlo.txt","n":512,"d":16,"params":[],"outputs":[]},
+                {"name":"kstep_n256_k8_d8","kind":"kstep","file":"kstep_n256_k8_d8.hlo.txt","n":256,"k":8,"d":8,"params":[],"outputs":[]}
+              ]
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn manifest_load_and_bucket_selection() {
+        let dir = std::env::temp_dir().join(format!("dsc_rt_{}", std::process::id()));
+        fake_manifest(&dir);
+        let arts = Artifacts::load(&dir).unwrap();
+        assert_eq!(arts.embed_k, 8);
+        assert_eq!(arts.programs.len(), 3);
+
+        let b = arts.embed_bucket(200, 5).unwrap();
+        assert_eq!(b.name, "embed_n256_d8");
+        let b = arts.embed_bucket(257, 8).unwrap();
+        assert_eq!(b.name, "embed_n512_d16");
+        let b = arts.embed_bucket(300, 12).unwrap();
+        assert_eq!(b.name, "embed_n512_d16");
+        assert!(arts.embed_bucket(1000, 8).is_none());
+        assert!(arts.embed_bucket(256, 64).is_none());
+
+        let k = arts.kstep_bucket(100).unwrap();
+        assert_eq!(k.name, "kstep_n256_k8_d8");
+        assert!(arts.kstep_bucket(1000).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("dsc_rt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text/return-tuple","embed_k":8,
+                "programs":[{"name":"x","kind":"embed","file":"missing.hlo.txt","n":256,"d":8}]}"#,
+        )
+        .unwrap();
+        assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_bad_format_rejected() {
+        let dir = std::env::temp_dir().join(format!("dsc_rt3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"protobuf","programs":[]}"#)
+            .unwrap();
+        assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

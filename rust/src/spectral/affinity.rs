@@ -1,0 +1,305 @@
+//! Native Gaussian-affinity construction over codewords.
+//!
+//! Mirrors the semantics of the Layer-1 Pallas kernel exactly (weighted,
+//! zero diagonal, pad-free here since the native path needs no padding):
+//! `A[i,j] = w_i w_j exp(−‖x_i−x_j‖² / 2σ²)`, `A[i,i] = 0`.
+//!
+//! Rows are built in parallel chunks with the same `‖x‖²+‖y‖²−2x·y`
+//! expansion the kernel uses. Bandwidth selection offers the paper's
+//! cross-validatory spirit via an eigengap grid search on top of the
+//! median-distance heuristic (the paper greps σ ∈ (0, 200] per dataset;
+//! see [`Bandwidth`]).
+
+use crate::par;
+use crate::rng::Rng;
+
+/// Symmetric affinity matrix with cached degrees.
+#[derive(Clone, Debug)]
+pub struct Affinity {
+    pub n: usize,
+    /// Row-major `n × n` weights.
+    pub data: Vec<f32>,
+    /// Degree `d_i = Σ_j A[i,j]` (f64 accumulation).
+    pub deg: Vec<f64>,
+}
+
+impl Affinity {
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// y = M x where `M = D^{-1/2} A D^{-1/2}` (the normalized affinity
+    /// whose top eigenvectors normalized cuts needs). Zero-degree rows act
+    /// as isolated vertices.
+    pub fn normalized_matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        let inv_sqrt: Vec<f64> =
+            self.deg.iter().map(|&d| if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+        // scale input once: z = D^{-1/2} x
+        let z: Vec<f64> = x.iter().zip(&inv_sqrt).map(|(v, s)| v * s).collect();
+        par::par_chunks_mut(y, 256, |start, chunk| {
+            for (off, out) in chunk.iter_mut().enumerate() {
+                let i = start + off;
+                let row = self.row(i);
+                // 4 independent accumulators: the f64 reduction chain is
+                // otherwise serial and this dot is Lanczos' entire inner
+                // loop (EXPERIMENTS.md §Perf, change 5).
+                let mut acc = [0.0f64; 4];
+                let chunks = row.len() / 4;
+                for c in 0..chunks {
+                    let ra = &row[c * 4..c * 4 + 4];
+                    let za = &z[c * 4..c * 4 + 4];
+                    for l in 0..4 {
+                        acc[l] += ra[l] as f64 * za[l];
+                    }
+                }
+                let mut tail = 0.0f64;
+                for j in chunks * 4..row.len() {
+                    tail += row[j] as f64 * z[j];
+                }
+                *out = ((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail) * inv_sqrt[i];
+            }
+        });
+    }
+
+    /// Restrict to an index subset (recursive normalized cuts re-partitions
+    /// sub-graphs). Degrees are recomputed within the subset.
+    pub fn submatrix(&self, idx: &[usize]) -> Affinity {
+        let m = idx.len();
+        let mut data = vec![0.0f32; m * m];
+        for (r, &i) in idx.iter().enumerate() {
+            let src = self.row(i);
+            let dst = &mut data[r * m..(r + 1) * m];
+            for (c, &j) in idx.iter().enumerate() {
+                dst[c] = src[j];
+            }
+        }
+        let mut deg = vec![0.0f64; m];
+        for r in 0..m {
+            deg[r] = data[r * m..(r + 1) * m].iter().map(|&v| v as f64).sum();
+        }
+        Affinity { n: m, data, deg }
+    }
+
+    /// Total edge weight between `a`-side and `b`-side of a bipartition
+    /// given a membership mask (true = side A). Used by the ncut objective.
+    pub fn cut_value(&self, side_a: &[bool]) -> f64 {
+        assert_eq!(side_a.len(), self.n);
+        let mut cut = 0.0f64;
+        for i in 0..self.n {
+            if !side_a[i] {
+                continue;
+            }
+            let row = self.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                if !side_a[j] {
+                    cut += v as f64;
+                }
+            }
+        }
+        cut
+    }
+}
+
+/// Build the affinity matrix for `points` (`n × dim`, row-major) with
+/// per-point weights `w` (pass all-ones for the unweighted variant).
+pub fn build(points: &[f32], dim: usize, w: &[f32], sigma: f64) -> Affinity {
+    assert!(dim > 0);
+    let n = points.len() / dim;
+    assert_eq!(points.len(), n * dim);
+    assert_eq!(w.len(), n);
+    assert!(sigma > 0.0, "sigma must be positive");
+
+    // ‖x_i‖² table
+    let sq: Vec<f32> = (0..n)
+        .map(|i| points[i * dim..(i + 1) * dim].iter().map(|v| v * v).sum())
+        .collect();
+    let inv_two_sigma2 = (1.0 / (2.0 * sigma * sigma)) as f32;
+
+    // Row-parallel build. Each output row i is a contiguous n-length slice
+    // filled in three vectorizable passes: squared distances via the
+    // expanded form (the dot runs over points' rows), one fused
+    // scale+exp+weight pass, then the diagonal zero. (Per-element index
+    // arithmetic — the first implementation — cost ~35% of the kernel; see
+    // EXPERIMENTS.md §Perf, change 3.)
+    let mut data = vec![0.0f32; n * n];
+    par::par_rows_mut(&mut data, n, |row0, rows| {
+        for (r, row) in rows.chunks_exact_mut(n).enumerate() {
+            let i = row0 + r;
+            let pi = &points[i * dim..(i + 1) * dim];
+            let sqi = sq[i];
+            let wi = w[i];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let pj = &points[j * dim..(j + 1) * dim];
+                let mut dot = 0.0f32;
+                for k in 0..dim {
+                    dot += pi[k] * pj[k];
+                }
+                let d2 = (sqi + sq[j] - 2.0 * dot).max(0.0);
+                *slot = wi * w[j] * (-d2 * inv_two_sigma2).exp();
+            }
+            row[i] = 0.0;
+        }
+    });
+
+    let mut deg = vec![0.0f64; n];
+    par::par_chunks_mut(&mut deg, 64, |start, chunk| {
+        for (off, d) in chunk.iter_mut().enumerate() {
+            let i = start + off;
+            *d = data[i * n..(i + 1) * n].iter().map(|&v| v as f64).sum();
+        }
+    });
+
+    Affinity { n, data, deg }
+}
+
+/// Bandwidth (σ) selection policy.
+#[derive(Clone, Copy, Debug)]
+pub enum Bandwidth {
+    /// Use σ as given.
+    Fixed(f64),
+    /// Median pairwise distance of a subsample, times the scale factor.
+    MedianScale(f64),
+    /// Grid of scale factors over the median heuristic; pick the σ that
+    /// maximizes the eigengap λ_K − λ_{K+1} of the normalized affinity —
+    /// our deterministic stand-in for the paper's cross-validatory search
+    /// over (0, 200].
+    EigengapSearch { k: usize },
+}
+
+impl Default for Bandwidth {
+    fn default() -> Self {
+        Bandwidth::MedianScale(1.0)
+    }
+}
+
+/// Median pairwise distance over a random subsample (≤ `cap` points).
+pub fn median_distance(points: &[f32], dim: usize, cap: usize, rng: &mut Rng) -> f64 {
+    let n = points.len() / dim;
+    assert!(n > 0, "median_distance on empty set");
+    if n == 1 {
+        return 1.0;
+    }
+    let m = n.min(cap);
+    let idx: Vec<usize> =
+        if m == n { (0..n).collect() } else { rng.sample_indices(n, m) };
+    let mut dists = Vec::with_capacity(m * (m - 1) / 2);
+    for a in 0..m {
+        let pa = &points[idx[a] * dim..idx[a] * dim + dim];
+        for b in (a + 1)..m {
+            let pb = &points[idx[b] * dim..idx[b] * dim + dim];
+            let mut d2 = 0.0f64;
+            for k in 0..dim {
+                let d = (pa[k] - pb[k]) as f64;
+                d2 += d * d;
+            }
+            dists.push(d2.sqrt());
+        }
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = dists[dists.len() / 2];
+    if med > 1e-12 {
+        med
+    } else {
+        1.0 // degenerate (all points identical): any σ works
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_points() -> (Vec<f32>, usize) {
+        // two pairs of close points, far apart
+        (vec![0.0, 0.0, 0.1, 0.0, 10.0, 10.0, 10.1, 10.0], 2)
+    }
+
+    #[test]
+    fn matches_bruteforce() {
+        let (pts, dim) = toy_points();
+        let w = vec![1.0f32; 4];
+        let a = build(&pts, dim, &w, 1.0);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j {
+                    0.0
+                } else {
+                    let pi = &pts[i * 2..i * 2 + 2];
+                    let pj = &pts[j * 2..j * 2 + 2];
+                    let d2 = (pi[0] - pj[0]).powi(2) + (pi[1] - pj[1]).powi(2);
+                    (-d2 / 2.0).exp()
+                };
+                // f32 expanded-form distances near large ||x||^2 lose ~1e-5
+                assert!((a.row(i)[j] - want).abs() < 2e-4, "A[{i},{j}]");
+            }
+        }
+        // symmetric, nonnegative, deg consistent
+        for i in 0..4 {
+            let sum: f64 = a.row(i).iter().map(|&v| v as f64).sum();
+            assert!((sum - a.deg[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn weights_scale_entries() {
+        let (pts, dim) = toy_points();
+        let w1 = vec![1.0f32; 4];
+        let w2 = vec![2.0f32, 3.0, 1.0, 1.0];
+        let a1 = build(&pts, dim, &w1, 1.0);
+        let a2 = build(&pts, dim, &w2, 1.0);
+        assert!((a2.row(0)[1] - 6.0 * a1.row(0)[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalized_matvec_top_eigvec_is_sqrt_deg() {
+        // M (D^{1/2} 1) = D^{-1/2} A 1 = D^{-1/2} d = D^{1/2} 1 — exact
+        let (pts, dim) = toy_points();
+        let w = vec![1.0f32; 4];
+        let a = build(&pts, dim, &w, 2.0);
+        let x: Vec<f64> = a.deg.iter().map(|d| d.sqrt()).collect();
+        let mut y = vec![0.0; 4];
+        a.normalized_matvec(&x, &mut y);
+        for i in 0..4 {
+            assert!((y[i] - x[i]).abs() < 1e-9, "{} vs {}", y[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn submatrix_consistent() {
+        let (pts, dim) = toy_points();
+        let w = vec![1.0f32; 4];
+        let a = build(&pts, dim, &w, 1.0);
+        let sub = a.submatrix(&[1, 3]);
+        assert_eq!(sub.n, 2);
+        assert!((sub.row(0)[1] - a.row(1)[3]).abs() < 1e-9);
+        assert_eq!(sub.row(0)[0], 0.0);
+    }
+
+    #[test]
+    fn cut_value_counts_cross_edges() {
+        let (pts, dim) = toy_points();
+        let w = vec![1.0f32; 4];
+        let a = build(&pts, dim, &w, 5.0);
+        let cut = a.cut_value(&[true, true, false, false]);
+        let manual = a.row(0)[2] as f64 + a.row(0)[3] as f64 + a.row(1)[2] as f64 + a.row(1)[3] as f64;
+        assert!((cut - manual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_distance_sane() {
+        let (pts, dim) = toy_points();
+        let mut rng = Rng::new(1);
+        let med = median_distance(&pts, dim, 100, &mut rng);
+        // pairwise distances: {0.1, 0.1, ~14.14 ×4} — median is ~14.1
+        assert!(med > 1.0 && med < 20.0, "{med}");
+    }
+
+    #[test]
+    fn median_distance_degenerate_is_one() {
+        let pts = vec![1.0f32; 10];
+        let mut rng = Rng::new(2);
+        assert_eq!(median_distance(&pts, 1, 100, &mut rng), 1.0);
+    }
+}

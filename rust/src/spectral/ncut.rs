@@ -1,0 +1,264 @@
+//! Recursive normalized cuts (Shi–Malik) — the paper's spectral algorithm.
+//!
+//! Each bipartition: second-largest eigenvector of `M = D^{-1/2} A D^{-1/2}`
+//! (via Lanczos on the mat-vec), mapped back through `D^{-1/2}` to the
+//! relaxed indicator, then the discrete split is recovered by an O(n²)
+//! *sweep*: vertices sorted by indicator value, every prefix split scored
+//! with the exact ncut objective `cut/assoc(A) + cut/assoc(B)` maintained
+//! incrementally. Recursion greedily splits whichever current cluster has
+//! the cheapest best split until `k` clusters exist (the paper recurses on
+//! each bipartition the same way).
+
+use crate::linalg::eigen::lanczos_topk;
+use crate::rng::Rng;
+
+use super::affinity::Affinity;
+
+/// Result of scoring one cluster's best bipartition.
+struct SplitPlan {
+    /// ncut objective of the best split (lower = better).
+    score: f64,
+    /// Membership (true = side A) in cluster-local indexing.
+    side_a: Vec<bool>,
+}
+
+/// Best ncut bipartition of `aff` by eigenvector sweep. Returns `None` for
+/// clusters too small or too disconnected to split meaningfully.
+fn best_bipartition(aff: &Affinity, rng: &mut Rng) -> Option<SplitPlan> {
+    let n = aff.n;
+    if n < 2 {
+        return None;
+    }
+    let total_deg: f64 = aff.deg.iter().sum();
+    if total_deg <= 1e-300 {
+        // no edges: arbitrary halving (keeps recursion finite)
+        let side_a: Vec<bool> = (0..n).map(|i| i < n / 2).collect();
+        return Some(SplitPlan { score: 0.0, side_a });
+    }
+
+    // v2 of M via Lanczos (top-2; v1 ≈ D^{1/2}·1). The Krylov budget is
+    // generous: clusterable graphs have λ2 ≈ 1 nearly degenerate with λ1
+    // and close to λ3, which slows Ritz separation — under-iterating mixes
+    // v3 into v2 and scrambles the sweep order.
+    let iters = (8 * ((n as f64).ln().ceil() as usize) + 80).min(n);
+    let (_evals, vecs) =
+        lanczos_topk(n, |x, y| aff.normalized_matvec(x, y), 2, iters, 1e-10, rng);
+    if vecs.len() < 2 {
+        return None;
+    }
+    // relaxed indicator u = D^{-1/2} v2
+    let u: Vec<f64> = vecs[1]
+        .iter()
+        .zip(&aff.deg)
+        .map(|(v, d)| if *d > 1e-300 { v / d.sqrt() } else { 0.0 })
+        .collect();
+
+    // sweep over prefix splits in u-order
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| u[a].partial_cmp(&u[b]).unwrap());
+
+    let mut in_a = vec![false; n];
+    let mut assoc_a = 0.0f64;
+    let mut cut = 0.0f64;
+    let mut best: Option<(f64, usize)> = None;
+
+    for (prefix, &v) in order.iter().enumerate().take(n - 1) {
+        // move v from B to A: cut gains v→B edges, loses v→A edges
+        let row = aff.row(v);
+        let mut to_a = 0.0f64;
+        for (j, &w) in row.iter().enumerate() {
+            if in_a[j] {
+                to_a += w as f64;
+            }
+        }
+        let row_sum = aff.deg[v];
+        let to_b = row_sum - to_a; // includes nothing for self (A[v,v]=0)
+        cut += to_b - to_a;
+        in_a[v] = true;
+        assoc_a += row_sum;
+        let assoc_b = total_deg - assoc_a;
+        if assoc_a <= 1e-300 || assoc_b <= 1e-300 {
+            continue;
+        }
+        let score = cut / assoc_a + cut / assoc_b;
+        if best.is_none_or(|(s, _)| score < s) {
+            best = Some((score, prefix));
+        }
+    }
+
+    let (score, prefix) = best?;
+    let mut side_a = vec![false; n];
+    for &v in order.iter().take(prefix + 1) {
+        side_a[v] = true;
+    }
+    Some(SplitPlan { score, side_a })
+}
+
+/// Cluster the graph into `k` groups by recursive normalized cuts.
+/// Returns one label per vertex (0..k', k' ≤ k — fewer if the graph cannot
+/// be split further).
+pub fn recursive_ncut(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<u16> {
+    assert!(k >= 1);
+    let n = aff.n;
+    let mut labels = vec![0u16; n];
+    if k == 1 || n <= 1 {
+        return labels;
+    }
+
+    // clusters as (global index lists, cached best split)
+    struct Cluster {
+        members: Vec<usize>,
+        plan: Option<SplitPlan>,
+    }
+
+    let plan_for = |members: &[usize], rng: &mut Rng| -> Option<SplitPlan> {
+        if members.len() < 2 {
+            return None;
+        }
+        let sub = aff.submatrix(members);
+        best_bipartition(&sub, rng)
+    };
+
+    let all: Vec<usize> = (0..n).collect();
+    let first_plan = plan_for(&all, rng);
+    let mut clusters = vec![Cluster { members: all, plan: first_plan }];
+
+    while clusters.len() < k {
+        // pick the cluster whose best split has the lowest ncut score
+        let Some((ci, _)) = clusters
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.plan.as_ref().map(|p| (i, p.score)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        else {
+            break; // nothing splittable left
+        };
+        let cluster = clusters.swap_remove(ci);
+        let plan = cluster.plan.unwrap();
+        let mut a_members = Vec::new();
+        let mut b_members = Vec::new();
+        for (local, &g) in cluster.members.iter().enumerate() {
+            if plan.side_a[local] {
+                a_members.push(g);
+            } else {
+                b_members.push(g);
+            }
+        }
+        debug_assert!(!a_members.is_empty() && !b_members.is_empty());
+        let a_plan = plan_for(&a_members, rng);
+        let b_plan = plan_for(&b_members, rng);
+        clusters.push(Cluster { members: a_members, plan: a_plan });
+        clusters.push(Cluster { members: b_members, plan: b_plan });
+    }
+
+    for (label, cluster) in clusters.iter().enumerate() {
+        for &g in &cluster.members {
+            labels[g] = label as u16;
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spectral::affinity;
+
+    /// blobs at given centers, m points each, tight spread
+    fn blob_points(centers: &[(f32, f32)], m: usize, spread: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::with_capacity(centers.len() * m * 2);
+        for &(cx, cy) in centers {
+            for _ in 0..m {
+                pts.push(cx + rng.normal_f32(0.0, spread));
+                pts.push(cy + rng.normal_f32(0.0, spread));
+            }
+        }
+        pts
+    }
+
+    fn purity(labels: &[u16], m: usize, k: usize) -> f64 {
+        let truth: Vec<u16> =
+            (0..k).flat_map(|c| std::iter::repeat_n(c as u16, m)).collect();
+        crate::metrics::clustering_accuracy(&truth, labels)
+    }
+
+    #[test]
+    fn two_blobs_split_perfectly() {
+        let pts = blob_points(&[(0.0, 0.0), (10.0, 0.0)], 60, 0.4, 1);
+        let w = vec![1.0f32; 120];
+        let aff = affinity::build(&pts, 2, &w, 1.5);
+        let mut rng = Rng::new(2);
+        let labels = recursive_ncut(&aff, 2, &mut rng);
+        assert_eq!(purity(&labels, 60, 2), 1.0);
+    }
+
+    #[test]
+    fn four_blobs_recursive() {
+        let pts =
+            blob_points(&[(0.0, 0.0), (12.0, 0.0), (0.0, 12.0), (12.0, 12.0)], 40, 0.5, 3);
+        let w = vec![1.0f32; 160];
+        let aff = affinity::build(&pts, 2, &w, 1.5);
+        let mut rng = Rng::new(4);
+        let labels = recursive_ncut(&aff, 4, &mut rng);
+        let acc = purity(&labels, 40, 4);
+        assert!(acc > 0.99, "accuracy {acc}");
+    }
+
+    #[test]
+    fn k_one_is_trivial() {
+        let pts = blob_points(&[(0.0, 0.0)], 10, 0.5, 5);
+        let aff = affinity::build(&pts, 2, &[1.0; 10], 1.0);
+        let mut rng = Rng::new(6);
+        let labels = recursive_ncut(&aff, 1, &mut rng);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn more_clusters_than_points_saturates() {
+        let pts = blob_points(&[(0.0, 0.0), (5.0, 5.0)], 2, 0.1, 7);
+        let aff = affinity::build(&pts, 2, &[1.0; 4], 1.0);
+        let mut rng = Rng::new(8);
+        let labels = recursive_ncut(&aff, 10, &mut rng);
+        let distinct: std::collections::HashSet<u16> = labels.iter().copied().collect();
+        assert!(distinct.len() <= 4);
+    }
+
+    #[test]
+    fn nonconvex_rings_beat_naive_distance() {
+        // inner tight ring + outer ring: spectral separates by connectivity
+        let mut pts = Vec::new();
+        let mut rng = Rng::new(9);
+        let n_ring = 80;
+        for i in 0..n_ring {
+            let th = i as f64 / n_ring as f64 * std::f64::consts::TAU;
+            pts.push((1.0 * th.cos()) as f32 + rng.normal_f32(0.0, 0.05));
+            pts.push((1.0 * th.sin()) as f32 + rng.normal_f32(0.0, 0.05));
+        }
+        for i in 0..n_ring {
+            let th = i as f64 / n_ring as f64 * std::f64::consts::TAU;
+            pts.push((5.0 * th.cos()) as f32 + rng.normal_f32(0.0, 0.05));
+            pts.push((5.0 * th.sin()) as f32 + rng.normal_f32(0.0, 0.05));
+        }
+        let aff = affinity::build(&pts, 2, &vec![1.0; 2 * n_ring], 0.5);
+        let mut rng2 = Rng::new(10);
+        let labels = recursive_ncut(&aff, 2, &mut rng2);
+        let acc = purity(&labels, n_ring, 2);
+        assert!(acc > 0.95, "ring separation accuracy {acc}");
+    }
+
+    #[test]
+    fn weighted_codewords_respected() {
+        // two heavy codewords near origin vs many light ones far away:
+        // weights change degrees but splitting must still follow geometry
+        let pts = blob_points(&[(0.0, 0.0), (20.0, 0.0)], 30, 0.3, 11);
+        let mut w = vec![1.0f32; 60];
+        for slot in w.iter_mut().take(30) {
+            *slot = 50.0;
+        }
+        let aff = affinity::build(&pts, 2, &w, 2.0);
+        let mut rng = Rng::new(12);
+        let labels = recursive_ncut(&aff, 2, &mut rng);
+        assert_eq!(purity(&labels, 30, 2), 1.0);
+    }
+}

@@ -1,0 +1,266 @@
+//! NJW (Ng–Jordan–Weiss) spectral clustering: top-K eigenvectors of the
+//! normalized affinity, row-normalized, then K-means in embedding space.
+//!
+//! This is the algorithmic shape of the AOT path: the XLA artifact computes
+//! the same embedding (Layer 2's `spectral_embedding`), and
+//! [`labels_from_embedding`] finishes the job identically for both
+//! backends, so native-vs-XLA parity tests compare end labels directly.
+
+use crate::linalg::eigen::lanczos_topk;
+use crate::rng::Rng;
+
+use super::affinity::Affinity;
+
+/// Compute the `k`-column spectral embedding of `aff` natively (Lanczos).
+/// Rows are the codeword coordinates in spectral space, **not yet**
+/// row-normalized. Column order: decreasing eigenvalue.
+pub fn embed(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = aff.n;
+    let iters = (4 * ((n as f64).ln().ceil() as usize) + 60).min(n.max(k + 2));
+    let (_evals, vecs) =
+        lanczos_topk(n, |x, y| aff.normalized_matvec(x, y), k, iters, 1e-10, rng);
+    let mut embedding = vec![0.0f64; n * k];
+    for (j, v) in vecs.iter().enumerate() {
+        for i in 0..n {
+            embedding[i * k + j] = v[i];
+        }
+    }
+    embedding
+}
+
+/// Top-(k+1) eigenvalues of the normalized affinity (for eigengap-based
+/// bandwidth search).
+pub fn top_eigenvalues(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = aff.n;
+    let want = (k + 1).min(n);
+    let iters = (4 * ((n as f64).ln().ceil() as usize) + 60).min(n.max(want + 2));
+    let (evals, _) =
+        lanczos_topk(n, |x, y| aff.normalized_matvec(x, y), want, iters, 1e-10, rng);
+    evals
+}
+
+/// NJW step 4–5: row-normalize the embedding and K-means it into
+/// `k_clusters` groups (multiple restarts, best inertia wins).
+///
+/// `embedding` is `n × k_cols` row-major; callers may pass more columns
+/// than clusters (the AOT artifact always returns 8) — only the first
+/// `k_clusters.max(2)` columns are used, mirroring NJW's prescription.
+pub fn labels_from_embedding(
+    embedding: &[f64],
+    n: usize,
+    k_cols: usize,
+    k_clusters: usize,
+    rng: &mut Rng,
+) -> Vec<u16> {
+    assert_eq!(embedding.len(), n * k_cols);
+    if n == 0 {
+        return vec![];
+    }
+    let use_cols = k_clusters.clamp(2, k_cols);
+
+    // row-normalize the first `use_cols` columns
+    let mut rows = vec![0.0f64; n * use_cols];
+    for i in 0..n {
+        let src = &embedding[i * k_cols..i * k_cols + use_cols];
+        let norm = src.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let dst = &mut rows[i * use_cols..(i + 1) * use_cols];
+        if norm > 1e-300 {
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d = s / norm;
+            }
+        }
+    }
+
+    kmeans_rows(&rows, n, use_cols, k_clusters, 8, 60, rng)
+}
+
+/// Small dense K-means on f64 rows (Lloyd, k-means++ seeding, restarts).
+/// Embedding problems are tiny (n ≤ a few thousand, d ≤ 8), so this stays
+/// single-threaded and simple.
+pub fn kmeans_rows(
+    rows: &[f64],
+    n: usize,
+    d: usize,
+    k: usize,
+    restarts: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> Vec<u16> {
+    assert_eq!(rows.len(), n * d);
+    let k = k.min(n).max(1);
+    let mut best_labels = vec![0u16; n];
+    let mut best_inertia = f64::INFINITY;
+
+    for _restart in 0..restarts.max(1) {
+        // k-means++ seeding
+        let mut centroids = Vec::with_capacity(k * d);
+        let first = rng.index(n);
+        centroids.extend_from_slice(&rows[first * d..(first + 1) * d]);
+        let mut best_d2: Vec<f64> = (0..n).map(|i| sq(&rows[i * d..(i + 1) * d], &centroids[..d])).collect();
+        while centroids.len() < k * d {
+            let total: f64 = best_d2.iter().sum();
+            let pick = if total <= 1e-30 {
+                rng.index(n)
+            } else {
+                let mut u = rng.f64() * total;
+                let mut pick = n - 1;
+                for (i, &v) in best_d2.iter().enumerate() {
+                    u -= v;
+                    if u <= 0.0 {
+                        pick = i;
+                        break;
+                    }
+                }
+                pick
+            };
+            let s = centroids.len();
+            centroids.extend_from_slice(&rows[pick * d..(pick + 1) * d]);
+            let c_new = centroids[s..s + d].to_vec();
+            for i in 0..n {
+                let v = sq(&rows[i * d..(i + 1) * d], &c_new);
+                if v < best_d2[i] {
+                    best_d2[i] = v;
+                }
+            }
+        }
+
+        let mut labels = vec![0u16; n];
+        let mut inertia = f64::INFINITY;
+        for _it in 0..iters {
+            // assign
+            let mut new_inertia = 0.0;
+            for i in 0..n {
+                let p = &rows[i * d..(i + 1) * d];
+                let mut bl = 0u16;
+                let mut bd = f64::INFINITY;
+                for c in 0..k {
+                    let v = sq(p, &centroids[c * d..(c + 1) * d]);
+                    if v < bd {
+                        bd = v;
+                        bl = c as u16;
+                    }
+                }
+                labels[i] = bl;
+                new_inertia += bd;
+            }
+            // update
+            let mut sums = vec![0.0f64; k * d];
+            let mut counts = vec![0usize; k];
+            for i in 0..n {
+                let c = labels[i] as usize;
+                counts[c] += 1;
+                for j in 0..d {
+                    sums[c * d + j] += rows[i * d + j];
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    continue;
+                }
+                for j in 0..d {
+                    centroids[c * d + j] = sums[c * d + j] / counts[c] as f64;
+                }
+            }
+            if (inertia - new_inertia).abs() <= 1e-12 * inertia.max(1e-300) {
+                inertia = new_inertia;
+                break;
+            }
+            inertia = new_inertia;
+        }
+        if inertia < best_inertia {
+            best_inertia = inertia;
+            best_labels = labels;
+        }
+    }
+    best_labels
+}
+
+#[inline]
+fn sq(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spectral::affinity;
+
+    fn blob_points(centers: &[(f32, f32)], m: usize, spread: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::with_capacity(centers.len() * m * 2);
+        for &(cx, cy) in centers {
+            for _ in 0..m {
+                pts.push(cx + rng.normal_f32(0.0, spread));
+                pts.push(cy + rng.normal_f32(0.0, spread));
+            }
+        }
+        pts
+    }
+
+    fn purity(labels: &[u16], m: usize, k: usize) -> f64 {
+        let truth: Vec<u16> =
+            (0..k).flat_map(|c| std::iter::repeat_n(c as u16, m)).collect();
+        crate::metrics::clustering_accuracy(&truth, labels)
+    }
+
+    #[test]
+    fn njw_separates_four_blobs() {
+        let pts =
+            blob_points(&[(0.0, 0.0), (12.0, 0.0), (0.0, 12.0), (12.0, 12.0)], 50, 0.5, 21);
+        let aff = affinity::build(&pts, 2, &vec![1.0; 200], 1.5);
+        let mut rng = Rng::new(22);
+        let emb = embed(&aff, 4, &mut rng);
+        let labels = labels_from_embedding(&emb, 200, 4, 4, &mut rng);
+        let acc = purity(&labels, 50, 4);
+        assert!(acc > 0.99, "accuracy {acc}");
+    }
+
+    #[test]
+    fn embedding_columns_orthonormal() {
+        let pts = blob_points(&[(0.0, 0.0), (8.0, 0.0)], 40, 0.5, 23);
+        let aff = affinity::build(&pts, 2, &vec![1.0; 80], 1.5);
+        let mut rng = Rng::new(24);
+        let emb = embed(&aff, 3, &mut rng);
+        for a in 0..3 {
+            for b in 0..3 {
+                let dot: f64 = (0..80).map(|i| emb[i * 3 + a] * emb[i * 3 + b]).sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-6, "col {a}·{b} = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_eigenvalue_is_one() {
+        let pts = blob_points(&[(0.0, 0.0), (9.0, 0.0)], 30, 0.4, 25);
+        let aff = affinity::build(&pts, 2, &vec![1.0; 60], 1.0);
+        let mut rng = Rng::new(26);
+        let evals = top_eigenvalues(&aff, 2, &mut rng);
+        assert!((evals[0] - 1.0).abs() < 1e-8, "λ1 = {}", evals[0]);
+        assert!(evals[1] <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn kmeans_rows_exact_on_trivial() {
+        // 3 well-separated 1-D groups
+        let rows: Vec<f64> = vec![0.0, 0.1, 0.05, 10.0, 10.1, 9.9, 20.0, 20.1, 19.95];
+        let mut rng = Rng::new(27);
+        let labels = kmeans_rows(&rows, 9, 1, 3, 4, 50, &mut rng);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[0], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[3]);
+        assert_ne!(labels[3], labels[6]);
+    }
+
+    #[test]
+    fn labels_from_embedding_handles_extra_columns() {
+        // 8-col embedding (the artifact width) with 2 clusters
+        let pts = blob_points(&[(0.0, 0.0), (15.0, 0.0)], 30, 0.4, 28);
+        let aff = affinity::build(&pts, 2, &vec![1.0; 60], 1.5);
+        let mut rng = Rng::new(29);
+        let emb = embed(&aff, 8, &mut rng);
+        let labels = labels_from_embedding(&emb, 60, 8, 2, &mut rng);
+        assert_eq!(purity(&labels, 30, 2), 1.0);
+    }
+}

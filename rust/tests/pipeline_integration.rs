@@ -1,0 +1,249 @@
+//! Cross-module integration: the paper's central claims on small inputs.
+//!
+//! These are the "does the system reproduce the paper's *shape*" tests:
+//! distributed ≈ non-distributed accuracy across D1/D2/D3, both DMLs, all
+//! backends; communication stays tiny; multi-site runs stay consistent.
+
+use dsc::config::{Backend, PipelineConfig};
+use dsc::coordinator::run_pipeline;
+use dsc::data::scenario::{self, Scenario};
+use dsc::data::{gmm, iris, uci_proxy};
+use dsc::dml::DmlKind;
+use dsc::spectral::{Algo, Bandwidth};
+
+fn nondistributed(ds: &dsc::data::Dataset) -> Vec<scenario::SitePart> {
+    vec![scenario::SitePart {
+        site_id: 0,
+        data: ds.clone(),
+        global_idx: (0..ds.len() as u32).collect(),
+    }]
+}
+
+fn cfg_for(k: usize, codes: usize, seed: u64) -> PipelineConfig {
+    PipelineConfig {
+        total_codes: codes,
+        k_clusters: k,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The paper's core claim, miniaturized: on the 10-D mixture, the
+/// distributed accuracy is within a small gap of non-distributed for every
+/// scenario and both DMLs.
+#[test]
+fn distributed_matches_nondistributed_10d_mixture() {
+    let ds = gmm::paper_mixture_10d(8_000, 0.3, 41);
+    let k = 4;
+    let codes = 200; // 40:1, the paper's ratio
+
+    // rpTrees codewords are coarser at equal compression, so their floor is
+    // lower — exactly the Fig. 6 vs Fig. 7 relationship in the paper.
+    for (dml, floor) in [(DmlKind::KMeans, 0.75), (DmlKind::RpTree, 0.68)] {
+        let mut cfg = cfg_for(k, codes, 5);
+        cfg.dml = dml;
+        let base = run_pipeline(&nondistributed(&ds), &cfg).unwrap();
+        assert!(base.accuracy > floor, "{dml}: baseline accuracy {}", base.accuracy);
+
+        for sc in [Scenario::D1, Scenario::D2, Scenario::D3] {
+            let parts = scenario::split(&ds, sc, 2, 13);
+            let dist = run_pipeline(&parts, &cfg).unwrap();
+            let gap = base.accuracy - dist.accuracy;
+            assert!(
+                gap < 0.08,
+                "{dml} {sc}: distributed {:.4} vs baseline {:.4}",
+                dist.accuracy,
+                base.accuracy
+            );
+        }
+    }
+}
+
+#[test]
+fn communication_is_codewords_only() {
+    let ds = gmm::paper_mixture_10d(8_000, 0.3, 43);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 17);
+    let cfg = cfg_for(4, 200, 7);
+    let report = run_pipeline(&parts, &cfg).unwrap();
+
+    // wire bytes ≈ codewords (f32·dim + u32 weight) + label frames + headers
+    let payload = report.n_codes as u64 * (10 * 4 + 4);
+    assert!(report.net.total_bytes() >= payload);
+    assert!(
+        report.net.total_bytes() < payload + 4096,
+        "unexpected wire overhead: {} vs payload {payload}",
+        report.net.total_bytes()
+    );
+    // compression ratio ~ dataset_bytes / codeword_bytes (≫ 10×)
+    assert!(report.full_data_bytes > 20 * report.net.total_bytes());
+}
+
+#[test]
+fn all_backends_agree_on_easy_data() {
+    let comps = vec![
+        gmm::Component::isotropic(vec![0.0, 0.0, 0.0], 0.5, 1.0),
+        gmm::Component::isotropic(vec![10.0, 0.0, 0.0], 0.5, 1.0),
+        gmm::Component::isotropic(vec![0.0, 10.0, 0.0], 0.5, 1.0),
+    ];
+    let ds = gmm::sample("3blobs", &comps, 3_000, 47);
+    let parts = scenario::split(&ds, Scenario::D2, 2, 19);
+
+    let has_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let backends: &[Backend] = if has_artifacts {
+        &[Backend::Native, Backend::Xla, Backend::XlaFull]
+    } else {
+        eprintln!("SKIP xla backends: artifacts missing");
+        &[Backend::Native]
+    };
+    for &backend in backends {
+        let cfg = PipelineConfig { backend, ..cfg_for(3, 96, 11) };
+        let report = run_pipeline(&parts, &cfg).unwrap();
+        assert!(
+            report.accuracy > 0.99,
+            "{backend:?}: accuracy {}",
+            report.accuracy
+        );
+    }
+}
+
+#[test]
+fn iris_end_to_end() {
+    // the real-data pocket test: 150 points, 2 sites, 3 clusters
+    let ds = iris::load();
+    let parts = scenario::split(&ds, Scenario::D3, 2, 3);
+    let cfg = PipelineConfig {
+        total_codes: 40,
+        k_clusters: 3,
+        algo: Algo::Njw,
+        bandwidth: Bandwidth::EigengapSearch { k: 3 },
+        seed: 5,
+        ..Default::default()
+    };
+    let report = run_pipeline(&parts, &cfg).unwrap();
+    // spectral clustering of iris typically lands 0.83–0.97 depending on σ
+    assert!(report.accuracy > 0.80, "iris accuracy {}", report.accuracy);
+}
+
+#[test]
+fn multisite_accuracy_stays_flat() {
+    // Table 6's shape: more sites must not degrade accuracy materially
+    let spec = uci_proxy::by_name("hepmass").unwrap();
+    let ds = spec.generate(8_000, 51);
+    let mut cfg = cfg_for(2, 300, 13);
+    cfg.bandwidth = Bandwidth::MedianScale(0.75);
+
+    let base = run_pipeline(&nondistributed(&ds), &cfg).unwrap();
+    for sites in [2, 3, 4] {
+        let parts = scenario::split(&ds, Scenario::D2, sites, 23);
+        let report = run_pipeline(&parts, &cfg).unwrap();
+        assert!(
+            (base.accuracy - report.accuracy).abs() < 0.08,
+            "{sites} sites: {:.4} vs base {:.4}",
+            report.accuracy,
+            base.accuracy
+        );
+        assert_eq!(report.site_dml.len(), sites);
+    }
+}
+
+#[test]
+fn elapsed_model_components_add_up() {
+    let ds = gmm::paper_mixture_10d(4_000, 0.1, 53);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 29);
+    let cfg = cfg_for(4, 128, 17);
+    let r = run_pipeline(&parts, &cfg).unwrap();
+    let max_dml = r.site_dml.iter().copied().max().unwrap();
+    assert_eq!(r.elapsed_model, max_dml + r.central + r.populate);
+    // modeled elapsed uses max-over-sites, so it is ≤ wall + slack and
+    // strictly less than the sum of all site timings for 2+ busy sites
+    let sum_dml: std::time::Duration = r.site_dml.iter().sum();
+    assert!(sum_dml >= max_dml);
+}
+
+#[test]
+fn weighted_affinity_ablation_runs() {
+    let ds = gmm::paper_mixture_10d(4_000, 0.3, 59);
+    let parts = scenario::split(&ds, Scenario::D1, 2, 31);
+    let mut cfg = cfg_for(4, 128, 19);
+    cfg.weighted_affinity = true;
+    let report = run_pipeline(&parts, &cfg).unwrap();
+    assert!(report.accuracy > 0.70, "weighted accuracy {}", report.accuracy);
+}
+
+#[test]
+fn uci_proxy_two_class_rows_behave() {
+    // one easy (skinseg) and one hard (hepmass) Table-3 row, miniaturized
+    for (name, floor) in [("skinseg", 0.90), ("hepmass", 0.70)] {
+        let spec = uci_proxy::by_name(name).unwrap();
+        let ds = spec.generate(6_000, 61);
+        let codes = spec.target_codewords().min(400);
+        let mut cfg = cfg_for(spec.n_classes, codes, 23);
+        cfg.bandwidth = Bandwidth::MedianScale(0.75);
+        let base = run_pipeline(&nondistributed(&ds), &cfg).unwrap();
+        let parts = scenario::split(&ds, Scenario::D2, 2, 37);
+        let dist = run_pipeline(&parts, &cfg).unwrap();
+        assert!(base.accuracy > floor, "{name} base {:.4}", base.accuracy);
+        assert!(
+            (base.accuracy - dist.accuracy).abs() < 0.08,
+            "{name}: dist {:.4} vs base {:.4}",
+            dist.accuracy,
+            base.accuracy
+        );
+    }
+}
+
+#[test]
+fn random_sample_baseline_works_but_quantizes_worse() {
+    // A6: at the same communication budget, random landmarks still cluster
+    // easy data, but with strictly worse quantization distortion.
+    let ds = gmm::paper_mixture_10d(6_000, 0.3, 71);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 41);
+
+    let mut cfg = cfg_for(4, 150, 29);
+    cfg.dml = DmlKind::RandomSample;
+    let sample_run = run_pipeline(&parts, &cfg).unwrap();
+    cfg.dml = DmlKind::KMeans;
+    let kmeans_run = run_pipeline(&parts, &cfg).unwrap();
+
+    assert!(sample_run.accuracy > 0.70, "sample accuracy {}", sample_run.accuracy);
+    for s in 0..2 {
+        assert!(
+            sample_run.site_distortion[s] > kmeans_run.site_distortion[s],
+            "site {s}: sampling should quantize worse than Lloyd"
+        );
+    }
+}
+
+#[test]
+fn dead_site_times_out_cleanly() {
+    // failure injection: one site crashes before reporting; the leader must
+    // return an error naming it within the collect timeout — and not hang.
+    let ds = gmm::paper_mixture_10d(2_000, 0.3, 73);
+    let parts = scenario::split(&ds, Scenario::D3, 3, 43);
+    let cfg = PipelineConfig {
+        total_codes: 64,
+        k_clusters: 4,
+        collect_timeout: std::time::Duration::from_millis(2_500),
+        inject_site_failure: Some(1),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let err = run_pipeline(&parts, &cfg).expect_err("must fail");
+    assert!(t0.elapsed() < std::time::Duration::from_secs(30), "did not time out promptly");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("[1]"), "error should name the dead site: {msg}");
+}
+
+#[test]
+fn all_sites_healthy_ignores_timeout_knob() {
+    let ds = gmm::paper_mixture_10d(1_500, 0.3, 79);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 47);
+    let cfg = PipelineConfig {
+        total_codes: 48,
+        k_clusters: 4,
+        collect_timeout: std::time::Duration::from_secs(120),
+        ..Default::default()
+    };
+    assert!(run_pipeline(&parts, &cfg).is_ok());
+}

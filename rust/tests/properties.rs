@@ -1,0 +1,334 @@
+//! Property-based invariants across the whole stack (DESIGN.md §6),
+//! using the in-crate `prop` harness.
+
+use dsc::data::scenario::{self, Scenario};
+use dsc::data::{gmm, Dataset};
+use dsc::dml::{self, DmlKind, DmlParams};
+use dsc::metrics::{adjusted_rand_index, clustering_accuracy, hungarian_max};
+use dsc::prop::{forall, Gen};
+use dsc::spectral::affinity;
+
+fn random_dataset(g: &mut Gen, max_n: usize) -> Dataset {
+    let n_classes = g.usize_in(1, 4);
+    let dim = g.usize_in(1, 6);
+    let n = g.usize_in(n_classes, max_n);
+    let mut ds = Dataset::new("prop", dim, n_classes);
+    for _ in 0..n {
+        let label = g.usize_in(0, n_classes - 1) as u16;
+        let coords = g.vec_f32(dim, -5.0, 5.0);
+        ds.push(&coords, label);
+    }
+    ds
+}
+
+// ───────────────────────────── scenario splits ─────────────────────────────
+
+#[test]
+fn prop_splits_partition_the_data() {
+    forall("splits conserve and never duplicate points", 40, 101, |g| {
+        let ds = random_dataset(g, 400);
+        let n_sites = g.usize_in(2, 4);
+        let sc = [Scenario::D1, Scenario::D2, Scenario::D3][g.usize_in(0, 2)];
+        let seed = g.rng().next_u64();
+        let parts = scenario::split(&ds, sc, n_sites, seed);
+
+        let total: usize = parts.iter().map(|p| p.data.len()).sum();
+        if total != ds.len() {
+            return Err(format!("{sc} lost points: {total} vs {}", ds.len()));
+        }
+        let mut seen = vec![false; ds.len()];
+        for p in &parts {
+            for (local, &g_idx) in p.global_idx.iter().enumerate() {
+                if seen[g_idx as usize] {
+                    return Err(format!("point {g_idx} duplicated"));
+                }
+                seen[g_idx as usize] = true;
+                if p.data.point(local) != ds.point(g_idx as usize) {
+                    return Err(format!("coords corrupted for {g_idx}"));
+                }
+                if p.data.labels[local] != ds.labels[g_idx as usize] {
+                    return Err(format!("label corrupted for {g_idx}"));
+                }
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("some points unassigned".into());
+        }
+        Ok(())
+    });
+}
+
+// ───────────────────────────── codebooks ─────────────────────────────
+
+#[test]
+fn prop_codebooks_are_consistent() {
+    forall("codebook weights sum to site size; assignments in range", 25, 202, |g| {
+        let ds = random_dataset(g, 600);
+        let kind = if g.bool(0.5) { DmlKind::KMeans } else { DmlKind::RpTree };
+        let target = g.usize_in(1, 40);
+        let params = DmlParams {
+            kind,
+            target_codes: target,
+            max_iters: 10,
+            tol: 1e-6,
+            seed: g.rng().next_u64(),
+        };
+        let cb = dml::apply(&ds, &params);
+        cb.validate(ds.len()).map_err(|e| format!("{kind}: {e}"))
+    });
+}
+
+#[test]
+fn prop_distortion_bounded_by_data_radius() {
+    forall("quantization distortion ≤ max squared pairwise distance", 20, 203, |g| {
+        let ds = random_dataset(g, 300);
+        if ds.is_empty() {
+            return Ok(());
+        }
+        let params = DmlParams {
+            kind: DmlKind::KMeans,
+            target_codes: g.usize_in(1, 20),
+            max_iters: 8,
+            tol: 1e-6,
+            seed: 1,
+        };
+        let cb = dml::apply(&ds, &params);
+        // coords live in [-5, 5]^dim ⇒ ‖x − q(x)‖² ≤ dim · 10²
+        let bound = (ds.dim as f64) * 100.0;
+        let d = cb.distortion(&ds);
+        if d <= bound {
+            Ok(())
+        } else {
+            Err(format!("distortion {d} exceeds bound {bound}"))
+        }
+    });
+}
+
+// ───────────────────────────── metrics ─────────────────────────────
+
+#[test]
+fn prop_accuracy_is_permutation_invariant() {
+    forall("relabelling predictions never changes accuracy", 60, 304, |g| {
+        let k = g.usize_in(1, 6);
+        let n = g.usize_in(1, 200);
+        let truth = g.labels(n, k);
+        let pred = g.labels(n, k);
+        let perm = g.permutation(k);
+        let permuted: Vec<u16> = pred.iter().map(|&l| perm[l as usize] as u16).collect();
+        let a = clustering_accuracy(&truth, &pred);
+        let b = clustering_accuracy(&truth, &permuted);
+        if (a - b).abs() < 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("{a} vs {b}"))
+        }
+    });
+}
+
+#[test]
+fn prop_accuracy_bounds_and_perfection() {
+    forall("accuracy ∈ [0, 1]; exact on identical labelings", 60, 305, |g| {
+        let k = g.usize_in(1, 6);
+        let n = g.usize_in(1, 200);
+        let truth = g.labels(n, k);
+        let acc_self = clustering_accuracy(&truth, &truth);
+        if acc_self != 1.0 {
+            return Err(format!("self-accuracy {acc_self}"));
+        }
+        let pred = g.labels(n, k);
+        let acc = clustering_accuracy(&truth, &pred);
+        if !(0.0..=1.0).contains(&acc) {
+            return Err(format!("accuracy out of range: {acc}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hungarian_at_least_greedy() {
+    forall("hungarian ≥ greedy row assignment", 60, 306, |g| {
+        let rows = g.usize_in(1, 7);
+        let cols = g.usize_in(1, 7);
+        let profit: Vec<Vec<f64>> = (0..rows)
+            .map(|_| (0..cols).map(|_| g.f64_in(0.0, 100.0)).collect())
+            .collect();
+        let (best, _) = hungarian_max(&profit);
+        // greedy: rows in order take their max still-free column
+        let mut used = vec![false; cols];
+        let mut greedy = 0.0;
+        for row in &profit {
+            let mut pick: Option<(usize, f64)> = None;
+            for (c, &v) in row.iter().enumerate() {
+                if !used[c] && pick.is_none_or(|(_, pv)| v > pv) {
+                    pick = Some((c, v));
+                }
+            }
+            if let Some((c, v)) = pick {
+                used[c] = true;
+                greedy += v;
+            }
+        }
+        if best + 1e-9 >= greedy {
+            Ok(())
+        } else {
+            Err(format!("hungarian {best} < greedy {greedy}"))
+        }
+    });
+}
+
+#[test]
+fn prop_ari_agrees_on_perfect_match() {
+    forall("ARI = 1 on labelings identical up to permutation", 40, 307, |g| {
+        let k = g.usize_in(2, 5);
+        let n = g.usize_in(k * 2, 150);
+        let truth = g.labels(n, k);
+        let perm = g.permutation(k);
+        let relabeled: Vec<u16> = truth.iter().map(|&l| perm[l as usize] as u16).collect();
+        let ari = adjusted_rand_index(&truth, &relabeled);
+        if (ari - 1.0).abs() < 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("ARI {ari}"))
+        }
+    });
+}
+
+// ───────────────────────────── spectral invariants ─────────────────────────────
+
+#[test]
+fn prop_laplacian_spectrum_in_bounds() {
+    // eigenvalues of M = D^{-1/2} A D^{-1/2} lie in [−1, 1]
+    // (⇔ normalized-Laplacian eigenvalues in [0, 2])
+    forall("normalized affinity spectrum ⊂ [−1, 1]", 15, 408, |g| {
+        let n = g.usize_in(8, 60);
+        let dim = g.usize_in(1, 4);
+        let pts = g.vec_f32(n * dim, -3.0, 3.0);
+        let w = vec![1.0f32; n];
+        let sigma = g.f64_in(0.3, 3.0);
+        let aff = affinity::build(&pts, dim, &w, sigma);
+        let mut rng = dsc::rng::Rng::new(g.case as u64);
+        let evals = dsc::spectral::njw::top_eigenvalues(&aff, 4.min(n - 1), &mut rng);
+        for (j, &e) in evals.iter().enumerate() {
+            if !(-1.0 - 1e-6..=1.0 + 1e-6).contains(&e) {
+                return Err(format!("λ{j} = {e} out of [−1,1]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_affinity_symmetric_nonneg_zero_diag() {
+    forall("affinity matrix structure", 25, 409, |g| {
+        let n = g.usize_in(2, 50);
+        let dim = g.usize_in(1, 5);
+        let pts = g.vec_f32(n * dim, -4.0, 4.0);
+        let w: Vec<f32> = (0..n).map(|_| g.usize_in(1, 100) as f32).collect();
+        let sigma = g.f64_in(0.2, 5.0);
+        let aff = affinity::build(&pts, dim, &w, sigma);
+        for i in 0..n {
+            if aff.row(i)[i] != 0.0 {
+                return Err(format!("diag[{i}] = {}", aff.row(i)[i]));
+            }
+            for j in 0..n {
+                let a = aff.row(i)[j];
+                if a < 0.0 {
+                    return Err(format!("negative affinity at ({i},{j})"));
+                }
+                let b = aff.row(j)[i];
+                if (a - b).abs() > 1e-6 * a.abs().max(1.0) {
+                    return Err(format!("asymmetry at ({i},{j}): {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ───────────────────────────── wire codec ─────────────────────────────
+
+#[test]
+fn prop_wire_roundtrip() {
+    use dsc::net::wire::{decode, encode, Message};
+    forall("encode→decode is identity", 60, 510, |g| {
+        let msg = match g.usize_in(0, 3) {
+            0 => {
+                let dim = g.usize_in(1, 8);
+                let n = g.usize_in(0, 50);
+                Message::Codebook {
+                    site: g.usize_in(0, 7) as u32,
+                    dim: dim as u32,
+                    codewords: g.vec_f32(n * dim, -100.0, 100.0),
+                    weights: (0..n).map(|_| g.usize_in(1, 10_000) as u32).collect(),
+                }
+            }
+            1 => {
+                let n = g.usize_in(0, 200);
+                Message::Labels { site: g.usize_in(0, 7) as u32, labels: g.labels(n, 8) }
+            }
+            2 => Message::Sigma(g.f64_in(-10.0, 10.0) as f32),
+            _ => Message::Ack,
+        };
+        let back = decode(&encode(&msg)).map_err(|e| e.to_string())?;
+        if back == msg {
+            Ok(())
+        } else {
+            Err("roundtrip mismatch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_decoder_never_panics_on_corruption() {
+    use dsc::net::wire::{decode, encode, Message};
+    forall("bit-flipped frames error, never panic", 60, 511, |g| {
+        let mut frame = encode(&Message::Codebook {
+            site: 1,
+            dim: 2,
+            codewords: g.vec_f32(8, -1.0, 1.0),
+            weights: vec![3, 4, 5, 6],
+        });
+        // flip a few random bytes / truncate
+        for _ in 0..g.usize_in(1, 4) {
+            let pos = g.usize_in(0, frame.len() - 1);
+            frame[pos] ^= 1 << g.usize_in(0, 7);
+        }
+        if g.bool(0.3) {
+            let cut = g.usize_in(0, frame.len());
+            frame.truncate(cut);
+        }
+        let _ = decode(&frame); // must not panic; Err is fine
+        Ok(())
+    });
+}
+
+// ───────────────────────────── end-to-end invariant ─────────────────────────────
+
+#[test]
+fn prop_pipeline_label_count_and_range() {
+    use dsc::config::PipelineConfig;
+    use dsc::coordinator::run_pipeline;
+    forall("pipeline emits one label per point, in range", 8, 612, |g| {
+        let comps = vec![
+            gmm::Component::isotropic(vec![0.0, 0.0], 0.4, 1.0),
+            gmm::Component::isotropic(vec![8.0, 8.0], 0.4, 1.0),
+        ];
+        let ds = gmm::sample("p", &comps, g.usize_in(200, 1200), g.rng().next_u64());
+        let n_sites = g.usize_in(1, 3).max(2);
+        let parts = scenario::split(&ds, Scenario::D3, n_sites, g.rng().next_u64());
+        let cfg = PipelineConfig {
+            total_codes: g.usize_in(8, 64),
+            k_clusters: 2,
+            seed: g.rng().next_u64(),
+            ..Default::default()
+        };
+        let report = run_pipeline(&parts, &cfg).map_err(|e| e.to_string())?;
+        if report.labels.len() != ds.len() {
+            return Err(format!("{} labels for {} points", report.labels.len(), ds.len()));
+        }
+        if report.labels.iter().any(|&l| l as usize >= cfg.k_clusters) {
+            return Err("label out of range".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,159 @@
+//! PJRT execution tests: load real artifacts, run them, compare against the
+//! native Rust implementations. Requires `make artifacts` to have run
+//! (skipped with a message otherwise, so `cargo test` works on a clean
+//! checkout too).
+
+use dsc::data::gmm;
+use dsc::rng::Rng;
+use dsc::runtime::{default_artifact_dir, XlaRuntime};
+use dsc::spectral::{affinity, njw};
+
+fn runtime_or_skip() -> Option<XlaRuntime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(XlaRuntime::new(dir).expect("runtime init"))
+}
+
+#[test]
+fn embed_artifact_executes_and_is_orthonormal() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = gmm::paper_mixture_2d(200, 3);
+    let w = vec![1.0f32; 200];
+    let out = rt.embed(&ds.points, 2, &w, 1.5).expect("embed");
+    assert_eq!(out.k_cols, 8);
+    assert_eq!(out.evecs.len(), 200 * 8);
+    assert_eq!(out.deg.len(), 200);
+    assert!(out.deg.iter().all(|&d| d > 0.0));
+    // top eigenvalue of M is 1
+    assert!((out.evals[0] - 1.0).abs() < 1e-3, "λ1 = {}", out.evals[0]);
+    // eigenvalues sorted descending
+    for w in out.evals.windows(2) {
+        assert!(w[0] >= w[1] - 1e-5);
+    }
+    // columns orthonormal over the padded domain; on the real rows they
+    // remain near-orthonormal because pad rows are ~zero in the eigvecs
+    for a in 0..8 {
+        let norm: f32 = (0..200).map(|i| out.evecs[i * 8 + a].powi(2)).sum();
+        assert!(norm <= 1.0 + 1e-3, "col {a} norm {norm}");
+    }
+}
+
+#[test]
+fn embed_artifact_matches_native_lanczos() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = gmm::paper_mixture_2d(180, 11);
+    let w = vec![1.0f32; 180];
+    let sigma = 1.2f32;
+
+    let out = rt.embed(&ds.points, 2, &w, sigma).expect("embed");
+
+    // native eigenvalues on the same affinity
+    let aff = affinity::build(&ds.points, 2, &w, sigma as f64);
+    let mut rng = Rng::new(5);
+    let native_evals = njw::top_eigenvalues(&aff, 5, &mut rng);
+    for j in 0..4 {
+        assert!(
+            (out.evals[j] as f64 - native_evals[j]).abs() < 5e-3,
+            "eval {j}: xla {} vs native {}",
+            out.evals[j],
+            native_evals[j]
+        );
+    }
+
+    // native degrees match artifact degrees
+    for i in 0..180 {
+        assert!(
+            (out.deg[i] as f64 - aff.deg[i]).abs() < 1e-2 * aff.deg[i].max(1.0),
+            "deg {i}: {} vs {}",
+            out.deg[i],
+            aff.deg[i]
+        );
+    }
+}
+
+#[test]
+fn embed_then_kmeans_clusters_two_blobs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // two tight blobs; full XLA path: embed → row-normalize → Lloyd steps
+    let mut pts = Vec::new();
+    let mut rng = Rng::new(17);
+    for _ in 0..100 {
+        pts.push(rng.normal_f32(0.0, 0.3));
+        pts.push(rng.normal_f32(0.0, 0.3));
+    }
+    for _ in 0..100 {
+        pts.push(rng.normal_f32(8.0, 0.3));
+        pts.push(rng.normal_f32(0.0, 0.3));
+    }
+    let w = vec![1.0f32; 200];
+    let out = rt.embed(&pts, 2, &w, 1.0).expect("embed");
+
+    // row-normalize first 2 columns into an 8-wide buffer for kstep
+    let n = 200;
+    let kd = out.k_cols;
+    let mut rows = vec![0.0f32; n * kd];
+    for i in 0..n {
+        let src = &out.evecs[i * kd..i * kd + 2];
+        let norm = (src[0] * src[0] + src[1] * src[1]).sqrt().max(1e-12);
+        rows[i * kd] = src[0] / norm;
+        rows[i * kd + 1] = src[1] / norm;
+    }
+    // init centroids from two points known to be in different blobs
+    let mut c = vec![0.0f32; 2 * kd];
+    c[..kd].copy_from_slice(&rows[..kd]);
+    c[kd..].copy_from_slice(&rows[150 * kd..151 * kd]);
+
+    let mut assign = vec![0i32; n];
+    for _ in 0..10 {
+        let (newc, idx, shift, _inertia) =
+            rt.kmeans_step(&rows, kd, &c, 2).expect("kstep");
+        c = newc;
+        assign = idx;
+        if shift < 1e-9 {
+            break;
+        }
+    }
+    let first: Vec<i32> = assign[..100].to_vec();
+    let second: Vec<i32> = assign[100..].to_vec();
+    assert!(first.iter().all(|&l| l == first[0]), "blob 1 split");
+    assert!(second.iter().all(|&l| l == second[0]), "blob 2 split");
+    assert_ne!(first[0], second[0]);
+}
+
+#[test]
+fn executable_cache_reused_across_calls() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = gmm::paper_mixture_2d(50, 23);
+    let w = vec![1.0f32; 50];
+    assert_eq!(rt.cached_executables(), 0);
+    rt.embed(&ds.points, 2, &w, 1.0).unwrap();
+    assert_eq!(rt.cached_executables(), 1);
+    rt.embed(&ds.points, 2, &w, 2.0).unwrap();
+    assert_eq!(rt.cached_executables(), 1, "same bucket must reuse the executable");
+}
+
+#[test]
+fn padding_is_invisible() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // n=150 pads to 256; eigenvalues must match an exact-bucket run of the
+    // same 150 points only (compare against native, which never pads)
+    let ds = gmm::paper_mixture_2d(150, 29);
+    let w = vec![1.0f32; 150];
+    let out = rt.embed(&ds.points, 2, &w, 1.5).expect("embed");
+    assert_eq!(out.bucket, "embed_n256_d4"); // 150×2 rounds up to 256×4
+
+    let aff = affinity::build(&ds.points, 2, &w, 1.5);
+    let mut rng = Rng::new(31);
+    let native = njw::top_eigenvalues(&aff, 4, &mut rng);
+    for j in 0..3 {
+        assert!(
+            (out.evals[j] as f64 - native[j]).abs() < 5e-3,
+            "eval {j}: {} vs {}",
+            out.evals[j],
+            native[j]
+        );
+    }
+}
