@@ -1,0 +1,265 @@
+//! Vendored minimal `anyhow`: the error-handling subset this workspace uses,
+//! implemented with zero dependencies so a clean checkout builds offline.
+//!
+//! Provided surface (API-compatible with the crates.io `anyhow` for these
+//! items):
+//!
+//! * [`Error`] — a context-chained error value. `Display` prints the
+//!   outermost message; the alternate form (`{:#}`) prints the whole chain
+//!   joined by `": "`; `Debug` prints the message followed by a
+//!   `Caused by:` list.
+//! * [`Result`] — `Result<T, Error>` alias with a defaultable error type.
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — `format!`-style constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (for
+//!   any `std::error::Error` and for [`Error`] itself) and on `Option`.
+//! * `?` conversion from any `E: std::error::Error + Send + Sync + 'static`.
+//!
+//! Unlike the real crate there is no backtrace capture and no downcasting —
+//! the source error is flattened into its message chain at conversion time.
+
+use std::fmt;
+
+/// A context-chained error value (outermost context first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Flatten a standard error and its `source()` chain into messages.
+    fn from_std<E: std::error::Error>(error: E) -> Error {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::from_std(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Conversion into [`Error`] for the [`Context`] blanket impl: covers every
+/// standard error *and* `Error` itself (which deliberately does not
+/// implement `std::error::Error`, keeping the two impls coherent — the same
+/// trick the real crate uses).
+mod ext {
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from_std(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to fallible values.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with `context`.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Like [`Context::context`], but the message is built lazily.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(ext::IntoError::into_error(e).context(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(ext::IntoError::into_error(e).context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a `format!`-style message (or any
+/// displayable expression).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: missing thing");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("mid")
+            .context("outer")
+            .unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("mid"));
+        assert!(dbg.contains("missing thing"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "42".parse()?;
+            let _bad: Result<i32> = Err("x".parse::<i32>().unwrap_err().into());
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.context("empty csv").unwrap_err();
+        assert_eq!(e.to_string(), "empty csv");
+        let lazy: Option<u8> = None;
+        let e = lazy.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 3");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(n: usize) -> Result<()> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("exact failure at {}", n);
+            }
+            Err(anyhow!("fell through with n={n}"))
+        }
+        assert_eq!(f(12).unwrap_err().to_string(), "n too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "exact failure at 3");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with n=1");
+    }
+
+    #[test]
+    fn context_on_result_of_error() {
+        // .context must also apply to Result<_, Error> (re-wrapping)
+        let e: Result<()> = Err(anyhow!("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

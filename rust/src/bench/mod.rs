@@ -106,7 +106,7 @@ impl Table {
         let mut out = format!("\n### {}\n\n", self.title);
         let fmt_row = |cells: &[String], widths: &[usize]| -> String {
             let mut line = String::from("|");
-            for (c, w) in cells.iter().zip(widths) {
+            for (c, w) in cells.iter().zip(widths.iter().copied()) {
                 line.push_str(&format!(" {c:<w$} |"));
             }
             line.push('\n');

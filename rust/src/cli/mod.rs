@@ -102,7 +102,7 @@ RUN FLAGS:
   --n N             points to generate (default: dataset-specific)
   --rho R           gmm10d covariance decay (0.1/0.3/0.6; default 0.3)
   --sites S         number of distributed sites (default 2)
-  --scenario D      d1 | d2 | d3 (default d3)
+  --scenario D      d1 | d2 | d3 | d4 (default d3)
   --dml KIND        kmeans | rptrees (default kmeans)
   --codes N         total codeword budget (default: paper's ratio)
   --k K             clusters (default: dataset classes)

@@ -428,7 +428,7 @@ fn xla_kmeans_labels(
                 break;
             }
         }
-        if best.as_ref().is_none_or(|(b, _)| inertia < *b) {
+        if best.as_ref().map_or(true, |(b, _)| inertia < *b) {
             best = Some((inertia, idx));
         }
     }

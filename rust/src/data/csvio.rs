@@ -61,9 +61,20 @@ pub fn load_dataset(path: &Path, name: &str, n_classes_hint: Option<usize>) -> R
     Ok(Dataset { name: name.to_string(), dim, points, labels, n_classes })
 }
 
+/// Create the parent directory of `path` if it does not exist yet (bench
+/// dumps land under `bench_out/` before anything else creates it).
+fn ensure_parent(path: &Path) {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+}
+
 /// Write a dataset as CSV (features…, label). `header` lines are emitted as
 /// `# `-prefixed comments.
 pub fn save_dataset(path: &Path, ds: &Dataset, header: &[&str]) -> Result<()> {
+    ensure_parent(path);
     let file = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(file);
     for h in header {
@@ -86,6 +97,7 @@ pub fn save_dataset(path: &Path, ds: &Dataset, header: &[&str]) -> Result<()> {
 
 /// Write an arbitrary numeric table (bench series dumps for plotting).
 pub fn save_table(path: &Path, header: &[&str], columns: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    ensure_parent(path);
     let file = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(file);
     for h in header {

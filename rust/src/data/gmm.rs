@@ -2,7 +2,7 @@
 //!
 //! §5.1 of the paper uses two mixtures:
 //!
-//! * **Fig. 5** — 2-D, 4 components at μ = (±2, ±2), Σ = [[3,1],[1,3]];
+//! * **Fig. 5** — 2-D, 4 components at μ = (±2, ±2), Σ = `[[3,1],[1,3]]`;
 //! * **Figs. 6–7** — 10-D, 4 components at μᵢ = 2.5·eᵢ (i = 1..4),
 //!   Σᵢⱼ = ρ^{|i−j|} for ρ ∈ {0.1, 0.3, 0.6}; 40 000 points, compression
 //!   40:1 (1000 codewords).
@@ -88,7 +88,7 @@ pub fn sample(name: &str, components: &[Component], n: usize, seed: u64) -> Data
     ds
 }
 
-/// The paper's Fig. 5 toy mixture: 2-D, means (±2, ±2), Σ = [[3,1],[1,3]].
+/// The paper's Fig. 5 toy mixture: 2-D, means (±2, ±2), Σ = `[[3,1],[1,3]]`.
 /// Component order: (2,2), (−2,−2), (−2,2), (2,−2) — matching the text.
 pub fn paper_mixture_2d(n: usize, seed: u64) -> Dataset {
     let cov = Mat::from_rows(2, 2, &[3.0, 1.0, 1.0, 3.0]);

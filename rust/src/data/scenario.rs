@@ -1,32 +1,53 @@
-//! Distributed-site splits: the paper's D1/D2/D3 scenarios (Tables 2 & 5).
+//! Distributed-site splits: the paper's D1/D2/D3 scenarios (Tables 2 & 5)
+//! plus a size-skewed D4.
 //!
 //! These are *not* load-balancing splits — each models a way data ends up
-//! distributed in the wild (paper §5.1):
+//! distributed in the wild. The full taxonomy, ordered by how adversarial
+//! the partition is for a per-site compressor:
 //!
-//! * **D1** — sites hold (nearly) disjoint class supports;
-//! * **D2** — class supports overlap across sites;
-//! * **D3** — every site is a random sample of the full distribution.
+//! * **D1 — disjoint class supports** (paper §5.1): every class lives
+//!   (almost) entirely at one site, e.g. hospitals that each see only a
+//!   regional disease mix. The hardest case for any *local* method — no
+//!   site can see the global cluster structure — and the paper's headline
+//!   result is that codeword union + central spectral step recovers it.
+//! * **D2 — overlapping class supports** (paper §5.1): classes are spread
+//!   unevenly across sites (e.g. 70%/30%), the common "related but
+//!   non-identical branches" regime.
+//! * **D3 — i.i.d. split** (paper §5.1): every site is a uniform random
+//!   sample of the full distribution, the shard-for-throughput regime; the
+//!   easiest case and the baseline the others are compared against.
+//! * **D4 — size-skewed i.i.d. split** (beyond the paper): like D3 each
+//!   site draws from the full distribution, but site sizes decay
+//!   geometrically — site `s` holds a share ∝ 2^{-(s+1)}, normalized so
+//!   the shares sum to 1 (2 sites: 2/3 and 1/3; 3 sites: 4/7, 2/7, 1/7).
+//!   This models hub-and-spoke deployments — one big datacenter plus
+//!   small edge sites — and stresses the proportional codeword-budget
+//!   split and the max-over-sites elapsed model rather than the
+//!   clustering itself.
 //!
 //! A split is expressed as a *site-fraction matrix* `frac[s][c]` — the
 //! fraction of class `c`'s points that go to site `s` (columns sum to 1) —
 //! and realized by [`split_by_fractions`], which shuffles each class once
 //! and deals out contiguous runs. [`split`] builds the paper's exact
 //! configurations for 2 sites (Table 2) and the HEPMASS 3/4-site variants
-//! (Table 5).
+//! (Table 5); [`fractions`] exposes the matrices themselves.
 
 use crate::rng::Rng;
 
 use super::Dataset;
 
-/// Distributed-data scenario from the paper.
+/// Distributed-data scenario (see the module docs for the full taxonomy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scenario {
-    /// Disjoint class supports per site.
+    /// Disjoint class supports per site (paper, Table 2).
     D1,
-    /// Overlapping class supports.
+    /// Overlapping class supports (paper, Table 2).
     D2,
-    /// Random uniform split.
+    /// Random uniform split (paper, Table 2).
     D3,
+    /// Size-skewed random split: geometric site sizes, same class mix
+    /// everywhere (beyond the paper; hub-and-spoke deployments).
+    D4,
 }
 
 impl Scenario {
@@ -35,6 +56,7 @@ impl Scenario {
             "d1" => Some(Scenario::D1),
             "d2" => Some(Scenario::D2),
             "d3" => Some(Scenario::D3),
+            "d4" => Some(Scenario::D4),
             _ => None,
         }
     }
@@ -46,6 +68,7 @@ impl std::fmt::Display for Scenario {
             Scenario::D1 => write!(f, "D1"),
             Scenario::D2 => write!(f, "D2"),
             Scenario::D3 => write!(f, "D3"),
+            Scenario::D4 => write!(f, "D4"),
         }
     }
 }
@@ -115,6 +138,15 @@ pub fn fractions(scenario: Scenario, n_sites: usize, n_classes: usize) -> Vec<Ve
     match scenario {
         // Every site a random 1/S sample, any class structure.
         Scenario::D3 => vec![vec![1.0 / n_sites as f64; n_classes]; n_sites],
+
+        // Size-skewed i.i.d. split: site s holds a share ∝ 2^{-(s+1)} of
+        // every class (normalized so the shares sum to 1), so site 0 is the
+        // "datacenter" and later sites are progressively smaller "edges".
+        Scenario::D4 => {
+            let raw: Vec<f64> = (0..n_sites).map(|s| 0.5f64.powi(s as i32 + 1)).collect();
+            let total: f64 = raw.iter().sum();
+            raw.into_iter().map(|w| vec![w / total; n_classes]).collect()
+        }
 
         Scenario::D1 => match (n_sites, n_classes) {
             // Site1: C1, Site2: C2 (2 classes)
@@ -287,6 +319,25 @@ mod tests {
             for (local, &g) in p.global_idx.iter().enumerate() {
                 assert_eq!(p.data.point(local), ds.point(g as usize));
                 assert_eq!(p.data.labels[local], ds.labels[g as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn d4_sizes_decay_geometrically_and_partition_exactly() {
+        let ds = toy(3, 1000);
+        let parts = split(&ds, Scenario::D4, 3, 7);
+        assert_eq!(total_points(&parts), ds.len());
+        // shares 4/7, 2/7, 1/7 of 3000 points (± rounding)
+        let sizes: Vec<usize> = parts.iter().map(|p| p.data.len()).collect();
+        assert!(sizes[0] > sizes[1] && sizes[1] > sizes[2], "{sizes:?}");
+        assert!((sizes[0] as f64 - 3000.0 * 4.0 / 7.0).abs() < 30.0, "{sizes:?}");
+        // class mix at every site follows the global (uniform) mix
+        for p in &parts {
+            let counts = p.data.class_counts();
+            let n = p.data.len() as f64;
+            for c in counts {
+                assert!((c as f64 / n - 1.0 / 3.0).abs() < 0.05, "{sizes:?}");
             }
         }
     }

@@ -6,7 +6,7 @@
 //! * distances use the expanded form `‖x‖² − 2·x·c + ‖c‖²`; `‖c‖²` is
 //!   precomputed per sweep and `‖x‖²` is constant in the argmin, so the
 //!   inner loop is a pure dot product over the centroid matrix;
-//! * points are processed in parallel chunks ([`par_chunks_mut`]); each
+//! * points are processed in parallel chunks ([`crate::par::par_chunks_mut`]); each
 //!   chunk accumulates its own partial centroid sums, merged once per
 //!   sweep (no atomic traffic in the inner loop);
 //! * seeding is incremental k-means++ on a bounded subsample — O(k·m·d)

@@ -36,11 +36,21 @@
 //! println!("accuracy = {:.4}", report.accuracy);
 //! ```
 //!
-//! Offline-environment note: only the crates vendored for the `xla`
-//! dependency are available, so the usual ecosystem pieces are implemented
-//! as first-class substrates here: [`par`] (thread pool), [`rng`] (PRNG),
-//! [`config`] (TOML subset), [`bench`] (micro-benchmark harness),
-//! [`prop`] (property-testing harness), [`cli`] (argument parsing).
+//! ## Features and offline builds
+//!
+//! The default build is pure Rust: the central eigensolver is the in-crate
+//! Lanczos path (`linalg::eigen`) and the only dependency is the vendored
+//! `anyhow` shim, so `cargo build --release && cargo test -q` works from a
+//! clean checkout with no network access. The PJRT/XLA execution path
+//! ([`runtime`]) is gated behind the `xla` cargo feature; without it,
+//! `Backend::Xla` / `Backend::XlaFull` fail fast at runtime with a clear
+//! error (see README.md, "The `xla` feature").
+//!
+//! Because the build must stand alone, the usual ecosystem pieces are
+//! implemented as first-class substrates here: [`par`] (thread pool),
+//! [`rng`] (PRNG), [`config`] (TOML subset), [`bench`] (micro-benchmark
+//! harness), [`prop`] (property-testing harness), [`cli`] (argument
+//! parsing).
 
 pub mod bench;
 pub mod cli;

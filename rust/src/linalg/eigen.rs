@@ -302,7 +302,7 @@ pub fn lanczos_topk(
         basis.push(next);
 
         // convergence check every few steps once we have k Ritz pairs
-        if m >= k + 2 && m.is_multiple_of(4) {
+        if m >= k + 2 && m % 4 == 0 {
             let (tev, _tv) = tridiag_eig(&alphas, &betas[..m - 1]);
             let beta_last = *betas.last().unwrap();
             // crude residual bound: β_m · |last component of Ritz vector|

@@ -140,14 +140,49 @@ pub fn normalized_mutual_info(truth: &[u16], pred: &[u16]) -> f64 {
 /// on real distributed hardware. Thread CPU time is contention-free, so
 /// per-site phase costs are measured with it (see `coordinator`).
 pub fn thread_cpu_time() -> std::time::Duration {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: ts is a valid out-pointer; CLOCK_THREAD_CPUTIME_ID is
-    // supported on all Linux targets this crate builds for.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
-    if rc != 0 {
-        return std::time::Duration::ZERO; // exotic platform: degrade gracefully
+    // 64-bit only: on those targets `c_long` matches the C library's
+    // `time_t`/`long`, so the hand-declared struct below is ABI-exact.
+    // (32-bit Linux with 64-bit time_t would need a different layout —
+    // there we degrade to the zero fallback rather than risk UB.)
+    #[cfg(all(
+        target_pointer_width = "64",
+        any(target_os = "linux", target_os = "android", target_os = "macos")
+    ))]
+    {
+        use std::os::raw::{c_int, c_long};
+
+        #[repr(C)]
+        struct Timespec {
+            tv_sec: c_long,
+            tv_nsec: c_long,
+        }
+        // Declared directly (no libc crate offline); the symbol lives in
+        // the platform C library every Rust binary already links.
+        extern "C" {
+            fn clock_gettime(clock_id: c_int, tp: *mut Timespec) -> c_int;
+        }
+        #[cfg(any(target_os = "linux", target_os = "android"))]
+        const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
+        #[cfg(target_os = "macos")]
+        const CLOCK_THREAD_CPUTIME_ID: c_int = 16;
+
+        let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+        // SAFETY: ts is a valid out-pointer with the target's exact
+        // timespec layout; CLOCK_THREAD_CPUTIME_ID is supported on the
+        // targets selected above.
+        let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+        if rc != 0 {
+            return std::time::Duration::ZERO;
+        }
+        std::time::Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
     }
-    std::time::Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+    #[cfg(not(all(
+        target_pointer_width = "64",
+        any(target_os = "linux", target_os = "android", target_os = "macos")
+    )))]
+    {
+        std::time::Duration::ZERO // other platforms: degrade gracefully
+    }
 }
 
 /// Simple elapsed-time stopwatch with named laps.

@@ -7,7 +7,7 @@
 //! in practice localizes failures well enough for this crate.
 //!
 //! ```no_run
-//! # // no_run: rustdoc's runner lacks the xla rpath (see .cargo/config.toml)
+//! # // no_run: illustrative only — the real properties live in rust/tests
 //! use dsc::prop::{forall, Gen};
 //! forall("sorting is idempotent", 100, 42, |g: &mut Gen| {
 //!     let n = g.usize_in(0, 50);

@@ -1,10 +1,11 @@
-//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//! Runtime for the AOT-compiled XLA artifacts, behind the `xla` cargo
+//! feature.
 //!
-//! This is the bridge to Layers 1+2. `make artifacts` (python, build time)
-//! lowers the spectral-embedding and Lloyd-step compute graphs — with the
-//! Pallas kernels inlined — to HLO *text* under `artifacts/`, one file per
-//! shape bucket, plus `manifest.json` describing the parameter/output ABI.
-//! At run time this module:
+//! This is the bridge to Layers 1+2 of the stack. `make artifacts` (python,
+//! build time) lowers the spectral-embedding and Lloyd-step compute graphs —
+//! with the Pallas kernels inlined — to HLO *text* under `artifacts/`, one
+//! file per shape bucket, plus `manifest.json` describing the
+//! parameter/output ABI. At run time this module:
 //!
 //! 1. parses the manifest ([`json`] — no serde offline);
 //! 2. picks the smallest bucket that fits a request (`n` and `d` round up;
@@ -15,15 +16,26 @@
 //!    calls are pure execution);
 //! 4. pads inputs, executes, unpads outputs.
 //!
+//! ## Feature gating
+//!
+//! Manifest parsing and bucket selection ([`Artifacts`]) are pure Rust and
+//! always compiled. The PJRT executor ([`XlaRuntime`]) has two builds:
+//!
+//! * **default (no `xla` feature)** — a fallback with the same API whose
+//!   constructor returns an error, so `Backend::Xla`/`Backend::XlaFull`
+//!   fail fast with a clear message while the pure-Rust eigensolver path
+//!   (`linalg::eigen`, `Backend::Native`) serves every pipeline.
+//! * **`--features xla`** — the real executor, compiled against the `xla`
+//!   bindings (the workspace ships a compile-time stub; vendor the real
+//!   bindings via `[patch]` to execute HLO — see README.md).
+//!
 //! HLO **text** is the interchange format because jax ≥ 0.5 serialized
 //! protos carry 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! the text parser reassigns ids.
 
 pub mod json;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -41,9 +53,12 @@ pub struct ProgramSpec {
     pub k: usize,
 }
 
+/// Which compute graph a program implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProgramKind {
+    /// Spectral embedding of the codeword affinity.
     Embed,
+    /// One Lloyd step over embedding rows.
     KStep,
 }
 
@@ -137,205 +152,297 @@ pub struct EmbedOut {
     pub bucket: String,
 }
 
-/// PJRT executor with an executable cache.
-pub struct XlaRuntime {
-    artifacts: Artifacts,
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl XlaRuntime {
-    /// Create a CPU PJRT client over the artifact directory.
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
-        let artifacts = Artifacts::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
-        Ok(XlaRuntime { artifacts, client, cache: Mutex::new(HashMap::new()) })
-    }
-
-    pub fn artifacts(&self) -> &Artifacts {
-        &self.artifacts
-    }
-
-    fn executable(&self, spec: &ProgramSpec) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(exe) = cache.get(&spec.name) {
-                return Ok(exe.clone());
-            }
-        }
-        let path = spec
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {}: {e}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e}", spec.name))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(spec.name.clone(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Number of compiled executables currently cached.
-    pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-
-    /// Run the spectral-embedding artifact on `n = points.len()/dim`
-    /// codewords. `weights` follow the padding convention (0 ⇒ pad row);
-    /// real rows must have positive weight.
-    pub fn embed(&self, points: &[f32], dim: usize, weights: &[f32], sigma: f32) -> Result<EmbedOut> {
-        let n = weights.len();
-        if points.len() != n * dim {
-            bail!("points buffer {} != n {} × dim {}", points.len(), n, dim);
-        }
-        if n == 0 {
-            bail!("embed of empty codeword set");
-        }
-        let spec = self
-            .artifacts
-            .embed_bucket(n, dim)
-            .ok_or_else(|| anyhow!("no embed bucket fits n={n}, d={dim}"))?
-            .clone();
-        let exe = self.executable(&spec)?;
-
-        // pad points (nb × db) and weights (nb)
-        let (nb, db) = (spec.n, spec.d);
-        let mut cw = vec![0.0f32; nb * db];
-        for i in 0..n {
-            cw[i * db..i * db + dim].copy_from_slice(&points[i * dim..(i + 1) * dim]);
-        }
-        let mut w = vec![0.0f32; nb];
-        w[..n].copy_from_slice(weights);
-
-        let cw_lit = xla::Literal::vec1(&cw)
-            .reshape(&[nb as i64, db as i64])
-            .map_err(|e| anyhow!("reshape cw: {e}"))?;
-        let w_lit = xla::Literal::vec1(&w);
-        let sigma_lit = xla::Literal::from(sigma);
-
-        let result = exe
-            .execute::<xla::Literal>(&[cw_lit, w_lit, sigma_lit])
-            .map_err(|e| anyhow!("execute {}: {e}", spec.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?;
-        let (evecs_l, evals_l, deg_l) =
-            result.to_tuple3().map_err(|e| anyhow!("untuple: {e}"))?;
-
-        let k_cols = self.artifacts.embed_k;
-        let evecs_pad: Vec<f32> = evecs_l.to_vec().map_err(|e| anyhow!("evecs: {e}"))?;
-        let evals: Vec<f32> = evals_l.to_vec().map_err(|e| anyhow!("evals: {e}"))?;
-        let deg_pad: Vec<f32> = deg_l.to_vec().map_err(|e| anyhow!("deg: {e}"))?;
-
-        // unpad rows
-        let mut evecs = vec![0.0f32; n * k_cols];
-        evecs.copy_from_slice(&evecs_pad[..n * k_cols]);
-        let deg = deg_pad[..n].to_vec();
-        Ok(EmbedOut { evecs, evals, deg, k_cols, bucket: spec.name.clone() })
-    }
-
-    /// Run one Lloyd step of the kstep artifact over `n` embedding rows
-    /// (`d` must equal the artifact's embedding width). Returns
-    /// `(new_centroids, assignment, shift, inertia)` unpadded.
-    #[allow(clippy::type_complexity)]
-    pub fn kmeans_step(
-        &self,
-        points: &[f32],
-        d: usize,
-        centroids: &[f32],
-        k_active: usize,
-    ) -> Result<(Vec<f32>, Vec<i32>, f32, f32)> {
-        let n = points.len() / d;
-        let spec = self
-            .artifacts
-            .kstep_bucket(n)
-            .ok_or_else(|| anyhow!("no kstep bucket fits n={n}"))?
-            .clone();
-        if d != spec.d {
-            bail!("kstep expects d={}, got {d}", spec.d);
-        }
-        if k_active > spec.k {
-            bail!("kstep supports ≤ {} centroids, got {k_active}", spec.k);
-        }
-        if centroids.len() != k_active * d {
-            bail!("centroid buffer size mismatch");
-        }
-        let exe = self.executable(&spec)?;
-
-        let (nb, kb) = (spec.n, spec.k);
-        let mut p = vec![0.0f32; nb * d];
-        p[..n * d].copy_from_slice(points);
-        let mut c = vec![0.0f32; kb * d];
-        c[..k_active * d].copy_from_slice(centroids);
-        // park inactive centroids far away so padding rows (pmask 0) assign
-        // harmlessly and active points never pick them (cmask also guards)
-        for slot in c[k_active * d..].iter_mut() {
-            *slot = 1e6;
-        }
-        let mut pmask = vec![0.0f32; nb];
-        pmask[..n].fill(1.0);
-        let mut cmask = vec![0.0f32; kb];
-        cmask[..k_active].fill(1.0);
-
-        let p_lit = xla::Literal::vec1(&p)
-            .reshape(&[nb as i64, d as i64])
-            .map_err(|e| anyhow!("reshape p: {e}"))?;
-        let c_lit = xla::Literal::vec1(&c)
-            .reshape(&[kb as i64, d as i64])
-            .map_err(|e| anyhow!("reshape c: {e}"))?;
-        let pm_lit = xla::Literal::vec1(&pmask);
-        let cm_lit = xla::Literal::vec1(&cmask);
-
-        let result = exe
-            .execute::<xla::Literal>(&[p_lit, c_lit, pm_lit, cm_lit])
-            .map_err(|e| anyhow!("execute {}: {e}", spec.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?;
-        let (newc_l, idx_l, shift_l, inertia_l) =
-            result.to_tuple4().map_err(|e| anyhow!("untuple: {e}"))?;
-
-        let newc_pad: Vec<f32> = newc_l.to_vec().map_err(|e| anyhow!("new_c: {e}"))?;
-        let idx_pad: Vec<i32> = idx_l.to_vec().map_err(|e| anyhow!("idx: {e}"))?;
-        let shift: f32 = shift_l.get_first_element().map_err(|e| anyhow!("shift: {e}"))?;
-        let inertia: f32 =
-            inertia_l.get_first_element().map_err(|e| anyhow!("inertia: {e}"))?;
-
-        Ok((newc_pad[..k_active * d].to_vec(), idx_pad[..n].to_vec(), shift, inertia))
-    }
-}
-
-thread_local! {
-    static RUNTIME_CACHE: std::cell::RefCell<HashMap<PathBuf, std::rc::Rc<XlaRuntime>>> =
-        std::cell::RefCell::new(HashMap::new());
-}
-
-/// Thread-local shared runtime for `artifact_dir`.
-///
-/// PJRT executables are not `Send`, so the cache is per-thread — which
-/// matches how the coordinator uses it (the leader thread owns the central
-/// step). Compiling an embed bucket costs ~1 s; with this cache a process
-/// running many pipelines (benches, sweeps, long-lived servers) pays it
-/// once per bucket instead of once per run (EXPERIMENTS.md §Perf, change 4).
-pub fn shared(artifact_dir: impl AsRef<Path>) -> Result<std::rc::Rc<XlaRuntime>> {
-    let key = artifact_dir.as_ref().to_path_buf();
-    RUNTIME_CACHE.with(|cache| {
-        if let Some(rt) = cache.borrow().get(&key) {
-            return Ok(rt.clone());
-        }
-        let rt = std::rc::Rc::new(XlaRuntime::new(&key)?);
-        cache.borrow_mut().insert(key, rt.clone());
-        Ok(rt)
-    })
-}
-
 /// Default artifact directory: `$DSC_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
     std::env::var_os("DSC_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+// ─── PJRT executor (feature `xla`) ────────────────────────────────────────
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use anyhow::{anyhow, bail, Result};
+
+    use super::{Artifacts, EmbedOut, ProgramSpec};
+
+    /// PJRT executor with an executable cache.
+    pub struct XlaRuntime {
+        artifacts: Artifacts,
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl XlaRuntime {
+        /// Create a CPU PJRT client over the artifact directory.
+        pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+            let artifacts = Artifacts::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+            Ok(XlaRuntime { artifacts, client, cache: Mutex::new(HashMap::new()) })
+        }
+
+        pub fn artifacts(&self) -> &Artifacts {
+            &self.artifacts
+        }
+
+        fn executable(
+            &self,
+            spec: &ProgramSpec,
+        ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            {
+                let cache = self.cache.lock().unwrap();
+                if let Some(exe) = cache.get(&spec.name) {
+                    return Ok(exe.clone());
+                }
+            }
+            let path = spec
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse {}: {e}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", spec.name))?;
+            let exe = std::sync::Arc::new(exe);
+            self.cache.lock().unwrap().insert(spec.name.clone(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Number of compiled executables currently cached.
+        pub fn cached_executables(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
+
+        /// Run the spectral-embedding artifact on `n = points.len()/dim`
+        /// codewords. `weights` follow the padding convention (0 ⇒ pad row);
+        /// real rows must have positive weight.
+        pub fn embed(
+            &self,
+            points: &[f32],
+            dim: usize,
+            weights: &[f32],
+            sigma: f32,
+        ) -> Result<EmbedOut> {
+            let n = weights.len();
+            if points.len() != n * dim {
+                bail!("points buffer {} != n {} × dim {}", points.len(), n, dim);
+            }
+            if n == 0 {
+                bail!("embed of empty codeword set");
+            }
+            let spec = self
+                .artifacts
+                .embed_bucket(n, dim)
+                .ok_or_else(|| anyhow!("no embed bucket fits n={n}, d={dim}"))?
+                .clone();
+            let exe = self.executable(&spec)?;
+
+            // pad points (nb × db) and weights (nb)
+            let (nb, db) = (spec.n, spec.d);
+            let mut cw = vec![0.0f32; nb * db];
+            for i in 0..n {
+                cw[i * db..i * db + dim].copy_from_slice(&points[i * dim..(i + 1) * dim]);
+            }
+            let mut w = vec![0.0f32; nb];
+            w[..n].copy_from_slice(weights);
+
+            let cw_lit = xla::Literal::vec1(&cw)
+                .reshape(&[nb as i64, db as i64])
+                .map_err(|e| anyhow!("reshape cw: {e}"))?;
+            let w_lit = xla::Literal::vec1(&w);
+            let sigma_lit = xla::Literal::from(sigma);
+
+            let result = exe
+                .execute::<xla::Literal>(&[cw_lit, w_lit, sigma_lit])
+                .map_err(|e| anyhow!("execute {}: {e}", spec.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e}"))?;
+            let (evecs_l, evals_l, deg_l) =
+                result.to_tuple3().map_err(|e| anyhow!("untuple: {e}"))?;
+
+            let k_cols = self.artifacts.embed_k;
+            let evecs_pad: Vec<f32> = evecs_l.to_vec().map_err(|e| anyhow!("evecs: {e}"))?;
+            let evals: Vec<f32> = evals_l.to_vec().map_err(|e| anyhow!("evals: {e}"))?;
+            let deg_pad: Vec<f32> = deg_l.to_vec().map_err(|e| anyhow!("deg: {e}"))?;
+
+            // unpad rows
+            let mut evecs = vec![0.0f32; n * k_cols];
+            evecs.copy_from_slice(&evecs_pad[..n * k_cols]);
+            let deg = deg_pad[..n].to_vec();
+            Ok(EmbedOut { evecs, evals, deg, k_cols, bucket: spec.name.clone() })
+        }
+
+        /// Run one Lloyd step of the kstep artifact over `n` embedding rows
+        /// (`d` must equal the artifact's embedding width). Returns
+        /// `(new_centroids, assignment, shift, inertia)` unpadded.
+        #[allow(clippy::type_complexity)]
+        pub fn kmeans_step(
+            &self,
+            points: &[f32],
+            d: usize,
+            centroids: &[f32],
+            k_active: usize,
+        ) -> Result<(Vec<f32>, Vec<i32>, f32, f32)> {
+            let n = points.len() / d;
+            let spec = self
+                .artifacts
+                .kstep_bucket(n)
+                .ok_or_else(|| anyhow!("no kstep bucket fits n={n}"))?
+                .clone();
+            if d != spec.d {
+                bail!("kstep expects d={}, got {d}", spec.d);
+            }
+            if k_active > spec.k {
+                bail!("kstep supports ≤ {} centroids, got {k_active}", spec.k);
+            }
+            if centroids.len() != k_active * d {
+                bail!("centroid buffer size mismatch");
+            }
+            let exe = self.executable(&spec)?;
+
+            let (nb, kb) = (spec.n, spec.k);
+            let mut p = vec![0.0f32; nb * d];
+            p[..n * d].copy_from_slice(points);
+            let mut c = vec![0.0f32; kb * d];
+            c[..k_active * d].copy_from_slice(centroids);
+            // park inactive centroids far away so padding rows (pmask 0)
+            // assign harmlessly and active points never pick them (cmask
+            // also guards)
+            for slot in c[k_active * d..].iter_mut() {
+                *slot = 1e6;
+            }
+            let mut pmask = vec![0.0f32; nb];
+            pmask[..n].fill(1.0);
+            let mut cmask = vec![0.0f32; kb];
+            cmask[..k_active].fill(1.0);
+
+            let p_lit = xla::Literal::vec1(&p)
+                .reshape(&[nb as i64, d as i64])
+                .map_err(|e| anyhow!("reshape p: {e}"))?;
+            let c_lit = xla::Literal::vec1(&c)
+                .reshape(&[kb as i64, d as i64])
+                .map_err(|e| anyhow!("reshape c: {e}"))?;
+            let pm_lit = xla::Literal::vec1(&pmask);
+            let cm_lit = xla::Literal::vec1(&cmask);
+
+            let result = exe
+                .execute::<xla::Literal>(&[p_lit, c_lit, pm_lit, cm_lit])
+                .map_err(|e| anyhow!("execute {}: {e}", spec.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e}"))?;
+            let (newc_l, idx_l, shift_l, inertia_l) =
+                result.to_tuple4().map_err(|e| anyhow!("untuple: {e}"))?;
+
+            let newc_pad: Vec<f32> = newc_l.to_vec().map_err(|e| anyhow!("new_c: {e}"))?;
+            let idx_pad: Vec<i32> = idx_l.to_vec().map_err(|e| anyhow!("idx: {e}"))?;
+            let shift: f32 = shift_l.get_first_element().map_err(|e| anyhow!("shift: {e}"))?;
+            let inertia: f32 =
+                inertia_l.get_first_element().map_err(|e| anyhow!("inertia: {e}"))?;
+
+            Ok((newc_pad[..k_active * d].to_vec(), idx_pad[..n].to_vec(), shift, inertia))
+        }
+    }
+
+    thread_local! {
+        static RUNTIME_CACHE: std::cell::RefCell<HashMap<PathBuf, std::rc::Rc<XlaRuntime>>> =
+            std::cell::RefCell::new(HashMap::new());
+    }
+
+    /// Thread-local shared runtime for `artifact_dir`.
+    ///
+    /// PJRT executables are not `Send`, so the cache is per-thread — which
+    /// matches how the coordinator uses it (the leader thread owns the
+    /// central step). Compiling an embed bucket costs ~1 s; with this cache
+    /// a process running many pipelines (benches, sweeps, long-lived
+    /// servers) pays it once per bucket instead of once per run.
+    pub fn shared(artifact_dir: impl AsRef<Path>) -> Result<std::rc::Rc<XlaRuntime>> {
+        let key = artifact_dir.as_ref().to_path_buf();
+        RUNTIME_CACHE.with(|cache| {
+            if let Some(rt) = cache.borrow().get(&key) {
+                return Ok(rt.clone());
+            }
+            let rt = std::rc::Rc::new(XlaRuntime::new(&key)?);
+            cache.borrow_mut().insert(key, rt.clone());
+            Ok(rt)
+        })
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use pjrt::{shared, XlaRuntime};
+
+// ─── fallback executor (default build, no `xla` feature) ──────────────────
+
+/// Fallback `XlaRuntime` for builds without the `xla` feature: the API
+/// matches the PJRT executor so callers compile unchanged, but construction
+/// always fails — `Backend::Native` (the pure-Rust `linalg::eigen` path) is
+/// the only central-step backend in this configuration.
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Always errors: this build has no PJRT runtime. The artifact manifest
+    /// is still validated first so a missing/corrupt artifact set is
+    /// reported ahead of the feature problem.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let _ = Artifacts::load(artifact_dir)?;
+        bail!(
+            "built without the `xla` feature: the PJRT runtime is unavailable \
+             (use Backend::Native, or rebuild with `cargo build --features xla`)"
+        );
+    }
+
+    /// Unreachable: no fallback runtime can be constructed.
+    pub fn artifacts(&self) -> &Artifacts {
+        unreachable!("fallback XlaRuntime cannot be constructed")
+    }
+
+    /// Always zero in the fallback build.
+    pub fn cached_executables(&self) -> usize {
+        0
+    }
+
+    /// Unreachable at runtime (construction fails); compiles so
+    /// `Backend::Xla` call sites need no feature gates.
+    pub fn embed(
+        &self,
+        _points: &[f32],
+        _dim: usize,
+        _weights: &[f32],
+        _sigma: f32,
+    ) -> Result<EmbedOut> {
+        bail!("built without the `xla` feature")
+    }
+
+    /// Unreachable at runtime (construction fails); compiles so
+    /// `Backend::XlaFull` call sites need no feature gates.
+    #[allow(clippy::type_complexity)]
+    pub fn kmeans_step(
+        &self,
+        _points: &[f32],
+        _d: usize,
+        _centroids: &[f32],
+        _k_active: usize,
+    ) -> Result<(Vec<f32>, Vec<i32>, f32, f32)> {
+        bail!("built without the `xla` feature")
+    }
+}
+
+/// Fallback `shared`: same signature as the PJRT variant, always errors.
+#[cfg(not(feature = "xla"))]
+pub fn shared(artifact_dir: impl AsRef<Path>) -> Result<std::rc::Rc<XlaRuntime>> {
+    XlaRuntime::new(artifact_dir).map(std::rc::Rc::new)
 }
 
 #[cfg(test)]
@@ -410,6 +517,19 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), r#"{"format":"protobuf","programs":[]}"#)
             .unwrap();
         assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn fallback_runtime_reports_missing_feature() {
+        let dir = std::env::temp_dir().join(format!("dsc_rt4_{}", std::process::id()));
+        fake_manifest(&dir);
+        let err = XlaRuntime::new(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("xla"), "{err:#}");
+        // a bad artifact dir is reported ahead of the feature problem
+        let err = XlaRuntime::new(dir.join("nope")).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest.json"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

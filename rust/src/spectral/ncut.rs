@@ -81,7 +81,7 @@ fn best_bipartition(aff: &Affinity, rng: &mut Rng) -> Option<SplitPlan> {
             continue;
         }
         let score = cut / assoc_a + cut / assoc_b;
-        if best.is_none_or(|(s, _)| score < s) {
+        if best.map_or(true, |(s, _)| score < s) {
             best = Some((score, prefix));
         }
     }
@@ -179,7 +179,7 @@ mod tests {
 
     fn purity(labels: &[u16], m: usize, k: usize) -> f64 {
         let truth: Vec<u16> =
-            (0..k).flat_map(|c| std::iter::repeat_n(c as u16, m)).collect();
+            (0..k).flat_map(|c| std::iter::repeat(c as u16).take(m)).collect();
         crate::metrics::clustering_accuracy(&truth, labels)
     }
 

@@ -199,7 +199,7 @@ mod tests {
 
     fn purity(labels: &[u16], m: usize, k: usize) -> f64 {
         let truth: Vec<u16> =
-            (0..k).flat_map(|c| std::iter::repeat_n(c as u16, m)).collect();
+            (0..k).flat_map(|c| std::iter::repeat(c as u16).take(m)).collect();
         crate::metrics::clustering_accuracy(&truth, labels)
     }
 

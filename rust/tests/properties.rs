@@ -159,7 +159,7 @@ fn prop_hungarian_at_least_greedy() {
         for row in &profit {
             let mut pick: Option<(usize, f64)> = None;
             for (c, &v) in row.iter().enumerate() {
-                if !used[c] && pick.is_none_or(|(_, pv)| v > pv) {
+                if !used[c] && pick.map_or(true, |(_, pv)| v > pv) {
                     pick = Some((c, v));
                 }
             }

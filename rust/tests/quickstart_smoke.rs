@@ -1,0 +1,70 @@
+//! Smoke test for the README / `examples/quickstart.rs` path: synthesize
+//! the paper's 4-component Gaussian mixture, split it across sites, run the
+//! full distributed pipeline with the default (non-XLA) eigensolver, and
+//! check the accuracy report — the zero-to-working journey a new user
+//! takes, pinned as a test so it can never silently rot.
+
+use dsc::config::{Backend, PipelineConfig};
+use dsc::coordinator::run_pipeline;
+use dsc::data::gmm;
+use dsc::data::scenario::{self, Scenario};
+use dsc::spectral::Bandwidth;
+
+/// GMM → split → pipeline → accuracy report, with the paper's 10-D
+/// 4-component mixture at its easiest covariance setting (ρ = 0.1, Fig. 6's
+/// leftmost column, where the paper reports ≈ 0.93) and the 40:1 codeword
+/// compression. The default backend must be the pure-Rust eigensolver, and
+/// the report must come back complete and ≥ 0.9 accurate.
+#[test]
+fn quickstart_path_reports_high_accuracy() {
+    let ds = gmm::paper_mixture_10d(12_000, 0.1, 7);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 7);
+    let cfg = PipelineConfig {
+        total_codes: 300, // 40:1, the paper's ratio
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: 7,
+        ..Default::default()
+    };
+    assert_eq!(cfg.backend, Backend::Native, "default backend must not need XLA");
+
+    let report = run_pipeline(&parts, &cfg).expect("quickstart pipeline must complete");
+
+    // the report is complete and self-consistent
+    assert_eq!(report.labels.len(), ds.len());
+    assert!(report.labels.iter().all(|&l| (l as usize) < 4));
+    assert!(report.n_codes >= 290 && report.n_codes <= 310, "{}", report.n_codes);
+    assert!(report.sigma > 0.0);
+    assert_eq!(report.site_dml.len(), 2);
+    assert!(report.net.total_bytes() > 0);
+    assert!(report.net.total_bytes() < report.full_data_bytes / 10);
+
+    // the paper's accuracy regime for ρ = 0.1
+    assert!(
+        report.accuracy >= 0.9,
+        "quickstart accuracy {:.4} (ARI {:.4}, NMI {:.4}) below the 0.9 floor",
+        report.accuracy,
+        report.ari,
+        report.nmi
+    );
+}
+
+/// The same path must also hold on the size-skewed D4 split (one big site,
+/// one small), since the proportional codeword budget is what keeps the
+/// small site from being over-compressed.
+#[test]
+fn quickstart_path_survives_skewed_sites() {
+    let ds = gmm::paper_mixture_10d(8_000, 0.1, 9);
+    let parts = scenario::split(&ds, Scenario::D4, 2, 9);
+    assert!(parts[0].data.len() > parts[1].data.len());
+    let cfg = PipelineConfig {
+        total_codes: 200,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: 9,
+        ..Default::default()
+    };
+    let report = run_pipeline(&parts, &cfg).expect("D4 pipeline must complete");
+    assert_eq!(report.labels.len(), ds.len());
+    assert!(report.accuracy >= 0.85, "D4 accuracy {:.4}", report.accuracy);
+}

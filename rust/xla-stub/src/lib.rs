@@ -1,0 +1,168 @@
+//! Compile-time stub of the PJRT/XLA binding surface `dsc`'s `runtime`
+//! module uses (`PjRtClient`, `HloModuleProto`, `XlaComputation`,
+//! `PjRtLoadedExecutable`, `Literal`).
+//!
+//! The stub exists so `cargo build --features xla` type-checks offline with
+//! no accelerator toolchain present. Every runtime entry point returns
+//! [`Error`] — nothing here executes HLO. A deployment with the real
+//! vendored `xla` bindings replaces this crate through a `[patch]` section
+//! in the workspace `Cargo.toml` (see the repository README, "The `xla`
+//! feature"); the API below mirrors the subset of the real crate that `dsc`
+//! calls, so the swap is manifest-only.
+
+use std::fmt;
+
+/// Error returned by every stub entry point.
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "xla stub: {what} is unavailable (this build links the compile-time \
+             stub; vendor the real xla bindings via [patch] to execute HLO)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias matching the real binding's fallible calls.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. [`PjRtClient::cpu`] always errors in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation into a loaded executable. Unreachable in the
+    /// stub (no client can exist), kept for signature parity.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO **text** file. Always errors in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments, returning per-device, per-output
+    /// buffers. Always errors in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host-side literal value (dense array or tuple).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 `f32` literal.
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions. Always errors in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub("Literal::reshape"))
+    }
+
+    /// Destructure a 3-tuple literal. Always errors in the stub.
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(Error::stub("Literal::to_tuple3"))
+    }
+
+    /// Destructure a 4-tuple literal. Always errors in the stub.
+    pub fn to_tuple4(self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(Error::stub("Literal::to_tuple4"))
+    }
+
+    /// Copy out the elements. Always errors in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+
+    /// Read the first element. Always errors in the stub.
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(Error::stub("Literal::get_first_element"))
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_value: f32) -> Literal {
+        Literal { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_with_stub_message() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
