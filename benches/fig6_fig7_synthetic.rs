@@ -4,11 +4,17 @@
 //!   points from 2 sites (emitted as CSVs for plotting);
 //! * **Fig. 6** — clustering accuracy on the 10-D mixture, ρ ∈
 //!   {0.1, 0.3, 0.6}, scenarios D1/D2/D3 vs non-distributed, K-means DML;
-//! * **Fig. 7** — the same with rpTrees DML.
+//! * **Fig. 7** — the same with rpTrees DML;
+//! * **sparse** — beyond the paper: a Fig. 6-style accuracy sweep at
+//!   8k–32k codewords on the sparse k-NN spectral path, where the dense
+//!   O(m²) affinity is infeasible (32k codewords would need a 4 GiB
+//!   matrix).
 //!
 //! Protocol as in §5.1: 40 000 points, compression 40:1 (1000 codewords),
 //! two sites. Run a subset with `cargo bench --bench fig6_fig7_synthetic --
-//! fig5|fig6|fig7`. `DSC_N` scales the point count down for quick runs.
+//! fig5|fig6|fig7|sparse`. `DSC_N` scales the point count down for quick
+//! runs (it also caps the sparse sweep, which otherwise generates up to
+//! 131 072 points).
 //!
 //! Expected shape vs the paper: every distributed accuracy within ~±0.02
 //! of non-distributed; D1 often slightly *above* (the paper's
@@ -25,7 +31,8 @@ fn want(filter: &Option<String>, key: &str) -> bool {
 
 fn main() -> anyhow::Result<()> {
     let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
-    let n: usize = std::env::var("DSC_N").ok().and_then(|v| v.parse().ok()).unwrap_or(40_000);
+    let n_env: Option<usize> = std::env::var("DSC_N").ok().and_then(|v| v.parse().ok());
+    let n = n_env.unwrap_or(40_000);
     let codes = (n / 40).max(16); // the paper's 40:1 compression
 
     if want(&filter, "fig5") {
@@ -37,6 +44,51 @@ fn main() -> anyhow::Result<()> {
     if want(&filter, "fig7") {
         figure(DmlKind::RpTree, "fig7", n, codes)?;
     }
+    if want(&filter, "sparse") {
+        sparse_sweep(n_env.unwrap_or(usize::MAX))?;
+    }
+    Ok(())
+}
+
+/// Fig. 6-style accuracy sweep at large codebooks (8k–32k codewords), 4:1
+/// compression: rpTrees DML (the only transform cheap enough at this many
+/// codes) feeding the sparse k-NN central step. The dense path cannot run
+/// these sizes — at 32k codewords its affinity alone is 4 GiB.
+fn sparse_sweep(n_cap: usize) -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Fig. 6 (sparse) — 10-D mixture, knn graph (k=24), rpTrees DML, 2 sites, D3".to_string(),
+        &["total_codes", "n", "accuracy", "central (s)", "wire bytes"],
+    );
+    let mut seen_codes = Vec::new();
+    for target in [8_192usize, 16_384, 32_768] {
+        let n = (target * 4).min(n_cap.max(1_024));
+        let codes = target.min(n / 4);
+        if seen_codes.contains(&codes) {
+            continue; // DSC_N capped several targets to the same run
+        }
+        seen_codes.push(codes);
+        let ds = gmm::paper_mixture_10d(n, 0.3, 7);
+        let cfg = PipelineConfig {
+            dml: DmlKind::RpTree,
+            total_codes: codes,
+            k_clusters: 4,
+            bandwidth: Bandwidth::MedianScale(0.5),
+            graph: GraphKind::Knn { k: 24 },
+            seed: 11,
+            ..Default::default()
+        };
+        let parts = scenario::split(&ds, Scenario::D3, 2, 13);
+        let r = run_pipeline(&parts, &cfg)?;
+        table.row(&[
+            format!("{codes}"),
+            format!("{n}"),
+            format!("{:.4}", r.accuracy),
+            format!("{:.2}", r.central.as_secs_f64()),
+            format!("{}", r.net.total_bytes()),
+        ]);
+    }
+    print!("{}", table.render());
+    table.save_csv("fig6_sparse")?;
     Ok(())
 }
 

@@ -5,10 +5,13 @@
 //!   point·dims/µs;
 //! * affinity-matrix build (the central O(n²d) kernel, native);
 //! * Lanczos top-2 on the normalized affinity (recursive ncut's engine);
+//! * dense vs sparse normalized mat-vec (`spmv`), including a 16k-codeword
+//!   sparse run whose dense twin would need a 1 GiB matrix;
 //! * XLA embed-artifact execution (the PJRT path incl. padding);
 //! * end-to-end pipeline at the paper's 40:1 setting.
 //!
-//! Filter: `cargo bench --bench hotpath -- assign|affinity|lanczos|xla|pipeline`.
+//! Filter: `cargo bench --bench hotpath -- assign|affinity|spmv|lanczos|xla|pipeline`.
+//! `DSC_THREADS` pins the pool for scaling curves.
 
 use std::time::Duration;
 
@@ -17,7 +20,7 @@ use dsc::data::gmm;
 use dsc::dml::{self, DmlKind, DmlParams};
 use dsc::prelude::*;
 use dsc::rng::Rng;
-use dsc::spectral::{affinity, njw};
+use dsc::spectral::{affinity, njw, sparse};
 
 fn want(filter: &Option<String>, key: &str) -> bool {
     filter.as_deref().map(|f| key.contains(f)).unwrap_or(true)
@@ -88,6 +91,56 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.1} Mcell/s", cells / stats.mean_secs() / 1e6),
             ]);
         }
+    }
+
+    if want(&filter, "spmv") {
+        // Head-to-head at sizes the dense path can still hold…
+        for (m, knn) in [(2_000usize, 32usize), (4_000, 32)] {
+            let ds = gmm::paper_mixture_10d(m, 0.3, 17);
+            let w = vec![1.0f32; m];
+            let dense = affinity::build(&ds.points, 10, &w, 1.5);
+            let mut grng = Rng::new(19);
+            let sp = sparse::build_knn(&ds.points, 10, &w, 1.5, knn, &mut grng);
+            let x: Vec<f64> =
+                (0..m).map(|i| ((i.wrapping_mul(2_654_435_761)) % 1000) as f64 / 1000.0).collect();
+            let mut y = vec![0.0f64; m];
+
+            let dstats = time_it(2, 15, || dense.normalized_matvec(&x, &mut y));
+            table.row(&[
+                "spmv_dense".into(),
+                format!("m={m}"),
+                format!("{dstats}"),
+                format!("{:.1} MB matrix", (m * m * 4) as f64 / 1e6),
+            ]);
+            let sstats = time_it(2, 15, || sp.normalized_matvec(&x, &mut y));
+            table.row(&[
+                "spmv_sparse".into(),
+                format!("m={m} k={knn} nnz={}", sp.nnz()),
+                format!("{sstats}"),
+                format!("{:.1} MB CSR", sp.storage_bytes() as f64 / 1e6),
+            ]);
+        }
+        // …and the 16k-codeword regime where the dense matrix alone would
+        // be 16384² × 4 B = 1 GiB and is not allocated at all.
+        let m = 16_384usize;
+        let ds = gmm::paper_mixture_10d(m, 0.3, 23);
+        let w = vec![1.0f32; m];
+        let mut grng = Rng::new(29);
+        let sp = sparse::build_knn(&ds.points, 10, &w, 1.5, 32, &mut grng);
+        let x: Vec<f64> =
+            (0..m).map(|i| ((i.wrapping_mul(2_654_435_761)) % 1000) as f64 / 1000.0).collect();
+        let mut y = vec![0.0f64; m];
+        let sstats = time_it(2, 15, || sp.normalized_matvec(&x, &mut y));
+        table.row(&[
+            "spmv_sparse".into(),
+            format!("m={m} k=32 nnz={}", sp.nnz()),
+            format!("{sstats}"),
+            format!(
+                "{:.1} MB CSR vs {:.0} MB dense (not allocated)",
+                sp.storage_bytes() as f64 / 1e6,
+                (m * m * 4) as f64 / 1e6
+            ),
+        ]);
     }
 
     if want(&filter, "lanczos") {

@@ -18,7 +18,7 @@ use crate::coordinator::run_pipeline;
 use crate::data::scenario::{self, Scenario};
 use crate::data::{gmm, iris, uci_proxy, Dataset};
 use crate::dml::DmlKind;
-use crate::spectral::{Algo, Bandwidth};
+use crate::spectral::{Algo, Bandwidth, GraphKind};
 
 /// Parsed `--key value` flags (flags without values map to "true").
 #[derive(Debug, Default)]
@@ -107,6 +107,9 @@ RUN FLAGS:
   --codes N         total codeword budget (default: paper's ratio)
   --k K             clusters (default: dataset classes)
   --algo A          ncut | njw (default ncut)
+  --graph G         dense | knn — affinity storage for the central step
+                    (default dense; knn is the sparse large-codebook path)
+  --knn-k N         neighbors per codeword; implies --graph knn (default 32)
   --backend B       native | xla | xla-full (default native)
   --bandwidth SPEC  fixed:σ | median:scale | eigengap:k (default median:1)
   --weighted        weight affinity by codeword group sizes
@@ -161,9 +164,31 @@ pub fn build_config(flags: &Flags, default_k: usize, n_points: usize) -> Result<
     } else {
         cfg.total_codes = cfg.total_codes.min(n_points / 4).max(16.min(n_points));
     }
-    cfg.k_clusters = flags.usize("k")?.unwrap_or(default_k);
+    if let Some(v) = flags.usize("k")? {
+        cfg.k_clusters = v;
+    } else if flags.str("config").is_none() {
+        // no flag and no config file: fall back to the dataset's class
+        // count (a file-provided k_clusters must not be clobbered)
+        cfg.k_clusters = default_k;
+    }
     if let Some(v) = flags.str("algo") {
         cfg.algo = Algo::parse(v).ok_or_else(|| anyhow!("bad --algo {v:?}"))?;
+    }
+    if let Some(v) = flags.str("graph") {
+        cfg.graph = GraphKind::parse(v).ok_or_else(|| anyhow!("bad --graph {v:?}"))?;
+    }
+    if let Some(kk) = flags.usize("knn-k")? {
+        if kk == 0 {
+            bail!("--knn-k must be ≥ 1");
+        }
+        // An explicit neighbor count implies the sparse graph. Two flags
+        // contradicting each other is a loud error (same contract as the
+        // TOML `spectral.knn_k` key); a `graph = "dense"` from --config is
+        // instead overridden, per the documented flags-beat-file precedence.
+        if flags.str("graph").is_some() && cfg.graph == GraphKind::Dense {
+            bail!("--knn-k conflicts with --graph dense (drop one)");
+        }
+        cfg.graph = GraphKind::Knn { k: kk };
     }
     if let Some(v) = flags.str("backend") {
         cfg.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad --backend {v:?}"))?;
@@ -207,8 +232,8 @@ pub fn parse_bandwidth(s: &str) -> Result<Bandwidth> {
 pub fn cmd_run(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     flags.reject_unknown(&[
-        "dataset", "n", "rho", "sites", "scenario", "dml", "codes", "k", "algo", "backend",
-        "bandwidth", "weighted", "seed", "config", "full-scale", "help",
+        "dataset", "n", "rho", "sites", "scenario", "dml", "codes", "k", "algo", "graph",
+        "knn-k", "backend", "bandwidth", "weighted", "seed", "config", "full-scale", "help",
     ])?;
     if flags.bool("help") {
         println!("{USAGE}");
@@ -393,6 +418,46 @@ mod tests {
         assert_eq!(cfg.k_clusters, 5);
         assert_eq!(cfg.backend, Backend::Xla);
         assert_eq!(cfg.total_codes, 99);
+        assert_eq!(cfg.graph, GraphKind::Dense);
+    }
+
+    #[test]
+    fn graph_flags() {
+        let f = flags(&["--graph", "knn"]);
+        let cfg = build_config(&f, 2, 1_000).unwrap();
+        assert_eq!(cfg.graph, GraphKind::Knn { k: GraphKind::DEFAULT_KNN_K });
+
+        // --knn-k implies the sparse graph and overrides the default k
+        let f = flags(&["--knn-k", "12"]);
+        let cfg = build_config(&f, 2, 1_000).unwrap();
+        assert_eq!(cfg.graph, GraphKind::Knn { k: 12 });
+
+        let f = flags(&["--graph", "knn", "--knn-k", "64"]);
+        let cfg = build_config(&f, 2, 1_000).unwrap();
+        assert_eq!(cfg.graph, GraphKind::Knn { k: 64 });
+
+        // explicit dense + knn-k is contradictory: loud error, not override
+        let f = flags(&["--graph", "dense", "--knn-k", "12"]);
+        assert!(build_config(&f, 2, 1_000).is_err());
+
+        let f = flags(&["--graph", "hypercube"]);
+        assert!(build_config(&f, 2, 1_000).is_err());
+        let f = flags(&["--knn-k", "0"]);
+        assert!(build_config(&f, 2, 1_000).is_err());
+    }
+
+    #[test]
+    fn config_file_k_clusters_not_clobbered() {
+        let path = std::env::temp_dir().join("dsc_cli_k_test.toml");
+        std::fs::write(&path, "[pipeline]\nk_clusters = 8\n").unwrap();
+        let f = flags(&["--config", path.to_str().unwrap()]);
+        let cfg = build_config(&f, 4, 10_000).unwrap();
+        assert_eq!(cfg.k_clusters, 8, "file value must survive absent --k");
+        // an explicit --k still wins over the file
+        let f = flags(&["--config", path.to_str().unwrap(), "--k", "3"]);
+        let cfg = build_config(&f, 4, 10_000).unwrap();
+        assert_eq!(cfg.k_clusters, 3);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

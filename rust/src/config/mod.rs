@@ -14,7 +14,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::dml::DmlKind;
 use crate::net::LinkSpec;
-use crate::spectral::{Algo, Bandwidth};
+use crate::spectral::{Algo, Bandwidth, GraphKind};
 
 pub use crate::data::scenario::Scenario;
 
@@ -59,6 +59,10 @@ pub struct PipelineConfig {
     pub bandwidth: Bandwidth,
     /// Central spectral algorithm.
     pub algo: Algo,
+    /// Affinity-graph storage for the central step: the paper's dense
+    /// `m × m` matrix, or the sparse k-NN graph that unlocks large
+    /// codebooks (8k+ codewords). Native backend only.
+    pub graph: GraphKind,
     /// Weight the affinity by codeword group sizes (ablation A2).
     pub weighted_affinity: bool,
     /// Execution backend for the central step.
@@ -86,6 +90,7 @@ impl Default for PipelineConfig {
             k_clusters: 2,
             bandwidth: Bandwidth::default(),
             algo: Algo::RecursiveNcut,
+            graph: GraphKind::Dense,
             weighted_affinity: false,
             backend: Backend::Native,
             link: LinkSpec::default(),
@@ -119,6 +124,10 @@ impl PipelineConfig {
     /// backend = "native"        # or "xla", "xla-full"
     /// seed = 42
     /// artifact_dir = "artifacts"
+    ///
+    /// [spectral]
+    /// graph = "dense"           # or "knn" (sparse k-NN affinity, large codebooks)
+    /// knn_k = 32                # neighbors per codeword (graph = "knn" only)
     ///
     /// [bandwidth]
     /// policy = "median"         # "fixed" | "median" | "eigengap"
@@ -172,6 +181,43 @@ impl PipelineConfig {
                 v.as_str().ok_or_else(|| anyhow!("artifact_dir must be a string"))?.into();
         }
 
+        let knn_k = match get("spectral.knn_k") {
+            None => None,
+            Some(v) => {
+                let k = v.as_i64().ok_or_else(|| anyhow!("spectral.knn_k must be an int"))?;
+                if k < 1 {
+                    bail!("spectral.knn_k must be ≥ 1");
+                }
+                Some(k as usize)
+            }
+        };
+        match get("spectral.graph") {
+            None => {
+                if knn_k.is_some() {
+                    bail!("spectral.knn_k requires spectral.graph = \"knn\"");
+                }
+            }
+            Some(v) => {
+                let s =
+                    v.as_str().ok_or_else(|| anyhow!("spectral.graph must be a string"))?;
+                // same vocabulary (and aliases) as the CLI --graph flag
+                cfg.graph = match GraphKind::parse(s) {
+                    None => {
+                        bail!("unknown spectral.graph {s:?} (expected \"dense\" or \"knn\")")
+                    }
+                    Some(GraphKind::Dense) => {
+                        if knn_k.is_some() {
+                            bail!("spectral.knn_k requires spectral.graph = \"knn\"");
+                        }
+                        GraphKind::Dense
+                    }
+                    Some(GraphKind::Knn { .. }) => {
+                        GraphKind::Knn { k: knn_k.unwrap_or(GraphKind::DEFAULT_KNN_K) }
+                    }
+                };
+            }
+        }
+
         match get("bandwidth.policy").and_then(|v| v.as_str()) {
             None => {}
             Some("fixed") => {
@@ -217,6 +263,32 @@ mod tests {
         assert_eq!(cfg.k_clusters, 2);
         assert_eq!(cfg.backend, Backend::Native);
         assert_eq!(cfg.dml, DmlKind::KMeans);
+        assert_eq!(cfg.graph, GraphKind::Dense);
+    }
+
+    #[test]
+    fn spectral_graph_keys() {
+        let cfg = PipelineConfig::from_toml("[spectral]\ngraph = \"knn\"\nknn_k = 48").unwrap();
+        assert_eq!(cfg.graph, GraphKind::Knn { k: 48 });
+        // knn without an explicit k falls back to the default
+        let cfg = PipelineConfig::from_toml("[spectral]\ngraph = \"knn\"").unwrap();
+        assert_eq!(cfg.graph, GraphKind::Knn { k: GraphKind::DEFAULT_KNN_K });
+        // the CLI aliases work in TOML too
+        let cfg = PipelineConfig::from_toml("[spectral]\ngraph = \"sparse\"\nknn_k = 9").unwrap();
+        assert_eq!(cfg.graph, GraphKind::Knn { k: 9 });
+        let cfg = PipelineConfig::from_toml("[spectral]\ngraph = \"dense\"").unwrap();
+        assert_eq!(cfg.graph, GraphKind::Dense);
+    }
+
+    #[test]
+    fn spectral_graph_rejects_bad_combinations() {
+        // knn_k without the knn graph is a loud error, not silently inert
+        assert!(PipelineConfig::from_toml("[spectral]\nknn_k = 16").is_err());
+        assert!(
+            PipelineConfig::from_toml("[spectral]\ngraph = \"dense\"\nknn_k = 16").is_err()
+        );
+        assert!(PipelineConfig::from_toml("[spectral]\ngraph = \"adjacency\"").is_err());
+        assert!(PipelineConfig::from_toml("[spectral]\ngraph = \"knn\"\nknn_k = 0").is_err());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::dml::{self, DmlParams};
 use crate::net::{self, Message, NetReport};
 use crate::rng::Rng;
 use crate::runtime::XlaRuntime;
-use crate::spectral::{self, njw, SpectralParams};
+use crate::spectral::{self, njw, GraphKind, SpectralParams};
 
 /// Outcome of one distributed run.
 #[derive(Clone, Debug)]
@@ -90,6 +90,12 @@ pub fn run_pipeline(parts: &[SitePart], cfg: &PipelineConfig) -> Result<Pipeline
         if p.data.dim != dim {
             bail!("site {} has dim {}, expected {dim}", p.site_id, p.data.dim);
         }
+    }
+    if cfg.backend != Backend::Native && cfg.graph != GraphKind::Dense {
+        bail!(
+            "spectral.graph = \"knn\" requires backend = \"native\": the AOT XLA \
+             artifacts compute the dense affinity embedding"
+        );
     }
     let full_data_bytes: u64 = parts.iter().map(|p| p.data.wire_bytes()).sum();
 
@@ -346,6 +352,7 @@ fn central_cluster(
         k: cfg.k_clusters,
         bandwidth: cfg.bandwidth,
         algo: cfg.algo,
+        graph: cfg.graph,
         weighted: cfg.weighted_affinity,
         seed: cfg.seed ^ 0xC0FFEE,
     };
@@ -365,6 +372,7 @@ fn central_cluster(
                 Some(weights),
                 params.bandwidth,
                 params.k,
+                GraphKind::Dense, // run_pipeline rejects knn + XLA up front
                 &mut rng,
             );
             // weights double as the pad mask; the unweighted variant sends 1s
@@ -493,6 +501,27 @@ mod tests {
         let cfg = PipelineConfig { dml: DmlKind::RpTree, ..base_cfg() };
         let report = run_pipeline(&parts, &cfg).unwrap();
         assert!(report.accuracy > 0.99, "accuracy {}", report.accuracy);
+    }
+
+    #[test]
+    fn sparse_graph_pipeline_clusters_blobs() {
+        let ds = blob_mixture(4_000, 41);
+        let parts = scenario::split(&ds, Scenario::D3, 2, 43);
+        let cfg = PipelineConfig { graph: GraphKind::Knn { k: 12 }, ..base_cfg() };
+        let report = run_pipeline(&parts, &cfg).unwrap();
+        assert!(report.accuracy > 0.99, "accuracy {}", report.accuracy);
+    }
+
+    #[test]
+    fn sparse_graph_rejected_on_xla_backends() {
+        let ds = blob_mixture(400, 47);
+        let parts = scenario::split(&ds, Scenario::D3, 2, 49);
+        for backend in [Backend::Xla, Backend::XlaFull] {
+            let cfg =
+                PipelineConfig { graph: GraphKind::Knn { k: 8 }, backend, ..base_cfg() };
+            let err = run_pipeline(&parts, &cfg).unwrap_err();
+            assert!(err.to_string().contains("native"), "unexpected error: {err}");
+        }
     }
 
     #[test]

@@ -22,16 +22,40 @@ const SPLIT_RETRIES: usize = 4;
 
 /// Build an rpTree codebook with leaves of at most `max_leaf` points.
 pub fn build(data: &Dataset, max_leaf: usize, rng: &mut Rng) -> Codebook {
-    let n = data.len();
     let dim = data.dim;
-    if n == 0 {
+    if data.is_empty() {
         return Codebook { dim, codewords: vec![], weights: vec![], assign: vec![] };
     }
-    let max_leaf = max_leaf.max(1);
-
-    let mut assign = vec![0u32; n];
+    let mut assign = vec![0u32; data.len()];
     let mut codewords: Vec<f32> = Vec::new();
     let mut weights: Vec<u32> = Vec::new();
+    for node in leaf_groups(&data.points, dim, max_leaf, rng) {
+        emit_leaf(data, &node, &mut assign, &mut codewords, &mut weights);
+    }
+    Codebook { dim, codewords, weights, assign }
+}
+
+/// Partition `n = points.len()/dim` raw points into rp-tree leaves of at
+/// most `max_leaf` members and return the leaf membership lists.
+///
+/// This exposes the tree *structure* (rather than the leaf centroids) so
+/// other consumers can use it — the sparse k-NN affinity builder
+/// ([`crate::spectral::sparse`]) treats points sharing a leaf as
+/// approximate-neighbor candidates, one tree per voting round. [`build`]
+/// layers codebook emission on top of the same partition.
+///
+/// Every point lands in exactly one leaf; leaves exceed `max_leaf` only for
+/// constant (unsplittable) nodes. Deterministic in the `rng` seed.
+pub fn leaf_groups(points: &[f32], dim: usize, max_leaf: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    assert!(dim > 0);
+    let n = points.len() / dim;
+    assert_eq!(points.len(), n * dim, "points buffer not a multiple of dim");
+    let mut groups: Vec<Vec<u32>> = Vec::new();
+    if n == 0 {
+        return groups;
+    }
+    let max_leaf = max_leaf.max(1);
+    let point = |i: usize| &points[i * dim..(i + 1) * dim];
 
     // worklist of (point-index buffers); explicit stack instead of recursion
     let mut stack: Vec<Vec<u32>> = vec![(0..n as u32).collect()];
@@ -40,7 +64,7 @@ pub fn build(data: &Dataset, max_leaf: usize, rng: &mut Rng) -> Codebook {
 
     while let Some(node) = stack.pop() {
         if node.len() <= max_leaf {
-            emit_leaf(data, &node, &mut assign, &mut codewords, &mut weights);
+            groups.push(node);
             continue;
         }
 
@@ -64,7 +88,7 @@ pub fn build(data: &Dataset, max_leaf: usize, rng: &mut Rng) -> Codebook {
             let mut lo = f32::INFINITY;
             let mut hi = f32::NEG_INFINITY;
             for &i in &node {
-                let p = data.point(i as usize);
+                let p = point(i as usize);
                 let mut s = 0.0f32;
                 for j in 0..dim {
                     s += p[j] * dir[j];
@@ -98,11 +122,10 @@ pub fn build(data: &Dataset, max_leaf: usize, rng: &mut Rng) -> Codebook {
             None => {
                 // All retries failed: either the node is constant (leaf) or
                 // we median-split the last projection.
-                let distinct = node
-                    .iter()
-                    .any(|&i| data.point(i as usize) != data.point(node[0] as usize));
+                let distinct =
+                    node.iter().any(|&i| point(i as usize) != point(node[0] as usize));
                 if !distinct {
-                    emit_leaf(data, &node, &mut assign, &mut codewords, &mut weights);
+                    groups.push(node);
                     continue;
                 }
                 // median split on the last computed projection
@@ -112,7 +135,7 @@ pub fn build(data: &Dataset, max_leaf: usize, rng: &mut Rng) -> Codebook {
                 let left: Vec<u32> = order[..mid].iter().map(|&k| node[k]).collect();
                 let right: Vec<u32> = order[mid..].iter().map(|&k| node[k]).collect();
                 if left.is_empty() || right.is_empty() {
-                    emit_leaf(data, &node, &mut assign, &mut codewords, &mut weights);
+                    groups.push(node);
                     continue;
                 }
                 (left, right)
@@ -122,7 +145,7 @@ pub fn build(data: &Dataset, max_leaf: usize, rng: &mut Rng) -> Codebook {
         stack.push(right);
     }
 
-    Codebook { dim, codewords, weights, assign }
+    groups
 }
 
 fn emit_leaf(
@@ -227,5 +250,37 @@ mod tests {
         let cb = build(&ds, 10, &mut rng);
         assert_eq!(cb.n_codes(), 0);
         assert!(cb.assign.is_empty());
+    }
+
+    #[test]
+    fn leaf_groups_partition_every_point_once() {
+        let ds = gmm::paper_mixture_2d(2_000, 15);
+        let mut rng = Rng::new(17);
+        let groups = leaf_groups(&ds.points, 2, 30, &mut rng);
+        let mut seen = vec![false; ds.len()];
+        for g in &groups {
+            assert!(!g.is_empty());
+            assert!(g.len() <= 30, "leaf of {} exceeds cap", g.len());
+            for &i in g {
+                assert!(!seen[i as usize], "point {i} in two leaves");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some point missing from the partition");
+    }
+
+    #[test]
+    fn leaf_groups_whole_set_when_cap_covers_n() {
+        let ds = gmm::paper_mixture_2d(100, 19);
+        let mut rng = Rng::new(21);
+        let groups = leaf_groups(&ds.points, 2, 100, &mut rng);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].len(), 100);
+    }
+
+    #[test]
+    fn leaf_groups_empty_points() {
+        let mut rng = Rng::new(23);
+        assert!(leaf_groups(&[], 3, 10, &mut rng).is_empty());
     }
 }

@@ -12,8 +12,10 @@
 //!    ([`dml`]);
 //! 2. a leader collects the codewords (the only communication, accounted by
 //!    [`net`]) and runs normalized-cuts spectral clustering on their union
-//!    ([`spectral`], optionally executing the eigensolver as an AOT-compiled
-//!    XLA program through [`runtime`]);
+//!    ([`spectral`] — over the paper's dense affinity or, for large
+//!    codebooks, the sparse k-NN graph in [`spectral::sparse`]; optionally
+//!    executing the eigensolver as an AOT-compiled XLA program through
+//!    [`runtime`]);
 //! 3. codeword labels are populated back so each site recovers the label of
 //!    every original point ([`coordinator`]).
 //!
@@ -75,5 +77,5 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::dml::DmlKind;
     pub use crate::metrics::clustering_accuracy;
-    pub use crate::spectral::{Algo, Bandwidth};
+    pub use crate::spectral::{Algo, Bandwidth, GraphKind};
 }

@@ -11,7 +11,7 @@
 //! is irrelevant next to the matvec and buys unconditional numerical
 //! stability — no ghost eigenvalues).
 
-use super::{dot, norm2, normalize, Mat};
+use super::{dot, norm2, normalize, Mat, SymOp};
 use crate::rng::Rng;
 
 /// Full eigendecomposition of a symmetric matrix.
@@ -337,6 +337,18 @@ pub fn lanczos_topk(
     (evals, vecs)
 }
 
+/// [`lanczos_topk`] over a [`SymOp`] — the entry point the spectral layer
+/// uses so the dense and sparse graph operators run through one solver.
+pub fn lanczos_topk_op<A: SymOp + ?Sized>(
+    op: &A,
+    k: usize,
+    max_iters: usize,
+    tol: f64,
+    rng: &mut Rng,
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    lanczos_topk(op.dim(), |x, y| op.apply(x, y), k, max_iters, tol, rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -464,6 +476,29 @@ mod tests {
             for i in 0..n {
                 assert!((av[i] - lev[j] * lv[j][i]).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn lanczos_op_entry_point_matches_closure_form() {
+        struct MatOp(Mat);
+        impl SymOp for MatOp {
+            fn dim(&self) -> usize {
+                self.0.rows
+            }
+            fn apply(&self, x: &[f64], y: &mut [f64]) {
+                y.copy_from_slice(&self.0.matvec(x));
+            }
+        }
+        let a = random_sym(24, 41);
+        let op = MatOp(a.clone());
+        let mut r1 = Rng::new(43);
+        let mut r2 = Rng::new(43);
+        let (ev_op, _) = lanczos_topk_op(&op, 3, 24, 1e-12, &mut r1);
+        let (ev_cl, _) =
+            lanczos_topk(24, |x, y| y.copy_from_slice(&a.matvec(x)), 3, 24, 1e-12, &mut r2);
+        for (a, b) in ev_op.iter().zip(&ev_cl) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
     }
 

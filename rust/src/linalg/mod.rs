@@ -18,6 +18,23 @@
 
 pub mod eigen;
 
+/// A symmetric linear operator exposed only through its action `y = A x`.
+///
+/// Krylov methods need nothing else, which is what lets dense and sparse
+/// affinity graphs share one eigensolver: both the dense `n × n` normalized
+/// affinity and the CSR k-NN graph implement this trait via their
+/// `normalized_matvec` (see [`crate::spectral::NormalizedOp`]), and
+/// [`eigen::lanczos_topk_op`] iterates either one identically.
+///
+/// Symmetry is the implementor's contract — Lanczos silently produces
+/// garbage on non-symmetric operators.
+pub trait SymOp {
+    /// Operator dimension (the length of `x` and `y`).
+    fn dim(&self) -> usize;
+    /// Compute `y = A x`.
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+}
+
 /// Dense row-major `f64` matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {

@@ -155,6 +155,28 @@ pub fn build(points: &[f32], dim: usize, w: &[f32], sigma: f64) -> Affinity {
     Affinity { n, data, deg }
 }
 
+impl super::Graph for Affinity {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn degrees(&self) -> &[f64] {
+        &self.deg
+    }
+    fn normalized_matvec(&self, x: &[f64], y: &mut [f64]) {
+        Affinity::normalized_matvec(self, x, y)
+    }
+    fn for_each_edge<F: FnMut(usize, f64)>(&self, i: usize, mut f: F) {
+        for (j, &v) in self.row(i).iter().enumerate() {
+            if j != i {
+                f(j, v as f64);
+            }
+        }
+    }
+    fn subgraph(&self, idx: &[usize]) -> Affinity {
+        self.submatrix(idx)
+    }
+}
+
 /// Bandwidth (σ) selection policy.
 #[derive(Clone, Copy, Debug)]
 pub enum Bandwidth {

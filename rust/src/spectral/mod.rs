@@ -1,24 +1,115 @@
 //! Spectral clustering over codewords — the central step of Algorithm 1.
 //!
-//! Two algorithms (both operate on the same [`affinity::Affinity`]):
+//! Two algorithms (both generic over the [`Graph`] storage):
 //!
 //! * [`ncut`] — recursive normalized cuts (Shi–Malik), the paper's choice;
 //! * [`njw`] — NJW embedding + K-means, the algorithmic twin of the AOT
 //!   XLA artifact so that the native and PJRT backends can be compared
 //!   label-for-label (ablation A4/A5).
 //!
+//! Two graph storages (selected by [`GraphKind`]):
+//!
+//! * [`affinity::Affinity`] — the paper's dense `m × m` Gaussian affinity;
+//!   O(m²) memory and mat-vec, fine up to a few thousand codewords;
+//! * [`sparse::SparseAffinity`] — symmetric k-NN Gaussian graph in CSR
+//!   form, neighbors found with rp-tree leaf candidates; O(m·k) memory and
+//!   mat-vec, the path that unlocks 8k–32k+ codeword budgets.
+//!
+//! Both implement [`Graph`], and Lanczos consumes either through the
+//! [`NormalizedOp`] adapter (a [`crate::linalg::SymOp`]), so the
+//! algorithms above are written once.
+//!
 //! [`cluster_codewords`] is the front door used by the coordinator: it
-//! resolves the bandwidth policy, builds the (optionally weighted)
-//! affinity, runs the selected algorithm and reports eigen/bandwidth
+//! resolves the bandwidth policy, builds the configured graph (optionally
+//! weighted), runs the selected algorithm and reports eigen/bandwidth
 //! diagnostics.
 
 pub mod affinity;
 pub mod ncut;
 pub mod njw;
+pub mod sparse;
 
 use crate::rng::Rng;
 
 pub use affinity::{Affinity, Bandwidth};
+pub use sparse::SparseAffinity;
+
+/// Abstraction over affinity-graph storage (dense matrix or CSR k-NN).
+///
+/// Everything the spectral algorithms need from a graph: its size and
+/// cached degrees, the normalized mat-vec Lanczos iterates (exposed as a
+/// [`crate::linalg::SymOp`] via [`NormalizedOp`]), sparse-aware edge
+/// iteration for the ncut sweep, and subgraph extraction for the recursive
+/// splits.
+pub trait Graph: Sized {
+    /// Number of vertices.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cached vertex degrees `d_i = Σ_j A[i,j]` (f64 accumulation).
+    fn degrees(&self) -> &[f64];
+
+    /// `y = M x` where `M = D^{-1/2} A D^{-1/2}`. Zero-degree rows act as
+    /// isolated vertices.
+    fn normalized_matvec(&self, x: &[f64], y: &mut [f64]);
+
+    /// Visit the edges of vertex `i` as `(neighbor, weight)`. Self-loops
+    /// are never reported (`A[i,i] = 0` by construction in both storages).
+    fn for_each_edge<F: FnMut(usize, f64)>(&self, i: usize, f: F);
+
+    /// Restrict to an index subset; degrees are recomputed within the
+    /// subset (recursive normalized cuts re-partitions subgraphs).
+    fn subgraph(&self, idx: &[usize]) -> Self;
+}
+
+/// Adapter exposing a [`Graph`]'s normalized affinity `D^{-1/2} A D^{-1/2}`
+/// as a [`crate::linalg::SymOp`], so
+/// [`crate::linalg::eigen::lanczos_topk_op`] runs identically against dense
+/// and sparse storage.
+pub struct NormalizedOp<'a, G: Graph>(pub &'a G);
+
+impl<G: Graph> crate::linalg::SymOp for NormalizedOp<'_, G> {
+    fn dim(&self) -> usize {
+        self.0.len()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.0.normalized_matvec(x, y)
+    }
+}
+
+/// Affinity-graph construction policy for the central step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum GraphKind {
+    /// Full `m × m` Gaussian affinity (the paper's construction). O(m²)
+    /// memory — fine up to a few thousand codewords.
+    #[default]
+    Dense,
+    /// Symmetric k-nearest-neighbor Gaussian graph in CSR form, built with
+    /// rp-tree-accelerated approximate neighbor search. O(m·k) memory —
+    /// the large-codebook path (8k codewords and beyond).
+    Knn {
+        /// Neighbors kept per vertex before symmetrization. At `k = m − 1`
+        /// the graph equals the dense affinity exactly (the parity tests
+        /// pin that).
+        k: usize,
+    },
+}
+
+impl GraphKind {
+    /// Neighbor count used when `knn` is selected without an explicit `k`.
+    pub const DEFAULT_KNN_K: usize = 32;
+
+    pub fn parse(s: &str) -> Option<GraphKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" | "full" => Some(GraphKind::Dense),
+            "knn" | "sparse" => Some(GraphKind::Knn { k: Self::DEFAULT_KNN_K }),
+            _ => None,
+        }
+    }
+}
 
 /// Which spectral algorithm to run on the codewords.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +137,8 @@ pub struct SpectralParams {
     pub k: usize,
     pub bandwidth: Bandwidth,
     pub algo: Algo,
+    /// Affinity-graph storage: dense (paper) or sparse k-NN.
+    pub graph: GraphKind,
     /// Weight affinity entries by codeword group sizes (`w_i w_j` factor).
     /// The paper clusters centroids unweighted; weighting is ablation A2.
     pub weighted: bool,
@@ -58,6 +151,7 @@ impl Default for SpectralParams {
             k: 2,
             bandwidth: Bandwidth::default(),
             algo: Algo::RecursiveNcut,
+            graph: GraphKind::Dense,
             weighted: false,
             seed: 0,
         }
@@ -74,12 +168,16 @@ pub struct SpectralInfo {
 }
 
 /// Resolve a [`Bandwidth`] policy to a concrete σ for the given codewords.
+/// The eigengap search builds its candidate graphs with the same `graph`
+/// policy the clustering will use, so the sparse path stays O(m·k) even
+/// while searching.
 pub fn resolve_sigma(
     points: &[f32],
     dim: usize,
     weights: Option<&[f32]>,
     bw: Bandwidth,
     k: usize,
+    graph: GraphKind,
     rng: &mut Rng,
 ) -> f64 {
     match bw {
@@ -93,11 +191,26 @@ pub fn resolve_sigma(
             let n = points.len() / dim;
             let ones = vec![1.0f32; n];
             let w = weights.unwrap_or(&ones);
+            // The k-NN topology is σ-independent: search neighbors once and
+            // reweight per candidate σ, so every σ is scored on the same
+            // graph and the O(n·k·d) search is not repeated per scale.
+            let topo = match graph {
+                GraphKind::Dense => None,
+                GraphKind::Knn { k: knn } => Some(sparse::knn_topology(points, dim, knn, rng)),
+            };
             let mut best = (f64::NEG_INFINITY, med);
             for scale in [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0] {
                 let sigma = scale * med;
-                let aff = affinity::build(points, dim, w, sigma);
-                let evals = njw::top_eigenvalues(&aff, k_gap, rng);
+                let evals = match &topo {
+                    None => {
+                        let aff = affinity::build(points, dim, w, sigma);
+                        njw::top_eigenvalues(&aff, k_gap, rng)
+                    }
+                    Some(t) => {
+                        let aff = sparse::weight_topology(t, w, sigma);
+                        njw::top_eigenvalues(&aff, k_gap, rng)
+                    }
+                };
                 if evals.len() <= k_gap {
                     continue;
                 }
@@ -127,7 +240,8 @@ pub fn cluster_codewords(
     }
     let mut rng = Rng::new(params.seed);
 
-    let sigma = resolve_sigma(points, dim, weights, params.bandwidth, params.k, &mut rng);
+    let sigma =
+        resolve_sigma(points, dim, weights, params.bandwidth, params.k, params.graph, &mut rng);
     let ones;
     let w: &[f32] = if params.weighted {
         weights.expect("weighted=true requires weights")
@@ -136,17 +250,33 @@ pub fn cluster_codewords(
         &ones
     };
 
-    let aff = affinity::build(points, dim, w, sigma);
-    let labels = match params.algo {
-        Algo::RecursiveNcut => ncut::recursive_ncut(&aff, params.k, &mut rng),
-        Algo::Njw => {
-            let k_cols = params.k.clamp(2, 8);
-            let emb = njw::embed(&aff, k_cols, &mut rng);
-            njw::labels_from_embedding(&emb, n, k_cols, params.k, &mut rng)
+    let (labels, top_evals) = match params.graph {
+        GraphKind::Dense => {
+            let aff = affinity::build(points, dim, w, sigma);
+            cluster_graph(&aff, params, &mut rng)
+        }
+        GraphKind::Knn { k } => {
+            let aff = sparse::build_knn(points, dim, w, sigma, k, &mut rng);
+            cluster_graph(&aff, params, &mut rng)
         }
     };
-    let top_evals = njw::top_eigenvalues(&aff, params.k, &mut rng);
     (labels, SpectralInfo { sigma, top_evals })
+}
+
+/// Run the configured algorithm + eigen diagnostics on an already-built
+/// graph — the storage-generic half of [`cluster_codewords`].
+fn cluster_graph<G: Graph>(aff: &G, params: &SpectralParams, rng: &mut Rng) -> (Vec<u16>, Vec<f64>) {
+    let n = aff.len();
+    let labels = match params.algo {
+        Algo::RecursiveNcut => ncut::recursive_ncut(aff, params.k, rng),
+        Algo::Njw => {
+            let k_cols = params.k.clamp(2, 8);
+            let emb = njw::embed(aff, k_cols, rng);
+            njw::labels_from_embedding(&emb, n, k_cols, params.k, rng)
+        }
+    };
+    let top_evals = njw::top_eigenvalues(aff, params.k, rng);
+    (labels, top_evals)
 }
 
 #[cfg(test)]
@@ -176,6 +306,27 @@ mod tests {
     }
 
     #[test]
+    fn sparse_graph_clusters_the_paper_2d_mixture() {
+        let ds = gmm::paper_mixture_2d(400, 31);
+        for algo in [Algo::RecursiveNcut, Algo::Njw] {
+            let params = SpectralParams {
+                k: 4,
+                algo,
+                seed: 7,
+                bandwidth: Bandwidth::MedianScale(0.3),
+                graph: GraphKind::Knn { k: 24 },
+                ..Default::default()
+            };
+            let (labels, info) = cluster_codewords(&ds.points, 2, None, &params);
+            let acc = clustering_accuracy(&ds.labels, &labels);
+            // the k-NN graph sees only local structure on this heavily
+            // overlapping mixture, so allow a slightly wider band than the
+            // dense test (random = 0.25, dense lands ~0.75)
+            assert!(acc > 0.60, "{algo:?}: accuracy {acc}, sigma {}", info.sigma);
+        }
+    }
+
+    #[test]
     fn eigengap_search_returns_positive_sigma() {
         let ds = gmm::paper_mixture_2d(200, 33);
         let mut rng = Rng::new(1);
@@ -185,6 +336,23 @@ mod tests {
             None,
             Bandwidth::EigengapSearch { k: 4 },
             4,
+            GraphKind::Dense,
+            &mut rng,
+        );
+        assert!(sigma > 0.0);
+    }
+
+    #[test]
+    fn eigengap_search_works_on_the_sparse_graph() {
+        let ds = gmm::paper_mixture_2d(200, 33);
+        let mut rng = Rng::new(1);
+        let sigma = resolve_sigma(
+            &ds.points,
+            2,
+            None,
+            Bandwidth::EigengapSearch { k: 4 },
+            4,
+            GraphKind::Knn { k: 16 },
             &mut rng,
         );
         assert!(sigma > 0.0);
@@ -206,6 +374,20 @@ mod tests {
         let (b, _) = cluster_codewords(&ds.points, 2, Some(&w), &weighted);
         // identical affinity ⇒ identical labels (same seeds)
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn graph_kind_parses() {
+        assert_eq!(GraphKind::parse("dense"), Some(GraphKind::Dense));
+        assert_eq!(
+            GraphKind::parse("knn"),
+            Some(GraphKind::Knn { k: GraphKind::DEFAULT_KNN_K })
+        );
+        assert_eq!(
+            GraphKind::parse("sparse"),
+            Some(GraphKind::Knn { k: GraphKind::DEFAULT_KNN_K })
+        );
+        assert_eq!(GraphKind::parse("csr"), None);
     }
 
     #[test]

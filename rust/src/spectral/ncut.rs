@@ -2,17 +2,22 @@
 //!
 //! Each bipartition: second-largest eigenvector of `M = D^{-1/2} A D^{-1/2}`
 //! (via Lanczos on the mat-vec), mapped back through `D^{-1/2}` to the
-//! relaxed indicator, then the discrete split is recovered by an O(n²)
-//! *sweep*: vertices sorted by indicator value, every prefix split scored
-//! with the exact ncut objective `cut/assoc(A) + cut/assoc(B)` maintained
+//! relaxed indicator, then the discrete split is recovered by a *sweep*:
+//! vertices sorted by indicator value, every prefix split scored with the
+//! exact ncut objective `cut/assoc(A) + cut/assoc(B)` maintained
 //! incrementally. Recursion greedily splits whichever current cluster has
 //! the cheapest best split until `k` clusters exist (the paper recurses on
 //! each bipartition the same way).
+//!
+//! Everything is generic over [`Graph`]: with the dense affinity the sweep
+//! costs O(n²) total, with the sparse k-NN graph O(nnz) — edge iteration
+//! goes through [`Graph::for_each_edge`] so the sparse path never touches
+//! absent edges.
 
-use crate::linalg::eigen::lanczos_topk;
+use crate::linalg::eigen::lanczos_topk_op;
 use crate::rng::Rng;
 
-use super::affinity::Affinity;
+use super::{Graph, NormalizedOp};
 
 /// Result of scoring one cluster's best bipartition.
 struct SplitPlan {
@@ -24,12 +29,12 @@ struct SplitPlan {
 
 /// Best ncut bipartition of `aff` by eigenvector sweep. Returns `None` for
 /// clusters too small or too disconnected to split meaningfully.
-fn best_bipartition(aff: &Affinity, rng: &mut Rng) -> Option<SplitPlan> {
-    let n = aff.n;
+fn best_bipartition<G: Graph>(aff: &G, rng: &mut Rng) -> Option<SplitPlan> {
+    let n = aff.len();
     if n < 2 {
         return None;
     }
-    let total_deg: f64 = aff.deg.iter().sum();
+    let total_deg: f64 = aff.degrees().iter().sum();
     if total_deg <= 1e-300 {
         // no edges: arbitrary halving (keeps recursion finite)
         let side_a: Vec<bool> = (0..n).map(|i| i < n / 2).collect();
@@ -41,15 +46,14 @@ fn best_bipartition(aff: &Affinity, rng: &mut Rng) -> Option<SplitPlan> {
     // and close to λ3, which slows Ritz separation — under-iterating mixes
     // v3 into v2 and scrambles the sweep order.
     let iters = (8 * ((n as f64).ln().ceil() as usize) + 80).min(n);
-    let (_evals, vecs) =
-        lanczos_topk(n, |x, y| aff.normalized_matvec(x, y), 2, iters, 1e-10, rng);
+    let (_evals, vecs) = lanczos_topk_op(&NormalizedOp(aff), 2, iters, 1e-10, rng);
     if vecs.len() < 2 {
         return None;
     }
     // relaxed indicator u = D^{-1/2} v2
     let u: Vec<f64> = vecs[1]
         .iter()
-        .zip(&aff.deg)
+        .zip(aff.degrees())
         .map(|(v, d)| if *d > 1e-300 { v / d.sqrt() } else { 0.0 })
         .collect();
 
@@ -64,14 +68,13 @@ fn best_bipartition(aff: &Affinity, rng: &mut Rng) -> Option<SplitPlan> {
 
     for (prefix, &v) in order.iter().enumerate().take(n - 1) {
         // move v from B to A: cut gains v→B edges, loses v→A edges
-        let row = aff.row(v);
         let mut to_a = 0.0f64;
-        for (j, &w) in row.iter().enumerate() {
+        aff.for_each_edge(v, |j, w| {
             if in_a[j] {
-                to_a += w as f64;
+                to_a += w;
             }
-        }
-        let row_sum = aff.deg[v];
+        });
+        let row_sum = aff.degrees()[v];
         let to_b = row_sum - to_a; // includes nothing for self (A[v,v]=0)
         cut += to_b - to_a;
         in_a[v] = true;
@@ -97,9 +100,9 @@ fn best_bipartition(aff: &Affinity, rng: &mut Rng) -> Option<SplitPlan> {
 /// Cluster the graph into `k` groups by recursive normalized cuts.
 /// Returns one label per vertex (0..k', k' ≤ k — fewer if the graph cannot
 /// be split further).
-pub fn recursive_ncut(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<u16> {
+pub fn recursive_ncut<G: Graph>(aff: &G, k: usize, rng: &mut Rng) -> Vec<u16> {
     assert!(k >= 1);
-    let n = aff.n;
+    let n = aff.len();
     let mut labels = vec![0u16; n];
     if k == 1 || n <= 1 {
         return labels;
@@ -115,7 +118,7 @@ pub fn recursive_ncut(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<u16> {
         if members.len() < 2 {
             return None;
         }
-        let sub = aff.submatrix(members);
+        let sub = aff.subgraph(members);
         best_bipartition(&sub, rng)
     };
 
@@ -203,6 +206,17 @@ mod tests {
         let labels = recursive_ncut(&aff, 4, &mut rng);
         let acc = purity(&labels, 40, 4);
         assert!(acc > 0.99, "accuracy {acc}");
+    }
+
+    #[test]
+    fn two_blobs_split_perfectly_on_sparse_graph() {
+        let pts = blob_points(&[(0.0, 0.0), (10.0, 0.0)], 60, 0.4, 1);
+        let w = vec![1.0f32; 120];
+        let mut grng = Rng::new(3);
+        let aff = crate::spectral::sparse::build_knn(&pts, 2, &w, 1.5, 10, &mut grng);
+        let mut rng = Rng::new(2);
+        let labels = recursive_ncut(&aff, 2, &mut rng);
+        assert_eq!(purity(&labels, 60, 2), 1.0);
     }
 
     #[test]

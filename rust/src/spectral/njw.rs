@@ -6,19 +6,19 @@
 //! [`labels_from_embedding`] finishes the job identically for both
 //! backends, so native-vs-XLA parity tests compare end labels directly.
 
-use crate::linalg::eigen::lanczos_topk;
+use crate::linalg::eigen::lanczos_topk_op;
 use crate::rng::Rng;
 
-use super::affinity::Affinity;
+use super::{Graph, NormalizedOp};
 
 /// Compute the `k`-column spectral embedding of `aff` natively (Lanczos).
-/// Rows are the codeword coordinates in spectral space, **not yet**
-/// row-normalized. Column order: decreasing eigenvalue.
-pub fn embed(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<f64> {
-    let n = aff.n;
+/// Works on any [`Graph`] storage (dense or sparse k-NN). Rows are the
+/// codeword coordinates in spectral space, **not yet** row-normalized.
+/// Column order: decreasing eigenvalue.
+pub fn embed<G: Graph>(aff: &G, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = aff.len();
     let iters = (4 * ((n as f64).ln().ceil() as usize) + 60).min(n.max(k + 2));
-    let (_evals, vecs) =
-        lanczos_topk(n, |x, y| aff.normalized_matvec(x, y), k, iters, 1e-10, rng);
+    let (_evals, vecs) = lanczos_topk_op(&NormalizedOp(aff), k, iters, 1e-10, rng);
     let mut embedding = vec![0.0f64; n * k];
     for (j, v) in vecs.iter().enumerate() {
         for i in 0..n {
@@ -30,12 +30,11 @@ pub fn embed(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<f64> {
 
 /// Top-(k+1) eigenvalues of the normalized affinity (for eigengap-based
 /// bandwidth search).
-pub fn top_eigenvalues(aff: &Affinity, k: usize, rng: &mut Rng) -> Vec<f64> {
-    let n = aff.n;
+pub fn top_eigenvalues<G: Graph>(aff: &G, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = aff.len();
     let want = (k + 1).min(n);
     let iters = (4 * ((n as f64).ln().ceil() as usize) + 60).min(n.max(want + 2));
-    let (evals, _) =
-        lanczos_topk(n, |x, y| aff.normalized_matvec(x, y), want, iters, 1e-10, rng);
+    let (evals, _) = lanczos_topk_op(&NormalizedOp(aff), want, iters, 1e-10, rng);
     evals
 }
 

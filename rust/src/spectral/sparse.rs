@@ -1,0 +1,511 @@
+//! Sparse k-NN Gaussian affinity in CSR form — the large-codebook path.
+//!
+//! The dense affinity ([`super::affinity`]) costs O(m²) memory and mat-vec
+//! time, which caps the total code budget at a few thousand. This module
+//! keeps only a symmetric k-nearest-neighbor graph:
+//!
+//! * neighbor *candidates* come from rp-tree leaves
+//!   ([`crate::dml::rptree::leaf_groups`]) over several independent trees —
+//!   points sharing a leaf in any tree are candidates, the classic
+//!   forest-of-rp-trees approximate-NN scheme, O(n · k · trees · dim)
+//!   instead of O(n² · dim);
+//! * kept edges get the same `w_i w_j exp(−‖x_i−x_j‖²/2σ²)` Gaussian
+//!   weight as the dense path — computed with the *identical* expanded-form
+//!   f32 arithmetic, so at `k = m − 1` the two graphs match bit for bit;
+//! * the edge set is union-symmetrized (`i→j` or `j→i` keeps both
+//!   directions) and stored CSR with cached degrees, so memory and
+//!   [`SparseAffinity::normalized_matvec`] are O(m·k̄).
+//!
+//! [`SparseAffinity`] implements [`super::Graph`], so recursive ncut, the
+//! NJW embedding and the Lanczos eigensolver run on it unchanged.
+
+use crate::dml::rptree;
+use crate::par;
+use crate::rng::Rng;
+
+use super::Graph;
+
+/// How many independent rp-trees vote on neighbor candidates. More trees
+/// raise recall (and build cost) linearly; four is plenty for the smooth
+/// codeword clouds this pipeline produces.
+const N_TREES: usize = 4;
+
+/// Symmetric k-NN Gaussian affinity with CSR storage and cached degrees.
+#[derive(Clone, Debug)]
+pub struct SparseAffinity {
+    pub n: usize,
+    /// CSR row offsets (`n + 1` entries, monotone, `row_ptr[n] == nnz`).
+    pub row_ptr: Vec<usize>,
+    /// Column indices, ascending within each row, never the diagonal.
+    pub col_idx: Vec<u32>,
+    /// Edge weights, aligned with `col_idx`.
+    pub vals: Vec<f32>,
+    /// Degree `d_i = Σ_j A[i,j]` (f64 accumulation).
+    pub deg: Vec<f64>,
+    /// Cached `1/√d_i` (0 for isolated vertices): the normalized mat-vec is
+    /// Lanczos' inner loop, so this is precomputed once at construction
+    /// rather than per call.
+    pub inv_sqrt_deg: Vec<f64>,
+}
+
+impl SparseAffinity {
+    /// Finish construction from assembled CSR arrays: compute degrees and
+    /// the cached `1/√d` table.
+    fn from_csr(n: usize, row_ptr: Vec<usize>, col_idx: Vec<u32>, vals: Vec<f32>) -> Self {
+        debug_assert_eq!(row_ptr.len(), n + 1);
+        debug_assert_eq!(col_idx.len(), vals.len());
+        let mut deg = vec![0.0f64; n];
+        for i in 0..n {
+            deg[i] = vals[row_ptr[i]..row_ptr[i + 1]].iter().map(|&v| v as f64).sum();
+        }
+        let inv_sqrt_deg: Vec<f64> =
+            deg.iter().map(|&d| if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+        SparseAffinity { n, row_ptr, col_idx, vals, deg, inv_sqrt_deg }
+    }
+    /// Stored (directed) entries; each undirected edge counts twice.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Bytes of CSR storage — the footprint the `hotpath` bench reports
+    /// against the dense path's `4m²`.
+    pub fn storage_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * 4
+            + self.vals.len() * 4
+            + self.deg.len() * 8
+    }
+
+    /// The `(columns, weights)` pair of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    /// y = M x where `M = D^{-1/2} A D^{-1/2}` — Lanczos' entire inner
+    /// loop, parallel over row chunks like the dense twin.
+    pub fn normalized_matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        // scale input once: z = D^{-1/2} x
+        let z: Vec<f64> = x.iter().zip(&self.inv_sqrt_deg).map(|(v, s)| v * s).collect();
+        par::par_chunks_mut(y, 512, |start, chunk| {
+            for (off, out) in chunk.iter_mut().enumerate() {
+                let i = start + off;
+                let (cols, vals) = self.row(i);
+                let mut acc = 0.0f64;
+                for (c, v) in cols.iter().zip(vals) {
+                    acc += *v as f64 * z[*c as usize];
+                }
+                *out = acc * self.inv_sqrt_deg[i];
+            }
+        });
+    }
+
+    /// Restrict to an index subset: kept edges are those with both
+    /// endpoints in `idx`, degrees recomputed within the subset. Column
+    /// order within a row follows `idx` order (ascending `idx` keeps rows
+    /// sorted, which is how recursive ncut calls it).
+    pub fn subgraph(&self, idx: &[usize]) -> SparseAffinity {
+        let m = idx.len();
+        let mut local = vec![u32::MAX; self.n];
+        for (r, &g) in idx.iter().enumerate() {
+            local[g] = r as u32;
+        }
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for &g in idx {
+            let (cols, ws) = self.row(g);
+            for (c, v) in cols.iter().zip(ws) {
+                let lc = local[*c as usize];
+                if lc != u32::MAX {
+                    col_idx.push(lc);
+                    vals.push(*v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        SparseAffinity::from_csr(m, row_ptr, col_idx, vals)
+    }
+}
+
+impl Graph for SparseAffinity {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn degrees(&self) -> &[f64] {
+        &self.deg
+    }
+    fn normalized_matvec(&self, x: &[f64], y: &mut [f64]) {
+        SparseAffinity::normalized_matvec(self, x, y)
+    }
+    fn for_each_edge<F: FnMut(usize, f64)>(&self, i: usize, mut f: F) {
+        let (cols, vals) = self.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            f(*c as usize, *v as f64);
+        }
+    }
+    fn subgraph(&self, idx: &[usize]) -> SparseAffinity {
+        SparseAffinity::subgraph(self, idx)
+    }
+}
+
+/// The σ-independent half of a k-NN affinity: the symmetrized neighbor
+/// topology with squared distances per edge, in CSR shape.
+///
+/// The expensive part of a build — rp-tree construction and the candidate
+/// distance search — does not depend on the bandwidth, so the eigengap
+/// σ-search computes one topology and reweights it per candidate σ
+/// ([`weight_topology`]); this also means every σ is scored on the *same*
+/// random graph instead of conflating the eigengap signal with
+/// graph-sampling noise.
+#[derive(Clone, Debug)]
+pub struct KnnTopology {
+    pub n: usize,
+    /// CSR row offsets (`n + 1` entries).
+    pub row_ptr: Vec<usize>,
+    /// Column indices, ascending within each row, never the diagonal.
+    pub col_idx: Vec<u32>,
+    /// `‖x_i − x_j‖²` per edge (expanded-form f32, matching the dense
+    /// builder's arithmetic bit for bit).
+    pub d2: Vec<f32>,
+}
+
+/// Build the symmetric k-NN Gaussian affinity for `points` (`n × dim`,
+/// row-major) with per-point weights `w` (all-ones for the unweighted
+/// variant) and bandwidth `sigma`.
+///
+/// `k` is clamped to `n − 1`. Candidates come from rp-tree leaf partitions
+/// with a leaf cap of `max(4k, 64)`; once the cap reaches `n` the partition
+/// is a single leaf and the search is exact — in particular `k = n − 1`
+/// reproduces the dense affinity entry for entry. Ties at the k-th distance
+/// break deterministically toward the smaller index.
+///
+/// Equivalent to [`knn_topology`] followed by [`weight_topology`]; callers
+/// that sweep σ (the eigengap search) should use the two-step form so the
+/// neighbor search runs once.
+pub fn build_knn(
+    points: &[f32],
+    dim: usize,
+    w: &[f32],
+    sigma: f64,
+    k: usize,
+    rng: &mut Rng,
+) -> SparseAffinity {
+    weight_topology(&knn_topology(points, dim, k, rng), w, sigma)
+}
+
+/// Symmetrized approximate k-NN topology of `points` (see [`build_knn`]
+/// for the search scheme). σ-independent; pair with [`weight_topology`].
+pub fn knn_topology(points: &[f32], dim: usize, k: usize, rng: &mut Rng) -> KnnTopology {
+    assert!(dim > 0);
+    let n = points.len() / dim;
+    assert_eq!(points.len(), n * dim);
+    if n == 0 {
+        return KnnTopology { n: 0, row_ptr: vec![0], col_idx: vec![], d2: vec![] };
+    }
+    if n == 1 {
+        return KnnTopology { n: 1, row_ptr: vec![0, 0], col_idx: vec![], d2: vec![] };
+    }
+    let k = k.clamp(1, n - 1);
+
+    // ‖x‖² table — shared with the weight pass so the f32 arithmetic is
+    // bit-identical to the dense builder's expanded form.
+    let sq: Vec<f32> = (0..n)
+        .map(|i| points[i * dim..(i + 1) * dim].iter().map(|v| v * v).sum())
+        .collect();
+
+    // Leaf partitions from independent rp-trees. A cap ≥ n collapses each
+    // tree to one leaf, so one tree suffices and the search is exact.
+    let leaf_cap = (4 * k).max(64).min(n);
+    let n_trees = if leaf_cap >= n { 1 } else { N_TREES };
+    let mut leaves: Vec<Vec<Vec<u32>>> = Vec::with_capacity(n_trees);
+    let mut leaf_of: Vec<Vec<u32>> = Vec::with_capacity(n_trees);
+    for _ in 0..n_trees {
+        let groups = rptree::leaf_groups(points, dim, leaf_cap, rng);
+        let mut assign = vec![0u32; n];
+        for (lid, g) in groups.iter().enumerate() {
+            for &i in g {
+                assign[i as usize] = lid as u32;
+            }
+        }
+        leaves.push(groups);
+        leaf_of.push(assign);
+    }
+
+    // Per-point k nearest among leaf-mates (parallel over points).
+    let mut nbrs: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n]; // (j, d²)
+    par::par_chunks_mut(&mut nbrs, 64, |start, chunk| {
+        let mut cand: Vec<u32> = Vec::new();
+        let mut scored: Vec<(f32, u32)> = Vec::new();
+        for (off, out) in chunk.iter_mut().enumerate() {
+            let i = start + off;
+            cand.clear();
+            for t in 0..n_trees {
+                cand.extend_from_slice(&leaves[t][leaf_of[t][i] as usize]);
+            }
+            cand.sort_unstable();
+            cand.dedup();
+            scored.clear();
+            let pi = &points[i * dim..(i + 1) * dim];
+            for &ju in &cand {
+                let j = ju as usize;
+                if j == i {
+                    continue;
+                }
+                let pj = &points[j * dim..(j + 1) * dim];
+                let mut dot = 0.0f32;
+                for l in 0..dim {
+                    dot += pi[l] * pj[l];
+                }
+                let d2 = (sq[i] + sq[j] - 2.0 * dot).max(0.0);
+                scored.push((d2, ju));
+            }
+            if scored.len() > k {
+                // tuple order breaks distance ties by index: deterministic
+                scored.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+                scored.truncate(k);
+            }
+            out.extend(scored.iter().map(|&(d2, j)| (j, d2)));
+        }
+    });
+
+    // Union-symmetrize into adjacency lists carrying d². The two directions
+    // of a mutual edge computed the same f32 distance (commutative ops on
+    // identical inputs), so the dedup after sorting is exact.
+    let mut adj: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for &(ju, d2) in &nbrs[i] {
+            adj[i].push((ju, d2));
+            adj[ju as usize].push((i as u32, d2));
+        }
+    }
+
+    // CSR assembly: sort each row by column, drop the duplicate direction
+    // of mutual edges.
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    row_ptr.push(0usize);
+    let mut col_idx = Vec::new();
+    let mut d2s = Vec::new();
+    for row in adj.iter_mut() {
+        row.sort_unstable_by_key(|&(j, _)| j);
+        row.dedup_by_key(|e| e.0);
+        for &(j, d2) in row.iter() {
+            col_idx.push(j);
+            d2s.push(d2);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    KnnTopology { n, row_ptr, col_idx, d2: d2s }
+}
+
+/// Apply Gaussian weights `w_i w_j exp(−d²/2σ²)` for one σ to a prebuilt
+/// [`KnnTopology`]. O(nnz) — cheap enough to call once per candidate σ in
+/// the eigengap search.
+pub fn weight_topology(topo: &KnnTopology, w: &[f32], sigma: f64) -> SparseAffinity {
+    assert_eq!(w.len(), topo.n);
+    assert!(sigma > 0.0, "sigma must be positive");
+    let inv_two_sigma2 = (1.0 / (2.0 * sigma * sigma)) as f32;
+    let mut vals = Vec::with_capacity(topo.col_idx.len());
+    for i in 0..topo.n {
+        let (s, e) = (topo.row_ptr[i], topo.row_ptr[i + 1]);
+        for (c, d2) in topo.col_idx[s..e].iter().zip(&topo.d2[s..e]) {
+            vals.push(w[i] * w[*c as usize] * (-d2 * inv_two_sigma2).exp());
+        }
+    }
+    SparseAffinity::from_csr(topo.n, topo.row_ptr.clone(), topo.col_idx.clone(), vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spectral::affinity;
+
+    fn blob_points(centers: &[(f32, f32)], m: usize, spread: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::with_capacity(centers.len() * m * 2);
+        for &(cx, cy) in centers {
+            for _ in 0..m {
+                pts.push(cx + rng.normal_f32(0.0, spread));
+                pts.push(cy + rng.normal_f32(0.0, spread));
+            }
+        }
+        pts
+    }
+
+    /// Structural invariants every build must satisfy.
+    fn check_csr(a: &SparseAffinity) {
+        assert_eq!(a.row_ptr.len(), a.n + 1);
+        assert_eq!(a.row_ptr[0], 0);
+        assert_eq!(*a.row_ptr.last().unwrap(), a.nnz());
+        assert_eq!(a.col_idx.len(), a.vals.len());
+        assert!(a.row_ptr.windows(2).all(|w| w[0] <= w[1]), "row_ptr not monotone");
+        for i in 0..a.n {
+            let (cols, vals) = a.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} not sorted/unique");
+            assert!(cols.iter().all(|&c| c as usize != i), "self-loop in row {i}");
+            let sum: f64 = vals.iter().map(|&v| v as f64).sum();
+            assert!((sum - a.deg[i]).abs() < 1e-9, "deg[{i}] off: {sum} vs {}", a.deg[i]);
+            // symmetry: every (i, j, v) has a matching (j, i, v)
+            for (c, v) in cols.iter().zip(vals) {
+                let (jc, jv) = a.row(*c as usize);
+                let pos = jc.binary_search(&(i as u32));
+                assert!(pos.is_ok(), "edge ({i},{c}) has no mirror");
+                assert_eq!(jv[pos.unwrap()], *v, "asymmetric weight on ({i},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_is_symmetric_with_consistent_degrees() {
+        let pts = blob_points(&[(0.0, 0.0), (8.0, 0.0), (0.0, 8.0)], 40, 0.5, 3);
+        let w = vec![1.0f32; 120];
+        let mut rng = Rng::new(5);
+        let a = build_knn(&pts, 2, &w, 1.0, 8, &mut rng);
+        check_csr(&a);
+        // each vertex contributes ≤ k outgoing picks, so symmetrization
+        // bounds nnz by 2nk; the graph must also be connected enough that
+        // no vertex is isolated
+        assert!(a.nnz() <= 2 * 120 * 8, "nnz {}", a.nnz());
+        for i in 0..a.n {
+            let (cols, _) = a.row(i);
+            assert!(!cols.is_empty(), "vertex {i} isolated");
+        }
+    }
+
+    #[test]
+    fn full_k_matches_dense_bitwise() {
+        let pts = blob_points(&[(0.0, 0.0), (6.0, 0.0)], 20, 0.6, 7);
+        let n = 40;
+        let w: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+        let dense = affinity::build(&pts, 2, &w, 1.3);
+        let mut rng = Rng::new(9);
+        let sp = build_knn(&pts, 2, &w, 1.3, n - 1, &mut rng);
+        check_csr(&sp);
+        assert_eq!(sp.nnz(), n * (n - 1));
+        for i in 0..n {
+            let (cols, vals) = sp.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                assert_eq!(
+                    v.to_bits(),
+                    dense.row(i)[*c as usize].to_bits(),
+                    "entry ({i},{c}) differs from dense"
+                );
+            }
+            assert_eq!(sp.deg[i].to_bits(), dense.deg[i].to_bits(), "deg[{i}] differs");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense_at_full_k() {
+        let pts = blob_points(&[(0.0, 0.0), (5.0, 5.0)], 25, 0.5, 11);
+        let n = 50;
+        let w = vec![1.0f32; n];
+        let dense = affinity::build(&pts, 2, &w, 1.0);
+        let mut rng = Rng::new(13);
+        let sp = build_knn(&pts, 2, &w, 1.0, n - 1, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let mut yd = vec![0.0f64; n];
+        let mut ys = vec![0.0f64; n];
+        dense.normalized_matvec(&x, &mut yd);
+        sp.normalized_matvec(&x, &mut ys);
+        for i in 0..n {
+            assert!((yd[i] - ys[i]).abs() < 1e-12, "y[{i}]: {} vs {}", yd[i], ys[i]);
+        }
+    }
+
+    #[test]
+    fn normalized_matvec_top_eigvec_is_sqrt_deg() {
+        // M (D^{1/2} 1) = D^{-1/2} A 1 = D^{1/2} 1 — exact, like the dense twin
+        let pts = blob_points(&[(0.0, 0.0), (4.0, 0.0)], 30, 0.5, 15);
+        let w = vec![1.0f32; 60];
+        let mut rng = Rng::new(17);
+        let a = build_knn(&pts, 2, &w, 2.0, 10, &mut rng);
+        let x: Vec<f64> = a.deg.iter().map(|d| d.sqrt()).collect();
+        let mut y = vec![0.0; 60];
+        a.normalized_matvec(&x, &mut y);
+        for i in 0..60 {
+            assert!((y[i] - x[i]).abs() < 1e-9, "{} vs {}", y[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn subgraph_keeps_internal_edges_only() {
+        let pts = blob_points(&[(0.0, 0.0), (9.0, 0.0)], 15, 0.4, 19);
+        let w = vec![1.0f32; 30];
+        let mut rng = Rng::new(21);
+        let a = build_knn(&pts, 2, &w, 1.5, 29, &mut rng); // full graph
+        let idx: Vec<usize> = (0..10).collect();
+        let sub = a.subgraph(&idx);
+        check_csr(&sub);
+        assert_eq!(sub.n, 10);
+        // full graph restricted to 10 vertices = complete graph on 10
+        assert_eq!(sub.nnz(), 10 * 9);
+        let (cols, vals) = sub.row(0);
+        let (acols, avals) = a.row(0);
+        // row 0's first 9 global columns are exactly 1..=9 here
+        for (c, v) in cols.iter().zip(vals) {
+            let gpos = acols.iter().position(|&g| g == *c).unwrap();
+            assert_eq!(avals[gpos], *v);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let pts = blob_points(&[(0.0, 0.0), (7.0, 0.0)], 50, 0.5, 23);
+        let w = vec![1.0f32; 100];
+        let mut r1 = Rng::new(31);
+        let mut r2 = Rng::new(31);
+        let a = build_knn(&pts, 2, &w, 1.0, 6, &mut r1);
+        let b = build_knn(&pts, 2, &w, 1.0, 6, &mut r2);
+        assert_eq!(a.col_idx, b.col_idx);
+        assert_eq!(a.vals, b.vals);
+        assert_eq!(a.row_ptr, b.row_ptr);
+    }
+
+    #[test]
+    fn topology_reuse_matches_fresh_builds() {
+        // reweighting one topology across σ equals building from scratch at
+        // each σ with the same tree seed — what the eigengap search relies on
+        let pts = blob_points(&[(0.0, 0.0), (6.0, 0.0)], 40, 0.5, 37);
+        let w = vec![1.0f32; 80];
+        let mut rt = Rng::new(41);
+        let topo = knn_topology(&pts, 2, 8, &mut rt);
+        for sigma in [0.5, 1.0, 2.5] {
+            let reweighted = weight_topology(&topo, &w, sigma);
+            let mut rf = Rng::new(41);
+            let fresh = build_knn(&pts, 2, &w, sigma, 8, &mut rf);
+            assert_eq!(reweighted.col_idx, fresh.col_idx);
+            assert_eq!(reweighted.row_ptr, fresh.row_ptr);
+            assert_eq!(reweighted.vals, fresh.vals);
+            assert_eq!(reweighted.deg, fresh.deg);
+        }
+    }
+
+    #[test]
+    fn edge_cases_empty_and_singleton() {
+        let mut rng = Rng::new(1);
+        let e = build_knn(&[], 2, &[], 1.0, 4, &mut rng);
+        assert_eq!(e.n, 0);
+        assert_eq!(e.nnz(), 0);
+        let s = build_knn(&[1.0, 2.0], 2, &[1.0], 1.0, 4, &mut rng);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.deg, vec![0.0]);
+    }
+
+    #[test]
+    fn storage_is_linear_in_k_not_quadratic() {
+        let pts = blob_points(&[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0), (10.0, 10.0)], 100, 0.5, 33);
+        let n = 400;
+        let w = vec![1.0f32; n];
+        let mut rng = Rng::new(35);
+        let a = build_knn(&pts, 2, &w, 1.0, 8, &mut rng);
+        // union symmetrization at most doubles the k picks per vertex
+        assert!(a.nnz() <= n * 16, "nnz {} too dense", a.nnz());
+        assert!(a.storage_bytes() < n * n, "CSR not smaller than dense");
+    }
+}

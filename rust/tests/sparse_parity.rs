@@ -1,0 +1,136 @@
+//! Sparse-vs-dense spectral parity (ISSUE 2 acceptance).
+//!
+//! At `k = m − 1` the sparse k-NN builder keeps every neighbor, and its
+//! expanded-form f32 weight arithmetic matches the dense builder bit for
+//! bit — so the two graphs are the *same* operator in different storage.
+//! These tests pin that equivalence end to end: entries, degrees,
+//! eigenvalues, eigenvectors, and final cluster assignments on a small
+//! well-separated GMM (the quickstart mixture family).
+
+use dsc::data::gmm;
+use dsc::metrics::clustering_accuracy;
+use dsc::rng::Rng;
+use dsc::spectral::{
+    affinity, njw, sparse, Algo, Bandwidth, GraphKind, SpectralParams,
+};
+
+/// Small well-separated 4-component GMM (same family as the pipeline
+/// quickstart, scaled down so the dense path is cheap to compare against).
+fn gmm4(n: usize, seed: u64) -> dsc::data::Dataset {
+    let comps = vec![
+        gmm::Component::isotropic(vec![0.0, 0.0], 0.5, 1.0),
+        gmm::Component::isotropic(vec![12.0, 0.0], 0.5, 1.0),
+        gmm::Component::isotropic(vec![0.0, 12.0], 0.5, 1.0),
+        gmm::Component::isotropic(vec![12.0, 12.0], 0.5, 1.0),
+    ];
+    gmm::sample("gmm4", &comps, n, seed)
+}
+
+/// Two-component variant with *moderate* separation: the blobs couple
+/// enough that λ₂ is simple and well-gapped from both λ₁ and λ₃, so the
+/// second eigenvector is well-conditioned and comparable across storages
+/// (fully separated blobs would make λ₁ ≈ λ₂ degenerate and the individual
+/// vectors arbitrary up to rotation).
+fn gmm2(n: usize, seed: u64) -> dsc::data::Dataset {
+    let comps = vec![
+        gmm::Component::isotropic(vec![0.0, 0.0], 0.5, 1.0),
+        gmm::Component::isotropic(vec![4.0, 0.0], 0.5, 1.0),
+    ];
+    gmm::sample("gmm2", &comps, n, seed)
+}
+
+#[test]
+fn full_k_graphs_are_the_same_operator() {
+    let ds = gmm4(120, 3);
+    let m = ds.len();
+    let w = vec![1.0f32; m];
+    let dense = affinity::build(&ds.points, 2, &w, 1.5);
+    let mut rng = Rng::new(5);
+    let sp = sparse::build_knn(&ds.points, 2, &w, 1.5, m - 1, &mut rng);
+
+    assert_eq!(sp.nnz(), m * (m - 1), "full-k graph must be complete");
+    for i in 0..m {
+        let (cols, vals) = sp.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            assert_eq!(v.to_bits(), dense.row(i)[*c as usize].to_bits());
+        }
+        assert_eq!(sp.deg[i].to_bits(), dense.deg[i].to_bits());
+    }
+}
+
+#[test]
+fn eigenvalues_and_second_eigenvector_agree() {
+    let ds = gmm2(100, 7);
+    let m = ds.len();
+    let w = vec![1.0f32; m];
+    let dense = affinity::build(&ds.points, 2, &w, 1.5);
+    let mut grng = Rng::new(9);
+    let sp = sparse::build_knn(&ds.points, 2, &w, 1.5, m - 1, &mut grng);
+
+    let mut r1 = Rng::new(11);
+    let mut r2 = Rng::new(11);
+    let ed = njw::top_eigenvalues(&dense, 3, &mut r1);
+    let es = njw::top_eigenvalues(&sp, 3, &mut r2);
+    for (a, b) in ed.iter().zip(&es) {
+        assert!((a - b).abs() < 1e-9, "eigenvalue {a} vs {b}");
+    }
+
+    // v2 is simple for two blobs → compare the embedding column up to sign
+    let mut r1 = Rng::new(13);
+    let mut r2 = Rng::new(13);
+    let embd = njw::embed(&dense, 2, &mut r1);
+    let embs = njw::embed(&sp, 2, &mut r2);
+    let dot: f64 = (0..m).map(|i| embd[i * 2 + 1] * embs[i * 2 + 1]).sum();
+    let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+    for i in 0..m {
+        let (a, b) = (embd[i * 2 + 1], sign * embs[i * 2 + 1]);
+        assert!((a - b).abs() < 1e-6, "v2[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn labels_identical_up_to_permutation_both_algorithms() {
+    let ds = gmm4(160, 17);
+    let m = ds.len();
+    for algo in [Algo::RecursiveNcut, Algo::Njw] {
+        let base = SpectralParams {
+            k: 4,
+            algo,
+            seed: 19,
+            bandwidth: Bandwidth::Fixed(1.5),
+            ..Default::default()
+        };
+        let sparse_params =
+            SpectralParams { graph: GraphKind::Knn { k: m - 1 }, ..base.clone() };
+        let (ld, id) = dsc::spectral::cluster_codewords(&ds.points, 2, None, &base);
+        let (ls, is) = dsc::spectral::cluster_codewords(&ds.points, 2, None, &sparse_params);
+        // agreement of the two labelings up to label permutation
+        assert_eq!(
+            clustering_accuracy(&ld, &ls),
+            1.0,
+            "{algo:?}: sparse and dense labels disagree"
+        );
+        // both must also actually solve the problem
+        let acc = clustering_accuracy(&ds.labels, &ld);
+        assert!(acc > 0.99, "{algo:?}: dense accuracy {acc}");
+        for (a, b) in id.top_evals.iter().zip(&is.top_evals) {
+            assert!((a - b).abs() < 1e-8, "{algo:?}: eigenvalue {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn truncated_knn_still_solves_the_gmm() {
+    // the approximate regime (k ≪ m): same clusters, a fraction of the edges
+    let ds = gmm4(160, 23);
+    let params = SpectralParams {
+        k: 4,
+        algo: Algo::RecursiveNcut,
+        seed: 29,
+        bandwidth: Bandwidth::MedianScale(0.3),
+        graph: GraphKind::Knn { k: 12 },
+        ..Default::default()
+    };
+    let (labels, _) = dsc::spectral::cluster_codewords(&ds.points, 2, None, &params);
+    assert_eq!(clustering_accuracy(&ds.labels, &labels), 1.0);
+}
