@@ -78,13 +78,28 @@ fn main() -> anyhow::Result<()> {
     if want(&filter, "comm") {
         let mut t = Table::new(
             "A3 — communication vs accuracy (link: 100 Mbit/s, 20 ms)",
-            &["codewords", "wire_bytes", "full_data_bytes", "reduction", "transfer_ms", "accuracy"],
+            &[
+                "codewords",
+                "wire_bytes",
+                "proto_bytes",
+                "full_data_bytes",
+                "reduction",
+                "transfer_ms",
+                "accuracy",
+            ],
         );
         for codes in [50usize, 200, 800, 3200.min(n / 8)] {
             let r = run_pipeline(&parts, &mk_cfg(codes))?;
+            // Everything on the wire beyond the raw codeword payload
+            // (f32 coords + u32 weight per codeword): frame headers, the
+            // registration/work-order control frames, and the label
+            // frames coming back. Identical across the channel and TCP
+            // transports (docs/PROTOCOL.md, "Byte accounting").
+            let payload = r.n_codes as u64 * (ds.dim as u64 * 4 + 4);
             t.row(&[
                 codes.to_string(),
                 r.net.total_bytes().to_string(),
+                r.net.total_bytes().saturating_sub(payload).to_string(),
                 r.full_data_bytes.to_string(),
                 format!("{}x", r.full_data_bytes / r.net.total_bytes().max(1)),
                 format!("{:.1}", r.net.max_link_time().as_secs_f64() * 1e3),

@@ -1,0 +1,272 @@
+//! Multi-process TCP cluster: leader + N site daemons as real OS processes.
+//!
+//! The proof that the TCP transport is the same protocol as the in-process
+//! star, not a lookalike:
+//!
+//! 1. run the quickstart workload (paper 10-D GMM, D3 split, 2 sites,
+//!    40:1 compression) **in-process** over the channel transport;
+//! 2. write each site's shard to CSV, spawn one `dsc site` **process** per
+//!    shard plus one `dsc leader` **process**, all on localhost;
+//! 3. assert the TCP run produced **identical labels** and **byte-for-byte
+//!    identical per-link `NetReport` counters**, and that accuracy ≥ 0.9.
+//!
+//! CI runs this as a blocking smoke step. It needs the `dsc` binary:
+//!
+//! ```bash
+//! cargo build --release && cargo run --release --example tcp_cluster
+//! ```
+//!
+//! (`DSC_BIN=/path/to/dsc` overrides binary discovery.)
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use anyhow::{anyhow, bail, Context, Result};
+use dsc::data::csvio;
+use dsc::prelude::*;
+
+const SITES: usize = 2;
+const SEED: u64 = 7;
+
+/// Kills the child on drop so a failed assertion never leaves daemon
+/// processes behind.
+struct ChildGuard {
+    child: Child,
+    name: &'static str,
+}
+
+impl ChildGuard {
+    fn wait(&mut self) -> Result<()> {
+        let status = self.child.wait().with_context(|| format!("wait for {}", self.name))?;
+        if !status.success() {
+            bail!("{} exited with {status}", self.name);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Locate the `dsc` binary next to this example (`target/<profile>/dsc`).
+fn dsc_bin() -> Result<PathBuf> {
+    if let Some(p) = std::env::var_os("DSC_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().context("current_exe")?;
+    let profile_dir = exe
+        .parent() // …/examples
+        .and_then(Path::parent) // …/<profile>
+        .ok_or_else(|| anyhow!("cannot locate target dir from {}", exe.display()))?;
+    let bin = profile_dir.join(format!("dsc{}", std::env::consts::EXE_SUFFIX));
+    if !bin.exists() {
+        bail!(
+            "{} not found — build the CLI first (`cargo build --release`) or set DSC_BIN",
+            bin.display()
+        );
+    }
+    Ok(bin)
+}
+
+/// One parsed `NETREPORT site=…` line from the leader's stdout.
+#[derive(Debug, Default, PartialEq)]
+struct LinkCounters {
+    up_frames: u64,
+    up_bytes: u64,
+    down_frames: u64,
+    down_bytes: u64,
+    up_sim_ns: u128,
+    down_sim_ns: u128,
+}
+
+fn parse_netreports(stdout: &str) -> Result<Vec<(usize, LinkCounters)>> {
+    let mut out = Vec::new();
+    for line in stdout.lines() {
+        let Some(rest) = line.trim().strip_prefix("NETREPORT site=") else { continue };
+        let mut fields = rest.split_whitespace();
+        let site: usize = fields.next().unwrap_or("").parse().context("NETREPORT site id")?;
+        let mut c = LinkCounters::default();
+        for kv in fields {
+            let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("bad NETREPORT field {kv:?}"))?;
+            match k {
+                "up_frames" => c.up_frames = v.parse()?,
+                "up_bytes" => c.up_bytes = v.parse()?,
+                "down_frames" => c.down_frames = v.parse()?,
+                "down_bytes" => c.down_bytes = v.parse()?,
+                "up_sim_ns" => c.up_sim_ns = v.parse()?,
+                "down_sim_ns" => c.down_sim_ns = v.parse()?,
+                other => bail!("unknown NETREPORT field {other:?}"),
+            }
+        }
+        out.push((site, c));
+    }
+    if out.is_empty() {
+        bail!("leader printed no NETREPORT lines:\n{stdout}");
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let bin = dsc_bin()?;
+
+    // ── the workload: quickstart GMM, identical to the in-process smoke ──
+    let ds = dsc::data::gmm::paper_mixture_10d(12_000, 0.1, SEED);
+    let parts = scenario::split(&ds, Scenario::D3, SITES, SEED);
+    let cfg = PipelineConfig {
+        total_codes: 300, // 40:1, the paper's ratio
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: SEED,
+        ..Default::default()
+    };
+
+    println!("=== reference run: in-process channel transport ===");
+    let base = run_pipeline(&parts, &cfg)?;
+    println!(
+        "in-process: accuracy {:.4}, {} codewords, {} B on the wire",
+        base.accuracy,
+        base.n_codes,
+        base.net.total_bytes()
+    );
+
+    // ── stage the shards + config on disk ───────────────────────────────
+    let dir = std::env::temp_dir().join(format!("dsc_tcp_cluster_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).context("create scratch dir")?;
+    let mut csvs = Vec::new();
+    let mut label_files = Vec::new();
+    for part in &parts {
+        let csv = dir.join(format!("site{}.csv", part.site_id));
+        csvio::save_dataset(&csv, &part.data, &["tcp_cluster example shard"])?;
+        label_files.push(dir.join(format!("labels{}.txt", part.site_id)));
+        csvs.push(csv);
+    }
+    // Must describe the exact same pipeline as `cfg` above — parity of
+    // labels and byte counters depends on it.
+    let toml_path = dir.join("leader.toml");
+    std::fs::write(
+        &toml_path,
+        format!(
+            "[pipeline]\ntotal_codes = 300\nk_clusters = 4\nseed = {SEED}\n\
+             collect_timeout_s = 120\n\n[bandwidth]\npolicy = \"median\"\nvalue = 0.5\n"
+        ),
+    )
+    .context("write leader config")?;
+
+    // ── spawn one `dsc site` process per shard ──────────────────────────
+    println!("\n=== multi-process run: {SITES} `dsc site` + 1 `dsc leader` ===");
+    let mut site_guards = Vec::new();
+    let mut addrs = Vec::new();
+    for s in 0..SITES {
+        let mut child = Command::new(&bin)
+            .arg("site")
+            .args(["--listen", "127.0.0.1:0"])
+            .args(["--data", csvs[s].to_str().unwrap()])
+            .args(["--out", label_files[s].to_str().unwrap()])
+            .arg("--once")
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn site {s}"))?;
+        // The site prints `LISTENING <addr>` once its socket is bound —
+        // with port 0 that line is the only way to learn the port.
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).context("read site banner")?;
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .ok_or_else(|| anyhow!("site {s} printed {line:?}, expected LISTENING <addr>"))?
+            .to_string();
+        println!("site {s}: pid {} listening on {addr}", child.id());
+        addrs.push(addr);
+        // keep draining the pipe so the child can never block on a full one
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                sink.clear();
+            }
+        });
+        site_guards.push(ChildGuard { child, name: "dsc site" });
+    }
+
+    // ── run the leader process against them ─────────────────────────────
+    let leader_out = Command::new(&bin)
+        .arg("leader")
+        .args(["--sites", &addrs.join(",")])
+        .args(["--config", toml_path.to_str().unwrap()])
+        .output()
+        .context("run dsc leader")?;
+    let stdout = String::from_utf8_lossy(&leader_out.stdout).into_owned();
+    print!("{stdout}");
+    if !leader_out.status.success() {
+        bail!(
+            "leader exited with {}:\n{}",
+            leader_out.status,
+            String::from_utf8_lossy(&leader_out.stderr)
+        );
+    }
+    for g in &mut site_guards {
+        g.wait()?;
+    }
+
+    // ── parity: per-link counters must match byte for byte ──────────────
+    let reports = parse_netreports(&stdout)?;
+    if reports.len() != SITES {
+        bail!("expected {SITES} NETREPORT lines, got {}", reports.len());
+    }
+    for (site, tcp) in &reports {
+        let b = &base.net.per_site[*site];
+        let expect = LinkCounters {
+            up_frames: b.to_leader.frames,
+            up_bytes: b.to_leader.bytes,
+            down_frames: b.to_site.frames,
+            down_bytes: b.to_site.bytes,
+            up_sim_ns: b.to_leader.sim_time.as_nanos(),
+            down_sim_ns: b.to_site.sim_time.as_nanos(),
+        };
+        if *tcp != expect {
+            bail!("site {site} counters diverge:\n  tcp     {tcp:?}\n  channel {expect:?}");
+        }
+    }
+    println!("per-link NetReport counters: identical across transports ✓");
+
+    // ── parity: labels must be identical, and accurate ───────────────────
+    let mut tcp_labels = vec![0u16; ds.len()];
+    for (s, part) in parts.iter().enumerate() {
+        let site_labels = dsc::site::read_labels(&label_files[s])?;
+        if site_labels.len() != part.data.len() {
+            bail!(
+                "site {s} wrote {} labels for {} points",
+                site_labels.len(),
+                part.data.len()
+            );
+        }
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            tcp_labels[g as usize] = site_labels[local];
+        }
+    }
+    if tcp_labels != base.labels {
+        let diverged = tcp_labels
+            .iter()
+            .zip(&base.labels)
+            .filter(|(a, b)| a != b)
+            .count();
+        bail!("label parity failed: {diverged}/{} labels differ across transports", ds.len());
+    }
+    println!("labels: identical across transports ✓");
+
+    let accuracy = clustering_accuracy(&ds.labels, &tcp_labels);
+    println!("accuracy (multi-process): {accuracy:.4}");
+    if accuracy < 0.9 {
+        bail!("multi-process accuracy {accuracy:.4} below the 0.9 quickstart floor");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("\ntcp_cluster: all parity checks passed");
+    Ok(())
+}

@@ -2,22 +2,32 @@
 //!
 //! Subcommands:
 //!
-//! * `dsc run`       — one distributed run; prints a report table.
+//! * `dsc run`       — one in-process distributed run; prints a report table.
+//! * `dsc site`      — site daemon: serve local data to a leader over TCP.
+//! * `dsc leader`    — leader over TCP: drive running site daemons.
 //! * `dsc datasets`  — the Table-1 proxy inventory.
 //! * `dsc artifacts` — verify the AOT artifact set is loadable.
 //!
 //! `parse_flags` is a tiny `--key value` / `--flag` parser with typed
-//! accessors; unknown flags are an error so typos fail loudly.
+//! accessors; unknown flags are an error so typos fail loudly. The daemon
+//! modes print two machine-readable line families — `LISTENING <addr>`
+//! (site) and `NETREPORT …` (leader) — that `examples/tcp_cluster.rs` and
+//! deployment scripts parse; their field order is a CLI contract
+//! (`docs/DEPLOY.md`).
 
 use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{Backend, PipelineConfig};
-use crate::coordinator::run_pipeline;
+use crate::config::{Backend, PipelineConfig, TransportKind};
+use crate::coordinator::{run_leader_tcp, run_pipeline};
 use crate::data::scenario::{self, Scenario};
-use crate::data::{gmm, iris, uci_proxy, Dataset};
+use crate::data::{csvio, gmm, iris, uci_proxy, Dataset};
 use crate::dml::DmlKind;
+use crate::net::tcp::SiteListener;
+use crate::net::SiteNet;
 use crate::spectral::{Algo, Bandwidth, GraphKind};
 
 /// Parsed `--key value` flags (flags without values map to "true").
@@ -27,7 +37,7 @@ pub struct Flags {
 }
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "help"];
+const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "once", "help"];
 
 pub fn parse_flags(args: &[String]) -> Result<Flags> {
     let mut map = BTreeMap::new();
@@ -91,10 +101,26 @@ pub const USAGE: &str = "\
 dsc — distributed spectral clustering (Yan et al., TBDATA 2019)
 
 USAGE:
-  dsc run [FLAGS]       run one distributed clustering pipeline
+  dsc run [FLAGS]       run one distributed clustering pipeline in-process
+  dsc site [FLAGS]      site daemon: serve local data to a leader over TCP
+  dsc leader [FLAGS]    leader: drive running site daemons over TCP
   dsc datasets          list the UCI dataset proxies (paper Table 1)
   dsc artifacts         check the AOT artifact set loads
   dsc help              this text
+
+SITE FLAGS (see docs/DEPLOY.md):
+  --listen ADDR     bind address (default from [net] listen; port 0 = any
+                    free port — the chosen one is printed as LISTENING addr)
+  --data FILE       local shard CSV: dim float columns + integer label
+  --out FILE        write populated labels here after each run (one per line)
+  --once            serve exactly one leader connection, then exit
+  --config FILE     TOML config ([net] timeouts/listen)
+
+LEADER FLAGS (see docs/DEPLOY.md):
+  --sites A,B,...   site addresses in site-id order (or [net] sites)
+  --config FILE     TOML pipeline config (flags override it)
+  plus the central-step RUN FLAGS: --dml --codes --k --algo --graph
+  --knn-k --backend --bandwidth --weighted --seed
 
 RUN FLAGS:
   --dataset NAME    gmm2d | gmm10d | iris | connect4 | skinseg | usci |
@@ -146,30 +172,17 @@ pub fn load_dataset(flags: &Flags) -> Result<(Dataset, usize)> {
     }
 }
 
-/// Build a [`PipelineConfig`] from `--config` + flag overrides.
-pub fn build_config(flags: &Flags, default_k: usize, n_points: usize) -> Result<PipelineConfig> {
-    let mut cfg = match flags.str("config") {
-        Some(path) => PipelineConfig::from_file(std::path::Path::new(path))?,
-        None => PipelineConfig::default(),
-    };
+/// Apply the dataset-independent central-step flag overrides to a config
+/// (shared by `dsc run` and `dsc leader`; flags beat the file).
+pub fn apply_overrides(cfg: &mut PipelineConfig, flags: &Flags) -> Result<()> {
     if let Some(v) = flags.str("dml") {
         cfg.dml = DmlKind::parse(v).ok_or_else(|| anyhow!("bad --dml {v:?}"))?;
     }
     if let Some(v) = flags.usize("codes")? {
         cfg.total_codes = v;
-    } else if flags.str("dataset").map(|d| uci_proxy::by_name(d).is_some()).unwrap_or(false) {
-        // default to the paper's compression ratio target for UCI proxies
-        let spec = uci_proxy::by_name(flags.str("dataset").unwrap()).unwrap();
-        cfg.total_codes = spec.target_codewords().min(n_points);
-    } else {
-        cfg.total_codes = cfg.total_codes.min(n_points / 4).max(16.min(n_points));
     }
     if let Some(v) = flags.usize("k")? {
         cfg.k_clusters = v;
-    } else if flags.str("config").is_none() {
-        // no flag and no config file: fall back to the dataset's class
-        // count (a file-provided k_clusters must not be clobbered)
-        cfg.k_clusters = default_k;
     }
     if let Some(v) = flags.str("algo") {
         cfg.algo = Algo::parse(v).ok_or_else(|| anyhow!("bad --algo {v:?}"))?;
@@ -201,6 +214,30 @@ pub fn build_config(flags: &Flags, default_k: usize, n_points: usize) -> Result<
     }
     if let Some(v) = flags.u64("seed")? {
         cfg.seed = v;
+    }
+    Ok(())
+}
+
+/// Build a [`PipelineConfig`] from `--config` + flag overrides, with the
+/// dataset-aware defaults `dsc run` wants when a flag is absent.
+pub fn build_config(flags: &Flags, default_k: usize, n_points: usize) -> Result<PipelineConfig> {
+    let mut cfg = match flags.str("config") {
+        Some(path) => PipelineConfig::from_file(Path::new(path))?,
+        None => PipelineConfig::default(),
+    };
+    apply_overrides(&mut cfg, flags)?;
+    if flags.usize("codes")?.is_none() {
+        if let Some(spec) = flags.str("dataset").and_then(uci_proxy::by_name) {
+            // default to the paper's compression ratio target for UCI proxies
+            cfg.total_codes = spec.target_codewords().min(n_points);
+        } else {
+            cfg.total_codes = cfg.total_codes.min(n_points / 4).max(16.min(n_points));
+        }
+    }
+    if flags.usize("k")?.is_none() && flags.str("config").is_none() {
+        // no flag and no config file: fall back to the dataset's class
+        // count (a file-provided k_clusters must not be clobbered)
+        cfg.k_clusters = default_k;
     }
     Ok(cfg)
 }
@@ -242,6 +279,13 @@ pub fn cmd_run(args: &[String]) -> Result<()> {
 
     let (ds, default_k) = load_dataset(&flags)?;
     let cfg = build_config(&flags, default_k, ds.len())?;
+    if cfg.net.transport == TransportKind::Tcp {
+        bail!(
+            "this config sets [net] transport = \"tcp\" — `dsc run` executes \
+             in-process; use `dsc site` + `dsc leader` for a multi-process run \
+             (docs/DEPLOY.md)"
+        );
+    }
     let sites = flags.usize("sites")?.unwrap_or(2);
     let sc = match flags.str("scenario") {
         None => Scenario::D3,
@@ -295,6 +339,152 @@ pub fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The `dsc site` subcommand: serve a local CSV shard to a leader over TCP.
+///
+/// Prints `LISTENING <addr>` (the actual bound address — meaningful with
+/// `--listen host:0`) once the socket is up, then `SERVED …` after each
+/// completed run. Without `--once` it keeps accepting leader connections,
+/// one pipeline run per connection, and survives failed runs.
+pub fn cmd_site(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    flags.reject_unknown(&["listen", "data", "out", "once", "config", "help"])?;
+    if flags.bool("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+
+    let cfg = match flags.str("config") {
+        Some(path) => PipelineConfig::from_file(Path::new(path))?,
+        None => PipelineConfig::default(),
+    };
+    let data_path = flags
+        .str("data")
+        .ok_or_else(|| anyhow!("dsc site needs --data <csv> (float features…, integer label per row)"))?;
+    let name = Path::new(data_path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("site")
+        .to_string();
+    let data = csvio::load_dataset(Path::new(data_path), &name, None)?;
+    if data.is_empty() {
+        bail!("{data_path}: empty shard");
+    }
+
+    let listen = flags.str("listen").unwrap_or(&cfg.net.listen);
+    let timeouts = cfg.net.tcp_timeouts();
+    let listener = SiteListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    println!("LISTENING {addr}");
+    std::io::stdout().flush().ok();
+    eprintln!(
+        "site daemon: {} points × {} dims from {data_path}; waiting for a leader",
+        data.len(),
+        data.dim
+    );
+
+    let once = flags.bool("once");
+    loop {
+        let served = (|| -> Result<()> {
+            let transport = listener.accept(&timeouts)?;
+            let net = SiteNet::over(Box::new(transport));
+            let site_id = net.site_id();
+            let out = crate::site::serve(&net, &data)?;
+            if let Some(out_path) = flags.str("out") {
+                crate::site::write_labels(Path::new(out_path), &out.labels)?;
+            }
+            println!(
+                "SERVED site={site_id} n_points={} n_codes={} dml_s={:.3} distortion={:.6}",
+                out.n_points,
+                out.n_codes,
+                out.dml_time.as_secs_f64(),
+                out.distortion,
+            );
+            std::io::stdout().flush().ok();
+            Ok(())
+        })();
+        match served {
+            Ok(()) if once => return Ok(()),
+            Ok(()) => {}
+            Err(e) if once => return Err(e),
+            // Daemon mode: one bad leader (crash, version mismatch, port
+            // scanner) must not take the site down. The pause keeps a
+            // persistently-failing accept (fd exhaustion, dead listener)
+            // from hot-spinning the daemon at 100% CPU.
+            Err(e) => {
+                eprintln!("site: run failed: {e:#} (daemon continues)");
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+/// The `dsc leader` subcommand: drive running `dsc site` daemons over TCP.
+///
+/// After the run, prints one `NETREPORT site=<id> …` line per link with the
+/// per-direction frame/byte/modeled-time counters — byte-for-byte what the
+/// in-process backend reports for the same config and data — plus a
+/// `NETREPORT total_bytes=…` summary line.
+pub fn cmd_leader(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    flags.reject_unknown(&[
+        "sites", "config", "dml", "codes", "k", "algo", "graph", "knn-k", "backend",
+        "bandwidth", "weighted", "seed", "help",
+    ])?;
+    if flags.bool("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+
+    let mut cfg = match flags.str("config") {
+        Some(path) => PipelineConfig::from_file(Path::new(path))?,
+        None => PipelineConfig::default(),
+    };
+    apply_overrides(&mut cfg, &flags)?;
+    if let Some(s) = flags.str("sites") {
+        cfg.net.sites =
+            s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect();
+    }
+    cfg.net.transport = TransportKind::Tcp; // leader mode is TCP by definition
+    if cfg.net.sites.is_empty() {
+        bail!("dsc leader needs --sites a,b,… or [net] sites in the config");
+    }
+
+    println!(
+        "leader: dialing {} site(s): {}",
+        cfg.net.sites.len(),
+        cfg.net.sites.join(", ")
+    );
+    let report = run_leader_tcp(&cfg)?;
+
+    println!("── leader result ──────────────────────");
+    println!("sites           {}", report.outcome.site_points.len());
+    println!("points          {}", report.outcome.site_points.iter().sum::<u64>());
+    println!(
+        "codewords       {}  (per site: {:?})",
+        report.outcome.n_codes, report.outcome.site_codes
+    );
+    println!("sigma           {:.4}", report.outcome.sigma);
+    println!(
+        "central         {:.3}s | wall {:.3}s",
+        report.outcome.central.as_secs_f64(),
+        report.wall.as_secs_f64()
+    );
+    for (sid, l) in report.net.per_site.iter().enumerate() {
+        println!(
+            "NETREPORT site={sid} up_frames={} up_bytes={} down_frames={} down_bytes={} \
+             up_sim_ns={} down_sim_ns={}",
+            l.to_leader.frames,
+            l.to_leader.bytes,
+            l.to_site.frames,
+            l.to_site.bytes,
+            l.to_leader.sim_time.as_nanos(),
+            l.to_site.sim_time.as_nanos(),
+        );
+    }
+    println!("NETREPORT total_bytes={}", report.net.total_bytes());
+    Ok(())
+}
+
 /// The `dsc datasets` subcommand (Table 1).
 pub fn cmd_datasets() {
     println!(
@@ -330,6 +520,8 @@ pub fn cmd_artifacts() -> Result<()> {
 pub fn dispatch(argv: Vec<String>) -> Result<()> {
     match argv.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&argv[1..]),
+        Some("site") => cmd_site(&argv[1..]),
+        Some("leader") => cmd_leader(&argv[1..]),
         Some("datasets") => {
             cmd_datasets();
             Ok(())
@@ -465,5 +657,47 @@ mod tests {
         let f = flags(&["--dataset", "hepmass"]);
         let cfg = build_config(&f, 2, 100_000).unwrap();
         assert_eq!(cfg.total_codes, 1500); // 10.5M / 7000
+    }
+
+    #[test]
+    fn apply_overrides_leaves_untouched_fields_alone() {
+        let mut cfg = PipelineConfig::from_toml(
+            "[pipeline]\nk_clusters = 9\ntotal_codes = 77\n[net]\nsites = \"a:1,b:2\"",
+        )
+        .unwrap();
+        let f = flags(&["--seed", "42", "--algo", "njw"]);
+        apply_overrides(&mut cfg, &f).unwrap();
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.algo, Algo::Njw);
+        assert_eq!(cfg.k_clusters, 9, "file value must survive");
+        assert_eq!(cfg.total_codes, 77);
+        assert_eq!(cfg.net.sites, vec!["a:1", "b:2"]);
+    }
+
+    #[test]
+    fn site_subcommand_requires_data() {
+        let err = cmd_site(&[]).unwrap_err();
+        assert!(err.to_string().contains("--data"), "{err}");
+    }
+
+    #[test]
+    fn leader_subcommand_requires_sites() {
+        let err = cmd_leader(&[]).unwrap_err();
+        assert!(err.to_string().contains("--sites"), "{err}");
+    }
+
+    #[test]
+    fn run_rejects_tcp_transport_configs() {
+        let path = std::env::temp_dir().join(format!("dsc_cli_tcp_{}.toml", std::process::id()));
+        std::fs::write(&path, "[net]\ntransport = \"tcp\"\nsites = \"127.0.0.1:1\"\n").unwrap();
+        let err = cmd_run(&[
+            "--dataset".to_string(),
+            "iris".to_string(),
+            "--config".to_string(),
+            path.to_str().unwrap().to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("dsc site"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 }

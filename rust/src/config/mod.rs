@@ -18,6 +18,67 @@ use crate::spectral::{Algo, Bandwidth, GraphKind};
 
 pub use crate::data::scenario::Scenario;
 
+/// How leader and sites talk (`[net] transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process star over `mpsc` channels — sites are threads of the
+    /// coordinator process (`dsc run`, tests, benches).
+    Channel,
+    /// Real sockets between separate processes (`dsc leader` / `dsc site`).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "channel" | "inproc" | "in-process" => Some(TransportKind::Channel),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// Network deployment knobs (`[net]`): which transport, where the daemons
+/// listen/dial, and the TCP socket deadlines. Ignored by the channel
+/// backend except as documentation of intent.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Intended transport for this config. `dsc run` always executes
+    /// in-process; `dsc leader`/`dsc site` always speak TCP — a config with
+    /// `transport = "tcp"` handed to `dsc run` is a loud error rather than
+    /// a silent simulation.
+    pub transport: TransportKind,
+    /// Site daemon listen address (`dsc site --listen` overrides).
+    pub listen: String,
+    /// Site addresses the leader dials, in site-id order (`dsc leader
+    /// --sites` overrides).
+    pub sites: Vec<String>,
+    /// TCP dial + handshake deadline.
+    pub connect_timeout: Duration,
+    /// TCP mid-frame read/write stall deadline; zero disables.
+    pub io_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        let t = crate::net::tcp::TcpTimeouts::default();
+        NetConfig {
+            transport: TransportKind::Channel,
+            listen: "127.0.0.1:7010".to_string(),
+            sites: Vec::new(),
+            connect_timeout: t.connect,
+            io_timeout: t.io,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The socket deadlines in the shape the TCP backend wants.
+    pub fn tcp_timeouts(&self) -> crate::net::tcp::TcpTimeouts {
+        crate::net::tcp::TcpTimeouts { connect: self.connect_timeout, io: self.io_timeout }
+    }
+}
+
 /// Where the central spectral step executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -73,8 +134,11 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// Artifact directory for XLA backends.
     pub artifact_dir: std::path::PathBuf,
-    /// How long the leader waits for all codebooks before declaring the
-    /// missing sites failed (straggler/crash protection).
+    /// Network deployment: transport kind, daemon addresses, TCP deadlines.
+    pub net: NetConfig,
+    /// How long the leader waits out each collect phase (site registration,
+    /// then codebooks) before declaring the missing sites failed
+    /// (straggler/crash protection).
     pub collect_timeout: Duration,
     /// Chaos hook: make this site crash before reporting (tests/drills).
     pub inject_site_failure: Option<usize>,
@@ -94,6 +158,7 @@ impl Default for PipelineConfig {
             weighted_affinity: false,
             backend: Backend::Native,
             link: LinkSpec::default(),
+            net: NetConfig::default(),
             seed: 0,
             artifact_dir: crate::runtime::default_artifact_dir(),
             collect_timeout: Duration::from_secs(300),
@@ -136,6 +201,14 @@ impl PipelineConfig {
     /// [link]
     /// bandwidth_mbps = 100.0
     /// latency_ms = 20.0
+    ///
+    /// [net]
+    /// transport = "channel"     # or "tcp" (leader/site daemon deployment)
+    /// listen = "127.0.0.1:7010" # site daemon bind address
+    /// sites = ["10.0.0.2:7010", "10.0.0.3:7010"]   # leader dial list,
+    ///                           # site-id order (or one comma-separated string)
+    /// connect_timeout_s = 10.0  # dial + handshake deadline
+    /// io_timeout_s = 30.0       # mid-frame stall deadline; 0 disables
     /// ```
     pub fn from_toml(text: &str) -> Result<PipelineConfig> {
         let map = toml::parse(text)?;
@@ -249,6 +322,54 @@ impl PipelineConfig {
             let ms = v.as_f64().ok_or_else(|| anyhow!("latency_ms must be float"))?;
             cfg.link.latency = Duration::from_secs_f64(ms / 1000.0);
         }
+
+        if let Some(v) = get("net.transport") {
+            let s = v.as_str().ok_or_else(|| anyhow!("net.transport must be a string"))?;
+            cfg.net.transport = TransportKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown net.transport {s:?} (channel | tcp)"))?;
+        }
+        if let Some(v) = get("net.listen") {
+            cfg.net.listen =
+                v.as_str().ok_or_else(|| anyhow!("net.listen must be a string"))?.to_string();
+        }
+        if let Some(v) = get("net.sites") {
+            cfg.net.sites = match v {
+                // canonical form: an array of "host:port" strings
+                toml::TomlValue::Array(items) => items
+                    .iter()
+                    .map(|it| {
+                        it.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow!("net.sites entries must be strings")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                // convenience form: one comma-separated string
+                toml::TomlValue::Str(s) => s
+                    .split(',')
+                    .map(|a| a.trim().to_string())
+                    .filter(|a| !a.is_empty())
+                    .collect(),
+                _ => bail!("net.sites must be an array of strings"),
+            };
+            if cfg.net.sites.is_empty() {
+                bail!("net.sites must name at least one site address");
+            }
+        }
+        if let Some(v) = get("net.connect_timeout_s") {
+            let secs =
+                v.as_f64().ok_or_else(|| anyhow!("net.connect_timeout_s must be a number"))?;
+            if !(secs >= 0.0) {
+                bail!("net.connect_timeout_s must be ≥ 0");
+            }
+            cfg.net.connect_timeout = Duration::from_secs_f64(secs);
+        }
+        if let Some(v) = get("net.io_timeout_s") {
+            let secs = v.as_f64().ok_or_else(|| anyhow!("net.io_timeout_s must be a number"))?;
+            if !(secs >= 0.0) {
+                bail!("net.io_timeout_s must be ≥ 0");
+            }
+            cfg.net.io_timeout = Duration::from_secs_f64(secs);
+        }
         Ok(cfg)
     }
 }
@@ -327,6 +448,57 @@ mod tests {
         }
         assert!((cfg.link.bandwidth_bps - 1.25e8).abs() < 1.0);
         assert_eq!(cfg.link.latency, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn net_table_roundtrip() {
+        let cfg = PipelineConfig::from_toml(
+            r#"
+            [net]
+            transport = "tcp"
+            listen = "0.0.0.0:9001"
+            sites = ["10.0.0.2:7010", "10.0.0.3:7010"]
+            connect_timeout_s = 2.5
+            io_timeout_s = 0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.net.transport, TransportKind::Tcp);
+        assert_eq!(cfg.net.listen, "0.0.0.0:9001");
+        assert_eq!(cfg.net.sites, vec!["10.0.0.2:7010", "10.0.0.3:7010"]);
+        assert_eq!(cfg.net.connect_timeout, Duration::from_millis(2500));
+        assert_eq!(cfg.net.io_timeout, Duration::ZERO); // 0 = disabled
+        let t = cfg.net.tcp_timeouts();
+        assert_eq!(t.connect, Duration::from_millis(2500));
+        assert_eq!(t.io, Duration::ZERO);
+    }
+
+    #[test]
+    fn net_sites_accepts_comma_separated_string() {
+        let cfg = PipelineConfig::from_toml(
+            "[net]\nsites = \"127.0.0.1:7010, 127.0.0.1:7011\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.net.sites, vec!["127.0.0.1:7010", "127.0.0.1:7011"]);
+    }
+
+    #[test]
+    fn net_defaults_are_channel_and_empty() {
+        let cfg = PipelineConfig::from_toml("").unwrap();
+        assert_eq!(cfg.net.transport, TransportKind::Channel);
+        assert!(cfg.net.sites.is_empty());
+        assert!(!cfg.net.connect_timeout.is_zero());
+        assert!(!cfg.net.io_timeout.is_zero());
+    }
+
+    #[test]
+    fn net_table_rejects_bad_values() {
+        assert!(PipelineConfig::from_toml("[net]\ntransport = \"carrier-pigeon\"").is_err());
+        assert!(PipelineConfig::from_toml("[net]\nsites = [1, 2]").is_err());
+        assert!(PipelineConfig::from_toml("[net]\nsites = []").is_err());
+        assert!(PipelineConfig::from_toml("[net]\nsites = \"  ,  \"").is_err());
+        assert!(PipelineConfig::from_toml("[net]\nio_timeout_s = -1").is_err());
+        assert!(PipelineConfig::from_toml("[net]\nconnect_timeout_s = \"fast\"").is_err());
     }
 
     #[test]

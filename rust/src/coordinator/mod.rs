@@ -1,9 +1,18 @@
 //! The distributed coordinator — Algorithm 1 as a leader/worker runtime.
 //!
-//! One leader thread and one worker thread per site, talking over the
-//! simulated star network ([`crate::net`]):
+//! The protocol has exactly one implementation, split along the network
+//! seam: [`leader_protocol`] is everything the leader does over a
+//! [`LeaderNet`], and [`crate::site::serve`] is everything a site does over
+//! a [`crate::net::SiteNet`]. Two drivers wire those halves to transports:
+//!
+//! * [`run_pipeline`] — the in-process star: one worker thread per site
+//!   over the channel transport. The default for tests, benches, `dsc run`.
+//! * [`run_leader_tcp`] — the leader half alone over real TCP connections
+//!   to `dsc site` daemon processes (`dsc leader`; see `docs/DEPLOY.md`).
 //!
 //! ```text
+//! site s:  ──site info──▶ leader         (shard size/dim registration)
+//! site s:  ◀─dml request── leader        (budget ∝ site size, forked seed)
 //! site s:  DML(local data) ──codebook──▶ leader
 //! leader:  collect S codebooks → spectral clustering on the union
 //! leader:  ──codeword labels──▶ site s
@@ -13,12 +22,14 @@
 //! Timing follows the paper's §5 protocol: sites run in parallel, so the
 //! *elapsed* model sums `max_s(DML) + central + max_s(populate)` — the wall
 //! clock of the run itself is also reported (they agree up to thread
-//! scheduling). Communication is whatever crossed the wire, byte-exact.
+//! scheduling). Communication is whatever crossed the wire, byte-exact and
+//! identical across transports.
 //!
 //! The evaluation channel (per-point labels returned to the caller) is NOT
 //! part of the protocol: in production those labels stay at the sites; the
 //! driver only needs them to score accuracy against ground truth, so they
-//! travel through the thread join, not the network.
+//! travel through the thread join (in-process) or site-side label files
+//! (TCP), never the network.
 
 use std::time::{Duration, Instant};
 
@@ -26,8 +37,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{Backend, PipelineConfig};
 use crate::data::scenario::SitePart;
-use crate::dml::{self, DmlParams};
-use crate::net::{self, Message, NetReport};
+use crate::net::{self, LeaderNet, Message, NetReport};
 use crate::rng::Rng;
 use crate::runtime::XlaRuntime;
 use crate::spectral::{self, njw, GraphKind, SpectralParams};
@@ -53,7 +63,7 @@ pub struct PipelineReport {
     pub populate: Duration,
     /// Codewords that reached the leader.
     pub n_codes: usize,
-    /// Bytes on the (simulated) wire + modeled transfer time.
+    /// Bytes on the wire + modeled transfer time.
     pub net: NetReport,
     /// Bytes a ship-all-the-data baseline would need.
     pub full_data_bytes: u64,
@@ -61,6 +71,37 @@ pub struct PipelineReport {
     pub sigma: f64,
     /// Quantization distortion per site (Theorem 2/3 quantity).
     pub site_distortion: Vec<f64>,
+}
+
+/// What [`leader_protocol`] learned and produced, transport-independent.
+/// Everything a leader can know without ground truth (accuracy lives with
+/// whoever holds the labels — see the module docs on the evaluation
+/// channel).
+#[derive(Clone, Debug)]
+pub struct LeaderOutcome {
+    /// Data dimensionality every site agreed on.
+    pub dim: usize,
+    /// Codewords in the union the central step clustered.
+    pub n_codes: usize,
+    /// Bandwidth used by the central step.
+    pub sigma: f64,
+    /// Central spectral time.
+    pub central: Duration,
+    /// Points each site registered.
+    pub site_points: Vec<u64>,
+    /// Codewords each site contributed.
+    pub site_codes: Vec<usize>,
+}
+
+/// Report of a TCP leader run ([`run_leader_tcp`]).
+#[derive(Clone, Debug)]
+pub struct TcpRunReport {
+    pub outcome: LeaderOutcome,
+    /// Per-link byte counters — identical to what the channel backend
+    /// reports for the same config and data.
+    pub net: NetReport,
+    /// Wall clock from first connect attempt to labels delivered.
+    pub wall: Duration,
 }
 
 struct SiteOutcome {
@@ -72,7 +113,28 @@ struct SiteOutcome {
     labels: Vec<(u32, u16)>,
 }
 
-/// Run the full distributed pipeline over pre-split site data.
+fn resolve_xla(cfg: &PipelineConfig) -> Result<Option<std::rc::Rc<XlaRuntime>>> {
+    Ok(match cfg.backend {
+        Backend::Native => None,
+        Backend::Xla | Backend::XlaFull => Some(
+            crate::runtime::shared(&cfg.artifact_dir)
+                .context("init XLA runtime (run `make artifacts`?)")?,
+        ),
+    })
+}
+
+fn check_graph_backend(cfg: &PipelineConfig) -> Result<()> {
+    if cfg.backend != Backend::Native && cfg.graph != GraphKind::Dense {
+        bail!(
+            "spectral.graph = \"knn\" requires backend = \"native\": the AOT XLA \
+             artifacts compute the dense affinity embedding"
+        );
+    }
+    Ok(())
+}
+
+/// Run the full distributed pipeline over pre-split site data, in process
+/// (channel transport, one worker thread per site).
 ///
 /// `parts` is the output of [`crate::data::scenario::split`] (or any
 /// user-provided partition); ground truth inside `parts` is used only for
@@ -86,153 +148,55 @@ pub fn run_pipeline(parts: &[SitePart], cfg: &PipelineConfig) -> Result<Pipeline
     if total_points == 0 {
         bail!("no data");
     }
-    for p in parts {
+    for (pos, p) in parts.iter().enumerate() {
         if p.data.dim != dim {
             bail!("site {} has dim {}, expected {dim}", p.site_id, p.data.dim);
         }
+        if p.site_id != pos {
+            bail!("parts must be ordered by site_id (found {} at position {pos})", p.site_id);
+        }
     }
-    if cfg.backend != Backend::Native && cfg.graph != GraphKind::Dense {
-        bail!(
-            "spectral.graph = \"knn\" requires backend = \"native\": the AOT XLA \
-             artifacts compute the dense affinity embedding"
-        );
-    }
+    check_graph_backend(cfg)?;
     let full_data_bytes: u64 = parts.iter().map(|p| p.data.wire_bytes()).sum();
-
-    // Per-site codeword budgets ∝ site size (paper: fixed compression ratio).
-    let budgets: Vec<usize> = parts
-        .iter()
-        .map(|p| {
-            ((cfg.total_codes as f64 * p.data.len() as f64 / total_points as f64).round()
-                as usize)
-                .max(1)
-                .min(p.data.len().max(1))
-        })
-        .collect();
 
     let wall_start = Instant::now();
     let (leader, mut site_nets) = net::star(parts.len(), cfg.link);
-    let root_rng = Rng::new(cfg.seed);
 
     // XLA runtime resolved before threads spawn; the thread-local shared
     // cache keeps compiled executables alive across pipeline runs on this
     // (leader) thread.
-    let xla = match cfg.backend {
-        Backend::Native => None,
-        Backend::Xla | Backend::XlaFull => Some(
-            crate::runtime::shared(&cfg.artifact_dir)
-                .context("init XLA runtime (run `make artifacts`?)")?,
-        ),
-    };
-
-    let mut central_time = Duration::ZERO;
-    let mut n_codes_total = 0usize;
-    let mut sigma_used = 0.0f64;
+    let xla = resolve_xla(cfg)?;
 
     // Runs the whole leader protocol inside the thread scope. On ANY error
     // path (straggler timeout, corrupt frame, central failure) the leader
     // handle is dropped *before* the scope ends, which closes every site's
     // downlink and unblocks workers still waiting for labels — error
     // returns never deadlock the scope join.
-    let (outcomes, net_report): (Vec<SiteOutcome>, NetReport) =
-        std::thread::scope(|scope| -> Result<(Vec<SiteOutcome>, NetReport)> {
-        // ---- spawn site workers ----
-        let mut handles = Vec::with_capacity(parts.len());
-        for part in parts {
-            let site_net = site_nets.remove(0);
-            let budget = budgets[part.site_id];
-            let params = DmlParams {
-                kind: cfg.dml,
-                target_codes: budget,
-                max_iters: cfg.kmeans_max_iters,
-                tol: cfg.kmeans_tol,
-                seed: root_rng.fork(part.site_id as u64 + 1).next_u64_seed(),
-            };
-            let fail = cfg.inject_site_failure == Some(part.site_id);
-            handles.push(scope.spawn(move || site_worker(part, params, site_net, fail)));
-        }
-
-        let leader_work = || -> Result<Vec<SiteOutcome>> {
-        // ---- leader: collect codebooks (with straggler deadline) ----
-        // Buffered per site, then concatenated in site order so the
-        // codeword union (and everything downstream of it) is independent
-        // of message arrival order — a determinism guarantee the tests and
-        // benches rely on.
-        let deadline = Instant::now() + cfg.collect_timeout;
-        let mut inbox: Vec<Option<(Vec<f32>, Vec<u32>)>> = vec![None; parts.len()];
-        let mut received = 0usize;
-        while received < parts.len() {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            let (sid, msg) = leader.recv_timeout(remaining).map_err(|e| {
-                let missing: Vec<usize> = inbox
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, s)| s.is_none())
-                    .map(|(i, _)| i)
-                    .collect();
-                anyhow!(
-                    "collect failed after {:?} — sites {missing:?} never \
-                     reported ({e})",
-                    cfg.collect_timeout
-                )
-            })?;
-            match msg {
-                Message::Codebook { site, dim: d, codewords, weights } => {
-                    if site as usize != sid {
-                        bail!("site id mismatch on codebook frame");
-                    }
-                    if d as usize != dim {
-                        bail!("site {sid} sent dim {d}, expected {dim}");
-                    }
-                    if inbox[sid].replace((codewords, weights)).is_some() {
-                        bail!("site {sid} sent two codebooks");
-                    }
-                    received += 1;
-                }
-                other => bail!("unexpected message during collect: {other:?}"),
+    let (leader_out, outcomes, net_report) = std::thread::scope(
+        |scope| -> Result<(LeaderOutcome, Vec<SiteOutcome>, NetReport)> {
+            // ---- spawn site workers ----
+            let mut handles = Vec::with_capacity(parts.len());
+            for part in parts {
+                let site_net = site_nets.remove(0);
+                let fail = cfg.inject_site_failure == Some(part.site_id);
+                handles.push(scope.spawn(move || site_worker(part, site_net, fail)));
             }
-        }
-        let mut cw_all: Vec<f32> = Vec::new();
-        let mut w_all: Vec<f32> = Vec::new();
-        // per-site (offset, count) into the codeword union
-        let mut spans = vec![(0usize, 0usize); parts.len()];
-        for (sid, slot) in inbox.into_iter().enumerate() {
-            let (codewords, weights) = slot.expect("all sites received");
-            spans[sid] = (w_all.len(), weights.len());
-            cw_all.extend_from_slice(&codewords);
-            w_all.extend(weights.iter().map(|&w| w as f32));
-        }
-        n_codes_total = w_all.len();
 
-        // ---- leader: central spectral clustering on the codeword union ----
-        // Wall time, not thread CPU: this phase runs alone on the host
-        // (after the site barrier) and may fan out over the `par` pool, so
-        // its wall clock is exactly the elapsed contribution. Sites use
-        // thread CPU instead because *their* contention is a simulation
-        // artifact (see site_worker).
-        let t0 = Instant::now();
-        let (code_labels, sigma) = central_cluster(&cw_all, dim, &w_all, cfg, xla.as_deref())?;
-        central_time = t0.elapsed();
-        sigma_used = sigma;
+            let leader_work = || -> Result<(LeaderOutcome, Vec<SiteOutcome>)> {
+                let leader_out = leader_protocol(&leader, cfg, xla.as_deref())?;
+                let mut outcomes = Vec::with_capacity(parts.len());
+                for h in handles {
+                    outcomes.push(h.join().map_err(|_| anyhow!("site worker panicked"))??);
+                }
+                Ok((leader_out, outcomes))
+            };
 
-        // ---- leader: populate labels back ----
-        for (sid, &(off, len)) in spans.iter().enumerate() {
-            let labels: Vec<u16> = code_labels[off..off + len].to_vec();
-            leader.send(sid, &Message::Labels { site: sid as u32, labels })?;
-        }
-
-        let mut outcomes = Vec::with_capacity(parts.len());
-        for h in handles {
-            outcomes.push(h.join().map_err(|_| anyhow!("site worker panicked"))??);
-        }
-        Ok(outcomes)
-        };
-
-        let result = leader_work();
-        let report = leader.report();
-        drop(leader); // close downlinks: unblocks workers on the error path
-        result.map(|outcomes| (outcomes, report))
-    })?;
+            let result = leader_work();
+            let report = leader.report();
+            drop(leader); // close downlinks: unblocks workers on the error path
+            result.map(|(lo, outcomes)| (lo, outcomes, report))
+        },
+    )?;
 
     let wall = wall_start.elapsed();
 
@@ -265,28 +229,229 @@ pub fn run_pipeline(parts: &[SitePart], cfg: &PipelineConfig) -> Result<Pipeline
         ari: crate::metrics::adjusted_rand_index(&truth, &labels),
         nmi: crate::metrics::normalized_mutual_info(&truth, &labels),
         labels,
-        elapsed_model: max_dml + central_time + populate,
+        elapsed_model: max_dml + leader_out.central + populate,
         wall,
         site_dml,
-        central: central_time,
+        central: leader_out.central,
         populate,
-        n_codes: n_codes_total,
+        n_codes: leader_out.n_codes,
         net: net_report,
         full_data_bytes,
-        sigma: sigma_used,
+        sigma: leader_out.sigma,
         site_distortion,
     })
 }
 
-/// What one site does: DML, ship codebook, await labels, populate.
-///
-/// Per-phase costs are **thread CPU time**: sites are independent machines
-/// in the paper's model, so scheduler contention between site threads on
-/// this (possibly single-core) host must not leak into the max-over-sites
-/// elapsed model. See [`crate::metrics::thread_cpu_time`].
+/// The leader half of the protocol over real TCP connections to running
+/// `dsc site` daemons (`cfg.net.sites`, index = site id). Labels are
+/// delivered to the sites; this side reports what a leader can know —
+/// codeword counts, σ, timings, and the per-link byte counters.
+pub fn run_leader_tcp(cfg: &PipelineConfig) -> Result<TcpRunReport> {
+    if cfg.net.sites.is_empty() {
+        bail!("no site addresses configured (set [net] sites or --sites)");
+    }
+    check_graph_backend(cfg)?;
+    let wall_start = Instant::now();
+    let transport = net::tcp::connect_sites(&cfg.net.sites, &cfg.net.tcp_timeouts())?;
+    let leader = LeaderNet::over(Box::new(transport), cfg.link);
+    let xla = resolve_xla(cfg)?;
+    let outcome = leader_protocol(&leader, cfg, xla.as_deref())?;
+    Ok(TcpRunReport { outcome, net: leader.report(), wall: wall_start.elapsed() })
+}
+
+/// Everything the leader does for one run, over any transport: register
+/// sites, assign budgets, collect codebooks, cluster centrally, send
+/// labels back. Each collect phase gets a fresh `cfg.collect_timeout`
+/// deadline (straggler/crash protection).
+pub fn leader_protocol(
+    net: &LeaderNet,
+    cfg: &PipelineConfig,
+    xla: Option<&XlaRuntime>,
+) -> Result<LeaderOutcome> {
+    let n_sites = net.n_sites();
+    if n_sites == 0 {
+        bail!("no sites");
+    }
+    check_graph_backend(cfg)?;
+
+    // ---- phase 1: shard registration ----
+    let mut infos: Vec<Option<(u64, u32)>> = vec![None; n_sites];
+    collect_phase(net, cfg, "registration", &mut infos, |sid, msg, slot| match msg {
+        Message::SiteInfo { site, n_points, dim } => {
+            if site as usize != sid {
+                bail!("site id mismatch on site info frame");
+            }
+            if slot.replace((n_points, dim)).is_some() {
+                bail!("site {sid} registered twice");
+            }
+            Ok(())
+        }
+        other => bail!("unexpected message during registration: {other:?}"),
+    })?;
+    let infos: Vec<(u64, u32)> = infos.into_iter().map(|s| s.expect("all collected")).collect();
+
+    let dim = infos[0].1;
+    for (sid, &(_, d)) in infos.iter().enumerate() {
+        if d != dim {
+            bail!("site {sid} has dim {d}, expected {dim}");
+        }
+    }
+    if dim == 0 {
+        bail!("sites report zero-dimensional data");
+    }
+    // Site-reported counts are untrusted input: bound them per site and
+    // sum checked, so one hostile SiteInfo cannot panic the leader (debug
+    // overflow) or wrap the proportional-budget arithmetic (release).
+    const MAX_SITE_POINTS: u64 = 1 << 48;
+    let site_points: Vec<u64> = infos.iter().map(|&(np, _)| np).collect();
+    let mut total_points: u64 = 0;
+    for (sid, &np) in site_points.iter().enumerate() {
+        if np > MAX_SITE_POINTS {
+            bail!("site {sid} reports an implausible {np} points");
+        }
+        total_points = total_points
+            .checked_add(np)
+            .ok_or_else(|| anyhow!("total point count overflows u64"))?;
+    }
+    if total_points == 0 {
+        bail!("no data at any site");
+    }
+
+    // ---- phase 2: work orders ----
+    // Per-site codeword budgets ∝ site size (paper: fixed compression
+    // ratio); per-site seeds fork from the master seed, so results are a
+    // function of (data, cfg) alone, not of which transport ran the sites.
+    let budgets: Vec<usize> = site_points
+        .iter()
+        .map(|&np| {
+            ((cfg.total_codes as f64 * np as f64 / total_points as f64).round() as usize)
+                .max(1)
+                .min((np as usize).max(1))
+        })
+        .collect();
+    let root_rng = Rng::new(cfg.seed);
+    for sid in 0..n_sites {
+        let mut fork = root_rng.fork(sid as u64 + 1);
+        net.send(
+            sid,
+            &Message::DmlRequest {
+                site: sid as u32,
+                dml: cfg.dml,
+                target_codes: budgets[sid] as u32,
+                max_iters: cfg.kmeans_max_iters as u32,
+                tol: cfg.kmeans_tol,
+                seed: fork.next_u64(),
+            },
+        )?;
+    }
+
+    // ---- phase 3: collect codebooks ----
+    // Buffered per site, then concatenated in site order so the codeword
+    // union (and everything downstream of it) is independent of message
+    // arrival order — a determinism guarantee the tests and benches (and
+    // the cross-transport parity checks) rely on.
+    let mut inbox: Vec<Option<(Vec<f32>, Vec<u32>)>> = vec![None; n_sites];
+    collect_phase(net, cfg, "codebook", &mut inbox, |sid, msg, slot| match msg {
+        Message::Codebook { site, dim: d, codewords, weights } => {
+            if site as usize != sid {
+                bail!("site id mismatch on codebook frame");
+            }
+            if d != dim {
+                bail!("site {sid} sent dim {d}, expected {dim}");
+            }
+            if codewords.len() != (d as usize) * weights.len() {
+                bail!("site {sid} sent a malformed codebook");
+            }
+            if slot.replace((codewords, weights)).is_some() {
+                bail!("site {sid} sent two codebooks");
+            }
+            Ok(())
+        }
+        other => bail!("unexpected message during collect: {other:?}"),
+    })?;
+
+    let mut cw_all: Vec<f32> = Vec::new();
+    let mut w_all: Vec<f32> = Vec::new();
+    // per-site (offset, count) into the codeword union
+    let mut spans = vec![(0usize, 0usize); n_sites];
+    for (sid, slot) in inbox.into_iter().enumerate() {
+        let (codewords, weights) = slot.expect("all collected");
+        spans[sid] = (w_all.len(), weights.len());
+        cw_all.extend_from_slice(&codewords);
+        w_all.extend(weights.iter().map(|&w| w as f32));
+    }
+    let n_codes = w_all.len();
+
+    // ---- phase 4: central spectral clustering on the codeword union ----
+    // Wall time, not thread CPU: this phase runs alone on the host (after
+    // the site barrier) and may fan out over the `par` pool, so its wall
+    // clock is exactly the elapsed contribution. Sites use thread CPU
+    // instead because *their* contention is a simulation artifact when they
+    // are threads (see crate::site).
+    let t0 = Instant::now();
+    let (code_labels, sigma) = central_cluster(&cw_all, dim as usize, &w_all, cfg, xla)?;
+    let central = t0.elapsed();
+
+    // ---- phase 5: populate labels back ----
+    for (sid, &(off, len)) in spans.iter().enumerate() {
+        let labels: Vec<u16> = code_labels[off..off + len].to_vec();
+        net.send(sid, &Message::Labels { site: sid as u32, labels })?;
+    }
+
+    Ok(LeaderOutcome {
+        dim: dim as usize,
+        n_codes,
+        sigma,
+        central,
+        site_points,
+        site_codes: spans.iter().map(|&(_, len)| len).collect(),
+    })
+}
+
+/// One receive-from-everyone phase with a straggler deadline: `slots` has
+/// one entry per site; `accept` validates and stores each message. On
+/// timeout or link failure the error names the sites that never reported.
+fn collect_phase<T>(
+    net: &LeaderNet,
+    cfg: &PipelineConfig,
+    phase: &str,
+    slots: &mut [Option<T>],
+    mut accept: impl FnMut(usize, Message, &mut Option<T>) -> Result<()>,
+) -> Result<()> {
+    let deadline = Instant::now() + cfg.collect_timeout;
+    let mut received = slots.iter().filter(|s| s.is_some()).count();
+    while received < slots.len() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let (sid, msg) = net.recv_timeout(remaining).map_err(|e| {
+            let missing: Vec<usize> = slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_none())
+                .map(|(i, _)| i)
+                .collect();
+            anyhow!(
+                "{phase} collect failed after {:?} — sites {missing:?} never \
+                 reported ({e})",
+                cfg.collect_timeout
+            )
+        })?;
+        if sid >= slots.len() {
+            bail!("message from out-of-range site {sid}");
+        }
+        let was_empty = slots[sid].is_none();
+        accept(sid, msg, &mut slots[sid])?;
+        if was_empty && slots[sid].is_some() {
+            received += 1;
+        }
+    }
+    Ok(())
+}
+
+/// What one in-process site worker does: bridge a [`SitePart`] onto the
+/// transport-agnostic [`crate::site::serve`] and map the populated labels
+/// back to global point indices.
 fn site_worker(
     part: &SitePart,
-    params: DmlParams,
     net: net::SiteNet,
     inject_failure: bool,
 ) -> Result<SiteOutcome> {
@@ -295,47 +460,19 @@ fn site_worker(
         // crashing before it reports — the leader must time out cleanly.
         bail!("injected failure at site {}", part.site_id);
     }
-    let t0 = crate::metrics::thread_cpu_time();
-    let cb = dml::apply(&part.data, &params);
-    let dml_time = crate::metrics::thread_cpu_time().saturating_sub(t0);
-    debug_assert!(cb.validate(part.data.len()).is_ok());
-    let distortion = cb.distortion(&part.data);
-
-    net.send(&Message::Codebook {
-        site: part.site_id as u32,
-        dim: cb.dim as u32,
-        codewords: cb.codewords.clone(),
-        weights: cb.weights.clone(),
-    })?;
-
-    let msg = net.recv()?;
-    let code_labels = match msg {
-        Message::Labels { site, labels } => {
-            if site as usize != part.site_id {
-                bail!("label frame for wrong site");
-            }
-            if labels.len() != cb.n_codes() {
-                bail!(
-                    "leader sent {} labels for {} codewords",
-                    labels.len(),
-                    cb.n_codes()
-                );
-            }
-            labels
-        }
-        other => bail!("unexpected message at site: {other:?}"),
-    };
-
-    let t1 = crate::metrics::thread_cpu_time();
-    let labels: Vec<(u32, u16)> = part
-        .global_idx
-        .iter()
-        .enumerate()
-        .map(|(local, &g)| (g, code_labels[cb.assign[local] as usize]))
-        .collect();
-    let populate_time = crate::metrics::thread_cpu_time().saturating_sub(t1);
-
-    Ok(SiteOutcome { site_id: part.site_id, dml_time, populate_time, distortion, labels })
+    if net.site_id() != part.site_id {
+        bail!("site handle {} wired to part {}", net.site_id(), part.site_id);
+    }
+    let out = crate::site::serve(&net, &part.data)?;
+    let labels: Vec<(u32, u16)> =
+        part.global_idx.iter().zip(&out.labels).map(|(&g, &l)| (g, l)).collect();
+    Ok(SiteOutcome {
+        site_id: part.site_id,
+        dml_time: out.dml_time,
+        populate_time: out.populate_time,
+        distortion: out.distortion,
+        labels,
+    })
 }
 
 /// Central spectral step with backend dispatch. Returns codeword labels and
@@ -372,7 +509,7 @@ fn central_cluster(
                 Some(weights),
                 params.bandwidth,
                 params.k,
-                GraphKind::Dense, // run_pipeline rejects knn + XLA up front
+                GraphKind::Dense, // leader_protocol rejects knn + XLA up front
                 &mut rng,
             );
             // weights double as the pad mask; the unweighted variant sends 1s
@@ -442,17 +579,6 @@ fn xla_kmeans_labels(
     }
     let (_, idx) = best.expect("at least one restart");
     Ok(idx.into_iter().map(|v| v as u16).collect())
-}
-
-/// Seed-derivation helper so site seeds come from the master seed's fork.
-trait SeedFork {
-    fn next_u64_seed(self) -> u64;
-}
-
-impl SeedFork for Rng {
-    fn next_u64_seed(mut self) -> u64 {
-        self.next_u64()
-    }
 }
 
 #[cfg(test)]
@@ -541,11 +667,11 @@ mod tests {
         assert!(report.accuracy > 0.99);
         assert_eq!(report.site_dml.len(), 4);
         assert_eq!(report.net.per_site.len(), 4);
-        // every site transmitted exactly one codebook and received one
-        // label frame
+        // the protocol is exactly two frames each way per site: site info +
+        // codebook up, dml request + labels down
         for l in &report.net.per_site {
-            assert_eq!(l.to_leader.frames, 1);
-            assert_eq!(l.to_site.frames, 1);
+            assert_eq!(l.to_leader.frames, 2);
+            assert_eq!(l.to_site.frames, 2);
         }
     }
 
@@ -574,5 +700,21 @@ mod tests {
     #[test]
     fn empty_parts_rejected() {
         assert!(run_pipeline(&[], &base_cfg()).is_err());
+    }
+
+    #[test]
+    fn leader_outcome_accounts_sites() {
+        let ds = blob_mixture(2_000, 31);
+        let parts = scenario::split(&ds, Scenario::D4, 2, 33);
+        let report = run_pipeline(&parts, &base_cfg()).unwrap();
+        // D4 skews sizes 2:1; the proportional budget must follow
+        assert_eq!(report.n_codes, 64);
+        assert!(parts[0].data.len() > parts[1].data.len());
+    }
+
+    #[test]
+    fn tcp_leader_requires_site_addresses() {
+        let err = run_leader_tcp(&base_cfg()).unwrap_err();
+        assert!(err.to_string().contains("site addresses"), "{err}");
     }
 }

@@ -17,7 +17,9 @@
 //!    executing the eigensolver as an AOT-compiled XLA program through
 //!    [`runtime`]);
 //! 3. codeword labels are populated back so each site recovers the label of
-//!    every original point ([`coordinator`]).
+//!    every original point ([`coordinator`] drives the leader half, [`site`]
+//!    the worker half — over in-process channels by default, or over real
+//!    TCP between `dsc leader` / `dsc site` daemon processes).
 //!
 //! The crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
 //! stack: the Gaussian-affinity and k-means-assignment hot spots are Pallas
@@ -67,6 +69,7 @@ pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod site;
 pub mod spectral;
 
 /// Convenience re-exports for the common pipeline surface.

@@ -1,0 +1,104 @@
+//! In-process channel backend: the star network as `mpsc` channels.
+//!
+//! The default transport for tests, benches and `dsc run` — every site is a
+//! thread in the coordinator's process and a "link" is a pair of unbounded
+//! channels. Frames are the same encoded bytes the TCP backend ships, so
+//! the byte accounting (done above the transport seam) is identical; only
+//! the delivery mechanism differs.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::transport::{LeaderTransport, SiteTransport};
+
+/// Leader half of the channel star.
+pub struct ChannelLeader {
+    from_sites: Receiver<(usize, Vec<u8>)>,
+    to_sites: Vec<Sender<Vec<u8>>>,
+}
+
+/// One site's half of the channel star (moved into the site's thread).
+pub struct ChannelSite {
+    site_id: usize,
+    to_leader: Sender<(usize, Vec<u8>)>,
+    from_leader: Receiver<Vec<u8>>,
+}
+
+/// Build the channel star: one leader transport, `n_sites` site transports.
+pub fn star(n_sites: usize) -> (ChannelLeader, Vec<ChannelSite>) {
+    let (up_tx, up_rx) = channel::<(usize, Vec<u8>)>();
+    let mut to_sites = Vec::with_capacity(n_sites);
+    let mut sites = Vec::with_capacity(n_sites);
+    for site_id in 0..n_sites {
+        let (down_tx, down_rx) = channel::<Vec<u8>>();
+        to_sites.push(down_tx);
+        sites.push(ChannelSite { site_id, to_leader: up_tx.clone(), from_leader: down_rx });
+    }
+    (ChannelLeader { from_sites: up_rx, to_sites }, sites)
+}
+
+impl LeaderTransport for ChannelLeader {
+    fn n_sites(&self) -> usize {
+        self.to_sites.len()
+    }
+
+    fn send(&self, site: usize, frame: Vec<u8>) -> Result<()> {
+        self.to_sites[site].send(frame).context("site channel closed")
+    }
+
+    fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
+        match timeout {
+            None => self.from_sites.recv().context("all site channels closed"),
+            Some(t) => self.from_sites.recv_timeout(t).map_err(|e| match e {
+                RecvTimeoutError::Timeout => anyhow!("timed out waiting for sites"),
+                RecvTimeoutError::Disconnected => anyhow!("all site channels closed"),
+            }),
+        }
+    }
+}
+
+impl SiteTransport for ChannelSite {
+    fn site_id(&self) -> usize {
+        self.site_id
+    }
+
+    fn send(&self, frame: Vec<u8>) -> Result<()> {
+        self.to_leader.send((self.site_id, frame)).context("leader channel closed")
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.from_leader.recv().context("leader channel closed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_flow_both_ways() {
+        let (leader, sites) = star(2);
+        sites[1].send(b"up".to_vec()).unwrap();
+        let (id, frame) = leader.recv(None).unwrap();
+        assert_eq!((id, frame.as_slice()), (1, b"up".as_slice()));
+
+        leader.send(0, b"down".to_vec()).unwrap();
+        assert_eq!(sites[0].recv().unwrap(), b"down".to_vec());
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let (leader, _sites) = star(1);
+        assert!(leader.recv(Some(Duration::from_millis(10))).is_err());
+    }
+
+    #[test]
+    fn dropped_leader_unblocks_site() {
+        let (leader, sites) = star(1);
+        drop(leader);
+        assert!(sites[0].recv().is_err());
+        assert!(sites[0].send(b"x".to_vec()).is_err());
+    }
+}

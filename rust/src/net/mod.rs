@@ -1,25 +1,42 @@
-//! Simulated site↔leader network with exact byte accounting.
+//! Site↔leader star network with exact byte accounting, over pluggable
+//! transports.
 //!
 //! The paper runs all "sites" on one laptop and reasons about communication
 //! qualitatively ("only those codewords need to be transmitted"). This
-//! module makes that quantitative: every protocol message is serialized
-//! through [`wire`], counted per link and direction, and assigned a
-//! simulated transfer time `latency + bytes / bandwidth` under a
-//! configurable [`LinkSpec`]. Benchmarks report both the byte totals and
-//! the modeled transfer times (DESIGN.md ablation A3).
+//! module makes that quantitative — and, since the TCP backend, literal:
+//! every protocol message is serialized through [`wire`], counted per link
+//! and direction, and assigned a simulated transfer time
+//! `latency + bytes / bandwidth` under a configurable [`LinkSpec`].
+//! Benchmarks report both the byte totals and the modeled transfer times
+//! (DESIGN.md ablation A3).
 //!
-//! Transport is in-process (`mpsc` channels between the leader and each
-//! site thread); the wire format is the real ABI, so swapping in TCP later
-//! only replaces this file.
+//! Delivery is a [`transport`] backend:
+//!
+//! * [`channel`] — in-process `mpsc` star (default; `dsc run`, tests,
+//!   benches). Sites are threads of the coordinator process.
+//! * [`tcp`] — real sockets for separate leader/site processes
+//!   (`dsc leader` / `dsc site`), with length-prefixed frames, a versioned
+//!   handshake, and read/write timeouts.
+//!
+//! Accounting lives *above* the seam, on the leader's side of every link:
+//! [`LeaderNet`] counts each encoded frame as it sends (`to_site`) or
+//! receives (`to_leader`) it. Both backends therefore report identical
+//! [`NetReport`] counters for the same protocol run — transport framing
+//! (TCP length prefixes, the handshake) is deliberately excluded.
+//! `docs/PROTOCOL.md` specifies the wire format; `docs/DEPLOY.md` covers
+//! running the star across real machines.
 
+pub mod channel;
+pub mod tcp;
+pub mod transport;
 pub mod wire;
 
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+pub use transport::{LeaderTransport, SiteTransport};
 pub use wire::Message;
 
 /// Bandwidth/latency model of one site↔leader link.
@@ -84,109 +101,103 @@ impl NetReport {
     }
 }
 
-struct Shared {
-    stats: Mutex<Vec<LinkStats>>,
-    spec: LinkSpec,
-}
-
-/// Leader-side handle to the star network.
+/// Leader-side handle to the star network: encodes/decodes protocol
+/// messages and keeps the per-link byte counters, independent of which
+/// transport moves the frames.
 pub struct LeaderNet {
-    shared: Arc<Shared>,
-    from_sites: Receiver<(usize, Vec<u8>)>,
-    to_sites: Vec<Sender<Vec<u8>>>,
+    transport: Box<dyn LeaderTransport>,
+    spec: LinkSpec,
+    stats: Mutex<Vec<LinkStats>>,
 }
 
-/// Site-side handle (moved into the site's thread).
+/// Site-side handle (moved into the site's thread, or owned by the site
+/// daemon process).
 pub struct SiteNet {
-    shared: Arc<Shared>,
-    site_id: usize,
-    to_leader: Sender<(usize, Vec<u8>)>,
-    from_leader: Receiver<Vec<u8>>,
+    transport: Box<dyn SiteTransport>,
 }
 
-/// Build a star topology: one leader, `n_sites` sites, all links sharing
-/// `spec`. Returns the leader handle plus one handle per site.
+/// Build the default in-process star: one leader, `n_sites` site threads,
+/// all links sharing `spec`. Swap the transport with [`LeaderNet::over`] /
+/// [`SiteNet::over`] for TCP.
 pub fn star(n_sites: usize, spec: LinkSpec) -> (LeaderNet, Vec<SiteNet>) {
-    let shared = Arc::new(Shared { stats: Mutex::new(vec![LinkStats::default(); n_sites]), spec });
-    let (up_tx, up_rx) = std::sync::mpsc::channel::<(usize, Vec<u8>)>();
-    let mut to_sites = Vec::with_capacity(n_sites);
-    let mut site_handles = Vec::with_capacity(n_sites);
-    for site_id in 0..n_sites {
-        let (down_tx, down_rx) = std::sync::mpsc::channel::<Vec<u8>>();
-        to_sites.push(down_tx);
-        site_handles.push(SiteNet {
-            shared: shared.clone(),
-            site_id,
-            to_leader: up_tx.clone(),
-            from_leader: down_rx,
-        });
-    }
-    (LeaderNet { shared, from_sites: up_rx, to_sites }, site_handles)
+    let (leader, sites) = channel::star(n_sites);
+    (
+        LeaderNet::over(Box::new(leader), spec),
+        sites.into_iter().map(|s| SiteNet::over(Box::new(s))).collect(),
+    )
 }
 
 impl LeaderNet {
+    /// Wrap a leader transport with accounting under `spec`.
+    pub fn over(transport: Box<dyn LeaderTransport>, spec: LinkSpec) -> LeaderNet {
+        let n = transport.n_sites();
+        LeaderNet { transport, spec, stats: Mutex::new(vec![LinkStats::default(); n]) }
+    }
+
+    fn account(&self, site: usize, to_leader: bool, bytes: usize) {
+        let mut stats = self.stats.lock().unwrap();
+        let link = &mut stats[site];
+        let dir = if to_leader { &mut link.to_leader } else { &mut link.to_site };
+        dir.frames += 1;
+        dir.bytes += bytes as u64;
+        dir.sim_time += self.spec.transfer_time(bytes as u64);
+    }
+
     /// Send `msg` to `site`.
     pub fn send(&self, site: usize, msg: &Message) -> Result<()> {
         let frame = wire::encode(msg);
-        {
-            let mut stats = self.shared.stats.lock().unwrap();
-            let dir = &mut stats[site].to_site;
-            dir.frames += 1;
-            dir.bytes += frame.len() as u64;
-            dir.sim_time += self.shared.spec.transfer_time(frame.len() as u64);
-        }
-        self.to_sites[site].send(frame).context("site channel closed")?;
-        Ok(())
+        self.account(site, false, frame.len());
+        self.transport.send(site, frame)
     }
 
     /// Blocking receive of the next message from any site.
     pub fn recv(&self) -> Result<(usize, Message)> {
-        let (site, frame) = self.from_sites.recv().context("all site channels closed")?;
-        let msg = wire::decode(&frame)?;
-        Ok((site, msg))
+        self.recv_inner(None)
     }
 
-    /// Receive with a timeout (failure-injection tests use this).
+    /// Receive with a timeout (straggler deadlines and failure-injection
+    /// tests use this).
     pub fn recv_timeout(&self, timeout: Duration) -> Result<(usize, Message)> {
-        let (site, frame) =
-            self.from_sites.recv_timeout(timeout).context("timed out waiting for sites")?;
+        self.recv_inner(Some(timeout))
+    }
+
+    fn recv_inner(&self, timeout: Option<Duration>) -> Result<(usize, Message)> {
+        let (site, frame) = self.transport.recv(timeout)?;
+        self.account(site, true, frame.len());
         let msg = wire::decode(&frame)?;
         Ok((site, msg))
     }
 
     /// Snapshot of the per-link counters.
     pub fn report(&self) -> NetReport {
-        NetReport { per_site: self.shared.stats.lock().unwrap().clone() }
+        NetReport { per_site: self.stats.lock().unwrap().clone() }
     }
 
     pub fn n_sites(&self) -> usize {
-        self.to_sites.len()
+        self.transport.n_sites()
     }
 }
 
 impl SiteNet {
+    /// Wrap a site transport. No counters on this side: the leader accounts
+    /// both directions of its links, so counts cannot drift between
+    /// backends (a site daemon has no way to see the whole star anyway).
+    pub fn over(transport: Box<dyn SiteTransport>) -> SiteNet {
+        SiteNet { transport }
+    }
+
     pub fn site_id(&self) -> usize {
-        self.site_id
+        self.transport.site_id()
     }
 
     /// Send `msg` up to the leader.
     pub fn send(&self, msg: &Message) -> Result<()> {
-        let frame = wire::encode(msg);
-        {
-            let mut stats = self.shared.stats.lock().unwrap();
-            let dir = &mut stats[self.site_id].to_leader;
-            dir.frames += 1;
-            dir.bytes += frame.len() as u64;
-            dir.sim_time += self.shared.spec.transfer_time(frame.len() as u64);
-        }
-        self.to_leader.send((self.site_id, frame)).context("leader channel closed")?;
-        Ok(())
+        self.transport.send(wire::encode(msg))
     }
 
     /// Blocking receive of the next leader message.
     pub fn recv(&self) -> Result<Message> {
-        let frame = self.from_leader.recv().context("leader channel closed")?;
-        wire::decode(&frame)
+        wire::decode(&self.transport.recv()?)
     }
 }
 

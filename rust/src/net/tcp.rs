@@ -1,0 +1,430 @@
+//! TCP backend: the star network over real sockets (`std::net`, no deps).
+//!
+//! This is the transport behind the `dsc leader` / `dsc site` daemon modes.
+//! Layout on the wire (little-endian, see `docs/PROTOCOL.md` for the full
+//! byte-level specification):
+//!
+//! ```text
+//! connection := leader_hello site_hello frame*
+//! hello      := magic:[u8;4]="DSCP" version:u16 role:u8 site_id:u32
+//! frame      := len:u32 payload:[u8; len]        (payload = one wire frame)
+//! ```
+//!
+//! The leader dials every site, sends its `Hello` (assigning the site its
+//! id — position in the `--sites` list), and the site echoes one back; both
+//! ends then verify magic, role, protocol version, and the echoed id before
+//! any protocol frame flows. Read/write timeouts bound mid-frame stalls and
+//! writes, but *idle* links never time out at this layer — a site
+//! legitimately sits silent through the leader's central phase (and the
+//! leader through the sites' DML phase); deadline policy belongs to the
+//! coordinator (`collect_timeout`), not the transport.
+//!
+//! Byte accounting happens above the transport seam, on the encoded wire
+//! frames only: the 4-byte length prefix and the 11-byte handshake are
+//! transport framing, excluded so [`super::NetReport`] counters are
+//! identical across the channel and TCP backends.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::transport::{LeaderTransport, SiteTransport};
+
+/// Version of the wire protocol this build speaks. Bumped on any breaking
+/// change to the handshake, framing, or message layouts (`docs/PROTOCOL.md`
+/// has the forward-compatibility rules).
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Hard cap on a single frame; protects the receiver from hostile length
+/// prefixes (the largest legitimate frame — a capped label or codebook
+/// message — stays under this).
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+const MAGIC: [u8; 4] = *b"DSCP";
+const ROLE_LEADER: u8 = 0;
+const ROLE_SITE: u8 = 1;
+const HELLO_LEN: usize = 11;
+
+/// Socket deadlines for the TCP backend (config `[net]`).
+#[derive(Clone, Copy, Debug)]
+pub struct TcpTimeouts {
+    /// Dial + handshake deadline per site.
+    pub connect: Duration,
+    /// Mid-frame read stall / write stall deadline. Zero disables.
+    pub io: Duration,
+}
+
+impl Default for TcpTimeouts {
+    fn default() -> Self {
+        TcpTimeouts { connect: Duration::from_secs(10), io: Duration::from_secs(30) }
+    }
+}
+
+/// `set_read_timeout`/`set_write_timeout` reject `Some(0)`; zero means "no
+/// timeout" throughout the config surface.
+fn opt_timeout(d: Duration) -> Option<Duration> {
+    (!d.is_zero()).then_some(d)
+}
+
+fn is_wait(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+// ─── handshake ─────────────────────────────────────────────────────────────
+
+struct Hello {
+    version: u16,
+    role: u8,
+    site_id: u32,
+}
+
+fn encode_hello(role: u8, site_id: u32) -> [u8; HELLO_LEN] {
+    let mut b = [0u8; HELLO_LEN];
+    b[..4].copy_from_slice(&MAGIC);
+    b[4..6].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    b[6] = role;
+    b[7..11].copy_from_slice(&site_id.to_le_bytes());
+    b
+}
+
+fn read_hello<R: Read>(r: &mut R) -> Result<Hello> {
+    let mut b = [0u8; HELLO_LEN];
+    r.read_exact(&mut b).context("read handshake")?;
+    if b[..4] != MAGIC {
+        bail!("peer is not a dsc endpoint (bad handshake magic)");
+    }
+    Ok(Hello {
+        version: u16::from_le_bytes([b[4], b[5]]),
+        role: b[6],
+        site_id: u32::from_le_bytes(b[7..11].try_into().unwrap()),
+    })
+}
+
+fn check_version(peer: u16) -> Result<()> {
+    if peer != PROTOCOL_VERSION {
+        bail!(
+            "protocol version mismatch: peer speaks v{peer}, this build speaks \
+             v{PROTOCOL_VERSION}"
+        );
+    }
+    Ok(())
+}
+
+// ─── framing ───────────────────────────────────────────────────────────────
+
+fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    let len = u32::try_from(frame.len())
+        .ok()
+        .filter(|&l| l <= MAX_FRAME_BYTES)
+        .ok_or_else(|| {
+            anyhow!("frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap", frame.len())
+        })?;
+    w.write_all(&len.to_le_bytes()).context("write frame length")?;
+    w.write_all(frame).context("write frame body")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. `Ok(None)` means the peer closed the
+/// connection cleanly at a frame boundary. Read timeouts while *waiting*
+/// for a frame to start are swallowed (idle links are legal — see the
+/// module docs); a timeout or EOF *inside* a frame is an error.
+fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid-frame (torn length prefix)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_wait(&e) && got == 0 => {} // idle between frames
+            Err(e) if is_wait(&e) => bail!("peer stalled mid-frame: {e}"),
+            Err(e) => return Err(e).context("read frame length"),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap");
+    }
+    let len = len as usize;
+    // Grow as bytes actually arrive instead of trusting the declared length
+    // with an upfront reservation (mirror of wire::decode's allocation
+    // bound): a hostile prefix costs at most one socket buffer of memory.
+    let mut buf = Vec::with_capacity(len.min(64 * 1024));
+    let mut limited = Read::take(&mut *r, len as u64);
+    match limited.read_to_end(&mut buf) {
+        Ok(_) => {}
+        Err(e) if is_wait(&e) => {
+            bail!("peer stalled mid-frame after {} of {len} bytes: {e}", buf.len())
+        }
+        Err(e) => return Err(e).context("read frame body"),
+    }
+    if buf.len() != len {
+        bail!("connection closed mid-frame: got {} of {len} bytes", buf.len());
+    }
+    Ok(Some(buf))
+}
+
+// ─── leader side ───────────────────────────────────────────────────────────
+
+/// Leader transport: one socket per site plus a reader thread per socket
+/// funnelling frames into a single mailbox (so `recv` is "next frame from
+/// any site", exactly like the channel backend).
+pub struct TcpLeader {
+    conns: Vec<TcpStream>,
+    rx: Receiver<(usize, Result<Vec<u8>, String>)>,
+    readers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Dial every site in `addrs` (index = site id), run the handshake, and
+/// assemble the leader transport. Fails fast on the first unreachable or
+/// incompatible site.
+pub fn connect_sites(addrs: &[String], timeouts: &TcpTimeouts) -> Result<TcpLeader> {
+    if addrs.is_empty() {
+        bail!("no site addresses to connect to");
+    }
+    let mut conns = Vec::with_capacity(addrs.len());
+    for (site_id, addr) in addrs.iter().enumerate() {
+        let stream = connect_one(addr, timeouts)
+            .with_context(|| format!("connect to site {site_id} at {addr}"))?;
+        let stream = leader_handshake(stream, site_id as u32, timeouts)
+            .with_context(|| format!("handshake with site {site_id} at {addr}"))?;
+        conns.push(stream);
+    }
+    let (tx, rx) = mpsc::channel();
+    let mut readers = Vec::with_capacity(conns.len());
+    for (site_id, stream) in conns.iter().enumerate() {
+        let mut rd = stream.try_clone().context("clone site socket for reading")?;
+        let tx = tx.clone();
+        readers.push(thread::spawn(move || loop {
+            match read_frame(&mut rd) {
+                Ok(Some(frame)) => {
+                    if tx.send((site_id, Ok(frame))).is_err() {
+                        return; // leader gone; stop reading
+                    }
+                }
+                Ok(None) => {
+                    let _ = tx.send((site_id, Err("site closed the connection".into())));
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send((site_id, Err(format!("{e:#}"))));
+                    return;
+                }
+            }
+        }));
+    }
+    Ok(TcpLeader { conns, rx, readers })
+}
+
+fn connect_one(addr: &str, t: &TcpTimeouts) -> Result<TcpStream> {
+    let sa: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve {addr:?}"))?
+        .next()
+        .ok_or_else(|| anyhow!("address {addr:?} resolved to nothing"))?;
+    let stream = match opt_timeout(t.connect) {
+        Some(d) => TcpStream::connect_timeout(&sa, d),
+        None => TcpStream::connect(sa),
+    }
+    .context("tcp connect")?;
+    stream.set_nodelay(true).ok(); // small control frames must not batch
+    Ok(stream)
+}
+
+fn leader_handshake(mut stream: TcpStream, site_id: u32, t: &TcpTimeouts) -> Result<TcpStream> {
+    stream.set_read_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    stream.set_write_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    stream.write_all(&encode_hello(ROLE_LEADER, site_id)).context("send hello")?;
+    let hello = read_hello(&mut stream)?;
+    check_version(hello.version)?;
+    if hello.role != ROLE_SITE {
+        bail!("peer answered with role {} (expected a site)", hello.role);
+    }
+    if hello.site_id != site_id {
+        bail!("site echoed id {} (expected {site_id})", hello.site_id);
+    }
+    stream.set_read_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    stream.set_write_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    Ok(stream)
+}
+
+impl LeaderTransport for TcpLeader {
+    fn n_sites(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn send(&self, site: usize, frame: Vec<u8>) -> Result<()> {
+        let mut w = &self.conns[site];
+        write_frame(&mut w, &frame).with_context(|| format!("send to site {site}"))
+    }
+
+    fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
+        let (site, res) = match timeout {
+            None => {
+                self.rx.recv().map_err(|_| anyhow!("all site connections closed"))?
+            }
+            Some(t) => self.rx.recv_timeout(t).map_err(|e| match e {
+                RecvTimeoutError::Timeout => anyhow!("timed out waiting for sites"),
+                RecvTimeoutError::Disconnected => anyhow!("all site connections closed"),
+            })?,
+        };
+        match res {
+            Ok(frame) => Ok((site, frame)),
+            Err(msg) => bail!("site {site} link failed: {msg}"),
+        }
+    }
+}
+
+impl Drop for TcpLeader {
+    fn drop(&mut self) {
+        // Shut the sockets down first so reader threads blocked in `read`
+        // wake with EOF, then reap them.
+        for c in &self.conns {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ─── site side ─────────────────────────────────────────────────────────────
+
+/// A site's listening socket (`dsc site --listen`). Each [`accept`] yields
+/// one handshaken leader connection; a daemon loops accepting, one pipeline
+/// run per connection.
+///
+/// [`accept`]: SiteListener::accept
+pub struct SiteListener {
+    listener: TcpListener,
+}
+
+impl SiteListener {
+    /// Bind the listening socket. Port 0 picks a free port — read it back
+    /// with [`SiteListener::local_addr`].
+    pub fn bind(addr: &str) -> Result<SiteListener> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(SiteListener { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("listener local addr")
+    }
+
+    /// Block for the next leader connection and complete the handshake.
+    /// The returned transport carries the site id the leader assigned.
+    pub fn accept(&self, timeouts: &TcpTimeouts) -> Result<TcpSite> {
+        let (mut stream, peer) = self.listener.accept().context("accept")?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(opt_timeout(timeouts.connect)).context("set handshake timeout")?;
+        stream.set_write_timeout(opt_timeout(timeouts.connect)).context("set handshake timeout")?;
+        let hello =
+            read_hello(&mut stream).with_context(|| format!("handshake with {peer}"))?;
+        // Reply before validating the peer's version so a mismatched leader
+        // still learns which version this site speaks.
+        stream.write_all(&encode_hello(ROLE_SITE, hello.site_id)).context("send hello")?;
+        check_version(hello.version)?;
+        if hello.role != ROLE_LEADER {
+            bail!("peer {peer} presented role {} (expected the leader)", hello.role);
+        }
+        stream.set_read_timeout(opt_timeout(timeouts.io)).context("set io timeout")?;
+        stream.set_write_timeout(opt_timeout(timeouts.io)).context("set io timeout")?;
+        Ok(TcpSite { stream, site_id: hello.site_id as usize })
+    }
+}
+
+/// Site transport: one handshaken connection to the leader.
+pub struct TcpSite {
+    stream: TcpStream,
+    site_id: usize,
+}
+
+impl SiteTransport for TcpSite {
+    fn site_id(&self) -> usize {
+        self.site_id
+    }
+
+    fn send(&self, frame: Vec<u8>) -> Result<()> {
+        let mut w = &self.stream;
+        write_frame(&mut w, &frame).context("send to leader")
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        let mut r = &self.stream;
+        match read_frame(&mut r)? {
+            Some(frame) => Ok(frame),
+            None => bail!("leader closed the connection"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_in_memory() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello frames").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello frames".to_vec());
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), Vec::<u8>::new());
+        // clean EOF at a frame boundary
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_frames_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"full frame").unwrap();
+        // torn inside the payload and inside the length prefix
+        for cut in [2usize, 4, 7] {
+            let mut r = &wire[..cut];
+            assert!(read_frame(&mut r).is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected() {
+        let wire = u32::MAX.to_le_bytes();
+        let mut r = &wire[..];
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn declared_length_longer_than_stream_errors() {
+        let mut wire = 1000u32.to_le_bytes().to_vec();
+        wire.extend_from_slice(&[7u8; 10]); // only 10 of 1000 bytes present
+        let mut r = &wire[..];
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("mid-frame"), "{err}");
+    }
+
+    #[test]
+    fn hello_roundtrip_and_validation() {
+        let bytes = encode_hello(ROLE_SITE, 42);
+        let h = read_hello(&mut &bytes[..]).unwrap();
+        assert_eq!((h.version, h.role, h.site_id), (PROTOCOL_VERSION, ROLE_SITE, 42));
+
+        let mut bad_magic = bytes;
+        bad_magic[0] = b'X';
+        assert!(read_hello(&mut &bad_magic[..]).is_err());
+
+        assert!(check_version(PROTOCOL_VERSION).is_ok());
+        let err = check_version(PROTOCOL_VERSION + 1).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn zero_io_timeout_means_disabled() {
+        assert_eq!(opt_timeout(Duration::ZERO), None);
+        assert_eq!(opt_timeout(Duration::from_secs(3)), Some(Duration::from_secs(3)));
+    }
+}

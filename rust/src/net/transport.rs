@@ -1,0 +1,57 @@
+//! The transport seam: how raw protocol frames move between the leader and
+//! the sites.
+//!
+//! Everything above this layer — the [`super::wire`] codec, the byte
+//! accounting in [`super::LeaderNet`]/[`super::SiteNet`], and the whole
+//! coordinator protocol — is transport-agnostic. A backend only has to move
+//! opaque `Vec<u8>` frames reliably and in order per link:
+//!
+//! * [`super::channel`] — in-process `mpsc` star (the default for tests,
+//!   benches and `dsc run`): zero-cost links, every "site" is a thread.
+//! * [`super::tcp`] — real sockets for the leader/site daemon modes
+//!   (`dsc leader` / `dsc site`): length-prefixed frames, a versioned
+//!   handshake, read/write timeouts.
+//!
+//! Because byte accounting happens *above* this seam (the leader counts
+//! each encoded frame as it sends/receives it), the per-link counters in
+//! [`super::NetReport`] are identical across backends by construction —
+//! `examples/tcp_cluster.rs` and `rust/tests/tcp_transport.rs` pin that.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// Leader-side frame mover for a star of `n_sites` links.
+///
+/// Implementations must deliver frames reliably and in order per link;
+/// `recv` is a single mailbox over all sites (frames from different sites
+/// may interleave arbitrarily). Not required to support concurrent calls.
+pub trait LeaderTransport: Send {
+    /// Number of site links in the star.
+    fn n_sites(&self) -> usize;
+
+    /// Deliver one frame to `site`. Ownership passes so the channel
+    /// backend can move the encoded buffer straight into its queue without
+    /// a copy (TCP serializes from the same buffer).
+    fn send(&self, site: usize, frame: Vec<u8>) -> Result<()>;
+
+    /// Next frame from any site; blocks up to `timeout` (`None` = forever).
+    /// An error means a link failed or the wait timed out — the frame, if
+    /// any was in flight, is lost with the connection.
+    fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)>;
+}
+
+/// Site-side frame mover for one leader link.
+pub trait SiteTransport: Send {
+    /// This site's id in the star (assigned by the leader).
+    fn site_id(&self) -> usize;
+
+    /// Deliver one frame to the leader (ownership passes; see
+    /// [`LeaderTransport::send`]).
+    fn send(&self, frame: Vec<u8>) -> Result<()>;
+
+    /// Next frame from the leader; blocks until one arrives or the link
+    /// dies. Sites wait out the leader's long central phase here, so idle
+    /// time alone must not error — only a dead or misbehaving link.
+    fn recv(&self) -> Result<Vec<u8>>;
+}

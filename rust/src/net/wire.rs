@@ -1,8 +1,9 @@
 //! Binary wire format for coordinator ⇄ site traffic.
 //!
-//! Everything that crosses a (simulated) link is serialized through this
-//! codec, so the byte counts the benchmarks report are the real size of
-//! the protocol messages, not estimates. Little-endian, length-prefixed:
+//! Everything that crosses a link — simulated channel or real TCP — is
+//! serialized through this codec, so the byte counts the benchmarks report
+//! are the real size of the protocol messages, not estimates. Little-endian
+//! throughout:
 //!
 //! ```text
 //! frame   := tag:u8 payload
@@ -10,12 +11,21 @@
 //! LABELS(2)   := site:u32 n:u32 labels:[u16; n]
 //! SIGMA(3)    := sigma:f32            (leader → sites broadcast, D3 tuning)
 //! ACK(4)      :=
+//! SITEINFO(5) := site:u32 n_points:u64 dim:u32     (site → leader, registration)
+//! DMLREQ(6)   := site:u32 dml:u8 target_codes:u32
+//!                max_iters:u32 tol:f64 seed:u64    (leader → site, work order)
 //! ```
 //!
 //! Codebook frames are exactly what the paper transmits (codewords + group
-//! sizes); label frames are the populated memberships coming back.
+//! sizes); label frames are the populated memberships coming back. SiteInfo
+//! and DmlRequest are the small control handshake that lets the leader size
+//! each site's codeword budget without seeing the data. The byte-level
+//! layout, framing on TCP, and forward-compatibility rules are documented
+//! in `docs/PROTOCOL.md`.
 
 use anyhow::{bail, Result};
+
+use crate::dml::DmlKind;
 
 /// A protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -28,12 +38,20 @@ pub enum Message {
     /// pre-scale data) — small control traffic, counted like the rest.
     Sigma(f32),
     Ack,
+    /// Site → leader: local shard shape, sent at the start of a run so the
+    /// leader can size codeword budgets proportionally to site sizes.
+    SiteInfo { site: u32, n_points: u64, dim: u32 },
+    /// Leader → site: the DML work order (transform, budget, Lloyd knobs,
+    /// the site's forked seed).
+    DmlRequest { site: u32, dml: DmlKind, target_codes: u32, max_iters: u32, tol: f64, seed: u64 },
 }
 
 const TAG_CODEBOOK: u8 = 1;
 const TAG_LABELS: u8 = 2;
 const TAG_SIGMA: u8 = 3;
 const TAG_ACK: u8 = 4;
+const TAG_SITEINFO: u8 = 5;
+const TAG_DMLREQ: u8 = 6;
 
 struct Writer {
     buf: Vec<u8>,
@@ -49,7 +67,13 @@ impl Writer {
     fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
     fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
     fn u16(&mut self, v: u16) {
@@ -80,15 +104,44 @@ impl<'a> Reader<'a> {
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
     fn u16(&mut self) -> Result<u16> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
+    /// Bytes left in the frame — the hard ceiling on how many array
+    /// elements can still be decoded, used to bound pre-allocation.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
     fn done(&self) -> bool {
         self.pos == self.buf.len()
     }
+}
+
+/// Wire encoding of a [`DmlKind`] (DMLREQ `dml` field).
+fn dml_code(kind: DmlKind) -> u8 {
+    match kind {
+        DmlKind::KMeans => 0,
+        DmlKind::RpTree => 1,
+        DmlKind::RandomSample => 2,
+    }
+}
+
+fn dml_from_code(code: u8) -> Result<DmlKind> {
+    Ok(match code {
+        0 => DmlKind::KMeans,
+        1 => DmlKind::RpTree,
+        2 => DmlKind::RandomSample,
+        other => bail!("unknown dml code {other}"),
+    })
 }
 
 /// Serialize a message to a frame.
@@ -121,12 +174,32 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.f32(*s);
         }
         Message::Ack => w.u8(TAG_ACK),
+        Message::SiteInfo { site, n_points, dim } => {
+            w.u8(TAG_SITEINFO);
+            w.u32(*site);
+            w.u64(*n_points);
+            w.u32(*dim);
+        }
+        Message::DmlRequest { site, dml, target_codes, max_iters, tol, seed } => {
+            w.u8(TAG_DMLREQ);
+            w.u32(*site);
+            w.u8(dml_code(*dml));
+            w.u32(*target_codes);
+            w.u32(*max_iters);
+            w.f64(*tol);
+            w.u64(*seed);
+        }
     }
     w.buf
 }
 
 /// Deserialize a frame. Errors on truncation, trailing garbage, overflow or
 /// unknown tags (a hostile/corrupt frame must not panic the coordinator).
+///
+/// Array pre-allocation is bounded by the bytes actually present in the
+/// frame, not by the declared element count: a 13-byte hostile frame whose
+/// header claims millions of elements fails on truncation having reserved
+/// nothing, instead of reserving hundreds of megabytes first.
 pub fn decode(frame: &[u8]) -> Result<Message> {
     let mut r = Reader::new(frame);
     let tag = r.u8()?;
@@ -139,11 +212,11 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             if total > 100_000_000 {
                 bail!("codebook too large: {n} codes × {dim} dims");
             }
-            let mut codewords = Vec::with_capacity(total as usize);
+            let mut codewords = Vec::with_capacity((total as usize).min(r.remaining() / 4));
             for _ in 0..total {
                 codewords.push(r.f32()?);
             }
-            let mut weights = Vec::with_capacity(n as usize);
+            let mut weights = Vec::with_capacity((n as usize).min(r.remaining() / 4));
             for _ in 0..n {
                 weights.push(r.u32()?);
             }
@@ -155,7 +228,7 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             if n > 500_000_000 {
                 bail!("label frame too large: {n}");
             }
-            let mut labels = Vec::with_capacity(n as usize);
+            let mut labels = Vec::with_capacity((n as usize).min(r.remaining() / 2));
             for _ in 0..n {
                 labels.push(r.u16()?);
             }
@@ -163,6 +236,21 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
         }
         TAG_SIGMA => Message::Sigma(r.f32()?),
         TAG_ACK => Message::Ack,
+        TAG_SITEINFO => {
+            let site = r.u32()?;
+            let n_points = r.u64()?;
+            let dim = r.u32()?;
+            Message::SiteInfo { site, n_points, dim }
+        }
+        TAG_DMLREQ => {
+            let site = r.u32()?;
+            let dml = dml_from_code(r.u8()?)?;
+            let target_codes = r.u32()?;
+            let max_iters = r.u32()?;
+            let tol = r.f64()?;
+            let seed = r.u64()?;
+            Message::DmlRequest { site, dml, target_codes, max_iters, tol, seed }
+        }
         t => bail!("unknown message tag {t}"),
     };
     if !r.done() {
@@ -202,10 +290,64 @@ mod tests {
     }
 
     #[test]
+    fn siteinfo_roundtrip() {
+        let msg = Message::SiteInfo { site: 7, n_points: u64::MAX - 3, dim: 128 };
+        let frame = encode(&msg);
+        assert_eq!(decode(&frame).unwrap(), msg);
+        // 1 + 4 + 8 + 4
+        assert_eq!(frame.len(), 17);
+    }
+
+    #[test]
+    fn dml_request_roundtrip() {
+        for dml in [DmlKind::KMeans, DmlKind::RpTree, DmlKind::RandomSample] {
+            let msg = Message::DmlRequest {
+                site: 2,
+                dml,
+                target_codes: 500,
+                max_iters: 30,
+                tol: 1e-6,
+                seed: 0xDEAD_BEEF_CAFE_F00D,
+            };
+            let frame = encode(&msg);
+            assert_eq!(decode(&frame).unwrap(), msg);
+            // 1 + 4 + 1 + 4 + 4 + 8 + 8
+            assert_eq!(frame.len(), 30);
+        }
+    }
+
+    #[test]
+    fn dml_request_bad_code_errors() {
+        let mut frame = encode(&Message::DmlRequest {
+            site: 0,
+            dml: DmlKind::KMeans,
+            target_codes: 1,
+            max_iters: 1,
+            tol: 0.0,
+            seed: 0,
+        });
+        frame[5] = 99; // the dml code byte
+        assert!(decode(&frame).is_err());
+    }
+
+    #[test]
     fn truncated_frame_errors() {
-        let frame = encode(&Message::Labels { site: 0, labels: vec![1, 2, 3] });
-        for cut in 0..frame.len() {
-            assert!(decode(&frame[..cut]).is_err(), "cut at {cut} should fail");
+        let frames = [
+            encode(&Message::Labels { site: 0, labels: vec![1, 2, 3] }),
+            encode(&Message::SiteInfo { site: 1, n_points: 10, dim: 4 }),
+            encode(&Message::DmlRequest {
+                site: 0,
+                dml: DmlKind::RpTree,
+                target_codes: 8,
+                max_iters: 5,
+                tol: 1e-3,
+                seed: 11,
+            }),
+        ];
+        for frame in frames {
+            for cut in 0..frame.len() {
+                assert!(decode(&frame[..cut]).is_err(), "cut at {cut} should fail");
+            }
         }
     }
 
@@ -228,6 +370,25 @@ mod tests {
         frame.extend_from_slice(&0u32.to_le_bytes());
         frame.extend_from_slice(&u32::MAX.to_le_bytes());
         frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&frame).is_err());
+    }
+
+    #[test]
+    fn hostile_count_under_element_cap_does_not_overallocate() {
+        // A 13-byte frame can pass the 100M-element cap with a count that
+        // would still mean a ~400 MB reservation if capacity followed the
+        // declared length. Capacity is bounded by the frame's remaining
+        // bytes instead, so this must fail fast on truncation.
+        let mut frame = vec![1u8]; // CODEBOOK
+        frame.extend_from_slice(&0u32.to_le_bytes()); // site
+        frame.extend_from_slice(&1u32.to_le_bytes()); // dim = 1
+        frame.extend_from_slice(&99_000_000u32.to_le_bytes()); // n under the cap
+        assert!(decode(&frame).is_err());
+
+        // same shape for LABELS
+        let mut frame = vec![2u8];
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        frame.extend_from_slice(&400_000_000u32.to_le_bytes());
         assert!(decode(&frame).is_err());
     }
 }

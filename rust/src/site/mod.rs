@@ -1,0 +1,264 @@
+//! The site half of the distributed protocol — one worker, any transport.
+//!
+//! [`serve`] is the *entire* behavior of a site for one pipeline run:
+//! register the local shard, receive the DML work order, compress, ship the
+//! codebook, await codeword labels, populate per-point labels. The same
+//! function drives
+//!
+//! * the in-process site threads that [`crate::coordinator::run_pipeline`]
+//!   spawns over the channel transport, and
+//! * the `dsc site` daemon process serving a real leader over TCP
+//!   ([`crate::net::tcp::SiteListener`]).
+//!
+//! That symmetry is what makes the backends byte-identical: there is one
+//! protocol implementation, not a simulated one and a real one.
+//!
+//! Per-phase costs are **thread CPU time**: sites are independent machines
+//! in the paper's model, so when they are simulated as threads of one
+//! (possibly single-core) host, scheduler contention between them must not
+//! leak into the max-over-sites elapsed model. See
+//! [`crate::metrics::thread_cpu_time`].
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::dml::{self, DmlParams};
+use crate::net::{Message, SiteNet};
+
+/// What one site produced and measured during a pipeline run.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// The id the leader addressed this site by.
+    pub site_id: usize,
+    /// Points in the local shard.
+    pub n_points: usize,
+    /// Codewords this site shipped.
+    pub n_codes: usize,
+    /// Thread CPU time of the DML phase.
+    pub dml_time: Duration,
+    /// Thread CPU time of the label-population phase.
+    pub populate_time: Duration,
+    /// Mean squared quantization distortion (Theorem 2/3 quantity).
+    pub distortion: f64,
+    /// Predicted label per local point, in local point order. Mapping local
+    /// to global indices is the caller's business (a real site has no
+    /// global view; the in-process coordinator keeps `global_idx`).
+    pub labels: Vec<u16>,
+}
+
+/// Serve one pipeline run over an established link: the site side of the
+/// protocol in `docs/PROTOCOL.md` §"One run".
+pub fn serve(net: &SiteNet, data: &Dataset) -> Result<ServeOutcome> {
+    let site_id = net.site_id();
+
+    // 1. Register the shard so the leader can size codeword budgets.
+    net.send(&Message::SiteInfo {
+        site: site_id as u32,
+        n_points: data.len() as u64,
+        dim: data.dim as u32,
+    })
+    .context("send site info")?;
+
+    // 2. The DML work order (transform, budget, knobs, forked seed).
+    let params = match net.recv().context("await dml request")? {
+        Message::DmlRequest { site, dml, target_codes, max_iters, tol, seed } => {
+            if site as usize != site_id {
+                bail!("dml request addressed to site {site}, this is site {site_id}");
+            }
+            DmlParams {
+                kind: dml,
+                target_codes: target_codes as usize,
+                max_iters: max_iters as usize,
+                tol,
+                seed,
+            }
+        }
+        other => bail!("expected a dml request, got {other:?}"),
+    };
+
+    // 3. Compress locally; only the codebook leaves the site.
+    let t0 = crate::metrics::thread_cpu_time();
+    let cb = dml::apply(data, &params);
+    let dml_time = crate::metrics::thread_cpu_time().saturating_sub(t0);
+    debug_assert!(cb.validate(data.len()).is_ok());
+    let distortion = cb.distortion(data);
+
+    net.send(&Message::Codebook {
+        site: site_id as u32,
+        dim: cb.dim as u32,
+        codewords: cb.codewords.clone(),
+        weights: cb.weights.clone(),
+    })
+    .context("send codebook")?;
+
+    // 4. Codeword labels come back after the leader's central phase. The
+    //    link sits idle for that whole phase — transports must tolerate it.
+    let code_labels = match net.recv().context("await codeword labels")? {
+        Message::Labels { site, labels } => {
+            if site as usize != site_id {
+                bail!("label frame addressed to site {site}, this is site {site_id}");
+            }
+            if labels.len() != cb.n_codes() {
+                bail!("leader sent {} labels for {} codewords", labels.len(), cb.n_codes());
+            }
+            labels
+        }
+        other => bail!("expected labels, got {other:?}"),
+    };
+
+    // 5. Populate: every local point inherits its codeword's label via the
+    //    assignment table that never left this site.
+    let t1 = crate::metrics::thread_cpu_time();
+    let labels: Vec<u16> =
+        cb.assign.iter().map(|&a| code_labels[a as usize]).collect();
+    let populate_time = crate::metrics::thread_cpu_time().saturating_sub(t1);
+
+    Ok(ServeOutcome {
+        site_id,
+        n_points: data.len(),
+        n_codes: cb.n_codes(),
+        dml_time,
+        populate_time,
+        distortion,
+        labels,
+    })
+}
+
+/// Persist populated labels for the `dsc site --out` daemon flag: one
+/// decimal label per line, local point order (the same order as the rows of
+/// the site's `--data` CSV).
+pub fn write_labels(path: &Path, labels: &[u16]) -> Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    for l in labels {
+        writeln!(w, "{l}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a label file written by [`write_labels`] (drivers that evaluate a
+/// multi-process run, e.g. `examples/tcp_cluster.rs`, use this).
+pub fn read_labels(path: &Path) -> Result<Vec<u16>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse::<u16>().with_context(|| format!("bad label line {l:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm;
+    use crate::dml::DmlKind;
+    use crate::net::{star, LinkSpec};
+
+    /// Drive one site by hand over the channel transport: the leader side
+    /// here is the test itself, which pins the message order.
+    #[test]
+    fn serve_follows_the_protocol() {
+        let ds = gmm::paper_mixture_2d(400, 5);
+        let (leader, mut sites) = star(1, LinkSpec::default());
+        let site_net = sites.remove(0);
+
+        let worker = std::thread::spawn({
+            let ds = ds.clone();
+            move || serve(&site_net, &ds)
+        });
+
+        let (sid, info) = leader.recv().unwrap();
+        assert_eq!(sid, 0);
+        match info {
+            Message::SiteInfo { site, n_points, dim } => {
+                assert_eq!((site, n_points, dim), (0, 400, 2));
+            }
+            other => panic!("expected site info, got {other:?}"),
+        }
+
+        leader
+            .send(
+                0,
+                &Message::DmlRequest {
+                    site: 0,
+                    dml: DmlKind::KMeans,
+                    target_codes: 16,
+                    max_iters: 20,
+                    tol: 1e-6,
+                    seed: 9,
+                },
+            )
+            .unwrap();
+
+        let (_, cb) = leader.recv().unwrap();
+        let n_codes = match cb {
+            Message::Codebook { site, dim, codewords, weights } => {
+                assert_eq!((site, dim), (0, 2));
+                assert_eq!(codewords.len(), 2 * weights.len());
+                assert_eq!(weights.iter().map(|&w| w as usize).sum::<usize>(), 400);
+                weights.len()
+            }
+            other => panic!("expected codebook, got {other:?}"),
+        };
+        assert_eq!(n_codes, 16);
+
+        leader
+            .send(0, &Message::Labels { site: 0, labels: vec![3u16; n_codes] })
+            .unwrap();
+
+        let out = worker.join().unwrap().unwrap();
+        assert_eq!(out.site_id, 0);
+        assert_eq!(out.n_points, 400);
+        assert_eq!(out.n_codes, 16);
+        assert_eq!(out.labels, vec![3u16; 400]);
+        assert!(out.distortion >= 0.0);
+    }
+
+    #[test]
+    fn serve_rejects_misaddressed_request() {
+        let ds = gmm::paper_mixture_2d(50, 7);
+        let (leader, mut sites) = star(1, LinkSpec::default());
+        let site_net = sites.remove(0);
+        let worker = std::thread::spawn({
+            let ds = ds.clone();
+            move || serve(&site_net, &ds)
+        });
+        let _ = leader.recv().unwrap(); // site info
+        leader
+            .send(
+                0,
+                &Message::DmlRequest {
+                    site: 5, // wrong address
+                    dml: DmlKind::KMeans,
+                    target_codes: 4,
+                    max_iters: 5,
+                    tol: 1e-6,
+                    seed: 1,
+                },
+            )
+            .unwrap();
+        assert!(worker.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn label_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dsc_site_labels_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("labels.txt");
+        let labels = vec![0u16, 3, 65535, 2];
+        write_labels(&path, &labels).unwrap();
+        assert_eq!(read_labels(&path).unwrap(), labels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,315 @@
+//! The transport seam, exercised over real loopback sockets in one process:
+//! handshake, every message variant round-tripped, timeout firing, torn and
+//! hostile frames, version/magic rejection — and the headline guarantee
+//! that the channel and TCP backends produce identical labels and
+//! byte-for-byte identical per-link counters for the same pipeline run.
+//! (`examples/tcp_cluster.rs` re-proves parity with separate OS processes.)
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use dsc::config::PipelineConfig;
+use dsc::coordinator::{run_leader_tcp, run_pipeline};
+use dsc::data::scenario::{self, Scenario};
+use dsc::data::gmm;
+use dsc::dml::DmlKind;
+use dsc::net::tcp::{connect_sites, SiteListener, TcpTimeouts};
+use dsc::net::{LeaderNet, LinkSpec, Message, SiteNet};
+use dsc::spectral::Bandwidth;
+
+fn timeouts() -> TcpTimeouts {
+    TcpTimeouts { connect: Duration::from_secs(5), io: Duration::from_secs(5) }
+}
+
+/// Bind a listener on an OS-assigned port and return it with its address.
+fn listener() -> (SiteListener, String) {
+    let l = SiteListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    (l, addr)
+}
+
+#[test]
+fn handshake_and_every_message_variant_roundtrips() {
+    let (l, addr) = listener();
+
+    let site_thread = std::thread::spawn(move || {
+        let site = SiteNet::over(Box::new(l.accept(&timeouts()).unwrap()));
+        assert_eq!(site.site_id(), 0);
+        // echo every frame the leader sends back up, until Ack
+        loop {
+            let msg = site.recv().unwrap();
+            let done = msg == Message::Ack;
+            site.send(&msg).unwrap();
+            if done {
+                return;
+            }
+        }
+    });
+
+    let leader = LeaderNet::over(
+        Box::new(connect_sites(&[addr], &timeouts()).unwrap()),
+        LinkSpec::default(),
+    );
+    let variants = vec![
+        Message::SiteInfo { site: 0, n_points: 12_000, dim: 10 },
+        Message::DmlRequest {
+            site: 0,
+            dml: DmlKind::RpTree,
+            target_codes: 300,
+            max_iters: 30,
+            tol: 1e-6,
+            seed: 0xFEED_F00D,
+        },
+        Message::Codebook {
+            site: 0,
+            dim: 2,
+            codewords: vec![1.0, -2.5, f32::MIN_POSITIVE, 4.0],
+            weights: vec![7, 9],
+        },
+        Message::Labels { site: 0, labels: vec![0, 1, 2, 65535] },
+        Message::Sigma(0.75),
+        Message::Ack, // must be last: it ends the echo loop
+    ];
+    let mut expect_bytes = 0u64;
+    for msg in &variants {
+        leader.send(0, msg).unwrap();
+        let (sid, echoed) = leader.recv().unwrap();
+        assert_eq!(sid, 0);
+        assert_eq!(&echoed, msg, "variant must survive the TCP roundtrip");
+        expect_bytes += dsc::net::wire::encode(msg).len() as u64;
+    }
+    site_thread.join().unwrap();
+
+    // accounting counts the encoded frames only — no TCP framing overhead
+    let rep = leader.report();
+    assert_eq!(rep.per_site[0].to_site.frames, variants.len() as u64);
+    assert_eq!(rep.per_site[0].to_leader.frames, variants.len() as u64);
+    assert_eq!(rep.per_site[0].to_site.bytes, expect_bytes);
+    assert_eq!(rep.per_site[0].to_leader.bytes, expect_bytes);
+}
+
+#[test]
+fn leader_recv_timeout_fires_on_silent_site() {
+    let (l, addr) = listener();
+    let site_thread = std::thread::spawn(move || {
+        let site = SiteNet::over(Box::new(l.accept(&timeouts()).unwrap()));
+        // stay connected but say nothing until the leader hangs up
+        let _ = site.recv();
+    });
+    let leader = LeaderNet::over(
+        Box::new(connect_sites(&[addr], &timeouts()).unwrap()),
+        LinkSpec::default(),
+    );
+    let t0 = Instant::now();
+    let err = leader.recv_timeout(Duration::from_millis(100)).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5), "timeout did not fire promptly");
+    assert!(err.to_string().contains("timed out"), "{err}");
+    drop(leader); // closes the socket and unblocks the site thread
+    site_thread.join().unwrap();
+}
+
+#[test]
+fn torn_frame_is_rejected() {
+    let (l, addr) = listener();
+    // fake leader: honest handshake, then a frame that dies mid-payload
+    let fake_leader = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        // hello: magic, version 1, role leader (0), site id 0
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&1u16.to_le_bytes());
+        hello.push(0);
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut echo = [0u8; 11];
+        s.read_exact(&mut echo).unwrap();
+        // length prefix promises 100 bytes, only 10 arrive, then FIN
+        s.write_all(&100u32.to_le_bytes()).unwrap();
+        s.write_all(&[0u8; 10]).unwrap();
+    });
+    let site = SiteNet::over(Box::new(l.accept(&timeouts()).unwrap()));
+    let err = site.recv().unwrap_err();
+    assert!(err.to_string().contains("mid-frame"), "{err}");
+    fake_leader.join().unwrap();
+}
+
+#[test]
+fn hostile_length_prefix_is_rejected_without_allocation() {
+    let (l, addr) = listener();
+    let fake_leader = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&1u16.to_le_bytes());
+        hello.push(0);
+        hello.extend_from_slice(&7u32.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut echo = [0u8; 11];
+        s.read_exact(&mut echo).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        // keep the socket open so only the length check can reject
+        let mut sink = [0u8; 1];
+        let _ = s.read(&mut sink);
+    });
+    let site = SiteNet::over(Box::new(l.accept(&timeouts()).unwrap()));
+    assert_eq!(site.site_id(), 7, "site id comes from the leader's hello");
+    let t0 = Instant::now();
+    let err = site.recv().unwrap_err();
+    assert!(err.to_string().contains("cap"), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    drop(site); // closes the socket so the fake leader's blocking read ends
+    fake_leader.join().unwrap();
+}
+
+#[test]
+fn version_mismatch_is_rejected_by_the_site() {
+    let (l, addr) = listener();
+    let fake_leader = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&99u16.to_le_bytes()); // future protocol
+        hello.push(0);
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        // the site still answers with its own hello before hanging up, so a
+        // mismatched peer learns which version this build speaks
+        let mut echo = [0u8; 11];
+        s.read_exact(&mut echo).unwrap();
+        assert_eq!(&echo[..4], b"DSCP");
+        assert_eq!(u16::from_le_bytes([echo[4], echo[5]]), dsc::net::tcp::PROTOCOL_VERSION);
+    });
+    let err = l.accept(&timeouts()).unwrap_err();
+    assert!(err.to_string().contains("version mismatch"), "{err}");
+    fake_leader.join().unwrap();
+}
+
+#[test]
+fn garbage_magic_is_rejected() {
+    let (l, addr) = listener();
+    let fake_leader = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n").unwrap();
+        let mut sink = [0u8; 64];
+        let _ = s.read(&mut sink);
+    });
+    let err = l.accept(&timeouts()).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "{err:#}");
+    fake_leader.join().unwrap();
+}
+
+#[test]
+fn version_mismatch_is_rejected_by_the_leader() {
+    // a fake *site* speaking a future protocol version
+    let raw = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = raw.local_addr().unwrap().to_string();
+    let fake_site = std::thread::spawn(move || {
+        let (mut s, _) = raw.accept().unwrap();
+        let mut leader_hello = [0u8; 11];
+        s.read_exact(&mut leader_hello).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&99u16.to_le_bytes());
+        hello.push(1); // role: site
+        hello.extend_from_slice(&leader_hello[7..11]); // echo the id
+        s.write_all(&hello).unwrap();
+    });
+    let err = connect_sites(&[addr], &timeouts()).unwrap_err();
+    assert!(format!("{err:#}").contains("version mismatch"), "{err:#}");
+    fake_site.join().unwrap();
+}
+
+/// The headline guarantee: same data, same config, same seed ⇒ the channel
+/// star and a real TCP star produce identical labels and identical
+/// per-link byte counters.
+#[test]
+fn channel_and_tcp_backends_are_byte_and_label_identical() {
+    let ds = gmm::paper_mixture_10d(3_000, 0.1, 21);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 21);
+    let cfg = PipelineConfig {
+        total_codes: 96,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: 21,
+        ..Default::default()
+    };
+
+    let base = run_pipeline(&parts, &cfg).unwrap();
+
+    // TCP star inside this process: one thread per site over loopback.
+    let mut cfg_tcp = cfg.clone();
+    let mut listeners = Vec::new();
+    for _ in 0..parts.len() {
+        let (l, addr) = listener();
+        listeners.push(l);
+        cfg_tcp.net.sites.push(addr);
+    }
+
+    let (tcp_report, site_outcomes) = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (l, part) in listeners.into_iter().zip(&parts) {
+            handles.push(scope.spawn(move || {
+                let net = SiteNet::over(Box::new(l.accept(&timeouts()).unwrap()));
+                assert_eq!(net.site_id(), part.site_id);
+                dsc::site::serve(&net, &part.data).unwrap()
+            }));
+        }
+        let report = run_leader_tcp(&cfg_tcp).unwrap();
+        let outcomes: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (report, outcomes)
+    });
+
+    // labels: assemble the global vector exactly like run_pipeline does
+    let mut tcp_labels = vec![0u16; ds.len()];
+    for (part, out) in parts.iter().zip(&site_outcomes) {
+        assert_eq!(out.labels.len(), part.data.len());
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            tcp_labels[g as usize] = out.labels[local];
+        }
+    }
+    assert_eq!(tcp_labels, base.labels, "labels must not depend on the transport");
+
+    // counters: byte-for-byte identical per link and direction
+    assert_eq!(tcp_report.net.per_site.len(), base.net.per_site.len());
+    for (sid, (t, b)) in
+        tcp_report.net.per_site.iter().zip(&base.net.per_site).enumerate()
+    {
+        assert_eq!(t.to_leader.frames, b.to_leader.frames, "site {sid} up frames");
+        assert_eq!(t.to_leader.bytes, b.to_leader.bytes, "site {sid} up bytes");
+        assert_eq!(t.to_site.frames, b.to_site.frames, "site {sid} down frames");
+        assert_eq!(t.to_site.bytes, b.to_site.bytes, "site {sid} down bytes");
+        assert_eq!(t.to_leader.sim_time, b.to_leader.sim_time, "site {sid} up sim time");
+        assert_eq!(t.to_site.sim_time, b.to_site.sim_time, "site {sid} down sim time");
+    }
+    assert_eq!(tcp_report.net.total_bytes(), base.net.total_bytes());
+    assert_eq!(tcp_report.outcome.n_codes, base.n_codes);
+    assert_eq!(tcp_report.outcome.sigma, base.sigma);
+    assert_eq!(tcp_report.outcome.site_points.iter().sum::<u64>(), ds.len() as u64);
+}
+
+/// A site daemon loop survives a leader that connects and immediately
+/// vanishes (the `dsc site` daemon uses the same accept + serve pieces).
+#[test]
+fn site_survives_leader_that_disconnects_early() {
+    let (l, addr) = listener();
+    let fake_leader = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&1u16.to_le_bytes());
+        hello.push(0);
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut echo = [0u8; 11];
+        s.read_exact(&mut echo).unwrap();
+        // hang up without a single protocol frame
+    });
+    let site = SiteNet::over(Box::new(l.accept(&timeouts()).unwrap()));
+    let ds = gmm::paper_mixture_2d(100, 3);
+    // The exact failure point races (the registration send may still land
+    // in the kernel buffer, or already see a reset); the contract is only
+    // that serve errors out instead of hanging or panicking.
+    assert!(dsc::site::serve(&site, &ds).is_err());
+    fake_leader.join().unwrap();
+}
