@@ -8,7 +8,13 @@
 //! 2. write each site's shard to CSV, spawn one `dsc site` **process** per
 //!    shard plus one `dsc leader` **process**, all on localhost;
 //! 3. assert the TCP run produced **identical labels** and **byte-for-byte
-//!    identical per-link `NetReport` counters**, and that accuracy ≥ 0.9.
+//!    identical per-link `NetReport` counters**, and that accuracy ≥ 0.9;
+//! 4. restart the sites as **persistent daemons**, start one
+//!    `dsc leader --serve` job server against them, and push **two
+//!    concurrent `dsc submit` jobs** through it — asserting both complete,
+//!    the job matching step 1's config reproduces its labels exactly
+//!    (pulled back through the leader via `LABELS_PULL`), and each site
+//!    served both runs over a single session.
 //!
 //! CI runs this as a blocking smoke step. It needs the `dsc` binary:
 //!
@@ -18,7 +24,7 @@
 //!
 //! (`DSC_BIN=/path/to/dsc` overrides binary discovery.)
 
-use std::io::{BufRead, BufReader};
+use std::io::{BufRead, BufReader, Read as _};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 
@@ -265,6 +271,164 @@ fn main() -> Result<()> {
     if accuracy < 0.9 {
         bail!("multi-process accuracy {accuracy:.4} below the 0.9 quickstart floor");
     }
+
+    // ── phase 2: job server — 2 concurrent `dsc submit` jobs ────────────
+    println!("\n=== job server: 2 persistent sites + `dsc leader --serve` + 2 × `dsc submit` ===");
+
+    // fresh persistent site daemons (phase 1's exited after --once)
+    let mut site_guards = Vec::new();
+    let mut addrs = Vec::new();
+    for s in 0..SITES {
+        let mut child = Command::new(&bin)
+            .arg("site")
+            .args(["--listen", "127.0.0.1:0"])
+            .args(["--data", csvs[s].to_str().unwrap()])
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn persistent site {s}"))?;
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        reader.read_line(&mut line).context("read site banner")?;
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .ok_or_else(|| anyhow!("site {s} printed {line:?}, expected LISTENING <addr>"))?
+            .to_string();
+        println!("site {s}: pid {} listening on {addr} (persistent)", child.id());
+        addrs.push(addr);
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                sink.clear();
+            }
+        });
+        site_guards.push(ChildGuard { child, name: "dsc site" });
+    }
+
+    // the job server: exits cleanly once both submit clients are done
+    let server_toml = dir.join("server.toml");
+    std::fs::write(
+        &server_toml,
+        "[pipeline]\ncollect_timeout_s = 120\n\n[leader]\nmax_jobs = 2\n\
+         allow_label_pull = true\n",
+    )
+    .context("write server config")?;
+    let mut leader_child = Command::new(&bin)
+        .arg("leader")
+        .args(["--sites", &addrs.join(",")])
+        .args(["--serve", "127.0.0.1:0"])
+        .args(["--serve-limit", "2"])
+        .args(["--config", server_toml.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawn job-serving leader")?;
+    let leader_stdout = leader_child.stdout.take().expect("piped stdout");
+    let mut leader_reader = BufReader::new(leader_stdout);
+    let mut line = String::new();
+    leader_reader.read_line(&mut line).context("read leader banner")?;
+    let serve_addr = line
+        .trim()
+        .strip_prefix("SERVING ")
+        .ok_or_else(|| anyhow!("leader printed {line:?}, expected SERVING <addr>"))?
+        .to_string();
+    println!("leader: pid {} serving jobs on {serve_addr}", leader_child.id());
+    let leader_rest = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = leader_reader.read_to_string(&mut rest);
+        rest
+    });
+    let mut leader_guard = ChildGuard { child: leader_child, name: "dsc leader --serve" };
+
+    // job 1 reuses phase 1's exact pipeline (it must reproduce its labels);
+    // job 2 is a different seed (a genuinely different clustering)
+    let job_tomls = [dir.join("job1.toml"), dir.join("job2.toml")];
+    let pull_dirs = [dir.join("pull1"), dir.join("pull2")];
+    for (i, seed) in [SEED, 13].into_iter().enumerate() {
+        std::fs::write(
+            &job_tomls[i],
+            format!(
+                "[pipeline]\ntotal_codes = 300\nk_clusters = 4\nseed = {seed}\n\n\
+                 [bandwidth]\npolicy = \"median\"\nvalue = 0.5\n"
+            ),
+        )
+        .context("write job config")?;
+    }
+
+    // both submits in flight at once: the runs interleave over the same
+    // two site sessions
+    let mut submits = Vec::new();
+    for i in 0..2 {
+        let child = Command::new(&bin)
+            .arg("submit")
+            .args(["--leader", &serve_addr])
+            .args(["--config", job_tomls[i].to_str().unwrap()])
+            .args(["--pull", pull_dirs[i].to_str().unwrap()])
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn submit {i}"))?;
+        submits.push(child);
+    }
+    for (i, child) in submits.into_iter().enumerate() {
+        let out = child.wait_with_output().with_context(|| format!("wait for submit {i}"))?;
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        print!("{stdout}");
+        if !out.status.success() {
+            bail!("submit {i} exited with {}", out.status);
+        }
+        // the run-scoped dialect: 2 frames up, 3 down, per site per run
+        let reports = parse_netreports(&stdout)?;
+        if reports.len() != SITES {
+            bail!("submit {i}: expected {SITES} NETREPORT lines, got {}", reports.len());
+        }
+        for (site, c) in &reports {
+            if c.up_frames != 2 || c.down_frames != 3 {
+                bail!(
+                    "submit {i} site {site}: expected 2 up / 3 down frames, got {} / {}",
+                    c.up_frames,
+                    c.down_frames
+                );
+            }
+        }
+    }
+    leader_guard.wait()?;
+    let rest = leader_rest.join().expect("leader stdout thread");
+    if !rest.contains("SERVED_JOBS completed=2") {
+        bail!("leader did not report 2 completed jobs:\n{rest}");
+    }
+
+    // job 1 (same spec as phase 1) must reproduce the reference labels —
+    // pulled through the leader, not scraped from site files
+    let mut job1_labels = vec![0u16; ds.len()];
+    for (s, part) in parts.iter().enumerate() {
+        let pulled = dsc::site::read_labels(&pull_dirs[0].join(format!("labels_site{s}.txt")))?;
+        if pulled.len() != part.data.len() {
+            bail!("job 1 site {s}: pulled {} labels for {} points", pulled.len(), part.data.len());
+        }
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            job1_labels[g as usize] = pulled[local];
+        }
+    }
+    if job1_labels != base.labels {
+        let diverged = job1_labels.iter().zip(&base.labels).filter(|(a, b)| a != b).count();
+        bail!("job-server labels diverge from the channel run: {diverged}/{} differ", ds.len());
+    }
+    println!("job 1 labels (pulled via leader): identical to the in-process run ✓");
+
+    // job 2 is a different seed: still an accurate clustering
+    let mut job2_labels = vec![0u16; ds.len()];
+    for (s, part) in parts.iter().enumerate() {
+        let pulled = dsc::site::read_labels(&pull_dirs[1].join(format!("labels_site{s}.txt")))?;
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            job2_labels[g as usize] = pulled[local];
+        }
+    }
+    let acc2 = clustering_accuracy(&ds.labels, &job2_labels);
+    println!("job 2 accuracy: {acc2:.4}");
+    if acc2 < 0.9 {
+        bail!("job 2 accuracy {acc2:.4} below the 0.9 floor");
+    }
+    drop(site_guards); // kill the persistent daemons
 
     std::fs::remove_dir_all(&dir).ok();
     println!("\ntcp_cluster: all parity checks passed");

@@ -4,29 +4,34 @@
 //!
 //! * `dsc run`       — one in-process distributed run; prints a report table.
 //! * `dsc site`      — site daemon: serve local data to a leader over TCP.
-//! * `dsc leader`    — leader over TCP: drive running site daemons.
+//! * `dsc leader`    — leader over TCP: one-shot run, or (`--serve`) a
+//!   long-lived job server accepting client submissions.
+//! * `dsc submit`    — client: enqueue a job on a serving leader and
+//!   stream back the result (optionally pulling populated labels).
 //! * `dsc datasets`  — the Table-1 proxy inventory.
 //! * `dsc artifacts` — verify the AOT artifact set is loadable.
 //!
 //! `parse_flags` is a tiny `--key value` / `--flag` parser with typed
 //! accessors; unknown flags are an error so typos fail loudly. The daemon
-//! modes print two machine-readable line families — `LISTENING <addr>`
-//! (site) and `NETREPORT …` (leader) — that `examples/tcp_cluster.rs` and
-//! deployment scripts parse; their field order is a CLI contract
-//! (`docs/DEPLOY.md`).
+//! modes print machine-readable line families — `LISTENING <addr>` and
+//! `SERVED …` (site), `SERVING <addr>` (job-serving leader), and
+//! `NETREPORT …` / `SUBMITTED run=…` (leader/submit) — that
+//! `examples/tcp_cluster.rs` and deployment scripts parse; their field
+//! order is a CLI contract (`docs/DEPLOY.md`).
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::config::{Backend, PipelineConfig, TransportKind};
-use crate::coordinator::{run_leader_tcp, run_pipeline};
+use crate::coordinator::server::{serve_jobs, JobClient, ServerOpts};
+use crate::coordinator::{run_leader_tcp, run_pipeline, spec_from_config};
 use crate::data::scenario::{self, Scenario};
 use crate::data::{csvio, gmm, iris, uci_proxy, Dataset};
 use crate::dml::DmlKind;
-use crate::net::tcp::SiteListener;
+use crate::net::tcp::{Backoff, SiteListener};
 use crate::net::SiteNet;
 use crate::spectral::{Algo, Bandwidth, GraphKind};
 
@@ -104,6 +109,8 @@ USAGE:
   dsc run [FLAGS]       run one distributed clustering pipeline in-process
   dsc site [FLAGS]      site daemon: serve local data to a leader over TCP
   dsc leader [FLAGS]    leader: drive running site daemons over TCP
+                        (one-shot, or --serve for a multi-run job server)
+  dsc submit [FLAGS]    client: enqueue a job on a serving leader
   dsc datasets          list the UCI dataset proxies (paper Table 1)
   dsc artifacts         check the AOT artifact set loads
   dsc help              this text
@@ -114,13 +121,29 @@ SITE FLAGS (see docs/DEPLOY.md):
   --data FILE       local shard CSV: dim float columns + integer label
   --out FILE        write populated labels here after each run (one per line)
   --once            serve exactly one leader connection, then exit
-  --config FILE     TOML config ([net] timeouts/listen)
+  --config FILE     TOML config ([net] timeouts/listen/max_idle_secs)
 
 LEADER FLAGS (see docs/DEPLOY.md):
   --sites A,B,...   site addresses in site-id order (or [net] sites)
   --config FILE     TOML pipeline config (flags override it)
+  --serve ADDR      job-server mode: accept `dsc submit` jobs on ADDR
+                    (port 0 = any; printed as SERVING addr), pipeline up to
+                    [leader] max_jobs runs over persistent site sessions
+  --max-jobs N      override [leader] max_jobs     (serve mode)
+  --queue-depth N   override [leader] queue_depth  (serve mode)
+  --serve-limit N   exit after N clients have come and gone (serve mode;
+                    drills/CI — a clean shutdown once every client is done)
   plus the central-step RUN FLAGS: --dml --codes --k --algo --graph
   --knn-k --backend --bandwidth --weighted --seed
+
+SUBMIT FLAGS (see docs/DEPLOY.md):
+  --leader ADDR     the leader's --serve address
+  --config FILE     TOML pipeline config for the job (flags override it)
+  --pull DIR        after the run, pull populated labels through the leader
+                    into DIR/labels_site<id>.txt (needs [leader]
+                    allow_label_pull = true on the leader)
+  plus the central-step RUN FLAGS except --backend (the central step runs
+  on the leader, under the leader's backend)
 
 RUN FLAGS:
   --dataset NAME    gmm2d | gmm10d | iris | connect4 | skinseg | usci |
@@ -383,52 +406,99 @@ pub fn cmd_site(args: &[String]) -> Result<()> {
     );
 
     let once = flags.bool("once");
+    // Backoff for the error path: capped exponential with deterministic
+    // jitter, salted by the listen address so a *fleet* of sites sharing a
+    // config seed does not retry in lockstep after a common fault.
+    let mut backoff = Backoff::new(cfg.seed ^ addr_salt(listen));
     loop {
         let served = (|| -> Result<()> {
             let transport = listener.accept(&timeouts)?;
-            let net = SiteNet::over(Box::new(transport));
-            let site_id = net.site_id();
-            let out = crate::site::serve(&net, &data)?;
-            if let Some(out_path) = flags.str("out") {
-                crate::site::write_labels(Path::new(out_path), &out.labels)?;
+            if transport.session_mode() {
+                // A job-serving leader: persistent multi-run session over
+                // this one connection, shard served from memory each run.
+                let net = SiteNet::over(Box::new(transport));
+                let out = crate::site::session(
+                    &net,
+                    &data,
+                    flags.str("out").map(Path::new),
+                    |r| {
+                        println!(
+                            "SERVED run={} n_points={} n_codes={} dml_s={:.3} distortion={:.6}",
+                            r.run,
+                            r.n_points,
+                            r.n_codes,
+                            r.dml_time.as_secs_f64(),
+                            r.distortion,
+                        );
+                        std::io::stdout().flush().ok();
+                    },
+                )?;
+                println!("SESSION runs={} aborted={}", out.runs_served, out.aborted_runs);
+                std::io::stdout().flush().ok();
+            } else {
+                let net = SiteNet::over(Box::new(transport));
+                let site_id = net.site_id();
+                let out = crate::site::serve(&net, &data)?;
+                if let Some(out_path) = flags.str("out") {
+                    crate::site::write_labels(Path::new(out_path), &out.labels)?;
+                }
+                println!(
+                    "SERVED site={site_id} n_points={} n_codes={} dml_s={:.3} distortion={:.6}",
+                    out.n_points,
+                    out.n_codes,
+                    out.dml_time.as_secs_f64(),
+                    out.distortion,
+                );
+                std::io::stdout().flush().ok();
             }
-            println!(
-                "SERVED site={site_id} n_points={} n_codes={} dml_s={:.3} distortion={:.6}",
-                out.n_points,
-                out.n_codes,
-                out.dml_time.as_secs_f64(),
-                out.distortion,
-            );
-            std::io::stdout().flush().ok();
             Ok(())
         })();
         match served {
             Ok(()) if once => return Ok(()),
-            Ok(()) => {}
+            Ok(()) => backoff.reset(),
             Err(e) if once => return Err(e),
             // Daemon mode: one bad leader (crash, version mismatch, port
-            // scanner) must not take the site down. The pause keeps a
-            // persistently-failing accept (fd exhaustion, dead listener)
-            // from hot-spinning the daemon at 100% CPU.
+            // scanner, silent death past [net] max_idle_secs) must not take
+            // the site down. The backoff keeps a persistently-failing
+            // accept (fd exhaustion, dead listener) from hot-spinning the
+            // daemon or letting a flapping fleet sync-storm the leader.
             Err(e) => {
                 eprintln!("site: run failed: {e:#} (daemon continues)");
-                std::thread::sleep(std::time::Duration::from_millis(200));
+                std::thread::sleep(backoff.next_delay());
             }
         }
     }
 }
 
+/// FNV-1a of an address string: a per-site salt for the backoff jitter
+/// stream, so sites sharing a config seed still decorrelate.
+fn addr_salt(addr: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in addr.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// The `dsc leader` subcommand: drive running `dsc site` daemons over TCP.
 ///
-/// After the run, prints one `NETREPORT site=<id> …` line per link with the
-/// per-direction frame/byte/modeled-time counters — byte-for-byte what the
-/// in-process backend reports for the same config and data — plus a
+/// One-shot mode (default): a single run from this config; prints one
+/// `NETREPORT site=<id> …` line per link with the per-direction
+/// frame/byte/modeled-time counters — byte-for-byte what the in-process
+/// backend reports for the same config and data — plus a
 /// `NETREPORT total_bytes=…` summary line.
+///
+/// Job-server mode (`--serve ADDR`): bind ADDR for `dsc submit` clients
+/// (printing `SERVING <addr>` first, a CLI contract like the site's
+/// `LISTENING`), open persistent multi-run sessions to every site, and
+/// pipeline up to `[leader] max_jobs` client runs over them until killed
+/// (or `--serve-limit` runs finish).
 pub fn cmd_leader(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     flags.reject_unknown(&[
-        "sites", "config", "dml", "codes", "k", "algo", "graph", "knn-k", "backend",
-        "bandwidth", "weighted", "seed", "help",
+        "sites", "config", "serve", "max-jobs", "queue-depth", "serve-limit", "dml", "codes",
+        "k", "algo", "graph", "knn-k", "backend", "bandwidth", "weighted", "seed", "help",
     ])?;
     if flags.bool("help") {
         println!("{USAGE}");
@@ -447,6 +517,44 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
     cfg.net.transport = TransportKind::Tcp; // leader mode is TCP by definition
     if cfg.net.sites.is_empty() {
         bail!("dsc leader needs --sites a,b,… or [net] sites in the config");
+    }
+
+    if let Some(serve_addr) = flags.str("serve") {
+        let mut opts = ServerOpts::from_config(&cfg);
+        if let Some(n) = flags.usize("max-jobs")? {
+            if n == 0 {
+                bail!("--max-jobs must be ≥ 1");
+            }
+            opts.max_jobs = n;
+        }
+        if let Some(n) = flags.usize("queue-depth")? {
+            if n == 0 {
+                bail!("--queue-depth must be ≥ 1");
+            }
+            opts.queue_depth = n;
+        }
+        opts.client_limit = flags.u64("serve-limit")?;
+
+        let listener = std::net::TcpListener::bind(serve_addr)
+            .with_context(|| format!("bind job socket {serve_addr}"))?;
+        let addr = listener.local_addr().context("job socket local addr")?;
+        println!("SERVING {addr}");
+        std::io::stdout().flush().ok();
+        eprintln!(
+            "leader: job server at {addr}; {} site(s): {} (max_jobs={}, queue_depth={}, \
+             label_pull={})",
+            cfg.net.sites.len(),
+            cfg.net.sites.join(", "),
+            opts.max_jobs,
+            opts.queue_depth,
+            opts.allow_label_pull,
+        );
+        let stats = serve_jobs(&cfg, &opts, listener)?;
+        println!(
+            "SERVED_JOBS completed={} failed={} rejected={}",
+            stats.completed, stats.failed, stats.rejected
+        );
+        return Ok(());
     }
 
     println!(
@@ -482,6 +590,70 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
         );
     }
     println!("NETREPORT total_bytes={}", report.net.total_bytes());
+    Ok(())
+}
+
+/// The `dsc submit` subcommand: enqueue one clustering job on a serving
+/// leader (`dsc leader --serve`) and wait for the result.
+///
+/// Prints `SUBMITTED run=<id>` once the leader accepts, then — when the
+/// run completes — a `RUN …` summary plus the same `NETREPORT` line family
+/// as one-shot `dsc leader`, scoped to exactly this run's frames. With
+/// `--pull DIR`, the populated per-point labels are pulled through the
+/// leader afterwards (one file per site, local shard row order), which
+/// needs `[leader] allow_label_pull = true` on the serving side.
+pub fn cmd_submit(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    flags.reject_unknown(&[
+        "leader", "config", "pull", "dml", "codes", "k", "algo", "graph", "knn-k",
+        "bandwidth", "weighted", "seed", "help",
+    ])?;
+    if flags.bool("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+
+    let mut cfg = match flags.str("config") {
+        Some(path) => PipelineConfig::from_file(Path::new(path))?,
+        None => PipelineConfig::default(),
+    };
+    apply_overrides(&mut cfg, &flags)?;
+    let addr = flags
+        .str("leader")
+        .ok_or_else(|| anyhow!("dsc submit needs --leader <addr> (the leader's --serve address)"))?;
+
+    let spec = spec_from_config(&cfg);
+    let client = JobClient::connect(addr, &cfg.net.tcp_timeouts())?;
+    let run = client.submit(&spec)?;
+    println!("SUBMITTED run={run}");
+    std::io::stdout().flush().ok();
+
+    let report = client.await_done(run)?;
+    println!(
+        "RUN run={run} n_codes={} sigma={:.4} central_s={:.3} wall_s={:.3}",
+        report.n_codes,
+        report.sigma,
+        report.central_ns as f64 / 1e9,
+        report.wall_ns as f64 / 1e9,
+    );
+    for (sid, l) in report.per_site.iter().enumerate() {
+        println!(
+            "NETREPORT site={sid} up_frames={} up_bytes={} down_frames={} down_bytes={} \
+             up_sim_ns={} down_sim_ns={}",
+            l.up_frames, l.up_bytes, l.down_frames, l.down_bytes, l.up_sim_ns, l.down_sim_ns,
+        );
+    }
+    let total: u64 = report.per_site.iter().map(|l| l.up_bytes + l.down_bytes).sum();
+    println!("NETREPORT total_bytes={total}");
+
+    if let Some(dir) = flags.str("pull") {
+        let pulled = client.pull_labels(run, report.per_site.len())?;
+        for (site, labels) in &pulled {
+            let path = Path::new(dir).join(format!("labels_site{site}.txt"));
+            crate::site::write_labels(&path, labels)?;
+            println!("PULLED site={site} n={} out={}", labels.len(), path.display());
+        }
+    }
     Ok(())
 }
 
@@ -522,6 +694,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("run") => cmd_run(&argv[1..]),
         Some("site") => cmd_site(&argv[1..]),
         Some("leader") => cmd_leader(&argv[1..]),
+        Some("submit") => cmd_submit(&argv[1..]),
         Some("datasets") => {
             cmd_datasets();
             Ok(())
@@ -684,6 +857,36 @@ mod tests {
     fn leader_subcommand_requires_sites() {
         let err = cmd_leader(&[]).unwrap_err();
         assert!(err.to_string().contains("--sites"), "{err}");
+    }
+
+    #[test]
+    fn submit_subcommand_requires_leader() {
+        let err = cmd_submit(&[]).unwrap_err();
+        assert!(err.to_string().contains("--leader"), "{err}");
+    }
+
+    #[test]
+    fn serve_flags_validated() {
+        let args: Vec<String> = ["--sites", "127.0.0.1:1", "--serve", "127.0.0.1:0", "--max-jobs", "0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = cmd_leader(&args).unwrap_err();
+        assert!(err.to_string().contains("--max-jobs"), "{err}");
+
+        let args: Vec<String> =
+            ["--sites", "127.0.0.1:1", "--serve", "127.0.0.1:0", "--queue-depth", "0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = cmd_leader(&args).unwrap_err();
+        assert!(err.to_string().contains("--queue-depth"), "{err}");
+    }
+
+    #[test]
+    fn addr_salt_is_deterministic_and_distinct() {
+        assert_eq!(addr_salt("10.0.0.2:7010"), addr_salt("10.0.0.2:7010"));
+        assert_ne!(addr_salt("10.0.0.2:7010"), addr_salt("10.0.0.3:7010"));
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub struct NetConfig {
     pub connect_timeout: Duration,
     /// TCP mid-frame read/write stall deadline; zero disables.
     pub io_timeout: Duration,
+    /// Site-side dead-leader deadline on accepted connections: a link with
+    /// no frame at all for this long is dropped and the daemon re-listens
+    /// (a leader that died *silently* — power loss, partition — never
+    /// closes the socket, and idle is otherwise legal forever). Zero
+    /// disables. Size it above the longest legitimate central phase.
+    pub max_idle: Duration,
 }
 
 impl Default for NetConfig {
@@ -68,6 +74,7 @@ impl Default for NetConfig {
             sites: Vec::new(),
             connect_timeout: t.connect,
             io_timeout: t.io,
+            max_idle: t.max_idle,
         }
     }
 }
@@ -75,7 +82,31 @@ impl Default for NetConfig {
 impl NetConfig {
     /// The socket deadlines in the shape the TCP backend wants.
     pub fn tcp_timeouts(&self) -> crate::net::tcp::TcpTimeouts {
-        crate::net::tcp::TcpTimeouts { connect: self.connect_timeout, io: self.io_timeout }
+        crate::net::tcp::TcpTimeouts {
+            connect: self.connect_timeout,
+            io: self.io_timeout,
+            max_idle: self.max_idle,
+        }
+    }
+}
+
+/// Job-serving knobs (`[leader]`): how `dsc leader --serve` queues and
+/// pipelines client-submitted runs. Irrelevant to the one-shot modes.
+#[derive(Clone, Debug)]
+pub struct LeaderConfig {
+    /// Runs in flight at once; further accepted jobs wait in the queue.
+    pub max_jobs: usize,
+    /// Pending-job cap; submissions beyond it are rejected with a reason.
+    pub queue_depth: usize,
+    /// Allow clients to pull populated per-point labels through the leader
+    /// (`LABELSPULL`). Off by default — the paper's privacy posture keeps
+    /// per-point labels at the sites.
+    pub allow_label_pull: bool,
+}
+
+impl Default for LeaderConfig {
+    fn default() -> Self {
+        LeaderConfig { max_jobs: 4, queue_depth: 32, allow_label_pull: false }
     }
 }
 
@@ -136,6 +167,8 @@ pub struct PipelineConfig {
     pub artifact_dir: std::path::PathBuf,
     /// Network deployment: transport kind, daemon addresses, TCP deadlines.
     pub net: NetConfig,
+    /// Job-serving knobs for `dsc leader --serve`.
+    pub leader: LeaderConfig,
     /// How long the leader waits out each collect phase (site registration,
     /// then codebooks) before declaring the missing sites failed
     /// (straggler/crash protection).
@@ -159,6 +192,7 @@ impl Default for PipelineConfig {
             backend: Backend::Native,
             link: LinkSpec::default(),
             net: NetConfig::default(),
+            leader: LeaderConfig::default(),
             seed: 0,
             artifact_dir: crate::runtime::default_artifact_dir(),
             collect_timeout: Duration::from_secs(300),
@@ -209,6 +243,12 @@ impl PipelineConfig {
     ///                           # site-id order (or one comma-separated string)
     /// connect_timeout_s = 10.0  # dial + handshake deadline
     /// io_timeout_s = 30.0       # mid-frame stall deadline; 0 disables
+    /// max_idle_secs = 0         # site-side dead-leader deadline; 0 disables
+    ///
+    /// [leader]
+    /// max_jobs = 4              # concurrent runs (dsc leader --serve)
+    /// queue_depth = 32          # pending-job cap
+    /// allow_label_pull = false  # let clients pull labels through the leader
     /// ```
     pub fn from_toml(text: &str) -> Result<PipelineConfig> {
         let map = toml::parse(text)?;
@@ -370,6 +410,32 @@ impl PipelineConfig {
             }
             cfg.net.io_timeout = Duration::from_secs_f64(secs);
         }
+        if let Some(v) = get("net.max_idle_secs") {
+            let secs = v.as_f64().ok_or_else(|| anyhow!("net.max_idle_secs must be a number"))?;
+            if !(secs >= 0.0) {
+                bail!("net.max_idle_secs must be ≥ 0");
+            }
+            cfg.net.max_idle = Duration::from_secs_f64(secs);
+        }
+
+        if let Some(v) = get("leader.max_jobs") {
+            let n = v.as_i64().ok_or_else(|| anyhow!("leader.max_jobs must be an int"))?;
+            if n < 1 {
+                bail!("leader.max_jobs must be ≥ 1");
+            }
+            cfg.leader.max_jobs = n as usize;
+        }
+        if let Some(v) = get("leader.queue_depth") {
+            let n = v.as_i64().ok_or_else(|| anyhow!("leader.queue_depth must be an int"))?;
+            if n < 1 {
+                bail!("leader.queue_depth must be ≥ 1");
+            }
+            cfg.leader.queue_depth = n as usize;
+        }
+        if let Some(v) = get("leader.allow_label_pull") {
+            cfg.leader.allow_label_pull =
+                v.as_bool().ok_or_else(|| anyhow!("leader.allow_label_pull must be bool"))?;
+        }
         Ok(cfg)
     }
 }
@@ -499,6 +565,44 @@ mod tests {
         assert!(PipelineConfig::from_toml("[net]\nsites = \"  ,  \"").is_err());
         assert!(PipelineConfig::from_toml("[net]\nio_timeout_s = -1").is_err());
         assert!(PipelineConfig::from_toml("[net]\nconnect_timeout_s = \"fast\"").is_err());
+        assert!(PipelineConfig::from_toml("[net]\nmax_idle_secs = -5").is_err());
+        assert!(PipelineConfig::from_toml("[net]\nmax_idle_secs = \"long\"").is_err());
+    }
+
+    #[test]
+    fn max_idle_key_reaches_the_tcp_timeouts() {
+        // disabled by default: idle links are legal forever
+        let cfg = PipelineConfig::from_toml("").unwrap();
+        assert_eq!(cfg.net.max_idle, Duration::ZERO);
+        assert_eq!(cfg.net.tcp_timeouts().max_idle, Duration::ZERO);
+
+        let cfg = PipelineConfig::from_toml("[net]\nmax_idle_secs = 90").unwrap();
+        assert_eq!(cfg.net.max_idle, Duration::from_secs(90));
+        assert_eq!(cfg.net.tcp_timeouts().max_idle, Duration::from_secs(90));
+    }
+
+    #[test]
+    fn leader_table_roundtrip_and_defaults() {
+        let cfg = PipelineConfig::from_toml("").unwrap();
+        assert_eq!(cfg.leader.max_jobs, 4);
+        assert_eq!(cfg.leader.queue_depth, 32);
+        assert!(!cfg.leader.allow_label_pull);
+
+        let cfg = PipelineConfig::from_toml(
+            "[leader]\nmax_jobs = 2\nqueue_depth = 8\nallow_label_pull = true",
+        )
+        .unwrap();
+        assert_eq!(cfg.leader.max_jobs, 2);
+        assert_eq!(cfg.leader.queue_depth, 8);
+        assert!(cfg.leader.allow_label_pull);
+    }
+
+    #[test]
+    fn leader_table_rejects_bad_values() {
+        assert!(PipelineConfig::from_toml("[leader]\nmax_jobs = 0").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nqueue_depth = 0").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nmax_jobs = \"many\"").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nallow_label_pull = 1").is_err());
     }
 
     #[test]

@@ -1,0 +1,620 @@
+//! The per-run leader state machine.
+//!
+//! One clustering run, as seen by the leader, is a small protocol:
+//! register every site's shard, size codeword budgets, collect codebooks,
+//! cluster centrally, send codeword labels back. [`RunMachine`] is that
+//! protocol as an explicit event-driven state machine
+//!
+//! ```text
+//! Registering ──all sites registered──▶ BudgetsSent ──first codebook──▶
+//! Collecting ──all codebooks in──▶ Central ──labels computed──▶ LabelsSent
+//! ```
+//!
+//! advanced by [`RunInput`] events and emitting [`Advance`] actions. It
+//! owns no transport and no clock: *who* feeds it events decides the
+//! concurrency model. Two drivers exist:
+//!
+//! * [`super::leader_protocol`] — the blocking single-run driver: one
+//!   machine, events pumped straight off a [`crate::net::LeaderNet`]
+//!   (channel or TCP; classic unscoped frames). `dsc run`, `dsc leader`.
+//! * [`super::server`] — the job-serving reactor: many machines at once,
+//!   events demultiplexed by run id off a single mailbox (run-scoped
+//!   frames), so several runs interleave over the same persistent site
+//!   links. `dsc leader --serve`.
+//!
+//! Budgets and per-site seeds are derived only from `(JobSpec, site
+//! sizes)` — never from the run id or event arrival order — which is what
+//! makes a job's result identical across drivers, transports, and
+//! interleavings (the parity guarantees in `rust/tests/job_server.rs` and
+//! `examples/tcp_cluster.rs`).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Error, Result};
+
+use crate::dml::DmlKind;
+use crate::net::JobSpec;
+use crate::rng::Rng;
+
+use super::LeaderOutcome;
+
+/// Where a run stands. `BudgetsSent` and `Collecting` differ only in
+/// whether any codebook has arrived yet; both accept codebooks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for every site's `SiteInfo` registration.
+    Registering,
+    /// DML work orders are out; no codebook back yet.
+    BudgetsSent,
+    /// At least one codebook in, more outstanding.
+    Collecting,
+    /// All codebooks in; the driver owes the machine a central-step result
+    /// ([`RunMachine::central_done`]).
+    Central,
+    /// Codeword labels delivered — the run is complete.
+    LabelsSent,
+}
+
+impl Phase {
+    /// The name used in straggler-deadline errors ("registration collect
+    /// failed …"), matching the pre-machine error text.
+    fn collect_name(self) -> &'static str {
+        match self {
+            Phase::Registering => "registration",
+            _ => "codebook",
+        }
+    }
+}
+
+/// One event for the machine. Embedded site ids have already been checked
+/// against the link the frame arrived on (the driver's job, since only it
+/// sees links); `site` here is the trusted link index.
+#[derive(Debug)]
+pub enum RunInput {
+    /// A site registered its shard shape.
+    SiteInfo { site: usize, n_points: u64, dim: u32 },
+    /// A site delivered its codebook.
+    Codebook { site: usize, dim: u32, codewords: Vec<f32>, weights: Vec<u32> },
+    /// A site's link died. Any run still needing that site fails.
+    SiteDown { site: usize, err: String },
+    /// Time passed with nothing to deliver; the machine checks its
+    /// straggler deadline.
+    Tick,
+}
+
+/// A work order for one site, emitted when budgets are assigned. The
+/// driver wraps it into a classic `DMLREQ` or a run-scoped `RDMLREQ`
+/// frame — the machine is dialect-agnostic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DmlOrder {
+    pub dml: DmlKind,
+    pub target_codes: u32,
+    pub max_iters: u32,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+/// One outbound payload: `(site, what)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OutMsg {
+    Dml(DmlOrder),
+    Labels(Vec<u16>),
+}
+
+/// What one [`RunMachine::advance`] produced.
+#[derive(Debug, Default)]
+pub struct Advance {
+    /// Frames to send now, in emission order (site order within a batch,
+    /// for the deterministic send sequence the parity tests pin).
+    pub send: Vec<(usize, OutMsg)>,
+    /// The machine entered [`Phase::Central`]: the driver must run the
+    /// central step on [`RunMachine::central_input`] and call
+    /// [`RunMachine::central_done`].
+    pub central: bool,
+    /// The machine entered [`Phase::LabelsSent`] — after the driver sends
+    /// the accompanying label frames, the run is complete.
+    pub done: bool,
+}
+
+/// Site-reported point counts are untrusted input: bound them per site and
+/// sum checked, so one hostile SiteInfo cannot panic the leader (debug
+/// overflow) or wrap the proportional-budget arithmetic (release).
+const MAX_SITE_POINTS: u64 = 1 << 48;
+
+/// The per-run leader state machine. See the module docs.
+pub struct RunMachine {
+    spec: JobSpec,
+    phase: Phase,
+    collect_timeout: Duration,
+    deadline: Instant,
+    /// Registration slots: `(n_points, dim)` per site.
+    infos: Vec<Option<(u64, u32)>>,
+    /// Codebook slots, buffered per site then concatenated in site order
+    /// (determinism: the codeword union must not depend on arrival order).
+    books: Vec<Option<(Vec<f32>, Vec<u32>)>>,
+    dim: u32,
+    site_points: Vec<u64>,
+    /// Codeword union, assembled when the last codebook lands.
+    cw_all: Vec<f32>,
+    w_all: Vec<f32>,
+    /// Per-site `(offset, count)` spans into the union.
+    spans: Vec<(usize, usize)>,
+    sigma: f64,
+    central: Duration,
+}
+
+impl RunMachine {
+    /// A fresh machine in [`Phase::Registering`], with its first straggler
+    /// deadline at `now + collect_timeout`.
+    pub fn new(n_sites: usize, spec: JobSpec, collect_timeout: Duration, now: Instant) -> RunMachine {
+        RunMachine {
+            spec,
+            phase: Phase::Registering,
+            collect_timeout,
+            deadline: now + collect_timeout,
+            infos: vec![None; n_sites],
+            books: vec![None; n_sites],
+            dim: 0,
+            site_points: Vec::new(),
+            cw_all: Vec::new(),
+            w_all: Vec::new(),
+            spans: vec![(0, 0); n_sites],
+            sigma: 0.0,
+            central: Duration::ZERO,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.infos.len()
+    }
+
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    /// The current straggler deadline. Only meaningful while collecting
+    /// (`Registering`/`BudgetsSent`/`Collecting`); drivers use it to size
+    /// their receive timeout.
+    pub fn deadline(&self) -> Instant {
+        self.deadline
+    }
+
+    /// Feed one event. `now` is the driver's clock reading for this event
+    /// (deadline resets are measured from it). An `Err` is fatal to the
+    /// run — the driver reports it and discards the machine.
+    pub fn advance(&mut self, now: Instant, input: RunInput) -> Result<Advance> {
+        match input {
+            RunInput::SiteInfo { site, n_points, dim } => {
+                self.on_site_info(now, site, n_points, dim)
+            }
+            RunInput::Codebook { site, dim, codewords, weights } => {
+                self.on_codebook(site, dim, codewords, weights)
+            }
+            RunInput::SiteDown { site, err } => {
+                if self.phase == Phase::LabelsSent {
+                    return Ok(Advance::default()); // run already complete
+                }
+                bail!("site {site} link failed mid-run: {err}")
+            }
+            RunInput::Tick => {
+                if now >= self.deadline
+                    && matches!(
+                        self.phase,
+                        Phase::Registering | Phase::BudgetsSent | Phase::Collecting
+                    )
+                {
+                    return Err(self.waiting_error("deadline expired"));
+                }
+                Ok(Advance::default())
+            }
+        }
+    }
+
+    fn on_site_info(
+        &mut self,
+        now: Instant,
+        site: usize,
+        n_points: u64,
+        dim: u32,
+    ) -> Result<Advance> {
+        if self.phase != Phase::Registering {
+            bail!("unexpected site info from site {site} during {:?}", self.phase);
+        }
+        if site >= self.infos.len() {
+            bail!("site info from out-of-range site {site}");
+        }
+        if n_points > MAX_SITE_POINTS {
+            bail!("site {site} reports an implausible {n_points} points");
+        }
+        if self.infos[site].replace((n_points, dim)).is_some() {
+            bail!("site {site} registered twice");
+        }
+        if self.infos.iter().any(|s| s.is_none()) {
+            return Ok(Advance::default()); // still collecting registrations
+        }
+
+        // ---- everyone registered: validate, size budgets, emit orders ----
+        let infos: Vec<(u64, u32)> = self.infos.iter().map(|s| s.unwrap()).collect();
+        let dim0 = infos[0].1;
+        for (sid, &(_, d)) in infos.iter().enumerate() {
+            if d != dim0 {
+                bail!("site {sid} has dim {d}, expected {dim0}");
+            }
+        }
+        if dim0 == 0 {
+            bail!("sites report zero-dimensional data");
+        }
+        self.dim = dim0;
+        self.site_points = infos.iter().map(|&(np, _)| np).collect();
+        let mut total_points: u64 = 0;
+        for &np in &self.site_points {
+            total_points = total_points
+                .checked_add(np)
+                .ok_or_else(|| anyhow!("total point count overflows u64"))?;
+        }
+        if total_points == 0 {
+            bail!("no data at any site");
+        }
+
+        // Per-site codeword budgets ∝ site size (paper: fixed compression
+        // ratio); per-site seeds fork from the job seed, so results are a
+        // function of (data, spec) alone — not of transport, driver, or
+        // which runs happen to share the links.
+        let spec = &self.spec;
+        let root_rng = Rng::new(spec.seed);
+        let send = self
+            .site_points
+            .iter()
+            .enumerate()
+            .map(|(sid, &np)| {
+                let budget = ((spec.total_codes as f64 * np as f64 / total_points as f64)
+                    .round() as usize)
+                    .max(1)
+                    .min((np as usize).max(1));
+                let mut fork = root_rng.fork(sid as u64 + 1);
+                (
+                    sid,
+                    OutMsg::Dml(DmlOrder {
+                        dml: spec.dml,
+                        target_codes: budget as u32,
+                        max_iters: spec.kmeans_max_iters,
+                        tol: spec.kmeans_tol,
+                        seed: fork.next_u64(),
+                    }),
+                )
+            })
+            .collect();
+        self.phase = Phase::BudgetsSent;
+        self.deadline = now + self.collect_timeout; // fresh codebook deadline
+        Ok(Advance { send, central: false, done: false })
+    }
+
+    fn on_codebook(
+        &mut self,
+        site: usize,
+        dim: u32,
+        codewords: Vec<f32>,
+        weights: Vec<u32>,
+    ) -> Result<Advance> {
+        if !matches!(self.phase, Phase::BudgetsSent | Phase::Collecting) {
+            bail!("unexpected codebook from site {site} during {:?}", self.phase);
+        }
+        if site >= self.books.len() {
+            bail!("codebook from out-of-range site {site}");
+        }
+        if dim != self.dim {
+            bail!("site {site} sent dim {dim}, expected {}", self.dim);
+        }
+        if codewords.len() != (dim as usize) * weights.len() {
+            bail!("site {site} sent a malformed codebook");
+        }
+        if self.books[site].replace((codewords, weights)).is_some() {
+            bail!("site {site} sent two codebooks");
+        }
+        self.phase = Phase::Collecting;
+        if self.books.iter().any(|s| s.is_none()) {
+            return Ok(Advance::default());
+        }
+
+        // ---- all codebooks in: concatenate in site order, go central ----
+        for (sid, slot) in self.books.iter_mut().enumerate() {
+            let (codewords, weights) = slot.take().expect("all collected");
+            self.spans[sid] = (self.w_all.len(), weights.len());
+            self.cw_all.extend_from_slice(&codewords);
+            self.w_all.extend(weights.iter().map(|&w| w as f32));
+        }
+        self.phase = Phase::Central;
+        Ok(Advance { send: Vec::new(), central: true, done: false })
+    }
+
+    /// The codeword union for the central step: `(codewords, dim,
+    /// weights)`. Valid in [`Phase::Central`].
+    pub fn central_input(&self) -> (&[f32], usize, &[f32]) {
+        debug_assert_eq!(self.phase, Phase::Central);
+        (&self.cw_all, self.dim as usize, &self.w_all)
+    }
+
+    /// The driver ran the central step; hand the machine one label per
+    /// codeword of the union. Emits the per-site label frames (site order)
+    /// and completes the run.
+    pub fn central_done(
+        &mut self,
+        code_labels: Vec<u16>,
+        sigma: f64,
+        central: Duration,
+    ) -> Result<Advance> {
+        if self.phase != Phase::Central {
+            bail!("central result delivered during {:?}", self.phase);
+        }
+        if code_labels.len() != self.w_all.len() {
+            bail!(
+                "central step produced {} labels for {} codewords",
+                code_labels.len(),
+                self.w_all.len()
+            );
+        }
+        self.sigma = sigma;
+        self.central = central;
+        let send = self
+            .spans
+            .iter()
+            .enumerate()
+            .map(|(sid, &(off, len))| (sid, OutMsg::Labels(code_labels[off..off + len].to_vec())))
+            .collect();
+        self.phase = Phase::LabelsSent;
+        Ok(Advance { send, central: false, done: true })
+    }
+
+    /// The canonical straggler error: which collect phase stalled, for how
+    /// long, and which sites never reported. Drivers also call this when
+    /// their own receive fails mid-collect (`cause` = the transport error).
+    pub fn waiting_error(&self, cause: &str) -> Error {
+        let slots: Vec<bool> = match self.phase {
+            Phase::Registering => self.infos.iter().map(|s| s.is_some()).collect(),
+            _ => self.books.iter().map(|s| s.is_some()).collect(),
+        };
+        let missing: Vec<usize> =
+            slots.iter().enumerate().filter(|(_, &ok)| !ok).map(|(i, _)| i).collect();
+        anyhow!(
+            "{} collect failed after {:?} — sites {missing:?} never reported ({cause})",
+            self.phase.collect_name(),
+            self.collect_timeout
+        )
+    }
+
+    /// The transport-independent outcome. Valid once [`Phase::LabelsSent`].
+    pub fn outcome(&self) -> LeaderOutcome {
+        debug_assert_eq!(self.phase, Phase::LabelsSent);
+        LeaderOutcome {
+            dim: self.dim as usize,
+            n_codes: self.w_all.len(),
+            sigma: self.sigma,
+            central: self.central,
+            site_points: self.site_points.clone(),
+            site_codes: self.spans.iter().map(|&(_, len)| len).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spectral::{Algo, Bandwidth, GraphKind};
+
+    fn spec(total_codes: u32, seed: u64) -> JobSpec {
+        JobSpec {
+            dml: DmlKind::KMeans,
+            total_codes,
+            k_clusters: 2,
+            kmeans_max_iters: 30,
+            kmeans_tol: 1e-6,
+            seed,
+            algo: Algo::RecursiveNcut,
+            graph: GraphKind::Dense,
+            weighted: false,
+            bandwidth: Bandwidth::MedianScale(0.5),
+        }
+    }
+
+    fn machine(n_sites: usize) -> RunMachine {
+        RunMachine::new(n_sites, spec(64, 7), Duration::from_secs(300), Instant::now())
+    }
+
+    #[test]
+    fn full_run_walkthrough() {
+        let now = Instant::now();
+        let mut m = machine(2);
+        assert_eq!(m.phase(), Phase::Registering);
+
+        // second site registers first — order must not matter
+        let adv =
+            m.advance(now, RunInput::SiteInfo { site: 1, n_points: 1_000, dim: 2 }).unwrap();
+        assert!(adv.send.is_empty() && !adv.central && !adv.done);
+        let adv =
+            m.advance(now, RunInput::SiteInfo { site: 0, n_points: 3_000, dim: 2 }).unwrap();
+        assert_eq!(m.phase(), Phase::BudgetsSent);
+        assert_eq!(adv.send.len(), 2);
+        // budgets ∝ site size: 3000/4000·64 = 48, 1000/4000·64 = 16
+        let budgets: Vec<u32> = adv
+            .send
+            .iter()
+            .map(|(_, out)| match out {
+                OutMsg::Dml(o) => o.target_codes,
+                other => panic!("expected dml orders, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(budgets, vec![48, 16]);
+        // seeds fork from the job seed per site — deterministic and distinct
+        let seeds: Vec<u64> = adv
+            .send
+            .iter()
+            .map(|(_, out)| match out {
+                OutMsg::Dml(o) => o.seed,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_ne!(seeds[0], seeds[1]);
+        let root = Rng::new(7);
+        assert_eq!(seeds[0], root.fork(1).next_u64());
+        assert_eq!(seeds[1], root.fork(2).next_u64());
+
+        let adv = m
+            .advance(
+                now,
+                RunInput::Codebook {
+                    site: 1,
+                    dim: 2,
+                    codewords: vec![5.0, 6.0],
+                    weights: vec![1_000],
+                },
+            )
+            .unwrap();
+        assert_eq!(m.phase(), Phase::Collecting);
+        assert!(!adv.central);
+        let adv = m
+            .advance(
+                now,
+                RunInput::Codebook {
+                    site: 0,
+                    dim: 2,
+                    codewords: vec![1.0, 2.0, 3.0, 4.0],
+                    weights: vec![2_000, 1_000],
+                },
+            )
+            .unwrap();
+        assert_eq!(m.phase(), Phase::Central);
+        assert!(adv.central && !adv.done);
+
+        // union is in site order regardless of arrival order
+        let (cw, dim, w) = m.central_input();
+        assert_eq!(dim, 2);
+        assert_eq!(cw.to_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(w.to_vec(), vec![2_000.0, 1_000.0, 1_000.0]);
+
+        let adv = m.central_done(vec![0, 1, 1], 1.5, Duration::from_millis(3)).unwrap();
+        assert_eq!(m.phase(), Phase::LabelsSent);
+        assert!(adv.done);
+        assert_eq!(adv.send.len(), 2);
+        assert_eq!(adv.send[0], (0, OutMsg::Labels(vec![0, 1])));
+        assert_eq!(adv.send[1], (1, OutMsg::Labels(vec![1])));
+
+        let out = m.outcome();
+        assert_eq!(out.dim, 2);
+        assert_eq!(out.n_codes, 3);
+        assert_eq!(out.sigma, 1.5);
+        assert_eq!(out.site_points, vec![3_000, 1_000]);
+        assert_eq!(out.site_codes, vec![2, 1]);
+    }
+
+    #[test]
+    fn protocol_violations_fail_the_run() {
+        let now = Instant::now();
+
+        // double registration
+        let mut m = machine(2);
+        m.advance(now, RunInput::SiteInfo { site: 0, n_points: 10, dim: 2 }).unwrap();
+        let err = m
+            .advance(now, RunInput::SiteInfo { site: 0, n_points: 10, dim: 2 })
+            .unwrap_err();
+        assert!(err.to_string().contains("registered twice"), "{err}");
+
+        // dim disagreement surfaces when the last site registers
+        let mut m = machine(2);
+        m.advance(now, RunInput::SiteInfo { site: 0, n_points: 10, dim: 2 }).unwrap();
+        let err = m
+            .advance(now, RunInput::SiteInfo { site: 1, n_points: 10, dim: 3 })
+            .unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+
+        // codebook before registration completes
+        let mut m = machine(2);
+        let err = m
+            .advance(
+                now,
+                RunInput::Codebook { site: 0, dim: 2, codewords: vec![], weights: vec![] },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("unexpected codebook"), "{err}");
+
+        // hostile point count
+        let mut m = machine(1);
+        let err = m
+            .advance(now, RunInput::SiteInfo { site: 0, n_points: u64::MAX - 1, dim: 2 })
+            .unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err}");
+
+        // malformed codebook
+        let mut m = machine(1);
+        m.advance(now, RunInput::SiteInfo { site: 0, n_points: 10, dim: 2 }).unwrap();
+        let err = m
+            .advance(
+                now,
+                RunInput::Codebook {
+                    site: 0,
+                    dim: 2,
+                    codewords: vec![1.0; 3], // not 2·n
+                    weights: vec![5],
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("malformed"), "{err}");
+    }
+
+    #[test]
+    fn deadline_expiry_names_missing_sites() {
+        let t0 = Instant::now();
+        let mut m = RunMachine::new(3, spec(64, 7), Duration::from_millis(100), t0);
+        m.advance(t0, RunInput::SiteInfo { site: 0, n_points: 10, dim: 2 }).unwrap();
+        m.advance(t0, RunInput::SiteInfo { site: 2, n_points: 10, dim: 2 }).unwrap();
+        // before the deadline, ticks are harmless
+        assert!(m.advance(t0, RunInput::Tick).unwrap().send.is_empty());
+        let err = m
+            .advance(t0 + Duration::from_millis(150), RunInput::Tick)
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("registration collect failed"), "{msg}");
+        assert!(msg.contains("[1]"), "must name the missing site: {msg}");
+    }
+
+    #[test]
+    fn deadline_resets_between_phases() {
+        let t0 = Instant::now();
+        let mut m = RunMachine::new(1, spec(16, 7), Duration::from_millis(100), t0);
+        // register at t0+80ms: the codebook deadline restarts from there
+        let t1 = t0 + Duration::from_millis(80);
+        m.advance(t1, RunInput::SiteInfo { site: 0, n_points: 100, dim: 2 }).unwrap();
+        assert_eq!(m.phase(), Phase::BudgetsSent);
+        assert!(m.advance(t0 + Duration::from_millis(150), RunInput::Tick).is_ok());
+        let err =
+            m.advance(t1 + Duration::from_millis(150), RunInput::Tick).unwrap_err();
+        assert!(err.to_string().contains("codebook collect failed"), "{err}");
+        assert!(err.to_string().contains("[0]"), "{err}");
+    }
+
+    #[test]
+    fn site_down_fails_active_run_but_not_finished_one() {
+        let now = Instant::now();
+        let mut m = machine(1);
+        m.advance(now, RunInput::SiteInfo { site: 0, n_points: 100, dim: 1 }).unwrap();
+        m.advance(
+            now,
+            RunInput::Codebook { site: 0, dim: 1, codewords: vec![0.5], weights: vec![100] },
+        )
+        .unwrap();
+        m.central_done(vec![0], 1.0, Duration::ZERO).unwrap();
+        // complete run: a late SiteDown is a no-op
+        assert!(m
+            .advance(now, RunInput::SiteDown { site: 0, err: "gone".into() })
+            .is_ok());
+
+        let mut m = machine(1);
+        let err = m
+            .advance(now, RunInput::SiteDown { site: 0, err: "gone".into() })
+            .unwrap_err();
+        assert!(err.to_string().contains("link failed"), "{err}");
+    }
+}

@@ -1,14 +1,19 @@
 //! The distributed coordinator — Algorithm 1 as a leader/worker runtime.
 //!
 //! The protocol has exactly one implementation, split along the network
-//! seam: [`leader_protocol`] is everything the leader does over a
-//! [`LeaderNet`], and [`crate::site::serve`] is everything a site does over
-//! a [`crate::net::SiteNet`]. Two drivers wire those halves to transports:
+//! seam: the leader's per-run behavior is the [`machine::RunMachine`]
+//! state machine, and [`crate::site::serve`] / [`crate::site::session`]
+//! is everything a site does over a [`crate::net::SiteNet`]. Three
+//! drivers wire the leader half to transports:
 //!
 //! * [`run_pipeline`] — the in-process star: one worker thread per site
-//!   over the channel transport. The default for tests, benches, `dsc run`.
+//!   over the channel transport, [`leader_protocol`] pumping a single
+//!   machine. The default for tests, benches, `dsc run`.
 //! * [`run_leader_tcp`] — the leader half alone over real TCP connections
 //!   to `dsc site` daemon processes (`dsc leader`; see `docs/DEPLOY.md`).
+//! * [`server::serve_jobs`] — the event-driven job server: many machines
+//!   at once over persistent site sessions, jobs submitted by TCP clients
+//!   (`dsc leader --serve` / `dsc submit`).
 //!
 //! ```text
 //! site s:  ──site info──▶ leader         (shard size/dim registration)
@@ -31,16 +36,21 @@
 //! travel through the thread join (in-process) or site-side label files
 //! (TCP), never the network.
 
+pub mod machine;
+pub mod server;
+
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{Backend, PipelineConfig};
 use crate::data::scenario::SitePart;
-use crate::net::{self, LeaderNet, Message, NetReport};
+use crate::net::{self, JobSpec, LeaderNet, Message, NetReport};
 use crate::rng::Rng;
 use crate::runtime::XlaRuntime;
 use crate::spectral::{self, njw, GraphKind, SpectralParams};
+
+use machine::{OutMsg, RunInput, RunMachine};
 
 /// Outcome of one distributed run.
 #[derive(Clone, Debug)]
@@ -123,14 +133,38 @@ fn resolve_xla(cfg: &PipelineConfig) -> Result<Option<std::rc::Rc<XlaRuntime>>> 
     })
 }
 
-fn check_graph_backend(cfg: &PipelineConfig) -> Result<()> {
-    if cfg.backend != Backend::Native && cfg.graph != GraphKind::Dense {
+fn check_graph_backend_kinds(graph: GraphKind, backend: Backend) -> Result<()> {
+    if backend != Backend::Native && graph != GraphKind::Dense {
         bail!(
             "spectral.graph = \"knn\" requires backend = \"native\": the AOT XLA \
              artifacts compute the dense affinity embedding"
         );
     }
     Ok(())
+}
+
+fn check_graph_backend(cfg: &PipelineConfig) -> Result<()> {
+    check_graph_backend_kinds(cfg.graph, cfg.backend)
+}
+
+/// The job-level subset of a [`PipelineConfig`] — what one clustering run
+/// is, independent of how the serving deployment executes it (backend,
+/// link model, addresses and timeouts stay with the leader). This is the
+/// payload of a `SUBMIT` frame; [`leader_protocol`] derives one from its
+/// own config so both drivers run literally the same spec.
+pub fn spec_from_config(cfg: &PipelineConfig) -> JobSpec {
+    JobSpec {
+        dml: cfg.dml,
+        total_codes: cfg.total_codes as u32,
+        k_clusters: cfg.k_clusters as u32,
+        kmeans_max_iters: cfg.kmeans_max_iters as u32,
+        kmeans_tol: cfg.kmeans_tol,
+        seed: cfg.seed,
+        algo: cfg.algo,
+        graph: cfg.graph,
+        weighted: cfg.weighted_affinity,
+        bandwidth: cfg.bandwidth,
+    }
 }
 
 /// Run the full distributed pipeline over pre-split site data, in process
@@ -259,10 +293,13 @@ pub fn run_leader_tcp(cfg: &PipelineConfig) -> Result<TcpRunReport> {
     Ok(TcpRunReport { outcome, net: leader.report(), wall: wall_start.elapsed() })
 }
 
-/// Everything the leader does for one run, over any transport: register
-/// sites, assign budgets, collect codebooks, cluster centrally, send
-/// labels back. Each collect phase gets a fresh `cfg.collect_timeout`
-/// deadline (straggler/crash protection).
+/// Everything the leader does for one run, over any transport: the
+/// blocking single-run driver around [`machine::RunMachine`]. Events are
+/// pumped straight off the transport mailbox; each collect phase gets a
+/// fresh `cfg.collect_timeout` deadline (straggler/crash protection). The
+/// job server ([`server`]) drives the same machine event-for-event, so a
+/// run behaves identically whether it is the only one or interleaved with
+/// others.
 pub fn leader_protocol(
     net: &LeaderNet,
     cfg: &PipelineConfig,
@@ -273,178 +310,80 @@ pub fn leader_protocol(
         bail!("no sites");
     }
     check_graph_backend(cfg)?;
+    let mut m = RunMachine::new(n_sites, spec_from_config(cfg), cfg.collect_timeout, Instant::now());
 
-    // ---- phase 1: shard registration ----
-    let mut infos: Vec<Option<(u64, u32)>> = vec![None; n_sites];
-    collect_phase(net, cfg, "registration", &mut infos, |sid, msg, slot| match msg {
+    loop {
+        let remaining = m.deadline().saturating_duration_since(Instant::now());
+        let input = match net.recv_timeout(remaining) {
+            Ok((sid, msg)) => classic_input(sid, msg, n_sites)?,
+            // Timeout or dead link while collecting: the machine knows
+            // which phase stalled and who never reported.
+            Err(e) => return Err(m.waiting_error(&format!("{e:#}"))),
+        };
+        let adv = m.advance(Instant::now(), input)?;
+        for (sid, out) in adv.send {
+            net.send(sid, &classic_out(sid, out))?;
+        }
+        if adv.central {
+            // ---- central spectral clustering on the codeword union ----
+            // Wall time, not thread CPU: this phase runs alone on the host
+            // (after the site barrier) and may fan out over the `par`
+            // pool, so its wall clock is exactly the elapsed contribution.
+            // Sites use thread CPU instead because *their* contention is a
+            // simulation artifact when they are threads (see crate::site).
+            let t0 = Instant::now();
+            let (code_labels, sigma) = {
+                let (cw, dim, w) = m.central_input();
+                central_cluster(cw, dim, w, m.spec(), cfg.backend, xla)?
+            };
+            let adv = m.central_done(code_labels, sigma, t0.elapsed())?;
+            for (sid, out) in adv.send {
+                net.send(sid, &classic_out(sid, out))?;
+            }
+            debug_assert!(adv.done);
+            return Ok(m.outcome());
+        }
+    }
+}
+
+/// Map a classic (unscoped) frame to a machine event, validating the
+/// embedded site id against the link it arrived on — the machine itself
+/// only ever sees trusted link indices.
+fn classic_input(sid: usize, msg: Message, n_sites: usize) -> Result<RunInput> {
+    if sid >= n_sites {
+        bail!("message from out-of-range site {sid}");
+    }
+    match msg {
         Message::SiteInfo { site, n_points, dim } => {
             if site as usize != sid {
                 bail!("site id mismatch on site info frame");
             }
-            if slot.replace((n_points, dim)).is_some() {
-                bail!("site {sid} registered twice");
-            }
-            Ok(())
+            Ok(RunInput::SiteInfo { site: sid, n_points, dim })
         }
-        other => bail!("unexpected message during registration: {other:?}"),
-    })?;
-    let infos: Vec<(u64, u32)> = infos.into_iter().map(|s| s.expect("all collected")).collect();
-
-    let dim = infos[0].1;
-    for (sid, &(_, d)) in infos.iter().enumerate() {
-        if d != dim {
-            bail!("site {sid} has dim {d}, expected {dim}");
-        }
-    }
-    if dim == 0 {
-        bail!("sites report zero-dimensional data");
-    }
-    // Site-reported counts are untrusted input: bound them per site and
-    // sum checked, so one hostile SiteInfo cannot panic the leader (debug
-    // overflow) or wrap the proportional-budget arithmetic (release).
-    const MAX_SITE_POINTS: u64 = 1 << 48;
-    let site_points: Vec<u64> = infos.iter().map(|&(np, _)| np).collect();
-    let mut total_points: u64 = 0;
-    for (sid, &np) in site_points.iter().enumerate() {
-        if np > MAX_SITE_POINTS {
-            bail!("site {sid} reports an implausible {np} points");
-        }
-        total_points = total_points
-            .checked_add(np)
-            .ok_or_else(|| anyhow!("total point count overflows u64"))?;
-    }
-    if total_points == 0 {
-        bail!("no data at any site");
-    }
-
-    // ---- phase 2: work orders ----
-    // Per-site codeword budgets ∝ site size (paper: fixed compression
-    // ratio); per-site seeds fork from the master seed, so results are a
-    // function of (data, cfg) alone, not of which transport ran the sites.
-    let budgets: Vec<usize> = site_points
-        .iter()
-        .map(|&np| {
-            ((cfg.total_codes as f64 * np as f64 / total_points as f64).round() as usize)
-                .max(1)
-                .min((np as usize).max(1))
-        })
-        .collect();
-    let root_rng = Rng::new(cfg.seed);
-    for sid in 0..n_sites {
-        let mut fork = root_rng.fork(sid as u64 + 1);
-        net.send(
-            sid,
-            &Message::DmlRequest {
-                site: sid as u32,
-                dml: cfg.dml,
-                target_codes: budgets[sid] as u32,
-                max_iters: cfg.kmeans_max_iters as u32,
-                tol: cfg.kmeans_tol,
-                seed: fork.next_u64(),
-            },
-        )?;
-    }
-
-    // ---- phase 3: collect codebooks ----
-    // Buffered per site, then concatenated in site order so the codeword
-    // union (and everything downstream of it) is independent of message
-    // arrival order — a determinism guarantee the tests and benches (and
-    // the cross-transport parity checks) rely on.
-    let mut inbox: Vec<Option<(Vec<f32>, Vec<u32>)>> = vec![None; n_sites];
-    collect_phase(net, cfg, "codebook", &mut inbox, |sid, msg, slot| match msg {
-        Message::Codebook { site, dim: d, codewords, weights } => {
+        Message::Codebook { site, dim, codewords, weights } => {
             if site as usize != sid {
                 bail!("site id mismatch on codebook frame");
             }
-            if d != dim {
-                bail!("site {sid} sent dim {d}, expected {dim}");
-            }
-            if codewords.len() != (d as usize) * weights.len() {
-                bail!("site {sid} sent a malformed codebook");
-            }
-            if slot.replace((codewords, weights)).is_some() {
-                bail!("site {sid} sent two codebooks");
-            }
-            Ok(())
+            Ok(RunInput::Codebook { site: sid, dim, codewords, weights })
         }
-        other => bail!("unexpected message during collect: {other:?}"),
-    })?;
-
-    let mut cw_all: Vec<f32> = Vec::new();
-    let mut w_all: Vec<f32> = Vec::new();
-    // per-site (offset, count) into the codeword union
-    let mut spans = vec![(0usize, 0usize); n_sites];
-    for (sid, slot) in inbox.into_iter().enumerate() {
-        let (codewords, weights) = slot.expect("all collected");
-        spans[sid] = (w_all.len(), weights.len());
-        cw_all.extend_from_slice(&codewords);
-        w_all.extend(weights.iter().map(|&w| w as f32));
+        other => bail!("unexpected message from site {sid}: {other:?}"),
     }
-    let n_codes = w_all.len();
-
-    // ---- phase 4: central spectral clustering on the codeword union ----
-    // Wall time, not thread CPU: this phase runs alone on the host (after
-    // the site barrier) and may fan out over the `par` pool, so its wall
-    // clock is exactly the elapsed contribution. Sites use thread CPU
-    // instead because *their* contention is a simulation artifact when they
-    // are threads (see crate::site).
-    let t0 = Instant::now();
-    let (code_labels, sigma) = central_cluster(&cw_all, dim as usize, &w_all, cfg, xla)?;
-    let central = t0.elapsed();
-
-    // ---- phase 5: populate labels back ----
-    for (sid, &(off, len)) in spans.iter().enumerate() {
-        let labels: Vec<u16> = code_labels[off..off + len].to_vec();
-        net.send(sid, &Message::Labels { site: sid as u32, labels })?;
-    }
-
-    Ok(LeaderOutcome {
-        dim: dim as usize,
-        n_codes,
-        sigma,
-        central,
-        site_points,
-        site_codes: spans.iter().map(|&(_, len)| len).collect(),
-    })
 }
 
-/// One receive-from-everyone phase with a straggler deadline: `slots` has
-/// one entry per site; `accept` validates and stores each message. On
-/// timeout or link failure the error names the sites that never reported.
-fn collect_phase<T>(
-    net: &LeaderNet,
-    cfg: &PipelineConfig,
-    phase: &str,
-    slots: &mut [Option<T>],
-    mut accept: impl FnMut(usize, Message, &mut Option<T>) -> Result<()>,
-) -> Result<()> {
-    let deadline = Instant::now() + cfg.collect_timeout;
-    let mut received = slots.iter().filter(|s| s.is_some()).count();
-    while received < slots.len() {
-        let remaining = deadline.saturating_duration_since(Instant::now());
-        let (sid, msg) = net.recv_timeout(remaining).map_err(|e| {
-            let missing: Vec<usize> = slots
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.is_none())
-                .map(|(i, _)| i)
-                .collect();
-            anyhow!(
-                "{phase} collect failed after {:?} — sites {missing:?} never \
-                 reported ({e})",
-                cfg.collect_timeout
-            )
-        })?;
-        if sid >= slots.len() {
-            bail!("message from out-of-range site {sid}");
-        }
-        let was_empty = slots[sid].is_none();
-        accept(sid, msg, &mut slots[sid])?;
-        if was_empty && slots[sid].is_some() {
-            received += 1;
-        }
+/// Wrap a machine output in the classic one-shot dialect (the job server
+/// wraps the same outputs run-scoped instead).
+fn classic_out(sid: usize, out: OutMsg) -> Message {
+    match out {
+        OutMsg::Dml(o) => Message::DmlRequest {
+            site: sid as u32,
+            dml: o.dml,
+            target_codes: o.target_codes,
+            max_iters: o.max_iters,
+            tol: o.tol,
+            seed: o.seed,
+        },
+        OutMsg::Labels(labels) => Message::Labels { site: sid as u32, labels },
     }
-    Ok(())
 }
 
 /// What one in-process site worker does: bridge a [`SitePart`] onto the
@@ -475,26 +414,29 @@ fn site_worker(
     })
 }
 
-/// Central spectral step with backend dispatch. Returns codeword labels and
-/// the bandwidth used.
+/// Central spectral step with backend dispatch, parameterized by the job
+/// spec (so the blocking driver and the job server run byte-identical
+/// specs). Returns codeword labels and the bandwidth used.
 fn central_cluster(
     cw: &[f32],
     dim: usize,
     weights: &[f32],
-    cfg: &PipelineConfig,
+    spec: &JobSpec,
+    backend: Backend,
     xla: Option<&XlaRuntime>,
 ) -> Result<(Vec<u16>, f64)> {
+    check_graph_backend_kinds(spec.graph, backend)?;
     let n = weights.len();
     let params = SpectralParams {
-        k: cfg.k_clusters,
-        bandwidth: cfg.bandwidth,
-        algo: cfg.algo,
-        graph: cfg.graph,
-        weighted: cfg.weighted_affinity,
-        seed: cfg.seed ^ 0xC0FFEE,
+        k: spec.k_clusters as usize,
+        bandwidth: spec.bandwidth,
+        algo: spec.algo,
+        graph: spec.graph,
+        weighted: spec.weighted,
+        seed: spec.seed ^ 0xC0FFEE,
     };
 
-    match cfg.backend {
+    match backend {
         Backend::Native => {
             let (labels, info) =
                 spectral::cluster_codewords(cw, dim, Some(weights), &params);
@@ -509,7 +451,7 @@ fn central_cluster(
                 Some(weights),
                 params.bandwidth,
                 params.k,
-                GraphKind::Dense, // leader_protocol rejects knn + XLA up front
+                GraphKind::Dense, // knn + XLA rejected above
                 &mut rng,
             );
             // weights double as the pad mask; the unweighted variant sends 1s
@@ -518,7 +460,7 @@ fn central_cluster(
             let out = rt.embed(cw, dim, &w_eff, sigma as f32)?;
             let k_cols = out.k_cols;
 
-            let labels = if cfg.backend == Backend::Xla {
+            let labels = if backend == Backend::Xla {
                 // native K-means finish on the embedding
                 let emb: Vec<f64> = out.evecs.iter().map(|&v| v as f64).collect();
                 njw::labels_from_embedding(&emb, n, k_cols, params.k, &mut rng)

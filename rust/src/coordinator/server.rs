@@ -1,0 +1,916 @@
+//! The job-serving leader: one reactor loop, many interleaved runs.
+//!
+//! `dsc leader --serve` turns the leader from a one-run driver into a
+//! long-lived service. The shape:
+//!
+//! ```text
+//!  clients ──SUBMIT──▶ ┌──────────────┐ ◀──run-scoped frames── sites
+//!  (dsc submit)        │   mailbox    │   (persistent sessions,
+//!                      │ SiteFrame    │    dialed concurrently,
+//!   accept thread ───▶ │ SiteDown     │    one reader thread per
+//!   per-conn reader ─▶ │ ClientSubmit │    link feeding the mailbox)
+//!   threads            │ ClientPull   │
+//!                      │ Tick         │
+//!                      └──────┬───────┘
+//!                             ▼
+//!                      one reactor loop: a JobQueue, at most
+//!                      [`ServerOpts::max_jobs`] active [`RunMachine`]s,
+//!                      per-run byte accounting, straggler deadlines
+//! ```
+//!
+//! Every blocking wait lives in a helper thread; the reactor itself only
+//! ever blocks on its mailbox (with a timeout at the nearest run
+//! deadline, delivered as `Tick`). Runs interleave over the same site
+//! links because every frame carries its run id; per-run [`LinkStats`]
+//! are kept by the reactor as it encodes/decodes, so two jobs running
+//! concurrently report byte counters identical to the same jobs run
+//! back-to-back (pinned by `rust/tests/job_server.rs`).
+//!
+//! Failure policy: a dead site link fails every *active* run (the star
+//! spans all sites) but not the queue — before starting a queued run the
+//! server re-dials any dead link, so the queue keeps draining after a
+//! site daemon restarts. A run failure is reported to its client as a
+//! `REJECT` frame; the server itself only stops on fatal local errors
+//! (e.g. the client listener dying).
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::PipelineConfig;
+use crate::net::tcp::{self, Backoff, TcpClient, TcpTimeouts};
+use crate::net::{wire, JobReport, JobSpec, LinkStats, Message};
+
+use super::machine::{Advance, OutMsg, RunInput, RunMachine};
+use super::{central_cluster, check_graph_backend_kinds, resolve_xla};
+
+/// Serving knobs (config `[leader]`, flags override).
+#[derive(Clone, Debug)]
+pub struct ServerOpts {
+    /// Runs allowed in flight at once; further jobs wait in the queue.
+    pub max_jobs: usize,
+    /// Pending-job cap; submissions beyond it are rejected immediately.
+    pub queue_depth: usize,
+    /// Whether clients may pull populated labels through the leader
+    /// (`LABELSPULL`). Off by default: the paper's privacy posture keeps
+    /// per-point labels at the sites.
+    pub allow_label_pull: bool,
+    /// Exit after this many client connections have come *and gone* —
+    /// drills, tests and the CI smoke use it to get a clean shutdown once
+    /// every client got everything it asked for (results, label pulls);
+    /// `None` serves forever.
+    pub client_limit: Option<u64>,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        let cfg = crate::config::LeaderConfig::default();
+        ServerOpts {
+            max_jobs: cfg.max_jobs,
+            queue_depth: cfg.queue_depth,
+            allow_label_pull: cfg.allow_label_pull,
+            client_limit: None,
+        }
+    }
+}
+
+impl ServerOpts {
+    /// Lift the `[leader]` config table into serving options.
+    pub fn from_config(cfg: &PipelineConfig) -> ServerOpts {
+        ServerOpts {
+            max_jobs: cfg.leader.max_jobs,
+            queue_depth: cfg.leader.queue_depth,
+            allow_label_pull: cfg.leader.allow_label_pull,
+            client_limit: None,
+        }
+    }
+}
+
+/// What a serving session did (returned when `client_limit` is reached).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    /// Runs that delivered labels and a `JOBDONE`.
+    pub completed: u64,
+    /// Runs that started (or were queued) and then failed.
+    pub failed: u64,
+    /// Submissions refused outright (queue full).
+    pub rejected: u64,
+}
+
+/// The reactor mailbox. Site/client reader threads and the acceptor all
+/// funnel here; `Tick` is synthesized by the loop itself when the nearest
+/// run deadline expires with nothing delivered.
+enum Event {
+    /// One frame from a site link. `gen` stamps which incarnation of the
+    /// link the reader belongs to — events from a replaced connection are
+    /// stale and dropped.
+    SiteFrame { site: usize, gen: u64, frame: Vec<u8> },
+    /// A site link died (clean close, decode failure, or io error).
+    SiteDown { site: usize, gen: u64, err: String },
+    /// The acceptor handshook a new client; the stream is the reactor's
+    /// write half.
+    ClientConn { client: u64, stream: TcpStream },
+    /// A client submitted a job.
+    ClientSubmit { client: u64, spec: Box<JobSpec> },
+    /// A client asked for a completed run's populated labels.
+    ClientPull { client: u64, run: u32 },
+    /// A client connection ended (its runs keep going; reports are
+    /// dropped).
+    ClientDown { client: u64 },
+    /// Deadline check.
+    Tick,
+}
+
+struct SiteLink {
+    addr: String,
+    /// Reactor-owned write half; `None` while the link is down.
+    stream: Option<TcpStream>,
+    /// Incarnation counter for stale-event filtering.
+    gen: u64,
+}
+
+struct Job {
+    run: u32,
+    client: u64,
+    spec: JobSpec,
+}
+
+struct RunEntry {
+    machine: RunMachine,
+    client: u64,
+    /// Per-run, per-link counters — only this run's frames.
+    stats: Vec<LinkStats>,
+    started: Instant,
+}
+
+/// A label pull in flight: `outstanding` site frames still to forward.
+struct Pull {
+    run: u32,
+    client: u64,
+    outstanding: usize,
+}
+
+/// Completed runs the leader remembers for label pulls.
+const COMPLETED_CAP: usize = 64;
+
+/// Serve jobs until `opts.client_limit` client connections have come and
+/// gone (forever when `None`). `client_listener` is the already-bound job
+/// socket — the caller
+/// binds it so it can print the chosen address before the server blocks
+/// (`dsc leader --serve host:0`). Site links are dialed from
+/// `cfg.net.sites` as persistent multi-run sessions before any job is
+/// accepted.
+pub fn serve_jobs(
+    cfg: &PipelineConfig,
+    opts: &ServerOpts,
+    client_listener: TcpListener,
+) -> Result<ServerStats> {
+    if cfg.net.sites.is_empty() {
+        bail!("no site addresses configured (set [net] sites or --sites)");
+    }
+    if opts.max_jobs == 0 || opts.queue_depth == 0 {
+        bail!("[leader] max_jobs and queue_depth must be ≥ 1");
+    }
+    let timeouts = cfg.net.tcp_timeouts();
+    let (tx, rx) = mpsc::channel::<Event>();
+
+    // Dial every site concurrently in the session dialect, then hand each
+    // connection's read half to a reader thread.
+    let conns = tcp::dial_sites(&cfg.net.sites, &timeouts, true)?;
+    let mut links = Vec::with_capacity(conns.len());
+    for (site, stream) in conns.into_iter().enumerate() {
+        let rd = stream.try_clone().context("clone site socket for reading")?;
+        spawn_site_reader(rd, site, 0, tx.clone());
+        links.push(SiteLink { addr: cfg.net.sites[site].clone(), stream: Some(stream), gen: 0 });
+    }
+
+    spawn_acceptor(client_listener, timeouts, cfg.seed, tx.clone());
+
+    let xla = resolve_xla(cfg)?;
+    let mut server = Server {
+        cfg,
+        opts,
+        xla,
+        timeouts,
+        tx,
+        links,
+        clients: HashMap::new(),
+        queue: VecDeque::new(),
+        active: HashMap::new(),
+        completed: VecDeque::new(),
+        pulls: Vec::new(),
+        next_run: 1,
+        clients_done: 0,
+        redial_backoff: Backoff::new(cfg.seed ^ 0xD1A1),
+        redial_after: None,
+        stats: ServerStats::default(),
+    };
+    server.run(rx)
+}
+
+/// Reader thread for one site-link incarnation: frames (and death) become
+/// mailbox events tagged with the link generation.
+fn spawn_site_reader(stream: TcpStream, site: usize, gen: u64, tx: Sender<Event>) {
+    thread::spawn(move || loop {
+        match tcp::recv_frame(&stream) {
+            Ok(Some(frame)) => {
+                if tx.send(Event::SiteFrame { site, gen, frame }).is_err() {
+                    return; // server gone
+                }
+            }
+            Ok(None) => {
+                let _ = tx.send(Event::SiteDown {
+                    site,
+                    gen,
+                    err: "site closed the connection".into(),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(Event::SiteDown { site, gen, err: format!("{e:#}") });
+                return;
+            }
+        }
+    });
+}
+
+/// Accept thread for the client socket: handshakes, registers the write
+/// half with the reactor, and spawns a per-connection reader. Handshake
+/// failures (port scans, version skew) are logged and never take the
+/// server down; persistent accept errors back off like the site daemon.
+fn spawn_acceptor(listener: TcpListener, timeouts: TcpTimeouts, seed: u64, tx: Sender<Event>) {
+    thread::spawn(move || {
+        let mut next_client = 1u64;
+        let mut backoff = Backoff::new(seed ^ 0x5EE1);
+        loop {
+            match tcp::accept_client(&listener, &timeouts) {
+                Ok(stream) => {
+                    backoff.reset();
+                    let client = next_client;
+                    next_client += 1;
+                    let rd = match stream.try_clone() {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("leader: clone client socket: {e}");
+                            continue;
+                        }
+                    };
+                    if tx.send(Event::ClientConn { client, stream }).is_err() {
+                        return; // server gone
+                    }
+                    spawn_client_reader(rd, client, tx.clone());
+                }
+                Err(e) => {
+                    eprintln!("leader: client accept failed: {e:#}");
+                    thread::sleep(backoff.next_delay());
+                }
+            }
+        }
+    });
+}
+
+/// Reader thread for one client connection: decodes frames into typed
+/// events; anything unexpected (or the connection ending) retires the
+/// client.
+fn spawn_client_reader(stream: TcpStream, client: u64, tx: Sender<Event>) {
+    thread::spawn(move || {
+        loop {
+            let frame = match tcp::recv_frame(&stream) {
+                Ok(Some(frame)) => frame,
+                Ok(None) | Err(_) => break,
+            };
+            let event = match wire::decode(&frame) {
+                Ok(Message::Submit(spec)) => {
+                    Event::ClientSubmit { client, spec: Box::new(spec) }
+                }
+                Ok(Message::LabelsPull { run }) => Event::ClientPull { client, run },
+                Ok(other) => {
+                    eprintln!("leader: client {client} sent unexpected {other:?}; dropping it");
+                    break;
+                }
+                Err(e) => {
+                    eprintln!("leader: client {client} sent an undecodable frame: {e:#}");
+                    break;
+                }
+            };
+            if tx.send(event).is_err() {
+                return; // server gone: no one left to tell
+            }
+        }
+        let _ = tx.send(Event::ClientDown { client });
+    });
+}
+
+/// Wrap a machine output run-scoped (the classic driver wraps the same
+/// outputs unscoped — see `coordinator::classic_out`).
+fn scoped_out(run: u32, site: usize, out: OutMsg) -> Message {
+    match out {
+        OutMsg::Dml(o) => Message::RunDmlRequest {
+            run,
+            site: site as u32,
+            dml: o.dml,
+            target_codes: o.target_codes,
+            max_iters: o.max_iters,
+            tol: o.tol,
+            seed: o.seed,
+        },
+        OutMsg::Labels(labels) => Message::RunLabels { run, site: site as u32, labels },
+    }
+}
+
+/// Submit-time spec validation: everything a hostile or buggy client could
+/// set that the pipeline would only reject (or panic on) deep inside a
+/// run. The central step's spectral code asserts `k ≥ 1`, and the graph /
+/// backend combination is a property of this serving deployment.
+fn validate_spec(spec: &JobSpec, backend: crate::config::Backend) -> Result<()> {
+    if spec.k_clusters == 0 {
+        bail!("k_clusters must be ≥ 1");
+    }
+    if spec.total_codes == 0 {
+        bail!("total_codes must be ≥ 1");
+    }
+    if let crate::spectral::GraphKind::Knn { k } = spec.graph {
+        if k == 0 {
+            bail!("knn_k must be ≥ 1");
+        }
+    }
+    check_graph_backend_kinds(spec.graph, backend)
+}
+
+/// Keep reject messages a short sentence (the wire caps them anyway).
+fn reject_text(s: &str) -> String {
+    if s.len() <= 1000 {
+        s.to_string()
+    } else {
+        s.chars().take(1000).collect()
+    }
+}
+
+struct Server<'a> {
+    cfg: &'a PipelineConfig,
+    opts: &'a ServerOpts,
+    xla: Option<std::rc::Rc<crate::runtime::XlaRuntime>>,
+    timeouts: TcpTimeouts,
+    /// Kept so the mailbox can never disconnect and to arm new readers.
+    tx: Sender<Event>,
+    links: Vec<SiteLink>,
+    /// Client write halves, by client id.
+    clients: HashMap<u64, TcpStream>,
+    queue: VecDeque<Job>,
+    active: HashMap<u32, RunEntry>,
+    /// Recently completed runs (run id → site count), FIFO-capped, for
+    /// label pulls.
+    completed: VecDeque<(u32, usize)>,
+    pulls: Vec<Pull>,
+    next_run: u32,
+    /// Client connections that have ended (for `client_limit`).
+    clients_done: u64,
+    /// Re-dial pacing for dead site links: queued jobs *wait* through a
+    /// site outage (capped, jittered schedule) instead of being drained
+    /// with rejects by back-to-back failed dials.
+    redial_backoff: Backoff,
+    /// No re-dial (and so no queued-run start) before this instant.
+    redial_after: Option<Instant>,
+    stats: ServerStats,
+}
+
+impl Server<'_> {
+    fn run(&mut self, rx: Receiver<Event>) -> Result<ServerStats> {
+        loop {
+            if let Some(limit) = self.opts.client_limit {
+                if self.clients_done >= limit {
+                    return Ok(self.stats);
+                }
+            }
+            let event = match self.next_deadline() {
+                None => rx.recv().map_err(|_| anyhow!("reactor mailbox closed"))?,
+                Some(deadline) => {
+                    let wait = deadline.saturating_duration_since(Instant::now());
+                    match rx.recv_timeout(wait) {
+                        Ok(ev) => ev,
+                        Err(RecvTimeoutError::Timeout) => Event::Tick,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            bail!("reactor mailbox closed")
+                        }
+                    }
+                }
+            };
+            match event {
+                Event::SiteFrame { site, gen, frame } => {
+                    if gen == self.links[site].gen {
+                        self.on_site_frame(site, frame);
+                    } // else: stale reader from a replaced connection
+                }
+                Event::SiteDown { site, gen, err } => {
+                    if gen == self.links[site].gen {
+                        self.site_down(site, &err);
+                    }
+                }
+                Event::ClientConn { client, stream } => {
+                    self.clients.insert(client, stream);
+                }
+                Event::ClientSubmit { client, spec } => self.on_submit(client, *spec),
+                Event::ClientPull { client, run } => self.on_pull(client, run),
+                Event::ClientDown { client } => {
+                    self.clients.remove(&client);
+                    self.pulls.retain(|p| p.client != client);
+                    self.clients_done += 1;
+                }
+                Event::Tick => {}
+            }
+            // Deadlines are enforced every iteration, not only when the
+            // mailbox happens to be empty at the timeout (`Tick`): under
+            // sustained traffic recv_timeout keeps returning events and a
+            // stalled run's collect_timeout must still fire on schedule.
+            self.expire_overdue();
+            self.try_start_jobs();
+        }
+    }
+
+    /// Nearest wakeup the reactor must honor even with an empty mailbox:
+    /// the earliest straggler deadline over the active runs (all of which
+    /// are in a collecting phase between events — the central phase never
+    /// spans a mailbox wait), or the re-dial retry time while jobs wait
+    /// out a site outage.
+    fn next_deadline(&self) -> Option<Instant> {
+        let runs = self.active.values().map(|e| e.machine.deadline()).min();
+        let redial = if self.queue.is_empty() { None } else { self.redial_after };
+        match (runs, redial) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    // ─── site plane ────────────────────────────────────────────────────
+
+    fn on_site_frame(&mut self, site: usize, frame: Vec<u8>) {
+        let len = frame.len();
+        let msg = match wire::decode(&frame) {
+            Ok(msg) => msg,
+            Err(e) => {
+                self.site_down(site, &format!("sent an undecodable frame: {e:#}"));
+                return;
+            }
+        };
+        match msg {
+            Message::RunSiteInfo { run, site: s, n_points, dim } => {
+                if s as usize != site {
+                    self.site_down(site, "site id mismatch on site info frame");
+                    return;
+                }
+                self.run_event(run, site, len, RunInput::SiteInfo { site, n_points, dim });
+            }
+            Message::RunCodebook { run, site: s, dim, codewords, weights } => {
+                if s as usize != site {
+                    self.site_down(site, "site id mismatch on codebook frame");
+                    return;
+                }
+                self.run_event(
+                    run,
+                    site,
+                    len,
+                    RunInput::Codebook { site, dim, codewords, weights },
+                );
+            }
+            // Pull plane: forwarded to the pulling client verbatim, and
+            // deliberately *not* accounted to any run — the run's NetReport
+            // was already fixed when JOBDONE went out.
+            Message::SiteLabels { run, .. } => self.forward_pull(run, &frame),
+            Message::Reject { run, msg } => self.refuse_pull(run, &msg),
+            other => {
+                eprintln!("leader: ignoring unexpected frame from site {site}: {other:?}");
+            }
+        }
+    }
+
+    /// Route a frame to its run's machine, accounting it to that run.
+    fn run_event(&mut self, run: u32, site: usize, frame_len: usize, input: RunInput) {
+        let Some(entry) = self.active.get_mut(&run) else {
+            // e.g. a codebook for a run that already failed on a timeout
+            eprintln!("leader: dropping frame from site {site} for inactive run {run}");
+            return;
+        };
+        entry.stats[site].account(true, frame_len, &self.cfg.link);
+        let adv = entry.machine.advance(Instant::now(), input);
+        self.drive(run, adv);
+    }
+
+    /// Apply one machine step: send what it asked, run the central step
+    /// when it is ready, finish or fail the run.
+    fn drive(&mut self, run: u32, adv: Result<Advance>) {
+        let adv = match adv {
+            Ok(adv) => adv,
+            Err(e) => {
+                self.fail_run(run, &format!("{e:#}"));
+                return;
+            }
+        };
+        for (site, out) in adv.send {
+            let msg = scoped_out(run, site, out);
+            if let Err(e) = self.send_run_frame(run, site, &msg) {
+                // marks the link down, which fails this run (and any other
+                // active one — they all span the dead link)
+                self.site_down(site, &format!("{e:#}"));
+                return;
+            }
+        }
+        if adv.central {
+            let result = {
+                let entry = self.active.get(&run).expect("central for a live run");
+                let (cw, dim, w) = entry.machine.central_input();
+                let t0 = Instant::now();
+                central_cluster(cw, dim, w, entry.machine.spec(), self.cfg.backend, self.xla.as_deref())
+                    .map(|out| (out, t0.elapsed()))
+            };
+            match result {
+                Ok(((labels, sigma), central)) => {
+                    let adv = self
+                        .active
+                        .get_mut(&run)
+                        .expect("still live")
+                        .machine
+                        .central_done(labels, sigma, central);
+                    self.drive(run, adv);
+                }
+                Err(e) => self.fail_run(run, &format!("central step failed: {e:#}")),
+            }
+            return; // done-handling happened in the recursive drive
+        }
+        if adv.done {
+            self.complete_run(run);
+        }
+    }
+
+    /// Encode, account to the run, and write one frame to a site link.
+    fn send_run_frame(&mut self, run: u32, site: usize, msg: &Message) -> Result<()> {
+        let frame = wire::encode(msg);
+        if let Some(entry) = self.active.get_mut(&run) {
+            entry.stats[site].account(false, frame.len(), &self.cfg.link);
+        }
+        let stream = self.links[site]
+            .stream
+            .as_ref()
+            .ok_or_else(|| anyhow!("site {site} link is down"))?;
+        tcp::send_frame(stream, &frame).with_context(|| format!("send to site {site}"))
+    }
+
+    /// A site link died: every active run spans it, so they all fail; the
+    /// queue survives (links are re-dialed before the next run starts).
+    fn site_down(&mut self, site: usize, err: &str) {
+        if let Some(stream) = self.links[site].stream.take() {
+            eprintln!("leader: site {site} link down: {err}");
+            let _ = stream.shutdown(Shutdown::Both); // wake its reader thread
+            self.links[site].gen += 1;
+        }
+        let mut runs: Vec<u32> = self.active.keys().copied().collect();
+        runs.sort_unstable();
+        for run in runs {
+            self.fail_run(run, &format!("site {site} link failed: {err}"));
+        }
+        // In-flight label pulls can no longer complete (their SITELABELS
+        // frames died with the link): tell the waiting clients, who would
+        // otherwise block forever — idle waits never time out by design.
+        let pulls = std::mem::take(&mut self.pulls);
+        for p in pulls {
+            self.send_client(
+                p.client,
+                &Message::Reject {
+                    run: p.run,
+                    msg: format!("site {site} link failed during the label pull"),
+                },
+            );
+        }
+    }
+
+    /// Re-dial any dead site link (fresh session + reader thread).
+    fn ensure_links(&mut self) -> Result<()> {
+        for site in 0..self.links.len() {
+            if self.links[site].stream.is_some() {
+                continue;
+            }
+            let stream =
+                tcp::connect_site(&self.links[site].addr, site as u32, &self.timeouts, true)
+                    .with_context(|| format!("re-dial site {site}"))?;
+            let rd = stream.try_clone().context("clone site socket for reading")?;
+            self.links[site].gen += 1;
+            self.links[site].stream = Some(stream);
+            spawn_site_reader(rd, site, self.links[site].gen, self.tx.clone());
+        }
+        Ok(())
+    }
+
+    // ─── run lifecycle ─────────────────────────────────────────────────
+
+    fn on_submit(&mut self, client: u64, spec: JobSpec) {
+        // Client input is untrusted: refuse specs the pipeline would panic
+        // or misbehave on *now*, not after every site has done DML work —
+        // and never let one bad job take the reactor (and every other
+        // client's runs) down.
+        if let Err(e) = validate_spec(&spec, self.cfg.backend) {
+            self.send_client(
+                client,
+                &Message::Reject { run: 0, msg: reject_text(&format!("bad job spec: {e:#}")) },
+            );
+            self.stats.rejected += 1;
+            return;
+        }
+        if self.queue.len() >= self.opts.queue_depth {
+            self.send_client(
+                client,
+                &Message::Reject {
+                    run: 0,
+                    msg: format!("queue full ({} jobs pending)", self.queue.len()),
+                },
+            );
+            self.stats.rejected += 1;
+            return;
+        }
+        let run = self.next_run;
+        self.next_run = self.next_run.wrapping_add(1).max(1); // run 0 = "no run"
+        self.send_client(client, &Message::JobAccept { run });
+        self.queue.push_back(Job { run, client, spec });
+    }
+
+    /// Start queued jobs while slots are free. Called after every event.
+    /// A failed re-dial does *not* reject the queue: the jobs stay queued
+    /// and the next attempt waits out a capped, jittered backoff (the
+    /// reactor wakes itself via [`Server::next_deadline`]) — one transient
+    /// site outage must not destroy every pending job, and back-to-back
+    /// dial timeouts must not wedge the reactor.
+    fn try_start_jobs(&mut self) {
+        while self.active.len() < self.opts.max_jobs && !self.queue.is_empty() {
+            if let Some(not_before) = self.redial_after {
+                if Instant::now() < not_before {
+                    return; // still backing off; jobs wait in the queue
+                }
+            }
+            if let Err(e) = self.ensure_links() {
+                let delay = self.redial_backoff.next_delay();
+                eprintln!(
+                    "leader: sites unreachable ({e:#}); {} queued job(s) wait, retrying \
+                     in {delay:?}",
+                    self.queue.len()
+                );
+                self.redial_after = Some(Instant::now() + delay);
+                return;
+            }
+            self.redial_after = None;
+            self.redial_backoff.reset();
+            let job = self.queue.pop_front().expect("checked non-empty");
+            let n_sites = self.links.len();
+            self.active.insert(
+                job.run,
+                RunEntry {
+                    machine: RunMachine::new(
+                        n_sites,
+                        job.spec,
+                        self.cfg.collect_timeout,
+                        Instant::now(),
+                    ),
+                    client: job.client,
+                    stats: vec![LinkStats::default(); n_sites],
+                    started: Instant::now(),
+                },
+            );
+            // Announce the run on every site link; sites answer with
+            // run-scoped registrations and the machine takes it from there.
+            for site in 0..n_sites {
+                if let Err(e) =
+                    self.send_run_frame(job.run, site, &Message::RunStart { run: job.run })
+                {
+                    self.site_down(site, &format!("{e:#}"));
+                    break; // this run just failed; the while loop continues
+                }
+            }
+        }
+    }
+
+    fn complete_run(&mut self, run: u32) {
+        let Some(entry) = self.active.remove(&run) else { return };
+        let outcome = entry.machine.outcome();
+        let report = JobReport {
+            n_codes: outcome.n_codes as u32,
+            sigma: outcome.sigma,
+            central_ns: outcome.central.as_nanos() as u64,
+            wall_ns: entry.started.elapsed().as_nanos() as u64,
+            per_site: entry.stats.iter().map(|s| s.to_wire()).collect(),
+        };
+        self.completed.push_back((run, entry.stats.len()));
+        while self.completed.len() > COMPLETED_CAP {
+            self.completed.pop_front();
+        }
+        self.stats.completed += 1;
+        self.send_client(entry.client, &Message::JobDone { run, report });
+    }
+
+    fn fail_run(&mut self, run: u32, why: &str) {
+        let Some(entry) = self.active.remove(&run) else { return };
+        eprintln!("leader: run {run} failed: {why}");
+        self.stats.failed += 1;
+        self.send_client(
+            entry.client,
+            &Message::Reject { run, msg: reject_text(why) },
+        );
+    }
+
+    /// Fail every run whose straggler deadline has passed (the machine
+    /// composes the canonical "sites […] never reported" error on an
+    /// expired `Tick`).
+    fn expire_overdue(&mut self) {
+        let now = Instant::now();
+        let mut overdue: Vec<u32> = self
+            .active
+            .iter()
+            .filter(|(_, e)| e.machine.deadline() <= now)
+            .map(|(run, _)| *run)
+            .collect();
+        overdue.sort_unstable();
+        for run in overdue {
+            let Some(entry) = self.active.get_mut(&run) else { continue };
+            let adv = entry.machine.advance(now, RunInput::Tick);
+            self.drive(run, adv);
+        }
+    }
+
+    // ─── client plane ──────────────────────────────────────────────────
+
+    fn send_client(&mut self, client: u64, msg: &Message) {
+        self.send_client_raw(client, &wire::encode(msg));
+    }
+
+    fn send_client_raw(&mut self, client: u64, frame: &[u8]) {
+        let Some(stream) = self.clients.get(&client) else {
+            return; // client hung up; its results are dropped
+        };
+        if let Err(e) = tcp::send_frame(stream, frame) {
+            eprintln!("leader: dropping client {client}: {e:#}");
+            self.clients.remove(&client);
+            self.pulls.retain(|p| p.client != client);
+        }
+    }
+
+    fn on_pull(&mut self, client: u64, run: u32) {
+        if !self.opts.allow_label_pull {
+            self.send_client(
+                client,
+                &Message::Reject {
+                    run,
+                    msg: "label pull is disabled on this leader \
+                          ([leader] allow_label_pull = false)"
+                        .into(),
+                },
+            );
+            return;
+        }
+        let Some(&(_, n_sites)) = self.completed.iter().find(|&&(r, _)| r == run) else {
+            self.send_client(
+                client,
+                &Message::Reject {
+                    run,
+                    msg: format!("run {run} is not a completed run on this leader"),
+                },
+            );
+            return;
+        };
+        if let Err(e) = self.ensure_links() {
+            self.send_client(
+                client,
+                &Message::Reject {
+                    run,
+                    msg: reject_text(&format!("cannot reach sites for the pull: {e:#}")),
+                },
+            );
+            return;
+        }
+        let frame = wire::encode(&Message::LabelsPull { run });
+        for site in 0..n_sites {
+            let stream = self.links[site].stream.as_ref().expect("ensured above");
+            if let Err(e) = tcp::send_frame(stream, &frame) {
+                self.site_down(site, &format!("{e:#}"));
+                self.send_client(
+                    client,
+                    &Message::Reject {
+                        run,
+                        msg: reject_text(&format!("site {site} died during the pull: {e:#}")),
+                    },
+                );
+                return;
+            }
+        }
+        self.pulls.push(Pull { run, client, outstanding: n_sites });
+    }
+
+    /// A `SITELABELS` frame came back: forward it to the oldest pull of
+    /// that run (each pull triggered exactly one frame per site, so
+    /// counting completes the bookkeeping).
+    fn forward_pull(&mut self, run: u32, frame: &[u8]) {
+        let Some(pos) = self.pulls.iter().position(|p| p.run == run) else { return };
+        let client = self.pulls[pos].client;
+        self.send_client_raw(client, frame);
+        // send_client_raw may have retired the client (and its pulls)
+        if let Some(pos) = self.pulls.iter().position(|p| p.run == run && p.client == client) {
+            self.pulls[pos].outstanding -= 1;
+            if self.pulls[pos].outstanding == 0 {
+                self.pulls.remove(pos);
+            }
+        }
+    }
+
+    /// A site refused a pull (label cache evicted): the client gets the
+    /// refusal and the pull dies.
+    fn refuse_pull(&mut self, run: u32, why: &str) {
+        let Some(pos) = self.pulls.iter().position(|p| p.run == run) else { return };
+        let pull = self.pulls.remove(pos);
+        self.send_client(
+            pull.client,
+            &Message::Reject { run, msg: reject_text(&format!("site refused the pull: {why}")) },
+        );
+    }
+}
+
+// ─── client side ───────────────────────────────────────────────────────────
+
+/// A client of a job-serving leader (`dsc submit`, tests, drills): typed
+/// submit / await / pull over one [`TcpClient`] connection. Out-of-order
+/// frames (a `JOBDONE` for an earlier job arriving while waiting for a
+/// `JOBACCEPT`) are buffered, so one connection can carry several jobs.
+pub struct JobClient {
+    conn: TcpClient,
+    pending: std::cell::RefCell<VecDeque<Message>>,
+}
+
+impl JobClient {
+    /// Dial a leader's `--serve` address.
+    pub fn connect(addr: &str, timeouts: &TcpTimeouts) -> Result<JobClient> {
+        Ok(JobClient {
+            conn: tcp::connect_client(addr, timeouts)?,
+            pending: std::cell::RefCell::new(VecDeque::new()),
+        })
+    }
+
+    /// Submit a job; returns the assigned run id.
+    pub fn submit(&self, spec: &JobSpec) -> Result<u32> {
+        self.conn.send(&wire::encode(&Message::Submit(spec.clone())))?;
+        match self.next_where(|m| {
+            matches!(m, Message::JobAccept { .. } | Message::Reject { run: 0, .. })
+        })? {
+            Message::JobAccept { run } => Ok(run),
+            Message::Reject { msg, .. } => bail!("leader rejected the job: {msg}"),
+            _ => unreachable!("filtered above"),
+        }
+    }
+
+    /// Block until the run finishes; a failed run is an `Err` carrying the
+    /// leader's reason. Idle waiting is legal for however long the job
+    /// takes — the transport never times out between frames.
+    pub fn await_done(&self, run: u32) -> Result<JobReport> {
+        match self.next_where(|m| {
+            matches!(m, Message::JobDone { run: r, .. } | Message::Reject { run: r, .. } if *r == run)
+        })? {
+            Message::JobDone { report, .. } => Ok(report),
+            Message::Reject { msg, .. } => bail!("run {run} failed: {msg}"),
+            _ => unreachable!("filtered above"),
+        }
+    }
+
+    /// Pull the populated labels of a completed run through the leader:
+    /// one `(site, labels)` per site, site order. `n_sites` comes from the
+    /// run's [`JobReport::per_site`] length.
+    pub fn pull_labels(&self, run: u32, n_sites: usize) -> Result<Vec<(usize, Vec<u16>)>> {
+        self.conn.send(&wire::encode(&Message::LabelsPull { run }))?;
+        let mut out: Vec<(usize, Vec<u16>)> = Vec::with_capacity(n_sites);
+        while out.len() < n_sites {
+            match self.next_where(|m| {
+                matches!(m, Message::SiteLabels { run: r, .. } | Message::Reject { run: r, .. } if *r == run)
+            })? {
+                Message::SiteLabels { site, labels, .. } => out.push((site as usize, labels)),
+                Message::Reject { msg, .. } => bail!("label pull for run {run} refused: {msg}"),
+                _ => unreachable!("filtered above"),
+            }
+        }
+        out.sort_by_key(|&(site, _)| site);
+        Ok(out)
+    }
+
+    /// Next frame matching `want`, buffering everything else.
+    fn next_where(&self, want: impl Fn(&Message) -> bool) -> Result<Message> {
+        let mut pending = self.pending.borrow_mut();
+        if let Some(pos) = pending.iter().position(|m| want(m)) {
+            return Ok(pending.remove(pos).expect("position exists"));
+        }
+        loop {
+            let msg = match self.conn.recv()? {
+                Some(frame) => wire::decode(&frame)?,
+                None => bail!("leader closed the connection"),
+            };
+            if want(&msg) {
+                return Ok(msg);
+            }
+            pending.push_back(msg);
+        }
+    }
+}

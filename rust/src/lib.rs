@@ -19,7 +19,10 @@
 //! 3. codeword labels are populated back so each site recovers the label of
 //!    every original point ([`coordinator`] drives the leader half, [`site`]
 //!    the worker half — over in-process channels by default, or over real
-//!    TCP between `dsc leader` / `dsc site` daemon processes).
+//!    TCP between `dsc leader` / `dsc site` daemon processes; a long-lived
+//!    `dsc leader --serve` job server pipelines many client-submitted runs
+//!    over persistent site sessions, the "heavy traffic" serving mode
+//!    ([`coordinator::server`])).
 //!
 //! The crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
 //! stack: the Gaussian-affinity and k-means-assignment hot spots are Pallas

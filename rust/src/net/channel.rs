@@ -68,8 +68,11 @@ impl SiteTransport for ChannelSite {
         self.to_leader.send((self.site_id, frame)).context("leader channel closed")
     }
 
-    fn recv(&self) -> Result<Vec<u8>> {
-        self.from_leader.recv().context("leader channel closed")
+    fn recv_opt(&self) -> Result<Option<Vec<u8>>> {
+        // A dropped leader handle is the channel star's clean close: there
+        // is no mid-frame state to tear (frames move whole), so hangup is
+        // always at a frame boundary.
+        Ok(self.from_leader.recv().ok())
     }
 }
 

@@ -37,7 +37,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 pub use transport::{LeaderTransport, SiteTransport};
-pub use wire::Message;
+pub use wire::{JobReport, JobSpec, LinkReport, Message};
 
 /// Bandwidth/latency model of one site↔leader link.
 #[derive(Clone, Copy, Debug)]
@@ -77,6 +77,31 @@ pub struct DirStats {
 pub struct LinkStats {
     pub to_leader: DirStats,
     pub to_site: DirStats,
+}
+
+impl LinkStats {
+    /// Count one frame of `bytes` in the given direction under `spec`'s
+    /// transfer-time model (the job server accounts per *run* with this;
+    /// [`LeaderNet`] keeps per-*connection* counters the same way).
+    pub fn account(&mut self, to_leader: bool, bytes: usize, spec: &LinkSpec) {
+        let dir = if to_leader { &mut self.to_leader } else { &mut self.to_site };
+        dir.frames += 1;
+        dir.bytes += bytes as u64;
+        dir.sim_time += spec.transfer_time(bytes as u64);
+    }
+
+    /// The wire form used inside [`wire::JobReport`] (nanosecond
+    /// truncation to u64 is safe for ~585 years of simulated transfer).
+    pub fn to_wire(&self) -> LinkReport {
+        LinkReport {
+            up_frames: self.to_leader.frames,
+            up_bytes: self.to_leader.bytes,
+            up_sim_ns: self.to_leader.sim_time.as_nanos() as u64,
+            down_frames: self.to_site.frames,
+            down_bytes: self.to_site.bytes,
+            down_sim_ns: self.to_site.sim_time.as_nanos() as u64,
+        }
+    }
 }
 
 /// Aggregated communication report for a pipeline run.
@@ -135,12 +160,7 @@ impl LeaderNet {
     }
 
     fn account(&self, site: usize, to_leader: bool, bytes: usize) {
-        let mut stats = self.stats.lock().unwrap();
-        let link = &mut stats[site];
-        let dir = if to_leader { &mut link.to_leader } else { &mut link.to_site };
-        dir.frames += 1;
-        dir.bytes += bytes as u64;
-        dir.sim_time += self.spec.transfer_time(bytes as u64);
+        self.stats.lock().unwrap()[site].account(to_leader, bytes, &self.spec);
     }
 
     /// Send `msg` to `site`.
@@ -198,6 +218,16 @@ impl SiteNet {
     /// Blocking receive of the next leader message.
     pub fn recv(&self) -> Result<Message> {
         wire::decode(&self.transport.recv()?)
+    }
+
+    /// Receive where a clean close is `Ok(None)` — the multi-run session
+    /// loop ([`crate::site::session`]) ends this way when the leader shuts
+    /// down between runs.
+    pub fn recv_opt(&self) -> Result<Option<Message>> {
+        match self.transport.recv_opt()? {
+            Some(frame) => Ok(Some(wire::decode(&frame)?)),
+            None => Ok(None),
+        }
     }
 }
 

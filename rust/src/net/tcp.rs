@@ -28,11 +28,12 @@ use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::transport::{LeaderTransport, SiteTransport};
+use crate::rng::Rng;
 
 /// Version of the wire protocol this build speaks. Bumped on any breaking
 /// change to the handshake, framing, or message layouts (`docs/PROTOCOL.md`
@@ -47,6 +48,13 @@ pub const MAX_FRAME_BYTES: u32 = 1 << 30;
 const MAGIC: [u8; 4] = *b"DSCP";
 const ROLE_LEADER: u8 = 0;
 const ROLE_SITE: u8 = 1;
+/// A client submitting jobs to a leader's `--serve` socket.
+const ROLE_CLIENT: u8 = 2;
+/// A job-serving leader opening a persistent multi-run site session
+/// (run-scoped frames, tags 7+). Distinct from [`ROLE_LEADER`] so the site
+/// knows *at handshake time* whether to speak the one-shot or the session
+/// dialect — and so a pre-session build fails loudly on the role check.
+const ROLE_JOB_LEADER: u8 = 3;
 const HELLO_LEN: usize = 11;
 
 /// Socket deadlines for the TCP backend (config `[net]`).
@@ -56,11 +64,22 @@ pub struct TcpTimeouts {
     pub connect: Duration,
     /// Mid-frame read stall / write stall deadline. Zero disables.
     pub io: Duration,
+    /// Site-side dead-leader deadline: how long an *accepted* connection
+    /// may sit with no frame at all before the site presumes the leader
+    /// silently died (power loss, partition) and drops the link to
+    /// re-listen. Zero disables — idle is then legal forever, the
+    /// pre-`max_idle_secs` behavior. Size it above the longest legitimate
+    /// central phase (see `docs/DEPLOY.md`).
+    pub max_idle: Duration,
 }
 
 impl Default for TcpTimeouts {
     fn default() -> Self {
-        TcpTimeouts { connect: Duration::from_secs(10), io: Duration::from_secs(30) }
+        TcpTimeouts {
+            connect: Duration::from_secs(10),
+            io: Duration::from_secs(30),
+            max_idle: Duration::ZERO,
+        }
     }
 }
 
@@ -131,8 +150,13 @@ fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
 /// Read one length-prefixed frame. `Ok(None)` means the peer closed the
 /// connection cleanly at a frame boundary. Read timeouts while *waiting*
 /// for a frame to start are swallowed (idle links are legal — see the
-/// module docs); a timeout or EOF *inside* a frame is an error.
-fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+/// module docs) unless `idle_limit` is set and exceeded, in which case the
+/// silent peer is presumed dead; a timeout or EOF *inside* a frame is
+/// always an error. The idle clock needs the socket read timeout to fire
+/// periodically — callers that pass a limit must arrange one no larger
+/// than the limit (see [`SiteListener::accept`]).
+fn read_frame<R: Read>(r: &mut R, idle_limit: Option<Duration>) -> Result<Option<Vec<u8>>> {
+    let waiting_since = Instant::now();
     let mut len_buf = [0u8; 4];
     let mut got = 0usize;
     while got < 4 {
@@ -141,7 +165,19 @@ fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
             Ok(0) => bail!("connection closed mid-frame (torn length prefix)"),
             Ok(n) => got += n,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
-            Err(e) if is_wait(&e) && got == 0 => {} // idle between frames
+            Err(e) if is_wait(&e) && got == 0 => {
+                // idle between frames: legal, unless an idle deadline says
+                // the silent peer must be dead by now
+                if let Some(limit) = idle_limit {
+                    if waiting_since.elapsed() >= limit {
+                        bail!(
+                            "link idle for {:.0?} (max_idle exceeded — presuming the \
+                             peer silently died)",
+                            waiting_since.elapsed()
+                        );
+                    }
+                }
+            }
             Err(e) if is_wait(&e) => bail!("peer stalled mid-frame: {e}"),
             Err(e) => return Err(e).context("read frame length"),
         }
@@ -180,28 +216,20 @@ pub struct TcpLeader {
     readers: Vec<thread::JoinHandle<()>>,
 }
 
-/// Dial every site in `addrs` (index = site id), run the handshake, and
-/// assemble the leader transport. Fails fast on the first unreachable or
-/// incompatible site.
+/// Dial every site in `addrs` (index = site id), run the handshakes, and
+/// assemble the leader transport. Dials run **concurrently** (one thread
+/// per site), so the worst-case connect phase is one `connect` timeout,
+/// not `S` of them; any unreachable or incompatible site fails the whole
+/// call, naming every site that failed.
 pub fn connect_sites(addrs: &[String], timeouts: &TcpTimeouts) -> Result<TcpLeader> {
-    if addrs.is_empty() {
-        bail!("no site addresses to connect to");
-    }
-    let mut conns = Vec::with_capacity(addrs.len());
-    for (site_id, addr) in addrs.iter().enumerate() {
-        let stream = connect_one(addr, timeouts)
-            .with_context(|| format!("connect to site {site_id} at {addr}"))?;
-        let stream = leader_handshake(stream, site_id as u32, timeouts)
-            .with_context(|| format!("handshake with site {site_id} at {addr}"))?;
-        conns.push(stream);
-    }
+    let conns = dial_sites(addrs, timeouts, false)?;
     let (tx, rx) = mpsc::channel();
     let mut readers = Vec::with_capacity(conns.len());
     for (site_id, stream) in conns.iter().enumerate() {
         let mut rd = stream.try_clone().context("clone site socket for reading")?;
         let tx = tx.clone();
         readers.push(thread::spawn(move || loop {
-            match read_frame(&mut rd) {
+            match read_frame(&mut rd, None) {
                 Ok(Some(frame)) => {
                     if tx.send((site_id, Ok(frame))).is_err() {
                         return; // leader gone; stop reading
@@ -221,6 +249,76 @@ pub fn connect_sites(addrs: &[String], timeouts: &TcpTimeouts) -> Result<TcpLead
     Ok(TcpLeader { conns, rx, readers })
 }
 
+/// Dial + handshake every site concurrently. `session = true` opens
+/// persistent multi-run sessions (the job-leader role-3 hello, run-scoped
+/// frames); `false` opens classic one-shot connections. The job server
+/// uses this directly so it can own per-connection reader threads feeding
+/// its reactor mailbox.
+pub fn dial_sites(
+    addrs: &[String],
+    timeouts: &TcpTimeouts,
+    session: bool,
+) -> Result<Vec<TcpStream>> {
+    if addrs.is_empty() {
+        bail!("no site addresses to connect to");
+    }
+    let results: Vec<Result<TcpStream>> = thread::scope(|scope| {
+        let handles: Vec<_> = addrs
+            .iter()
+            .enumerate()
+            .map(|(site_id, addr)| {
+                scope.spawn(move || connect_site(addr, site_id as u32, timeouts, session))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("dial thread panicked"))))
+            .collect()
+    });
+    let mut conns = Vec::with_capacity(addrs.len());
+    let mut failures = Vec::new();
+    for (site_id, res) in results.into_iter().enumerate() {
+        match res {
+            Ok(s) => conns.push(s),
+            Err(e) => failures.push(format!("site {site_id}: {e:#}")),
+        }
+    }
+    if !failures.is_empty() {
+        bail!("{}", failures.join("; "));
+    }
+    Ok(conns)
+}
+
+/// Dial one site and run the leader-side handshake (the single-link piece
+/// of [`dial_sites`]; the job server also calls it to re-dial a site whose
+/// link died between runs).
+pub fn connect_site(
+    addr: &str,
+    site_id: u32,
+    timeouts: &TcpTimeouts,
+    session: bool,
+) -> Result<TcpStream> {
+    let stream = connect_one(addr, timeouts)
+        .with_context(|| format!("connect to site {site_id} at {addr}"))?;
+    leader_handshake(stream, site_id, timeouts, session)
+        .with_context(|| format!("handshake with site {site_id} at {addr}"))
+}
+
+/// Write one length-prefixed frame to a raw stream (job-server send path;
+/// `TcpStream` writes are not buffered, so interleaved writers per stream
+/// must be externally serialized — the reactor is single-threaded).
+pub fn send_frame(stream: &TcpStream, frame: &[u8]) -> Result<()> {
+    let mut w = stream;
+    write_frame(&mut w, frame)
+}
+
+/// Read one length-prefixed frame from a raw stream; `Ok(None)` is a clean
+/// close at a frame boundary (job-server reader-thread path).
+pub fn recv_frame(stream: &TcpStream) -> Result<Option<Vec<u8>>> {
+    let mut r = stream;
+    read_frame(&mut r, None)
+}
+
 fn connect_one(addr: &str, t: &TcpTimeouts) -> Result<TcpStream> {
     let sa: SocketAddr = addr
         .to_socket_addrs()
@@ -236,10 +334,16 @@ fn connect_one(addr: &str, t: &TcpTimeouts) -> Result<TcpStream> {
     Ok(stream)
 }
 
-fn leader_handshake(mut stream: TcpStream, site_id: u32, t: &TcpTimeouts) -> Result<TcpStream> {
+fn leader_handshake(
+    mut stream: TcpStream,
+    site_id: u32,
+    t: &TcpTimeouts,
+    session: bool,
+) -> Result<TcpStream> {
+    let role = if session { ROLE_JOB_LEADER } else { ROLE_LEADER };
     stream.set_read_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
     stream.set_write_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
-    stream.write_all(&encode_hello(ROLE_LEADER, site_id)).context("send hello")?;
+    stream.write_all(&encode_hello(role, site_id)).context("send hello")?;
     let hello = read_hello(&mut stream)?;
     check_version(hello.version)?;
     if hello.role != ROLE_SITE {
@@ -317,7 +421,9 @@ impl SiteListener {
     }
 
     /// Block for the next leader connection and complete the handshake.
-    /// The returned transport carries the site id the leader assigned.
+    /// The returned transport carries the site id the leader assigned and
+    /// which dialect the leader opened ([`TcpSite::session_mode`]): a
+    /// classic one-shot run, or a persistent multi-run session.
     pub fn accept(&self, timeouts: &TcpTimeouts) -> Result<TcpSite> {
         let (mut stream, peer) = self.listener.accept().context("accept")?;
         stream.set_nodelay(true).ok();
@@ -329,12 +435,28 @@ impl SiteListener {
         // still learns which version this site speaks.
         stream.write_all(&encode_hello(ROLE_SITE, hello.site_id)).context("send hello")?;
         check_version(hello.version)?;
-        if hello.role != ROLE_LEADER {
-            bail!("peer {peer} presented role {} (expected the leader)", hello.role);
-        }
-        stream.set_read_timeout(opt_timeout(timeouts.io)).context("set io timeout")?;
+        let session = match hello.role {
+            ROLE_LEADER => false,
+            ROLE_JOB_LEADER => true,
+            ROLE_CLIENT => bail!(
+                "peer {peer} is a dsc client — jobs are submitted to a leader's \
+                 --serve address, not to a site"
+            ),
+            other => bail!("peer {peer} presented role {other} (expected a leader)"),
+        };
+        // The idle clock (dead-leader detection) only advances when the
+        // blocking read wakes up, so the socket read timeout must be no
+        // larger than the idle limit; mid-frame stalls are then bounded by
+        // min(io, max_idle) instead of io alone — documented in DEPLOY.md.
+        let idle_limit = opt_timeout(timeouts.max_idle);
+        let read_timeout = match (opt_timeout(timeouts.io), idle_limit) {
+            (io, None) => io,
+            (None, Some(idle)) => Some(idle),
+            (Some(io), Some(idle)) => Some(io.min(idle)),
+        };
+        stream.set_read_timeout(read_timeout).context("set io timeout")?;
         stream.set_write_timeout(opt_timeout(timeouts.io)).context("set io timeout")?;
-        Ok(TcpSite { stream, site_id: hello.site_id as usize })
+        Ok(TcpSite { stream, site_id: hello.site_id as usize, session, idle_limit })
     }
 }
 
@@ -342,6 +464,18 @@ impl SiteListener {
 pub struct TcpSite {
     stream: TcpStream,
     site_id: usize,
+    session: bool,
+    idle_limit: Option<Duration>,
+}
+
+impl TcpSite {
+    /// True when the leader opened a persistent multi-run session
+    /// (`ROLE_JOB_LEADER` hello) rather than a classic one-shot run — the
+    /// daemon picks [`crate::site::session`] vs [`crate::site::serve`]
+    /// accordingly.
+    pub fn session_mode(&self) -> bool {
+        self.session
+    }
 }
 
 impl SiteTransport for TcpSite {
@@ -354,12 +488,115 @@ impl SiteTransport for TcpSite {
         write_frame(&mut w, &frame).context("send to leader")
     }
 
-    fn recv(&self) -> Result<Vec<u8>> {
+    fn recv_opt(&self) -> Result<Option<Vec<u8>>> {
         let mut r = &self.stream;
-        match read_frame(&mut r)? {
-            Some(frame) => Ok(frame),
-            None => bail!("leader closed the connection"),
-        }
+        read_frame(&mut r, self.idle_limit)
+    }
+}
+
+// ─── client side (job submission plane) ────────────────────────────────────
+
+/// A client's handshaken connection to a job-serving leader
+/// (`dsc submit` → `dsc leader --serve`). Moves raw frames; the typed
+/// submit/await protocol lives in [`crate::coordinator::server::JobClient`].
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+/// Dial a leader's `--serve` address and run the client handshake
+/// (role 2). The `site_id` hello field is unused on this plane and sent as
+/// zero; the leader echoes it.
+pub fn connect_client(addr: &str, t: &TcpTimeouts) -> Result<TcpClient> {
+    let mut stream =
+        connect_one(addr, t).with_context(|| format!("connect to leader at {addr}"))?;
+    stream.set_read_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    stream.set_write_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    stream.write_all(&encode_hello(ROLE_CLIENT, 0)).context("send hello")?;
+    let hello = read_hello(&mut stream)?;
+    check_version(hello.version)?;
+    if hello.role != ROLE_LEADER {
+        bail!("peer at {addr} answered with role {} (expected a leader)", hello.role);
+    }
+    stream.set_read_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    stream.set_write_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    Ok(TcpClient { stream })
+}
+
+impl TcpClient {
+    pub fn send(&self, frame: &[u8]) -> Result<()> {
+        let mut w = &self.stream;
+        write_frame(&mut w, frame).context("send to leader")
+    }
+
+    /// Next frame from the leader; `Ok(None)` = leader closed. Waiting out
+    /// a long-running job is idle time, which never errors here.
+    pub fn recv(&self) -> Result<Option<Vec<u8>>> {
+        let mut r = &self.stream;
+        read_frame(&mut r, None)
+    }
+}
+
+/// Leader side: accept + handshake one client connection on the job
+/// socket. Returns the raw stream (the job server splits it into a reader
+/// thread and a reactor-owned writer).
+pub fn accept_client(listener: &TcpListener, t: &TcpTimeouts) -> Result<TcpStream> {
+    let (mut stream, peer) = listener.accept().context("accept client")?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    stream.set_write_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    let hello = read_hello(&mut stream).with_context(|| format!("handshake with {peer}"))?;
+    // Same reply-before-validate convention as the site listener.
+    stream.write_all(&encode_hello(ROLE_LEADER, hello.site_id)).context("send hello")?;
+    check_version(hello.version)?;
+    if hello.role != ROLE_CLIENT {
+        bail!("peer {peer} presented role {} (expected a client)", hello.role);
+    }
+    stream.set_read_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    stream.set_write_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    Ok(stream)
+}
+
+// ─── backoff ───────────────────────────────────────────────────────────────
+
+/// Capped exponential backoff with deterministic jitter for daemon retry
+/// loops (`dsc site`'s accept loop): doubling keeps a persistently failing
+/// accept from hot-spinning, the cap bounds recovery latency once the
+/// fault clears, and the seeded jitter keeps a *fleet* of sites that
+/// restarted together from retrying in lockstep and sync-storming the
+/// leader — callers salt the seed with something site-local (the listen
+/// address) so streams decorrelate while staying reproducible.
+#[derive(Debug)]
+pub struct Backoff {
+    rng: Rng,
+    attempt: u32,
+    base: Duration,
+    cap: Duration,
+}
+
+impl Backoff {
+    /// Daemon defaults: 100 ms doubling to a 10 s cap.
+    pub fn new(seed: u64) -> Backoff {
+        Backoff::with_limits(seed, Duration::from_millis(100), Duration::from_secs(10))
+    }
+
+    pub fn with_limits(seed: u64, base: Duration, cap: Duration) -> Backoff {
+        Backoff { rng: Rng::new(seed), attempt: 0, base, cap }
+    }
+
+    /// Delay before the next retry: `min(cap, base·2^attempt)`, jittered
+    /// to 75–125% (so the cap is approximate by design — identical caps
+    /// must not re-synchronize a fleet).
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.attempt.min(30); // 2^30 · base saturates far past any cap
+        self.attempt = self.attempt.saturating_add(1);
+        let raw = self.base.saturating_mul(1u32 << exp).min(self.cap);
+        let jitter = 0.75 + 0.5 * self.rng.f64();
+        Duration::from_secs_f64(raw.as_secs_f64() * jitter)
+    }
+
+    /// A successful cycle resets the schedule to the base delay.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
     }
 }
 
@@ -373,10 +610,10 @@ mod tests {
         write_frame(&mut wire, b"hello frames").unwrap();
         write_frame(&mut wire, b"").unwrap();
         let mut r = &wire[..];
-        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello frames".to_vec());
-        assert_eq!(read_frame(&mut r).unwrap().unwrap(), Vec::<u8>::new());
+        assert_eq!(read_frame(&mut r, None).unwrap().unwrap(), b"hello frames".to_vec());
+        assert_eq!(read_frame(&mut r, None).unwrap().unwrap(), Vec::<u8>::new());
         // clean EOF at a frame boundary
-        assert!(read_frame(&mut r).unwrap().is_none());
+        assert!(read_frame(&mut r, None).unwrap().is_none());
     }
 
     #[test]
@@ -386,7 +623,7 @@ mod tests {
         // torn inside the payload and inside the length prefix
         for cut in [2usize, 4, 7] {
             let mut r = &wire[..cut];
-            assert!(read_frame(&mut r).is_err(), "cut at {cut} must error");
+            assert!(read_frame(&mut r, None).is_err(), "cut at {cut} must error");
         }
     }
 
@@ -394,7 +631,7 @@ mod tests {
     fn hostile_length_prefix_rejected() {
         let wire = u32::MAX.to_le_bytes();
         let mut r = &wire[..];
-        let err = read_frame(&mut r).unwrap_err();
+        let err = read_frame(&mut r, None).unwrap_err();
         assert!(err.to_string().contains("cap"), "{err}");
     }
 
@@ -403,8 +640,48 @@ mod tests {
         let mut wire = 1000u32.to_le_bytes().to_vec();
         wire.extend_from_slice(&[7u8; 10]); // only 10 of 1000 bytes present
         let mut r = &wire[..];
-        let err = read_frame(&mut r).unwrap_err();
+        let err = read_frame(&mut r, None).unwrap_err();
         assert!(err.to_string().contains("mid-frame"), "{err}");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_capped() {
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut b =
+                Backoff::with_limits(seed, Duration::from_millis(100), Duration::from_secs(2));
+            (0..10).map(|_| b.next_delay()).collect()
+        };
+        // same seed ⇒ identical schedule; different seed ⇒ different jitter
+        assert_eq!(schedule(7), schedule(7));
+        assert_ne!(schedule(7), schedule(8));
+
+        let delays = schedule(7);
+        // every delay is within the 75–125% jitter band of min(cap, 100ms·2^i)
+        for (i, d) in delays.iter().enumerate() {
+            let raw = Duration::from_millis(100 * (1u64 << i.min(6)))
+                .min(Duration::from_secs(2))
+                .as_secs_f64();
+            let f = d.as_secs_f64();
+            assert!(f >= raw * 0.75 - 1e-9 && f <= raw * 1.25 + 1e-9, "delay {i} = {f}s");
+        }
+        // the tail has hit the cap: everything in the cap's jitter band
+        let cap = 2.0;
+        for d in &delays[6..] {
+            assert!(d.as_secs_f64() >= cap * 0.75 && d.as_secs_f64() <= cap * 1.25);
+        }
+    }
+
+    #[test]
+    fn backoff_reset_restarts_the_schedule() {
+        let mut b = Backoff::new(5);
+        let first = b.next_delay();
+        let second = b.next_delay();
+        assert!(second > first / 2, "doubling should dominate jitter here");
+        b.reset();
+        let after_reset = b.next_delay();
+        // back to the base band: ≤ 125 ms, far under the second step's ≥150 ms
+        assert!(after_reset <= Duration::from_millis(125), "{after_reset:?}");
+        assert!(second >= Duration::from_millis(150), "{second:?}");
     }
 
     #[test]

@@ -19,7 +19,7 @@
 
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Leader-side frame mover for a star of `n_sites` links.
 ///
@@ -50,8 +50,21 @@ pub trait SiteTransport: Send {
     /// [`LeaderTransport::send`]).
     fn send(&self, frame: Vec<u8>) -> Result<()>;
 
-    /// Next frame from the leader; blocks until one arrives or the link
-    /// dies. Sites wait out the leader's long central phase here, so idle
-    /// time alone must not error — only a dead or misbehaving link.
-    fn recv(&self) -> Result<Vec<u8>>;
+    /// Next frame from the leader; `Ok(None)` means the leader closed the
+    /// link *cleanly at a frame boundary* (a multi-run session ending).
+    /// Blocks until a frame arrives, the link dies, or — where the backend
+    /// supports an idle deadline — the link has been silent too long. Sites
+    /// wait out the leader's long central phase here, so ordinary idle time
+    /// must not error.
+    fn recv_opt(&self) -> Result<Option<Vec<u8>>>;
+
+    /// Next frame from the leader, where a clean close is also an error —
+    /// the single-run protocol ([`crate::site::serve`]) is mid-run for its
+    /// whole lifetime, so *any* close is premature.
+    fn recv(&self) -> Result<Vec<u8>> {
+        match self.recv_opt()? {
+            Some(frame) => Ok(frame),
+            None => bail!("leader closed the connection"),
+        }
+    }
 }

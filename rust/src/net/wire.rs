@@ -16,6 +16,26 @@
 //!                max_iters:u32 tol:f64 seed:u64    (leader → site, work order)
 //! ```
 //!
+//! Tags 7–11 are the **run-scoped** family used by the multi-run job
+//! server (`dsc leader --serve`): the same payloads as tags 1/2/5/6 with a
+//! leading `run:u32`, so frames of interleaved runs can share one site
+//! link. Tags 12–17 are the client/job-control plane (`dsc submit`):
+//!
+//! ```text
+//! RUNSTART(7)    := run:u32                        (leader → site, open a run)
+//! RSITEINFO(8)   := run:u32 SITEINFO payload       (site → leader)
+//! RDMLREQ(9)     := run:u32 DMLREQ payload         (leader → site)
+//! RCODEBOOK(10)  := run:u32 CODEBOOK payload       (site → leader)
+//! RLABELS(11)    := run:u32 LABELS payload         (leader → site)
+//! LABELSPULL(12) := run:u32                        (client → leader → site)
+//! SITELABELS(13) := run:u32 site:u32 n:u32 labels:[u16; n]
+//!                                                  (site → leader → client)
+//! SUBMIT(14)     := job spec                       (client → leader)
+//! JOBACCEPT(15)  := run:u32                        (leader → client)
+//! JOBDONE(16)    := run:u32 job report             (leader → client)
+//! REJECT(17)     := run:u32 len:u32 msg:[u8; len]  (leader → client / site → leader)
+//! ```
+//!
 //! Codebook frames are exactly what the paper transmits (codewords + group
 //! sizes); label frames are the populated memberships coming back. SiteInfo
 //! and DmlRequest are the small control handshake that lets the leader size
@@ -26,6 +46,7 @@
 use anyhow::{bail, Result};
 
 use crate::dml::DmlKind;
+use crate::spectral::{Algo, Bandwidth, GraphKind};
 
 /// A protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -44,6 +65,99 @@ pub enum Message {
     /// Leader → site: the DML work order (transform, budget, Lloyd knobs,
     /// the site's forked seed).
     DmlRequest { site: u32, dml: DmlKind, target_codes: u32, max_iters: u32, tol: f64, seed: u64 },
+    /// Leader → site (multi-run session): open run `run` on this link. The
+    /// site answers with a [`Message::RunSiteInfo`] for that run.
+    RunStart { run: u32 },
+    /// Run-scoped [`Message::SiteInfo`].
+    RunSiteInfo { run: u32, site: u32, n_points: u64, dim: u32 },
+    /// Run-scoped [`Message::DmlRequest`].
+    RunDmlRequest {
+        run: u32,
+        site: u32,
+        dml: DmlKind,
+        target_codes: u32,
+        max_iters: u32,
+        tol: f64,
+        seed: u64,
+    },
+    /// Run-scoped [`Message::Codebook`].
+    RunCodebook { run: u32, site: u32, dim: u32, codewords: Vec<f32>, weights: Vec<u32> },
+    /// Run-scoped [`Message::Labels`].
+    RunLabels { run: u32, site: u32, labels: Vec<u16> },
+    /// Client → leader (and leader → site): request the populated per-point
+    /// labels of a completed run (`[leader] allow_label_pull` gates it).
+    LabelsPull { run: u32 },
+    /// Site → leader (and leader → client): one site's populated per-point
+    /// labels for a completed run, in local shard row order.
+    SiteLabels { run: u32, site: u32, labels: Vec<u16> },
+    /// Client → leader: enqueue a clustering job.
+    Submit(JobSpec),
+    /// Leader → client: the job was queued under this run id.
+    JobAccept { run: u32 },
+    /// Leader → client: the run finished; summary + per-link counters.
+    JobDone { run: u32, report: JobReport },
+    /// Leader → client or site → leader: a request was refused or a run
+    /// failed; `msg` says why. `run = 0` when no run was assigned.
+    Reject { run: u32, msg: String },
+}
+
+/// Everything a client must specify for the leader to run one clustering
+/// job: the central-step knobs of `PipelineConfig` that are a property of
+/// the *job* rather than of the serving deployment (backend, link model and
+/// timeouts stay leader-side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// DML transform every site runs.
+    pub dml: DmlKind,
+    /// Total codeword budget, split ∝ site size.
+    pub total_codes: u32,
+    /// Output clusters.
+    pub k_clusters: u32,
+    /// Lloyd sweep cap for K-means DML.
+    pub kmeans_max_iters: u32,
+    /// Relative centroid-shift tolerance for K-means DML.
+    pub kmeans_tol: f64,
+    /// Master seed; per-site seeds fork from it (run-id independent, so a
+    /// job's result is a function of (data, spec) alone).
+    pub seed: u64,
+    /// Central spectral algorithm.
+    pub algo: Algo,
+    /// Affinity-graph storage for the central step.
+    pub graph: GraphKind,
+    /// Weight affinity by codeword group sizes.
+    pub weighted: bool,
+    /// Affinity bandwidth policy.
+    pub bandwidth: Bandwidth,
+}
+
+/// Per-link counters inside a [`JobReport`] (the wire form of one
+/// [`super::LinkStats`], directions from the leader's viewpoint).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LinkReport {
+    pub up_frames: u64,
+    pub up_bytes: u64,
+    pub up_sim_ns: u64,
+    pub down_frames: u64,
+    pub down_bytes: u64,
+    pub down_sim_ns: u64,
+}
+
+/// What the leader tells the submitting client when a run completes:
+/// everything a leader can know (accuracy lives with whoever holds ground
+/// truth) plus the per-link byte counters for exactly this run's frames.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobReport {
+    /// Codewords the central step clustered.
+    pub n_codes: u32,
+    /// Bandwidth used by the central step.
+    pub sigma: f64,
+    /// Central spectral time, nanoseconds.
+    pub central_ns: u64,
+    /// Run-started → labels-delivered wall time, nanoseconds (queue wait
+    /// excluded).
+    pub wall_ns: u64,
+    /// Per-site link counters, site-id order.
+    pub per_site: Vec<LinkReport>,
 }
 
 const TAG_CODEBOOK: u8 = 1;
@@ -52,6 +166,24 @@ const TAG_SIGMA: u8 = 3;
 const TAG_ACK: u8 = 4;
 const TAG_SITEINFO: u8 = 5;
 const TAG_DMLREQ: u8 = 6;
+const TAG_RUNSTART: u8 = 7;
+const TAG_RUN_SITEINFO: u8 = 8;
+const TAG_RUN_DMLREQ: u8 = 9;
+const TAG_RUN_CODEBOOK: u8 = 10;
+const TAG_RUN_LABELS: u8 = 11;
+const TAG_LABELS_PULL: u8 = 12;
+const TAG_SITE_LABELS: u8 = 13;
+const TAG_SUBMIT: u8 = 14;
+const TAG_JOB_ACCEPT: u8 = 15;
+const TAG_JOB_DONE: u8 = 16;
+const TAG_REJECT: u8 = 17;
+
+/// Refusal messages are short human-readable sentences; anything larger is
+/// hostile.
+const MAX_REJECT_MSG: u32 = 64 * 1024;
+/// More sites than this in one report is hostile (the star tops out far
+/// lower).
+const MAX_REPORT_SITES: u32 = 100_000;
 
 struct Writer {
     buf: Vec<u8>,
@@ -144,6 +276,72 @@ fn dml_from_code(code: u8) -> Result<DmlKind> {
     })
 }
 
+/// Wire encoding of an [`Algo`] (SUBMIT `algo` field).
+fn algo_code(a: Algo) -> u8 {
+    match a {
+        Algo::RecursiveNcut => 0,
+        Algo::Njw => 1,
+    }
+}
+
+fn algo_from_code(code: u8) -> Result<Algo> {
+    Ok(match code {
+        0 => Algo::RecursiveNcut,
+        1 => Algo::Njw,
+        other => bail!("unknown algo code {other}"),
+    })
+}
+
+/// Wire encoding of a [`GraphKind`] as `(graph:u8, knn_k:u32)` — dense
+/// carries `knn_k = 0`.
+fn graph_code(g: GraphKind) -> (u8, u32) {
+    match g {
+        GraphKind::Dense => (0, 0),
+        GraphKind::Knn { k } => (1, k as u32),
+    }
+}
+
+fn graph_from_code(code: u8, knn_k: u32) -> Result<GraphKind> {
+    Ok(match (code, knn_k) {
+        (0, 0) => GraphKind::Dense,
+        (0, k) => bail!("dense graph with knn_k = {k}"),
+        (1, 0) => bail!("knn graph needs knn_k ≥ 1"),
+        (1, k) => GraphKind::Knn { k: k as usize },
+        (other, _) => bail!("unknown graph code {other}"),
+    })
+}
+
+/// Wire encoding of a [`Bandwidth`] policy as `(policy:u8, value:f64)`.
+fn bandwidth_code(b: Bandwidth) -> (u8, f64) {
+    match b {
+        Bandwidth::Fixed(s) => (0, s),
+        Bandwidth::MedianScale(s) => (1, s),
+        Bandwidth::EigengapSearch { k } => (2, k as f64),
+    }
+}
+
+fn bandwidth_from_code(code: u8, value: f64) -> Result<Bandwidth> {
+    Ok(match code {
+        0 => Bandwidth::Fixed(value),
+        1 => Bandwidth::MedianScale(value),
+        2 => {
+            if !(value >= 0.0 && value <= u32::MAX as f64 && value.fract() == 0.0) {
+                bail!("eigengap bandwidth k must be a small non-negative integer, got {value}");
+            }
+            Bandwidth::EigengapSearch { k: value as usize }
+        }
+        other => bail!("unknown bandwidth policy code {other}"),
+    })
+}
+
+fn bool_from_code(code: u8, what: &str) -> Result<bool> {
+    match code {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => bail!("{what} flag must be 0 or 1, got {other}"),
+    }
+}
+
 /// Serialize a message to a frame.
 pub fn encode(msg: &Message) -> Vec<u8> {
     let mut w = Writer::new();
@@ -189,6 +387,109 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.f64(*tol);
             w.u64(*seed);
         }
+        Message::RunStart { run } => {
+            w.u8(TAG_RUNSTART);
+            w.u32(*run);
+        }
+        Message::RunSiteInfo { run, site, n_points, dim } => {
+            w.u8(TAG_RUN_SITEINFO);
+            w.u32(*run);
+            w.u32(*site);
+            w.u64(*n_points);
+            w.u32(*dim);
+        }
+        Message::RunDmlRequest { run, site, dml, target_codes, max_iters, tol, seed } => {
+            w.u8(TAG_RUN_DMLREQ);
+            w.u32(*run);
+            w.u32(*site);
+            w.u8(dml_code(*dml));
+            w.u32(*target_codes);
+            w.u32(*max_iters);
+            w.f64(*tol);
+            w.u64(*seed);
+        }
+        Message::RunCodebook { run, site, dim, codewords, weights } => {
+            assert_eq!(codewords.len(), (*dim as usize) * weights.len());
+            w.u8(TAG_RUN_CODEBOOK);
+            w.u32(*run);
+            w.u32(*site);
+            w.u32(*dim);
+            w.u32(weights.len() as u32);
+            for v in codewords {
+                w.f32(*v);
+            }
+            for v in weights {
+                w.u32(*v);
+            }
+        }
+        Message::RunLabels { run, site, labels } => {
+            w.u8(TAG_RUN_LABELS);
+            w.u32(*run);
+            w.u32(*site);
+            w.u32(labels.len() as u32);
+            for v in labels {
+                w.u16(*v);
+            }
+        }
+        Message::LabelsPull { run } => {
+            w.u8(TAG_LABELS_PULL);
+            w.u32(*run);
+        }
+        Message::SiteLabels { run, site, labels } => {
+            w.u8(TAG_SITE_LABELS);
+            w.u32(*run);
+            w.u32(*site);
+            w.u32(labels.len() as u32);
+            for v in labels {
+                w.u16(*v);
+            }
+        }
+        Message::Submit(spec) => {
+            w.u8(TAG_SUBMIT);
+            w.u8(dml_code(spec.dml));
+            w.u32(spec.total_codes);
+            w.u32(spec.k_clusters);
+            w.u32(spec.kmeans_max_iters);
+            w.f64(spec.kmeans_tol);
+            w.u64(spec.seed);
+            w.u8(algo_code(spec.algo));
+            let (g, knn_k) = graph_code(spec.graph);
+            w.u8(g);
+            w.u32(knn_k);
+            w.u8(spec.weighted as u8);
+            let (bw, value) = bandwidth_code(spec.bandwidth);
+            w.u8(bw);
+            w.f64(value);
+        }
+        Message::JobAccept { run } => {
+            w.u8(TAG_JOB_ACCEPT);
+            w.u32(*run);
+        }
+        Message::JobDone { run, report } => {
+            w.u8(TAG_JOB_DONE);
+            w.u32(*run);
+            w.u32(report.n_codes);
+            w.f64(report.sigma);
+            w.u64(report.central_ns);
+            w.u64(report.wall_ns);
+            w.u32(report.per_site.len() as u32);
+            for l in &report.per_site {
+                w.u64(l.up_frames);
+                w.u64(l.up_bytes);
+                w.u64(l.up_sim_ns);
+                w.u64(l.down_frames);
+                w.u64(l.down_bytes);
+                w.u64(l.down_sim_ns);
+            }
+        }
+        Message::Reject { run, msg } => {
+            let bytes = msg.as_bytes();
+            assert!(bytes.len() as u64 <= MAX_REJECT_MSG as u64);
+            w.u8(TAG_REJECT);
+            w.u32(*run);
+            w.u32(bytes.len() as u32);
+            w.buf.extend_from_slice(bytes);
+        }
     }
     w.buf
 }
@@ -205,33 +506,11 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
     let tag = r.u8()?;
     let msg = match tag {
         TAG_CODEBOOK => {
-            let site = r.u32()?;
-            let dim = r.u32()?;
-            let n = r.u32()?;
-            let total = (dim as u64) * (n as u64);
-            if total > 100_000_000 {
-                bail!("codebook too large: {n} codes × {dim} dims");
-            }
-            let mut codewords = Vec::with_capacity((total as usize).min(r.remaining() / 4));
-            for _ in 0..total {
-                codewords.push(r.f32()?);
-            }
-            let mut weights = Vec::with_capacity((n as usize).min(r.remaining() / 4));
-            for _ in 0..n {
-                weights.push(r.u32()?);
-            }
+            let (site, dim, codewords, weights) = decode_codebook_body(&mut r)?;
             Message::Codebook { site, dim, codewords, weights }
         }
         TAG_LABELS => {
-            let site = r.u32()?;
-            let n = r.u32()?;
-            if n > 500_000_000 {
-                bail!("label frame too large: {n}");
-            }
-            let mut labels = Vec::with_capacity((n as usize).min(r.remaining() / 2));
-            for _ in 0..n {
-                labels.push(r.u16()?);
-            }
+            let (site, labels) = decode_labels_body(&mut r)?;
             Message::Labels { site, labels }
         }
         TAG_SIGMA => Message::Sigma(r.f32()?),
@@ -251,12 +530,153 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             let seed = r.u64()?;
             Message::DmlRequest { site, dml, target_codes, max_iters, tol, seed }
         }
+        TAG_RUNSTART => Message::RunStart { run: r.u32()? },
+        TAG_RUN_SITEINFO => {
+            let run = r.u32()?;
+            let site = r.u32()?;
+            let n_points = r.u64()?;
+            let dim = r.u32()?;
+            Message::RunSiteInfo { run, site, n_points, dim }
+        }
+        TAG_RUN_DMLREQ => {
+            let run = r.u32()?;
+            let site = r.u32()?;
+            let dml = dml_from_code(r.u8()?)?;
+            let target_codes = r.u32()?;
+            let max_iters = r.u32()?;
+            let tol = r.f64()?;
+            let seed = r.u64()?;
+            Message::RunDmlRequest { run, site, dml, target_codes, max_iters, tol, seed }
+        }
+        TAG_RUN_CODEBOOK => {
+            let run = r.u32()?;
+            let (site, dim, codewords, weights) = decode_codebook_body(&mut r)?;
+            Message::RunCodebook { run, site, dim, codewords, weights }
+        }
+        TAG_RUN_LABELS => {
+            let run = r.u32()?;
+            let (site, labels) = decode_labels_body(&mut r)?;
+            Message::RunLabels { run, site, labels }
+        }
+        TAG_LABELS_PULL => Message::LabelsPull { run: r.u32()? },
+        TAG_SITE_LABELS => {
+            let run = r.u32()?;
+            let (site, labels) = decode_labels_body(&mut r)?;
+            Message::SiteLabels { run, site, labels }
+        }
+        TAG_SUBMIT => {
+            let dml = dml_from_code(r.u8()?)?;
+            let total_codes = r.u32()?;
+            let k_clusters = r.u32()?;
+            let kmeans_max_iters = r.u32()?;
+            let kmeans_tol = r.f64()?;
+            let seed = r.u64()?;
+            let algo = algo_from_code(r.u8()?)?;
+            let gcode = r.u8()?;
+            let knn_k = r.u32()?;
+            let graph = graph_from_code(gcode, knn_k)?;
+            let weighted = bool_from_code(r.u8()?, "weighted")?;
+            let bw = r.u8()?;
+            let value = r.f64()?;
+            let bandwidth = bandwidth_from_code(bw, value)?;
+            Message::Submit(JobSpec {
+                dml,
+                total_codes,
+                k_clusters,
+                kmeans_max_iters,
+                kmeans_tol,
+                seed,
+                algo,
+                graph,
+                weighted,
+                bandwidth,
+            })
+        }
+        TAG_JOB_ACCEPT => Message::JobAccept { run: r.u32()? },
+        TAG_JOB_DONE => {
+            let run = r.u32()?;
+            let n_codes = r.u32()?;
+            let sigma = r.f64()?;
+            let central_ns = r.u64()?;
+            let wall_ns = r.u64()?;
+            let n_sites = r.u32()?;
+            if n_sites > MAX_REPORT_SITES {
+                bail!("job report claims {n_sites} sites");
+            }
+            // 48 bytes per link entry; capacity bounded by what is present
+            let mut per_site =
+                Vec::with_capacity((n_sites as usize).min(r.remaining() / 48));
+            for _ in 0..n_sites {
+                per_site.push(LinkReport {
+                    up_frames: r.u64()?,
+                    up_bytes: r.u64()?,
+                    up_sim_ns: r.u64()?,
+                    down_frames: r.u64()?,
+                    down_bytes: r.u64()?,
+                    down_sim_ns: r.u64()?,
+                });
+            }
+            Message::JobDone {
+                run,
+                report: JobReport { n_codes, sigma, central_ns, wall_ns, per_site },
+            }
+        }
+        TAG_REJECT => {
+            let run = r.u32()?;
+            let len = r.u32()?;
+            if len > MAX_REJECT_MSG {
+                bail!("reject message of {len} bytes");
+            }
+            let bytes = r.take(len as usize)?;
+            let msg = match std::str::from_utf8(bytes) {
+                Ok(s) => s.to_string(),
+                Err(_) => bail!("reject message is not UTF-8"),
+            };
+            Message::Reject { run, msg }
+        }
         t => bail!("unknown message tag {t}"),
     };
     if !r.done() {
         bail!("trailing bytes after frame");
     }
     Ok(msg)
+}
+
+/// Shared body of CODEBOOK(1) and RCODEBOOK(10): `site dim n codewords
+/// weights`, with the element cap and remaining-bytes-bounded allocation
+/// every decoder must apply.
+fn decode_codebook_body(r: &mut Reader) -> Result<(u32, u32, Vec<f32>, Vec<u32>)> {
+    let site = r.u32()?;
+    let dim = r.u32()?;
+    let n = r.u32()?;
+    let total = (dim as u64) * (n as u64);
+    if total > 100_000_000 {
+        bail!("codebook too large: {n} codes × {dim} dims");
+    }
+    let mut codewords = Vec::with_capacity((total as usize).min(r.remaining() / 4));
+    for _ in 0..total {
+        codewords.push(r.f32()?);
+    }
+    let mut weights = Vec::with_capacity((n as usize).min(r.remaining() / 4));
+    for _ in 0..n {
+        weights.push(r.u32()?);
+    }
+    Ok((site, dim, codewords, weights))
+}
+
+/// Shared body of LABELS(2), RLABELS(11) and SITELABELS(13): `site n
+/// labels`, same caps and allocation bounds.
+fn decode_labels_body(r: &mut Reader) -> Result<(u32, Vec<u16>)> {
+    let site = r.u32()?;
+    let n = r.u32()?;
+    if n > 500_000_000 {
+        bail!("label frame too large: {n}");
+    }
+    let mut labels = Vec::with_capacity((n as usize).min(r.remaining() / 2));
+    for _ in 0..n {
+        labels.push(r.u16()?);
+    }
+    Ok((site, labels))
 }
 
 #[cfg(test)]
@@ -369,6 +789,190 @@ mod tests {
         let mut frame = vec![1u8];
         frame.extend_from_slice(&0u32.to_le_bytes());
         frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&frame).is_err());
+    }
+
+    fn sample_spec() -> JobSpec {
+        JobSpec {
+            dml: DmlKind::RpTree,
+            total_codes: 300,
+            k_clusters: 4,
+            kmeans_max_iters: 30,
+            kmeans_tol: 1e-6,
+            seed: 0xFEED_F00D,
+            algo: Algo::Njw,
+            graph: GraphKind::Knn { k: 12 },
+            weighted: true,
+            bandwidth: Bandwidth::MedianScale(0.5),
+        }
+    }
+
+    #[test]
+    fn run_scoped_frames_roundtrip() {
+        let msgs = vec![
+            Message::RunStart { run: 9 },
+            Message::RunSiteInfo { run: 9, site: 1, n_points: 40_000, dim: 10 },
+            Message::RunDmlRequest {
+                run: 9,
+                site: 1,
+                dml: DmlKind::KMeans,
+                target_codes: 150,
+                max_iters: 30,
+                tol: 1e-6,
+                seed: 77,
+            },
+            Message::RunCodebook {
+                run: 9,
+                site: 1,
+                dim: 2,
+                codewords: vec![0.5, -1.5, 2.0, 3.25],
+                weights: vec![3, 4],
+            },
+            Message::RunLabels { run: 9, site: 1, labels: vec![0, 2, 1] },
+            Message::LabelsPull { run: 9 },
+            Message::SiteLabels { run: 9, site: 1, labels: vec![1, 1, 0, 3] },
+        ];
+        for msg in msgs {
+            assert_eq!(decode(&encode(&msg)).unwrap(), msg, "{msg:?}");
+        }
+        // a run-scoped frame is its classic twin plus the 4-byte run id
+        let classic = encode(&Message::SiteInfo { site: 1, n_points: 40_000, dim: 10 });
+        let scoped =
+            encode(&Message::RunSiteInfo { run: 9, site: 1, n_points: 40_000, dim: 10 });
+        assert_eq!(scoped.len(), classic.len() + 4);
+    }
+
+    #[test]
+    fn submit_roundtrip_all_enums() {
+        for dml in [DmlKind::KMeans, DmlKind::RpTree, DmlKind::RandomSample] {
+            for algo in [Algo::RecursiveNcut, Algo::Njw] {
+                for graph in [GraphKind::Dense, GraphKind::Knn { k: 32 }] {
+                    for bandwidth in [
+                        Bandwidth::Fixed(2.5),
+                        Bandwidth::MedianScale(0.5),
+                        Bandwidth::EigengapSearch { k: 4 },
+                    ] {
+                        let spec =
+                            JobSpec { dml, algo, graph, bandwidth, ..sample_spec() };
+                        let msg = Message::Submit(spec);
+                        assert_eq!(decode(&encode(&msg)).unwrap(), msg);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn submit_rejects_bad_codes() {
+        let frame = encode(&Message::Submit(sample_spec()));
+        // algo code lives right after dml(1)+codes(4)+k(4)+iters(4)+tol(8)+seed(8)
+        let algo_off = 1 + 1 + 4 + 4 + 4 + 8 + 8;
+        for (off, bad) in [
+            (1usize, 99u8),            // dml
+            (algo_off, 7),             // algo
+            (algo_off + 1, 9),         // graph kind
+            (algo_off + 6, 2),         // weighted flag
+            (algo_off + 7, 5),         // bandwidth policy
+        ] {
+            let mut f = frame.clone();
+            f[off] = bad;
+            assert!(decode(&f).is_err(), "byte {off} = {bad} must fail");
+        }
+        // dense graph with a nonzero knn_k is contradictory
+        let mut f = frame.clone();
+        f[algo_off + 1] = 0; // dense, but knn_k stays 12
+        assert!(decode(&f).is_err());
+    }
+
+    #[test]
+    fn job_control_roundtrip() {
+        assert_eq!(
+            decode(&encode(&Message::JobAccept { run: 3 })).unwrap(),
+            Message::JobAccept { run: 3 }
+        );
+        let done = Message::JobDone {
+            run: 3,
+            report: JobReport {
+                n_codes: 300,
+                sigma: 1.25,
+                central_ns: 1_000_000,
+                wall_ns: 2_000_000,
+                per_site: vec![
+                    LinkReport {
+                        up_frames: 2,
+                        up_bytes: 1234,
+                        up_sim_ns: 99,
+                        down_frames: 3,
+                        down_bytes: 567,
+                        down_sim_ns: 11,
+                    },
+                    LinkReport::default(),
+                ],
+            },
+        };
+        assert_eq!(decode(&encode(&done)).unwrap(), done);
+        let rej = Message::Reject { run: 0, msg: "queue full (depth 32)".into() };
+        assert_eq!(decode(&encode(&rej)).unwrap(), rej);
+    }
+
+    #[test]
+    fn new_frames_reject_truncation() {
+        let frames = [
+            encode(&Message::RunStart { run: 1 }),
+            encode(&Message::RunSiteInfo { run: 1, site: 0, n_points: 5, dim: 2 }),
+            encode(&Message::RunLabels { run: 1, site: 0, labels: vec![1, 2] }),
+            encode(&Message::SiteLabels { run: 1, site: 0, labels: vec![1] }),
+            encode(&Message::Submit(sample_spec())),
+            encode(&Message::JobDone {
+                run: 1,
+                report: JobReport {
+                    n_codes: 4,
+                    sigma: 1.0,
+                    central_ns: 5,
+                    wall_ns: 6,
+                    per_site: vec![LinkReport::default()],
+                },
+            }),
+            encode(&Message::Reject { run: 1, msg: "x".into() }),
+        ];
+        for frame in frames {
+            for cut in 0..frame.len() {
+                assert!(decode(&frame[..cut]).is_err(), "cut at {cut} should fail");
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_new_frames_do_not_overallocate() {
+        // RCODEBOOK with a huge declared count fails on truncation cheaply
+        let mut frame = vec![10u8]; // TAG_RUN_CODEBOOK
+        frame.extend_from_slice(&1u32.to_le_bytes()); // run
+        frame.extend_from_slice(&0u32.to_le_bytes()); // site
+        frame.extend_from_slice(&1u32.to_le_bytes()); // dim
+        frame.extend_from_slice(&99_000_000u32.to_le_bytes()); // n
+        assert!(decode(&frame).is_err());
+
+        // SITELABELS with a hostile count, same shape
+        let mut frame = vec![13u8]; // TAG_SITE_LABELS
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        frame.extend_from_slice(&400_000_000u32.to_le_bytes());
+        assert!(decode(&frame).is_err());
+
+        // JOBDONE claiming an absurd site count is rejected outright
+        let mut frame = vec![16u8]; // TAG_JOB_DONE
+        frame.extend_from_slice(&1u32.to_le_bytes()); // run
+        frame.extend_from_slice(&4u32.to_le_bytes()); // n_codes
+        frame.extend_from_slice(&1.0f64.to_le_bytes()); // sigma
+        frame.extend_from_slice(&0u64.to_le_bytes()); // central_ns
+        frame.extend_from_slice(&0u64.to_le_bytes()); // wall_ns
+        frame.extend_from_slice(&u32::MAX.to_le_bytes()); // n_sites
+        assert!(decode(&frame).is_err());
+
+        // REJECT with a hostile message length
+        let mut frame = vec![17u8];
+        frame.extend_from_slice(&0u32.to_le_bytes());
         frame.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&frame).is_err());
     }

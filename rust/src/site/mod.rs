@@ -1,17 +1,23 @@
 //! The site half of the distributed protocol — one worker, any transport.
 //!
-//! [`serve`] is the *entire* behavior of a site for one pipeline run:
-//! register the local shard, receive the DML work order, compress, ship the
-//! codebook, await codeword labels, populate per-point labels. The same
-//! function drives
+//! [`serve`] is the *entire* behavior of a site for one classic pipeline
+//! run: register the local shard, receive the DML work order, compress,
+//! ship the codebook, await codeword labels, populate per-point labels.
+//! The same function drives
 //!
 //! * the in-process site threads that [`crate::coordinator::run_pipeline`]
 //!   spawns over the channel transport, and
-//! * the `dsc site` daemon process serving a real leader over TCP
+//! * the `dsc site` daemon process serving a one-shot leader over TCP
 //!   ([`crate::net::tcp::SiteListener`]).
 //!
-//! That symmetry is what makes the backends byte-identical: there is one
-//! protocol implementation, not a simulated one and a real one.
+//! [`session`] is the multi-run sibling: one persistent connection from a
+//! job-serving leader (`dsc leader --serve`), run-scoped frames, many
+//! runs — possibly interleaved — served without reloading anything (the
+//! shard is loaded once per daemon, each run reuses it). The per-run
+//! behavior is identical to [`serve`] step for step; only the framing and
+//! the lifetime differ. That symmetry is what makes the drivers
+//! result-identical: there is one protocol implementation, not a
+//! simulated one and a real one.
 //!
 //! Per-phase costs are **thread CPU time**: sites are independent machines
 //! in the paper's model, so when they are simulated as threads of one
@@ -19,6 +25,7 @@
 //! leak into the max-over-sites elapsed model. See
 //! [`crate::metrics::thread_cpu_time`].
 
+use std::collections::HashMap;
 use std::path::Path;
 use std::time::Duration;
 
@@ -80,11 +87,7 @@ pub fn serve(net: &SiteNet, data: &Dataset) -> Result<ServeOutcome> {
     };
 
     // 3. Compress locally; only the codebook leaves the site.
-    let t0 = crate::metrics::thread_cpu_time();
-    let cb = dml::apply(data, &params);
-    let dml_time = crate::metrics::thread_cpu_time().saturating_sub(t0);
-    debug_assert!(cb.validate(data.len()).is_ok());
-    let distortion = cb.distortion(data);
+    let (cb, dml_time, distortion) = run_dml(data, &params);
 
     net.send(&Message::Codebook {
         site: site_id as u32,
@@ -111,10 +114,7 @@ pub fn serve(net: &SiteNet, data: &Dataset) -> Result<ServeOutcome> {
 
     // 5. Populate: every local point inherits its codeword's label via the
     //    assignment table that never left this site.
-    let t1 = crate::metrics::thread_cpu_time();
-    let labels: Vec<u16> =
-        cb.assign.iter().map(|&a| code_labels[a as usize]).collect();
-    let populate_time = crate::metrics::thread_cpu_time().saturating_sub(t1);
+    let (labels, populate_time) = populate(&cb, &code_labels);
 
     Ok(ServeOutcome {
         site_id,
@@ -125,6 +125,191 @@ pub fn serve(net: &SiteNet, data: &Dataset) -> Result<ServeOutcome> {
         distortion,
         labels,
     })
+}
+
+/// The DML phase, timed in thread CPU: compress the shard under `params`.
+fn run_dml(data: &Dataset, params: &DmlParams) -> (dml::Codebook, Duration, f64) {
+    let t0 = crate::metrics::thread_cpu_time();
+    let cb = dml::apply(data, params);
+    let dml_time = crate::metrics::thread_cpu_time().saturating_sub(t0);
+    debug_assert!(cb.validate(data.len()).is_ok());
+    let distortion = cb.distortion(data);
+    (cb, dml_time, distortion)
+}
+
+/// The populate phase, timed in thread CPU: every local point inherits its
+/// codeword's label via the assignment table that never left this site.
+fn populate(cb: &dml::Codebook, code_labels: &[u16]) -> (Vec<u16>, Duration) {
+    let t1 = crate::metrics::thread_cpu_time();
+    let labels: Vec<u16> = cb.assign.iter().map(|&a| code_labels[a as usize]).collect();
+    let populate_time = crate::metrics::thread_cpu_time().saturating_sub(t1);
+    (labels, populate_time)
+}
+
+/// What one completed run of a [`session`] produced (per-run callback
+/// payload — the daemon prints a `SERVED` line from it).
+#[derive(Clone, Debug)]
+pub struct RunServed {
+    pub run: u32,
+    pub n_points: usize,
+    pub n_codes: usize,
+    pub dml_time: Duration,
+    pub distortion: f64,
+}
+
+/// How a [`session`] ended.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionOutcome {
+    /// Runs fully served (labels populated).
+    pub runs_served: usize,
+    /// Runs still mid-flight when the leader went away (their state is
+    /// discarded with the connection).
+    pub aborted_runs: usize,
+}
+
+/// Populated labels kept for `LABELSPULL` after a run completes. Oldest
+/// evicted first; a pull for an evicted run gets a `REJECT` (the leader
+/// forwards it to the asking client).
+const LABEL_CACHE_RUNS: usize = 8;
+
+/// Most runs a leader may hold open on one session before the site calls
+/// it hostile — a sanity backstop far above any real `[leader] max_jobs`.
+const MAX_OPEN_RUNS: usize = 64;
+
+/// Serve a persistent multi-run session to a job-serving leader: the site
+/// side of the run-scoped dialect. Each `RUNSTART` is answered with a
+/// registration, each work order compresses the *same cached shard* (the
+/// daemon loads it once at startup — never per run or per connection), and
+/// each label frame completes one run, invoking `on_served`. Frames of
+/// different runs may interleave arbitrarily; per-run state is keyed by
+/// run id. Returns when the leader closes the link cleanly; errors on
+/// protocol violations or a dead/idle-past-deadline link, either of which
+/// sends the daemon back to its accept loop.
+pub fn session(
+    net: &SiteNet,
+    data: &Dataset,
+    out_path: Option<&Path>,
+    mut on_served: impl FnMut(&RunServed),
+) -> Result<SessionOutcome> {
+    struct OpenRun {
+        cb: dml::Codebook,
+        dml_time: Duration,
+        distortion: f64,
+    }
+
+    let site_id = net.site_id();
+    // Runs whose labels have not come back yet, by run id: the assignment
+    // table must survive until populate time.
+    let mut open: HashMap<u32, OpenRun> = HashMap::new();
+    // Completed runs' populated labels, newest last, for label pulls.
+    let mut cache: Vec<(u32, Vec<u16>)> = Vec::new();
+    let mut outcome = SessionOutcome::default();
+
+    loop {
+        let msg = match net.recv_opt().context("await next session frame")? {
+            Some(msg) => msg,
+            None => {
+                outcome.aborted_runs = open.len();
+                return Ok(outcome); // leader closed cleanly between frames
+            }
+        };
+        match msg {
+            Message::RunStart { run } => {
+                // Register this shard for the new run; budgets come back
+                // with the work order.
+                net.send(&Message::RunSiteInfo {
+                    run,
+                    site: site_id as u32,
+                    n_points: data.len() as u64,
+                    dim: data.dim as u32,
+                })
+                .context("send run registration")?;
+            }
+            Message::RunDmlRequest { run, site, dml, target_codes, max_iters, tol, seed } => {
+                if site as usize != site_id {
+                    bail!("dml request for run {run} addressed to site {site}, this is site {site_id}");
+                }
+                if open.contains_key(&run) {
+                    bail!("two dml requests for run {run}");
+                }
+                if open.len() >= MAX_OPEN_RUNS {
+                    bail!("leader holds {MAX_OPEN_RUNS} runs open on one session");
+                }
+                let params = DmlParams {
+                    kind: dml,
+                    target_codes: target_codes as usize,
+                    max_iters: max_iters as usize,
+                    tol,
+                    seed,
+                };
+                let (cb, dml_time, distortion) = run_dml(data, &params);
+                net.send(&Message::RunCodebook {
+                    run,
+                    site: site_id as u32,
+                    dim: cb.dim as u32,
+                    codewords: cb.codewords.clone(),
+                    weights: cb.weights.clone(),
+                })
+                .context("send run codebook")?;
+                // Stash per-run context for the populate phase (and the
+                // DML cost, reported via the completion callback).
+                cache.retain(|(r, _)| *r != run); // a reused id replaces its labels
+                open.insert(run, OpenRun { cb, dml_time, distortion });
+            }
+            Message::RunLabels { run, site, labels } => {
+                if site as usize != site_id {
+                    bail!("label frame for run {run} addressed to site {site}, this is site {site_id}");
+                }
+                let Some(o) = open.remove(&run) else {
+                    bail!("labels for run {run}, which is not open on this session");
+                };
+                if labels.len() != o.cb.n_codes() {
+                    bail!(
+                        "leader sent {} labels for {} codewords (run {run})",
+                        labels.len(),
+                        o.cb.n_codes()
+                    );
+                }
+                let (point_labels, _populate_time) = populate(&o.cb, &labels);
+                if let Some(path) = out_path {
+                    write_labels(path, &point_labels)?;
+                }
+                on_served(&RunServed {
+                    run,
+                    n_points: data.len(),
+                    n_codes: o.cb.n_codes(),
+                    dml_time: o.dml_time,
+                    distortion: o.distortion,
+                });
+                cache.push((run, point_labels));
+                if cache.len() > LABEL_CACHE_RUNS {
+                    cache.remove(0);
+                }
+                outcome.runs_served += 1;
+            }
+            Message::LabelsPull { run } => {
+                match cache.iter().find(|(r, _)| *r == run) {
+                    Some((_, labels)) => net
+                        .send(&Message::SiteLabels {
+                            run,
+                            site: site_id as u32,
+                            labels: labels.clone(),
+                        })
+                        .context("send pulled labels")?,
+                    None => net
+                        .send(&Message::Reject {
+                            run,
+                            msg: format!(
+                                "run {run} is not in this site's label cache \
+                                 (keeps the last {LABEL_CACHE_RUNS} runs)"
+                            ),
+                        })
+                        .context("send pull refusal")?,
+                }
+            }
+            other => bail!("unexpected message in a multi-run session: {other:?}"),
+        }
+    }
 }
 
 /// Persist populated labels for the `dsc site --out` daemon flag: one
@@ -248,6 +433,109 @@ mod tests {
                 },
             )
             .unwrap();
+        assert!(worker.join().unwrap().is_err());
+    }
+
+    /// Drive one site session by hand: two runs opened back to back, work
+    /// orders and labels delivered in *swapped* order (run-scoped frames
+    /// make the interleaving legal), then label pulls for a cached and an
+    /// unknown run.
+    #[test]
+    fn session_serves_interleaved_runs_and_pulls() {
+        let ds = gmm::paper_mixture_2d(300, 9);
+        let (leader, mut sites) = star(1, LinkSpec::default());
+        let site_net = sites.remove(0);
+
+        let worker = std::thread::spawn({
+            let ds = ds.clone();
+            move || {
+                let mut served = Vec::new();
+                let out = session(&site_net, &ds, None, |r| served.push(r.run)).unwrap();
+                (out, served)
+            }
+        });
+
+        leader.send(0, &Message::RunStart { run: 1 }).unwrap();
+        leader.send(0, &Message::RunStart { run: 2 }).unwrap();
+        for expect in [1u32, 2] {
+            match leader.recv().unwrap().1 {
+                Message::RunSiteInfo { run, site, n_points, dim } => {
+                    assert_eq!((run, site, n_points, dim), (expect, 0, 300, 2));
+                }
+                other => panic!("expected a registration, got {other:?}"),
+            }
+        }
+
+        // run 2's work order first: per-run state must be keyed by run id
+        for run in [2u32, 1] {
+            leader
+                .send(
+                    0,
+                    &Message::RunDmlRequest {
+                        run,
+                        site: 0,
+                        dml: DmlKind::KMeans,
+                        target_codes: 8,
+                        max_iters: 10,
+                        tol: 1e-6,
+                        seed: run as u64,
+                    },
+                )
+                .unwrap();
+        }
+        let mut n_codes = std::collections::HashMap::new();
+        for _ in 0..2 {
+            match leader.recv().unwrap().1 {
+                Message::RunCodebook { run, site, dim, codewords, weights } => {
+                    assert_eq!((site, dim), (0, 2));
+                    assert_eq!(codewords.len(), 2 * weights.len());
+                    n_codes.insert(run, weights.len());
+                }
+                other => panic!("expected a codebook, got {other:?}"),
+            }
+        }
+        assert_eq!(n_codes.get(&1), Some(&8));
+        assert_eq!(n_codes.get(&2), Some(&8));
+
+        leader.send(0, &Message::RunLabels { run: 1, site: 0, labels: vec![7; 8] }).unwrap();
+        leader.send(0, &Message::RunLabels { run: 2, site: 0, labels: vec![3; 8] }).unwrap();
+
+        // pull a completed run's populated labels through the link
+        leader.send(0, &Message::LabelsPull { run: 1 }).unwrap();
+        match leader.recv().unwrap().1 {
+            Message::SiteLabels { run, site, labels } => {
+                assert_eq!((run, site), (1, 0));
+                assert_eq!(labels, vec![7u16; 300]);
+            }
+            other => panic!("expected pulled labels, got {other:?}"),
+        }
+        // an unknown run is refused, not fatal
+        leader.send(0, &Message::LabelsPull { run: 99 }).unwrap();
+        match leader.recv().unwrap().1 {
+            Message::Reject { run, msg } => {
+                assert_eq!(run, 99);
+                assert!(msg.contains("label cache"), "{msg}");
+            }
+            other => panic!("expected a refusal, got {other:?}"),
+        }
+
+        drop(leader); // clean close: the session ends without error
+        let (out, served) = worker.join().unwrap();
+        assert_eq!(out.runs_served, 2);
+        assert_eq!(out.aborted_runs, 0);
+        assert_eq!(served, vec![1, 2]);
+    }
+
+    #[test]
+    fn session_rejects_labels_for_unopened_run() {
+        let ds = gmm::paper_mixture_2d(50, 11);
+        let (leader, mut sites) = star(1, LinkSpec::default());
+        let site_net = sites.remove(0);
+        let worker = std::thread::spawn({
+            let ds = ds.clone();
+            move || session(&site_net, &ds, None, |_| {})
+        });
+        leader.send(0, &Message::RunLabels { run: 5, site: 0, labels: vec![1] }).unwrap();
         assert!(worker.join().unwrap().is_err());
     }
 

@@ -178,7 +178,7 @@ impl super::Graph for Affinity {
 }
 
 /// Bandwidth (σ) selection policy.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Bandwidth {
     /// Use σ as given.
     Fixed(f64),

@@ -1,0 +1,375 @@
+//! The job-serving leader, end to end over real loopback sockets: two
+//! concurrent jobs interleaving over shared persistent site sessions, with
+//! per-run byte/label parity against (a) the same jobs run sequentially
+//! through the server and (b) the in-process channel pipeline; a mid-run
+//! site death failing only the affected run while the queue drains onto a
+//! re-dialed link; and the label-pull policy gate.
+//! (`examples/tcp_cluster.rs` re-proves the headline flow with separate OS
+//! processes.)
+
+use std::time::Duration;
+
+use dsc::config::PipelineConfig;
+use dsc::coordinator::server::{serve_jobs, JobClient, ServerOpts, ServerStats};
+use dsc::coordinator::{run_pipeline, spec_from_config};
+use dsc::data::gmm;
+use dsc::data::scenario::{self, Scenario, SitePart};
+use dsc::net::tcp::{SiteListener, TcpTimeouts};
+use dsc::net::{JobReport, JobSpec, Message, SiteNet};
+use dsc::spectral::Bandwidth;
+
+fn timeouts() -> TcpTimeouts {
+    TcpTimeouts {
+        connect: Duration::from_secs(5),
+        io: Duration::from_secs(10),
+        max_idle: Duration::ZERO,
+    }
+}
+
+fn workload() -> (dsc::data::Dataset, Vec<SitePart>) {
+    let ds = gmm::paper_mixture_10d(2_000, 0.1, 21);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 21);
+    (ds, parts)
+}
+
+fn cfg_with_seed(seed: u64) -> PipelineConfig {
+    PipelineConfig {
+        total_codes: 64,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// One job's result as a client saw it: the leader's report plus the
+/// pulled per-point labels assembled into the global vector.
+struct ServedJob {
+    report: JobReport,
+    labels: Vec<u16>,
+}
+
+fn pull_global(
+    client: &JobClient,
+    run: u32,
+    report: &JobReport,
+    parts: &[SitePart],
+) -> Vec<u16> {
+    let per_site = client.pull_labels(run, report.per_site.len()).unwrap();
+    let total: usize = parts.iter().map(|p| p.data.len()).sum();
+    let mut labels = vec![0u16; total];
+    for (site, ls) in per_site {
+        let part = &parts[site];
+        assert_eq!(ls.len(), part.data.len(), "site {site} label count");
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            labels[g as usize] = ls[local];
+        }
+    }
+    labels
+}
+
+/// Stand up persistent site sessions + a job server, push `specs` through
+/// it (all submitted up front when `concurrent`, else strictly one after
+/// another), pull every run's labels, and tear everything down cleanly.
+fn serve_and_submit(
+    parts: &[SitePart],
+    specs: &[JobSpec],
+    concurrent: bool,
+) -> (Vec<ServedJob>, ServerStats) {
+    let mut addrs = Vec::new();
+    let mut site_threads = Vec::new();
+    for part in parts {
+        let listener = SiteListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        let data = part.data.clone();
+        site_threads.push(std::thread::spawn(move || {
+            let conn = listener.accept(&timeouts()).unwrap();
+            assert!(conn.session_mode(), "a job server must open sessions");
+            let net = SiteNet::over(Box::new(conn));
+            // one persistent session serves every run of this test
+            dsc::site::session(&net, &data, None, |_| {}).unwrap()
+        }));
+    }
+
+    let mut cfg = cfg_with_seed(0);
+    cfg.net.sites = addrs;
+    let opts = ServerOpts {
+        max_jobs: if concurrent { specs.len().max(1) } else { 1 },
+        queue_depth: 8,
+        allow_label_pull: true,
+        client_limit: Some(specs.len() as u64),
+    };
+    let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let leader_addr = client_listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn({
+        let cfg = cfg.clone();
+        let opts = opts.clone();
+        move || serve_jobs(&cfg, &opts, client_listener).unwrap()
+    });
+
+    let mut served = Vec::new();
+    if concurrent {
+        // every job in flight before any result is awaited
+        let clients: Vec<JobClient> =
+            specs.iter().map(|_| JobClient::connect(&leader_addr, &timeouts()).unwrap()).collect();
+        let runs: Vec<u32> =
+            clients.iter().zip(specs).map(|(c, s)| c.submit(s).unwrap()).collect();
+        for (client, run) in clients.iter().zip(&runs) {
+            let report = client.await_done(*run).unwrap();
+            let labels = pull_global(client, *run, &report, parts);
+            served.push(ServedJob { report, labels });
+        }
+        drop(clients); // disconnect: lets the server reach its client_limit
+    } else {
+        for spec in specs {
+            let client = JobClient::connect(&leader_addr, &timeouts()).unwrap();
+            let run = client.submit(spec).unwrap();
+            let report = client.await_done(run).unwrap();
+            let labels = pull_global(&client, run, &report, parts);
+            served.push(ServedJob { report, labels });
+        }
+    }
+    let stats = server.join().unwrap();
+    // the server dropping its site links ends every session cleanly
+    for t in site_threads {
+        let outcome = t.join().unwrap();
+        assert_eq!(outcome.aborted_runs, 0);
+    }
+    (served, stats)
+}
+
+/// The acceptance headline: two jobs submitted concurrently to one leader
+/// complete with labels and per-link counters identical to running them
+/// sequentially — and identical labels to the in-process channel pipeline,
+/// with each site's shard served from one session (loaded exactly once).
+#[test]
+fn concurrent_jobs_match_sequential_and_channel() {
+    let (_ds, parts) = workload();
+    let spec_a = spec_from_config(&cfg_with_seed(21));
+    let spec_b = spec_from_config(&cfg_with_seed(77));
+    let specs = [spec_a, spec_b];
+
+    let base_a = run_pipeline(&parts, &cfg_with_seed(21)).unwrap();
+    let base_b = run_pipeline(&parts, &cfg_with_seed(77)).unwrap();
+
+    let (concurrent, stats_c) = serve_and_submit(&parts, &specs, true);
+    let (sequential, stats_s) = serve_and_submit(&parts, &specs, false);
+    assert_eq!(stats_c.completed, 2);
+    assert_eq!(stats_c.failed, 0);
+    assert_eq!(stats_s.completed, 2);
+
+    for (i, base) in [&base_a, &base_b].into_iter().enumerate() {
+        // labels: concurrent == sequential == the channel pipeline
+        assert_eq!(concurrent[i].labels, base.labels, "job {i} vs channel");
+        assert_eq!(concurrent[i].labels, sequential[i].labels, "job {i} concurrency");
+
+        // per-run, per-link counters: byte-for-byte across interleavings
+        let (c, s) = (&concurrent[i].report, &sequential[i].report);
+        assert_eq!(c.n_codes, s.n_codes, "job {i} codes");
+        assert_eq!(c.sigma, s.sigma, "job {i} sigma");
+        assert_eq!(c.per_site, s.per_site, "job {i} per-link counters");
+
+        // the run-scoped dialect is exactly 2 frames up (registration +
+        // codebook) and 3 down (run open + work order + labels) per site
+        for (sid, l) in c.per_site.iter().enumerate() {
+            assert_eq!(l.up_frames, 2, "job {i} site {sid} up frames");
+            assert_eq!(l.down_frames, 3, "job {i} site {sid} down frames");
+        }
+        assert_eq!(c.n_codes as usize, base.n_codes, "job {i} codes vs channel");
+    }
+    // two different seeds really are two different clusterings of the
+    // same data (guards against comparing a job with itself)
+    assert_ne!(concurrent[0].labels, concurrent[1].labels);
+}
+
+/// A site dying mid-run fails only the run that was in flight: the queued
+/// job behind it is served after the leader re-dials the restarted site,
+/// over the surviving site's original session.
+#[test]
+fn site_death_fails_one_run_and_the_queue_drains() {
+    let (_ds, parts) = workload();
+    let spec = spec_from_config(&cfg_with_seed(21));
+    let base = run_pipeline(&parts, &cfg_with_seed(21)).unwrap();
+
+    // site 0: one healthy persistent session for the whole test
+    let l0 = SiteListener::bind("127.0.0.1:0").unwrap();
+    let addr0 = l0.local_addr().unwrap().to_string();
+    let data0 = parts[0].data.clone();
+    let site0 = std::thread::spawn(move || {
+        let net = SiteNet::over(Box::new(l0.accept(&timeouts()).unwrap()));
+        dsc::site::session(&net, &data0, None, |_| {}).unwrap()
+    });
+
+    // site 1: registers for the first run, then "crashes" on receiving the
+    // work order; a second accept serves the re-dialed session properly
+    let l1 = SiteListener::bind("127.0.0.1:0").unwrap();
+    let addr1 = l1.local_addr().unwrap().to_string();
+    let data1 = parts[1].data.clone();
+    let site1 = std::thread::spawn(move || {
+        {
+            let net = SiteNet::over(Box::new(l1.accept(&timeouts()).unwrap()));
+            match net.recv().unwrap() {
+                Message::RunStart { run } => net
+                    .send(&Message::RunSiteInfo {
+                        run,
+                        site: 1,
+                        n_points: data1.len() as u64,
+                        dim: data1.dim as u32,
+                    })
+                    .unwrap(),
+                other => panic!("expected a run open, got {other:?}"),
+            }
+            let _ = net.recv().unwrap(); // the work order arrives …
+            // … and the connection dies mid-run (simulated crash)
+        }
+        let net = SiteNet::over(Box::new(l1.accept(&timeouts()).unwrap()));
+        dsc::site::session(&net, &data1, None, |_| {}).unwrap()
+    });
+
+    let mut cfg = cfg_with_seed(0);
+    cfg.net.sites = vec![addr0, addr1];
+    let opts = ServerOpts {
+        max_jobs: 1, // job B must queue behind job A
+        queue_depth: 8,
+        allow_label_pull: true,
+        client_limit: Some(2),
+    };
+    let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let leader_addr = client_listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn({
+        let cfg = cfg.clone();
+        let opts = opts.clone();
+        move || serve_jobs(&cfg, &opts, client_listener).unwrap()
+    });
+
+    let client_a = JobClient::connect(&leader_addr, &timeouts()).unwrap();
+    let client_b = JobClient::connect(&leader_addr, &timeouts()).unwrap();
+    let run_a = client_a.submit(&spec).unwrap();
+    let run_b = client_b.submit(&spec).unwrap();
+    assert_ne!(run_a, run_b);
+
+    // run A dies with site 1's connection; only A is affected
+    let err = client_a.await_done(run_a).unwrap_err();
+    assert!(format!("{err:#}").contains("site 1"), "{err:#}");
+
+    // run B drains from the queue onto the re-dialed link and completes,
+    // with full parity against the channel pipeline
+    let report_b = client_b.await_done(run_b).unwrap();
+    let labels_b = pull_global(&client_b, run_b, &report_b, &parts);
+    assert_eq!(labels_b, base.labels);
+
+    drop(client_a);
+    drop(client_b);
+    let stats = server.join().unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.failed, 1);
+
+    let out0 = site0.join().unwrap();
+    assert_eq!(out0.runs_served, 1, "site 0 completed only run B");
+    assert_eq!(out0.aborted_runs, 1, "run A was left open on site 0");
+    let out1 = site1.join().unwrap();
+    assert_eq!(out1.runs_served, 1);
+}
+
+/// A hostile or buggy job spec is refused at submit time with a reason —
+/// it must never reach the central step, where `k = 0` would panic the
+/// reactor and take every client's runs down with it.
+#[test]
+fn hostile_spec_is_rejected_at_submit() {
+    let ds = gmm::paper_mixture_10d(400, 0.1, 51);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 51);
+
+    let listener = SiteListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let data = parts[0].data.clone();
+    let site = std::thread::spawn(move || {
+        let net = SiteNet::over(Box::new(listener.accept(&timeouts()).unwrap()));
+        dsc::site::session(&net, &data, None, |_| {}).unwrap()
+    });
+
+    let mut cfg = cfg_with_seed(51);
+    cfg.net.sites = vec![addr];
+    let opts = ServerOpts {
+        max_jobs: 1,
+        queue_depth: 2,
+        allow_label_pull: false,
+        client_limit: Some(1),
+    };
+    let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let leader_addr = client_listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn({
+        let cfg = cfg.clone();
+        let opts = opts.clone();
+        move || serve_jobs(&cfg, &opts, client_listener).unwrap()
+    });
+
+    let client = JobClient::connect(&leader_addr, &timeouts()).unwrap();
+    let mut bad = spec_from_config(&cfg_with_seed(51));
+    bad.k_clusters = 0;
+    let err = client.submit(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("bad job spec"), "{err:#}");
+
+    // the connection (and the server) survive the refusal
+    let run = client.submit(&spec_from_config(&cfg_with_seed(51))).unwrap();
+    client.await_done(run).unwrap();
+    drop(client);
+
+    let stats = server.join().unwrap();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.completed, 1);
+    let outcome = site.join().unwrap();
+    assert_eq!(outcome.runs_served, 1);
+}
+
+/// `[leader] allow_label_pull` gates the pull plane; an unknown run is
+/// refused with a reason even when pulls are allowed.
+#[test]
+fn label_pull_policy_is_enforced() {
+    let ds = gmm::paper_mixture_10d(600, 0.1, 33);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 33);
+    let spec = spec_from_config(&cfg_with_seed(33));
+
+    for allow in [false, true] {
+        let listener = SiteListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let data = parts[0].data.clone();
+        let site = std::thread::spawn(move || {
+            let net = SiteNet::over(Box::new(listener.accept(&timeouts()).unwrap()));
+            dsc::site::session(&net, &data, None, |_| {}).unwrap()
+        });
+
+        let mut cfg = cfg_with_seed(33);
+        cfg.net.sites = vec![addr];
+        let opts = ServerOpts {
+            max_jobs: 1,
+            queue_depth: 2,
+            allow_label_pull: allow,
+            client_limit: Some(1),
+        };
+        let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let leader_addr = client_listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn({
+            let cfg = cfg.clone();
+            let opts = opts.clone();
+            move || serve_jobs(&cfg, &opts, client_listener).unwrap()
+        });
+
+        let client = JobClient::connect(&leader_addr, &timeouts()).unwrap();
+        let run = client.submit(&spec).unwrap();
+        let report = client.await_done(run).unwrap();
+        if allow {
+            let err = client.pull_labels(9999, 1).unwrap_err();
+            assert!(format!("{err:#}").contains("not a completed run"), "{err:#}");
+            let pulled = client.pull_labels(run, report.per_site.len()).unwrap();
+            assert_eq!(pulled.len(), 1);
+            assert_eq!(pulled[0].1.len(), parts[0].data.len());
+        } else {
+            let err = client.pull_labels(run, report.per_site.len()).unwrap_err();
+            assert!(format!("{err:#}").contains("disabled"), "{err:#}");
+        }
+        drop(client);
+        let stats = server.join().unwrap();
+        assert_eq!(stats.completed, 1);
+        site.join().unwrap();
+    }
+}

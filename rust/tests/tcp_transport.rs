@@ -19,7 +19,11 @@ use dsc::net::{LeaderNet, LinkSpec, Message, SiteNet};
 use dsc::spectral::Bandwidth;
 
 fn timeouts() -> TcpTimeouts {
-    TcpTimeouts { connect: Duration::from_secs(5), io: Duration::from_secs(5) }
+    TcpTimeouts {
+        connect: Duration::from_secs(5),
+        io: Duration::from_secs(5),
+        max_idle: Duration::ZERO,
+    }
 }
 
 /// Bind a listener on an OS-assigned port and return it with its address.
@@ -286,6 +290,115 @@ fn channel_and_tcp_backends_are_byte_and_label_identical() {
     assert_eq!(tcp_report.outcome.n_codes, base.n_codes);
     assert_eq!(tcp_report.outcome.sigma, base.sigma);
     assert_eq!(tcp_report.outcome.site_points.iter().sum::<u64>(), ds.len() as u64);
+}
+
+/// `[net] max_idle_secs`: an accepted connection with no frame at all for
+/// longer than the limit is declared dead (silent-leader-death detection),
+/// while a connection with traffic inside the window stays healthy.
+#[test]
+fn max_idle_drops_a_silent_leader() {
+    let (l, addr) = listener();
+    let fake_leader = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&1u16.to_le_bytes());
+        hello.push(0); // classic leader role
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut echo = [0u8; 11];
+        s.read_exact(&mut echo).unwrap();
+        // say nothing, but keep the socket open: only the idle deadline
+        // can reject this
+        let mut sink = [0u8; 1];
+        let _ = s.read(&mut sink);
+    });
+    let t = TcpTimeouts {
+        connect: Duration::from_secs(5),
+        io: Duration::from_secs(5),
+        max_idle: Duration::from_millis(200),
+    };
+    let site = SiteNet::over(Box::new(l.accept(&t).unwrap()));
+    let t0 = Instant::now();
+    let err = site.recv().unwrap_err();
+    assert!(format!("{err:#}").contains("idle"), "{err:#}");
+    let waited = t0.elapsed();
+    assert!(waited >= Duration::from_millis(200), "fired early: {waited:?}");
+    assert!(waited < Duration::from_secs(4), "fired late: {waited:?}");
+    drop(site);
+    fake_leader.join().unwrap();
+}
+
+/// A frame arriving inside the idle window resets nothing fatal: the site
+/// still reads it fine with `max_idle` armed.
+#[test]
+fn max_idle_tolerates_traffic_within_the_window() {
+    let (l, addr) = listener();
+    let fake_leader = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&1u16.to_le_bytes());
+        hello.push(0);
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut echo = [0u8; 11];
+        s.read_exact(&mut echo).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        // one ACK frame, well inside the 500 ms idle window
+        let frame = dsc::net::wire::encode(&Message::Ack);
+        s.write_all(&(frame.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(&frame).unwrap();
+    });
+    let t = TcpTimeouts {
+        connect: Duration::from_secs(5),
+        io: Duration::from_secs(5),
+        max_idle: Duration::from_millis(500),
+    };
+    let site = SiteNet::over(Box::new(l.accept(&t).unwrap()));
+    assert_eq!(site.recv().unwrap(), Message::Ack);
+    fake_leader.join().unwrap();
+}
+
+/// The handshake role selects the site dialect: role 3 (job-serving
+/// leader) opens a session, role 0 a classic one-shot run, and a client
+/// role is turned away with advice.
+#[test]
+fn hello_roles_select_the_site_dialect() {
+    for (role, expect_session) in [(0u8, false), (3u8, true)] {
+        let (l, addr) = listener();
+        let fake_leader = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut hello = Vec::new();
+            hello.extend_from_slice(b"DSCP");
+            hello.extend_from_slice(&1u16.to_le_bytes());
+            hello.push(role);
+            hello.extend_from_slice(&4u32.to_le_bytes());
+            s.write_all(&hello).unwrap();
+            let mut echo = [0u8; 11];
+            s.read_exact(&mut echo).unwrap();
+        });
+        let t = l.accept(&timeouts()).unwrap();
+        assert_eq!(t.session_mode(), expect_session, "role {role}");
+        fake_leader.join().unwrap();
+    }
+
+    // a client dialing a site is refused with a pointer to --serve
+    let (l, addr) = listener();
+    let fake_client = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        hello.extend_from_slice(b"DSCP");
+        hello.extend_from_slice(&1u16.to_le_bytes());
+        hello.push(2); // client role
+        hello.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut echo = [0u8; 11];
+        s.read_exact(&mut echo).unwrap();
+    });
+    let err = l.accept(&timeouts()).unwrap_err();
+    assert!(format!("{err:#}").contains("--serve"), "{err:#}");
+    fake_client.join().unwrap();
 }
 
 /// A site daemon loop survives a leader that connects and immediately
