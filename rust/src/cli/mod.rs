@@ -131,6 +131,8 @@ LEADER FLAGS (see docs/DEPLOY.md):
                     [leader] max_jobs runs over persistent site sessions
   --max-jobs N      override [leader] max_jobs     (serve mode)
   --queue-depth N   override [leader] queue_depth  (serve mode)
+  --central-workers N  override [leader] central_workers (serve mode;
+                    0 = run central steps inline on the reactor thread)
   --serve-limit N   exit after N clients have come and gone (serve mode;
                     drills/CI — a clean shutdown once every client is done)
   plus the central-step RUN FLAGS: --dml --codes --k --algo --graph
@@ -421,6 +423,7 @@ pub fn cmd_site(args: &[String]) -> Result<()> {
                     &net,
                     &data,
                     flags.str("out").map(Path::new),
+                    cfg.site,
                     |r| {
                         println!(
                             "SERVED run={} n_points={} n_codes={} dml_s={:.3} distortion={:.6}",
@@ -497,8 +500,9 @@ fn addr_salt(addr: &str) -> u64 {
 pub fn cmd_leader(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     flags.reject_unknown(&[
-        "sites", "config", "serve", "max-jobs", "queue-depth", "serve-limit", "dml", "codes",
-        "k", "algo", "graph", "knn-k", "backend", "bandwidth", "weighted", "seed", "help",
+        "sites", "config", "serve", "max-jobs", "queue-depth", "central-workers",
+        "serve-limit", "dml", "codes", "k", "algo", "graph", "knn-k", "backend", "bandwidth",
+        "weighted", "seed", "help",
     ])?;
     if flags.bool("help") {
         println!("{USAGE}");
@@ -533,6 +537,10 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
             }
             opts.queue_depth = n;
         }
+        if let Some(n) = flags.usize("central-workers")? {
+            // 0 is legal: run central steps inline (the pre-offload mode)
+            opts.central_workers = n;
+        }
         opts.client_limit = flags.u64("serve-limit")?;
 
         let listener = std::net::TcpListener::bind(serve_addr)
@@ -542,11 +550,12 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
         std::io::stdout().flush().ok();
         eprintln!(
             "leader: job server at {addr}; {} site(s): {} (max_jobs={}, queue_depth={}, \
-             label_pull={})",
+             central_workers={}, label_pull={})",
             cfg.net.sites.len(),
             cfg.net.sites.join(", "),
             opts.max_jobs,
             opts.queue_depth,
+            opts.central_workers,
             opts.allow_label_pull,
         );
         let stats = serve_jobs(&cfg, &opts, listener)?;

@@ -102,11 +102,30 @@ pub struct LeaderConfig {
     /// (`LABELSPULL`). Off by default — the paper's privacy posture keeps
     /// per-point labels at the sites.
     pub allow_label_pull: bool,
+    /// Central-step worker threads for the job server: the reactor hands a
+    /// run's central spectral step to this pool and keeps dispatching
+    /// frames for every other run while it computes (`CentralDone` comes
+    /// back through the mailbox). `0` runs centrals inline on the reactor
+    /// thread — the pre-offload behavior, which blocks every other run for
+    /// the duration. XLA backends always run inline (the PJRT runtime is
+    /// thread-local). Default: `min(2, cores)`.
+    pub central_workers: usize,
+}
+
+/// `min(2, cores)` — enough to overlap one long central with another run's
+/// central without oversubscribing the machine the `par` pool also uses.
+pub fn default_central_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(2)
 }
 
 impl Default for LeaderConfig {
     fn default() -> Self {
-        LeaderConfig { max_jobs: 4, queue_depth: 32, allow_label_pull: false }
+        LeaderConfig {
+            max_jobs: 4,
+            queue_depth: 32,
+            allow_label_pull: false,
+            central_workers: default_central_workers(),
+        }
     }
 }
 
@@ -169,6 +188,9 @@ pub struct PipelineConfig {
     pub net: NetConfig,
     /// Job-serving knobs for `dsc leader --serve`.
     pub leader: LeaderConfig,
+    /// Site-session limits (`[site]`): label cache depth and the
+    /// hostile-leader open-run backstop for `dsc site` multi-run sessions.
+    pub site: crate::site::SessionLimits,
     /// How long the leader waits out each collect phase (site registration,
     /// then codebooks) before declaring the missing sites failed
     /// (straggler/crash protection).
@@ -193,6 +215,7 @@ impl Default for PipelineConfig {
             link: LinkSpec::default(),
             net: NetConfig::default(),
             leader: LeaderConfig::default(),
+            site: crate::site::SessionLimits::default(),
             seed: 0,
             artifact_dir: crate::runtime::default_artifact_dir(),
             collect_timeout: Duration::from_secs(300),
@@ -249,6 +272,12 @@ impl PipelineConfig {
     /// max_jobs = 4              # concurrent runs (dsc leader --serve)
     /// queue_depth = 32          # pending-job cap
     /// allow_label_pull = false  # let clients pull labels through the leader
+    /// central_workers = 2       # central-step worker pool (0 = inline;
+    ///                           # default min(2, cores))
+    ///
+    /// [site]
+    /// label_cache_runs = 8      # completed runs kept for LABELSPULL
+    /// max_open_runs = 64        # hostile-leader open-run backstop
     /// ```
     pub fn from_toml(text: &str) -> Result<PipelineConfig> {
         let map = toml::parse(text)?;
@@ -436,6 +465,30 @@ impl PipelineConfig {
             cfg.leader.allow_label_pull =
                 v.as_bool().ok_or_else(|| anyhow!("leader.allow_label_pull must be bool"))?;
         }
+        if let Some(v) = get("leader.central_workers") {
+            let n =
+                v.as_i64().ok_or_else(|| anyhow!("leader.central_workers must be an int"))?;
+            if n < 0 {
+                bail!("leader.central_workers must be ≥ 0 (0 = run centrals inline)");
+            }
+            cfg.leader.central_workers = n as usize;
+        }
+
+        if let Some(v) = get("site.label_cache_runs") {
+            let n =
+                v.as_i64().ok_or_else(|| anyhow!("site.label_cache_runs must be an int"))?;
+            if n < 1 {
+                bail!("site.label_cache_runs must be ≥ 1 (a pull needs at least one cached run)");
+            }
+            cfg.site.label_cache_runs = n as usize;
+        }
+        if let Some(v) = get("site.max_open_runs") {
+            let n = v.as_i64().ok_or_else(|| anyhow!("site.max_open_runs must be an int"))?;
+            if n < 1 {
+                bail!("site.max_open_runs must be ≥ 1 (a session must admit at least one run)");
+            }
+            cfg.site.max_open_runs = n as usize;
+        }
         Ok(cfg)
     }
 }
@@ -587,14 +640,21 @@ mod tests {
         assert_eq!(cfg.leader.max_jobs, 4);
         assert_eq!(cfg.leader.queue_depth, 32);
         assert!(!cfg.leader.allow_label_pull);
+        assert_eq!(cfg.leader.central_workers, default_central_workers());
+        assert!(default_central_workers() >= 1 && default_central_workers() <= 2);
 
         let cfg = PipelineConfig::from_toml(
-            "[leader]\nmax_jobs = 2\nqueue_depth = 8\nallow_label_pull = true",
+            "[leader]\nmax_jobs = 2\nqueue_depth = 8\nallow_label_pull = true\n\
+             central_workers = 3",
         )
         .unwrap();
         assert_eq!(cfg.leader.max_jobs, 2);
         assert_eq!(cfg.leader.queue_depth, 8);
         assert!(cfg.leader.allow_label_pull);
+        assert_eq!(cfg.leader.central_workers, 3);
+        // 0 is legal and means "inline centrals" (the pre-offload behavior)
+        let cfg = PipelineConfig::from_toml("[leader]\ncentral_workers = 0").unwrap();
+        assert_eq!(cfg.leader.central_workers, 0);
     }
 
     #[test]
@@ -603,6 +663,31 @@ mod tests {
         assert!(PipelineConfig::from_toml("[leader]\nqueue_depth = 0").is_err());
         assert!(PipelineConfig::from_toml("[leader]\nmax_jobs = \"many\"").is_err());
         assert!(PipelineConfig::from_toml("[leader]\nallow_label_pull = 1").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\ncentral_workers = -1").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\ncentral_workers = \"all\"").is_err());
+    }
+
+    #[test]
+    fn site_table_roundtrip_and_defaults() {
+        let cfg = PipelineConfig::from_toml("").unwrap();
+        assert_eq!(cfg.site.label_cache_runs, 8);
+        assert_eq!(cfg.site.max_open_runs, 64);
+
+        let cfg = PipelineConfig::from_toml(
+            "[site]\nlabel_cache_runs = 2\nmax_open_runs = 5",
+        )
+        .unwrap();
+        assert_eq!(cfg.site.label_cache_runs, 2);
+        assert_eq!(cfg.site.max_open_runs, 5);
+    }
+
+    #[test]
+    fn site_table_rejects_bad_values() {
+        // zero would silently disable pulls / refuse every run — loud errors
+        assert!(PipelineConfig::from_toml("[site]\nlabel_cache_runs = 0").is_err());
+        assert!(PipelineConfig::from_toml("[site]\nmax_open_runs = 0").is_err());
+        assert!(PipelineConfig::from_toml("[site]\nlabel_cache_runs = -3").is_err());
+        assert!(PipelineConfig::from_toml("[site]\nmax_open_runs = \"lots\"").is_err());
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Channel-backed job-server harness: the full reactor stack, socket-free.
+//!
+//! This hosts the *identical* serving pipeline as `dsc leader --serve` —
+//! the same reactor, `JobQueue` semantics,
+//! [`super::machine::RunMachine`]s, central worker pool and per-run byte
+//! accounting — but wired to in-process channel sites instead of TCP:
+//!
+//! * sites are threads running the real [`crate::site::session`] loop over
+//!   the channel transport (one protocol implementation, as always);
+//! * the uplink passes through an injectable
+//!   [`FaultPlan`](crate::net::channel::FaultPlan) — drop site N after
+//!   frame K, delay or duplicate a specific frame, swallow one run's
+//!   frames — so concurrency and failure interleavings are reproducible
+//!   functions of frame order, not of scheduler timing;
+//! * the reactor's clock is a [`VirtualClock`]: straggler deadlines fire
+//!   when a test advances time and injects a `Tick`, never because a real
+//!   timer ran out — no sleeps, no flakes;
+//! * clients are in-process [`JobClient`]s over a channel link, speaking
+//!   the same typed submit/await/pull protocol as `dsc submit` (frames are
+//!   mapped through the same decoder the TCP reader threads use).
+//!
+//! Because byte accounting happens in the reactor on encoded frames, the
+//! per-run counters this harness reports are byte-identical to the TCP
+//! job server's for the same jobs — `rust/tests/job_server.rs` pins that
+//! parity; `rust/tests/channel_harness.rs` uses the harness for the core
+//! concurrency, pipelining, deadline and fault cases. `docs/TESTING.md`
+//! places it in the test pyramid and shows how to write a fault plan.
+//!
+//! Shutdown contract: the harness stops when
+//! [`ServerOpts::client_limit`] clients have come and gone (a
+//! [`JobClient`] counts when dropped), mirroring `--serve-limit`. The
+//! limit is required here — without it nothing would ever stop the
+//! reactor, since the in-process mailbox can outlive every test handle.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{Backend, PipelineConfig};
+use crate::data::Dataset;
+use crate::net::channel::{self, Deliver, Fault, FaultPlan, VirtualClock};
+use crate::net::SiteNet;
+use crate::site::{self, SessionOutcome};
+
+use super::server::{
+    client_frame_to_event, CentralHook, CentralPool, ClientLink, Event, JobClient, Reactor,
+    ServerDriver, ServerOpts, ServerStats,
+};
+
+/// Everything a harness run is parameterized by, beyond the pipeline
+/// config: the serving options (shared with the TCP server), the fault
+/// plan, and the central-step instrumentation hook.
+#[derive(Default)]
+pub struct HarnessOpts {
+    /// Serving knobs. `client_limit` must be set — it is the harness's
+    /// only shutdown signal (see the module docs).
+    pub server: ServerOpts,
+    /// Deterministic uplink faults, applied in frame-arrival order.
+    pub faults: Vec<Fault>,
+    /// Called by a central worker with the run id before computing — block
+    /// here to make one run's central arbitrarily slow, deterministically.
+    pub central_hook: Option<CentralHook>,
+}
+
+/// In-process client link: frames out are decoded into reactor events by
+/// the same mapping the TCP client-reader threads use; frames in arrive
+/// encoded from the reactor, exactly as they would over a socket.
+pub struct ChannelLink {
+    client: u64,
+    events: Sender<Event>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl ClientLink for ChannelLink {
+    fn send(&self, frame: &[u8]) -> Result<()> {
+        let event = client_frame_to_event(self.client, frame)?;
+        self.events.send(event).map_err(|_| anyhow!("job server is gone"))
+    }
+
+    fn recv(&self) -> Result<Option<Vec<u8>>> {
+        // Disconnect = the reactor shut down and closed its clients: the
+        // channel twin of the leader closing a TCP connection.
+        Ok(self.rx.recv().ok())
+    }
+}
+
+impl Drop for ChannelLink {
+    fn drop(&mut self) {
+        // The client "connection" ends: counts toward client_limit, same
+        // as a TCP client hanging up.
+        let _ = self.events.send(Event::ClientDown { client: self.client });
+    }
+}
+
+/// The channel [`ServerDriver`]: downlink senders instead of sockets, a
+/// virtual clock instead of real time. A severed link cannot be re-dialed
+/// — `ensure_links` errors forever, so queued jobs behind a dead channel
+/// site wait out the (virtual) backoff rather than restart it.
+struct ChannelDriver {
+    clock: VirtualClock,
+    to_sites: Vec<Option<Sender<Vec<u8>>>>,
+    gens: Vec<u64>,
+    clients: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
+}
+
+impl ServerDriver for ChannelDriver {
+    fn n_sites(&self) -> usize {
+        self.to_sites.len()
+    }
+
+    fn link_gen(&self, site: usize) -> u64 {
+        self.gens[site]
+    }
+
+    fn send_site(&mut self, site: usize, frame: &[u8]) -> Result<()> {
+        let tx = self.to_sites[site]
+            .as_ref()
+            .ok_or_else(|| anyhow!("site {site} link is down"))?;
+        tx.send(frame.to_vec()).map_err(|_| anyhow!("site {site} hung up"))
+    }
+
+    fn take_down(&mut self, site: usize) -> bool {
+        match self.to_sites[site].take() {
+            // dropping the sender ends the site's session loop cleanly
+            Some(_tx) => {
+                self.gens[site] += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn ensure_links(&mut self) -> Result<()> {
+        if let Some(site) = self.to_sites.iter().position(|s| s.is_none()) {
+            bail!("site {site} is a channel link — severed links cannot be re-dialed");
+        }
+        Ok(())
+    }
+
+    fn send_client(&mut self, client: u64, frame: &[u8]) -> Result<()> {
+        let clients = self.clients.lock().unwrap();
+        let Some(tx) = clients.get(&client) else {
+            return Ok(()); // client gone; its results are dropped
+        };
+        tx.send(frame.to_vec()).map_err(|_| anyhow!("client {client} hung up"))
+    }
+
+    fn drop_client(&mut self, client: u64) {
+        self.clients.lock().unwrap().remove(&client);
+    }
+
+    fn close_clients(&mut self) {
+        self.clients.lock().unwrap().clear();
+    }
+
+    fn now(&self) -> Instant {
+        self.clock.now()
+    }
+}
+
+/// A running channel job server: mint clients, drive the virtual clock,
+/// and join for the stats once every client is done.
+pub struct ChannelHarness {
+    events: Sender<Event>,
+    clock: VirtualClock,
+    clients: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
+    next_client: u64,
+    reactor: JoinHandle<Result<ServerStats>>,
+    sites: Vec<JoinHandle<Result<SessionOutcome>>>,
+}
+
+/// Stand up the channel job server: one [`crate::site::session`] thread
+/// per dataset (site id = index, shard "loaded" once like a daemon), the
+/// fault-plan forwarder, the central worker pool, and the reactor on its
+/// own thread. Returns immediately; submit through
+/// [`ChannelHarness::client`].
+pub fn serve_channel(
+    datasets: Vec<Dataset>,
+    cfg: &PipelineConfig,
+    opts: HarnessOpts,
+) -> Result<ChannelHarness> {
+    if datasets.is_empty() {
+        bail!("no site datasets");
+    }
+    if opts.server.client_limit.is_none() {
+        bail!(
+            "the channel harness shuts down when client_limit clients have come and gone — \
+             set ServerOpts::client_limit"
+        );
+    }
+    let n_sites = datasets.len();
+    let (up_rx, down_txs, site_ends) = channel::star_endpoints(n_sites);
+
+    // Real site sessions, one thread each — the same loop `dsc site` runs
+    // for a job-serving leader, limits from `[site]` as in the daemon.
+    let limits = cfg.site;
+    let mut sites = Vec::with_capacity(n_sites);
+    for (end, data) in site_ends.into_iter().zip(datasets) {
+        sites.push(thread::spawn(move || {
+            let net = SiteNet::over(Box::new(end));
+            site::session(&net, &data, None, limits, |_| {})
+        }));
+    }
+
+    let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+
+    // Forwarder: the uplink drains through the fault plan into the
+    // mailbox. Exits when every site thread (and so every uplink sender)
+    // is gone.
+    {
+        let ev_tx = ev_tx.clone();
+        let mut plan = FaultPlan::new(opts.faults);
+        thread::spawn(move || {
+            while let Ok((site, frame)) = up_rx.recv() {
+                for d in plan.on_frame(site, frame) {
+                    let event = match d {
+                        Deliver::Frame { site, frame } => {
+                            Event::SiteFrame { site, gen: 0, frame }
+                        }
+                        Deliver::SiteDown { site } => Event::SiteDown {
+                            site,
+                            gen: 0,
+                            err: "fault plan severed the link".into(),
+                        },
+                    };
+                    if ev_tx.send(event).is_err() {
+                        return; // reactor gone
+                    }
+                }
+            }
+        });
+    }
+
+    let clock = VirtualClock::new();
+    let clients: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let driver = ChannelDriver {
+        clock: clock.clone(),
+        to_sites: down_txs.into_iter().map(Some).collect(),
+        gens: vec![0; n_sites],
+        clients: Arc::clone(&clients),
+    };
+    // Same offload gate as the TCP server: pool on the native backend only.
+    let workers =
+        if cfg.backend == Backend::Native { opts.server.central_workers } else { 0 };
+    let pool = CentralPool::start(workers, ev_tx.clone(), opts.central_hook);
+
+    let reactor = thread::spawn({
+        let cfg = cfg.clone();
+        let server_opts = opts.server;
+        move || -> Result<ServerStats> {
+            // Built on this thread: the reactor may hold a thread-local
+            // XLA runtime handle (inline-central path) and must not move.
+            let mut reactor = Reactor::new(cfg, server_opts, driver, pool)?;
+            loop {
+                if reactor.done() {
+                    return Ok(reactor.finish());
+                }
+                // No recv timeout: time is virtual, so deadline wakeups
+                // arrive as explicit Tick events from the test.
+                let Ok(event) = ev_rx.recv() else {
+                    return Ok(reactor.finish()); // every event source gone
+                };
+                reactor.step(event);
+            }
+        }
+    });
+
+    Ok(ChannelHarness { events: ev_tx, clock, clients, next_client: 1, reactor, sites })
+}
+
+impl ChannelHarness {
+    /// Open one in-process client connection. Dropping the returned
+    /// [`JobClient`] ends it (counts toward `client_limit`).
+    pub fn client(&mut self) -> JobClient<ChannelLink> {
+        let client = self.next_client;
+        self.next_client += 1;
+        let (tx, rx) = mpsc::channel();
+        self.clients.lock().unwrap().insert(client, tx);
+        JobClient::over(ChannelLink { client, events: self.events.clone(), rx })
+    }
+
+    /// Advance the virtual clock by `d` and deliver a `Tick`, so the
+    /// reactor enforces straggler deadlines against the new now — the
+    /// socket-free twin of a recv timeout firing.
+    pub fn tick(&self, d: Duration) {
+        self.clock.advance(d);
+        let _ = self.events.send(Event::Tick);
+    }
+
+    /// A handle on the harness clock (clones share time).
+    pub fn clock(&self) -> VirtualClock {
+        self.clock.clone()
+    }
+
+    /// Wait for the server to finish (every `client_limit` client done),
+    /// then for every site session; returns the serving stats and the
+    /// per-site session outcomes. Call after dropping all clients.
+    pub fn join(self) -> Result<(ServerStats, Vec<SessionOutcome>)> {
+        let ChannelHarness { events, clock: _, clients, next_client: _, reactor, sites } = self;
+        drop(events);
+        drop(clients);
+        let stats =
+            reactor.join().map_err(|_| anyhow!("reactor thread panicked"))??;
+        // The reactor dropping its driver closed every site downlink, so
+        // the sessions end cleanly (Ok) just like a leader disconnecting.
+        let mut outcomes = Vec::with_capacity(sites.len());
+        for s in sites {
+            outcomes.push(s.join().map_err(|_| anyhow!("site thread panicked"))??);
+        }
+        Ok((stats, outcomes))
+    }
+}

@@ -183,6 +183,18 @@ impl RunMachine {
         self.deadline
     }
 
+    /// The straggler deadline, but only while the machine is actually in a
+    /// collect phase — `None` during `Central`/`LabelsSent`. Reactors that
+    /// let a central step span mailbox waits (the job server's worker-pool
+    /// offload) must use this for their wakeup computation: the raw
+    /// [`RunMachine::deadline`] goes stale the moment the last codebook
+    /// lands, and a stale, already-passed instant would spin the event loop
+    /// with zero-length timeouts for the whole central phase.
+    pub fn collect_deadline(&self) -> Option<Instant> {
+        matches!(self.phase, Phase::Registering | Phase::BudgetsSent | Phase::Collecting)
+            .then_some(self.deadline)
+    }
+
     /// Feed one event. `now` is the driver's clock reading for this event
     /// (deadline resets are measured from it). An `Err` is fatal to the
     /// run — the driver reports it and discards the machine.
@@ -593,6 +605,26 @@ mod tests {
             m.advance(t1 + Duration::from_millis(150), RunInput::Tick).unwrap_err();
         assert!(err.to_string().contains("codebook collect failed"), "{err}");
         assert!(err.to_string().contains("[0]"), "{err}");
+    }
+
+    #[test]
+    fn collect_deadline_vanishes_once_central_starts() {
+        let t0 = Instant::now();
+        let mut m = RunMachine::new(1, spec(16, 7), Duration::from_millis(100), t0);
+        assert!(m.collect_deadline().is_some(), "registering is a collect phase");
+        m.advance(t0, RunInput::SiteInfo { site: 0, n_points: 100, dim: 1 }).unwrap();
+        assert!(m.collect_deadline().is_some(), "budgets-sent is a collect phase");
+        m.advance(
+            t0,
+            RunInput::Codebook { site: 0, dim: 1, codewords: vec![0.5], weights: vec![100] },
+        )
+        .unwrap();
+        assert_eq!(m.phase(), Phase::Central);
+        assert!(m.collect_deadline().is_none(), "no straggler deadline mid-central");
+        // the raw deadline may already be in the past here — that staleness
+        // is exactly what collect_deadline hides from reactors
+        m.central_done(vec![0], 1.0, Duration::ZERO).unwrap();
+        assert!(m.collect_deadline().is_none(), "no deadline after completion");
     }
 
     #[test]

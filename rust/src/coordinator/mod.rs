@@ -3,7 +3,7 @@
 //! The protocol has exactly one implementation, split along the network
 //! seam: the leader's per-run behavior is the [`machine::RunMachine`]
 //! state machine, and [`crate::site::serve`] / [`crate::site::session`]
-//! is everything a site does over a [`crate::net::SiteNet`]. Three
+//! is everything a site does over a [`crate::net::SiteNet`]. Four
 //! drivers wire the leader half to transports:
 //!
 //! * [`run_pipeline`] — the in-process star: one worker thread per site
@@ -13,7 +13,12 @@
 //!   to `dsc site` daemon processes (`dsc leader`; see `docs/DEPLOY.md`).
 //! * [`server::serve_jobs`] — the event-driven job server: many machines
 //!   at once over persistent site sessions, jobs submitted by TCP clients
-//!   (`dsc leader --serve` / `dsc submit`).
+//!   (`dsc leader --serve` / `dsc submit`), central steps offloaded to a
+//!   worker pool so one run's spectral phase never blocks another's
+//!   frames.
+//! * [`harness::serve_channel`] — the same reactor stack over in-process
+//!   channel sites: injectable fault plan, virtual clock, typed clients —
+//!   the socket-free test backend (`docs/TESTING.md`).
 //!
 //! ```text
 //! site s:  ──site info──▶ leader         (shard size/dim registration)
@@ -36,6 +41,7 @@
 //! travel through the thread join (in-process) or site-side label files
 //! (TCP), never the network.
 
+pub mod harness;
 pub mod machine;
 pub mod server;
 

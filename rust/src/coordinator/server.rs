@@ -10,6 +10,7 @@
 //!   accept thread ───▶ │ SiteDown     │    one reader thread per
 //!   per-conn reader ─▶ │ ClientSubmit │    link feeding the mailbox)
 //!   threads            │ ClientPull   │
+//!   central workers ─▶ │ CentralDone  │
 //!                      │ Tick         │
 //!                      └──────┬───────┘
 //!                             ▼
@@ -24,7 +25,29 @@
 //! links because every frame carries its run id; per-run [`LinkStats`]
 //! are kept by the reactor as it encodes/decodes, so two jobs running
 //! concurrently report byte counters identical to the same jobs run
-//! back-to-back (pinned by `rust/tests/job_server.rs`).
+//! back-to-back (pinned by `rust/tests/channel_harness.rs` and
+//! `rust/tests/job_server.rs`).
+//!
+//! **Central offload.** A run's central spectral step does not run on the
+//! reactor thread: when the last codebook lands, the codeword union is
+//! handed to a small worker pool ([`ServerOpts::central_workers`], config
+//! `[leader] central_workers`) and the result comes back through the
+//! mailbox as a `CentralDone` event. Site frames, submits, and straggler
+//! ticks for *other* runs keep flowing while a central is in flight — the
+//! serving pipeline the paper's speedup argument wants. With
+//! `central_workers = 0` (or an XLA backend, whose runtime is
+//! thread-local) centrals run inline, the pre-offload behavior. The
+//! blocking one-shot driver ([`super::leader_protocol`]) always runs its
+//! single central inline.
+//!
+//! **The driver seam.** The reactor core (`Reactor`) owns no transport:
+//! everything socket-shaped — per-link reader threads, the client
+//! acceptor, re-dialing a dead site — sits behind the `ServerDriver`
+//! trait. [`serve_jobs`] wires it to TCP (`TcpDriver`);
+//! [`super::harness`] wires the *identical* reactor to in-process channel
+//! sites with an injectable fault plan and a virtual clock, which is what
+//! makes the multi-run protocol testable without sockets or sleeps
+//! (`docs/TESTING.md`).
 //!
 //! Failure policy: a dead site link fails every *active* run (the star
 //! spans all sites) but not the queue — before starting a queued run the
@@ -36,12 +59,13 @@
 use std::collections::{HashMap, VecDeque};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::PipelineConfig;
+use crate::config::{Backend, PipelineConfig};
 use crate::net::tcp::{self, Backoff, TcpClient, TcpTimeouts};
 use crate::net::{wire, JobReport, JobSpec, LinkStats, Message};
 
@@ -59,6 +83,10 @@ pub struct ServerOpts {
     /// (`LABELSPULL`). Off by default: the paper's privacy posture keeps
     /// per-point labels at the sites.
     pub allow_label_pull: bool,
+    /// Central-step worker threads (`[leader] central_workers`). `0` runs
+    /// centrals inline on the reactor thread; XLA backends are always
+    /// inline regardless (their runtime is thread-local).
+    pub central_workers: usize,
     /// Exit after this many client connections have come *and gone* —
     /// drills, tests and the CI smoke use it to get a clean shutdown once
     /// every client got everything it asked for (results, label pulls);
@@ -73,6 +101,7 @@ impl Default for ServerOpts {
             max_jobs: cfg.max_jobs,
             queue_depth: cfg.queue_depth,
             allow_label_pull: cfg.allow_label_pull,
+            central_workers: cfg.central_workers,
             client_limit: None,
         }
     }
@@ -85,6 +114,7 @@ impl ServerOpts {
             max_jobs: cfg.leader.max_jobs,
             queue_depth: cfg.leader.queue_depth,
             allow_label_pull: cfg.leader.allow_label_pull,
+            central_workers: cfg.leader.central_workers,
             client_limit: None,
         }
     }
@@ -101,19 +131,17 @@ pub struct ServerStats {
     pub rejected: u64,
 }
 
-/// The reactor mailbox. Site/client reader threads and the acceptor all
-/// funnel here; `Tick` is synthesized by the loop itself when the nearest
-/// run deadline expires with nothing delivered.
-enum Event {
+/// The reactor mailbox. Site/client reader threads, the acceptor, and the
+/// central worker pool all funnel here; `Tick` is synthesized by the loop
+/// itself when the nearest run deadline expires with nothing delivered
+/// (or injected explicitly by the channel harness's virtual clock).
+pub(crate) enum Event {
     /// One frame from a site link. `gen` stamps which incarnation of the
     /// link the reader belongs to — events from a replaced connection are
     /// stale and dropped.
     SiteFrame { site: usize, gen: u64, frame: Vec<u8> },
     /// A site link died (clean close, decode failure, or io error).
     SiteDown { site: usize, gen: u64, err: String },
-    /// The acceptor handshook a new client; the stream is the reactor's
-    /// write half.
-    ClientConn { client: u64, stream: TcpStream },
     /// A client submitted a job.
     ClientSubmit { client: u64, spec: Box<JobSpec> },
     /// A client asked for a completed run's populated labels.
@@ -121,17 +149,127 @@ enum Event {
     /// A client connection ended (its runs keep going; reports are
     /// dropped).
     ClientDown { client: u64 },
+    /// A central worker finished a run's spectral step: codeword labels
+    /// and σ on success, the error text otherwise, plus the compute wall
+    /// time.
+    CentralDone { run: u32, result: Result<(Vec<u16>, f64), String>, elapsed: Duration },
     /// Deadline check.
     Tick,
 }
 
-struct SiteLink {
-    addr: String,
-    /// Reactor-owned write half; `None` while the link is down.
-    stream: Option<TcpStream>,
-    /// Incarnation counter for stale-event filtering.
-    gen: u64,
+/// Transport-facing edge of the job server: everything the reactor needs
+/// a backend to do, and nothing it does itself. The TCP implementation
+/// ([`TcpDriver`]) owns sockets, reader threads and re-dialing; the
+/// channel implementation ([`super::harness`]) owns in-process links and
+/// a virtual clock. The reactor encodes/decodes and accounts every frame
+/// *above* this seam, so per-run byte counters are identical across
+/// backends by construction.
+pub(crate) trait ServerDriver {
+    /// Number of site links in the star.
+    fn n_sites(&self) -> usize;
+    /// Current incarnation of a site link (for stale-event filtering).
+    fn link_gen(&self, site: usize) -> u64;
+    /// Deliver one encoded frame to a site. `Err` means the link just
+    /// failed — the reactor will take it down.
+    fn send_site(&mut self, site: usize, frame: &[u8]) -> Result<()>;
+    /// Tear a site link down (bump its generation, wake its reader).
+    /// Returns whether the link was up — `false` means it was already
+    /// down and nothing changed.
+    fn take_down(&mut self, site: usize) -> bool;
+    /// Bring every dead site link back up (TCP re-dials and arms a fresh
+    /// reader). `Err` leaves the links as they were; channel links cannot
+    /// be revived, so a severed one errors here forever.
+    fn ensure_links(&mut self) -> Result<()>;
+    /// Deliver one encoded frame to a client. `Err` means the client is
+    /// gone — the reactor will drop it.
+    fn send_client(&mut self, client: u64, frame: &[u8]) -> Result<()>;
+    /// Forget a client (its write half is closed/dropped).
+    fn drop_client(&mut self, client: u64);
+    /// Close every client link (server shutdown).
+    fn close_clients(&mut self);
+    /// The reactor's clock. Real time for TCP; a
+    /// [`crate::net::channel::VirtualClock`] in the harness, so deadline
+    /// tests advance time explicitly instead of sleeping through it.
+    fn now(&self) -> Instant;
 }
+
+// ─── central worker pool ───────────────────────────────────────────────────
+
+/// Test instrumentation: called by a central worker with the run id just
+/// before it computes. The channel harness uses it to make one run's
+/// central deterministically slow (block on a channel) and prove the
+/// reactor keeps serving everyone else meanwhile.
+pub type CentralHook = Arc<dyn Fn(u32) + Send + Sync>;
+
+/// One offloaded central step: the codeword union, cloned out of the
+/// machine so the reactor keeps owning its state while a worker computes.
+struct CentralJob {
+    run: u32,
+    cw: Vec<f32>,
+    dim: usize,
+    w: Vec<f32>,
+    spec: JobSpec,
+}
+
+/// Handle to the central worker pool. `jobs = None` means "no pool": the
+/// reactor runs centrals inline (configured off, or an XLA backend whose
+/// runtime cannot leave the reactor thread).
+pub(crate) struct CentralPool {
+    jobs: Option<Sender<CentralJob>>,
+}
+
+impl CentralPool {
+    /// Spawn `workers` central threads feeding `events`. The workers share
+    /// one job queue (a `Mutex<Receiver>` — centrals are seconds-long, so
+    /// lock traffic is nil) and exit when the pool handle drops.
+    pub(crate) fn start(
+        workers: usize,
+        events: Sender<Event>,
+        hook: Option<CentralHook>,
+    ) -> CentralPool {
+        if workers == 0 {
+            return CentralPool { jobs: None };
+        }
+        let (tx, rx) = mpsc::channel::<CentralJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let events = events.clone();
+            let hook = hook.clone();
+            thread::spawn(move || loop {
+                // Hold the lock only for the dequeue, never the compute.
+                let job = match rx.lock().unwrap().recv() {
+                    Ok(job) => job,
+                    Err(_) => return, // pool handle dropped: server is done
+                };
+                if let Some(h) = &hook {
+                    h(job.run);
+                }
+                let t0 = Instant::now();
+                // Offload is gated to Backend::Native (see `drive`), so no
+                // runtime handle needs to cross into this thread. A panic
+                // must surface as a failed run, not silently wedge it in
+                // `Central` forever (mid-central runs have no straggler
+                // deadline, so nothing else would ever fail it — and the
+                // client would block in await_done with a leaked job slot).
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    central_cluster(&job.cw, job.dim, &job.w, &job.spec, Backend::Native, None)
+                }))
+                .unwrap_or_else(|_| Err(anyhow!("central step panicked")))
+                .map_err(|e| format!("{e:#}"));
+                if events
+                    .send(Event::CentralDone { run: job.run, result, elapsed: t0.elapsed() })
+                    .is_err()
+                {
+                    return; // reactor gone
+                }
+            });
+        }
+        CentralPool { jobs: Some(tx) }
+    }
+}
+
+// ─── reactor core ──────────────────────────────────────────────────────────
 
 struct Job {
     run: u32,
@@ -157,209 +295,16 @@ struct Pull {
 /// Completed runs the leader remembers for label pulls.
 const COMPLETED_CAP: usize = 64;
 
-/// Serve jobs until `opts.client_limit` client connections have come and
-/// gone (forever when `None`). `client_listener` is the already-bound job
-/// socket — the caller
-/// binds it so it can print the chosen address before the server blocks
-/// (`dsc leader --serve host:0`). Site links are dialed from
-/// `cfg.net.sites` as persistent multi-run sessions before any job is
-/// accepted.
-pub fn serve_jobs(
-    cfg: &PipelineConfig,
-    opts: &ServerOpts,
-    client_listener: TcpListener,
-) -> Result<ServerStats> {
-    if cfg.net.sites.is_empty() {
-        bail!("no site addresses configured (set [net] sites or --sites)");
-    }
-    if opts.max_jobs == 0 || opts.queue_depth == 0 {
-        bail!("[leader] max_jobs and queue_depth must be ≥ 1");
-    }
-    let timeouts = cfg.net.tcp_timeouts();
-    let (tx, rx) = mpsc::channel::<Event>();
-
-    // Dial every site concurrently in the session dialect, then hand each
-    // connection's read half to a reader thread.
-    let conns = tcp::dial_sites(&cfg.net.sites, &timeouts, true)?;
-    let mut links = Vec::with_capacity(conns.len());
-    for (site, stream) in conns.into_iter().enumerate() {
-        let rd = stream.try_clone().context("clone site socket for reading")?;
-        spawn_site_reader(rd, site, 0, tx.clone());
-        links.push(SiteLink { addr: cfg.net.sites[site].clone(), stream: Some(stream), gen: 0 });
-    }
-
-    spawn_acceptor(client_listener, timeouts, cfg.seed, tx.clone());
-
-    let xla = resolve_xla(cfg)?;
-    let mut server = Server {
-        cfg,
-        opts,
-        xla,
-        timeouts,
-        tx,
-        links,
-        clients: HashMap::new(),
-        queue: VecDeque::new(),
-        active: HashMap::new(),
-        completed: VecDeque::new(),
-        pulls: Vec::new(),
-        next_run: 1,
-        clients_done: 0,
-        redial_backoff: Backoff::new(cfg.seed ^ 0xD1A1),
-        redial_after: None,
-        stats: ServerStats::default(),
-    };
-    server.run(rx)
-}
-
-/// Reader thread for one site-link incarnation: frames (and death) become
-/// mailbox events tagged with the link generation.
-fn spawn_site_reader(stream: TcpStream, site: usize, gen: u64, tx: Sender<Event>) {
-    thread::spawn(move || loop {
-        match tcp::recv_frame(&stream) {
-            Ok(Some(frame)) => {
-                if tx.send(Event::SiteFrame { site, gen, frame }).is_err() {
-                    return; // server gone
-                }
-            }
-            Ok(None) => {
-                let _ = tx.send(Event::SiteDown {
-                    site,
-                    gen,
-                    err: "site closed the connection".into(),
-                });
-                return;
-            }
-            Err(e) => {
-                let _ = tx.send(Event::SiteDown { site, gen, err: format!("{e:#}") });
-                return;
-            }
-        }
-    });
-}
-
-/// Accept thread for the client socket: handshakes, registers the write
-/// half with the reactor, and spawns a per-connection reader. Handshake
-/// failures (port scans, version skew) are logged and never take the
-/// server down; persistent accept errors back off like the site daemon.
-fn spawn_acceptor(listener: TcpListener, timeouts: TcpTimeouts, seed: u64, tx: Sender<Event>) {
-    thread::spawn(move || {
-        let mut next_client = 1u64;
-        let mut backoff = Backoff::new(seed ^ 0x5EE1);
-        loop {
-            match tcp::accept_client(&listener, &timeouts) {
-                Ok(stream) => {
-                    backoff.reset();
-                    let client = next_client;
-                    next_client += 1;
-                    let rd = match stream.try_clone() {
-                        Ok(s) => s,
-                        Err(e) => {
-                            eprintln!("leader: clone client socket: {e}");
-                            continue;
-                        }
-                    };
-                    if tx.send(Event::ClientConn { client, stream }).is_err() {
-                        return; // server gone
-                    }
-                    spawn_client_reader(rd, client, tx.clone());
-                }
-                Err(e) => {
-                    eprintln!("leader: client accept failed: {e:#}");
-                    thread::sleep(backoff.next_delay());
-                }
-            }
-        }
-    });
-}
-
-/// Reader thread for one client connection: decodes frames into typed
-/// events; anything unexpected (or the connection ending) retires the
-/// client.
-fn spawn_client_reader(stream: TcpStream, client: u64, tx: Sender<Event>) {
-    thread::spawn(move || {
-        loop {
-            let frame = match tcp::recv_frame(&stream) {
-                Ok(Some(frame)) => frame,
-                Ok(None) | Err(_) => break,
-            };
-            let event = match wire::decode(&frame) {
-                Ok(Message::Submit(spec)) => {
-                    Event::ClientSubmit { client, spec: Box::new(spec) }
-                }
-                Ok(Message::LabelsPull { run }) => Event::ClientPull { client, run },
-                Ok(other) => {
-                    eprintln!("leader: client {client} sent unexpected {other:?}; dropping it");
-                    break;
-                }
-                Err(e) => {
-                    eprintln!("leader: client {client} sent an undecodable frame: {e:#}");
-                    break;
-                }
-            };
-            if tx.send(event).is_err() {
-                return; // server gone: no one left to tell
-            }
-        }
-        let _ = tx.send(Event::ClientDown { client });
-    });
-}
-
-/// Wrap a machine output run-scoped (the classic driver wraps the same
-/// outputs unscoped — see `coordinator::classic_out`).
-fn scoped_out(run: u32, site: usize, out: OutMsg) -> Message {
-    match out {
-        OutMsg::Dml(o) => Message::RunDmlRequest {
-            run,
-            site: site as u32,
-            dml: o.dml,
-            target_codes: o.target_codes,
-            max_iters: o.max_iters,
-            tol: o.tol,
-            seed: o.seed,
-        },
-        OutMsg::Labels(labels) => Message::RunLabels { run, site: site as u32, labels },
-    }
-}
-
-/// Submit-time spec validation: everything a hostile or buggy client could
-/// set that the pipeline would only reject (or panic on) deep inside a
-/// run. The central step's spectral code asserts `k ≥ 1`, and the graph /
-/// backend combination is a property of this serving deployment.
-fn validate_spec(spec: &JobSpec, backend: crate::config::Backend) -> Result<()> {
-    if spec.k_clusters == 0 {
-        bail!("k_clusters must be ≥ 1");
-    }
-    if spec.total_codes == 0 {
-        bail!("total_codes must be ≥ 1");
-    }
-    if let crate::spectral::GraphKind::Knn { k } = spec.graph {
-        if k == 0 {
-            bail!("knn_k must be ≥ 1");
-        }
-    }
-    check_graph_backend_kinds(spec.graph, backend)
-}
-
-/// Keep reject messages a short sentence (the wire caps them anyway).
-fn reject_text(s: &str) -> String {
-    if s.len() <= 1000 {
-        s.to_string()
-    } else {
-        s.chars().take(1000).collect()
-    }
-}
-
-struct Server<'a> {
-    cfg: &'a PipelineConfig,
-    opts: &'a ServerOpts,
+/// The transport-agnostic job-server core: run lifecycle, the job queue,
+/// per-run byte accounting, straggler deadlines, the pull plane — driven
+/// by [`Event`]s a frontend feeds it off its mailbox. See the module docs
+/// for the two frontends.
+pub(crate) struct Reactor<D: ServerDriver> {
+    cfg: PipelineConfig,
+    opts: ServerOpts,
     xla: Option<std::rc::Rc<crate::runtime::XlaRuntime>>,
-    timeouts: TcpTimeouts,
-    /// Kept so the mailbox can never disconnect and to arm new readers.
-    tx: Sender<Event>,
-    links: Vec<SiteLink>,
-    /// Client write halves, by client id.
-    clients: HashMap<u64, TcpStream>,
+    driver: D,
+    pool: CentralPool,
     queue: VecDeque<Job>,
     active: HashMap<u32, RunEntry>,
     /// Recently completed runs (run id → site count), FIFO-capped, for
@@ -378,66 +323,90 @@ struct Server<'a> {
     stats: ServerStats,
 }
 
-impl Server<'_> {
-    fn run(&mut self, rx: Receiver<Event>) -> Result<ServerStats> {
-        loop {
-            if let Some(limit) = self.opts.client_limit {
-                if self.clients_done >= limit {
-                    return Ok(self.stats);
-                }
-            }
-            let event = match self.next_deadline() {
-                None => rx.recv().map_err(|_| anyhow!("reactor mailbox closed"))?,
-                Some(deadline) => {
-                    let wait = deadline.saturating_duration_since(Instant::now());
-                    match rx.recv_timeout(wait) {
-                        Ok(ev) => ev,
-                        Err(RecvTimeoutError::Timeout) => Event::Tick,
-                        Err(RecvTimeoutError::Disconnected) => {
-                            bail!("reactor mailbox closed")
-                        }
-                    }
-                }
-            };
-            match event {
-                Event::SiteFrame { site, gen, frame } => {
-                    if gen == self.links[site].gen {
-                        self.on_site_frame(site, frame);
-                    } // else: stale reader from a replaced connection
-                }
-                Event::SiteDown { site, gen, err } => {
-                    if gen == self.links[site].gen {
-                        self.site_down(site, &err);
-                    }
-                }
-                Event::ClientConn { client, stream } => {
-                    self.clients.insert(client, stream);
-                }
-                Event::ClientSubmit { client, spec } => self.on_submit(client, *spec),
-                Event::ClientPull { client, run } => self.on_pull(client, run),
-                Event::ClientDown { client } => {
-                    self.clients.remove(&client);
-                    self.pulls.retain(|p| p.client != client);
-                    self.clients_done += 1;
-                }
-                Event::Tick => {}
-            }
-            // Deadlines are enforced every iteration, not only when the
-            // mailbox happens to be empty at the timeout (`Tick`): under
-            // sustained traffic recv_timeout keeps returning events and a
-            // stalled run's collect_timeout must still fire on schedule.
-            self.expire_overdue();
-            self.try_start_jobs();
+impl<D: ServerDriver> Reactor<D> {
+    pub(crate) fn new(
+        cfg: PipelineConfig,
+        opts: ServerOpts,
+        driver: D,
+        pool: CentralPool,
+    ) -> Result<Reactor<D>> {
+        if opts.max_jobs == 0 || opts.queue_depth == 0 {
+            bail!("[leader] max_jobs and queue_depth must be ≥ 1");
         }
+        let xla = resolve_xla(&cfg)?;
+        let seed = cfg.seed;
+        Ok(Reactor {
+            cfg,
+            opts,
+            xla,
+            driver,
+            pool,
+            queue: VecDeque::new(),
+            active: HashMap::new(),
+            completed: VecDeque::new(),
+            pulls: Vec::new(),
+            next_run: 1,
+            clients_done: 0,
+            redial_backoff: Backoff::new(seed ^ 0xD1A1),
+            redial_after: None,
+            stats: ServerStats::default(),
+        })
+    }
+
+    /// Whether `client_limit` clients have come and gone — the frontend's
+    /// clean-shutdown condition.
+    pub(crate) fn done(&self) -> bool {
+        self.opts.client_limit.is_some_and(|limit| self.clients_done >= limit)
+    }
+
+    /// Tear down client links and surrender the stats (server shutdown).
+    pub(crate) fn finish(mut self) -> ServerStats {
+        self.driver.close_clients();
+        self.stats
+    }
+
+    /// Apply one mailbox event, then the per-iteration housekeeping every
+    /// frontend owes the reactor: deadlines are enforced every iteration,
+    /// not only when the mailbox happens to be empty at the timeout
+    /// (`Tick`) — under sustained traffic the mailbox keeps delivering
+    /// events and a stalled run's collect_timeout must still fire on
+    /// schedule — and queued jobs start whenever a slot is free.
+    pub(crate) fn step(&mut self, event: Event) {
+        match event {
+            Event::SiteFrame { site, gen, frame } => {
+                if gen == self.driver.link_gen(site) {
+                    self.on_site_frame(site, frame);
+                } // else: stale reader from a replaced connection
+            }
+            Event::SiteDown { site, gen, err } => {
+                if gen == self.driver.link_gen(site) {
+                    self.site_down(site, &err);
+                }
+            }
+            Event::ClientSubmit { client, spec } => self.on_submit(client, *spec),
+            Event::ClientPull { client, run } => self.on_pull(client, run),
+            Event::ClientDown { client } => {
+                self.driver.drop_client(client);
+                self.pulls.retain(|p| p.client != client);
+                self.clients_done += 1;
+            }
+            Event::CentralDone { run, result, elapsed } => {
+                self.on_central_done(run, result, elapsed)
+            }
+            Event::Tick => {}
+        }
+        self.expire_overdue();
+        self.try_start_jobs();
     }
 
     /// Nearest wakeup the reactor must honor even with an empty mailbox:
-    /// the earliest straggler deadline over the active runs (all of which
-    /// are in a collecting phase between events — the central phase never
-    /// spans a mailbox wait), or the re-dial retry time while jobs wait
-    /// out a site outage.
-    fn next_deadline(&self) -> Option<Instant> {
-        let runs = self.active.values().map(|e| e.machine.deadline()).min();
+    /// the earliest straggler deadline over the active runs still in a
+    /// collect phase (a run whose central is in flight has no deadline —
+    /// [`RunMachine::collect_deadline`] hides the stale one, else it
+    /// would spin this wait at zero for the whole central), or the
+    /// re-dial retry time while jobs wait out a site outage.
+    pub(crate) fn next_deadline(&self) -> Option<Instant> {
+        let runs = self.active.values().filter_map(|e| e.machine.collect_deadline()).min();
         let redial = if self.queue.is_empty() { None } else { self.redial_after };
         match (runs, redial) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -489,18 +458,19 @@ impl Server<'_> {
 
     /// Route a frame to its run's machine, accounting it to that run.
     fn run_event(&mut self, run: u32, site: usize, frame_len: usize, input: RunInput) {
+        let now = self.driver.now();
         let Some(entry) = self.active.get_mut(&run) else {
             // e.g. a codebook for a run that already failed on a timeout
             eprintln!("leader: dropping frame from site {site} for inactive run {run}");
             return;
         };
         entry.stats[site].account(true, frame_len, &self.cfg.link);
-        let adv = entry.machine.advance(Instant::now(), input);
+        let adv = entry.machine.advance(now, input);
         self.drive(run, adv);
     }
 
-    /// Apply one machine step: send what it asked, run the central step
-    /// when it is ready, finish or fail the run.
+    /// Apply one machine step: send what it asked, hand a ready central to
+    /// the worker pool (or run it inline), finish or fail the run.
     fn drive(&mut self, run: u32, adv: Result<Advance>) {
         let adv = match adv {
             Ok(adv) => adv,
@@ -519,12 +489,39 @@ impl Server<'_> {
             }
         }
         if adv.central {
+            // Offload to the pool when it exists and the backend is the
+            // pure-Rust path (the XLA runtime is thread-local, so those
+            // backends compute inline like the blocking driver does).
+            if self.pool.jobs.is_some() && self.cfg.backend == Backend::Native {
+                let entry = self.active.get(&run).expect("central for a live run");
+                let (cw, dim, w) = entry.machine.central_input();
+                let job = CentralJob {
+                    run,
+                    cw: cw.to_vec(),
+                    dim,
+                    w: w.to_vec(),
+                    spec: entry.machine.spec().clone(),
+                };
+                if self.pool.jobs.as_ref().expect("checked above").send(job).is_err() {
+                    // every worker died (panicked): fail this run rather
+                    // than leave it stuck in Central forever
+                    self.fail_run(run, "central worker pool is gone");
+                }
+                return; // CentralDone continues this run via the mailbox
+            }
             let result = {
                 let entry = self.active.get(&run).expect("central for a live run");
                 let (cw, dim, w) = entry.machine.central_input();
                 let t0 = Instant::now();
-                central_cluster(cw, dim, w, entry.machine.spec(), self.cfg.backend, self.xla.as_deref())
-                    .map(|out| (out, t0.elapsed()))
+                central_cluster(
+                    cw,
+                    dim,
+                    w,
+                    entry.machine.spec(),
+                    self.cfg.backend,
+                    self.xla.as_deref(),
+                )
+                .map(|out| (out, t0.elapsed()))
             };
             match result {
                 Ok(((labels, sigma), central)) => {
@@ -545,26 +542,47 @@ impl Server<'_> {
         }
     }
 
+    /// A worker delivered a run's central result through the mailbox.
+    fn on_central_done(
+        &mut self,
+        run: u32,
+        result: Result<(Vec<u16>, f64), String>,
+        elapsed: Duration,
+    ) {
+        if !self.active.contains_key(&run) {
+            // the run failed (site death) while its central was in flight;
+            // the worker's effort is discarded with the run
+            eprintln!("leader: dropping central result for inactive run {run}");
+            return;
+        }
+        match result {
+            Ok((labels, sigma)) => {
+                let adv = self
+                    .active
+                    .get_mut(&run)
+                    .expect("checked above")
+                    .machine
+                    .central_done(labels, sigma, elapsed);
+                self.drive(run, adv);
+            }
+            Err(e) => self.fail_run(run, &format!("central step failed: {e}")),
+        }
+    }
+
     /// Encode, account to the run, and write one frame to a site link.
     fn send_run_frame(&mut self, run: u32, site: usize, msg: &Message) -> Result<()> {
         let frame = wire::encode(msg);
         if let Some(entry) = self.active.get_mut(&run) {
             entry.stats[site].account(false, frame.len(), &self.cfg.link);
         }
-        let stream = self.links[site]
-            .stream
-            .as_ref()
-            .ok_or_else(|| anyhow!("site {site} link is down"))?;
-        tcp::send_frame(stream, &frame).with_context(|| format!("send to site {site}"))
+        self.driver.send_site(site, &frame)
     }
 
     /// A site link died: every active run spans it, so they all fail; the
     /// queue survives (links are re-dialed before the next run starts).
     fn site_down(&mut self, site: usize, err: &str) {
-        if let Some(stream) = self.links[site].stream.take() {
+        if self.driver.take_down(site) {
             eprintln!("leader: site {site} link down: {err}");
-            let _ = stream.shutdown(Shutdown::Both); // wake its reader thread
-            self.links[site].gen += 1;
         }
         let mut runs: Vec<u32> = self.active.keys().copied().collect();
         runs.sort_unstable();
@@ -584,23 +602,6 @@ impl Server<'_> {
                 },
             );
         }
-    }
-
-    /// Re-dial any dead site link (fresh session + reader thread).
-    fn ensure_links(&mut self) -> Result<()> {
-        for site in 0..self.links.len() {
-            if self.links[site].stream.is_some() {
-                continue;
-            }
-            let stream =
-                tcp::connect_site(&self.links[site].addr, site as u32, &self.timeouts, true)
-                    .with_context(|| format!("re-dial site {site}"))?;
-            let rd = stream.try_clone().context("clone site socket for reading")?;
-            self.links[site].gen += 1;
-            self.links[site].stream = Some(stream);
-            spawn_site_reader(rd, site, self.links[site].gen, self.tx.clone());
-        }
-        Ok(())
     }
 
     // ─── run lifecycle ─────────────────────────────────────────────────
@@ -638,42 +639,38 @@ impl Server<'_> {
     /// Start queued jobs while slots are free. Called after every event.
     /// A failed re-dial does *not* reject the queue: the jobs stay queued
     /// and the next attempt waits out a capped, jittered backoff (the
-    /// reactor wakes itself via [`Server::next_deadline`]) — one transient
+    /// reactor wakes itself via [`Reactor::next_deadline`]) — one transient
     /// site outage must not destroy every pending job, and back-to-back
     /// dial timeouts must not wedge the reactor.
     fn try_start_jobs(&mut self) {
         while self.active.len() < self.opts.max_jobs && !self.queue.is_empty() {
             if let Some(not_before) = self.redial_after {
-                if Instant::now() < not_before {
+                if self.driver.now() < not_before {
                     return; // still backing off; jobs wait in the queue
                 }
             }
-            if let Err(e) = self.ensure_links() {
+            if let Err(e) = self.driver.ensure_links() {
                 let delay = self.redial_backoff.next_delay();
                 eprintln!(
                     "leader: sites unreachable ({e:#}); {} queued job(s) wait, retrying \
                      in {delay:?}",
                     self.queue.len()
                 );
-                self.redial_after = Some(Instant::now() + delay);
+                self.redial_after = Some(self.driver.now() + delay);
                 return;
             }
             self.redial_after = None;
             self.redial_backoff.reset();
             let job = self.queue.pop_front().expect("checked non-empty");
-            let n_sites = self.links.len();
+            let n_sites = self.driver.n_sites();
+            let now = self.driver.now();
             self.active.insert(
                 job.run,
                 RunEntry {
-                    machine: RunMachine::new(
-                        n_sites,
-                        job.spec,
-                        self.cfg.collect_timeout,
-                        Instant::now(),
-                    ),
+                    machine: RunMachine::new(n_sites, job.spec, self.cfg.collect_timeout, now),
                     client: job.client,
                     stats: vec![LinkStats::default(); n_sites],
-                    started: Instant::now(),
+                    started: now,
                 },
             );
             // Announce the run on every site link; sites answer with
@@ -696,7 +693,8 @@ impl Server<'_> {
             n_codes: outcome.n_codes as u32,
             sigma: outcome.sigma,
             central_ns: outcome.central.as_nanos() as u64,
-            wall_ns: entry.started.elapsed().as_nanos() as u64,
+            wall_ns: self.driver.now().saturating_duration_since(entry.started).as_nanos()
+                as u64,
             per_site: entry.stats.iter().map(|s| s.to_wire()).collect(),
         };
         self.completed.push_back((run, entry.stats.len()));
@@ -711,21 +709,19 @@ impl Server<'_> {
         let Some(entry) = self.active.remove(&run) else { return };
         eprintln!("leader: run {run} failed: {why}");
         self.stats.failed += 1;
-        self.send_client(
-            entry.client,
-            &Message::Reject { run, msg: reject_text(why) },
-        );
+        self.send_client(entry.client, &Message::Reject { run, msg: reject_text(why) });
     }
 
     /// Fail every run whose straggler deadline has passed (the machine
     /// composes the canonical "sites […] never reported" error on an
-    /// expired `Tick`).
+    /// expired `Tick`). Runs mid-central have no deadline — their sites
+    /// owe them nothing until the labels go out.
     fn expire_overdue(&mut self) {
-        let now = Instant::now();
+        let now = self.driver.now();
         let mut overdue: Vec<u32> = self
             .active
             .iter()
-            .filter(|(_, e)| e.machine.deadline() <= now)
+            .filter(|(_, e)| e.machine.collect_deadline().is_some_and(|d| d <= now))
             .map(|(run, _)| *run)
             .collect();
         overdue.sort_unstable();
@@ -743,12 +739,9 @@ impl Server<'_> {
     }
 
     fn send_client_raw(&mut self, client: u64, frame: &[u8]) {
-        let Some(stream) = self.clients.get(&client) else {
-            return; // client hung up; its results are dropped
-        };
-        if let Err(e) = tcp::send_frame(stream, frame) {
+        if let Err(e) = self.driver.send_client(client, frame) {
             eprintln!("leader: dropping client {client}: {e:#}");
-            self.clients.remove(&client);
+            self.driver.drop_client(client);
             self.pulls.retain(|p| p.client != client);
         }
     }
@@ -776,7 +769,7 @@ impl Server<'_> {
             );
             return;
         };
-        if let Err(e) = self.ensure_links() {
+        if let Err(e) = self.driver.ensure_links() {
             self.send_client(
                 client,
                 &Message::Reject {
@@ -788,8 +781,7 @@ impl Server<'_> {
         }
         let frame = wire::encode(&Message::LabelsPull { run });
         for site in 0..n_sites {
-            let stream = self.links[site].stream.as_ref().expect("ensured above");
-            if let Err(e) = tcp::send_frame(stream, &frame) {
+            if let Err(e) = self.driver.send_site(site, &frame) {
                 self.site_down(site, &format!("{e:#}"));
                 self.send_client(
                     client,
@@ -832,24 +824,354 @@ impl Server<'_> {
     }
 }
 
+// ─── shared helpers ────────────────────────────────────────────────────────
+
+/// Wrap a machine output run-scoped (the classic driver wraps the same
+/// outputs unscoped — see `coordinator::classic_out`).
+fn scoped_out(run: u32, site: usize, out: OutMsg) -> Message {
+    match out {
+        OutMsg::Dml(o) => Message::RunDmlRequest {
+            run,
+            site: site as u32,
+            dml: o.dml,
+            target_codes: o.target_codes,
+            max_iters: o.max_iters,
+            tol: o.tol,
+            seed: o.seed,
+        },
+        OutMsg::Labels(labels) => Message::RunLabels { run, site: site as u32, labels },
+    }
+}
+
+/// Submit-time spec validation: everything a hostile or buggy client could
+/// set that the pipeline would only reject (or panic on) deep inside a
+/// run. The central step's spectral code asserts `k ≥ 1`, and the graph /
+/// backend combination is a property of this serving deployment.
+fn validate_spec(spec: &JobSpec, backend: crate::config::Backend) -> Result<()> {
+    if spec.k_clusters == 0 {
+        bail!("k_clusters must be ≥ 1");
+    }
+    if spec.total_codes == 0 {
+        bail!("total_codes must be ≥ 1");
+    }
+    if let crate::spectral::GraphKind::Knn { k } = spec.graph {
+        if k == 0 {
+            bail!("knn_k must be ≥ 1");
+        }
+    }
+    check_graph_backend_kinds(spec.graph, backend)
+}
+
+/// Keep reject messages a short sentence (the wire caps them anyway).
+fn reject_text(s: &str) -> String {
+    if s.len() <= 1000 {
+        s.to_string()
+    } else {
+        s.chars().take(1000).collect()
+    }
+}
+
+/// Map one decoded client frame to its mailbox event — the single
+/// client-dialect definition both frontends share (the TCP reader thread
+/// and the channel harness's in-process client link). `Err` means the
+/// client broke protocol and must be dropped.
+pub(crate) fn client_frame_to_event(client: u64, frame: &[u8]) -> Result<Event> {
+    match wire::decode(frame)? {
+        Message::Submit(spec) => Ok(Event::ClientSubmit { client, spec: Box::new(spec) }),
+        Message::LabelsPull { run } => Ok(Event::ClientPull { client, run }),
+        other => bail!("client sent unexpected {other:?}"),
+    }
+}
+
+// ─── TCP frontend ──────────────────────────────────────────────────────────
+
+struct SiteLink {
+    addr: String,
+    /// Driver-owned write half; `None` while the link is down.
+    stream: Option<TcpStream>,
+    /// Incarnation counter for stale-event filtering.
+    gen: u64,
+}
+
+/// The socket-backed [`ServerDriver`]: one persistent session per site
+/// (reader threads feeding the mailbox), the client map shared with the
+/// acceptor thread, re-dial on demand, real time.
+struct TcpDriver {
+    timeouts: TcpTimeouts,
+    /// Kept so the mailbox can never disconnect and to arm new readers.
+    tx: Sender<Event>,
+    links: Vec<SiteLink>,
+    /// Client write halves, by client id — shared with the acceptor
+    /// thread, which registers each handshaken connection before spawning
+    /// its reader. `Arc` so a send can clone the handle out and release
+    /// the lock *before* the (possibly blocking) socket write — a slow
+    /// client must not stall the acceptor on this mutex.
+    clients: Arc<Mutex<HashMap<u64, Arc<TcpStream>>>>,
+}
+
+impl ServerDriver for TcpDriver {
+    fn n_sites(&self) -> usize {
+        self.links.len()
+    }
+
+    fn link_gen(&self, site: usize) -> u64 {
+        self.links[site].gen
+    }
+
+    fn send_site(&mut self, site: usize, frame: &[u8]) -> Result<()> {
+        let stream = self.links[site]
+            .stream
+            .as_ref()
+            .ok_or_else(|| anyhow!("site {site} link is down"))?;
+        tcp::send_frame(stream, frame).with_context(|| format!("send to site {site}"))
+    }
+
+    fn take_down(&mut self, site: usize) -> bool {
+        match self.links[site].stream.take() {
+            Some(stream) => {
+                let _ = stream.shutdown(Shutdown::Both); // wake its reader thread
+                self.links[site].gen += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn ensure_links(&mut self) -> Result<()> {
+        for site in 0..self.links.len() {
+            if self.links[site].stream.is_some() {
+                continue;
+            }
+            let stream =
+                tcp::connect_site(&self.links[site].addr, site as u32, &self.timeouts, true)
+                    .with_context(|| format!("re-dial site {site}"))?;
+            let rd = stream.try_clone().context("clone site socket for reading")?;
+            self.links[site].gen += 1;
+            self.links[site].stream = Some(stream);
+            spawn_site_reader(rd, site, self.links[site].gen, self.tx.clone());
+        }
+        Ok(())
+    }
+
+    fn send_client(&mut self, client: u64, frame: &[u8]) -> Result<()> {
+        // Lock only for the lookup; the write happens on a cloned handle.
+        let stream = {
+            let clients = self.clients.lock().unwrap();
+            match clients.get(&client) {
+                Some(stream) => Arc::clone(stream),
+                None => return Ok(()), // client hung up; results dropped
+            }
+        };
+        tcp::send_frame(&stream, frame)
+    }
+
+    fn drop_client(&mut self, client: u64) {
+        self.clients.lock().unwrap().remove(&client);
+    }
+
+    fn close_clients(&mut self) {
+        self.clients.lock().unwrap().clear();
+    }
+
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// Serve jobs until `opts.client_limit` client connections have come and
+/// gone (forever when `None`). `client_listener` is the already-bound job
+/// socket — the caller binds it so it can print the chosen address before
+/// the server blocks (`dsc leader --serve host:0`). Site links are dialed
+/// from `cfg.net.sites` as persistent multi-run sessions before any job
+/// is accepted.
+pub fn serve_jobs(
+    cfg: &PipelineConfig,
+    opts: &ServerOpts,
+    client_listener: TcpListener,
+) -> Result<ServerStats> {
+    if cfg.net.sites.is_empty() {
+        bail!("no site addresses configured (set [net] sites or --sites)");
+    }
+    let timeouts = cfg.net.tcp_timeouts();
+    let (tx, rx) = mpsc::channel::<Event>();
+
+    // Dial every site concurrently in the session dialect, then hand each
+    // connection's read half to a reader thread.
+    let conns = tcp::dial_sites(&cfg.net.sites, &timeouts, true)?;
+    let mut links = Vec::with_capacity(conns.len());
+    for (site, stream) in conns.into_iter().enumerate() {
+        let rd = stream.try_clone().context("clone site socket for reading")?;
+        spawn_site_reader(rd, site, 0, tx.clone());
+        links.push(SiteLink { addr: cfg.net.sites[site].clone(), stream: Some(stream), gen: 0 });
+    }
+
+    let clients = Arc::new(Mutex::new(HashMap::new()));
+    spawn_acceptor(client_listener, timeouts, cfg.seed, tx.clone(), Arc::clone(&clients));
+
+    let driver = TcpDriver { timeouts, tx: tx.clone(), links, clients };
+    // Centrals go to the pool only on the native backend — the XLA runtime
+    // is thread-local, so those deployments keep the inline path.
+    let workers =
+        if cfg.backend == Backend::Native { opts.central_workers } else { 0 };
+    let pool = CentralPool::start(workers, tx.clone(), None);
+    let mut reactor = Reactor::new(cfg.clone(), opts.clone(), driver, pool)?;
+
+    loop {
+        if reactor.done() {
+            return Ok(reactor.finish());
+        }
+        let event = match reactor.next_deadline() {
+            None => rx.recv().map_err(|_| anyhow!("reactor mailbox closed"))?,
+            Some(deadline) => {
+                let wait = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(wait) {
+                    Ok(ev) => ev,
+                    Err(RecvTimeoutError::Timeout) => Event::Tick,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        bail!("reactor mailbox closed")
+                    }
+                }
+            }
+        };
+        reactor.step(event);
+    }
+}
+
+/// Reader thread for one site-link incarnation: frames (and death) become
+/// mailbox events tagged with the link generation.
+fn spawn_site_reader(stream: TcpStream, site: usize, gen: u64, tx: Sender<Event>) {
+    thread::spawn(move || loop {
+        match tcp::recv_frame(&stream) {
+            Ok(Some(frame)) => {
+                if tx.send(Event::SiteFrame { site, gen, frame }).is_err() {
+                    return; // server gone
+                }
+            }
+            Ok(None) => {
+                let _ = tx.send(Event::SiteDown {
+                    site,
+                    gen,
+                    err: "site closed the connection".into(),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(Event::SiteDown { site, gen, err: format!("{e:#}") });
+                return;
+            }
+        }
+    });
+}
+
+/// Accept thread for the client socket: handshakes, registers the write
+/// half with the driver's client map, and spawns a per-connection reader.
+/// Handshake failures (port scans, version skew) are logged and never take
+/// the server down; persistent accept errors back off like the site
+/// daemon.
+fn spawn_acceptor(
+    listener: TcpListener,
+    timeouts: TcpTimeouts,
+    seed: u64,
+    tx: Sender<Event>,
+    clients: Arc<Mutex<HashMap<u64, Arc<TcpStream>>>>,
+) {
+    thread::spawn(move || {
+        let mut next_client = 1u64;
+        let mut backoff = Backoff::new(seed ^ 0x5EE1);
+        loop {
+            match tcp::accept_client(&listener, &timeouts) {
+                Ok(stream) => {
+                    backoff.reset();
+                    let client = next_client;
+                    next_client += 1;
+                    let rd = match stream.try_clone() {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("leader: clone client socket: {e}");
+                            continue;
+                        }
+                    };
+                    clients.lock().unwrap().insert(client, Arc::new(stream));
+                    spawn_client_reader(rd, client, tx.clone());
+                }
+                Err(e) => {
+                    eprintln!("leader: client accept failed: {e:#}");
+                    thread::sleep(backoff.next_delay());
+                }
+            }
+        }
+    });
+}
+
+/// Reader thread for one client connection: decodes frames into typed
+/// events; anything unexpected (or the connection ending) retires the
+/// client.
+fn spawn_client_reader(stream: TcpStream, client: u64, tx: Sender<Event>) {
+    thread::spawn(move || {
+        loop {
+            let frame = match tcp::recv_frame(&stream) {
+                Ok(Some(frame)) => frame,
+                Ok(None) | Err(_) => break,
+            };
+            let event = match client_frame_to_event(client, &frame) {
+                Ok(event) => event,
+                Err(e) => {
+                    eprintln!("leader: dropping client {client}: {e:#}");
+                    break;
+                }
+            };
+            if tx.send(event).is_err() {
+                return; // server gone: no one left to tell
+            }
+        }
+        let _ = tx.send(Event::ClientDown { client });
+    });
+}
+
 // ─── client side ───────────────────────────────────────────────────────────
 
+/// A frame link from a job client to a serving leader: the transport
+/// under [`JobClient`]. TCP ([`TcpClient`]) for `dsc submit`; the channel
+/// harness provides an in-process implementation, so the same typed
+/// client drives both backends.
+pub trait ClientLink {
+    /// Deliver one encoded frame to the leader.
+    fn send(&self, frame: &[u8]) -> Result<()>;
+    /// Next frame from the leader; `Ok(None)` means the leader closed.
+    /// Idle waiting is legal for however long a job takes.
+    fn recv(&self) -> Result<Option<Vec<u8>>>;
+}
+
+impl ClientLink for TcpClient {
+    fn send(&self, frame: &[u8]) -> Result<()> {
+        TcpClient::send(self, frame)
+    }
+    fn recv(&self) -> Result<Option<Vec<u8>>> {
+        TcpClient::recv(self)
+    }
+}
+
 /// A client of a job-serving leader (`dsc submit`, tests, drills): typed
-/// submit / await / pull over one [`TcpClient`] connection. Out-of-order
-/// frames (a `JOBDONE` for an earlier job arriving while waiting for a
-/// `JOBACCEPT`) are buffered, so one connection can carry several jobs.
-pub struct JobClient {
-    conn: TcpClient,
+/// submit / await / pull over one [`ClientLink`]. Out-of-order frames (a
+/// `JOBDONE` for an earlier job arriving while waiting for a `JOBACCEPT`)
+/// are buffered, so one connection can carry several jobs.
+pub struct JobClient<L: ClientLink = TcpClient> {
+    conn: L,
     pending: std::cell::RefCell<VecDeque<Message>>,
 }
 
-impl JobClient {
+impl JobClient<TcpClient> {
     /// Dial a leader's `--serve` address.
     pub fn connect(addr: &str, timeouts: &TcpTimeouts) -> Result<JobClient> {
-        Ok(JobClient {
-            conn: tcp::connect_client(addr, timeouts)?,
-            pending: std::cell::RefCell::new(VecDeque::new()),
-        })
+        Ok(JobClient::over(tcp::connect_client(addr, timeouts)?))
+    }
+}
+
+impl<L: ClientLink> JobClient<L> {
+    /// Wrap an established link (the channel harness calls this; TCP goes
+    /// through [`JobClient::connect`]).
+    pub fn over(conn: L) -> JobClient<L> {
+        JobClient { conn, pending: std::cell::RefCell::new(VecDeque::new()) }
     }
 
     /// Submit a job; returns the assigned run id.

@@ -5,9 +5,21 @@
 //! channels. Frames are the same encoded bytes the TCP backend ships, so
 //! the byte accounting (done above the transport seam) is identical; only
 //! the delivery mechanism differs.
+//!
+//! Beyond the plain [`star`], this module carries the building blocks of
+//! the **channel-backed job-server harness**
+//! ([`crate::coordinator::harness`]): [`star_endpoints`] exposes the
+//! leader-side raw channel ends so a reactor can own them directly, a
+//! [`FaultPlan`] injects deterministic link faults (drop a site after
+//! frame K, delay or duplicate a specific frame, swallow one run's
+//! frames) into the uplink without sockets or sleeps, and a
+//! [`VirtualClock`] lets tests drive straggler deadlines by advancing
+//! time explicitly instead of waiting it out. `docs/TESTING.md` shows how
+//! the pieces compose.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -28,6 +40,19 @@ pub struct ChannelSite {
 
 /// Build the channel star: one leader transport, `n_sites` site transports.
 pub fn star(n_sites: usize) -> (ChannelLeader, Vec<ChannelSite>) {
+    let (up_rx, to_sites, sites) = star_endpoints(n_sites);
+    (ChannelLeader { from_sites: up_rx, to_sites }, sites)
+}
+
+/// Build the channel star exposing the leader side as raw channel ends —
+/// the shared uplink mailbox and one downlink sender per site — instead of
+/// a [`ChannelLeader`]. The job-server harness uses this: its reactor owns
+/// the downlinks (so a fault plan can sever one) and a forwarder drains
+/// the uplink through the [`FaultPlan`] before frames become reactor
+/// events. The site halves are identical to [`star`]'s.
+pub fn star_endpoints(
+    n_sites: usize,
+) -> (Receiver<(usize, Vec<u8>)>, Vec<Sender<Vec<u8>>>, Vec<ChannelSite>) {
     let (up_tx, up_rx) = channel::<(usize, Vec<u8>)>();
     let mut to_sites = Vec::with_capacity(n_sites);
     let mut sites = Vec::with_capacity(n_sites);
@@ -36,7 +61,7 @@ pub fn star(n_sites: usize) -> (ChannelLeader, Vec<ChannelSite>) {
         to_sites.push(down_tx);
         sites.push(ChannelSite { site_id, to_leader: up_tx.clone(), from_leader: down_rx });
     }
-    (ChannelLeader { from_sites: up_rx, to_sites }, sites)
+    (up_rx, to_sites, sites)
 }
 
 impl LeaderTransport for ChannelLeader {
@@ -76,6 +101,203 @@ impl SiteTransport for ChannelSite {
     }
 }
 
+// ─── virtual clock ─────────────────────────────────────────────────────────
+
+/// A controllable clock for socket-free reactor tests: `now()` is a real
+/// [`Instant`] (so it flows straight into `RunMachine` deadlines), but it
+/// only moves when a test calls [`VirtualClock::advance`] — straggler
+/// deadlines become deterministic events instead of sleeps. Clones share
+/// the same time.
+#[derive(Clone, Debug)]
+pub struct VirtualClock {
+    base: Instant,
+    offset: Arc<Mutex<Duration>>,
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { base: Instant::now(), offset: Arc::new(Mutex::new(Duration::ZERO)) }
+    }
+
+    /// The current virtual instant: construction time plus every
+    /// [`advance`](VirtualClock::advance) so far.
+    pub fn now(&self) -> Instant {
+        self.base + *self.offset.lock().unwrap()
+    }
+
+    /// Move time forward by `d` (for every clone of this clock).
+    pub fn advance(&self, d: Duration) {
+        *self.offset.lock().unwrap() += d;
+    }
+}
+
+// ─── fault plan ────────────────────────────────────────────────────────────
+
+/// One deterministic uplink fault, keyed by per-site frame counts (frame 1
+/// is a site's first frame, in arrival order at the harness). Faults act on
+/// the *uplink* (site → leader) because that is where the interesting
+/// protocol state lives: registrations, codebooks, pulled labels.
+#[derive(Clone, Debug)]
+pub enum Fault {
+    /// Sever the site's link after its `frames`-th frame has been
+    /// delivered: a synthesized site-down follows it and every later frame
+    /// from that site is swallowed. `frames = 0` kills the link before it
+    /// delivers anything.
+    DropSiteAfter { site: usize, frames: u64 },
+    /// Hold the site's `frame`-th frame back until `release_after` further
+    /// frames (from any site) have been delivered, then deliver it — a
+    /// deterministic reordering, e.g. forcing one run's codebook to arrive
+    /// after another run's whole exchange.
+    DelayFrame { site: usize, frame: u64, release_after: u64 },
+    /// Deliver the site's `frame`-th frame twice, back to back — a
+    /// duplicated run-scoped frame must fail exactly that run ("site sent
+    /// two codebooks"), nothing else.
+    DuplicateFrame { site: usize, frame: u64 },
+    /// Silently swallow every frame of `site` that belongs to run `run`
+    /// (run-scoped uplink traffic only). The site stays healthy — so the
+    /// *straggler deadline*, not a site-down, must catch the stall.
+    DropRunFrames { site: usize, run: u32 },
+}
+
+/// What a [`FaultPlan`] tells the harness to do with the reactor mailbox.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Deliver {
+    /// Hand this frame to the reactor as a site frame.
+    Frame { site: usize, frame: Vec<u8> },
+    /// Tell the reactor the site's link died.
+    SiteDown { site: usize },
+}
+
+/// A stateful filter over the uplink: feed every `(site, frame)` through
+/// [`FaultPlan::on_frame`] and deliver what comes back, in order. With no
+/// faults it is the identity. All state is frame-count based, so a plan's
+/// behavior is a pure function of the frame arrival order — no clocks, no
+/// races.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    /// Frames *arrived* per site (1-based after increment).
+    seen: Vec<u64>,
+    /// Sites already severed.
+    dead: Vec<bool>,
+    /// Delayed frames: `(site, frame, deliveries still to wait out)`.
+    held: Vec<(usize, Vec<u8>, u64)>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan { faults, ..FaultPlan::default() }
+    }
+
+    /// Run id of a run-scoped site→leader frame, if it is one (decoding
+    /// errors and unscoped frames are `None` — the plan passes them on).
+    fn run_of(frame: &[u8]) -> Option<u32> {
+        match super::wire::decode(frame) {
+            Ok(super::wire::Message::RunSiteInfo { run, .. })
+            | Ok(super::wire::Message::RunCodebook { run, .. })
+            | Ok(super::wire::Message::SiteLabels { run, .. })
+            | Ok(super::wire::Message::Reject { run, .. }) => Some(run),
+            _ => None,
+        }
+    }
+
+    /// Feed one arriving uplink frame; returns the deliveries it causes,
+    /// in order (possibly none, possibly several once held frames release).
+    pub fn on_frame(&mut self, site: usize, frame: Vec<u8>) -> Vec<Deliver> {
+        if self.seen.len() <= site {
+            self.seen.resize(site + 1, 0);
+            self.dead.resize(site + 1, false);
+        }
+        self.seen[site] += 1;
+        let idx = self.seen[site];
+        let mut out = Vec::new();
+        if self.dead[site] {
+            return out; // severed link: everything later is swallowed
+        }
+
+        let mut swallow = false;
+        let mut duplicate = false;
+        let mut delay: Option<u64> = None;
+        let mut kill_after = false;
+        for f in &self.faults {
+            match *f {
+                Fault::DropSiteAfter { site: s, frames } if s == site && idx > frames => {
+                    // past the kill point without a delivery having
+                    // triggered it (frames = 0): sever now, swallow this
+                    self.dead[site] = true;
+                    out.push(Deliver::SiteDown { site });
+                    return out;
+                }
+                Fault::DropSiteAfter { site: s, frames } if s == site && idx == frames => {
+                    kill_after = true;
+                }
+                Fault::DelayFrame { site: s, frame: f_idx, release_after }
+                    if s == site && f_idx == idx =>
+                {
+                    delay = Some(release_after);
+                }
+                Fault::DuplicateFrame { site: s, frame: f_idx } if s == site && f_idx == idx => {
+                    duplicate = true;
+                }
+                Fault::DropRunFrames { site: s, run } if s == site => {
+                    if Self::run_of(&frame) == Some(run) {
+                        swallow = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        if swallow {
+            return out;
+        }
+        if let Some(release_after) = delay {
+            if release_after == 0 {
+                self.deliver(site, frame, &mut out);
+            } else {
+                self.held.push((site, frame, release_after));
+            }
+        } else if duplicate {
+            let copy = frame.clone();
+            self.deliver(site, frame, &mut out);
+            self.deliver(site, copy, &mut out);
+        } else {
+            self.deliver(site, frame, &mut out);
+        }
+        if kill_after {
+            self.dead[site] = true;
+            out.push(Deliver::SiteDown { site });
+        }
+        out
+    }
+
+    /// Deliver one frame and tick every held frame's release countdown,
+    /// emitting the ones that reach zero (their own deliveries tick the
+    /// countdowns of frames still held).
+    fn deliver(&mut self, site: usize, frame: Vec<u8>, out: &mut Vec<Deliver>) {
+        out.push(Deliver::Frame { site, frame });
+        let mut released = Vec::new();
+        for h in &mut self.held {
+            h.2 -= 1;
+            if h.2 == 0 {
+                released.push((h.0, std::mem::take(&mut h.1)));
+            }
+        }
+        self.held.retain(|h| h.2 > 0);
+        for (s, f) in released {
+            if !self.dead[s] {
+                self.deliver(s, f, out);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +325,94 @@ mod tests {
         drop(leader);
         assert!(sites[0].recv().is_err());
         assert!(sites[0].send(b"x".to_vec()).is_err());
+    }
+
+    #[test]
+    fn virtual_clock_only_moves_on_advance() {
+        let clock = VirtualClock::new();
+        let t0 = clock.now();
+        assert_eq!(clock.now(), t0, "time stands still without advance");
+        let twin = clock.clone();
+        twin.advance(Duration::from_secs(5));
+        assert_eq!(clock.now(), t0 + Duration::from_secs(5), "clones share time");
+    }
+
+    fn frames_of(deliveries: &[Deliver]) -> Vec<(usize, Vec<u8>)> {
+        deliveries
+            .iter()
+            .filter_map(|d| match d {
+                Deliver::Frame { site, frame } => Some((*site, frame.clone())),
+                Deliver::SiteDown { .. } => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_fault_plan_is_the_identity() {
+        let mut plan = FaultPlan::new(Vec::new());
+        for i in 0..4u8 {
+            let out = plan.on_frame(i as usize % 2, vec![i]);
+            assert_eq!(out, vec![Deliver::Frame { site: i as usize % 2, frame: vec![i] }]);
+        }
+    }
+
+    #[test]
+    fn drop_site_after_severs_and_swallows() {
+        let mut plan = FaultPlan::new(vec![Fault::DropSiteAfter { site: 0, frames: 2 }]);
+        assert_eq!(plan.on_frame(0, vec![1]).len(), 1);
+        let out = plan.on_frame(0, vec![2]);
+        assert_eq!(
+            out,
+            vec![
+                Deliver::Frame { site: 0, frame: vec![2] },
+                Deliver::SiteDown { site: 0 }
+            ]
+        );
+        assert!(plan.on_frame(0, vec![3]).is_empty(), "severed link swallows");
+        // the other site is untouched
+        assert_eq!(plan.on_frame(1, vec![9]).len(), 1);
+    }
+
+    #[test]
+    fn drop_site_after_zero_kills_before_first_frame() {
+        let mut plan = FaultPlan::new(vec![Fault::DropSiteAfter { site: 1, frames: 0 }]);
+        assert_eq!(plan.on_frame(1, vec![7]), vec![Deliver::SiteDown { site: 1 }]);
+        assert!(plan.on_frame(1, vec![8]).is_empty());
+    }
+
+    #[test]
+    fn delay_frame_reorders_deterministically() {
+        // hold site 0's 1st frame until 2 more deliveries have happened
+        let mut plan = FaultPlan::new(vec![Fault::DelayFrame {
+            site: 0,
+            frame: 1,
+            release_after: 2,
+        }]);
+        assert!(plan.on_frame(0, vec![10]).is_empty(), "held, not delivered");
+        assert_eq!(frames_of(&plan.on_frame(1, vec![20])), vec![(1, vec![20])]);
+        // the second delivery releases the held frame right after itself
+        let out = plan.on_frame(1, vec![21]);
+        assert_eq!(frames_of(&out), vec![(1, vec![21]), (0, vec![10])]);
+    }
+
+    #[test]
+    fn duplicate_frame_delivers_twice() {
+        let mut plan = FaultPlan::new(vec![Fault::DuplicateFrame { site: 0, frame: 2 }]);
+        assert_eq!(plan.on_frame(0, vec![1]).len(), 1);
+        let out = plan.on_frame(0, vec![2]);
+        assert_eq!(frames_of(&out), vec![(0, vec![2]), (0, vec![2])]);
+    }
+
+    #[test]
+    fn drop_run_frames_swallows_only_that_run() {
+        use super::super::wire::{encode, Message};
+        let mut plan = FaultPlan::new(vec![Fault::DropRunFrames { site: 0, run: 2 }]);
+        let run1 = encode(&Message::RunSiteInfo { run: 1, site: 0, n_points: 5, dim: 2 });
+        let run2 = encode(&Message::RunSiteInfo { run: 2, site: 0, n_points: 5, dim: 2 });
+        assert_eq!(plan.on_frame(0, run1.clone()).len(), 1, "run 1 passes");
+        assert!(plan.on_frame(0, run2.clone()).is_empty(), "run 2 swallowed");
+        // the same run from another site passes (the fault names site 0)
+        let run2_s1 = encode(&Message::RunSiteInfo { run: 2, site: 1, n_points: 5, dim: 2 });
+        assert_eq!(plan.on_frame(1, run2_s1).len(), 1);
     }
 }

@@ -304,9 +304,10 @@ pub fn connect_site(
         .with_context(|| format!("handshake with site {site_id} at {addr}"))
 }
 
-/// Write one length-prefixed frame to a raw stream (job-server send path;
-/// `TcpStream` writes are not buffered, so interleaved writers per stream
-/// must be externally serialized — the reactor is single-threaded).
+/// Write one length-prefixed frame to a raw stream (the job server's
+/// `TcpDriver` send path; `TcpStream` writes are not buffered, so
+/// interleaved writers per stream must be externally serialized — the
+/// reactor is single-threaded).
 pub fn send_frame(stream: &TcpStream, frame: &[u8]) -> Result<()> {
     let mut w = stream;
     write_frame(&mut w, frame)

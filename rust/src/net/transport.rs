@@ -8,9 +8,16 @@
 //!
 //! * [`super::channel`] — in-process `mpsc` star (the default for tests,
 //!   benches and `dsc run`): zero-cost links, every "site" is a thread.
+//!   Also carries the fault plan and virtual clock behind the channel
+//!   job-server harness (`crate::coordinator::harness`).
 //! * [`super::tcp`] — real sockets for the leader/site daemon modes
 //!   (`dsc leader` / `dsc site`): length-prefixed frames, a versioned
 //!   handshake, read/write timeouts.
+//!
+//! The multi-run job server sits one level up: its reactor moves raw
+//! frames through a `ServerDriver` (the acceptor / per-link reader /
+//! re-dial edge), with a TCP and a channel implementation over the same
+//! primitives these backends expose.
 //!
 //! Because byte accounting happens *above* this seam (the leader counts
 //! each encoded frame as it sends/receives it), the per-link counters in

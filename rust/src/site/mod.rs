@@ -167,14 +167,25 @@ pub struct SessionOutcome {
     pub aborted_runs: usize,
 }
 
-/// Populated labels kept for `LABELSPULL` after a run completes. Oldest
-/// evicted first; a pull for an evicted run gets a `REJECT` (the leader
-/// forwards it to the asking client).
-const LABEL_CACHE_RUNS: usize = 8;
+/// Limits on one multi-run [`session`] (config `[site]`, validated ≥ 1 at
+/// parse time — zero would silently refuse every pull or every run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionLimits {
+    /// Completed runs whose populated labels are kept for `LABELSPULL`.
+    /// Oldest evicted first; a pull for an evicted run gets a `REJECT`
+    /// (the leader forwards it to the asking client).
+    pub label_cache_runs: usize,
+    /// Most runs a leader may hold open on one session before the site
+    /// calls it hostile — a sanity backstop sized far above any real
+    /// `[leader] max_jobs`.
+    pub max_open_runs: usize,
+}
 
-/// Most runs a leader may hold open on one session before the site calls
-/// it hostile — a sanity backstop far above any real `[leader] max_jobs`.
-const MAX_OPEN_RUNS: usize = 64;
+impl Default for SessionLimits {
+    fn default() -> Self {
+        SessionLimits { label_cache_runs: 8, max_open_runs: 64 }
+    }
+}
 
 /// Serve a persistent multi-run session to a job-serving leader: the site
 /// side of the run-scoped dialect. Each `RUNSTART` is answered with a
@@ -182,13 +193,15 @@ const MAX_OPEN_RUNS: usize = 64;
 /// daemon loads it once at startup — never per run or per connection), and
 /// each label frame completes one run, invoking `on_served`. Frames of
 /// different runs may interleave arbitrarily; per-run state is keyed by
-/// run id. Returns when the leader closes the link cleanly; errors on
-/// protocol violations or a dead/idle-past-deadline link, either of which
-/// sends the daemon back to its accept loop.
+/// run id, bounded by `limits` ([`SessionLimits`], config `[site]`).
+/// Returns when the leader closes the link cleanly; errors on protocol
+/// violations or a dead/idle-past-deadline link, either of which sends the
+/// daemon back to its accept loop.
 pub fn session(
     net: &SiteNet,
     data: &Dataset,
     out_path: Option<&Path>,
+    limits: SessionLimits,
     mut on_served: impl FnMut(&RunServed),
 ) -> Result<SessionOutcome> {
     struct OpenRun {
@@ -232,8 +245,11 @@ pub fn session(
                 if open.contains_key(&run) {
                     bail!("two dml requests for run {run}");
                 }
-                if open.len() >= MAX_OPEN_RUNS {
-                    bail!("leader holds {MAX_OPEN_RUNS} runs open on one session");
+                if open.len() >= limits.max_open_runs {
+                    bail!(
+                        "leader holds {} runs open on one session ([site] max_open_runs)",
+                        limits.max_open_runs
+                    );
                 }
                 let params = DmlParams {
                     kind: dml,
@@ -282,7 +298,7 @@ pub fn session(
                     distortion: o.distortion,
                 });
                 cache.push((run, point_labels));
-                if cache.len() > LABEL_CACHE_RUNS {
+                if cache.len() > limits.label_cache_runs {
                     cache.remove(0);
                 }
                 outcome.runs_served += 1;
@@ -301,7 +317,8 @@ pub fn session(
                             run,
                             msg: format!(
                                 "run {run} is not in this site's label cache \
-                                 (keeps the last {LABEL_CACHE_RUNS} runs)"
+                                 (keeps the last {} runs — [site] label_cache_runs)",
+                                limits.label_cache_runs
                             ),
                         })
                         .context("send pull refusal")?,
@@ -450,7 +467,11 @@ mod tests {
             let ds = ds.clone();
             move || {
                 let mut served = Vec::new();
-                let out = session(&site_net, &ds, None, |r| served.push(r.run)).unwrap();
+                let out =
+                    session(&site_net, &ds, None, SessionLimits::default(), |r| {
+                        served.push(r.run)
+                    })
+                    .unwrap();
                 (out, served)
             }
         });
@@ -533,10 +554,106 @@ mod tests {
         let site_net = sites.remove(0);
         let worker = std::thread::spawn({
             let ds = ds.clone();
-            move || session(&site_net, &ds, None, |_| {})
+            move || session(&site_net, &ds, None, SessionLimits::default(), |_| {})
         });
         leader.send(0, &Message::RunLabels { run: 5, site: 0, labels: vec![1] }).unwrap();
         assert!(worker.join().unwrap().is_err());
+    }
+
+    /// `[site] label_cache_runs` really bounds the pull cache: with a
+    /// 1-run cache, completing a second run evicts the first.
+    #[test]
+    fn label_cache_limit_evicts_oldest_run() {
+        let ds = gmm::paper_mixture_2d(80, 13);
+        let (leader, mut sites) = star(1, LinkSpec::default());
+        let site_net = sites.remove(0);
+        let limits = SessionLimits { label_cache_runs: 1, max_open_runs: 64 };
+        let worker = std::thread::spawn({
+            let ds = ds.clone();
+            move || session(&site_net, &ds, None, limits, |_| {})
+        });
+
+        for run in [1u32, 2] {
+            leader.send(0, &Message::RunStart { run }).unwrap();
+            let _ = leader.recv().unwrap(); // registration
+            leader
+                .send(
+                    0,
+                    &Message::RunDmlRequest {
+                        run,
+                        site: 0,
+                        dml: DmlKind::KMeans,
+                        target_codes: 4,
+                        max_iters: 5,
+                        tol: 1e-6,
+                        seed: run as u64,
+                    },
+                )
+                .unwrap();
+            let _ = leader.recv().unwrap(); // codebook
+            leader
+                .send(0, &Message::RunLabels { run, site: 0, labels: vec![run as u16; 4] })
+                .unwrap();
+        }
+
+        // run 1 was evicted by run 2; the refusal names the config key
+        leader.send(0, &Message::LabelsPull { run: 1 }).unwrap();
+        match leader.recv().unwrap().1 {
+            Message::Reject { run, msg } => {
+                assert_eq!(run, 1);
+                assert!(msg.contains("last 1 runs"), "{msg}");
+                assert!(msg.contains("label_cache_runs"), "{msg}");
+            }
+            other => panic!("expected a refusal, got {other:?}"),
+        }
+        leader.send(0, &Message::LabelsPull { run: 2 }).unwrap();
+        match leader.recv().unwrap().1 {
+            Message::SiteLabels { run, labels, .. } => {
+                assert_eq!(run, 2);
+                assert_eq!(labels, vec![2u16; 80]);
+            }
+            other => panic!("expected run 2's labels, got {other:?}"),
+        }
+
+        drop(leader);
+        worker.join().unwrap().unwrap();
+    }
+
+    /// `[site] max_open_runs` is the hostile-leader backstop: one more
+    /// work order than the limit kills the session with a loud error.
+    #[test]
+    fn open_run_backstop_errors_past_the_limit() {
+        let ds = gmm::paper_mixture_2d(60, 17);
+        let (leader, mut sites) = star(1, LinkSpec::default());
+        let site_net = sites.remove(0);
+        let limits = SessionLimits { label_cache_runs: 8, max_open_runs: 2 };
+        let worker = std::thread::spawn({
+            let ds = ds.clone();
+            move || session(&site_net, &ds, None, limits, |_| {})
+        });
+
+        for run in 1u32..=3 {
+            leader
+                .send(
+                    0,
+                    &Message::RunDmlRequest {
+                        run,
+                        site: 0,
+                        dml: DmlKind::KMeans,
+                        target_codes: 4,
+                        max_iters: 5,
+                        tol: 1e-6,
+                        seed: 1,
+                    },
+                )
+                .unwrap();
+        }
+        // runs 1 and 2 produce codebooks; run 3 trips the backstop
+        let _ = leader.recv().unwrap();
+        let _ = leader.recv().unwrap();
+        let err = worker.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("2 runs open"), "{err}");
+        assert!(err.to_string().contains("max_open_runs"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! The job-serving reactor, end to end without a single socket: the
+//! channel harness (`dsc::coordinator::harness`) runs the identical
+//! reactor + `JobQueue` + `RunMachine` stack over in-process site
+//! sessions, with deterministic fault injection and a virtual clock.
+//!
+//! This suite owns the core job-server cases — concurrency parity,
+//! central-offload pipelining, straggler deadlines, fault behavior, the
+//! submit/pull policy gates. `rust/tests/job_server.rs` is the thin TCP
+//! parity/smoke layer on top; `examples/tcp_cluster.rs` re-proves the
+//! headline flow with separate OS processes. CI runs this file under
+//! `DSC_THREADS=1` and `DSC_THREADS=4` (see `docs/TESTING.md`).
+
+mod common;
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use common::pull_global;
+use dsc::config::PipelineConfig;
+use dsc::coordinator::harness::{serve_channel, HarnessOpts};
+use dsc::coordinator::server::ServerOpts;
+use dsc::coordinator::{run_pipeline, spec_from_config};
+use dsc::data::gmm;
+use dsc::data::scenario::{self, Scenario, SitePart};
+use dsc::data::Dataset;
+use dsc::net::channel::Fault;
+use dsc::net::{JobReport, JobSpec};
+use dsc::spectral::Bandwidth;
+
+fn workload() -> Vec<SitePart> {
+    let ds = gmm::paper_mixture_10d(2_000, 0.1, 21);
+    scenario::split(&ds, Scenario::D3, 2, 21)
+}
+
+fn datasets(parts: &[SitePart]) -> Vec<Dataset> {
+    parts.iter().map(|p| p.data.clone()).collect()
+}
+
+fn cfg_with_seed(seed: u64) -> PipelineConfig {
+    PipelineConfig {
+        total_codes: 64,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// One job's result as a client saw it: the leader's report plus the
+/// pulled per-point labels assembled into the global vector
+/// (`common::pull_global`).
+struct ServedJob {
+    report: JobReport,
+    labels: Vec<u16>,
+}
+
+/// Push `specs` through a fresh channel harness (all submitted up front
+/// when `concurrent`, else strictly one after another), pull every run's
+/// labels, and join everything down cleanly.
+fn serve_and_submit(
+    parts: &[SitePart],
+    specs: &[JobSpec],
+    concurrent: bool,
+) -> (Vec<ServedJob>, dsc::coordinator::server::ServerStats) {
+    let cfg = cfg_with_seed(0);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: if concurrent { specs.len().max(1) } else { 1 },
+            queue_depth: 8,
+            allow_label_pull: true,
+            client_limit: Some(specs.len() as u64),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut harness = serve_channel(datasets(parts), &cfg, opts).unwrap();
+
+    let mut served = Vec::new();
+    if concurrent {
+        // every job in flight before any result is awaited
+        let clients: Vec<_> = specs.iter().map(|_| harness.client()).collect();
+        let runs: Vec<u32> =
+            clients.iter().zip(specs).map(|(c, s)| c.submit(s).unwrap()).collect();
+        for (client, run) in clients.iter().zip(&runs) {
+            let report = client.await_done(*run).unwrap();
+            let labels = pull_global(client, *run, &report, parts);
+            served.push(ServedJob { report, labels });
+        }
+        drop(clients); // disconnect: lets the server reach its client_limit
+    } else {
+        for spec in specs {
+            let client = harness.client();
+            let run = client.submit(spec).unwrap();
+            let report = client.await_done(run).unwrap();
+            let labels = pull_global(&client, run, &report, parts);
+            served.push(ServedJob { report, labels });
+        }
+    }
+    let (stats, outcomes) = harness.join().unwrap();
+    // the server shutting down ends every site session cleanly
+    for outcome in outcomes {
+        assert_eq!(outcome.aborted_runs, 0);
+    }
+    (served, stats)
+}
+
+/// A two-phase gate for instrumenting one run's central step: the worker
+/// announces it entered, then blocks until the test opens the gate.
+struct Gate {
+    entered: Mutex<bool>,
+    entered_cv: Condvar,
+    open: Mutex<bool>,
+    open_cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate {
+            entered: Mutex::new(false),
+            entered_cv: Condvar::new(),
+            open: Mutex::new(false),
+            open_cv: Condvar::new(),
+        })
+    }
+
+    /// Central-worker side: announce, then wait for the test.
+    fn enter_and_wait(&self) {
+        *self.entered.lock().unwrap() = true;
+        self.entered_cv.notify_all();
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.open_cv.wait(open).unwrap();
+        }
+    }
+
+    /// Test side: block until the worker is inside the central step.
+    fn wait_entered(&self) {
+        let mut entered = self.entered.lock().unwrap();
+        while !*entered {
+            entered = self.entered_cv.wait(entered).unwrap();
+        }
+    }
+
+    /// Test side: release the worker.
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.open_cv.notify_all();
+    }
+}
+
+/// The concurrency acceptance core, socket-free: two jobs submitted
+/// concurrently complete with labels and per-run, per-link byte counters
+/// identical to running them sequentially — and identical labels to the
+/// in-process channel pipeline. (`rust/tests/job_server.rs` extends this
+/// parity across the TCP job server.)
+#[test]
+fn concurrent_jobs_match_sequential_and_pipeline() {
+    let parts = workload();
+    let spec_a = spec_from_config(&cfg_with_seed(21));
+    let spec_b = spec_from_config(&cfg_with_seed(77));
+    let specs = [spec_a, spec_b];
+
+    let base_a = run_pipeline(&parts, &cfg_with_seed(21)).unwrap();
+    let base_b = run_pipeline(&parts, &cfg_with_seed(77)).unwrap();
+
+    let (concurrent, stats_c) = serve_and_submit(&parts, &specs, true);
+    let (sequential, stats_s) = serve_and_submit(&parts, &specs, false);
+    assert_eq!(stats_c.completed, 2);
+    assert_eq!(stats_c.failed, 0);
+    assert_eq!(stats_s.completed, 2);
+
+    for (i, base) in [&base_a, &base_b].into_iter().enumerate() {
+        // labels: concurrent == sequential == the channel pipeline
+        assert_eq!(concurrent[i].labels, base.labels, "job {i} vs pipeline");
+        assert_eq!(concurrent[i].labels, sequential[i].labels, "job {i} concurrency");
+
+        // per-run, per-link counters: byte-for-byte across interleavings
+        let (c, s) = (&concurrent[i].report, &sequential[i].report);
+        assert_eq!(c.n_codes, s.n_codes, "job {i} codes");
+        assert_eq!(c.sigma, s.sigma, "job {i} sigma");
+        assert_eq!(c.per_site, s.per_site, "job {i} per-link counters");
+
+        // the run-scoped dialect is exactly 2 frames up (registration +
+        // codebook) and 3 down (run open + work order + labels) per site
+        for (sid, l) in c.per_site.iter().enumerate() {
+            assert_eq!(l.up_frames, 2, "job {i} site {sid} up frames");
+            assert_eq!(l.down_frames, 3, "job {i} site {sid} down frames");
+        }
+        assert_eq!(c.n_codes as usize, base.n_codes, "job {i} codes vs pipeline");
+    }
+    // two different seeds really are two different clusterings of the
+    // same data (guards against comparing a job with itself)
+    assert_ne!(concurrent[0].labels, concurrent[1].labels);
+}
+
+/// The pipelining acceptance test: with an instrumented slow central for
+/// run A (a gate the test holds shut), run B's frames keep being
+/// dispatched and B *completes* — labels delivered, `JOBDONE` received —
+/// strictly before A's `CentralDone` is processed. Before the worker-pool
+/// offload, A's central ran on the reactor thread and B's frames just
+/// queued in the mailbox until it finished.
+#[test]
+fn slow_central_for_one_run_does_not_block_another() {
+    let parts = workload();
+    let base_a = run_pipeline(&parts, &cfg_with_seed(21)).unwrap();
+    let base_b = run_pipeline(&parts, &cfg_with_seed(77)).unwrap();
+
+    let gate = Gate::new();
+    let hook = {
+        let gate = Arc::clone(&gate);
+        Arc::new(move |run: u32| {
+            if run == 1 {
+                gate.enter_and_wait();
+            }
+        })
+    };
+    let cfg = cfg_with_seed(0);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 2,
+            queue_depth: 8,
+            allow_label_pull: true,
+            central_workers: 2, // A's blocked worker must not starve B
+            client_limit: Some(2),
+        },
+        faults: Vec::new(),
+        central_hook: Some(hook),
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client_a = harness.client();
+    let client_b = harness.client();
+    let run_a = client_a.submit(&spec_from_config(&cfg_with_seed(21))).unwrap();
+    let run_b = client_b.submit(&spec_from_config(&cfg_with_seed(77))).unwrap();
+    assert_eq!((run_a, run_b), (1, 2));
+
+    // A's central is in flight and deterministically stuck.
+    gate.wait_entered();
+
+    // B runs end to end — sites served, central computed, labels out —
+    // while A's central is still blocked: the pipelining proof.
+    let report_b = client_b.await_done(run_b).unwrap();
+    let labels_b = pull_global(&client_b, run_b, &report_b, &parts);
+    assert_eq!(labels_b, base_b.labels);
+
+    // Only now may A finish; its result is unaffected by the stall.
+    gate.open();
+    let report_a = client_a.await_done(run_a).unwrap();
+    let labels_a = pull_global(&client_a, run_a, &report_a, &parts);
+    assert_eq!(labels_a, base_a.labels);
+
+    drop(client_a);
+    drop(client_b);
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 0);
+}
+
+/// A straggler deadline must fire on schedule even while another run's
+/// central is in flight: run A blocks in its central, run B's site frames
+/// are swallowed by the fault plan, and advancing the virtual clock past
+/// `collect_timeout` fails exactly B with the canonical straggler error.
+#[test]
+fn deadline_fires_during_another_runs_central() {
+    let parts = workload();
+    let gate = Gate::new();
+    let hook = {
+        let gate = Arc::clone(&gate);
+        Arc::new(move |run: u32| {
+            if run == 1 {
+                gate.enter_and_wait();
+            }
+        })
+    };
+    let mut cfg = cfg_with_seed(0);
+    cfg.collect_timeout = Duration::from_secs(5); // virtual seconds
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 2,
+            queue_depth: 8,
+            allow_label_pull: false,
+            central_workers: 2,
+            client_limit: Some(2),
+        },
+        // run 2 never registers: both sites' run-2 frames vanish, while
+        // the sites themselves stay healthy (no SiteDown — only the
+        // deadline can catch this stall)
+        faults: vec![
+            Fault::DropRunFrames { site: 0, run: 2 },
+            Fault::DropRunFrames { site: 1, run: 2 },
+        ],
+        central_hook: Some(hook),
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client_a = harness.client();
+    let client_b = harness.client();
+    let run_a = client_a.submit(&spec_from_config(&cfg_with_seed(21))).unwrap();
+    gate.wait_entered(); // A is mid-central and stuck
+    let run_b = client_b.submit(&spec_from_config(&cfg_with_seed(77))).unwrap();
+    assert_eq!((run_a, run_b), (1, 2));
+
+    // Advance past B's registration deadline. A has no collect deadline
+    // (it is mid-central), so the tick must fail B and only B.
+    harness.tick(Duration::from_secs(6));
+    let err = client_b.await_done(run_b).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("registration collect failed"), "{msg}");
+    assert!(msg.contains("[0, 1]"), "both sites never reported for B: {msg}");
+
+    // A was untouched by the deadline sweep and completes once released.
+    gate.open();
+    client_a.await_done(run_a).unwrap();
+
+    drop(client_a);
+    drop(client_b);
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.failed, 1);
+}
+
+/// A duplicated run-scoped frame (fault plan, deterministic) fails exactly
+/// the run it belongs to — the next job reuses the same sessions and
+/// completes with full parity. Also exercises the stale-`CentralDone`
+/// path: if the duplicate lands after collection completed, the run dies
+/// while its central is in flight and the worker's result is discarded.
+#[test]
+fn duplicated_codebook_fails_only_its_run() {
+    let parts = workload();
+    let spec = spec_from_config(&cfg_with_seed(21));
+    let base = run_pipeline(&parts, &cfg_with_seed(21)).unwrap();
+
+    let cfg = cfg_with_seed(0);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: true,
+            client_limit: Some(2),
+            ..Default::default()
+        },
+        // site 0's second uplink frame is run 1's codebook: deliver twice
+        faults: vec![Fault::DuplicateFrame { site: 0, frame: 2 }],
+        ..Default::default()
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client_a = harness.client();
+    let run_a = client_a.submit(&spec).unwrap();
+    let err = client_a.await_done(run_a).unwrap_err();
+    assert!(format!("{err:#}").contains("codebook"), "{err:#}");
+    drop(client_a);
+
+    // same sessions, next job: unaffected, full parity
+    let client_b = harness.client();
+    let run_b = client_b.submit(&spec).unwrap();
+    let report_b = client_b.await_done(run_b).unwrap();
+    let labels_b = pull_global(&client_b, run_b, &report_b, &parts);
+    assert_eq!(labels_b, base.labels);
+    drop(client_b);
+
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.failed, 1);
+}
+
+/// A severed site link (fault plan) fails the active run; the surviving
+/// site's session ends cleanly with the run counted as aborted.
+#[test]
+fn severed_site_link_fails_the_active_run() {
+    let parts = workload();
+    let spec = spec_from_config(&cfg_with_seed(21));
+
+    let cfg = cfg_with_seed(0);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: false,
+            client_limit: Some(1),
+            ..Default::default()
+        },
+        // site 1 dies right after delivering run 1's codebook (its 2nd
+        // uplink frame) — by then every site has opened the run, so the
+        // aborted-run accounting below is order-independent
+        faults: vec![Fault::DropSiteAfter { site: 1, frames: 2 }],
+        ..Default::default()
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client = harness.client();
+    let run = client.submit(&spec).unwrap();
+    let err = client.await_done(run).unwrap_err();
+    assert!(format!("{err:#}").contains("site 1"), "{err:#}");
+    drop(client);
+
+    let (stats, outcomes) = harness.join().unwrap();
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.failed, 1);
+    // both sites had the run open (work orders out); it died with the star
+    assert_eq!(outcomes[0].runs_served, 0);
+    assert_eq!(outcomes[0].aborted_runs, 1);
+    assert_eq!(outcomes[1].aborted_runs, 1);
+}
+
+/// A hostile or buggy job spec is refused at submit time with a reason —
+/// it must never reach the central step, where `k = 0` would panic the
+/// reactor and take every client's runs down with it.
+#[test]
+fn hostile_spec_is_rejected_at_submit() {
+    let ds = gmm::paper_mixture_10d(400, 0.1, 51);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 51);
+
+    let cfg = cfg_with_seed(51);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 2,
+            allow_label_pull: false,
+            client_limit: Some(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client = harness.client();
+    let mut bad = spec_from_config(&cfg_with_seed(51));
+    bad.k_clusters = 0;
+    let err = client.submit(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("bad job spec"), "{err:#}");
+
+    // the connection (and the server) survive the refusal
+    let run = client.submit(&spec_from_config(&cfg_with_seed(51))).unwrap();
+    client.await_done(run).unwrap();
+    drop(client);
+
+    let (stats, outcomes) = harness.join().unwrap();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(outcomes[0].runs_served, 1);
+}
+
+/// `[leader] allow_label_pull` gates the pull plane; an unknown run is
+/// refused with a reason; and a run evicted from the site's label cache
+/// (`[site] label_cache_runs`, here shrunk to 1) is refused by the site
+/// through the leader.
+#[test]
+fn label_pull_policy_unknown_run_and_eviction() {
+    let ds = gmm::paper_mixture_10d(600, 0.1, 33);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 33);
+    let spec = spec_from_config(&cfg_with_seed(33));
+
+    for allow in [false, true] {
+        let mut cfg = cfg_with_seed(33);
+        cfg.site.label_cache_runs = 1; // second completed run evicts the first
+        let opts = HarnessOpts {
+            server: ServerOpts {
+                max_jobs: 1,
+                queue_depth: 4,
+                allow_label_pull: allow,
+                client_limit: Some(1),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+        let client = harness.client();
+        let run1 = client.submit(&spec).unwrap();
+        let report1 = client.await_done(run1).unwrap();
+        if allow {
+            let err = client.pull_labels(9999, 1).unwrap_err();
+            assert!(format!("{err:#}").contains("not a completed run"), "{err:#}");
+            let pulled = client.pull_labels(run1, report1.per_site.len()).unwrap();
+            assert_eq!(pulled.len(), 1);
+            assert_eq!(pulled[0].1.len(), parts[0].data.len());
+
+            // a second run evicts the first from the 1-deep site cache
+            let run2 = client.submit(&spec).unwrap();
+            let report2 = client.await_done(run2).unwrap();
+            let err = client.pull_labels(run1, report1.per_site.len()).unwrap_err();
+            assert!(format!("{err:#}").contains("label cache"), "{err:#}");
+            client.pull_labels(run2, report2.per_site.len()).unwrap();
+        } else {
+            let err = client.pull_labels(run1, report1.per_site.len()).unwrap_err();
+            assert!(format!("{err:#}").contains("disabled"), "{err:#}");
+        }
+        drop(client);
+        let (stats, _) = harness.join().unwrap();
+        assert_eq!(stats.completed, if allow { 2 } else { 1 });
+    }
+}
+
+/// The harness refuses to start without a shutdown condition — an
+/// unbounded in-process server could never be joined.
+#[test]
+fn harness_requires_a_client_limit() {
+    let ds = gmm::paper_mixture_10d(100, 0.1, 1);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 1);
+    let opts = HarnessOpts::default(); // client_limit: None
+    let err = serve_channel(datasets(&parts), &cfg_with_seed(1), opts).unwrap_err();
+    assert!(format!("{err:#}").contains("client_limit"), "{err:#}");
+}
+
+/// Reuse-of-harness sanity: the typed client API is the same one `dsc
+/// submit` uses over TCP, so one client can carry several jobs with
+/// interleaved completions buffered correctly.
+#[test]
+fn one_client_carries_two_interleaved_jobs() {
+    let parts = workload();
+    let cfg = cfg_with_seed(0);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 2,
+            queue_depth: 8,
+            allow_label_pull: false,
+            client_limit: Some(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client = harness.client();
+    let run_a = client.submit(&spec_from_config(&cfg_with_seed(21))).unwrap();
+    let run_b = client.submit(&spec_from_config(&cfg_with_seed(77))).unwrap();
+    // await in reverse submission order: the earlier JOBDONE (whichever
+    // finishes first) is buffered, not lost
+    let report_b = client.await_done(run_b).unwrap();
+    let report_a = client.await_done(run_a).unwrap();
+    assert!(report_a.n_codes > 0 && report_b.n_codes > 0);
+    drop(client);
+
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 2);
+}

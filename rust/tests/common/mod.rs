@@ -1,0 +1,29 @@
+//! Helpers shared by the job-server test suites (included via
+//! `mod common;` — not a test binary of its own).
+
+use dsc::coordinator::server::{ClientLink, JobClient};
+use dsc::data::scenario::SitePart;
+use dsc::net::JobReport;
+
+/// Pull a completed run's per-site labels through the leader and scatter
+/// them into the global label vector via each part's `global_idx`.
+/// Generic over the client link, so the TCP and channel suites assemble
+/// labels identically.
+pub fn pull_global<L: ClientLink>(
+    client: &JobClient<L>,
+    run: u32,
+    report: &JobReport,
+    parts: &[SitePart],
+) -> Vec<u16> {
+    let per_site = client.pull_labels(run, report.per_site.len()).unwrap();
+    let total: usize = parts.iter().map(|p| p.data.len()).sum();
+    let mut labels = vec![0u16; total];
+    for (site, ls) in per_site {
+        let part = &parts[site];
+        assert_eq!(ls.len(), part.data.len(), "site {site} label count");
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            labels[g as usize] = ls[local];
+        }
+    }
+    labels
+}

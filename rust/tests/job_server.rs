@@ -1,21 +1,30 @@
-//! The job-serving leader, end to end over real loopback sockets: two
-//! concurrent jobs interleaving over shared persistent site sessions, with
-//! per-run byte/label parity against (a) the same jobs run sequentially
-//! through the server and (b) the in-process channel pipeline; a mid-run
-//! site death failing only the affected run while the queue drains onto a
-//! re-dialed link; and the label-pull policy gate.
-//! (`examples/tcp_cluster.rs` re-proves the headline flow with separate OS
-//! processes.)
+//! TCP parity/smoke layer over the job server. The core multi-run cases —
+//! concurrency parity, central-offload pipelining, straggler deadlines,
+//! fault behavior, submit/pull policy — live socket-free in
+//! `rust/tests/channel_harness.rs`; this file keeps only what genuinely
+//! needs sockets: (1) that the TCP job server produces labels and per-run
+//! byte counters identical to the channel harness and the in-process
+//! pipeline for concurrent jobs over real loopback connections, and
+//! (2) the re-dial path — a mid-run site death failing only the affected
+//! run while the queue drains onto a re-dialed link, which channel links
+//! (unrevivable by design) cannot express.
+//! (`examples/tcp_cluster.rs` re-proves the headline flow with separate
+//! OS processes.)
+
+mod common;
 
 use std::time::Duration;
 
+use common::pull_global;
 use dsc::config::PipelineConfig;
+use dsc::coordinator::harness::{serve_channel, HarnessOpts};
 use dsc::coordinator::server::{serve_jobs, JobClient, ServerOpts, ServerStats};
 use dsc::coordinator::{run_pipeline, spec_from_config};
 use dsc::data::gmm;
 use dsc::data::scenario::{self, Scenario, SitePart};
 use dsc::net::tcp::{SiteListener, TcpTimeouts};
 use dsc::net::{JobReport, JobSpec, Message, SiteNet};
+use dsc::site::SessionLimits;
 use dsc::spectral::Bandwidth;
 
 fn timeouts() -> TcpTimeouts {
@@ -43,39 +52,17 @@ fn cfg_with_seed(seed: u64) -> PipelineConfig {
 }
 
 /// One job's result as a client saw it: the leader's report plus the
-/// pulled per-point labels assembled into the global vector.
+/// pulled per-point labels assembled into the global vector
+/// (`common::pull_global`).
 struct ServedJob {
     report: JobReport,
     labels: Vec<u16>,
 }
 
-fn pull_global(
-    client: &JobClient,
-    run: u32,
-    report: &JobReport,
-    parts: &[SitePart],
-) -> Vec<u16> {
-    let per_site = client.pull_labels(run, report.per_site.len()).unwrap();
-    let total: usize = parts.iter().map(|p| p.data.len()).sum();
-    let mut labels = vec![0u16; total];
-    for (site, ls) in per_site {
-        let part = &parts[site];
-        assert_eq!(ls.len(), part.data.len(), "site {site} label count");
-        for (local, &g) in part.global_idx.iter().enumerate() {
-            labels[g as usize] = ls[local];
-        }
-    }
-    labels
-}
-
-/// Stand up persistent site sessions + a job server, push `specs` through
-/// it (all submitted up front when `concurrent`, else strictly one after
-/// another), pull every run's labels, and tear everything down cleanly.
-fn serve_and_submit(
-    parts: &[SitePart],
-    specs: &[JobSpec],
-    concurrent: bool,
-) -> (Vec<ServedJob>, ServerStats) {
+/// Stand up persistent site sessions + a TCP job server, push `specs`
+/// through it concurrently (all submitted before any result is awaited),
+/// pull every run's labels, and tear everything down cleanly.
+fn serve_and_submit_tcp(parts: &[SitePart], specs: &[JobSpec]) -> (Vec<ServedJob>, ServerStats) {
     let mut addrs = Vec::new();
     let mut site_threads = Vec::new();
     for part in parts {
@@ -87,17 +74,18 @@ fn serve_and_submit(
             assert!(conn.session_mode(), "a job server must open sessions");
             let net = SiteNet::over(Box::new(conn));
             // one persistent session serves every run of this test
-            dsc::site::session(&net, &data, None, |_| {}).unwrap()
+            dsc::site::session(&net, &data, None, SessionLimits::default(), |_| {}).unwrap()
         }));
     }
 
     let mut cfg = cfg_with_seed(0);
     cfg.net.sites = addrs;
     let opts = ServerOpts {
-        max_jobs: if concurrent { specs.len().max(1) } else { 1 },
+        max_jobs: specs.len().max(1),
         queue_depth: 8,
         allow_label_pull: true,
         client_limit: Some(specs.len() as u64),
+        ..Default::default()
     };
     let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let leader_addr = client_listener.local_addr().unwrap().to_string();
@@ -107,28 +95,19 @@ fn serve_and_submit(
         move || serve_jobs(&cfg, &opts, client_listener).unwrap()
     });
 
+    // every job in flight before any result is awaited
+    let clients: Vec<JobClient> =
+        specs.iter().map(|_| JobClient::connect(&leader_addr, &timeouts()).unwrap()).collect();
+    let runs: Vec<u32> =
+        clients.iter().zip(specs).map(|(c, s)| c.submit(s).unwrap()).collect();
     let mut served = Vec::new();
-    if concurrent {
-        // every job in flight before any result is awaited
-        let clients: Vec<JobClient> =
-            specs.iter().map(|_| JobClient::connect(&leader_addr, &timeouts()).unwrap()).collect();
-        let runs: Vec<u32> =
-            clients.iter().zip(specs).map(|(c, s)| c.submit(s).unwrap()).collect();
-        for (client, run) in clients.iter().zip(&runs) {
-            let report = client.await_done(*run).unwrap();
-            let labels = pull_global(client, *run, &report, parts);
-            served.push(ServedJob { report, labels });
-        }
-        drop(clients); // disconnect: lets the server reach its client_limit
-    } else {
-        for spec in specs {
-            let client = JobClient::connect(&leader_addr, &timeouts()).unwrap();
-            let run = client.submit(spec).unwrap();
-            let report = client.await_done(run).unwrap();
-            let labels = pull_global(&client, run, &report, parts);
-            served.push(ServedJob { report, labels });
-        }
+    for (client, run) in clients.iter().zip(&runs) {
+        let report = client.await_done(*run).unwrap();
+        let labels = pull_global(client, *run, &report, parts);
+        served.push(ServedJob { report, labels });
     }
+    drop(clients); // disconnect: lets the server reach its client_limit
+
     let stats = server.join().unwrap();
     // the server dropping its site links ends every session cleanly
     for t in site_threads {
@@ -138,12 +117,45 @@ fn serve_and_submit(
     (served, stats)
 }
 
-/// The acceptance headline: two jobs submitted concurrently to one leader
-/// complete with labels and per-link counters identical to running them
-/// sequentially — and identical labels to the in-process channel pipeline,
+/// The same jobs through the socket-free channel harness, for the
+/// cross-backend parity check.
+fn serve_and_submit_channel(parts: &[SitePart], specs: &[JobSpec]) -> Vec<ServedJob> {
+    let cfg = cfg_with_seed(0);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: specs.len().max(1),
+            queue_depth: 8,
+            allow_label_pull: true,
+            client_limit: Some(specs.len() as u64),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let datasets = parts.iter().map(|p| p.data.clone()).collect();
+    let mut harness = serve_channel(datasets, &cfg, opts).unwrap();
+    let clients: Vec<_> = specs.iter().map(|_| harness.client()).collect();
+    let runs: Vec<u32> =
+        clients.iter().zip(specs).map(|(c, s)| c.submit(s).unwrap()).collect();
+    let mut served = Vec::new();
+    for (client, run) in clients.iter().zip(&runs) {
+        let report = client.await_done(*run).unwrap();
+        let labels = pull_global(client, *run, &report, parts);
+        served.push(ServedJob { report, labels });
+    }
+    drop(clients);
+    harness.join().unwrap();
+    served
+}
+
+/// The acceptance headline over real loopback sockets: two jobs submitted
+/// concurrently to one TCP leader complete with labels and per-run,
+/// per-link byte counters identical to the channel job server running the
+/// same jobs — and identical labels to the in-process channel pipeline,
 /// with each site's shard served from one session (loaded exactly once).
+/// The byte counters are kept above the transport seam, so TCP ≡ channel
+/// is by construction; this pins it.
 #[test]
-fn concurrent_jobs_match_sequential_and_channel() {
+fn concurrent_tcp_jobs_match_channel_server_and_pipeline() {
     let (_ds, parts) = workload();
     let spec_a = spec_from_config(&cfg_with_seed(21));
     let spec_b = spec_from_config(&cfg_with_seed(77));
@@ -152,39 +164,39 @@ fn concurrent_jobs_match_sequential_and_channel() {
     let base_a = run_pipeline(&parts, &cfg_with_seed(21)).unwrap();
     let base_b = run_pipeline(&parts, &cfg_with_seed(77)).unwrap();
 
-    let (concurrent, stats_c) = serve_and_submit(&parts, &specs, true);
-    let (sequential, stats_s) = serve_and_submit(&parts, &specs, false);
-    assert_eq!(stats_c.completed, 2);
-    assert_eq!(stats_c.failed, 0);
-    assert_eq!(stats_s.completed, 2);
+    let (tcp, stats) = serve_and_submit_tcp(&parts, &specs);
+    let channel = serve_and_submit_channel(&parts, &specs);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 0);
 
     for (i, base) in [&base_a, &base_b].into_iter().enumerate() {
-        // labels: concurrent == sequential == the channel pipeline
-        assert_eq!(concurrent[i].labels, base.labels, "job {i} vs channel");
-        assert_eq!(concurrent[i].labels, sequential[i].labels, "job {i} concurrency");
+        // labels: TCP == channel job server == the channel pipeline
+        assert_eq!(tcp[i].labels, base.labels, "job {i} vs pipeline");
+        assert_eq!(tcp[i].labels, channel[i].labels, "job {i} vs channel server");
 
-        // per-run, per-link counters: byte-for-byte across interleavings
-        let (c, s) = (&concurrent[i].report, &sequential[i].report);
-        assert_eq!(c.n_codes, s.n_codes, "job {i} codes");
-        assert_eq!(c.sigma, s.sigma, "job {i} sigma");
-        assert_eq!(c.per_site, s.per_site, "job {i} per-link counters");
+        // per-run, per-link counters: byte-for-byte across transports
+        let (t, c) = (&tcp[i].report, &channel[i].report);
+        assert_eq!(t.n_codes, c.n_codes, "job {i} codes");
+        assert_eq!(t.sigma, c.sigma, "job {i} sigma");
+        assert_eq!(t.per_site, c.per_site, "job {i} per-link counters");
 
         // the run-scoped dialect is exactly 2 frames up (registration +
         // codebook) and 3 down (run open + work order + labels) per site
-        for (sid, l) in c.per_site.iter().enumerate() {
+        for (sid, l) in t.per_site.iter().enumerate() {
             assert_eq!(l.up_frames, 2, "job {i} site {sid} up frames");
             assert_eq!(l.down_frames, 3, "job {i} site {sid} down frames");
         }
-        assert_eq!(c.n_codes as usize, base.n_codes, "job {i} codes vs channel");
     }
     // two different seeds really are two different clusterings of the
     // same data (guards against comparing a job with itself)
-    assert_ne!(concurrent[0].labels, concurrent[1].labels);
+    assert_ne!(tcp[0].labels, tcp[1].labels);
 }
 
 /// A site dying mid-run fails only the run that was in flight: the queued
 /// job behind it is served after the leader re-dials the restarted site,
-/// over the surviving site's original session.
+/// over the surviving site's original session. Re-dial is a TCP-only
+/// behavior (channel links cannot be revived), so this is the one failure
+/// case that stays socket-bound.
 #[test]
 fn site_death_fails_one_run_and_the_queue_drains() {
     let (_ds, parts) = workload();
@@ -197,7 +209,7 @@ fn site_death_fails_one_run_and_the_queue_drains() {
     let data0 = parts[0].data.clone();
     let site0 = std::thread::spawn(move || {
         let net = SiteNet::over(Box::new(l0.accept(&timeouts()).unwrap()));
-        dsc::site::session(&net, &data0, None, |_| {}).unwrap()
+        dsc::site::session(&net, &data0, None, SessionLimits::default(), |_| {}).unwrap()
     });
 
     // site 1: registers for the first run, then "crashes" on receiving the
@@ -223,7 +235,7 @@ fn site_death_fails_one_run_and_the_queue_drains() {
             // … and the connection dies mid-run (simulated crash)
         }
         let net = SiteNet::over(Box::new(l1.accept(&timeouts()).unwrap()));
-        dsc::site::session(&net, &data1, None, |_| {}).unwrap()
+        dsc::site::session(&net, &data1, None, SessionLimits::default(), |_| {}).unwrap()
     });
 
     let mut cfg = cfg_with_seed(0);
@@ -233,6 +245,7 @@ fn site_death_fails_one_run_and_the_queue_drains() {
         queue_depth: 8,
         allow_label_pull: true,
         client_limit: Some(2),
+        ..Default::default()
     };
     let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let leader_addr = client_listener.local_addr().unwrap().to_string();
@@ -269,107 +282,4 @@ fn site_death_fails_one_run_and_the_queue_drains() {
     assert_eq!(out0.aborted_runs, 1, "run A was left open on site 0");
     let out1 = site1.join().unwrap();
     assert_eq!(out1.runs_served, 1);
-}
-
-/// A hostile or buggy job spec is refused at submit time with a reason —
-/// it must never reach the central step, where `k = 0` would panic the
-/// reactor and take every client's runs down with it.
-#[test]
-fn hostile_spec_is_rejected_at_submit() {
-    let ds = gmm::paper_mixture_10d(400, 0.1, 51);
-    let parts = scenario::split(&ds, Scenario::D3, 1, 51);
-
-    let listener = SiteListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
-    let data = parts[0].data.clone();
-    let site = std::thread::spawn(move || {
-        let net = SiteNet::over(Box::new(listener.accept(&timeouts()).unwrap()));
-        dsc::site::session(&net, &data, None, |_| {}).unwrap()
-    });
-
-    let mut cfg = cfg_with_seed(51);
-    cfg.net.sites = vec![addr];
-    let opts = ServerOpts {
-        max_jobs: 1,
-        queue_depth: 2,
-        allow_label_pull: false,
-        client_limit: Some(1),
-    };
-    let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-    let leader_addr = client_listener.local_addr().unwrap().to_string();
-    let server = std::thread::spawn({
-        let cfg = cfg.clone();
-        let opts = opts.clone();
-        move || serve_jobs(&cfg, &opts, client_listener).unwrap()
-    });
-
-    let client = JobClient::connect(&leader_addr, &timeouts()).unwrap();
-    let mut bad = spec_from_config(&cfg_with_seed(51));
-    bad.k_clusters = 0;
-    let err = client.submit(&bad).unwrap_err();
-    assert!(format!("{err:#}").contains("bad job spec"), "{err:#}");
-
-    // the connection (and the server) survive the refusal
-    let run = client.submit(&spec_from_config(&cfg_with_seed(51))).unwrap();
-    client.await_done(run).unwrap();
-    drop(client);
-
-    let stats = server.join().unwrap();
-    assert_eq!(stats.rejected, 1);
-    assert_eq!(stats.completed, 1);
-    let outcome = site.join().unwrap();
-    assert_eq!(outcome.runs_served, 1);
-}
-
-/// `[leader] allow_label_pull` gates the pull plane; an unknown run is
-/// refused with a reason even when pulls are allowed.
-#[test]
-fn label_pull_policy_is_enforced() {
-    let ds = gmm::paper_mixture_10d(600, 0.1, 33);
-    let parts = scenario::split(&ds, Scenario::D3, 1, 33);
-    let spec = spec_from_config(&cfg_with_seed(33));
-
-    for allow in [false, true] {
-        let listener = SiteListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap().to_string();
-        let data = parts[0].data.clone();
-        let site = std::thread::spawn(move || {
-            let net = SiteNet::over(Box::new(listener.accept(&timeouts()).unwrap()));
-            dsc::site::session(&net, &data, None, |_| {}).unwrap()
-        });
-
-        let mut cfg = cfg_with_seed(33);
-        cfg.net.sites = vec![addr];
-        let opts = ServerOpts {
-            max_jobs: 1,
-            queue_depth: 2,
-            allow_label_pull: allow,
-            client_limit: Some(1),
-        };
-        let client_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-        let leader_addr = client_listener.local_addr().unwrap().to_string();
-        let server = std::thread::spawn({
-            let cfg = cfg.clone();
-            let opts = opts.clone();
-            move || serve_jobs(&cfg, &opts, client_listener).unwrap()
-        });
-
-        let client = JobClient::connect(&leader_addr, &timeouts()).unwrap();
-        let run = client.submit(&spec).unwrap();
-        let report = client.await_done(run).unwrap();
-        if allow {
-            let err = client.pull_labels(9999, 1).unwrap_err();
-            assert!(format!("{err:#}").contains("not a completed run"), "{err:#}");
-            let pulled = client.pull_labels(run, report.per_site.len()).unwrap();
-            assert_eq!(pulled.len(), 1);
-            assert_eq!(pulled[0].1.len(), parts[0].data.len());
-        } else {
-            let err = client.pull_labels(run, report.per_site.len()).unwrap_err();
-            assert!(format!("{err:#}").contains("disabled"), "{err:#}");
-        }
-        drop(client);
-        let stats = server.join().unwrap();
-        assert_eq!(stats.completed, 1);
-        site.join().unwrap();
-    }
 }

@@ -278,6 +278,215 @@ fn prop_wire_roundtrip() {
     });
 }
 
+mod wire_gen {
+    //! Seeded generators for every wire message kind, shared by the
+    //! all-tag roundtrip and truncation properties.
+    use dsc::dml::DmlKind;
+    use dsc::net::wire::{JobReport, JobSpec, LinkReport, Message};
+    use dsc::prop::Gen;
+    use dsc::spectral::{Algo, Bandwidth, GraphKind};
+
+    fn dml(g: &mut Gen) -> DmlKind {
+        [DmlKind::KMeans, DmlKind::RpTree, DmlKind::RandomSample][g.usize_in(0, 2)]
+    }
+
+    fn algo(g: &mut Gen) -> Algo {
+        [Algo::RecursiveNcut, Algo::Njw][g.usize_in(0, 1)]
+    }
+
+    fn graph(g: &mut Gen) -> GraphKind {
+        if g.bool(0.5) {
+            GraphKind::Dense
+        } else {
+            GraphKind::Knn { k: g.usize_in(1, 64) }
+        }
+    }
+
+    fn bandwidth(g: &mut Gen) -> Bandwidth {
+        match g.usize_in(0, 2) {
+            0 => Bandwidth::Fixed(g.f64_in(0.01, 10.0)),
+            1 => Bandwidth::MedianScale(g.f64_in(0.01, 4.0)),
+            _ => Bandwidth::EigengapSearch { k: g.usize_in(0, 8) },
+        }
+    }
+
+    fn spec(g: &mut Gen) -> JobSpec {
+        JobSpec {
+            dml: dml(g),
+            total_codes: g.usize_in(1, 100_000) as u32,
+            k_clusters: g.usize_in(1, 64) as u32,
+            kmeans_max_iters: g.usize_in(1, 100) as u32,
+            kmeans_tol: g.f64_in(1e-9, 1e-2),
+            seed: g.rng().next_u64(),
+            algo: algo(g),
+            graph: graph(g),
+            weighted: g.bool(0.5),
+            bandwidth: bandwidth(g),
+        }
+    }
+
+    fn report(g: &mut Gen) -> JobReport {
+        let n_sites = g.usize_in(0, 4);
+        JobReport {
+            n_codes: g.usize_in(0, 100_000) as u32,
+            sigma: g.f64_in(0.0, 10.0),
+            central_ns: g.rng().next_u64(),
+            wall_ns: g.rng().next_u64(),
+            per_site: (0..n_sites)
+                .map(|_| LinkReport {
+                    up_frames: g.usize_in(0, 1000) as u64,
+                    up_bytes: g.rng().next_u64(),
+                    up_sim_ns: g.rng().next_u64(),
+                    down_frames: g.usize_in(0, 1000) as u64,
+                    down_bytes: g.rng().next_u64(),
+                    down_sim_ns: g.rng().next_u64(),
+                })
+                .collect(),
+        }
+    }
+
+    fn text(g: &mut Gen, max: usize) -> String {
+        let n = g.usize_in(0, max);
+        (0..n).map(|_| (b'a' + g.usize_in(0, 25) as u8) as char).collect()
+    }
+
+    fn codebook(g: &mut Gen) -> (u32, Vec<f32>, Vec<u32>) {
+        let dim = g.usize_in(1, 6);
+        let n = g.usize_in(0, 20);
+        (
+            dim as u32,
+            g.vec_f32(n * dim, -100.0, 100.0),
+            (0..n).map(|_| g.usize_in(1, 10_000) as u32).collect(),
+        )
+    }
+
+    /// A random message carrying exactly wire tag `tag` (1–17).
+    pub fn message_with_tag(g: &mut Gen, tag: u8) -> Message {
+        let site = g.usize_in(0, 7) as u32;
+        let run = g.usize_in(1, 1_000_000) as u32;
+        match tag {
+            1 => {
+                let (dim, codewords, weights) = codebook(g);
+                Message::Codebook { site, dim, codewords, weights }
+            }
+            2 => Message::Labels { site, labels: g.labels(g.usize_in(0, 50), 8) },
+            3 => Message::Sigma(g.f64_in(-10.0, 10.0) as f32),
+            4 => Message::Ack,
+            5 => Message::SiteInfo { site, n_points: g.rng().next_u64() >> 20, dim: 10 },
+            6 => Message::DmlRequest {
+                site,
+                dml: dml(g),
+                target_codes: g.usize_in(1, 100_000) as u32,
+                max_iters: g.usize_in(1, 100) as u32,
+                tol: g.f64_in(1e-9, 1e-2),
+                seed: g.rng().next_u64(),
+            },
+            7 => Message::RunStart { run },
+            8 => Message::RunSiteInfo { run, site, n_points: g.rng().next_u64() >> 20, dim: 4 },
+            9 => Message::RunDmlRequest {
+                run,
+                site,
+                dml: dml(g),
+                target_codes: g.usize_in(1, 100_000) as u32,
+                max_iters: g.usize_in(1, 100) as u32,
+                tol: g.f64_in(1e-9, 1e-2),
+                seed: g.rng().next_u64(),
+            },
+            10 => {
+                let (dim, codewords, weights) = codebook(g);
+                Message::RunCodebook { run, site, dim, codewords, weights }
+            }
+            11 => Message::RunLabels { run, site, labels: g.labels(g.usize_in(0, 50), 8) },
+            12 => Message::LabelsPull { run },
+            13 => Message::SiteLabels { run, site, labels: g.labels(g.usize_in(0, 50), 8) },
+            14 => Message::Submit(spec(g)),
+            15 => Message::JobAccept { run },
+            16 => Message::JobDone { run, report: report(g) },
+            17 => Message::Reject { run, msg: text(g, 60) },
+            other => panic!("no message for tag {other}"),
+        }
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_every_tag() {
+    use dsc::net::wire::{decode, encode};
+    // tag 0 was never assigned and must always be rejected, like any
+    // unknown tag above the table
+    assert!(decode(&[0u8]).is_err());
+    assert!(decode(&[18u8]).is_err());
+    assert!(decode(&[255u8]).is_err());
+    forall("encode→decode is identity for every tag 1–17", 25, 513, |g| {
+        for tag in 1u8..=17 {
+            let msg = wire_gen::message_with_tag(g, tag);
+            let frame = encode(&msg);
+            if frame[0] != tag {
+                return Err(format!("message for tag {tag} encoded as tag {}", frame[0]));
+            }
+            let back = decode(&frame).map_err(|e| format!("tag {tag}: {e}"))?;
+            if back != msg {
+                return Err(format!("tag {tag} roundtrip mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_truncation_rejected_at_every_offset() {
+    use dsc::net::wire::{decode, encode};
+    // Every strict prefix of every frame must decode to an error — no
+    // panic, no partial message, and (by the decoder's allocation rule) no
+    // reservation beyond the bytes present.
+    forall("truncation at every byte offset errors for every tag", 10, 514, |g| {
+        for tag in 1u8..=17 {
+            let frame = encode(&wire_gen::message_with_tag(g, tag));
+            for cut in 0..frame.len() {
+                if decode(&frame[..cut]).is_ok() {
+                    return Err(format!("tag {tag}: cut at {cut}/{} decoded", frame.len()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_hostile_counts_never_overallocate() {
+    use dsc::net::wire::decode;
+    // Array-carrying frames whose headers declare huge element counts over
+    // a near-empty body must fail fast on truncation: the decoder bounds
+    // its pre-allocation by the bytes actually remaining in the frame, so
+    // a 13-byte hostile frame cannot reserve megabytes before erroring.
+    forall("hostile declared counts error without allocating", 40, 515, |g| {
+        // 1M–99M declared elements: below the decoder's element cap, so
+        // only the truncation/allocation bound can catch it
+        let count = (1_000_000u64 + g.rng().next_u64() % 98_000_000) as u32;
+        let run = 1u32.to_le_bytes();
+        let site = 0u32.to_le_bytes();
+        let one = 1u32.to_le_bytes();
+        let n = count.to_le_bytes();
+        let hostile: Vec<Vec<u8>> = vec![
+            // CODEBOOK(1): site dim=1 n=count, empty body
+            [&[1u8][..], &site[..], &one[..], &n[..]].concat(),
+            // LABELS(2): site n=count
+            [&[2u8][..], &site[..], &n[..]].concat(),
+            // RCODEBOOK(10): run site dim=1 n=count
+            [&[10u8][..], &run[..], &site[..], &one[..], &n[..]].concat(),
+            // RLABELS(11): run site n=count
+            [&[11u8][..], &run[..], &site[..], &n[..]].concat(),
+            // SITELABELS(13): run site n=count
+            [&[13u8][..], &run[..], &site[..], &n[..]].concat(),
+        ];
+        for frame in hostile {
+            if decode(&frame).is_ok() {
+                return Err(format!("hostile count {count} decoded (tag {})", frame[0]));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_decoder_never_panics_on_corruption() {
     use dsc::net::wire::{decode, encode, Message};
@@ -298,6 +507,120 @@ fn prop_decoder_never_panics_on_corruption() {
             frame.truncate(cut);
         }
         let _ = decode(&frame); // must not panic; Err is fine
+        Ok(())
+    });
+}
+
+// ───────────────────────────── straggler deadlines ─────────────────────────────
+
+/// A run's straggler deadline fires exactly once under arbitrary `Tick`
+/// jitter: ticks strictly before the (phase-current) deadline are always
+/// harmless, the first tick at or past it errors with the canonical
+/// straggler text, and — since the driver contract discards an errored
+/// machine — nothing fires twice. Registrations interleave at random
+/// times, including the full set (which moves the deadline to the
+/// codebook phase); the model tracks the expected deadline independently.
+#[test]
+fn prop_deadline_fires_exactly_once_under_tick_jitter() {
+    use dsc::coordinator::machine::{RunInput, RunMachine};
+    use dsc::dml::DmlKind;
+    use dsc::net::JobSpec;
+    use dsc::spectral::{Algo, Bandwidth, GraphKind};
+    use std::time::{Duration, Instant};
+
+    fn spec(seed: u64) -> JobSpec {
+        JobSpec {
+            dml: DmlKind::KMeans,
+            total_codes: 64,
+            k_clusters: 2,
+            kmeans_max_iters: 30,
+            kmeans_tol: 1e-6,
+            seed,
+            algo: Algo::RecursiveNcut,
+            graph: GraphKind::Dense,
+            weighted: false,
+            bandwidth: Bandwidth::MedianScale(0.5),
+        }
+    }
+
+    enum Ev {
+        Tick,
+        Register(usize),
+    }
+
+    forall("deadline fires exactly once under tick jitter", 60, 616, |g| {
+        let n_sites = g.usize_in(1, 3);
+        let timeout_ms = g.usize_in(50, 300) as u64;
+        let t0 = Instant::now();
+        let mut m =
+            RunMachine::new(n_sites, spec(7), Duration::from_millis(timeout_ms), t0);
+
+        // random ticks + a random subset of registrations, in time order
+        let mut events: Vec<(u64, Ev)> = Vec::new();
+        for _ in 0..g.usize_in(1, 12) {
+            events.push((g.usize_in(0, 700) as u64, Ev::Tick));
+        }
+        let k_reg = g.usize_in(0, n_sites);
+        for &site in g.permutation(n_sites).iter().take(k_reg) {
+            events.push((g.usize_in(0, 700) as u64, Ev::Register(site)));
+        }
+        // stable sort: same-instant events keep insertion order, and the
+        // model below walks them in exactly the machine's order
+        events.sort_by_key(|&(t, _)| t);
+
+        let mut deadline_ms = timeout_ms;
+        let mut registered = 0usize;
+        let mut fired = false;
+        for (t_ms, ev) in events {
+            let now = t0 + Duration::from_millis(t_ms);
+            match ev {
+                Ev::Register(site) => {
+                    // registrations are never deadline-checked; the one
+                    // completing the set resets the clock for codebooks
+                    m.advance(
+                        now,
+                        RunInput::SiteInfo {
+                            site,
+                            n_points: 100 * (site as u64 + 1),
+                            dim: 3,
+                        },
+                    )
+                    .map_err(|e| format!("registration at {t_ms}ms errored: {e}"))?;
+                    registered += 1;
+                    if registered == n_sites {
+                        deadline_ms = t_ms + timeout_ms;
+                    }
+                }
+                Ev::Tick => {
+                    let res = m.advance(now, RunInput::Tick);
+                    let should_fire = t_ms >= deadline_ms;
+                    match (res, should_fire) {
+                        (Ok(_), false) => {}
+                        (Err(e), true) => {
+                            let msg = e.to_string();
+                            if !msg.contains("collect failed") {
+                                return Err(format!("wrong straggler error: {msg}"));
+                            }
+                            fired = true;
+                            // the driver discards the machine here; no
+                            // second firing is possible by construction
+                            break;
+                        }
+                        (Ok(_), true) => {
+                            return Err(format!(
+                                "tick at {t_ms}ms ≥ deadline {deadline_ms}ms did not fire"
+                            ));
+                        }
+                        (Err(e), false) => {
+                            return Err(format!(
+                                "tick at {t_ms}ms < deadline {deadline_ms}ms fired: {e}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        let _ = fired; // 0 or 1 firings, checked tick by tick above
         Ok(())
     });
 }
