@@ -1,0 +1,126 @@
+//! Job-server load bench: the repo's recorded BENCH trajectory
+//! (`bench_out/BENCH_jobserver.json`).
+//!
+//! Runs the canonical skewed 3-tenant mix (12 jobs at weight 1, 6 at
+//! weight 2, 3 at weight 4 — `LoadMix::skewed_three`) through the
+//! deterministic channel load generator twice: once under the legacy
+//! global FIFO and once under DRR weighted fair queueing, then records
+//! throughput, per-tenant sojourn percentiles, pipelining utilization and
+//! the Jain fairness index for both. Virtual time makes every number a
+//! pure function of the mix — the bench re-runs the DRR leg and fails if
+//! the two reports differ by a single bit, and it fails loudly when
+//! fairness or throughput regresses past the sanity floors below.
+//!
+//! `cargo bench --bench jobserver_load` — add `-- tcp` to also push the
+//! same mix through a real loopback TCP job server (wall-clock numbers,
+//! printed but deliberately kept out of the deterministic JSON).
+//! `DSC_BENCH_OUT` overrides the output directory (default `bench_out/`).
+
+use anyhow::{bail, Result};
+use dsc::bench::Table;
+use dsc::coordinator::loadgen::{run_channel_load, run_tcp_load, LoadMix, LoadReport};
+
+/// Sanity floors: a scheduling or harness regression trips these before
+/// it can silently land in the recorded trajectory.
+fn check_floors(fifo: &LoadReport, drr: &LoadReport) -> Result<()> {
+    for (name, r) in [("fifo", fifo), ("drr", drr)] {
+        if r.completed != r.jobs as u64 || r.rejected != 0 {
+            bail!(
+                "{name}: {} of {} jobs completed, {} rejected — the load mix must drain fully",
+                r.completed,
+                r.jobs,
+                r.rejected
+            );
+        }
+        if r.utilization < 0.999 {
+            bail!("{name}: utilization {} — the service slot idled", r.utilization);
+        }
+        let ideal = 1e9 / (r.makespan_ns as f64 / r.jobs as f64);
+        if r.throughput_jobs_per_sec < 0.9 * ideal {
+            bail!(
+                "{name}: throughput {} jobs/s below sanity floor {}",
+                r.throughput_jobs_per_sec,
+                0.9 * ideal
+            );
+        }
+    }
+    if drr.fairness < 0.95 {
+        bail!("drr: fairness index {} below the 0.95 floor", drr.fairness);
+    }
+    if drr.fairness < fifo.fairness + 0.1 {
+        bail!(
+            "fairness gap collapsed: drr {} vs fifo {} — DRR must beat FIFO by ≥ 0.1 \
+             on the skewed mix",
+            drr.fairness,
+            fifo.fairness
+        );
+    }
+    // the high-weight light tenant must actually see better latency
+    let (f, d) = (&fifo.per_client[2], &drr.per_client[2]);
+    if d.mean_ns >= f.mean_ns {
+        bail!(
+            "weight-4 tenant mean sojourn under drr ({} ns) is not below fifo ({} ns)",
+            d.mean_ns,
+            f.mean_ns
+        );
+    }
+    Ok(())
+}
+
+fn indent(json: &str) -> String {
+    json.replace('\n', "\n  ")
+}
+
+fn main() -> Result<()> {
+    let tcp = std::env::args().skip(1).any(|a| a == "tcp");
+
+    let fifo = run_channel_load(&LoadMix::skewed_three(false))?;
+    let drr = run_channel_load(&LoadMix::skewed_three(true))?;
+    // same mix ⇒ same numbers, bit for bit — determinism is part of the
+    // bench contract, not just a test
+    let drr_again = run_channel_load(&LoadMix::skewed_three(true))?;
+    if drr_again != drr {
+        bail!("nondeterministic load report: two identical DRR runs disagreed");
+    }
+    check_floors(&fifo, &drr)?;
+
+    let mut table = Table::new(
+        "Job-server load: skewed 3-tenant mix (12×w1 / 6×w2 / 3×w4), virtual time",
+        &["queue", "fairness", "jobs/s", "p95 w1", "p95 w2", "p95 w4"],
+    );
+    for (name, r) in [("fifo", &fifo), ("drr", &drr)] {
+        table.row(&[
+            name.into(),
+            format!("{:.4}", r.fairness),
+            format!("{:.1}", r.throughput_jobs_per_sec),
+            format!("{:.1}ms", r.per_client[0].p95_ns as f64 / 1e6),
+            format!("{:.1}ms", r.per_client[1].p95_ns as f64 / 1e6),
+            format!("{:.1}ms", r.per_client[2].p95_ns as f64 / 1e6),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let out_dir = std::env::var("DSC_BENCH_OUT").unwrap_or_else(|_| "bench_out".into());
+    std::fs::create_dir_all(&out_dir)?;
+    let path = std::path::Path::new(&out_dir).join("BENCH_jobserver.json");
+    let body = format!(
+        "{{\n  \"bench\": \"jobserver_load\",\n  \"mix\": \"skewed_three 12xw1/6xw2/3xw4\",\n  \
+         \"fifo\": {},\n  \"drr\": {}\n}}\n",
+        indent(&fifo.to_json()),
+        indent(&drr.to_json())
+    );
+    std::fs::write(&path, body)?;
+    println!("\nwrote {}", path.display());
+
+    if tcp {
+        let report = run_tcp_load(&LoadMix::skewed_three(true))?;
+        println!(
+            "tcp twin: {}/{} jobs in {:.3}s ({:.1} jobs/s, wall clock — not recorded)",
+            report.completed,
+            report.jobs,
+            report.wall.as_secs_f64(),
+            report.throughput_jobs_per_sec
+        );
+    }
+    Ok(())
+}

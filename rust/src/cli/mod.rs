@@ -32,7 +32,7 @@ use crate::data::scenario::{self, Scenario};
 use crate::data::{csvio, gmm, iris, uci_proxy, Dataset};
 use crate::dml::DmlKind;
 use crate::net::tcp::{Backoff, SiteListener};
-use crate::net::SiteNet;
+use crate::net::{JobSpec, SiteNet};
 use crate::spectral::{Algo, Bandwidth, GraphKind};
 
 /// Parsed `--key value` flags (flags without values map to "true").
@@ -42,7 +42,7 @@ pub struct Flags {
 }
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "once", "help"];
+const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "once", "fair-queue", "help"];
 
 pub fn parse_flags(args: &[String]) -> Result<Flags> {
     let mut map = BTreeMap::new();
@@ -135,6 +135,12 @@ LEADER FLAGS (see docs/DEPLOY.md):
                     0 = run central steps inline on the reactor thread)
   --serve-limit N   exit after N clients have come and gone (serve mode;
                     drills/CI — a clean shutdown once every client is done)
+  --fair-queue      per-client weighted fair queueing, DRR by job priority
+                    (serve mode; default [leader] fair_queue = false keeps
+                    the legacy global FIFO)
+  --admit-rate R    token-bucket admission: submits/sec admitted per client
+                    (serve mode; 0 disables — [leader] admit_rate)
+  --admit-burst N   burst above --admit-rate ([leader] admit_burst)
   plus the central-step RUN FLAGS: --dml --codes --k --algo --graph
   --knn-k --backend --bandwidth --weighted --seed
 
@@ -144,6 +150,9 @@ SUBMIT FLAGS (see docs/DEPLOY.md):
   --pull DIR        after the run, pull populated labels through the leader
                     into DIR/labels_site<id>.txt (needs [leader]
                     allow_label_pull = true on the leader)
+  --priority P      job priority 1..16 — the DRR weight under a
+                    --fair-queue leader; also prints the accept's queue
+                    position and ETA estimate
   plus the central-step RUN FLAGS except --backend (the central step runs
   on the leader, under the leader's backend)
 
@@ -501,8 +510,8 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     flags.reject_unknown(&[
         "sites", "config", "serve", "max-jobs", "queue-depth", "central-workers",
-        "serve-limit", "dml", "codes", "k", "algo", "graph", "knn-k", "backend", "bandwidth",
-        "weighted", "seed", "help",
+        "serve-limit", "fair-queue", "admit-rate", "admit-burst", "dml", "codes", "k", "algo",
+        "graph", "knn-k", "backend", "bandwidth", "weighted", "seed", "help",
     ])?;
     if flags.bool("help") {
         println!("{USAGE}");
@@ -524,6 +533,23 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
     }
 
     if let Some(serve_addr) = flags.str("serve") {
+        // Scheduling knobs live on [leader] (the reactor reads the config,
+        // not ServerOpts), so the flag overrides mutate cfg.leader.
+        if flags.bool("fair-queue") {
+            cfg.leader.fair_queue = true;
+        }
+        if let Some(rate) = flags.f64("admit-rate")? {
+            if !rate.is_finite() || rate < 0.0 {
+                bail!("--admit-rate must be finite and ≥ 0 (0 disables admission)");
+            }
+            cfg.leader.admit_rate = rate;
+        }
+        if let Some(n) = flags.usize("admit-burst")? {
+            if n == 0 {
+                bail!("--admit-burst must be ≥ 1");
+            }
+            cfg.leader.admit_burst = n;
+        }
         let mut opts = ServerOpts::from_config(&cfg);
         if let Some(n) = flags.usize("max-jobs")? {
             if n == 0 {
@@ -550,13 +576,15 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
         std::io::stdout().flush().ok();
         eprintln!(
             "leader: job server at {addr}; {} site(s): {} (max_jobs={}, queue_depth={}, \
-             central_workers={}, label_pull={})",
+             central_workers={}, label_pull={}, fair_queue={}, admit_rate={})",
             cfg.net.sites.len(),
             cfg.net.sites.join(", "),
             opts.max_jobs,
             opts.queue_depth,
             opts.central_workers,
             opts.allow_label_pull,
+            cfg.leader.fair_queue,
+            cfg.leader.admit_rate,
         );
         let stats = serve_jobs(&cfg, &opts, listener)?;
         println!(
@@ -614,7 +642,7 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
 pub fn cmd_submit(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     flags.reject_unknown(&[
-        "leader", "config", "pull", "dml", "codes", "k", "algo", "graph", "knn-k",
+        "leader", "config", "pull", "priority", "dml", "codes", "k", "algo", "graph", "knn-k",
         "bandwidth", "weighted", "seed", "help",
     ])?;
     if flags.bool("help") {
@@ -631,10 +659,36 @@ pub fn cmd_submit(args: &[String]) -> Result<()> {
         .str("leader")
         .ok_or_else(|| anyhow!("dsc submit needs --leader <addr> (the leader's --serve address)"))?;
 
-    let spec = spec_from_config(&cfg);
+    let mut spec = spec_from_config(&cfg);
+    // Validate before dialing so a bad flag fails fast and offline.
+    let tracked = match flags.usize("priority")? {
+        Some(p) => {
+            if p < 1 || p > JobSpec::MAX_PRIORITY as usize {
+                bail!("--priority must be in 1..={}", JobSpec::MAX_PRIORITY);
+            }
+            spec.priority = p as u32;
+            true
+        }
+        None => false,
+    };
     let client = JobClient::connect(addr, &cfg.net.tcp_timeouts())?;
-    let run = client.submit(&spec)?;
-    println!("SUBMITTED run={run}");
+    let run = if tracked {
+        // The priority dialect: the accept carries queue position and an
+        // ETA estimate, so surface them. The plain `SUBMITTED run=<id>`
+        // line stays untouched for legacy scripts.
+        let acc = client.submit_tracked(&spec)?;
+        println!(
+            "SUBMITTED run={} position={} eta_s={:.3}",
+            acc.run,
+            acc.position,
+            acc.eta_ns as f64 / 1e9
+        );
+        acc.run
+    } else {
+        let run = client.submit(&spec)?;
+        println!("SUBMITTED run={run}");
+        run
+    };
     std::io::stdout().flush().ok();
 
     let report = client.await_done(run)?;
@@ -890,6 +944,43 @@ mod tests {
                 .collect();
         let err = cmd_leader(&args).unwrap_err();
         assert!(err.to_string().contains("--queue-depth"), "{err}");
+
+        let args: Vec<String> =
+            ["--sites", "127.0.0.1:1", "--serve", "127.0.0.1:0", "--admit-rate", "-1"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = cmd_leader(&args).unwrap_err();
+        assert!(err.to_string().contains("--admit-rate"), "{err}");
+
+        let args: Vec<String> =
+            ["--sites", "127.0.0.1:1", "--serve", "127.0.0.1:0", "--admit-burst", "0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = cmd_leader(&args).unwrap_err();
+        assert!(err.to_string().contains("--admit-burst"), "{err}");
+    }
+
+    #[test]
+    fn fair_queue_is_a_bool_flag() {
+        let f = flags(&["--fair-queue"]);
+        assert!(f.bool("fair-queue"));
+        assert!(!flags(&[]).bool("fair-queue"));
+    }
+
+    /// --priority is validated before the client dials the leader, so a
+    /// bad value fails fast and offline.
+    #[test]
+    fn submit_priority_validated_offline() {
+        for bad in ["0", "17"] {
+            let args: Vec<String> = ["--leader", "127.0.0.1:1", "--priority", bad]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            let err = cmd_submit(&args).unwrap_err();
+            assert!(err.to_string().contains("--priority"), "{err}");
+        }
     }
 
     #[test]

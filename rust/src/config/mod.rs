@@ -110,6 +110,18 @@ pub struct LeaderConfig {
     /// the duration. XLA backends always run inline (the PJRT runtime is
     /// thread-local). Default: `min(2, cores)`.
     pub central_workers: usize,
+    /// Serve the job queue with per-client weighted fair queueing (deficit
+    /// round-robin keyed by client id, job priorities as weights) instead
+    /// of the legacy global FIFO. Off by default: with `false` the server
+    /// is byte-identical to the pre-fair-queue dialect.
+    pub fair_queue: bool,
+    /// Token-bucket admission: sustained submits/second allowed *per
+    /// client*; a client above it gets `rate limited` rejects until its
+    /// bucket refills. `0.0` (the default) disables admission control.
+    pub admit_rate: f64,
+    /// Token-bucket burst: submits a client may fire back-to-back above
+    /// `admit_rate` before throttling kicks in (≥ 1).
+    pub admit_burst: usize,
 }
 
 /// `min(2, cores)` — enough to overlap one long central with another run's
@@ -125,6 +137,9 @@ impl Default for LeaderConfig {
             queue_depth: 32,
             allow_label_pull: false,
             central_workers: default_central_workers(),
+            fair_queue: false,
+            admit_rate: 0.0,
+            admit_burst: 4,
         }
     }
 }
@@ -274,6 +289,10 @@ impl PipelineConfig {
     /// allow_label_pull = false  # let clients pull labels through the leader
     /// central_workers = 2       # central-step worker pool (0 = inline;
     ///                           # default min(2, cores))
+    /// fair_queue = false        # per-client weighted fair queueing (DRR);
+    ///                           # false = legacy global FIFO
+    /// admit_rate = 0.0          # per-client submits/sec admitted (0 = off)
+    /// admit_burst = 4           # token-bucket burst above admit_rate
     ///
     /// [site]
     /// label_cache_runs = 8      # completed runs kept for LABELSPULL
@@ -473,6 +492,25 @@ impl PipelineConfig {
             }
             cfg.leader.central_workers = n as usize;
         }
+        if let Some(v) = get("leader.fair_queue") {
+            cfg.leader.fair_queue =
+                v.as_bool().ok_or_else(|| anyhow!("leader.fair_queue must be bool"))?;
+        }
+        if let Some(v) = get("leader.admit_rate") {
+            let rate =
+                v.as_f64().ok_or_else(|| anyhow!("leader.admit_rate must be a number"))?;
+            if !rate.is_finite() || rate < 0.0 {
+                bail!("leader.admit_rate must be finite and ≥ 0 (0 disables admission)");
+            }
+            cfg.leader.admit_rate = rate;
+        }
+        if let Some(v) = get("leader.admit_burst") {
+            let n = v.as_i64().ok_or_else(|| anyhow!("leader.admit_burst must be an int"))?;
+            if n < 1 {
+                bail!("leader.admit_burst must be ≥ 1");
+            }
+            cfg.leader.admit_burst = n as usize;
+        }
 
         if let Some(v) = get("site.label_cache_runs") {
             let n =
@@ -642,16 +680,23 @@ mod tests {
         assert!(!cfg.leader.allow_label_pull);
         assert_eq!(cfg.leader.central_workers, default_central_workers());
         assert!(default_central_workers() >= 1 && default_central_workers() <= 2);
+        // scheduling/admission defaults: legacy FIFO, admission off
+        assert!(!cfg.leader.fair_queue);
+        assert_eq!(cfg.leader.admit_rate, 0.0);
+        assert_eq!(cfg.leader.admit_burst, 4);
 
         let cfg = PipelineConfig::from_toml(
             "[leader]\nmax_jobs = 2\nqueue_depth = 8\nallow_label_pull = true\n\
-             central_workers = 3",
+             central_workers = 3\nfair_queue = true\nadmit_rate = 2.5\nadmit_burst = 7",
         )
         .unwrap();
         assert_eq!(cfg.leader.max_jobs, 2);
         assert_eq!(cfg.leader.queue_depth, 8);
         assert!(cfg.leader.allow_label_pull);
         assert_eq!(cfg.leader.central_workers, 3);
+        assert!(cfg.leader.fair_queue);
+        assert_eq!(cfg.leader.admit_rate, 2.5);
+        assert_eq!(cfg.leader.admit_burst, 7);
         // 0 is legal and means "inline centrals" (the pre-offload behavior)
         let cfg = PipelineConfig::from_toml("[leader]\ncentral_workers = 0").unwrap();
         assert_eq!(cfg.leader.central_workers, 0);
@@ -665,6 +710,11 @@ mod tests {
         assert!(PipelineConfig::from_toml("[leader]\nallow_label_pull = 1").is_err());
         assert!(PipelineConfig::from_toml("[leader]\ncentral_workers = -1").is_err());
         assert!(PipelineConfig::from_toml("[leader]\ncentral_workers = \"all\"").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nfair_queue = 1").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nadmit_rate = -1.0").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nadmit_rate = \"fast\"").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nadmit_burst = 0").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nadmit_burst = -2").is_err());
     }
 
     #[test]

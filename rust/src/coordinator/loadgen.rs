@@ -1,0 +1,628 @@
+//! Deterministic load generator for the job-serving leader.
+//!
+//! The channel generator ([`run_channel_load`]) drives the *real* serving
+//! stack — reactor, `JobQueue` (FIFO or DRR), `RunMachine`s, central
+//! worker pool, real site sessions — through the socket-free harness
+//! ([`super::harness`]), with every source of nondeterminism pinned:
+//!
+//! * every tenant submits its whole budget up front, at virtual t0, in a
+//!   fixed round-robin interleaving (each submit waits for its accept, so
+//!   arrival order at the reactor *is* submission order);
+//! * `max_jobs = 1` and one central worker make queue pops strictly
+//!   sequential — the observed central-entry order is exactly the queue
+//!   discipline's dequeue order;
+//! * a [`CentralHook`] sequencer holds each central at the gate until the
+//!   controller advances the [`VirtualClock`](crate::net::channel) by one
+//!   `step` and releases it, so the k-th pop completes its central at
+//!   virtual `(k+1)·step` — job sojourns are a pure function of dequeue
+//!   order, never of scheduler timing.
+//!
+//! The same mix therefore always produces the same [`LoadReport`]
+//! (bit-for-bit, including the f64s): `benches/jobserver_load.rs` records
+//! it as `BENCH_jobserver.json`, and `rust/tests/loadgen.rs` pins both
+//! the determinism and the FIFO-vs-DRR fairness ordering. The TCP twin
+//! ([`run_tcp_load`]) pushes the identical mix through a real loopback
+//! job server for wall-clock numbers (real, therefore *not* in the
+//! deterministic report). `docs/TESTING.md` has the how-to.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::PipelineConfig;
+use crate::data::scenario::{self, Scenario};
+use crate::data::{gmm, Dataset};
+use crate::net::tcp::SiteListener;
+use crate::net::{JobSpec, SiteNet};
+use crate::site;
+
+use super::harness::{serve_channel, HarnessOpts};
+use super::server::{serve_jobs, CentralHook, JobClient, ServerOpts, ServerStats};
+use super::spec_from_config;
+
+// ─── mixes ─────────────────────────────────────────────────────────────────
+
+/// One tenant in a load mix.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientLoad {
+    /// Jobs this tenant submits (all up front, at virtual t0).
+    pub submits: usize,
+    /// Priority its specs carry — the DRR weight, `1..=MAX_PRIORITY`.
+    pub priority: u32,
+}
+
+/// A deterministic load-generator scenario.
+#[derive(Clone, Debug)]
+pub struct LoadMix {
+    /// The tenants; client ids are assigned 1.. in this order.
+    pub clients: Vec<ClientLoad>,
+    /// Queue discipline under test (`[leader] fair_queue`).
+    pub fair_queue: bool,
+    /// Virtual duration of one central step — the queue drains one job
+    /// per `step`.
+    pub step: Duration,
+    /// Seed for the tiny site dataset and the job specs.
+    pub seed: u64,
+}
+
+impl LoadMix {
+    /// Total jobs across every tenant.
+    pub fn total_jobs(&self) -> usize {
+        self.clients.iter().map(|c| c.submits).sum()
+    }
+
+    /// The canonical skewed 3-tenant mix the BENCH trajectory records: a
+    /// heavy low-priority tenant (12 jobs, weight 1), a medium one
+    /// (6 jobs, weight 2), and a light high-priority one (3 jobs,
+    /// weight 4). FIFO serves them in arrival order; DRR should serve
+    /// them weight-proportionally.
+    pub fn skewed_three(fair_queue: bool) -> LoadMix {
+        LoadMix {
+            clients: vec![
+                ClientLoad { submits: 12, priority: 1 },
+                ClientLoad { submits: 6, priority: 2 },
+                ClientLoad { submits: 3, priority: 4 },
+            ],
+            fair_queue,
+            step: Duration::from_millis(10),
+            seed: 21,
+        }
+    }
+}
+
+// ─── reports ───────────────────────────────────────────────────────────────
+
+/// Virtual-time queue-sojourn statistics for one tenant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientLatency {
+    /// Client id (1-based, mix order).
+    pub client: u64,
+    /// The priority/weight its jobs carried.
+    pub priority: u32,
+    /// Jobs it had served.
+    pub jobs: usize,
+    /// Mean/percentile sojourn — submit (virtual t0) to central
+    /// completion — in virtual nanoseconds (nearest-rank percentiles).
+    pub mean_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// What one deterministic channel load run measured. `PartialEq` is exact
+/// (including the f64s): same mix ⇒ same report, bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadReport {
+    /// Queue discipline the run used.
+    pub fair_queue: bool,
+    /// Jobs submitted.
+    pub jobs: usize,
+    /// Jobs that completed / submissions refused (from [`ServerStats`]).
+    pub completed: u64,
+    pub rejected: u64,
+    /// Virtual time from t0 to the last central completion.
+    pub makespan_ns: u64,
+    /// Completed jobs per virtual second.
+    pub throughput_jobs_per_sec: f64,
+    /// Served central time over makespan (1.0 = the single service slot
+    /// never idled; a lost job shows up as a dip).
+    pub utilization: f64,
+    /// Jain fairness index over weight-normalized service counts, taken
+    /// at the instant the first tenant drains (every tenant is backlogged
+    /// until then). 1.0 = perfectly weight-proportional service.
+    pub fairness: f64,
+    /// Per-tenant sojourn statistics, mix order.
+    pub per_client: Vec<ClientLatency>,
+}
+
+impl LoadReport {
+    /// Hand-rolled JSON (the repo's runtime JSON module is a parser, not
+    /// a serializer): stable key order, shortest-roundtrip f64s — the
+    /// bytes are as deterministic as the report.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"fair_queue\": {},\n", self.fair_queue));
+        s.push_str(&format!("  \"jobs\": {},\n", self.jobs));
+        s.push_str(&format!("  \"completed\": {},\n", self.completed));
+        s.push_str(&format!("  \"rejected\": {},\n", self.rejected));
+        s.push_str(&format!("  \"makespan_ns\": {},\n", self.makespan_ns));
+        s.push_str(&format!(
+            "  \"throughput_jobs_per_sec\": {},\n",
+            self.throughput_jobs_per_sec
+        ));
+        s.push_str(&format!("  \"utilization\": {},\n", self.utilization));
+        s.push_str(&format!("  \"fairness\": {},\n", self.fairness));
+        s.push_str("  \"per_client\": [\n");
+        for (i, c) in self.per_client.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"client\": {}, \"priority\": {}, \"jobs\": {}, \
+                 \"mean_ns\": {}, \"p50_ns\": {}, \"p95_ns\": {}, \"p99_ns\": {}}}{}\n",
+                c.client,
+                c.priority,
+                c.jobs,
+                c.mean_ns,
+                c.p50_ns,
+                c.p95_ns,
+                c.p99_ns,
+                if i + 1 < self.per_client.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}");
+        s
+    }
+}
+
+// ─── metric helpers ────────────────────────────────────────────────────────
+
+/// Jain's fairness index J(x) = (Σx)² / (n·Σx²) ∈ (0, 1]; 1.0 when every
+/// share is equal. An all-zero vector is vacuously fair.
+pub fn jain_index(shares: &[f64]) -> f64 {
+    if shares.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = shares.iter().sum();
+    let sq: f64 = shares.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (shares.len() as f64 * sq)
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (0 if empty).
+fn percentile(sorted: &[u64], pct: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((pct / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+// ─── central sequencer ─────────────────────────────────────────────────────
+
+/// Serializes central steps through the [`CentralHook`]: each worker
+/// announces its run and blocks until the controller releases it, so the
+/// controller observes the exact dequeue order and stamps each pop
+/// against the virtual clock.
+struct Sequencer {
+    state: Mutex<SeqState>,
+    entered_cv: Condvar,
+    released_cv: Condvar,
+}
+
+#[derive(Default)]
+struct SeqState {
+    entered: VecDeque<u32>,
+    released: HashSet<u32>,
+}
+
+impl Sequencer {
+    fn new() -> Arc<Sequencer> {
+        Arc::new(Sequencer {
+            state: Mutex::new(SeqState::default()),
+            entered_cv: Condvar::new(),
+            released_cv: Condvar::new(),
+        })
+    }
+
+    /// Worker side: announce `run` entered its central, wait for release.
+    fn enter_and_wait(&self, run: u32) {
+        let mut st = self.state.lock().unwrap();
+        st.entered.push_back(run);
+        self.entered_cv.notify_all();
+        while !st.released.remove(&run) {
+            st = self.released_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Controller side: next run that reached its central step.
+    fn wait_entered(&self) -> u32 {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(run) = st.entered.pop_front() {
+                return run;
+            }
+            st = self.entered_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Controller side: let `run`'s central compute.
+    fn release(&self, run: u32) {
+        let mut st = self.state.lock().unwrap();
+        st.released.insert(run);
+        self.released_cv.notify_all();
+    }
+}
+
+// ─── workload + config ─────────────────────────────────────────────────────
+
+/// The tiny single-site dataset every load job clusters — small enough
+/// that a full serve of a 21-job mix stays test-sized.
+pub fn load_workload(seed: u64) -> Vec<Dataset> {
+    let ds = gmm::paper_mixture_10d(240, 0.1, seed);
+    let parts = scenario::split(&ds, Scenario::D3, 1, seed);
+    parts.into_iter().map(|p| p.data).collect()
+}
+
+fn load_cfg(mix: &LoadMix) -> PipelineConfig {
+    let mut cfg = PipelineConfig {
+        total_codes: 16,
+        k_clusters: 2,
+        seed: mix.seed,
+        ..Default::default()
+    };
+    // The controller advances virtual time by total_jobs·step; no armed
+    // straggler deadline may ever fall inside that window.
+    cfg.collect_timeout = Duration::from_secs(1 << 22);
+    cfg.leader.fair_queue = mix.fair_queue;
+    cfg
+}
+
+fn check_mix(mix: &LoadMix) -> Result<()> {
+    if mix.clients.is_empty() {
+        bail!("load mix has no clients");
+    }
+    if mix.step.is_zero() {
+        bail!("load mix step must be > 0 (it is the virtual central duration)");
+    }
+    for (i, c) in mix.clients.iter().enumerate() {
+        if c.submits == 0 {
+            bail!("load mix client {i} submits no jobs");
+        }
+        if c.priority < 1 || c.priority > JobSpec::MAX_PRIORITY {
+            bail!(
+                "load mix client {i} priority {} out of 1..={}",
+                c.priority,
+                JobSpec::MAX_PRIORITY
+            );
+        }
+    }
+    Ok(())
+}
+
+// ─── the channel load generator ────────────────────────────────────────────
+
+/// Run `mix` through the channel job server deterministically and report
+/// throughput, per-tenant sojourn percentiles, utilization and the
+/// fairness index (see the module docs for the scheme).
+pub fn run_channel_load(mix: &LoadMix) -> Result<LoadReport> {
+    check_mix(mix)?;
+    let total = mix.total_jobs();
+    let cfg = load_cfg(mix);
+
+    let seq = Sequencer::new();
+    let hook: CentralHook = {
+        let seq = Arc::clone(&seq);
+        Arc::new(move |run: u32| seq.enter_and_wait(run))
+    };
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            // one service slot, one worker: pops are strictly sequential,
+            // so central-entry order *is* the queue discipline's order
+            max_jobs: 1,
+            queue_depth: total,
+            allow_label_pull: false,
+            central_workers: 1,
+            client_limit: Some(mix.clients.len() as u64),
+        },
+        faults: Vec::new(),
+        central_hook: Some(hook),
+    };
+    let mut harness = serve_channel(load_workload(mix.seed), &cfg, opts)?;
+
+    // One connection per tenant, mix order → client ids 1..=n.
+    let clients: Vec<_> = mix.clients.iter().map(|_| harness.client()).collect();
+
+    // Submit every budget up front at virtual t0, round-robin across the
+    // tenants — the one canonical interleaving both disciplines see.
+    let mut run_owner: HashMap<u32, usize> = HashMap::new();
+    let mut remaining: Vec<usize> = mix.clients.iter().map(|c| c.submits).collect();
+    let mut submitted = 0;
+    while submitted < total {
+        for (i, client) in clients.iter().enumerate() {
+            if remaining[i] == 0 {
+                continue;
+            }
+            remaining[i] -= 1;
+            let mut spec = spec_from_config(&cfg);
+            spec.priority = mix.clients[i].priority;
+            let acc = client
+                .submit_tracked(&spec)
+                .with_context(|| format!("load submit for client {}", i + 1))?;
+            run_owner.insert(acc.run, i);
+            submitted += 1;
+        }
+    }
+
+    // Drain: one central released per virtual step. The k-th pop (0-based)
+    // completes its central at virtual (k+1)·step — its sojourn, since
+    // every submit happened at t0.
+    let step_ns = mix.step.as_nanos() as u64;
+    let mut pops: Vec<(u32, u64)> = Vec::with_capacity(total);
+    for k in 0..total {
+        let run = seq.wait_entered();
+        harness.tick(mix.step);
+        pops.push((run, (k as u64 + 1) * step_ns));
+        seq.release(run);
+    }
+
+    // Every central was released, so every run completes.
+    for &(run, _) in &pops {
+        clients[run_owner[&run]]
+            .await_done(run)
+            .with_context(|| format!("load run {run} failed"))?;
+    }
+    drop(clients);
+    let (stats, _outcomes) = harness.join()?;
+
+    Ok(report_from_pops(mix, &pops, &run_owner, stats))
+}
+
+fn report_from_pops(
+    mix: &LoadMix,
+    pops: &[(u32, u64)],
+    run_owner: &HashMap<u32, usize>,
+    stats: ServerStats,
+) -> LoadReport {
+    let n = mix.clients.len();
+    let mut sojourns: Vec<Vec<u64>> = vec![Vec::new(); n];
+    for &(run, stamp) in pops {
+        sojourns[run_owner[&run]].push(stamp);
+    }
+
+    // Fairness window: service counts at the pop where the first tenant
+    // drains (all tenants backlogged until then, since every submit is at
+    // t0), normalized by weight.
+    let mut served = vec![0usize; n];
+    let mut window = served.clone();
+    for &(run, _) in pops {
+        let i = run_owner[&run];
+        served[i] += 1;
+        if served[i] == mix.clients[i].submits {
+            window = served.clone();
+            break;
+        }
+    }
+    let shares: Vec<f64> = window
+        .iter()
+        .zip(&mix.clients)
+        .map(|(&s, c)| s as f64 / c.priority as f64)
+        .collect();
+    let fairness = jain_index(&shares);
+
+    let step_ns = mix.step.as_nanos() as u64;
+    let makespan_ns = pops.last().map(|&(_, t)| t).unwrap_or(0);
+    let (throughput, utilization) = if makespan_ns == 0 {
+        (0.0, 0.0)
+    } else {
+        (
+            stats.completed as f64 / (makespan_ns as f64 / 1e9),
+            (stats.completed * step_ns) as f64 / makespan_ns as f64,
+        )
+    };
+
+    let per_client = sojourns
+        .iter()
+        .zip(&mix.clients)
+        .enumerate()
+        .map(|(i, (s, c))| {
+            let mut s = s.clone();
+            s.sort_unstable();
+            let mean = if s.is_empty() {
+                0
+            } else {
+                s.iter().sum::<u64>() / s.len() as u64
+            };
+            ClientLatency {
+                client: i as u64 + 1,
+                priority: c.priority,
+                jobs: s.len(),
+                mean_ns: mean,
+                p50_ns: percentile(&s, 50.0),
+                p95_ns: percentile(&s, 95.0),
+                p99_ns: percentile(&s, 99.0),
+            }
+        })
+        .collect();
+
+    LoadReport {
+        fair_queue: mix.fair_queue,
+        jobs: mix.total_jobs(),
+        completed: stats.completed,
+        rejected: stats.rejected,
+        makespan_ns,
+        throughput_jobs_per_sec: throughput,
+        utilization,
+        fairness,
+        per_client,
+    }
+}
+
+// ─── the TCP twin ──────────────────────────────────────────────────────────
+
+/// What the TCP twin measures: wall-clock numbers over real loopback
+/// sockets — real, therefore not part of the deterministic BENCH record.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpLoadReport {
+    pub jobs: usize,
+    pub completed: u64,
+    /// Submit of the first job to the last `JOBDONE`.
+    pub wall: Duration,
+    pub throughput_jobs_per_sec: f64,
+}
+
+/// Push the identical mix through a real TCP job server: persistent site
+/// sessions, a `serve_jobs` leader on a loopback listener, one
+/// `JobClient` connection per tenant. Same round-robin submission, same
+/// specs, real centrals (no sequencer) and real time.
+pub fn run_tcp_load(mix: &LoadMix) -> Result<TcpLoadReport> {
+    check_mix(mix)?;
+    let total = mix.total_jobs();
+    let mut cfg = load_cfg(mix);
+    let timeouts = cfg.net.tcp_timeouts();
+
+    let mut addrs = Vec::new();
+    let mut site_threads = Vec::new();
+    for data in load_workload(mix.seed) {
+        let listener = SiteListener::bind("127.0.0.1:0").context("bind site listener")?;
+        addrs.push(listener.local_addr()?.to_string());
+        let limits = cfg.site;
+        let t = timeouts;
+        site_threads.push(std::thread::spawn(move || {
+            let conn = listener.accept(&t)?;
+            let net = SiteNet::over(Box::new(conn));
+            site::session(&net, &data, None, limits, |_| {})
+        }));
+    }
+    cfg.net.sites = addrs;
+
+    let opts = ServerOpts {
+        max_jobs: 1,
+        queue_depth: total,
+        allow_label_pull: false,
+        central_workers: 1,
+        client_limit: Some(mix.clients.len() as u64),
+    };
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").context("bind job listener")?;
+    let leader_addr = listener.local_addr()?.to_string();
+    let server = std::thread::spawn({
+        let cfg = cfg.clone();
+        let opts = opts.clone();
+        move || serve_jobs(&cfg, &opts, listener)
+    });
+
+    let clients: Vec<JobClient> = mix
+        .clients
+        .iter()
+        .map(|_| JobClient::connect(&leader_addr, &timeouts))
+        .collect::<Result<_>>()?;
+
+    let t0 = Instant::now();
+    let mut runs: Vec<(usize, u32)> = Vec::with_capacity(total);
+    let mut remaining: Vec<usize> = mix.clients.iter().map(|c| c.submits).collect();
+    let mut submitted = 0;
+    while submitted < total {
+        for (i, client) in clients.iter().enumerate() {
+            if remaining[i] == 0 {
+                continue;
+            }
+            remaining[i] -= 1;
+            let mut spec = spec_from_config(&cfg);
+            spec.priority = mix.clients[i].priority;
+            let acc = client.submit_tracked(&spec)?;
+            runs.push((i, acc.run));
+            submitted += 1;
+        }
+    }
+    for &(owner, run) in &runs {
+        clients[owner].await_done(run)?;
+    }
+    let wall = t0.elapsed();
+    drop(clients);
+
+    let stats = server.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    for t in site_threads {
+        t.join().map_err(|_| anyhow::anyhow!("site thread panicked"))??;
+    }
+
+    Ok(TcpLoadReport {
+        jobs: total,
+        completed: stats.completed,
+        wall,
+        throughput_jobs_per_sec: stats.completed as f64 / wall.as_secs_f64().max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_index_equal_shares_is_one() {
+        assert_eq!(jain_index(&[2.0, 2.0, 2.0]), 1.0);
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn jain_index_penalizes_skew() {
+        let j = jain_index(&[3.0, 1.5, 0.75]);
+        assert!(j < 0.85, "skewed shares should score well below 1: {j}");
+        assert!(j > 0.0);
+        // one tenant taking everything → 1/n
+        let j = jain_index(&[5.0, 0.0, 0.0]);
+        assert!((j - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s = [10, 20, 30, 40];
+        assert_eq!(percentile(&s, 50.0), 20);
+        assert_eq!(percentile(&s, 95.0), 40);
+        assert_eq!(percentile(&s, 99.0), 40);
+        assert_eq!(percentile(&s, 1.0), 10);
+        assert_eq!(percentile(&[], 50.0), 0);
+        assert_eq!(percentile(&[7], 99.0), 7);
+    }
+
+    #[test]
+    fn skewed_three_mix_shape() {
+        let mix = LoadMix::skewed_three(true);
+        assert_eq!(mix.total_jobs(), 21);
+        assert!(check_mix(&mix).is_ok());
+        let bad = LoadMix {
+            clients: vec![ClientLoad { submits: 1, priority: 0 }],
+            ..LoadMix::skewed_three(false)
+        };
+        assert!(check_mix(&bad).is_err());
+    }
+
+    #[test]
+    fn report_json_is_stable() {
+        let report = LoadReport {
+            fair_queue: true,
+            jobs: 2,
+            completed: 2,
+            rejected: 0,
+            makespan_ns: 20,
+            throughput_jobs_per_sec: 1e8,
+            utilization: 1.0,
+            fairness: 0.5,
+            per_client: vec![ClientLatency {
+                client: 1,
+                priority: 1,
+                jobs: 2,
+                mean_ns: 15,
+                p50_ns: 10,
+                p95_ns: 20,
+                p99_ns: 20,
+            }],
+        };
+        let a = report.to_json();
+        assert_eq!(a, report.clone().to_json());
+        assert!(a.contains("\"fairness\": 0.5"), "{a}");
+        assert!(a.contains("\"p95_ns\": 20"), "{a}");
+    }
+}

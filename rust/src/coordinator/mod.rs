@@ -42,6 +42,7 @@
 //! (TCP), never the network.
 
 pub mod harness;
+pub mod loadgen;
 pub mod machine;
 pub mod server;
 
@@ -170,6 +171,7 @@ pub fn spec_from_config(cfg: &PipelineConfig) -> JobSpec {
         graph: cfg.graph,
         weighted: cfg.weighted_affinity,
         bandwidth: cfg.bandwidth,
+        priority: JobSpec::DEFAULT_PRIORITY,
     }
 }
 

@@ -56,7 +56,7 @@
 //! `REJECT` frame; the server itself only stops on fatal local errors
 //! (e.g. the client listener dying).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -67,7 +67,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{Backend, PipelineConfig};
 use crate::net::tcp::{self, Backoff, TcpClient, TcpTimeouts};
-use crate::net::{wire, JobReport, JobSpec, LinkStats, Message};
+use crate::net::{wire, JobReport, JobSpec, LinkStats, Message, RejectCode};
 
 use super::machine::{Advance, OutMsg, RunInput, RunMachine};
 use super::{central_cluster, check_graph_backend_kinds, resolve_xla};
@@ -127,7 +127,7 @@ pub struct ServerStats {
     pub completed: u64,
     /// Runs that started (or were queued) and then failed.
     pub failed: u64,
-    /// Submissions refused outright (queue full).
+    /// Submissions refused outright (bad spec, queue full, rate limited).
     pub rejected: u64,
 }
 
@@ -142,8 +142,10 @@ pub(crate) enum Event {
     SiteFrame { site: usize, gen: u64, frame: Vec<u8> },
     /// A site link died (clean close, decode failure, or io error).
     SiteDown { site: usize, gen: u64, err: String },
-    /// A client submitted a job.
-    ClientSubmit { client: u64, spec: Box<JobSpec> },
+    /// A client submitted a job. `modern` says which dialect the submit
+    /// frame spoke: SUBMITPRI(18) opts the client into JOBACCEPT2/REJECT2
+    /// replies, legacy SUBMIT(14) keeps the frozen JOBACCEPT/REJECT frames.
+    ClientSubmit { client: u64, spec: Box<JobSpec>, modern: bool },
     /// A client asked for a completed run's populated labels.
     ClientPull { client: u64, run: u32 },
     /// A client connection ended (its runs keep going; reports are
@@ -269,6 +271,181 @@ impl CentralPool {
     }
 }
 
+// ─── scheduling primitives ─────────────────────────────────────────────────
+
+/// Deficit round-robin over per-client FIFO lanes — the `[leader]
+/// fair_queue = true` scheduler. When a lane reaches the head of the ring
+/// with an empty deficit it is granted one round's quantum: the priority
+/// (weight) of its head job. Serving one job costs one unit, so a client
+/// whose jobs carry weight *w* gets *w* consecutive jobs per round while
+/// backlogged — long-run service shares converge to the weight ratio no
+/// matter how lopsided the submit mix is (pinned by
+/// `prop_drr_backlogged_service_tracks_weights` in
+/// `rust/tests/properties.rs`). Per-client order is always FIFO.
+///
+/// Generic over the queued item so the policy is unit-testable — and
+/// replayable by the load generator's schedule predictor — without a
+/// reactor around it.
+#[derive(Debug)]
+pub struct DrrQueue<T> {
+    ring: VecDeque<Lane<T>>,
+    len: usize,
+}
+
+#[derive(Debug)]
+struct Lane<T> {
+    client: u64,
+    /// `(weight, item)` in arrival order.
+    jobs: VecDeque<(u32, T)>,
+    deficit: u32,
+}
+
+impl<T> Default for DrrQueue<T> {
+    fn default() -> Self {
+        DrrQueue::new()
+    }
+}
+
+impl<T> DrrQueue<T> {
+    pub fn new() -> DrrQueue<T> {
+        DrrQueue { ring: VecDeque::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append an item to `client`'s lane with scheduling weight `weight`
+    /// (clamped to ≥ 1). A client seen for the first time joins the ring
+    /// at the tail.
+    pub fn push(&mut self, client: u64, weight: u32, item: T) {
+        let weight = weight.max(1);
+        self.len += 1;
+        if let Some(lane) = self.ring.iter_mut().find(|l| l.client == client) {
+            lane.jobs.push_back((weight, item));
+            return;
+        }
+        let mut jobs = VecDeque::new();
+        jobs.push_back((weight, item));
+        self.ring.push_back(Lane { client, jobs, deficit: 0 });
+    }
+
+    /// Dequeue the next item under deficit round-robin.
+    pub fn pop(&mut self) -> Option<T> {
+        loop {
+            let lane = self.ring.front_mut()?;
+            let Some(&(weight, _)) = lane.jobs.front() else {
+                // defensive: emptied lanes leave the ring below
+                self.ring.pop_front();
+                continue;
+            };
+            if lane.deficit == 0 {
+                // fresh visit at the ring head: grant one round's quantum
+                lane.deficit = weight;
+            }
+            lane.deficit -= 1;
+            let (_, item) = lane.jobs.pop_front().expect("checked non-empty");
+            self.len -= 1;
+            if lane.deficit == 0 || lane.jobs.is_empty() {
+                // visit over: rotate. An emptied lane leaves the ring and
+                // forfeits unused deficit (classic DRR empty-queue reset),
+                // so an idle client cannot bank service credit.
+                let mut lane = self.ring.pop_front().expect("front exists");
+                lane.deficit = 0;
+                if !lane.jobs.is_empty() {
+                    self.ring.push_back(lane);
+                }
+            }
+            return Some(item);
+        }
+    }
+}
+
+/// Per-client token-bucket admission meter (`[leader] admit_rate` /
+/// `admit_burst`): `rate` tokens per second refill up to `burst`, one
+/// submit costs one token. Clocked by caller-supplied `Instant`s — the
+/// reactor passes `driver.now()`, so the channel harness exercises refill
+/// on a virtual clock with no sleeps.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A full bucket as of `now`. `rate` is submits/second (> 0); `burst`
+    /// is clamped to ≥ 1 token.
+    pub fn new(rate: f64, burst: f64, now: Instant) -> TokenBucket {
+        let burst = burst.max(1.0);
+        TokenBucket { rate, burst, tokens: burst, last: now }
+    }
+
+    /// Take one token, refilling from the time elapsed since the last
+    /// call first. `Err` carries the wait until the next token exists.
+    pub fn try_take(&mut self, now: Instant) -> std::result::Result<(), Duration> {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(Duration::from_secs_f64((1.0 - self.tokens) / self.rate))
+        }
+    }
+}
+
+/// The reactor's pending-job queue: global FIFO (the legacy default,
+/// byte-for-byte the pre-`fair_queue` server) or per-client DRR.
+enum JobQueue {
+    Fifo(VecDeque<Job>),
+    Fair(DrrQueue<Job>),
+}
+
+impl JobQueue {
+    fn new(fair: bool) -> JobQueue {
+        if fair {
+            JobQueue::Fair(DrrQueue::new())
+        } else {
+            JobQueue::Fifo(VecDeque::new())
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            JobQueue::Fifo(q) => q.len(),
+            JobQueue::Fair(q) => q.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn push(&mut self, job: Job) {
+        match self {
+            JobQueue::Fifo(q) => q.push_back(job),
+            JobQueue::Fair(q) => {
+                let (client, weight) = (job.client, job.spec.priority);
+                q.push(client, weight, job)
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<Job> {
+        match self {
+            JobQueue::Fifo(q) => q.pop_front(),
+            JobQueue::Fair(q) => q.pop(),
+        }
+    }
+}
+
 // ─── reactor core ──────────────────────────────────────────────────────────
 
 struct Job {
@@ -305,7 +482,7 @@ pub(crate) struct Reactor<D: ServerDriver> {
     xla: Option<std::rc::Rc<crate::runtime::XlaRuntime>>,
     driver: D,
     pool: CentralPool,
-    queue: VecDeque<Job>,
+    queue: JobQueue,
     active: HashMap<u32, RunEntry>,
     /// Recently completed runs (run id → site count), FIFO-capped, for
     /// label pulls.
@@ -321,6 +498,17 @@ pub(crate) struct Reactor<D: ServerDriver> {
     /// No re-dial (and so no queued-run start) before this instant.
     redial_after: Option<Instant>,
     stats: ServerStats,
+    /// Clients that submitted via SUBMITPRI(18) at least once: they get
+    /// modern-dialect replies (JOBACCEPT2/REJECT2) from then on.
+    modern: HashSet<u64>,
+    /// Per-client admission meters (`[leader] admit_rate` > 0 only).
+    buckets: HashMap<u64, TokenBucket>,
+    /// Running mean of completed central durations — the ETA basis of
+    /// JOBACCEPT2 (`eta_ns ≈ position × mean central`). 0 until the first
+    /// run completes.
+    central_mean_ns: f64,
+    /// Completed centrals behind `central_mean_ns`.
+    centrals_done: u64,
 }
 
 impl<D: ServerDriver> Reactor<D> {
@@ -333,15 +521,19 @@ impl<D: ServerDriver> Reactor<D> {
         if opts.max_jobs == 0 || opts.queue_depth == 0 {
             bail!("[leader] max_jobs and queue_depth must be ≥ 1");
         }
+        if !cfg.leader.admit_rate.is_finite() || cfg.leader.admit_rate < 0.0 {
+            bail!("[leader] admit_rate must be finite and ≥ 0 (0 disables admission)");
+        }
         let xla = resolve_xla(&cfg)?;
         let seed = cfg.seed;
+        let queue = JobQueue::new(cfg.leader.fair_queue);
         Ok(Reactor {
             cfg,
             opts,
             xla,
             driver,
             pool,
-            queue: VecDeque::new(),
+            queue,
             active: HashMap::new(),
             completed: VecDeque::new(),
             pulls: Vec::new(),
@@ -350,6 +542,10 @@ impl<D: ServerDriver> Reactor<D> {
             redial_backoff: Backoff::new(seed ^ 0xD1A1),
             redial_after: None,
             stats: ServerStats::default(),
+            modern: HashSet::new(),
+            buckets: HashMap::new(),
+            central_mean_ns: 0.0,
+            centrals_done: 0,
         })
     }
 
@@ -383,11 +579,15 @@ impl<D: ServerDriver> Reactor<D> {
                     self.site_down(site, &err);
                 }
             }
-            Event::ClientSubmit { client, spec } => self.on_submit(client, *spec),
+            Event::ClientSubmit { client, spec, modern } => {
+                self.on_submit(client, *spec, modern)
+            }
             Event::ClientPull { client, run } => self.on_pull(client, run),
             Event::ClientDown { client } => {
                 self.driver.drop_client(client);
                 self.pulls.retain(|p| p.client != client);
+                self.modern.remove(&client);
+                self.buckets.remove(&client);
                 self.clients_done += 1;
             }
             Event::CentralDone { run, result, elapsed } => {
@@ -594,46 +794,83 @@ impl<D: ServerDriver> Reactor<D> {
         // otherwise block forever — idle waits never time out by design.
         let pulls = std::mem::take(&mut self.pulls);
         for p in pulls {
-            self.send_client(
+            self.reject_pull(
                 p.client,
-                &Message::Reject {
-                    run: p.run,
-                    msg: format!("site {site} link failed during the label pull"),
-                },
+                p.run,
+                format!("site {site} link failed during the label pull"),
             );
         }
     }
 
     // ─── run lifecycle ─────────────────────────────────────────────────
 
-    fn on_submit(&mut self, client: u64, spec: JobSpec) {
+    fn on_submit(&mut self, client: u64, spec: JobSpec, modern: bool) {
+        if modern {
+            self.modern.insert(client);
+        }
+        // Admission first: a flooding client is turned away before the
+        // leader spends validation or queue space on it.
+        let rate = self.cfg.leader.admit_rate;
+        if rate > 0.0 {
+            let now = self.driver.now();
+            let burst = self.cfg.leader.admit_burst.max(1) as f64;
+            let bucket = self
+                .buckets
+                .entry(client)
+                .or_insert_with(|| TokenBucket::new(rate, burst, now));
+            if let Err(wait) = bucket.try_take(now) {
+                self.reject_submit(
+                    client,
+                    RejectCode::RateLimited,
+                    wait.as_nanos() as u64,
+                    "rate limited".into(),
+                );
+                return;
+            }
+        }
         // Client input is untrusted: refuse specs the pipeline would panic
         // or misbehave on *now*, not after every site has done DML work —
         // and never let one bad job take the reactor (and every other
         // client's runs) down.
         if let Err(e) = validate_spec(&spec, self.cfg.backend) {
-            self.send_client(
-                client,
-                &Message::Reject { run: 0, msg: reject_text(&format!("bad job spec: {e:#}")) },
-            );
-            self.stats.rejected += 1;
+            self.reject_submit(client, RejectCode::BadSpec, 0, format!("bad job spec: {e:#}"));
             return;
         }
         if self.queue.len() >= self.opts.queue_depth {
-            self.send_client(
+            self.reject_submit(
                 client,
-                &Message::Reject {
-                    run: 0,
-                    msg: format!("queue full ({} jobs pending)", self.queue.len()),
-                },
+                RejectCode::QueueFull,
+                self.queue.len() as u64,
+                format!("queue full ({} jobs pending)", self.queue.len()),
             );
-            self.stats.rejected += 1;
             return;
         }
         let run = self.next_run;
         self.next_run = self.next_run.wrapping_add(1).max(1); // run 0 = "no run"
-        self.send_client(client, &Message::JobAccept { run });
-        self.queue.push_back(Job { run, client, spec });
+        if self.modern.contains(&client) {
+            // jobs ahead of this one = everything running + everything queued
+            let position = (self.active.len() + self.queue.len()) as u32;
+            let eta_ns = (self.central_mean_ns * position as f64) as u64;
+            self.send_client(client, &Message::JobAcceptExt { run, position, eta_ns });
+        } else {
+            self.send_client(client, &Message::JobAccept { run });
+        }
+        self.queue.push(Job { run, client, spec });
+    }
+
+    /// Refuse a submission in the client's dialect and count it. The
+    /// legacy REJECT(17) text is byte-frozen (pre-`fair_queue` parity);
+    /// modern clients additionally get the machine-readable reason code
+    /// and detail, so nothing needs to parse the sentence.
+    fn reject_submit(&mut self, client: u64, code: RejectCode, detail: u64, msg: String) {
+        let msg = reject_text(&msg);
+        let frame = if self.modern.contains(&client) {
+            Message::RejectCoded { run: 0, code, detail, msg }
+        } else {
+            Message::Reject { run: 0, msg }
+        };
+        self.send_client(client, &frame);
+        self.stats.rejected += 1;
     }
 
     /// Start queued jobs while slots are free. Called after every event.
@@ -661,7 +898,7 @@ impl<D: ServerDriver> Reactor<D> {
             }
             self.redial_after = None;
             self.redial_backoff.reset();
-            let job = self.queue.pop_front().expect("checked non-empty");
+            let job = self.queue.pop().expect("checked non-empty");
             let n_sites = self.driver.n_sites();
             let now = self.driver.now();
             self.active.insert(
@@ -702,6 +939,10 @@ impl<D: ServerDriver> Reactor<D> {
             self.completed.pop_front();
         }
         self.stats.completed += 1;
+        // Fold this central into the running mean behind JOBACCEPT2's ETA.
+        self.centrals_done += 1;
+        let central_ns = outcome.central.as_nanos() as f64;
+        self.central_mean_ns += (central_ns - self.central_mean_ns) / self.centrals_done as f64;
         self.send_client(entry.client, &Message::JobDone { run, report });
     }
 
@@ -709,7 +950,13 @@ impl<D: ServerDriver> Reactor<D> {
         let Some(entry) = self.active.remove(&run) else { return };
         eprintln!("leader: run {run} failed: {why}");
         self.stats.failed += 1;
-        self.send_client(entry.client, &Message::Reject { run, msg: reject_text(why) });
+        let msg = reject_text(why);
+        let frame = if self.modern.contains(&entry.client) {
+            Message::RejectCoded { run, code: RejectCode::RunFailed, detail: 0, msg }
+        } else {
+            Message::Reject { run, msg }
+        };
+        self.send_client(entry.client, &frame);
     }
 
     /// Fail every run whose straggler deadline has passed (the machine
@@ -746,50 +993,45 @@ impl<D: ServerDriver> Reactor<D> {
         }
     }
 
+    /// Refuse a label pull in the client's dialect (code `PullRefused`).
+    fn reject_pull(&mut self, client: u64, run: u32, msg: String) {
+        let msg = reject_text(&msg);
+        let frame = if self.modern.contains(&client) {
+            Message::RejectCoded { run, code: RejectCode::PullRefused, detail: 0, msg }
+        } else {
+            Message::Reject { run, msg }
+        };
+        self.send_client(client, &frame);
+    }
+
     fn on_pull(&mut self, client: u64, run: u32) {
         if !self.opts.allow_label_pull {
-            self.send_client(
+            self.reject_pull(
                 client,
-                &Message::Reject {
-                    run,
-                    msg: "label pull is disabled on this leader \
-                          ([leader] allow_label_pull = false)"
-                        .into(),
-                },
+                run,
+                "label pull is disabled on this leader \
+                 ([leader] allow_label_pull = false)"
+                    .into(),
             );
             return;
         }
         let Some(&(_, n_sites)) = self.completed.iter().find(|&&(r, _)| r == run) else {
-            self.send_client(
+            self.reject_pull(
                 client,
-                &Message::Reject {
-                    run,
-                    msg: format!("run {run} is not a completed run on this leader"),
-                },
+                run,
+                format!("run {run} is not a completed run on this leader"),
             );
             return;
         };
         if let Err(e) = self.driver.ensure_links() {
-            self.send_client(
-                client,
-                &Message::Reject {
-                    run,
-                    msg: reject_text(&format!("cannot reach sites for the pull: {e:#}")),
-                },
-            );
+            self.reject_pull(client, run, format!("cannot reach sites for the pull: {e:#}"));
             return;
         }
         let frame = wire::encode(&Message::LabelsPull { run });
         for site in 0..n_sites {
             if let Err(e) = self.driver.send_site(site, &frame) {
                 self.site_down(site, &format!("{e:#}"));
-                self.send_client(
-                    client,
-                    &Message::Reject {
-                        run,
-                        msg: reject_text(&format!("site {site} died during the pull: {e:#}")),
-                    },
-                );
+                self.reject_pull(client, run, format!("site {site} died during the pull: {e:#}"));
                 return;
             }
         }
@@ -817,10 +1059,7 @@ impl<D: ServerDriver> Reactor<D> {
     fn refuse_pull(&mut self, run: u32, why: &str) {
         let Some(pos) = self.pulls.iter().position(|p| p.run == run) else { return };
         let pull = self.pulls.remove(pos);
-        self.send_client(
-            pull.client,
-            &Message::Reject { run, msg: reject_text(&format!("site refused the pull: {why}")) },
-        );
+        self.reject_pull(pull.client, run, format!("site refused the pull: {why}"));
     }
 }
 
@@ -859,6 +1098,11 @@ fn validate_spec(spec: &JobSpec, backend: crate::config::Backend) -> Result<()> 
             bail!("knn_k must be ≥ 1");
         }
     }
+    // The wire decoder bounds SUBMITPRI priorities already; this guards
+    // specs that reach the reactor through an in-process path.
+    if spec.priority < 1 || spec.priority > JobSpec::MAX_PRIORITY {
+        bail!("priority must be in 1..={}", JobSpec::MAX_PRIORITY);
+    }
     check_graph_backend_kinds(spec.graph, backend)
 }
 
@@ -877,7 +1121,12 @@ fn reject_text(s: &str) -> String {
 /// client broke protocol and must be dropped.
 pub(crate) fn client_frame_to_event(client: u64, frame: &[u8]) -> Result<Event> {
     match wire::decode(frame)? {
-        Message::Submit(spec) => Ok(Event::ClientSubmit { client, spec: Box::new(spec) }),
+        Message::Submit(spec) => {
+            Ok(Event::ClientSubmit { client, spec: Box::new(spec), modern: false })
+        }
+        Message::SubmitPri(spec) => {
+            Ok(Event::ClientSubmit { client, spec: Box::new(spec), modern: true })
+        }
         Message::LabelsPull { run } => Ok(Event::ClientPull { client, run }),
         other => bail!("client sent unexpected {other:?}"),
     }
@@ -1151,6 +1400,20 @@ impl ClientLink for TcpClient {
     }
 }
 
+/// What a modern-dialect accept (JOBACCEPT2) carries — returned by
+/// [`JobClient::submit_tracked`].
+#[derive(Clone, Copy, Debug)]
+pub struct Accepted {
+    /// Assigned run id.
+    pub run: u32,
+    /// Jobs ahead of this one (active + queued) when the leader accepted
+    /// it.
+    pub position: u32,
+    /// Estimated nanoseconds until this job starts, from the leader's
+    /// running mean of central durations; 0 until a first run completes.
+    pub eta_ns: u64,
+}
+
 /// A client of a job-serving leader (`dsc submit`, tests, drills): typed
 /// submit / await / pull over one [`ClientLink`]. Out-of-order frames (a
 /// `JOBDONE` for an earlier job arriving while waiting for a `JOBACCEPT`)
@@ -1174,16 +1437,55 @@ impl<L: ClientLink> JobClient<L> {
         JobClient { conn, pending: std::cell::RefCell::new(VecDeque::new()) }
     }
 
-    /// Submit a job; returns the assigned run id.
+    /// Submit a job; returns the assigned run id. Specs with the default
+    /// priority go out as legacy SUBMIT(14) — byte-identical to the
+    /// pre-`fair_queue` client — and any other priority upgrades the frame
+    /// to SUBMITPRI(18) (use [`JobClient::submit_tracked`] to see the
+    /// queue position and ETA that come back in the modern dialect).
     pub fn submit(&self, spec: &JobSpec) -> Result<u32> {
-        self.conn.send(&wire::encode(&Message::Submit(spec.clone())))?;
-        match self.next_where(|m| {
-            matches!(m, Message::JobAccept { .. } | Message::Reject { run: 0, .. })
-        })? {
-            Message::JobAccept { run } => Ok(run),
-            Message::Reject { msg, .. } => bail!("leader rejected the job: {msg}"),
+        let msg = if spec.priority == JobSpec::DEFAULT_PRIORITY {
+            Message::Submit(spec.clone())
+        } else {
+            Message::SubmitPri(spec.clone())
+        };
+        self.conn.send(&wire::encode(&msg))?;
+        match self.next_accept()? {
+            Message::JobAccept { run } | Message::JobAcceptExt { run, .. } => Ok(run),
+            Message::Reject { msg, .. } | Message::RejectCoded { msg, .. } => {
+                bail!("leader rejected the job: {msg}")
+            }
             _ => unreachable!("filtered above"),
         }
+    }
+
+    /// Submit in the modern dialect (SUBMITPRI) regardless of priority and
+    /// return the full accept: run id, queue position, and the leader's
+    /// ETA estimate.
+    pub fn submit_tracked(&self, spec: &JobSpec) -> Result<Accepted> {
+        self.conn.send(&wire::encode(&Message::SubmitPri(spec.clone())))?;
+        match self.next_accept()? {
+            Message::JobAcceptExt { run, position, eta_ns } => {
+                Ok(Accepted { run, position, eta_ns })
+            }
+            Message::JobAccept { run } => Ok(Accepted { run, position: 0, eta_ns: 0 }),
+            Message::Reject { msg, .. } | Message::RejectCoded { msg, .. } => {
+                bail!("leader rejected the job: {msg}")
+            }
+            _ => unreachable!("filtered above"),
+        }
+    }
+
+    /// Next accept-or-refusal frame for a just-sent submit, either dialect.
+    fn next_accept(&self) -> Result<Message> {
+        self.next_where(|m| {
+            matches!(
+                m,
+                Message::JobAccept { .. }
+                    | Message::JobAcceptExt { .. }
+                    | Message::Reject { run: 0, .. }
+                    | Message::RejectCoded { run: 0, .. }
+            )
+        })
     }
 
     /// Block until the run finishes; a failed run is an `Err` carrying the
@@ -1191,10 +1493,17 @@ impl<L: ClientLink> JobClient<L> {
     /// takes — the transport never times out between frames.
     pub fn await_done(&self, run: u32) -> Result<JobReport> {
         match self.next_where(|m| {
-            matches!(m, Message::JobDone { run: r, .. } | Message::Reject { run: r, .. } if *r == run)
+            matches!(
+                m,
+                Message::JobDone { run: r, .. }
+                    | Message::Reject { run: r, .. }
+                    | Message::RejectCoded { run: r, .. } if *r == run
+            )
         })? {
             Message::JobDone { report, .. } => Ok(report),
-            Message::Reject { msg, .. } => bail!("run {run} failed: {msg}"),
+            Message::Reject { msg, .. } | Message::RejectCoded { msg, .. } => {
+                bail!("run {run} failed: {msg}")
+            }
             _ => unreachable!("filtered above"),
         }
     }
@@ -1207,10 +1516,17 @@ impl<L: ClientLink> JobClient<L> {
         let mut out: Vec<(usize, Vec<u16>)> = Vec::with_capacity(n_sites);
         while out.len() < n_sites {
             match self.next_where(|m| {
-                matches!(m, Message::SiteLabels { run: r, .. } | Message::Reject { run: r, .. } if *r == run)
+                matches!(
+                    m,
+                    Message::SiteLabels { run: r, .. }
+                        | Message::Reject { run: r, .. }
+                        | Message::RejectCoded { run: r, .. } if *r == run
+                )
             })? {
                 Message::SiteLabels { site, labels, .. } => out.push((site as usize, labels)),
-                Message::Reject { msg, .. } => bail!("label pull for run {run} refused: {msg}"),
+                Message::Reject { msg, .. } | Message::RejectCoded { msg, .. } => {
+                    bail!("label pull for run {run} refused: {msg}")
+                }
                 _ => unreachable!("filtered above"),
             }
         }
@@ -1234,5 +1550,112 @@ impl<L: ClientLink> JobClient<L> {
             }
             pending.push_back(msg);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drr_single_client_is_fifo() {
+        let mut q = DrrQueue::new();
+        for i in 0..5 {
+            q.push(1, 3, i);
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drr_equal_weights_round_robin() {
+        let mut q = DrrQueue::new();
+        // client 1 floods before client 2 shows up at all
+        for i in 0..4 {
+            q.push(1, 1, (1u64, i));
+        }
+        for i in 0..4 {
+            q.push(2, 1, (2u64, i));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(c, _)| c).collect();
+        assert_eq!(order, vec![1, 2, 1, 2, 1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn drr_weighted_client_gets_weight_proportional_service() {
+        let mut q = DrrQueue::new();
+        for i in 0..6 {
+            q.push(1, 3, (1u64, i)); // weight 3
+        }
+        for i in 0..6 {
+            q.push(2, 1, (2u64, i)); // weight 1
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(c, _)| c).collect();
+        // each round: 3 jobs of client 1, then 1 of client 2
+        assert_eq!(order, vec![1, 1, 1, 2, 1, 1, 1, 2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn drr_preserves_per_client_order_and_conserves_items() {
+        let mut q = DrrQueue::new();
+        for i in 0..5 {
+            q.push(7, 2, (7u64, i));
+            q.push(9, 4, (9u64, i));
+        }
+        let mut last: HashMap<u64, i32> = HashMap::new();
+        let mut n = 0;
+        while let Some((c, i)) = q.pop() {
+            let prev = last.insert(c, i);
+            assert!(prev.map_or(true, |p| p < i), "client {c} served out of order");
+            n += 1;
+        }
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn drr_idle_client_banks_no_credit() {
+        let mut q = DrrQueue::new();
+        q.push(1, 5, 0);
+        assert_eq!(q.pop(), Some(0));
+        // lane emptied after one job of a weight-5 visit: the unused
+        // deficit is forfeited, so a later burst starts a fresh round
+        for i in 10..13 {
+            q.push(1, 1, i);
+        }
+        q.push(2, 1, 99);
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(99)); // client 2 is not starved
+    }
+
+    #[test]
+    fn token_bucket_burst_then_refill() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(2.0, 3.0, t0); // 2/s, burst 3
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        let wait = b.try_take(t0).unwrap_err();
+        // empty bucket at 2 tokens/s: next token in 0.5 s
+        assert!(wait > Duration::from_millis(400) && wait <= Duration::from_millis(500));
+        // one second later two tokens have refilled
+        let t1 = t0 + Duration::from_secs(1);
+        assert!(b.try_take(t1).is_ok());
+        assert!(b.try_take(t1).is_ok());
+        assert!(b.try_take(t1).is_err());
+    }
+
+    #[test]
+    fn token_bucket_never_exceeds_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(100.0, 2.0, t0);
+        // a long idle period must not bank more than `burst` tokens
+        let t1 = t0 + Duration::from_secs(3600);
+        assert!(b.try_take(t1).is_ok());
+        assert!(b.try_take(t1).is_ok());
+        assert!(b.try_take(t1).is_err());
     }
 }

@@ -37,7 +37,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 pub use transport::{LeaderTransport, SiteTransport};
-pub use wire::{JobReport, JobSpec, LinkReport, Message};
+pub use wire::{JobReport, JobSpec, LinkReport, Message, RejectCode};
 
 /// Bandwidth/latency model of one site↔leader link.
 #[derive(Clone, Copy, Debug)]

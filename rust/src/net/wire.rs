@@ -19,7 +19,7 @@
 //! Tags 7–11 are the **run-scoped** family used by the multi-run job
 //! server (`dsc leader --serve`): the same payloads as tags 1/2/5/6 with a
 //! leading `run:u32`, so frames of interleaved runs can share one site
-//! link. Tags 12–17 are the client/job-control plane (`dsc submit`):
+//! link. Tags 12–20 are the client/job-control plane (`dsc submit`):
 //!
 //! ```text
 //! RUNSTART(7)    := run:u32                        (leader → site, open a run)
@@ -34,7 +34,19 @@
 //! JOBACCEPT(15)  := run:u32                        (leader → client)
 //! JOBDONE(16)    := run:u32 job report             (leader → client)
 //! REJECT(17)     := run:u32 len:u32 msg:[u8; len]  (leader → client / site → leader)
+//! SUBMITPRI(18)  := job spec priority:u32          (client → leader)
+//! JOBACCEPT2(19) := run:u32 position:u32 eta_ns:u64
+//!                                                  (leader → client)
+//! REJECT2(20)    := run:u32 code:u8 detail:u64 len:u32 msg:[u8; len]
+//!                                                  (leader → client)
 //! ```
+//!
+//! Tags 18–20 are the **modern client dialect**: a client that submits with
+//! SUBMITPRI(18) carries an explicit scheduling priority and is answered
+//! with JOBACCEPT2(19) (queue position + ETA) and structured REJECT2(20)
+//! frames (machine-readable reason code + detail). Clients speaking the
+//! legacy SUBMIT(14) keep getting byte-identical JOBACCEPT(15)/REJECT(17),
+//! so pre-existing deployments see no change on the wire.
 //!
 //! Codebook frames are exactly what the paper transmits (codewords + group
 //! sizes); label frames are the populated memberships coming back. SiteInfo
@@ -99,6 +111,63 @@ pub enum Message {
     /// Leader → client or site → leader: a request was refused or a run
     /// failed; `msg` says why. `run = 0` when no run was assigned.
     Reject { run: u32, msg: String },
+    /// Client → leader: enqueue a clustering job carrying an explicit
+    /// scheduling priority — the modern-dialect twin of
+    /// [`Message::Submit`]. Submitting with this tag opts the client into
+    /// [`Message::JobAcceptExt`] / [`Message::RejectCoded`] replies.
+    SubmitPri(JobSpec),
+    /// Leader → client (modern dialect): the job was queued under this run
+    /// id; `position` counts the jobs ahead of it (active + queued at
+    /// accept time) and `eta_ns` is a start-time estimate from the
+    /// leader's running mean of central-step durations (0 = no estimate
+    /// yet).
+    JobAcceptExt { run: u32, position: u32, eta_ns: u64 },
+    /// Leader → client (modern dialect): structured refusal. `code` says
+    /// *why* without string matching, `detail` is a per-code
+    /// machine-readable quantity (see [`RejectCode`]), and `msg` stays a
+    /// short human-readable sentence.
+    RejectCoded { run: u32, code: RejectCode, detail: u64, msg: String },
+}
+
+/// Machine-readable refusal reason inside a [`Message::RejectCoded`].
+///
+/// The `detail` field of the frame qualifies the code: `QueueFull` carries
+/// the number of jobs pending, `RateLimited` carries the nanoseconds until
+/// the client's token bucket refills; the other codes carry 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectCode {
+    /// The submitted spec failed validation.
+    BadSpec,
+    /// The job queue is at `[leader] queue_depth`.
+    QueueFull,
+    /// The client exceeded `[leader] admit_rate` (token bucket empty).
+    RateLimited,
+    /// An accepted run failed (site fault, central error, timeout).
+    RunFailed,
+    /// A label pull was refused (disabled, unknown run, evicted).
+    PullRefused,
+}
+
+/// Wire encoding of a [`RejectCode`] (REJECT2 `code` field).
+fn reject_code(c: RejectCode) -> u8 {
+    match c {
+        RejectCode::BadSpec => 1,
+        RejectCode::QueueFull => 2,
+        RejectCode::RateLimited => 3,
+        RejectCode::RunFailed => 4,
+        RejectCode::PullRefused => 5,
+    }
+}
+
+fn reject_from_code(code: u8) -> Result<RejectCode> {
+    Ok(match code {
+        1 => RejectCode::BadSpec,
+        2 => RejectCode::QueueFull,
+        3 => RejectCode::RateLimited,
+        4 => RejectCode::RunFailed,
+        5 => RejectCode::PullRefused,
+        other => bail!("unknown reject code {other}"),
+    })
 }
 
 /// Everything a client must specify for the leader to run one clustering
@@ -128,6 +197,21 @@ pub struct JobSpec {
     pub weighted: bool,
     /// Affinity bandwidth policy.
     pub bandwidth: Bandwidth,
+    /// Scheduling weight under `[leader] fair_queue` (deficit round-robin
+    /// serves a client `priority` jobs per round). `1..=MAX_PRIORITY`;
+    /// ignored by the FIFO scheduler. Travels only in SUBMITPRI(18) —
+    /// legacy SUBMIT(14) frames decode to [`JobSpec::DEFAULT_PRIORITY`].
+    pub priority: u32,
+}
+
+impl JobSpec {
+    /// Priority carried by legacy SUBMIT(14) frames and used when a client
+    /// does not care about scheduling weight.
+    pub const DEFAULT_PRIORITY: u32 = 1;
+    /// Inclusive priority ceiling: bounds the deficit round-robin burst one
+    /// client can claim per round, so a hostile priority cannot starve the
+    /// ring.
+    pub const MAX_PRIORITY: u32 = 16;
 }
 
 /// Per-link counters inside a [`JobReport`] (the wire form of one
@@ -177,6 +261,9 @@ const TAG_SUBMIT: u8 = 14;
 const TAG_JOB_ACCEPT: u8 = 15;
 const TAG_JOB_DONE: u8 = 16;
 const TAG_REJECT: u8 = 17;
+const TAG_SUBMIT_PRI: u8 = 18;
+const TAG_JOB_ACCEPT2: u8 = 19;
+const TAG_REJECT2: u8 = 20;
 
 /// Refusal messages are short human-readable sentences; anything larger is
 /// hostile.
@@ -445,21 +532,16 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             }
         }
         Message::Submit(spec) => {
+            // The legacy frame has no priority slot; encoding a non-default
+            // priority here would silently drop it.
+            assert_eq!(spec.priority, JobSpec::DEFAULT_PRIORITY);
             w.u8(TAG_SUBMIT);
-            w.u8(dml_code(spec.dml));
-            w.u32(spec.total_codes);
-            w.u32(spec.k_clusters);
-            w.u32(spec.kmeans_max_iters);
-            w.f64(spec.kmeans_tol);
-            w.u64(spec.seed);
-            w.u8(algo_code(spec.algo));
-            let (g, knn_k) = graph_code(spec.graph);
-            w.u8(g);
-            w.u32(knn_k);
-            w.u8(spec.weighted as u8);
-            let (bw, value) = bandwidth_code(spec.bandwidth);
-            w.u8(bw);
-            w.f64(value);
+            encode_spec_body(&mut w, spec);
+        }
+        Message::SubmitPri(spec) => {
+            w.u8(TAG_SUBMIT_PRI);
+            encode_spec_body(&mut w, spec);
+            w.u32(spec.priority);
         }
         Message::JobAccept { run } => {
             w.u8(TAG_JOB_ACCEPT);
@@ -490,8 +572,44 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u32(bytes.len() as u32);
             w.buf.extend_from_slice(bytes);
         }
+        Message::JobAcceptExt { run, position, eta_ns } => {
+            w.u8(TAG_JOB_ACCEPT2);
+            w.u32(*run);
+            w.u32(*position);
+            w.u64(*eta_ns);
+        }
+        Message::RejectCoded { run, code, detail, msg } => {
+            let bytes = msg.as_bytes();
+            assert!(bytes.len() as u64 <= MAX_REJECT_MSG as u64);
+            w.u8(TAG_REJECT2);
+            w.u32(*run);
+            w.u8(reject_code(*code));
+            w.u64(*detail);
+            w.u32(bytes.len() as u32);
+            w.buf.extend_from_slice(bytes);
+        }
     }
     w.buf
+}
+
+/// Shared body of SUBMIT(14) and SUBMITPRI(18): the ten legacy spec fields
+/// in frozen order (the priority suffix of tag 18 is written by the
+/// caller).
+fn encode_spec_body(w: &mut Writer, spec: &JobSpec) {
+    w.u8(dml_code(spec.dml));
+    w.u32(spec.total_codes);
+    w.u32(spec.k_clusters);
+    w.u32(spec.kmeans_max_iters);
+    w.f64(spec.kmeans_tol);
+    w.u64(spec.seed);
+    w.u8(algo_code(spec.algo));
+    let (g, knn_k) = graph_code(spec.graph);
+    w.u8(g);
+    w.u32(knn_k);
+    w.u8(spec.weighted as u8);
+    let (bw, value) = bandwidth_code(spec.bandwidth);
+    w.u8(bw);
+    w.f64(value);
 }
 
 /// Deserialize a frame. Errors on truncation, trailing garbage, overflow or
@@ -564,33 +682,18 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             let (site, labels) = decode_labels_body(&mut r)?;
             Message::SiteLabels { run, site, labels }
         }
-        TAG_SUBMIT => {
-            let dml = dml_from_code(r.u8()?)?;
-            let total_codes = r.u32()?;
-            let k_clusters = r.u32()?;
-            let kmeans_max_iters = r.u32()?;
-            let kmeans_tol = r.f64()?;
-            let seed = r.u64()?;
-            let algo = algo_from_code(r.u8()?)?;
-            let gcode = r.u8()?;
-            let knn_k = r.u32()?;
-            let graph = graph_from_code(gcode, knn_k)?;
-            let weighted = bool_from_code(r.u8()?, "weighted")?;
-            let bw = r.u8()?;
-            let value = r.f64()?;
-            let bandwidth = bandwidth_from_code(bw, value)?;
-            Message::Submit(JobSpec {
-                dml,
-                total_codes,
-                k_clusters,
-                kmeans_max_iters,
-                kmeans_tol,
-                seed,
-                algo,
-                graph,
-                weighted,
-                bandwidth,
-            })
+        TAG_SUBMIT => Message::Submit(decode_spec_body(&mut r)?),
+        TAG_SUBMIT_PRI => {
+            let mut spec = decode_spec_body(&mut r)?;
+            spec.priority = r.u32()?;
+            if spec.priority < 1 || spec.priority > JobSpec::MAX_PRIORITY {
+                bail!(
+                    "job priority must be in 1..={}, got {}",
+                    JobSpec::MAX_PRIORITY,
+                    spec.priority
+                );
+            }
+            Message::SubmitPri(spec)
         }
         TAG_JOB_ACCEPT => Message::JobAccept { run: r.u32()? },
         TAG_JOB_DONE => {
@@ -634,12 +737,65 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             };
             Message::Reject { run, msg }
         }
+        TAG_JOB_ACCEPT2 => {
+            let run = r.u32()?;
+            let position = r.u32()?;
+            let eta_ns = r.u64()?;
+            Message::JobAcceptExt { run, position, eta_ns }
+        }
+        TAG_REJECT2 => {
+            let run = r.u32()?;
+            let code = reject_from_code(r.u8()?)?;
+            let detail = r.u64()?;
+            let len = r.u32()?;
+            if len > MAX_REJECT_MSG {
+                bail!("reject message of {len} bytes");
+            }
+            let bytes = r.take(len as usize)?;
+            let msg = match std::str::from_utf8(bytes) {
+                Ok(s) => s.to_string(),
+                Err(_) => bail!("reject message is not UTF-8"),
+            };
+            Message::RejectCoded { run, code, detail, msg }
+        }
         t => bail!("unknown message tag {t}"),
     };
     if !r.done() {
         bail!("trailing bytes after frame");
     }
     Ok(msg)
+}
+
+/// Shared body of SUBMIT(14) and SUBMITPRI(18). Leaves `priority` at the
+/// legacy default; the tag-18 decoder overwrites it from the suffix.
+fn decode_spec_body(r: &mut Reader) -> Result<JobSpec> {
+    let dml = dml_from_code(r.u8()?)?;
+    let total_codes = r.u32()?;
+    let k_clusters = r.u32()?;
+    let kmeans_max_iters = r.u32()?;
+    let kmeans_tol = r.f64()?;
+    let seed = r.u64()?;
+    let algo = algo_from_code(r.u8()?)?;
+    let gcode = r.u8()?;
+    let knn_k = r.u32()?;
+    let graph = graph_from_code(gcode, knn_k)?;
+    let weighted = bool_from_code(r.u8()?, "weighted")?;
+    let bw = r.u8()?;
+    let value = r.f64()?;
+    let bandwidth = bandwidth_from_code(bw, value)?;
+    Ok(JobSpec {
+        dml,
+        total_codes,
+        k_clusters,
+        kmeans_max_iters,
+        kmeans_tol,
+        seed,
+        algo,
+        graph,
+        weighted,
+        bandwidth,
+        priority: JobSpec::DEFAULT_PRIORITY,
+    })
 }
 
 /// Shared body of CODEBOOK(1) and RCODEBOOK(10): `site dim n codewords
@@ -805,6 +961,7 @@ mod tests {
             graph: GraphKind::Knn { k: 12 },
             weighted: true,
             bandwidth: Bandwidth::MedianScale(0.5),
+            priority: JobSpec::DEFAULT_PRIORITY,
         }
     }
 
@@ -935,12 +1092,92 @@ mod tests {
                 },
             }),
             encode(&Message::Reject { run: 1, msg: "x".into() }),
+            encode(&Message::SubmitPri(JobSpec { priority: 3, ..sample_spec() })),
+            encode(&Message::JobAcceptExt { run: 1, position: 2, eta_ns: 9 }),
+            encode(&Message::RejectCoded {
+                run: 1,
+                code: RejectCode::QueueFull,
+                detail: 8,
+                msg: "x".into(),
+            }),
         ];
         for frame in frames {
             for cut in 0..frame.len() {
                 assert!(decode(&frame[..cut]).is_err(), "cut at {cut} should fail");
             }
         }
+    }
+
+    #[test]
+    fn submit_pri_roundtrip() {
+        for priority in [1, 2, JobSpec::MAX_PRIORITY] {
+            let msg = Message::SubmitPri(JobSpec { priority, ..sample_spec() });
+            let frame = encode(&msg);
+            assert_eq!(decode(&frame).unwrap(), msg);
+            // the modern submit is its legacy twin plus the 4-byte priority
+            let legacy = encode(&Message::Submit(sample_spec()));
+            assert_eq!(frame.len(), legacy.len() + 4);
+            assert_eq!(frame[0], TAG_SUBMIT_PRI);
+            assert_eq!(&frame[1..legacy.len()], &legacy[1..]);
+        }
+    }
+
+    #[test]
+    fn submit_pri_rejects_out_of_range_priority() {
+        let frame = encode(&Message::SubmitPri(JobSpec { priority: 2, ..sample_spec() }));
+        let n = frame.len();
+        // priority is the trailing u32
+        let mut f = frame.clone();
+        f[n - 4..].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode(&f).is_err(), "priority 0 must fail");
+        let mut f = frame.clone();
+        f[n - 4..].copy_from_slice(&(JobSpec::MAX_PRIORITY + 1).to_le_bytes());
+        assert!(decode(&f).is_err(), "priority above the cap must fail");
+    }
+
+    #[test]
+    fn job_accept_ext_roundtrip() {
+        let msg = Message::JobAcceptExt { run: 5, position: 3, eta_ns: 42_000_000 };
+        let frame = encode(&msg);
+        assert_eq!(decode(&frame).unwrap(), msg);
+        // 1 + 4 + 4 + 8
+        assert_eq!(frame.len(), 17);
+    }
+
+    #[test]
+    fn reject_coded_roundtrip_all_codes() {
+        for code in [
+            RejectCode::BadSpec,
+            RejectCode::QueueFull,
+            RejectCode::RateLimited,
+            RejectCode::RunFailed,
+            RejectCode::PullRefused,
+        ] {
+            let msg =
+                Message::RejectCoded { run: 2, code, detail: 17, msg: "why".into() };
+            assert_eq!(decode(&encode(&msg)).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn reject_coded_bad_code_and_hostile_len_error() {
+        let frame = encode(&Message::RejectCoded {
+            run: 0,
+            code: RejectCode::BadSpec,
+            detail: 0,
+            msg: String::new(),
+        });
+        let mut f = frame.clone();
+        f[5] = 99; // the reason-code byte, right after tag + run
+        assert!(decode(&f).is_err());
+
+        // hostile message length fails before allocating
+        let mut f = vec![TAG_REJECT2];
+        f.extend_from_slice(&0u32.to_le_bytes()); // run
+        f.push(1); // code
+        f.extend_from_slice(&0u64.to_le_bytes()); // detail
+        f.extend_from_slice(&u32::MAX.to_le_bytes()); // len
+        assert!(decode(&f).is_err());
     }
 
     #[test]

@@ -503,6 +503,150 @@ fn harness_requires_a_client_limit() {
     assert!(format!("{err:#}").contains("client_limit"), "{err:#}");
 }
 
+/// Token-bucket admission (`[leader] admit_rate` / `admit_burst`) on the
+/// virtual clock, no sleeps: a client submitting faster than the rate is
+/// refused with `rate limited` exactly when the bucket is empty, a
+/// half-second tick refills only half a token (still refused), and the
+/// full second's refill admits it again.
+#[test]
+fn admission_rate_limits_on_the_virtual_clock() {
+    let ds = gmm::paper_mixture_10d(400, 0.1, 51);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 51);
+    let spec = spec_from_config(&cfg_with_seed(51));
+
+    let mut cfg = cfg_with_seed(51);
+    cfg.leader.admit_rate = 1.0; // one submit per virtual second…
+    cfg.leader.admit_burst = 2; // …above an initial burst of two
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: false,
+            client_limit: Some(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client = harness.client();
+    // the burst: two tokens, two admits
+    let run1 = client.submit(&spec).unwrap();
+    let run2 = client.submit(&spec).unwrap();
+    // bucket empty: refused, and no run id is burned
+    let err = client.submit(&spec).unwrap_err();
+    assert!(format!("{err:#}").contains("rate limited"), "{err:#}");
+
+    // half a virtual second is half a token: still refused
+    harness.tick(Duration::from_millis(500));
+    let err = client.submit(&spec).unwrap_err();
+    assert!(format!("{err:#}").contains("rate limited"), "{err:#}");
+
+    // the other half completes the token: admitted again…
+    harness.tick(Duration::from_millis(500));
+    let run3 = client.submit(&spec).unwrap();
+    // …and the very next submit drains it back to empty
+    let err = client.submit(&spec).unwrap_err();
+    assert!(format!("{err:#}").contains("rate limited"), "{err:#}");
+
+    assert_eq!((run1, run2, run3), (1, 2, 3), "rejects must not consume run ids");
+    for run in [run1, run2, run3] {
+        client.await_done(run).unwrap();
+    }
+    drop(client);
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.rejected, 3);
+}
+
+/// JOBACCEPT2's queue position is the live backlog: it climbs 0,1,2,3 as
+/// a burst lands behind a gated central, decreases strictly monotonically
+/// for probes submitted as the queue drains, and the ETA turns nonzero
+/// once the leader has a central-duration mean. Every run's central is
+/// individually gated, so each probe lands at an exactly known backlog.
+#[test]
+fn tracked_accept_position_follows_the_backlog() {
+    let ds = gmm::paper_mixture_10d(400, 0.1, 51);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 51);
+    let spec = spec_from_config(&cfg_with_seed(51));
+
+    let gates: Vec<Arc<Gate>> = (0..8).map(|_| Gate::new()).collect();
+    let hook = {
+        let gates = gates.clone();
+        Arc::new(move |run: u32| gates[(run - 1) as usize].enter_and_wait())
+    };
+    let cfg = cfg_with_seed(51);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: false,
+            central_workers: 1, // strictly serial centrals
+            client_limit: Some(1),
+        },
+        faults: Vec::new(),
+        central_hook: Some(hook),
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+    let client = harness.client();
+
+    // fill: positions climb with the backlog; no central has completed,
+    // so every ETA is still 0
+    let a1 = client.submit_tracked(&spec).unwrap();
+    assert_eq!((a1.run, a1.position, a1.eta_ns), (1, 0, 0));
+    gates[0].wait_entered(); // run 1 is mid-central and held
+    let accepts: Vec<_> =
+        (0..3).map(|_| client.submit_tracked(&spec).unwrap()).collect();
+    for (i, a) in accepts.iter().enumerate() {
+        assert_eq!(a.position as usize, i + 1, "fill position of run {}", a.run);
+        assert_eq!(a.eta_ns, 0, "no central mean yet for run {}", a.run);
+    }
+
+    // drain, probing between completions: each probe sees a strictly
+    // smaller backlog than the one before
+    let mut drained = 0u32;
+    let mut probes = Vec::new();
+    for k in 0..3 {
+        // complete (k+1) runs, leaving the next one held mid-central
+        for _ in 0..=k.min(1) {
+            gates[drained as usize].open();
+            client.await_done(drained + 1).unwrap();
+            drained += 1;
+            gates[drained as usize].wait_entered();
+        }
+        probes.push(client.submit_tracked(&spec).unwrap());
+    }
+    assert_eq!(
+        probes.iter().map(|a| a.position).collect::<Vec<_>>(),
+        vec![3, 2, 1],
+        "probe positions must decrease as the queue drains"
+    );
+    for a in &probes {
+        assert!(a.eta_ns > 0, "run {}: mean central is known, ETA must be > 0", a.run);
+    }
+
+    // release everything still held (runs 6 and 7 are mid-central or
+    // queued behind it) and drain the tail
+    for run in drained + 1..=7 {
+        gates[(run - 1) as usize].wait_entered();
+        gates[(run - 1) as usize].open();
+        client.await_done(run).unwrap();
+    }
+
+    // idle server: position resets to 0 (nothing is ahead, so the ETA is
+    // 0 again by `eta ≈ position × mean`)
+    let idle = client.submit_tracked(&spec).unwrap();
+    assert_eq!((idle.run, idle.position, idle.eta_ns), (8, 0, 0));
+    gates[7].wait_entered();
+    gates[7].open();
+    client.await_done(8).unwrap();
+
+    drop(client);
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 8);
+    assert_eq!(stats.rejected, 0);
+}
+
 /// Reuse-of-harness sanity: the typed client API is the same one `dsc
 /// submit` uses over TCP, so one client can carry several jobs with
 /// interleaved completions buffered correctly.

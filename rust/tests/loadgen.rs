@@ -1,0 +1,65 @@
+//! The deterministic load generator, end to end: same mix ⇒ same report
+//! (bit for bit), and DRR weighted fair queueing beats global FIFO on the
+//! canonical skewed 3-tenant mix. These are the guarantees the recorded
+//! BENCH trajectory (`benches/jobserver_load.rs` →
+//! `bench_out/BENCH_jobserver.json`) is built on; `docs/TESTING.md`
+//! explains how to read the numbers.
+
+use dsc::coordinator::loadgen::{run_channel_load, LoadMix};
+
+/// Determinism is the load generator's whole contract: virtual time,
+/// sequenced centrals and up-front submission make the report a pure
+/// function of the mix — including the f64s, so `PartialEq` is exact.
+#[test]
+fn same_mix_produces_the_same_report_bit_for_bit() {
+    let a = run_channel_load(&LoadMix::skewed_three(true)).unwrap();
+    let b = run_channel_load(&LoadMix::skewed_three(true)).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.to_json(), b.to_json());
+
+    assert_eq!(a.jobs, 21);
+    assert_eq!(a.completed, 21);
+    assert_eq!(a.rejected, 0);
+    assert_eq!(a.per_client.len(), 3);
+    // every tenant's full budget was served
+    assert_eq!(a.per_client[0].jobs, 12);
+    assert_eq!(a.per_client[1].jobs, 6);
+    assert_eq!(a.per_client[2].jobs, 3);
+}
+
+/// The FIFO-vs-DRR comparison the bench records: under the skewed mix,
+/// DRR's weight-normalized service is near-uniform (Jain ≈ 1) while FIFO
+/// — which ignores priorities — scores visibly lower, and the
+/// high-weight light tenant really does see lower sojourns while the
+/// heavy low-weight tenant pays for them.
+#[test]
+fn drr_beats_fifo_on_the_skewed_mix() {
+    let fifo = run_channel_load(&LoadMix::skewed_three(false)).unwrap();
+    let drr = run_channel_load(&LoadMix::skewed_three(true)).unwrap();
+    assert_eq!(fifo.completed, 21);
+    assert_eq!(drr.completed, 21);
+
+    assert!(drr.fairness > 0.95, "drr fairness {}", drr.fairness);
+    assert!(fifo.fairness < 0.85, "fifo fairness {}", fifo.fairness);
+    assert!(
+        drr.fairness > fifo.fairness + 0.1,
+        "fairness gap collapsed: drr {} vs fifo {}",
+        drr.fairness,
+        fifo.fairness
+    );
+
+    // weight 4, 3 jobs: served earlier under DRR than under FIFO
+    assert!(
+        drr.per_client[2].mean_ns < fifo.per_client[2].mean_ns,
+        "w4 tenant: drr {} vs fifo {}",
+        drr.per_client[2].mean_ns,
+        fifo.per_client[2].mean_ns
+    );
+    // weight 1, 12 jobs: the tenant that pays under fair queueing
+    assert!(drr.per_client[0].mean_ns >= fifo.per_client[0].mean_ns);
+
+    // one job per virtual step either way: the service slot never idles
+    assert!(fifo.utilization > 0.999 && drr.utilization > 0.999);
+    assert!(fifo.throughput_jobs_per_sec > 0.0);
+    assert_eq!(fifo.makespan_ns, drr.makespan_ns);
+}

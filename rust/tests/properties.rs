@@ -282,7 +282,7 @@ mod wire_gen {
     //! Seeded generators for every wire message kind, shared by the
     //! all-tag roundtrip and truncation properties.
     use dsc::dml::DmlKind;
-    use dsc::net::wire::{JobReport, JobSpec, LinkReport, Message};
+    use dsc::net::wire::{JobReport, JobSpec, LinkReport, Message, RejectCode};
     use dsc::prop::Gen;
     use dsc::spectral::{Algo, Bandwidth, GraphKind};
 
@@ -322,6 +322,9 @@ mod wire_gen {
             graph: graph(g),
             weighted: g.bool(0.5),
             bandwidth: bandwidth(g),
+            // the legacy SUBMIT(14) frame has no priority slot, and its
+            // encoder asserts the default; tag 18 randomizes it below
+            priority: JobSpec::DEFAULT_PRIORITY,
         }
     }
 
@@ -360,7 +363,7 @@ mod wire_gen {
         )
     }
 
-    /// A random message carrying exactly wire tag `tag` (1–17).
+    /// A random message carrying exactly wire tag `tag` (1–20).
     pub fn message_with_tag(g: &mut Gen, tag: u8) -> Message {
         let site = g.usize_in(0, 7) as u32;
         let run = g.usize_in(1, 1_000_000) as u32;
@@ -403,6 +406,28 @@ mod wire_gen {
             15 => Message::JobAccept { run },
             16 => Message::JobDone { run, report: report(g) },
             17 => Message::Reject { run, msg: text(g, 60) },
+            18 => {
+                let mut s = spec(g);
+                s.priority = g.usize_in(1, JobSpec::MAX_PRIORITY as usize) as u32;
+                Message::SubmitPri(s)
+            }
+            19 => Message::JobAcceptExt {
+                run,
+                position: g.usize_in(0, 10_000) as u32,
+                eta_ns: g.rng().next_u64(),
+            },
+            20 => Message::RejectCoded {
+                run,
+                code: [
+                    RejectCode::BadSpec,
+                    RejectCode::QueueFull,
+                    RejectCode::RateLimited,
+                    RejectCode::RunFailed,
+                    RejectCode::PullRefused,
+                ][g.usize_in(0, 4)],
+                detail: g.rng().next_u64(),
+                msg: text(g, 60),
+            },
             other => panic!("no message for tag {other}"),
         }
     }
@@ -414,10 +439,10 @@ fn prop_wire_roundtrip_every_tag() {
     // tag 0 was never assigned and must always be rejected, like any
     // unknown tag above the table
     assert!(decode(&[0u8]).is_err());
-    assert!(decode(&[18u8]).is_err());
+    assert!(decode(&[21u8]).is_err());
     assert!(decode(&[255u8]).is_err());
-    forall("encode→decode is identity for every tag 1–17", 25, 513, |g| {
-        for tag in 1u8..=17 {
+    forall("encode→decode is identity for every tag 1–20", 25, 513, |g| {
+        for tag in 1u8..=20 {
             let msg = wire_gen::message_with_tag(g, tag);
             let frame = encode(&msg);
             if frame[0] != tag {
@@ -439,7 +464,7 @@ fn prop_wire_truncation_rejected_at_every_offset() {
     // panic, no partial message, and (by the decoder's allocation rule) no
     // reservation beyond the bytes present.
     forall("truncation at every byte offset errors for every tag", 10, 514, |g| {
-        for tag in 1u8..=17 {
+        for tag in 1u8..=20 {
             let frame = encode(&wire_gen::message_with_tag(g, tag));
             for cut in 0..frame.len() {
                 if decode(&frame[..cut]).is_ok() {
@@ -511,6 +536,164 @@ fn prop_decoder_never_panics_on_corruption() {
     });
 }
 
+// ───────────────────────────── DRR fair queue ─────────────────────────────
+
+/// The deficit round-robin guarantee, under ANY interleaving of the
+/// clients' submit sequences: while every client stays backlogged, no
+/// client's weight-normalized service count (`served / weight`) runs more
+/// than one full round ahead of another's. Also pins conservation (every
+/// pushed item pops exactly once) and strict per-client FIFO order.
+#[test]
+fn prop_drr_backlogged_service_tracks_weights() {
+    use dsc::coordinator::server::DrrQueue;
+
+    forall("DRR service shares track weights while backlogged", 60, 717, |g| {
+        let k = g.usize_in(2, 5);
+        let weights: Vec<u32> = (0..k).map(|_| g.usize_in(1, 4) as u32).collect();
+        let counts: Vec<usize> = (0..k).map(|_| g.usize_in(1, 12)).collect();
+
+        // an arbitrary interleaving of the per-client submit sequences
+        let mut order: Vec<usize> =
+            (0..k).flat_map(|c| std::iter::repeat(c).take(counts[c])).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, g.usize_in(0, i));
+        }
+
+        let mut q = DrrQueue::new();
+        let mut seq = vec![0u32; k];
+        for &c in &order {
+            q.push(c as u64, weights[c], (c, seq[c]));
+            seq[c] += 1;
+        }
+        let total: usize = counts.iter().sum();
+        if q.len() != total {
+            return Err(format!("len {} after {total} pushes", q.len()));
+        }
+
+        let mut served = vec![0usize; k];
+        let mut next_seq = vec![0u32; k];
+        let mut popped = 0usize;
+        let mut backlogged = true;
+        while let Some((c, s)) = q.pop() {
+            popped += 1;
+            if s != next_seq[c] {
+                return Err(format!(
+                    "client {c}: item {s} out of FIFO order (expected {})",
+                    next_seq[c]
+                ));
+            }
+            next_seq[c] += 1;
+            served[c] += 1;
+            if served[c] == counts[c] {
+                // first lane drained: the fully-backlogged window is over
+                backlogged = false;
+            }
+            if backlogged {
+                let shares: Vec<f64> =
+                    (0..k).map(|i| served[i] as f64 / weights[i] as f64).collect();
+                let max = shares.iter().cloned().fold(f64::MIN, f64::max);
+                let min = shares.iter().cloned().fold(f64::MAX, f64::min);
+                if max - min > 1.0 + 1e-9 {
+                    return Err(format!(
+                        "after {popped} pops served={served:?} weights={weights:?}: \
+                         share spread {}",
+                        max - min
+                    ));
+                }
+            }
+        }
+        if popped != total {
+            return Err(format!("popped {popped} of {total}"));
+        }
+        if !q.is_empty() {
+            return Err("queue non-empty after full drain".into());
+        }
+        Ok(())
+    });
+}
+
+/// For a single client DRR degrades to plain FIFO — so `fair_queue =
+/// true` with one tenant schedules exactly like the legacy queue.
+#[test]
+fn prop_drr_single_client_is_fifo() {
+    use dsc::coordinator::server::DrrQueue;
+
+    forall("single-client DRR pops in push order", 40, 718, |g| {
+        let n = g.usize_in(0, 30);
+        let mut q = DrrQueue::new();
+        for i in 0..n {
+            // per-job weights may vary; order must not
+            q.push(9, g.usize_in(1, 16) as u32, i);
+        }
+        for want in 0..n {
+            match q.pop() {
+                Some(got) if got == want => {}
+                other => return Err(format!("pop {want} returned {other:?}")),
+            }
+        }
+        if q.pop().is_some() {
+            return Err("pop after drain returned an item".into());
+        }
+        Ok(())
+    });
+}
+
+/// The canonical skewed 3-tenant mix's DRR pop order, pinned by hand:
+/// the weight-4 tenant drains inside the first ring round while the
+/// weight-1 heavy tenant queues behind it — the exact schedule the
+/// recorded BENCH trajectory's fairness numbers are computed from
+/// (`coordinator::loadgen`, `benches/jobserver_load.rs`).
+#[test]
+fn drr_pop_order_on_the_skewed_mix_is_pinned() {
+    use dsc::coordinator::server::DrrQueue;
+
+    let budgets: [(u64, u32, usize, &str); 3] =
+        [(1, 1, 12, "A"), (2, 2, 6, "B"), (3, 4, 3, "C")];
+    let mut q = DrrQueue::new();
+    let mut next = [0usize; 3];
+    // round-robin arrivals while budgets last: the load generator's
+    // submit order (A1 B1 C1 A2 B2 C2 … A12)
+    loop {
+        let mut any = false;
+        for (i, &(client, w, n, name)) in budgets.iter().enumerate() {
+            if next[i] < n {
+                q.push(client, w, format!("{name}{}", next[i] + 1));
+                next[i] += 1;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    let mut order = Vec::new();
+    while let Some(item) = q.pop() {
+        order.push(item);
+    }
+    let expected = [
+        "A1", "B1", "B2", "C1", "C2", "C3", "A2", "B3", "B4", "A3", "B5", "B6", "A4", "A5",
+        "A6", "A7", "A8", "A9", "A10", "A11", "A12",
+    ];
+    assert_eq!(order, expected);
+}
+
+/// PR-5 parity pin: the legacy client-facing reply frames are
+/// byte-frozen. A legacy (tag-14) submitter must keep receiving these
+/// exact bytes from a `fair_queue = false` leader — the modern
+/// JOBACCEPT2(19)/REJECT2(20) replies go only to tag-18 submitters.
+#[test]
+fn legacy_job_reply_frames_are_byte_frozen() {
+    use dsc::net::wire::{encode, Message};
+
+    // JOBACCEPT(15) := run:u32 — little-endian, no position/ETA suffix
+    assert_eq!(encode(&Message::JobAccept { run: 7 }), vec![15, 7, 0, 0, 0]);
+    // REJECT(17) := run:u32 len:u32 msg — free text, no code/detail
+    assert_eq!(
+        encode(&Message::Reject { run: 3, msg: "no".into() }),
+        vec![17, 3, 0, 0, 0, 2, 0, 0, 0, b'n', b'o']
+    );
+}
+
 // ───────────────────────────── straggler deadlines ─────────────────────────────
 
 /// A run's straggler deadline fires exactly once under arbitrary `Tick`
@@ -540,6 +723,7 @@ fn prop_deadline_fires_exactly_once_under_tick_jitter() {
             graph: GraphKind::Dense,
             weighted: false,
             bandwidth: Bandwidth::MedianScale(0.5),
+            priority: JobSpec::DEFAULT_PRIORITY,
         }
     }
 
