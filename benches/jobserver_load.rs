@@ -9,16 +9,24 @@
 //! the Jain fairness index for both. Virtual time makes every number a
 //! pure function of the mix — the bench re-runs the DRR leg and fails if
 //! the two reports differ by a single bit, and it fails loudly when
-//! fairness or throughput regresses past the sanity floors below.
+//! fairness or throughput regresses past the sanity floors below. A
+//! fourth, event-sourced leg re-runs DRR with the run journal on
+//! (`[leader] journal_path`): its report must be bit-identical too —
+//! journaling may only spend wall clock, never virtual time — and the
+//! wall-clock delta is recorded alongside the deterministic numbers.
 //!
 //! `cargo bench --bench jobserver_load` — add `-- tcp` to also push the
 //! same mix through a real loopback TCP job server (wall-clock numbers,
 //! printed but deliberately kept out of the deterministic JSON).
 //! `DSC_BENCH_OUT` overrides the output directory (default `bench_out/`).
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 use dsc::bench::Table;
-use dsc::coordinator::loadgen::{run_channel_load, run_tcp_load, LoadMix, LoadReport};
+use dsc::coordinator::loadgen::{
+    run_channel_load, run_channel_load_journaled, run_tcp_load, LoadMix, LoadReport,
+};
 
 /// Sanity floors: a scheduling or harness regression trips these before
 /// it can silently land in the recorded trajectory.
@@ -75,7 +83,9 @@ fn main() -> Result<()> {
     let tcp = std::env::args().skip(1).any(|a| a == "tcp");
 
     let fifo = run_channel_load(&LoadMix::skewed_three(false))?;
+    let t_off = Instant::now();
     let drr = run_channel_load(&LoadMix::skewed_three(true))?;
+    let wall_off = t_off.elapsed();
     // same mix ⇒ same numbers, bit for bit — determinism is part of the
     // bench contract, not just a test
     let drr_again = run_channel_load(&LoadMix::skewed_three(true))?;
@@ -83,6 +93,23 @@ fn main() -> Result<()> {
         bail!("nondeterministic load report: two identical DRR runs disagreed");
     }
     check_floors(&fifo, &drr)?;
+
+    // The journaling arm: event-source the identical DRR leg. The report
+    // is pure virtual time, so this is the regression floor proving the
+    // journal stays off the measured path — a single moved bit fails the
+    // bench; only the wall clock is allowed to pay, and the delta is
+    // recorded below (real time, so it varies run to run by design).
+    let jpath = std::env::temp_dir()
+        .join(format!("dsc-bench-jobserver-{}.journal", std::process::id()));
+    let _ = std::fs::remove_file(&jpath);
+    let t_on = Instant::now();
+    let drr_journaled = run_channel_load_journaled(&LoadMix::skewed_three(true), &jpath, false)?;
+    let wall_on = t_on.elapsed();
+    let journal_bytes = std::fs::metadata(&jpath).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&jpath);
+    if drr_journaled != drr {
+        bail!("journaling moved the deterministic report: journaled DRR leg disagreed");
+    }
 
     let mut table = Table::new(
         "Job-server load: skewed 3-tenant mix (12×w1 / 6×w2 / 3×w4), virtual time",
@@ -99,15 +126,27 @@ fn main() -> Result<()> {
         ]);
     }
     print!("{}", table.render());
+    println!(
+        "journal arm: report bit-identical; wall {:.1}ms off vs {:.1}ms on \
+         ({:+.1}%, {} journal bytes — wall clock, not part of the deterministic record)",
+        wall_off.as_secs_f64() * 1e3,
+        wall_on.as_secs_f64() * 1e3,
+        (wall_on.as_secs_f64() / wall_off.as_secs_f64().max(1e-9) - 1.0) * 100.0,
+        journal_bytes
+    );
 
     let out_dir = std::env::var("DSC_BENCH_OUT").unwrap_or_else(|_| "bench_out".into());
     std::fs::create_dir_all(&out_dir)?;
     let path = std::path::Path::new(&out_dir).join("BENCH_jobserver.json");
     let body = format!(
         "{{\n  \"bench\": \"jobserver_load\",\n  \"mix\": \"skewed_three 12xw1/6xw2/3xw4\",\n  \
-         \"fifo\": {},\n  \"drr\": {}\n}}\n",
+         \"fifo\": {},\n  \"drr\": {},\n  \"journal\": {{\n    \
+         \"report_identical_to_drr\": true,\n    \"journal_bytes\": {journal_bytes},\n    \
+         \"wall_ms_off\": {:.3},\n    \"wall_ms_on\": {:.3}\n  }}\n}}\n",
         indent(&fifo.to_json()),
-        indent(&drr.to_json())
+        indent(&drr.to_json()),
+        wall_off.as_secs_f64() * 1e3,
+        wall_on.as_secs_f64() * 1e3,
     );
     std::fs::write(&path, body)?;
     println!("\nwrote {}", path.display());

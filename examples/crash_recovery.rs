@@ -1,0 +1,303 @@
+//! Leader crash recovery over real processes: SIGKILL mid-run, replay,
+//! resume.
+//!
+//! `examples/tcp_cluster.rs` proves the job server's happy path across OS
+//! processes; this example proves the crash path the run journal
+//! (`dsc leader --serve --journal`) exists for:
+//!
+//! 1. run the workload **in-process** — the uninterrupted twin whose
+//!    labels the recovered service must reproduce exactly;
+//! 2. spawn two persistent `dsc site` daemons and a journaling
+//!    `dsc leader --serve --journal J`, submit a job, and **SIGKILL the
+//!    leader** while the run is in flight — the submitting client's
+//!    connection dies with it;
+//! 3. restart the leader against the **same journal**: it replays the
+//!    log, re-dials the surviving site daemons, and restarts the orphaned
+//!    run from its journaled spec;
+//! 4. a **fresh** client pulls the resumed run's labels through the new
+//!    leader (label pulls are not owner-scoped) and asserts them
+//!    identical to the twin's, and the journal itself must hold the
+//!    original submit plus the restart marker.
+//!
+//! CI runs this as a blocking smoke step. It needs the `dsc` binary:
+//!
+//! ```bash
+//! cargo build --release && cargo run --release --example crash_recovery
+//! ```
+//!
+//! (`DSC_BIN=/path/to/dsc` overrides binary discovery.)
+
+use std::io::{BufRead, BufReader, Read as _};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+use dsc::coordinator::journal::{recover, JournalEvent};
+use dsc::coordinator::server::JobClient;
+use dsc::coordinator::spec_from_config;
+use dsc::data::csvio;
+use dsc::prelude::*;
+
+const SITES: usize = 2;
+const SEED: u64 = 11;
+
+/// Kills the child on drop so a failed assertion never leaves daemon
+/// processes behind.
+struct ChildGuard {
+    child: Child,
+    name: &'static str,
+}
+
+impl ChildGuard {
+    fn wait(&mut self) -> Result<()> {
+        let status = self.child.wait().with_context(|| format!("wait for {}", self.name))?;
+        if !status.success() {
+            bail!("{} exited with {status}", self.name);
+        }
+        Ok(())
+    }
+
+    /// The point of the exercise: SIGKILL, no warning, no flush.
+    fn kill(&mut self) -> Result<()> {
+        self.child.kill().with_context(|| format!("kill {}", self.name))?;
+        self.child.wait().with_context(|| format!("reap {}", self.name))?;
+        Ok(())
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Locate the `dsc` binary next to this example (`target/<profile>/dsc`).
+fn dsc_bin() -> Result<PathBuf> {
+    if let Some(p) = std::env::var_os("DSC_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().context("current_exe")?;
+    let profile_dir = exe
+        .parent() // …/examples
+        .and_then(Path::parent) // …/<profile>
+        .ok_or_else(|| anyhow!("cannot locate target dir from {}", exe.display()))?;
+    let bin = profile_dir.join(format!("dsc{}", std::env::consts::EXE_SUFFIX));
+    if !bin.exists() {
+        bail!(
+            "{} not found — build the CLI first (`cargo build --release`) or set DSC_BIN",
+            bin.display()
+        );
+    }
+    Ok(bin)
+}
+
+/// Spawn a persistent `dsc site` daemon, parse its `LISTENING <addr>`
+/// banner, and keep its stdout drained.
+fn spawn_site(bin: &Path, csv: &Path, s: usize) -> Result<(ChildGuard, String)> {
+    let mut child = Command::new(bin)
+        .arg("site")
+        .args(["--listen", "127.0.0.1:0"])
+        .args(["--data", csv.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .with_context(|| format!("spawn site {s}"))?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read site banner")?;
+    let addr = line
+        .trim()
+        .strip_prefix("LISTENING ")
+        .ok_or_else(|| anyhow!("site {s} printed {line:?}, expected LISTENING <addr>"))?
+        .to_string();
+    println!("site {s}: pid {} listening on {addr} (persistent)", child.id());
+    // keep draining the pipe so the child can never block on a full one
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+    Ok((ChildGuard { child, name: "dsc site" }, addr))
+}
+
+/// Spawn a journaling job-serving leader and parse its `SERVING <addr>`
+/// banner; the rest of its stdout keeps draining into the returned join
+/// handle.
+fn spawn_leader(
+    bin: &Path,
+    sites: &str,
+    config: &Path,
+    journal: &Path,
+    serve_limit: Option<u64>,
+) -> Result<(ChildGuard, String, std::thread::JoinHandle<String>)> {
+    let mut cmd = Command::new(bin);
+    cmd.arg("leader")
+        .args(["--sites", sites])
+        .args(["--serve", "127.0.0.1:0"])
+        .args(["--journal", journal.to_str().unwrap()])
+        .args(["--config", config.to_str().unwrap()]);
+    if let Some(n) = serve_limit {
+        cmd.args(["--serve-limit", &n.to_string()]);
+    }
+    let mut child = cmd.stdout(Stdio::piped()).spawn().context("spawn job-serving leader")?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read leader banner")?;
+    let addr = line
+        .trim()
+        .strip_prefix("SERVING ")
+        .ok_or_else(|| anyhow!("leader printed {line:?}, expected SERVING <addr>"))?
+        .to_string();
+    println!("leader: pid {} serving jobs on {addr}", child.id());
+    let rest = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = reader.read_to_string(&mut rest);
+        rest
+    });
+    Ok((ChildGuard { child, name: "dsc leader --serve" }, addr, rest))
+}
+
+fn main() -> Result<()> {
+    let bin = dsc_bin()?;
+
+    // ── the uninterrupted twin: in-process, channel transport ───────────
+    let ds = dsc::data::gmm::paper_mixture_10d(6_000, 0.1, SEED);
+    let parts = scenario::split(&ds, Scenario::D3, SITES, SEED);
+    let cfg = PipelineConfig {
+        total_codes: 150,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: SEED,
+        ..Default::default()
+    };
+    println!("=== uninterrupted twin: in-process run ===");
+    let base = run_pipeline(&parts, &cfg)?;
+    println!("twin: accuracy {:.4}, {} codewords", base.accuracy, base.n_codes);
+
+    // ── stage shards + configs + the journal path ───────────────────────
+    let dir = std::env::temp_dir().join(format!("dsc_crash_recovery_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).context("create scratch dir")?;
+    let mut csvs = Vec::new();
+    for part in &parts {
+        let csv = dir.join(format!("site{}.csv", part.site_id));
+        csvio::save_dataset(&csv, &part.data, &["crash_recovery example shard"])?;
+        csvs.push(csv);
+    }
+    let server_toml = dir.join("server.toml");
+    std::fs::write(
+        &server_toml,
+        "[pipeline]\ncollect_timeout_s = 120\n\n[leader]\nallow_label_pull = true\n",
+    )
+    .context("write server config")?;
+    let journal = dir.join("leader.journal");
+
+    // ── two persistent site daemons; they outlive both leaders ──────────
+    println!("\n=== crash run: {SITES} persistent sites + journaling leader ===");
+    let mut site_guards = Vec::new();
+    let mut addrs = Vec::new();
+    for (s, csv) in csvs.iter().enumerate() {
+        let (guard, addr) = spawn_site(&bin, csv, s)?;
+        site_guards.push(guard);
+        addrs.push(addr);
+    }
+    let sites_arg = addrs.join(",");
+
+    // ── leader #1: submit, then SIGKILL it mid-run ──────────────────────
+    let (mut leader1, serve_addr, rest1) =
+        spawn_leader(&bin, &sites_arg, &server_toml, &journal, None)?;
+    let timeouts = cfg.net.tcp_timeouts();
+    let client1 = JobClient::connect(&serve_addr, &timeouts).context("connect client 1")?;
+    let accepted = client1.submit_tracked(&spec_from_config(&cfg))?;
+    println!("client 1: run {} accepted — killing the leader", accepted.run);
+    // Give the run a moment to get on the wire (the journal syncs at every
+    // mailbox drain, so the accepted submit is long since on disk), then
+    // kill -9. Whether the central finished in time or not, replay must
+    // converge on the same labels.
+    std::thread::sleep(Duration::from_millis(300));
+    leader1.kill()?;
+    drop(rest1); // pipe closed by the kill; the drain thread just ends
+    drop(client1); // its connection died with the leader
+
+    // ── leader #2: same journal, same sites — replay and resume ─────────
+    println!("\n=== recovery: restart the leader against the same journal ===");
+    let (mut leader2, serve_addr, rest2) =
+        spawn_leader(&bin, &sites_arg, &server_toml, &journal, Some(1))?;
+
+    // One fresh client (it is the whole --serve-limit): pull the resumed
+    // run's labels, retrying while the run is still being recomputed.
+    let client2 = JobClient::connect(&serve_addr, &timeouts).context("connect client 2")?;
+    let mut pulled = None;
+    for _ in 0..200 {
+        match client2.pull_labels(accepted.run, SITES) {
+            Ok(p) => {
+                pulled = Some(p);
+                break;
+            }
+            Err(e) if format!("{e:#}").contains("not a completed run") => {
+                std::thread::sleep(Duration::from_millis(150));
+            }
+            Err(e) => return Err(e.context("pull resumed run's labels")),
+        }
+    }
+    let pulled = pulled
+        .ok_or_else(|| anyhow!("run {} never completed on the restarted leader", accepted.run))?;
+    drop(client2);
+    leader2.wait()?;
+    let rest = rest2.join().expect("leader stdout thread");
+    if !rest.contains("SERVED_JOBS completed=1") {
+        bail!("restarted leader did not report the resumed run as completed:\n{rest}");
+    }
+
+    // ── the resumed run must equal the uninterrupted twin, exactly ──────
+    let mut labels = vec![0u16; ds.len()];
+    for (site, site_labels) in &pulled {
+        let part = &parts[*site];
+        if site_labels.len() != part.data.len() {
+            bail!(
+                "site {site}: pulled {} labels for {} points",
+                site_labels.len(),
+                part.data.len()
+            );
+        }
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            labels[g as usize] = site_labels[local];
+        }
+    }
+    if labels != base.labels {
+        let diverged = labels.iter().zip(&base.labels).filter(|(a, b)| a != b).count();
+        bail!(
+            "resumed run diverges from the uninterrupted twin: {diverged}/{} labels differ",
+            ds.len()
+        );
+    }
+    println!("resumed run labels: identical to the uninterrupted twin ✓");
+    let accuracy = clustering_accuracy(&ds.labels, &labels);
+    println!("accuracy (recovered service): {accuracy:.4}");
+    if accuracy < 0.9 {
+        bail!("recovered accuracy {accuracy:.4} below the 0.9 quickstart floor");
+    }
+
+    // ── and the journal must tell the story ─────────────────────────────
+    let log = recover(&journal)?;
+    let submits =
+        log.records.iter().filter(|r| matches!(r.event, JournalEvent::ClientSubmit { .. })).count();
+    let restarts =
+        log.records.iter().filter(|r| matches!(r.event, JournalEvent::Restart)).count();
+    if submits != 1 || restarts != 1 {
+        bail!(
+            "journal should hold exactly the original submit and one restart marker, \
+             got {submits} submits / {restarts} restarts in {} records",
+            log.records.len()
+        );
+    }
+    println!("journal: {} records, 1 submit, 1 restart marker ✓", log.records.len());
+
+    drop(site_guards); // kill the persistent daemons
+    std::fs::remove_dir_all(&dir).ok();
+    println!("\ncrash_recovery: the leader died and nobody lost a run");
+    Ok(())
+}

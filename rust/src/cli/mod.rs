@@ -42,7 +42,7 @@ pub struct Flags {
 }
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "once", "fair-queue", "help"];
+const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "once", "fair-queue", "journal-fsync", "help"];
 
 pub fn parse_flags(args: &[String]) -> Result<Flags> {
     let mut map = BTreeMap::new();
@@ -141,6 +141,12 @@ LEADER FLAGS (see docs/DEPLOY.md):
   --admit-rate R    token-bucket admission: submits/sec admitted per client
                     (serve mode; 0 disables — [leader] admit_rate)
   --admit-burst N   burst above --admit-rate ([leader] admit_burst)
+  --journal PATH    event-source every reactor event to an append-only log
+                    at PATH (serve mode; [leader] journal_path). On restart
+                    against the same journal the leader replays it, rebuilds
+                    the queue and every incomplete run, and resumes serving
+  --journal-fsync   fsync the journal at every group commit ([leader]
+                    journal_fsync; durable across power loss, slower)
   plus the central-step RUN FLAGS: --dml --codes --k --algo --graph
   --knn-k --backend --bandwidth --weighted --seed
 
@@ -510,8 +516,9 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     flags.reject_unknown(&[
         "sites", "config", "serve", "max-jobs", "queue-depth", "central-workers",
-        "serve-limit", "fair-queue", "admit-rate", "admit-burst", "dml", "codes", "k", "algo",
-        "graph", "knn-k", "backend", "bandwidth", "weighted", "seed", "help",
+        "serve-limit", "fair-queue", "admit-rate", "admit-burst", "journal", "journal-fsync",
+        "dml", "codes", "k", "algo", "graph", "knn-k", "backend", "bandwidth", "weighted",
+        "seed", "help",
     ])?;
     if flags.bool("help") {
         println!("{USAGE}");
@@ -550,6 +557,18 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
             }
             cfg.leader.admit_burst = n;
         }
+        if let Some(path) = flags.str("journal") {
+            if path.is_empty() {
+                bail!("--journal needs a non-empty path (omit the flag to disable)");
+            }
+            cfg.leader.journal_path = Some(std::path::PathBuf::from(path));
+        }
+        if flags.bool("journal-fsync") {
+            if cfg.leader.journal_path.is_none() {
+                bail!("--journal-fsync needs --journal PATH (or [leader] journal_path)");
+            }
+            cfg.leader.journal_fsync = true;
+        }
         let mut opts = ServerOpts::from_config(&cfg);
         if let Some(n) = flags.usize("max-jobs")? {
             if n == 0 {
@@ -576,7 +595,7 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
         std::io::stdout().flush().ok();
         eprintln!(
             "leader: job server at {addr}; {} site(s): {} (max_jobs={}, queue_depth={}, \
-             central_workers={}, label_pull={}, fair_queue={}, admit_rate={})",
+             central_workers={}, label_pull={}, fair_queue={}, admit_rate={}, journal={})",
             cfg.net.sites.len(),
             cfg.net.sites.join(", "),
             opts.max_jobs,
@@ -585,6 +604,11 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
             opts.allow_label_pull,
             cfg.leader.fair_queue,
             cfg.leader.admit_rate,
+            cfg.leader
+                .journal_path
+                .as_deref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "off".to_string()),
         );
         let stats = serve_jobs(&cfg, &opts, listener)?;
         println!(
@@ -960,6 +984,23 @@ mod tests {
                 .collect();
         let err = cmd_leader(&args).unwrap_err();
         assert!(err.to_string().contains("--admit-burst"), "{err}");
+
+        // journal flags validate offline too: empty path, fsync without a log
+        let args: Vec<String> =
+            ["--sites", "127.0.0.1:1", "--serve", "127.0.0.1:0", "--journal", ""]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = cmd_leader(&args).unwrap_err();
+        assert!(err.to_string().contains("--journal"), "{err}");
+
+        let args: Vec<String> =
+            ["--sites", "127.0.0.1:1", "--serve", "127.0.0.1:0", "--journal-fsync"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = cmd_leader(&args).unwrap_err();
+        assert!(err.to_string().contains("--journal-fsync needs --journal"), "{err}");
     }
 
     #[test]

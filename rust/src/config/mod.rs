@@ -122,6 +122,18 @@ pub struct LeaderConfig {
     /// Token-bucket burst: submits a client may fire back-to-back above
     /// `admit_rate` before throttling kicks in (≥ 1).
     pub admit_burst: usize,
+    /// Event-journal path for crash recovery (`dsc leader --journal`
+    /// overrides). When set, every state-changing reactor event is
+    /// appended to this file before it is applied, and a restarted leader
+    /// replays it to rebuild the queue and every incomplete run. `None`
+    /// (the default) disables journaling — the pre-journal server,
+    /// byte for byte.
+    pub journal_path: Option<std::path::PathBuf>,
+    /// `fsync` the journal at every group commit (once per mailbox
+    /// drain). Off by default: the OS page cache still survives a process
+    /// crash; only power loss can drop acknowledged events (see
+    /// docs/DEPLOY.md for the exact durability window).
+    pub journal_fsync: bool,
 }
 
 /// `min(2, cores)` — enough to overlap one long central with another run's
@@ -140,6 +152,8 @@ impl Default for LeaderConfig {
             fair_queue: false,
             admit_rate: 0.0,
             admit_burst: 4,
+            journal_path: None,
+            journal_fsync: false,
         }
     }
 }
@@ -293,6 +307,8 @@ impl PipelineConfig {
     ///                           # false = legacy global FIFO
     /// admit_rate = 0.0          # per-client submits/sec admitted (0 = off)
     /// admit_burst = 4           # token-bucket burst above admit_rate
+    /// journal_path = "leader.journal"  # crash-recovery event log (unset = off)
+    /// journal_fsync = false     # fsync each group commit (power-loss durability)
     ///
     /// [site]
     /// label_cache_runs = 8      # completed runs kept for LABELSPULL
@@ -511,6 +527,18 @@ impl PipelineConfig {
             }
             cfg.leader.admit_burst = n as usize;
         }
+        if let Some(v) = get("leader.journal_path") {
+            let s =
+                v.as_str().ok_or_else(|| anyhow!("leader.journal_path must be a string"))?;
+            if s.is_empty() {
+                bail!("leader.journal_path must not be empty (omit the key to disable)");
+            }
+            cfg.leader.journal_path = Some(s.into());
+        }
+        if let Some(v) = get("leader.journal_fsync") {
+            cfg.leader.journal_fsync =
+                v.as_bool().ok_or_else(|| anyhow!("leader.journal_fsync must be bool"))?;
+        }
 
         if let Some(v) = get("site.label_cache_runs") {
             let n =
@@ -684,10 +712,14 @@ mod tests {
         assert!(!cfg.leader.fair_queue);
         assert_eq!(cfg.leader.admit_rate, 0.0);
         assert_eq!(cfg.leader.admit_burst, 4);
+        // journaling off by default: the pre-journal server, byte for byte
+        assert_eq!(cfg.leader.journal_path, None);
+        assert!(!cfg.leader.journal_fsync);
 
         let cfg = PipelineConfig::from_toml(
             "[leader]\nmax_jobs = 2\nqueue_depth = 8\nallow_label_pull = true\n\
-             central_workers = 3\nfair_queue = true\nadmit_rate = 2.5\nadmit_burst = 7",
+             central_workers = 3\nfair_queue = true\nadmit_rate = 2.5\nadmit_burst = 7\n\
+             journal_path = \"leader.journal\"\njournal_fsync = true",
         )
         .unwrap();
         assert_eq!(cfg.leader.max_jobs, 2);
@@ -697,6 +729,11 @@ mod tests {
         assert!(cfg.leader.fair_queue);
         assert_eq!(cfg.leader.admit_rate, 2.5);
         assert_eq!(cfg.leader.admit_burst, 7);
+        assert_eq!(
+            cfg.leader.journal_path.as_deref(),
+            Some(std::path::Path::new("leader.journal"))
+        );
+        assert!(cfg.leader.journal_fsync);
         // 0 is legal and means "inline centrals" (the pre-offload behavior)
         let cfg = PipelineConfig::from_toml("[leader]\ncentral_workers = 0").unwrap();
         assert_eq!(cfg.leader.central_workers, 0);
@@ -715,6 +752,9 @@ mod tests {
         assert!(PipelineConfig::from_toml("[leader]\nadmit_rate = \"fast\"").is_err());
         assert!(PipelineConfig::from_toml("[leader]\nadmit_burst = 0").is_err());
         assert!(PipelineConfig::from_toml("[leader]\nadmit_burst = -2").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\njournal_path = \"\"").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\njournal_path = 7").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\njournal_fsync = \"yes\"").is_err());
     }
 
     #[test]

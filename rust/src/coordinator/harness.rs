@@ -31,8 +31,21 @@
 //! [`JobClient`] counts when dropped), mirroring `--serve-limit`. The
 //! limit is required here — without it nothing would ever stop the
 //! reactor, since the in-process mailbox can outlive every test handle.
+//!
+//! **Crash recovery** ([`serve_channel_journaled`]): the same harness with
+//! the reactor journaling every event to an on-disk log
+//! ([`super::journal`]) and, optionally, a staged crash after the log's
+//! `crash_after`-th record. A crash drops the reactor's entire in-memory
+//! state; the *world* — site threads, the event mailbox, clients, the
+//! virtual clock — survives, exactly as sites and the disk outlive a dead
+//! leader process. [`ChannelHarness::crash_and_restart`] then recovers the
+//! way `dsc leader --serve --journal` does on reboot: re-open the journal,
+//! replay it against a puppet driver, and resume serving the surviving
+//! mailbox. `rust/tests/journal_replay.rs` sweeps the crash point over
+//! every record index and pins replayed == uninterrupted, bit for bit.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
@@ -46,9 +59,10 @@ use crate::net::channel::{self, Deliver, Fault, FaultPlan, VirtualClock};
 use crate::net::SiteNet;
 use crate::site::{self, SessionOutcome};
 
+use super::journal::Journal;
 use super::server::{
     client_frame_to_event, CentralHook, CentralPool, ClientLink, Event, JobClient, Reactor,
-    ServerDriver, ServerOpts, ServerStats,
+    ReplayDriver, ServerDriver, ServerOpts, ServerStats,
 };
 
 /// Everything a harness run is parameterized by, beyond the pipeline
@@ -162,6 +176,46 @@ impl ServerDriver for ChannelDriver {
     }
 }
 
+/// How a reactor thread ended: cleanly, or at a staged crash point with
+/// the surviving world (driver, pool, mailbox) handed back for recovery.
+enum ReactorOutcome {
+    Finished(ServerStats),
+    Crashed { driver: ChannelDriver, pool: CentralPool, ev_rx: Receiver<Event> },
+}
+
+/// Everything [`ChannelHarness::crash_and_restart`] needs to "reboot" the
+/// reactor against the same journal: the original serving parameters plus
+/// the journal's pinned epoch (`t_ns = 0` of the log's timeline).
+#[derive(Clone)]
+struct RestartState {
+    cfg: PipelineConfig,
+    opts: ServerOpts,
+    path: PathBuf,
+    fsync: bool,
+    epoch: Instant,
+    /// Whether the surviving pool offloads centrals (`jobs.is_some()`) —
+    /// the replay stub must agree so replay takes the same drive() branch.
+    pool_active: bool,
+}
+
+/// A cloneable stand-in for [`ChannelHarness::tick`] (see
+/// [`ChannelHarness::ticker`]): advances the shared virtual clock and
+/// injects the `Tick`, without borrowing the harness.
+#[derive(Clone)]
+pub struct HarnessTicker {
+    events: Sender<Event>,
+    clock: VirtualClock,
+}
+
+impl HarnessTicker {
+    /// Advance the virtual clock by `d` and deliver a `Tick` — identical
+    /// to [`ChannelHarness::tick`].
+    pub fn tick(&self, d: Duration) {
+        self.clock.advance(d);
+        let _ = self.events.send(Event::Tick);
+    }
+}
+
 /// A running channel job server: mint clients, drive the virtual clock,
 /// and join for the stats once every client is done.
 pub struct ChannelHarness {
@@ -169,8 +223,9 @@ pub struct ChannelHarness {
     clock: VirtualClock,
     clients: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
     next_client: u64,
-    reactor: JoinHandle<Result<ServerStats>>,
+    reactor: Option<JoinHandle<Result<ReactorOutcome>>>,
     sites: Vec<JoinHandle<Result<SessionOutcome>>>,
+    restart: Option<RestartState>,
 }
 
 /// Stand up the channel job server: one [`crate::site::session`] thread
@@ -182,6 +237,45 @@ pub fn serve_channel(
     datasets: Vec<Dataset>,
     cfg: &PipelineConfig,
     opts: HarnessOpts,
+) -> Result<ChannelHarness> {
+    serve_channel_inner(datasets, cfg, opts, None)
+}
+
+/// [`serve_channel`] with the reactor event-sourcing into `journal_path`
+/// (fsync per [`crate::config::LeaderConfig::journal_fsync`]) and, when
+/// `crash_after` is `Some(k)`, a staged crash as soon as the journal holds
+/// `k` records: the reactor's state is dropped on the spot — sites,
+/// mailbox, clients and clock survive — and the harness waits in the
+/// crashed state until [`ChannelHarness::crash_and_restart`]. The journal
+/// file must be fresh (empty or absent): recovery of an existing log is
+/// `crash_and_restart`'s job, not serve's.
+pub fn serve_channel_journaled(
+    datasets: Vec<Dataset>,
+    cfg: &PipelineConfig,
+    opts: HarnessOpts,
+    journal_path: &Path,
+    crash_after: Option<u64>,
+) -> Result<ChannelHarness> {
+    let plan = JournalPlan {
+        path: journal_path.to_path_buf(),
+        fsync: cfg.leader.journal_fsync,
+        crash_after,
+    };
+    serve_channel_inner(datasets, cfg, opts, Some(plan))
+}
+
+/// Journal wiring for [`serve_channel_journaled`].
+struct JournalPlan {
+    path: PathBuf,
+    fsync: bool,
+    crash_after: Option<u64>,
+}
+
+fn serve_channel_inner(
+    datasets: Vec<Dataset>,
+    cfg: &PipelineConfig,
+    opts: HarnessOpts,
+    journal: Option<JournalPlan>,
 ) -> Result<ChannelHarness> {
     if datasets.is_empty() {
         bail!("no site datasets");
@@ -249,28 +343,93 @@ pub fn serve_channel(
         if cfg.backend == Backend::Native { opts.server.central_workers } else { 0 };
     let pool = CentralPool::start(workers, ev_tx.clone(), opts.central_hook);
 
+    // The journal epoch is pinned *before* the reactor thread exists, so a
+    // test advancing the clock can never race the thread start into a
+    // skewed timeline; crash_and_restart reuses the same instant.
+    let epoch = clock.now();
+    let restart = match &journal {
+        None => None,
+        Some(plan) => {
+            let (log, records) = Journal::open(&plan.path, plan.fsync)?;
+            if !records.is_empty() {
+                bail!(
+                    "{}: the journaled channel harness needs a fresh journal \
+                     ({} records found) — recovery goes through crash_and_restart",
+                    plan.path.display(),
+                    records.len()
+                );
+            }
+            Some((
+                log,
+                plan.crash_after,
+                RestartState {
+                    cfg: cfg.clone(),
+                    opts: opts.server.clone(),
+                    path: plan.path.clone(),
+                    fsync: plan.fsync,
+                    epoch,
+                    pool_active: workers > 0,
+                },
+            ))
+        }
+    };
+    let (journal, crash_after, restart) = match restart {
+        Some((log, crash_after, rs)) => (Some(log), crash_after, Some(rs)),
+        None => (None, None, None),
+    };
+
     let reactor = thread::spawn({
         let cfg = cfg.clone();
         let server_opts = opts.server;
-        move || -> Result<ServerStats> {
+        move || -> Result<ReactorOutcome> {
             // Built on this thread: the reactor may hold a thread-local
             // XLA runtime handle (inline-central path) and must not move.
             let mut reactor = Reactor::new(cfg, server_opts, driver, pool)?;
+            if let Some(log) = journal {
+                reactor.attach_journal_at(log, epoch);
+            }
             loop {
-                if reactor.done() {
-                    return Ok(reactor.finish());
+                if let Some(k) = crash_after {
+                    if reactor.journal_records().unwrap_or(0) >= k {
+                        // Staged crash. The crash model is "every appended
+                        // record survives", so force the tail durable
+                        // (loudly — a sync failure must not masquerade as
+                        // data loss), then drop the reactor state; the
+                        // driver, pool and mailbox outlive it the way
+                        // sites and the disk outlive a dead process.
+                        if let Some(mut log) = reactor.take_journal() {
+                            log.sync()?;
+                        }
+                        let (_lost_state, driver, pool) = reactor.into_parts();
+                        return Ok(ReactorOutcome::Crashed { driver, pool, ev_rx });
+                    }
                 }
+                if reactor.done() {
+                    return Ok(ReactorOutcome::Finished(reactor.finish()));
+                }
+                // Group commit: everything journaled this drain becomes
+                // durable before the reactor blocks (no-op with no journal).
+                reactor.sync_journal();
                 // No recv timeout: time is virtual, so deadline wakeups
                 // arrive as explicit Tick events from the test.
                 let Ok(event) = ev_rx.recv() else {
-                    return Ok(reactor.finish()); // every event source gone
+                    // every event source gone
+                    return Ok(ReactorOutcome::Finished(reactor.finish()));
                 };
                 reactor.step(event);
             }
         }
     });
 
-    Ok(ChannelHarness { events: ev_tx, clock, clients, next_client: 1, reactor, sites })
+    Ok(ChannelHarness {
+        events: ev_tx,
+        clock,
+        clients,
+        next_client: 1,
+        reactor: Some(reactor),
+        sites,
+        restart,
+    })
 }
 
 impl ChannelHarness {
@@ -297,15 +456,104 @@ impl ChannelHarness {
         self.clock.clone()
     }
 
+    /// A detached [`ChannelHarness::tick`] handle: a crash-recovery test
+    /// drives its client script (and the clock) from a second thread while
+    /// the main thread sits in [`ChannelHarness::crash_and_restart`], so
+    /// the script needs tick access that does not borrow the harness.
+    pub fn ticker(&self) -> HarnessTicker {
+        HarnessTicker { events: self.events.clone(), clock: self.clock.clone() }
+    }
+
+    /// Recover from a staged crash the way `dsc leader --serve --journal`
+    /// recovers from a real one: join the crashed reactor thread, take the
+    /// surviving world (driver, pool, mailbox) off its hands, re-open the
+    /// journal, replay it against a [`ReplayDriver`] sharing the log's
+    /// epoch, and spawn a fresh reactor around the replayed state. The
+    /// resumed reactor keeps journaling into the same log on the same
+    /// absolute timeline and serves the mailbox's still-unprocessed events
+    /// — post-crash traffic picks up exactly where the journal ends.
+    ///
+    /// Errors if the harness was not started by [`serve_channel_journaled`]
+    /// with a crash point, or if the reactor finished before reaching it.
+    pub fn crash_and_restart(&mut self) -> Result<()> {
+        let rs = self
+            .restart
+            .as_ref()
+            .ok_or_else(|| anyhow!("crash_and_restart needs a serve_channel_journaled harness"))?
+            .clone();
+        let handle = self
+            .reactor
+            .take()
+            .ok_or_else(|| anyhow!("the reactor handle is already gone"))?;
+        let outcome = handle.join().map_err(|_| anyhow!("reactor thread panicked"))??;
+        let ReactorOutcome::Crashed { driver, pool, ev_rx } = outcome else {
+            bail!("the reactor finished instead of crashing — crash_after was never reached");
+        };
+        let clock = self.clock.clone();
+        let handle = thread::spawn(move || -> Result<ReactorOutcome> {
+            // Read back what survived "on disk"…
+            let (journal, records) = Journal::open(&rs.path, rs.fsync)?;
+            let last_t_ns = records.last().map(|r| r.t_ns).unwrap_or(0);
+            // …make sure the surviving clock is not behind the journal
+            // (it cannot be — every record was stamped from it — but the
+            // invariant is cheap to enforce)…
+            clock.advance_to(rs.epoch + Duration::from_nanos(last_t_ns));
+            // …and replay against a puppet driver on the log's timeline.
+            // revive = false: the channel world survived, so replay must
+            // end with links in exactly the live driver's state.
+            let n_sites = driver.n_sites();
+            let mut replayer = Reactor::new(
+                rs.cfg,
+                rs.opts,
+                ReplayDriver::new(n_sites, rs.epoch, false),
+                CentralPool::replay_stub(rs.pool_active),
+            )?;
+            replayer.set_replaying(true);
+            replayer.replay(&records);
+            for (site, gen) in replayer.replay_gens().iter().enumerate() {
+                let live = driver.link_gen(site);
+                if *gen != live {
+                    bail!(
+                        "replay says site {site} is at link gen {gen}, the surviving \
+                         driver says {live} — journal and world diverged"
+                    );
+                }
+            }
+            let (parts, _puppet, _stub) = replayer.into_parts();
+            let mut reactor = Reactor::from_parts(parts, driver, pool)?;
+            reactor.attach_journal_at(journal, rs.epoch);
+            loop {
+                if reactor.done() {
+                    return Ok(ReactorOutcome::Finished(reactor.finish()));
+                }
+                reactor.sync_journal();
+                let Ok(event) = ev_rx.recv() else {
+                    return Ok(ReactorOutcome::Finished(reactor.finish()));
+                };
+                reactor.step(event);
+            }
+        });
+        self.reactor = Some(handle);
+        Ok(())
+    }
+
     /// Wait for the server to finish (every `client_limit` client done),
     /// then for every site session; returns the serving stats and the
     /// per-site session outcomes. Call after dropping all clients.
     pub fn join(self) -> Result<(ServerStats, Vec<SessionOutcome>)> {
-        let ChannelHarness { events, clock: _, clients, next_client: _, reactor, sites } = self;
+        let ChannelHarness {
+            events, clock: _, clients, next_client: _, reactor, sites, restart: _,
+        } = self;
         drop(events);
         drop(clients);
-        let stats =
-            reactor.join().map_err(|_| anyhow!("reactor thread panicked"))??;
+        let handle = reactor.ok_or_else(|| anyhow!("the reactor handle is already gone"))?;
+        let stats = match handle.join().map_err(|_| anyhow!("reactor thread panicked"))?? {
+            ReactorOutcome::Finished(stats) => stats,
+            ReactorOutcome::Crashed { .. } => bail!(
+                "the reactor sits at its staged crash point — call crash_and_restart \
+                 before join"
+            ),
+        };
         // The reactor dropping its driver closed every site downlink, so
         // the sessions end cleanly (Ok) just like a leader disconnecting.
         let mut outcomes = Vec::with_capacity(sites.len());

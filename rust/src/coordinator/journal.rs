@@ -1,0 +1,741 @@
+//! Event-sourced run journal: the job server's crash-recovery log.
+//!
+//! Every state-changing reactor event — submits, site frames, central
+//! results, client hangups, deadline ticks — is appended to this log
+//! *before* it is applied (write-ahead order), so a leader that dies can
+//! rebuild the exact reactor state by replaying the journal from the top:
+//! the `JobQueue` (FIFO order or DRR lanes and deficits), every incomplete
+//! [`super::machine::RunMachine`], token-bucket levels, the run-id counter
+//! and the per-run byte counters. Budgets and forked seeds are pure
+//! functions of `(JobSpec, site sizes)`, so a replayed run reproduces its
+//! labels and `LinkStats` bit for bit (`rust/tests/journal_replay.rs`
+//! sweeps a crash through every record index and asserts exactly that).
+//!
+//! ## On-disk format
+//!
+//! Little-endian, following the `net/wire.rs` framing discipline (bounded
+//! allocation, explicit truncation errors — the journal is parsed with the
+//! same [`Reader`] the wire codec uses):
+//!
+//! ```text
+//! file    := magic:[u8; 8] record*          magic = "DSCJL001"
+//! record  := len:u32 crc:u32 payload:[u8; len]
+//! payload := t_ns:u64 kind:u8 body
+//! ```
+//!
+//! `crc` is CRC-32 (IEEE) over `payload`; `t_ns` is the reactor clock at
+//! append time, as nanoseconds since the journal's epoch (virtual time in
+//! the channel harness, real time under TCP) — replay re-seeds clocks,
+//! deadlines and token buckets from it. Kinds 1–8 are replayable reactor
+//! events (8 marks a process restart, so link generations and run
+//! restarts carry across crashes); kinds ≥ 16 are **annotations** (queue
+//! admissions/rejections,
+//! run starts/completions) that replay skips but tests and operators use
+//! as a durable record of scheduling decisions.
+//!
+//! ## Recovery rules
+//!
+//! [`recover`] distinguishes the two corruption shapes a crash can leave:
+//!
+//! * **Torn final record** — the file ends mid-record (the write that was
+//!   in flight when the process died). Recovery is *clean*: every complete
+//!   record before it is returned and [`Journal::open`] truncates the tail,
+//!   exactly like a database WAL.
+//! * **Corruption before the tail** — a complete record whose CRC does not
+//!   match, an undecodable payload, or bad magic. That is not a torn write
+//!   (torn writes are only ever at the end), so recovery fails *loudly*,
+//!   naming the byte offset — silently dropping interior history would
+//!   resurrect a wrong queue.
+//!
+//! Durability is batched: [`Journal::append`] writes into a buffer and
+//! [`Journal::sync`] flushes (plus `fsync` when `[leader] journal_fsync`
+//! is on) — frontends sync once per mailbox drain, not once per event, so
+//! the hot path stays off the disk's critical path. The window this opens
+//! (events acknowledged but not yet synced) is documented in
+//! `docs/DEPLOY.md`.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::wire::{self, Message, Reader, Writer};
+use crate::net::JobSpec;
+
+/// First 8 bytes of every journal file.
+pub const MAGIC: [u8; 8] = *b"DSCJL001";
+
+/// A complete record may not claim more than this many payload bytes —
+/// far above any real frame (the wire codec's own element caps bound the
+/// embedded frames), so a larger length is corruption, not data.
+const MAX_RECORD: u32 = 1 << 30;
+
+/// Smallest legal payload: `t_ns:u64 kind:u8` with an empty body.
+const MIN_RECORD: u32 = 9;
+
+// Replayable reactor events.
+const K_CLIENT_SUBMIT: u8 = 1;
+const K_CLIENT_PULL: u8 = 2;
+const K_CLIENT_DOWN: u8 = 3;
+const K_SITE_FRAME: u8 = 4;
+const K_SITE_DOWN: u8 = 5;
+const K_CENTRAL_DONE: u8 = 6;
+const K_TICK: u8 = 7;
+const K_RESTART: u8 = 8;
+// Annotations (skipped by state replay).
+const K_ADMITTED: u8 = 16;
+const K_REJECTED: u8 = 17;
+const K_STARTED: u8 = 18;
+const K_COMPLETED: u8 = 19;
+const K_FAILED: u8 = 20;
+
+/// One journaled happening. The first eight variants mirror the reactor's
+/// mailbox events and are replayed; the rest are annotations — durable
+/// breadcrumbs of scheduling decisions (what was admitted, in which order
+/// the queue popped) that replay derives for itself and tests assert on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalEvent {
+    /// A client submitted a job (the spec is embedded as its wire frame).
+    ClientSubmit { client: u64, spec: JobSpec, modern: bool },
+    /// A client asked for a completed run's labels.
+    ClientPull { client: u64, run: u32 },
+    /// A client connection ended.
+    ClientDown { client: u64 },
+    /// One frame arrived from a site link (stored verbatim).
+    SiteFrame { site: usize, gen: u64, frame: Vec<u8> },
+    /// A site link died.
+    SiteDown { site: usize, gen: u64, err: String },
+    /// A central worker delivered a run's spectral result.
+    CentralDone { run: u32, result: std::result::Result<(Vec<u16>, f64), String>, elapsed_ns: u64 },
+    /// A deadline tick reached the reactor.
+    Tick,
+    /// The leader process restarted here: every site link was freshly
+    /// re-dialed (one incarnation past whatever the dead session left)
+    /// and every incomplete run was restarted from scratch. Replay acts
+    /// this out so records appended *after* a restart land on the same
+    /// link generations and fresh run machines the restarted leader had —
+    /// which is what keeps a twice-crashed journal replayable.
+    Restart,
+    /// Annotation: a submit was admitted to the queue as `run`.
+    Admitted { run: u32, client: u64 },
+    /// Annotation: a submit was refused.
+    Rejected { client: u64 },
+    /// Annotation: the queue popped `run` and the run started.
+    Started { run: u32 },
+    /// Annotation: `run` delivered labels and a JOBDONE.
+    Completed { run: u32 },
+    /// Annotation: `run` failed.
+    Failed { run: u32 },
+}
+
+impl JournalEvent {
+    /// Annotations are skipped when rebuilding reactor state.
+    pub fn is_annotation(&self) -> bool {
+        matches!(
+            self,
+            JournalEvent::Admitted { .. }
+                | JournalEvent::Rejected { .. }
+                | JournalEvent::Started { .. }
+                | JournalEvent::Completed { .. }
+                | JournalEvent::Failed { .. }
+        )
+    }
+}
+
+/// One decoded journal record: when (nanoseconds since the journal epoch,
+/// on the reactor's clock) and what.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub t_ns: u64,
+    pub event: JournalEvent,
+}
+
+// ─── CRC-32 (IEEE) ─────────────────────────────────────────────────────────
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), hand-rolled — the crate
+/// has no compression dependency to borrow one from.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ─── record codec ──────────────────────────────────────────────────────────
+
+fn encode_payload(t_ns: u64, ev: &JournalEvent) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(t_ns);
+    match ev {
+        JournalEvent::ClientSubmit { client, spec, modern } => {
+            w.u8(K_CLIENT_SUBMIT);
+            w.u64(*client);
+            w.u8(*modern as u8);
+            // Embed the spec as its own wire frame: one codec, one set of
+            // hostile-input bounds. Legacy SUBMIT cannot carry a priority,
+            // so anything non-default rides the modern frame.
+            let frame = if *modern || spec.priority != JobSpec::DEFAULT_PRIORITY {
+                wire::encode(&Message::SubmitPri(spec.clone()))
+            } else {
+                wire::encode(&Message::Submit(spec.clone()))
+            };
+            w.u32(frame.len() as u32);
+            w.buf.extend_from_slice(&frame);
+        }
+        JournalEvent::ClientPull { client, run } => {
+            w.u8(K_CLIENT_PULL);
+            w.u64(*client);
+            w.u32(*run);
+        }
+        JournalEvent::ClientDown { client } => {
+            w.u8(K_CLIENT_DOWN);
+            w.u64(*client);
+        }
+        JournalEvent::SiteFrame { site, gen, frame } => {
+            w.u8(K_SITE_FRAME);
+            w.u32(*site as u32);
+            w.u64(*gen);
+            w.u32(frame.len() as u32);
+            w.buf.extend_from_slice(frame);
+        }
+        JournalEvent::SiteDown { site, gen, err } => {
+            w.u8(K_SITE_DOWN);
+            w.u32(*site as u32);
+            w.u64(*gen);
+            let bytes = err.as_bytes();
+            w.u32(bytes.len() as u32);
+            w.buf.extend_from_slice(bytes);
+        }
+        JournalEvent::CentralDone { run, result, elapsed_ns } => {
+            w.u8(K_CENTRAL_DONE);
+            w.u32(*run);
+            w.u64(*elapsed_ns);
+            match result {
+                Ok((labels, sigma)) => {
+                    w.u8(1);
+                    w.f64(*sigma);
+                    w.u32(labels.len() as u32);
+                    for l in labels {
+                        w.u16(*l);
+                    }
+                }
+                Err(e) => {
+                    w.u8(0);
+                    let bytes = e.as_bytes();
+                    w.u32(bytes.len() as u32);
+                    w.buf.extend_from_slice(bytes);
+                }
+            }
+        }
+        JournalEvent::Tick => w.u8(K_TICK),
+        JournalEvent::Restart => w.u8(K_RESTART),
+        JournalEvent::Admitted { run, client } => {
+            w.u8(K_ADMITTED);
+            w.u32(*run);
+            w.u64(*client);
+        }
+        JournalEvent::Rejected { client } => {
+            w.u8(K_REJECTED);
+            w.u64(*client);
+        }
+        JournalEvent::Started { run } => {
+            w.u8(K_STARTED);
+            w.u32(*run);
+        }
+        JournalEvent::Completed { run } => {
+            w.u8(K_COMPLETED);
+            w.u32(*run);
+        }
+        JournalEvent::Failed { run } => {
+            w.u8(K_FAILED);
+            w.u32(*run);
+        }
+    }
+    w.buf
+}
+
+/// Refusal/error strings inside records stay short sentences; anything
+/// larger is corruption (same posture as the wire codec's reject cap).
+const MAX_TEXT: u32 = 64 * 1024;
+
+fn take_text(r: &mut Reader, what: &str) -> Result<String> {
+    let len = r.u32()?;
+    if len > MAX_TEXT {
+        bail!("{what} of {len} bytes");
+    }
+    match std::str::from_utf8(r.take(len as usize)?) {
+        Ok(s) => Ok(s.to_string()),
+        Err(_) => bail!("{what} is not UTF-8"),
+    }
+}
+
+fn decode_payload(payload: &[u8]) -> Result<Record> {
+    let mut r = Reader::new(payload);
+    let t_ns = r.u64()?;
+    let kind = r.u8()?;
+    let event = match kind {
+        K_CLIENT_SUBMIT => {
+            let client = r.u64()?;
+            let modern = match r.u8()? {
+                0 => false,
+                1 => true,
+                o => bail!("submit modern flag must be 0 or 1, got {o}"),
+            };
+            let flen = r.u32()?;
+            let frame = r.take(flen as usize)?;
+            let spec = match wire::decode(frame)? {
+                Message::Submit(spec) | Message::SubmitPri(spec) => spec,
+                other => bail!("journaled submit embeds a non-submit frame {other:?}"),
+            };
+            JournalEvent::ClientSubmit { client, spec, modern }
+        }
+        K_CLIENT_PULL => {
+            let client = r.u64()?;
+            let run = r.u32()?;
+            JournalEvent::ClientPull { client, run }
+        }
+        K_CLIENT_DOWN => JournalEvent::ClientDown { client: r.u64()? },
+        K_SITE_FRAME => {
+            let site = r.u32()? as usize;
+            let gen = r.u64()?;
+            let flen = r.u32()?;
+            let frame = r.take(flen as usize)?.to_vec();
+            JournalEvent::SiteFrame { site, gen, frame }
+        }
+        K_SITE_DOWN => {
+            let site = r.u32()? as usize;
+            let gen = r.u64()?;
+            let err = take_text(&mut r, "site-down error")?;
+            JournalEvent::SiteDown { site, gen, err }
+        }
+        K_CENTRAL_DONE => {
+            let run = r.u32()?;
+            let elapsed_ns = r.u64()?;
+            let result = match r.u8()? {
+                1 => {
+                    let sigma = r.f64()?;
+                    let n = r.u32()?;
+                    // Allocation bounded by the bytes actually present,
+                    // mirroring the wire codec's hostile-count posture.
+                    let mut labels =
+                        Vec::with_capacity((n as usize).min(r.remaining() / 2));
+                    for _ in 0..n {
+                        labels.push(r.u16()?);
+                    }
+                    Ok((labels, sigma))
+                }
+                0 => Err(take_text(&mut r, "central error")?),
+                o => bail!("central result flag must be 0 or 1, got {o}"),
+            };
+            JournalEvent::CentralDone { run, result, elapsed_ns }
+        }
+        K_TICK => JournalEvent::Tick,
+        K_RESTART => JournalEvent::Restart,
+        K_ADMITTED => {
+            let run = r.u32()?;
+            let client = r.u64()?;
+            JournalEvent::Admitted { run, client }
+        }
+        K_REJECTED => JournalEvent::Rejected { client: r.u64()? },
+        K_STARTED => JournalEvent::Started { run: r.u32()? },
+        K_COMPLETED => JournalEvent::Completed { run: r.u32()? },
+        K_FAILED => JournalEvent::Failed { run: r.u32()? },
+        other => bail!("unknown journal record kind {other}"),
+    };
+    if !r.done() {
+        bail!("trailing bytes in journal record");
+    }
+    Ok(Record { t_ns, event })
+}
+
+// ─── recovery ──────────────────────────────────────────────────────────────
+
+/// What [`recover`] found in a journal file.
+#[derive(Debug)]
+pub struct Recovered {
+    /// Every complete, CRC-valid record, in append order.
+    pub records: Vec<Record>,
+    /// Length of the valid prefix (magic + complete records) —
+    /// [`Journal::open`] truncates the file here before appending.
+    pub valid_bytes: u64,
+    /// Whether a torn final record was discarded.
+    pub torn: bool,
+}
+
+/// Parse a journal file. A torn *final* record (the write in flight when
+/// the process died) is discarded cleanly; bad magic, a CRC mismatch, or
+/// an undecodable record anywhere before the tail fails loudly, naming the
+/// byte offset — see the module docs for why the two get opposite
+/// treatment.
+pub fn recover(path: &Path) -> Result<Recovered> {
+    let buf = fs::read(path).with_context(|| format!("read journal {}", path.display()))?;
+    if buf.is_empty() {
+        return Ok(Recovered { records: Vec::new(), valid_bytes: 0, torn: false });
+    }
+    if buf.len() < MAGIC.len() {
+        // A torn header write: shorter than the magic but a prefix of it
+        // is clean (nothing was ever durably journaled); anything else is
+        // a foreign file.
+        if MAGIC.starts_with(&buf[..]) {
+            return Ok(Recovered { records: Vec::new(), valid_bytes: 0, torn: true });
+        }
+        bail!("{}: bad journal magic at byte offset 0", path.display());
+    }
+    if buf[..MAGIC.len()] != MAGIC {
+        bail!("{}: bad journal magic at byte offset 0", path.display());
+    }
+    let mut records = Vec::new();
+    let mut pos = MAGIC.len();
+    let mut torn = false;
+    while pos < buf.len() {
+        let remaining = buf.len() - pos;
+        if remaining < 8 {
+            torn = true; // record header cut short by the crash
+            break;
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        if len < MIN_RECORD || len > MAX_RECORD {
+            bail!(
+                "{}: corrupt journal: record {} at byte offset {pos} claims {len} payload \
+                 bytes",
+                path.display(),
+                records.len()
+            );
+        }
+        if (remaining - 8) < len as usize {
+            torn = true; // payload cut short by the crash
+            break;
+        }
+        let payload = &buf[pos + 8..pos + 8 + len as usize];
+        if crc32(payload) != crc {
+            bail!(
+                "{}: journal CRC mismatch in record {} at byte offset {pos}",
+                path.display(),
+                records.len()
+            );
+        }
+        let record = decode_payload(payload).with_context(|| {
+            format!(
+                "{}: undecodable journal record {} at byte offset {pos}",
+                path.display(),
+                records.len()
+            )
+        })?;
+        records.push(record);
+        pos += 8 + len as usize;
+    }
+    Ok(Recovered { records, valid_bytes: pos as u64, torn })
+}
+
+// ─── the append handle ─────────────────────────────────────────────────────
+
+/// An open journal positioned for appending. Writes are buffered;
+/// [`Journal::sync`] is the durability point (frontends call it once per
+/// mailbox drain — group commit).
+pub struct Journal {
+    w: BufWriter<File>,
+    path: PathBuf,
+    fsync: bool,
+    records: u64,
+    dirty: bool,
+}
+
+impl Journal {
+    /// Open (or create) a journal for appending: recover the valid prefix,
+    /// truncate any torn tail, and return the handle plus every recovered
+    /// record. Interior corruption propagates [`recover`]'s loud error.
+    pub fn open(path: &Path, fsync: bool) -> Result<(Journal, Vec<Record>)> {
+        let rec = if path.exists() {
+            recover(path)?
+        } else {
+            Recovered { records: Vec::new(), valid_bytes: 0, torn: false }
+        };
+        if rec.torn {
+            eprintln!(
+                "leader: journal {}: discarding a torn final record ({} complete record(s) \
+                 kept)",
+                path.display(),
+                rec.records.len()
+            );
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        if rec.valid_bytes < MAGIC.len() as u64 {
+            file.set_len(0).context("truncate journal")?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(&MAGIC).context("write journal magic")?;
+        } else {
+            file.set_len(rec.valid_bytes).context("truncate torn journal tail")?;
+            file.seek(SeekFrom::End(0))?;
+        }
+        let journal = Journal {
+            w: BufWriter::new(file),
+            path: path.to_path_buf(),
+            fsync,
+            records: rec.records.len() as u64,
+            dirty: true, // the magic/truncation above is not yet synced
+        };
+        Ok((journal, rec.records))
+    }
+
+    /// Append one record; returns the record count after the append. The
+    /// bytes are buffered — not durable until [`Journal::sync`].
+    pub fn append(&mut self, t_ns: u64, event: &JournalEvent) -> Result<u64> {
+        let payload = encode_payload(t_ns, event);
+        let crc = crc32(&payload);
+        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.w.write_all(&crc.to_le_bytes())?;
+        self.w.write_all(&payload)?;
+        self.records += 1;
+        self.dirty = true;
+        Ok(self.records)
+    }
+
+    /// Flush buffered records (and `fsync` when configured). No-op when
+    /// nothing was appended since the last sync, so frontends call it
+    /// unconditionally before every blocking mailbox wait.
+    pub fn sync(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        self.w.flush().with_context(|| format!("flush journal {}", self.path.display()))?;
+        if self.fsync {
+            self.w
+                .get_ref()
+                .sync_data()
+                .with_context(|| format!("fsync journal {}", self.path.display()))?;
+        }
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Records in the file (recovered + appended).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// The file this journal appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::DmlKind;
+    use crate::spectral::{Algo, Bandwidth, GraphKind};
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            dml: DmlKind::KMeans,
+            total_codes: 60,
+            k_clusters: 3,
+            kmeans_max_iters: 20,
+            kmeans_tol: 1e-4,
+            seed: 42,
+            algo: Algo::Njw,
+            graph: GraphKind::Dense,
+            weighted: true,
+            bandwidth: Bandwidth::MedianScale(1.0),
+            priority: JobSpec::DEFAULT_PRIORITY,
+        }
+    }
+
+    fn sample_events() -> Vec<JournalEvent> {
+        vec![
+            JournalEvent::ClientSubmit { client: 1, spec: spec(), modern: false },
+            JournalEvent::ClientSubmit {
+                client: 2,
+                spec: JobSpec { priority: 4, ..spec() },
+                modern: true,
+            },
+            JournalEvent::ClientPull { client: 1, run: 7 },
+            JournalEvent::ClientDown { client: 2 },
+            JournalEvent::SiteFrame { site: 1, gen: 3, frame: vec![9, 8, 7] },
+            JournalEvent::SiteDown { site: 0, gen: 1, err: "io error".into() },
+            JournalEvent::CentralDone {
+                run: 7,
+                result: Ok((vec![0, 1, 2, 1], 0.5)),
+                elapsed_ns: 1234,
+            },
+            JournalEvent::CentralDone {
+                run: 8,
+                result: Err("central step panicked".into()),
+                elapsed_ns: 99,
+            },
+            JournalEvent::Tick,
+            JournalEvent::Restart,
+            JournalEvent::Admitted { run: 7, client: 1 },
+            JournalEvent::Rejected { client: 3 },
+            JournalEvent::Started { run: 7 },
+            JournalEvent::Completed { run: 7 },
+            JournalEvent::Failed { run: 8 },
+        ]
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips() {
+        for (i, ev) in sample_events().into_iter().enumerate() {
+            let t_ns = 1_000 * i as u64;
+            let payload = encode_payload(t_ns, &ev);
+            let rec = decode_payload(&payload).unwrap();
+            assert_eq!(rec, Record { t_ns, event: ev });
+        }
+    }
+
+    #[test]
+    fn payload_truncation_rejected_at_every_offset() {
+        for ev in sample_events() {
+            let payload = encode_payload(5, &ev);
+            for cut in 0..payload.len() {
+                assert!(
+                    decode_payload(&payload[..cut]).is_err(),
+                    "cut at {cut} of {ev:?} should fail"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn append_recover_roundtrip_and_reopen() {
+        let dir = std::env::temp_dir().join(format!("dsc-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.journal");
+        let _ = fs::remove_file(&path);
+
+        let (mut j, old) = Journal::open(&path, false).unwrap();
+        assert!(old.is_empty());
+        for (i, ev) in sample_events().iter().enumerate() {
+            assert_eq!(j.append(i as u64, ev).unwrap(), i as u64 + 1);
+        }
+        j.sync().unwrap();
+        drop(j);
+
+        let rec = recover(&path).unwrap();
+        assert!(!rec.torn);
+        assert_eq!(rec.records.len(), sample_events().len());
+        for (i, (r, ev)) in rec.records.iter().zip(sample_events()).enumerate() {
+            assert_eq!(*r, Record { t_ns: i as u64, event: ev });
+        }
+
+        // Reopen for append: recovered count carries over, new records land
+        // after the old ones.
+        let (mut j, old) = Journal::open(&path, false).unwrap();
+        assert_eq!(old.len(), sample_events().len());
+        assert_eq!(j.records(), old.len() as u64);
+        j.append(777, &JournalEvent::Tick).unwrap();
+        j.sync().unwrap();
+        drop(j);
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.records.len(), sample_events().len() + 1);
+        assert_eq!(rec.records.last().unwrap().t_ns, 777);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_recovers_cleanly_and_open_truncates_it() {
+        let dir = std::env::temp_dir().join(format!("dsc-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.journal");
+        let _ = fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, false).unwrap();
+        j.append(1, &JournalEvent::Tick).unwrap();
+        j.append(2, &JournalEvent::ClientDown { client: 9 }).unwrap();
+        j.sync().unwrap();
+        drop(j);
+        let full = fs::read(&path).unwrap();
+        let one_len = 8 + encode_payload(1, &JournalEvent::Tick).len();
+        let second_start = MAGIC.len() + one_len;
+
+        // Truncating at every byte offset inside the *last* record (its
+        // header included) must recover exactly the first record.
+        for cut in second_start..full.len() {
+            fs::write(&path, &full[..cut]).unwrap();
+            let rec = recover(&path).unwrap();
+            assert_eq!(rec.records.len(), 1, "cut at {cut}");
+            assert!(rec.torn, "cut at {cut} is a torn tail");
+            assert_eq!(rec.valid_bytes as usize, second_start);
+        }
+
+        // open() truncates the torn tail and appends after record 1.
+        fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let (mut j, old) = Journal::open(&path, false).unwrap();
+        assert_eq!(old.len(), 1);
+        j.append(3, &JournalEvent::Tick).unwrap();
+        j.sync().unwrap();
+        drop(j);
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.records.len(), 2);
+        assert_eq!(rec.records[1].t_ns, 3);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn interior_corruption_fails_loudly_with_the_offset() {
+        let dir = std::env::temp_dir().join(format!("dsc-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.journal");
+        let _ = fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, false).unwrap();
+        j.append(1, &JournalEvent::ClientDown { client: 1 }).unwrap();
+        j.append(2, &JournalEvent::Tick).unwrap();
+        j.sync().unwrap();
+        drop(j);
+        let full = fs::read(&path).unwrap();
+
+        // Flip one payload byte of record 0: CRC mismatch at its offset.
+        let mut bad = full.clone();
+        bad[MAGIC.len() + 8] ^= 0xFF;
+        fs::write(&path, &bad).unwrap();
+        let err = format!("{:#}", recover(&path).unwrap_err());
+        assert!(err.contains("CRC mismatch"), "{err}");
+        assert!(err.contains(&format!("byte offset {}", MAGIC.len())), "{err}");
+
+        // Flip a magic byte: loud, at offset 0.
+        let mut bad = full.clone();
+        bad[0] ^= 0xFF;
+        fs::write(&path, &bad).unwrap();
+        let err = format!("{:#}", recover(&path).unwrap_err());
+        assert!(err.contains("bad journal magic at byte offset 0"), "{err}");
+
+        // A corrupted CRC field itself is also a loud mismatch.
+        let mut bad = full.clone();
+        bad[MAGIC.len() + 4] ^= 0x01;
+        fs::write(&path, &bad).unwrap();
+        assert!(recover(&path).is_err());
+        let _ = fs::remove_file(&path);
+    }
+}

@@ -26,6 +26,7 @@
 //! deterministic report). `docs/TESTING.md` has the how-to.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::Path;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -38,7 +39,7 @@ use crate::net::tcp::SiteListener;
 use crate::net::{JobSpec, SiteNet};
 use crate::site;
 
-use super::harness::{serve_channel, HarnessOpts};
+use super::harness::{serve_channel, serve_channel_journaled, HarnessOpts};
 use super::server::{serve_jobs, CentralHook, JobClient, ServerOpts, ServerStats};
 use super::spec_from_config;
 
@@ -308,9 +309,30 @@ fn check_mix(mix: &LoadMix) -> Result<()> {
 /// throughput, per-tenant sojourn percentiles, utilization and the
 /// fairness index (see the module docs for the scheme).
 pub fn run_channel_load(mix: &LoadMix) -> Result<LoadReport> {
+    run_channel_load_inner(mix, None)
+}
+
+/// [`run_channel_load`] with the reactor event-sourcing every event into
+/// a fresh journal at `journal_path` (`fsync` per group commit when
+/// asked). The report is built entirely from virtual time, so journaling
+/// — which only ever spends *wall* time — must not move a single bit of
+/// it: `benches/jobserver_load.rs` holds this run to bit identity with
+/// the journal-off run and records only the wall-clock delta.
+pub fn run_channel_load_journaled(
+    mix: &LoadMix,
+    journal_path: &Path,
+    fsync: bool,
+) -> Result<LoadReport> {
+    run_channel_load_inner(mix, Some((journal_path, fsync)))
+}
+
+fn run_channel_load_inner(mix: &LoadMix, journal: Option<(&Path, bool)>) -> Result<LoadReport> {
     check_mix(mix)?;
     let total = mix.total_jobs();
-    let cfg = load_cfg(mix);
+    let mut cfg = load_cfg(mix);
+    if let Some((_, fsync)) = journal {
+        cfg.leader.journal_fsync = fsync;
+    }
 
     let seq = Sequencer::new();
     let hook: CentralHook = {
@@ -330,7 +352,10 @@ pub fn run_channel_load(mix: &LoadMix) -> Result<LoadReport> {
         faults: Vec::new(),
         central_hook: Some(hook),
     };
-    let mut harness = serve_channel(load_workload(mix.seed), &cfg, opts)?;
+    let mut harness = match journal {
+        Some((path, _)) => serve_channel_journaled(load_workload(mix.seed), &cfg, opts, path, None)?,
+        None => serve_channel(load_workload(mix.seed), &cfg, opts)?,
+    };
 
     // One connection per tenant, mix order → client ids 1..=n.
     let clients: Vec<_> = mix.clients.iter().map(|_| harness.client()).collect();

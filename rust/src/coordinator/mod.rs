@@ -42,6 +42,7 @@
 //! (TCP), never the network.
 
 pub mod harness;
+pub mod journal;
 pub mod loadgen;
 pub mod machine;
 pub mod server;

@@ -69,6 +69,7 @@ use crate::config::{Backend, PipelineConfig};
 use crate::net::tcp::{self, Backoff, TcpClient, TcpTimeouts};
 use crate::net::{wire, JobReport, JobSpec, LinkStats, Message, RejectCode};
 
+use super::journal::{Journal, JournalEvent, Record};
 use super::machine::{Advance, OutMsg, RunInput, RunMachine};
 use super::{central_cluster, check_graph_backend_kinds, resolve_xla};
 
@@ -267,6 +268,19 @@ impl CentralPool {
                 }
             });
         }
+        CentralPool { jobs: Some(tx) }
+    }
+
+    /// A workerless stand-in whose `jobs.is_some()` matches a real pool's,
+    /// so journal replay takes the same offload-vs-inline branch the
+    /// original reactor took. Replay never sends into it (`drive` returns
+    /// before the send while replaying) — the journaled `CentralDone`
+    /// advances the machine instead.
+    pub(crate) fn replay_stub(active: bool) -> CentralPool {
+        if !active {
+            return CentralPool { jobs: None };
+        }
+        let (tx, _rx) = mpsc::channel::<CentralJob>();
         CentralPool { jobs: Some(tx) }
     }
 }
@@ -509,6 +523,20 @@ pub(crate) struct Reactor<D: ServerDriver> {
     central_mean_ns: f64,
     /// Completed centrals behind `central_mean_ns`.
     centrals_done: u64,
+    /// Crash-recovery log (`[leader] journal_path`); `None` = off, the
+    /// default, which keeps the event path byte-identical to a leader
+    /// built without journaling.
+    journal: Option<Journal>,
+    /// The journal's epoch on this reactor's clock — record `t_ns` values
+    /// are offsets from it, so replay can rebuild every `Instant` (run
+    /// deadlines, token-bucket levels, backoff windows) in the original
+    /// timeline.
+    jepoch: Instant,
+    /// Replaying a recovered journal: suppress re-journaling (the records
+    /// being applied are already on disk), let the [`ReplayDriver`]
+    /// swallow re-sends, and skip re-offloading centrals — their
+    /// journaled `CentralDone` advances the machine instead.
+    replaying: bool,
 }
 
 impl<D: ServerDriver> Reactor<D> {
@@ -527,6 +555,7 @@ impl<D: ServerDriver> Reactor<D> {
         let xla = resolve_xla(&cfg)?;
         let seed = cfg.seed;
         let queue = JobQueue::new(cfg.leader.fair_queue);
+        let jepoch = driver.now();
         Ok(Reactor {
             cfg,
             opts,
@@ -546,7 +575,248 @@ impl<D: ServerDriver> Reactor<D> {
             buckets: HashMap::new(),
             central_mean_ns: 0.0,
             centrals_done: 0,
+            journal: None,
+            jepoch,
+            replaying: false,
         })
+    }
+
+    // ─── journaling & replay ───────────────────────────────────────────
+
+    /// Start journaling into `journal`, with its epoch at the clock's
+    /// current reading (a fresh log: the next record is `t_ns = 0`).
+    pub(crate) fn attach_journal(&mut self, journal: Journal) {
+        self.jepoch = self.driver.now();
+        self.journal = Some(journal);
+    }
+
+    /// Resume journaling into a recovered log whose last record carried
+    /// `last_t_ns`: the epoch is backdated so appended records continue
+    /// the recovered timeline monotonically.
+    pub(crate) fn attach_journal_resumed(&mut self, journal: Journal, last_t_ns: u64) {
+        self.jepoch = self.driver.now() - Duration::from_nanos(last_t_ns);
+        self.journal = Some(journal);
+    }
+
+    /// Attach with a caller-pinned epoch. The channel harness fixes the
+    /// epoch *before* spawning the reactor thread (and reuses the same
+    /// instant across a staged crash), so virtual-clock advances that race
+    /// the thread start cannot skew journaled timestamps, and the whole
+    /// log shares one absolute timeline.
+    pub(crate) fn attach_journal_at(&mut self, journal: Journal, epoch: Instant) {
+        self.jepoch = epoch;
+        self.journal = Some(journal);
+    }
+
+    pub(crate) fn set_replaying(&mut self, on: bool) {
+        self.replaying = on;
+    }
+
+    /// Durably mark a process restart — appended right after a recovery
+    /// replay and before any restarted run's traffic, so a later replay
+    /// re-enacts the restart at the same point in the history.
+    pub(crate) fn journal_restart(&mut self) {
+        if self.replaying || self.journal.is_none() {
+            return;
+        }
+        self.append_journal(&JournalEvent::Restart);
+    }
+
+    /// Records in the attached journal, `None` when journaling is off.
+    pub(crate) fn journal_records(&self) -> Option<u64> {
+        self.journal.as_ref().map(|j| j.records())
+    }
+
+    /// Detach the journal (the channel harness extracts it at a staged
+    /// crash so it can force the tail durable before "rebooting").
+    pub(crate) fn take_journal(&mut self) -> Option<Journal> {
+        self.journal.take()
+    }
+
+    /// Group commit: flush (and fsync when configured) everything
+    /// appended since the last sync. Frontends call this once per mailbox
+    /// drain — right before blocking — so durability is batched off the
+    /// hot path. A sync failure disables journaling loudly rather than
+    /// taking the server down.
+    pub(crate) fn sync_journal(&mut self) {
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.sync() {
+                eprintln!("leader: journal sync failed ({e:#}); journaling disabled");
+                self.journal = None;
+            }
+        }
+    }
+
+    /// Write-ahead: journal one mailbox event before it is applied.
+    fn journal_event(&mut self, event: &Event) {
+        if self.replaying || self.journal.is_none() {
+            return;
+        }
+        let ev = match event {
+            Event::SiteFrame { site, gen, frame } => {
+                JournalEvent::SiteFrame { site: *site, gen: *gen, frame: frame.clone() }
+            }
+            Event::SiteDown { site, gen, err } => {
+                JournalEvent::SiteDown { site: *site, gen: *gen, err: err.clone() }
+            }
+            Event::ClientSubmit { client, spec, modern } => JournalEvent::ClientSubmit {
+                client: *client,
+                spec: (**spec).clone(),
+                modern: *modern,
+            },
+            Event::ClientPull { client, run } => {
+                JournalEvent::ClientPull { client: *client, run: *run }
+            }
+            Event::ClientDown { client } => JournalEvent::ClientDown { client: *client },
+            Event::CentralDone { run, result, elapsed } => JournalEvent::CentralDone {
+                run: *run,
+                result: result.clone(),
+                elapsed_ns: elapsed.as_nanos() as u64,
+            },
+            Event::Tick => JournalEvent::Tick,
+        };
+        self.append_journal(&ev);
+    }
+
+    /// Journal an annotation — a scheduling decision (admission, queue
+    /// pop, completion) replay re-derives for itself but tests and
+    /// operators read back as the durable record of what the leader did.
+    fn annotate(&mut self, ev: JournalEvent) {
+        if self.replaying || self.journal.is_none() {
+            return;
+        }
+        self.append_journal(&ev);
+    }
+
+    fn append_journal(&mut self, ev: &JournalEvent) {
+        let t_ns =
+            self.driver.now().saturating_duration_since(self.jepoch).as_nanos() as u64;
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.append(t_ns, ev) {
+                eprintln!("leader: journal write failed ({e:#}); journaling disabled");
+                self.journal = None;
+            }
+        }
+    }
+
+    /// Dismantle the reactor into its transferable state, its driver and
+    /// its worker-pool handle. The journal is *not* part of the state (it
+    /// is re-opened by the recovering frontend) and neither is the XLA
+    /// runtime handle ([`Reactor::from_parts`] re-resolves it — it is
+    /// thread-local and must not ride a state transfer across threads).
+    pub(crate) fn into_parts(mut self) -> (ReactorParts, D, CentralPool) {
+        self.journal = None;
+        let Reactor {
+            cfg,
+            opts,
+            driver,
+            pool,
+            queue,
+            active,
+            completed,
+            pulls,
+            next_run,
+            clients_done,
+            redial_backoff,
+            redial_after,
+            stats,
+            modern,
+            buckets,
+            central_mean_ns,
+            centrals_done,
+            ..
+        } = self;
+        let parts = ReactorParts {
+            cfg,
+            opts,
+            queue,
+            active,
+            completed,
+            pulls,
+            next_run,
+            clients_done,
+            redial_backoff,
+            redial_after,
+            stats,
+            modern,
+            buckets,
+            central_mean_ns,
+            centrals_done,
+        };
+        (parts, driver, pool)
+    }
+
+    /// Rebuild a reactor around replayed state with a live driver and
+    /// pool — the second half of crash recovery (the first half is
+    /// [`Reactor::replay`] against a [`ReplayDriver`]).
+    pub(crate) fn from_parts(
+        parts: ReactorParts,
+        driver: D,
+        pool: CentralPool,
+    ) -> Result<Reactor<D>> {
+        let xla = resolve_xla(&parts.cfg)?;
+        let jepoch = driver.now();
+        Ok(Reactor {
+            cfg: parts.cfg,
+            opts: parts.opts,
+            xla,
+            driver,
+            pool,
+            queue: parts.queue,
+            active: parts.active,
+            completed: parts.completed,
+            pulls: parts.pulls,
+            next_run: parts.next_run,
+            clients_done: parts.clients_done,
+            redial_backoff: parts.redial_backoff,
+            redial_after: parts.redial_after,
+            stats: parts.stats,
+            modern: parts.modern,
+            buckets: parts.buckets,
+            central_mean_ns: parts.central_mean_ns,
+            centrals_done: parts.centrals_done,
+            journal: None,
+            jepoch,
+            replaying: false,
+        })
+    }
+
+    /// Process-restart recovery (the TCP frontend): the original sites,
+    /// clients and worker pool died with the process, so every replayed
+    /// *incomplete* run restarts from scratch on the fresh links — same
+    /// spec, new machine, zeroed byte counters, a fresh `RUNSTART` on
+    /// every site — in ascending run order. Completed runs keep their
+    /// label-pull entries; stale client plumbing (pulls, dialect and
+    /// admission state keyed by dead connection ids) is dropped, and the
+    /// re-dial backoff forgets the dead session's schedule.
+    pub(crate) fn restart_active_runs(&mut self) {
+        self.pulls.clear();
+        self.modern.clear();
+        self.buckets.clear();
+        self.redial_after = None;
+        self.redial_backoff.reset();
+        let mut runs: Vec<u32> = self.active.keys().copied().collect();
+        runs.sort_unstable();
+        let n_sites = self.driver.n_sites();
+        let now = self.driver.now();
+        for run in runs {
+            // A failed send below takes a site link down, which fails every
+            // still-active run — later iterations find theirs gone.
+            let Some(entry) = self.active.get_mut(&run) else { continue };
+            let spec = entry.machine.spec().clone();
+            entry.machine = RunMachine::new(n_sites, spec, self.cfg.collect_timeout, now);
+            entry.stats = vec![LinkStats::default(); n_sites];
+            entry.started = now;
+            eprintln!("leader: restarting run {run} recovered from the journal");
+            for site in 0..n_sites {
+                if let Err(e) =
+                    self.send_run_frame(run, site, &Message::RunStart { run })
+                {
+                    self.site_down(site, &format!("{e:#}"));
+                    break; // this run just failed; later runs still restart
+                }
+            }
+        }
     }
 
     /// Whether `client_limit` clients have come and gone — the frontend's
@@ -557,6 +827,7 @@ impl<D: ServerDriver> Reactor<D> {
 
     /// Tear down client links and surrender the stats (server shutdown).
     pub(crate) fn finish(mut self) -> ServerStats {
+        self.sync_journal();
         self.driver.close_clients();
         self.stats
     }
@@ -568,6 +839,7 @@ impl<D: ServerDriver> Reactor<D> {
     /// events and a stalled run's collect_timeout must still fire on
     /// schedule — and queued jobs start whenever a slot is free.
     pub(crate) fn step(&mut self, event: Event) {
+        self.journal_event(&event);
         match event {
             Event::SiteFrame { site, gen, frame } => {
                 if gen == self.driver.link_gen(site) {
@@ -693,6 +965,14 @@ impl<D: ServerDriver> Reactor<D> {
             // pure-Rust path (the XLA runtime is thread-local, so those
             // backends compute inline like the blocking driver does).
             if self.pool.jobs.is_some() && self.cfg.backend == Backend::Native {
+                if self.replaying {
+                    // The original reactor already offloaded this central:
+                    // either its CentralDone is a later journal record, or
+                    // it is still in flight on a surviving worker (resume)
+                    // or the run will be restarted wholesale (process
+                    // restart). Re-offloading would double-compute it.
+                    return;
+                }
                 let entry = self.active.get(&run).expect("central for a live run");
                 let (cw, dim, w) = entry.machine.central_input();
                 let job = CentralJob {
@@ -856,6 +1136,7 @@ impl<D: ServerDriver> Reactor<D> {
             self.send_client(client, &Message::JobAccept { run });
         }
         self.queue.push(Job { run, client, spec });
+        self.annotate(JournalEvent::Admitted { run, client });
     }
 
     /// Refuse a submission in the client's dialect and count it. The
@@ -871,6 +1152,7 @@ impl<D: ServerDriver> Reactor<D> {
         };
         self.send_client(client, &frame);
         self.stats.rejected += 1;
+        self.annotate(JournalEvent::Rejected { client });
     }
 
     /// Start queued jobs while slots are free. Called after every event.
@@ -899,6 +1181,7 @@ impl<D: ServerDriver> Reactor<D> {
             self.redial_after = None;
             self.redial_backoff.reset();
             let job = self.queue.pop().expect("checked non-empty");
+            self.annotate(JournalEvent::Started { run: job.run });
             let n_sites = self.driver.n_sites();
             let now = self.driver.now();
             self.active.insert(
@@ -944,6 +1227,7 @@ impl<D: ServerDriver> Reactor<D> {
         let central_ns = outcome.central.as_nanos() as f64;
         self.central_mean_ns += (central_ns - self.central_mean_ns) / self.centrals_done as f64;
         self.send_client(entry.client, &Message::JobDone { run, report });
+        self.annotate(JournalEvent::Completed { run });
     }
 
     fn fail_run(&mut self, run: u32, why: &str) {
@@ -957,6 +1241,7 @@ impl<D: ServerDriver> Reactor<D> {
             Message::Reject { run, msg }
         };
         self.send_client(entry.client, &frame);
+        self.annotate(JournalEvent::Failed { run });
     }
 
     /// Fail every run whose straggler deadline has passed (the machine
@@ -1060,6 +1345,203 @@ impl<D: ServerDriver> Reactor<D> {
         let Some(pos) = self.pulls.iter().position(|p| p.run == run) else { return };
         let pull = self.pulls.remove(pos);
         self.reject_pull(pull.client, run, format!("site refused the pull: {why}"));
+    }
+}
+
+// ─── crash recovery ────────────────────────────────────────────────────────
+
+/// The reactor's transferable state, extracted by [`Reactor::into_parts`]
+/// after a journal replay and re-armed with a live driver and worker pool
+/// by [`Reactor::from_parts`]. Deliberately excludes the XLA runtime
+/// handle (thread-local; re-resolved) and the journal (re-opened by the
+/// recovering frontend).
+pub(crate) struct ReactorParts {
+    cfg: PipelineConfig,
+    opts: ServerOpts,
+    queue: JobQueue,
+    active: HashMap<u32, RunEntry>,
+    completed: VecDeque<(u32, usize)>,
+    pulls: Vec<Pull>,
+    next_run: u32,
+    clients_done: u64,
+    redial_backoff: Backoff,
+    redial_after: Option<Instant>,
+    stats: ServerStats,
+    modern: HashSet<u64>,
+    buckets: HashMap<u64, TokenBucket>,
+    central_mean_ns: f64,
+    centrals_done: u64,
+}
+
+impl ReactorParts {
+    /// Client ids the replayed history has seen — a recovering TCP
+    /// frontend numbers fresh connections above every journaled id so a
+    /// new client can never collide with a ghost.
+    pub(crate) fn max_seen_client(records: &[Record]) -> u64 {
+        records
+            .iter()
+            .map(|r| match &r.event {
+                JournalEvent::ClientSubmit { client, .. }
+                | JournalEvent::ClientPull { client, .. }
+                | JournalEvent::ClientDown { client }
+                | JournalEvent::Admitted { client, .. }
+                | JournalEvent::Rejected { client } => *client,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// The replay-time [`ServerDriver`]: a stand-in star whose link
+/// generations evolve exactly like the original driver's (up on a fresh
+/// dial, +1 per take-down, +1 per revival) while every outbound frame is
+/// swallowed — the original already delivered those bytes. Byte
+/// accounting still happens above the seam, so replayed `LinkStats`
+/// match the live run bit for bit. The clock is puppeteered record by
+/// record ([`ReplayDriver::set_now`]), which rebuilds deadlines, bucket
+/// levels and backoff windows in the journaled timeline.
+pub(crate) struct ReplayDriver {
+    gens: Vec<u64>,
+    up: Vec<bool>,
+    base: Instant,
+    now: Instant,
+    /// `true` mirrors TCP (`ensure_links` revives dead links, bumping
+    /// their generation); `false` mirrors the channel harness (a severed
+    /// link errors forever).
+    revive: bool,
+}
+
+impl ReplayDriver {
+    pub(crate) fn new(n_sites: usize, base: Instant, revive: bool) -> ReplayDriver {
+        ReplayDriver {
+            gens: vec![0; n_sites],
+            up: vec![true; n_sites],
+            base,
+            now: base,
+            revive,
+        }
+    }
+
+    /// Move the replay clock to `t_ns` past the journal epoch.
+    fn set_now(&mut self, t_ns: u64) {
+        self.now = self.base + Duration::from_nanos(t_ns);
+    }
+
+    /// Act out a journaled process restart: every link re-dialed fresh,
+    /// one incarnation past whatever the dead session left behind —
+    /// mirroring what `serve_jobs` does when it recovers.
+    fn restart_links(&mut self) {
+        for site in 0..self.gens.len() {
+            self.gens[site] += 1;
+            self.up[site] = true;
+        }
+    }
+}
+
+impl ServerDriver for ReplayDriver {
+    fn n_sites(&self) -> usize {
+        self.gens.len()
+    }
+
+    fn link_gen(&self, site: usize) -> u64 {
+        self.gens[site]
+    }
+
+    fn send_site(&mut self, site: usize, _frame: &[u8]) -> Result<()> {
+        if self.up[site] {
+            Ok(())
+        } else {
+            Err(anyhow!("site {site} link is down"))
+        }
+    }
+
+    fn take_down(&mut self, site: usize) -> bool {
+        if self.up[site] {
+            self.up[site] = false;
+            self.gens[site] += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ensure_links(&mut self) -> Result<()> {
+        for site in 0..self.up.len() {
+            if self.up[site] {
+                continue;
+            }
+            if !self.revive {
+                bail!("site {site} channel link was severed");
+            }
+            self.up[site] = true;
+            self.gens[site] += 1;
+        }
+        Ok(())
+    }
+
+    fn send_client(&mut self, _client: u64, _frame: &[u8]) -> Result<()> {
+        Ok(()) // the original reactor already delivered this frame
+    }
+
+    fn drop_client(&mut self, _client: u64) {}
+
+    fn close_clients(&mut self) {}
+
+    fn now(&self) -> Instant {
+        self.now
+    }
+}
+
+impl Reactor<ReplayDriver> {
+    /// Rebuild reactor state by re-applying a recovered journal: each
+    /// record moves the replay clock to its timestamp, annotations are
+    /// skipped (replay re-derives every scheduling decision), and the
+    /// rest step the reactor exactly as the original events did. Call
+    /// with [`Reactor::set_replaying`] on.
+    pub(crate) fn replay(&mut self, records: &[Record]) {
+        for rec in records {
+            self.driver.set_now(rec.t_ns);
+            if rec.event.is_annotation() {
+                continue;
+            }
+            if let JournalEvent::Restart = rec.event {
+                // The leader process died and came back at this point in
+                // the history: re-enact the recovery itself so the records
+                // that follow land on the same link generations and fresh
+                // machines the restarted leader had.
+                self.driver.restart_links();
+                self.restart_active_runs();
+                continue;
+            }
+            let event = match rec.event.clone() {
+                JournalEvent::ClientSubmit { client, spec, modern } => {
+                    Event::ClientSubmit { client, spec: Box::new(spec), modern }
+                }
+                JournalEvent::ClientPull { client, run } => Event::ClientPull { client, run },
+                JournalEvent::ClientDown { client } => Event::ClientDown { client },
+                JournalEvent::SiteFrame { site, gen, frame } => {
+                    Event::SiteFrame { site, gen, frame }
+                }
+                JournalEvent::SiteDown { site, gen, err } => {
+                    Event::SiteDown { site, gen, err }
+                }
+                JournalEvent::CentralDone { run, result, elapsed_ns } => Event::CentralDone {
+                    run,
+                    result,
+                    elapsed: Duration::from_nanos(elapsed_ns),
+                },
+                JournalEvent::Tick => Event::Tick,
+                other => unreachable!("handled above: {other:?}"),
+            };
+            self.step(event);
+        }
+    }
+
+    /// The replayed link generations, for the harness's resume-time
+    /// consistency check against the surviving channel driver.
+    pub(crate) fn replay_gens(&self) -> Vec<u64> {
+        self.driver.gens.clone()
     }
 }
 
@@ -1244,18 +1726,68 @@ pub fn serve_jobs(
     let timeouts = cfg.net.tcp_timeouts();
     let (tx, rx) = mpsc::channel::<Event>();
 
+    // Crash recovery happens *before* anything is dialed: open the journal
+    // (`[leader] journal_path` / `--journal`), and if it holds history,
+    // replay it against a pure stand-in driver to rebuild the queue, the
+    // incomplete runs and every counter. Interior corruption fails here,
+    // loudly — the operator decides, the server never guesses.
+    let mut journal = None;
+    let mut recovered: Option<(ReactorParts, u64)> = None;
+    let mut first_client = 1u64;
+    let mut link_gens = vec![0u64; cfg.net.sites.len()];
+    if let Some(path) = &cfg.leader.journal_path {
+        let (j, records) = Journal::open(path, cfg.leader.journal_fsync)?;
+        if !records.is_empty() {
+            eprintln!(
+                "leader: replaying {} journaled record(s) from {}",
+                records.len(),
+                path.display()
+            );
+            let pool_active = cfg.backend == Backend::Native && opts.central_workers > 0;
+            let mut replayer = Reactor::new(
+                cfg.clone(),
+                opts.clone(),
+                ReplayDriver::new(cfg.net.sites.len(), Instant::now(), true),
+                CentralPool::replay_stub(pool_active),
+            )?;
+            replayer.set_replaying(true);
+            replayer.replay(&records);
+            // Fresh connections must never collide with journaled ids: new
+            // clients number above history, new link incarnations sit one
+            // generation past the replayed ones (the Restart record makes
+            // a future replay bump the same way).
+            first_client = ReactorParts::max_seen_client(&records) + 1;
+            link_gens = replayer.replay_gens().iter().map(|g| g + 1).collect();
+            let last_t_ns = records.last().map(|r| r.t_ns).unwrap_or(0);
+            let (parts, _replay_driver, _stub) = replayer.into_parts();
+            recovered = Some((parts, last_t_ns));
+        }
+        journal = Some(j);
+    }
+
     // Dial every site concurrently in the session dialect, then hand each
     // connection's read half to a reader thread.
     let conns = tcp::dial_sites(&cfg.net.sites, &timeouts, true)?;
     let mut links = Vec::with_capacity(conns.len());
     for (site, stream) in conns.into_iter().enumerate() {
         let rd = stream.try_clone().context("clone site socket for reading")?;
-        spawn_site_reader(rd, site, 0, tx.clone());
-        links.push(SiteLink { addr: cfg.net.sites[site].clone(), stream: Some(stream), gen: 0 });
+        spawn_site_reader(rd, site, link_gens[site], tx.clone());
+        links.push(SiteLink {
+            addr: cfg.net.sites[site].clone(),
+            stream: Some(stream),
+            gen: link_gens[site],
+        });
     }
 
     let clients = Arc::new(Mutex::new(HashMap::new()));
-    spawn_acceptor(client_listener, timeouts, cfg.seed, tx.clone(), Arc::clone(&clients));
+    spawn_acceptor(
+        client_listener,
+        timeouts,
+        cfg.seed,
+        first_client,
+        tx.clone(),
+        Arc::clone(&clients),
+    );
 
     let driver = TcpDriver { timeouts, tx: tx.clone(), links, clients };
     // Centrals go to the pool only on the native backend — the XLA runtime
@@ -1263,12 +1795,36 @@ pub fn serve_jobs(
     let workers =
         if cfg.backend == Backend::Native { opts.central_workers } else { 0 };
     let pool = CentralPool::start(workers, tx.clone(), None);
-    let mut reactor = Reactor::new(cfg.clone(), opts.clone(), driver, pool)?;
+    let mut reactor = match recovered {
+        Some((parts, last_t_ns)) => {
+            let mut reactor = Reactor::from_parts(parts, driver, pool)?;
+            if let Some(j) = journal.take() {
+                reactor.attach_journal_resumed(j, last_t_ns);
+            }
+            // Mark the restart durably, then act it out: the old process's
+            // in-flight runs restart from scratch on the fresh links (their
+            // old sites, workers and clients died with it); completed runs
+            // keep serving label pulls.
+            reactor.journal_restart();
+            reactor.restart_active_runs();
+            reactor
+        }
+        None => {
+            let mut reactor = Reactor::new(cfg.clone(), opts.clone(), driver, pool)?;
+            if let Some(j) = journal.take() {
+                reactor.attach_journal(j);
+            }
+            reactor
+        }
+    };
 
     loop {
         if reactor.done() {
             return Ok(reactor.finish());
         }
+        // Group commit: everything journaled since the last wait becomes
+        // durable in one flush, right before the reactor blocks.
+        reactor.sync_journal();
         let event = match reactor.next_deadline() {
             None => rx.recv().map_err(|_| anyhow!("reactor mailbox closed"))?,
             Some(deadline) => {
@@ -1321,11 +1877,12 @@ fn spawn_acceptor(
     listener: TcpListener,
     timeouts: TcpTimeouts,
     seed: u64,
+    first_client: u64,
     tx: Sender<Event>,
     clients: Arc<Mutex<HashMap<u64, Arc<TcpStream>>>>,
 ) {
     thread::spawn(move || {
-        let mut next_client = 1u64;
+        let mut next_client = first_client;
         let mut backoff = Backoff::new(seed ^ 0x5EE1);
         loop {
             match tcp::accept_client(&listener, &timeouts) {

@@ -135,6 +135,18 @@ impl VirtualClock {
     pub fn advance(&self, d: Duration) {
         *self.offset.lock().unwrap() += d;
     }
+
+    /// Move time forward *to* `t` if it lies in the future; a `t` at or
+    /// before [`now`](VirtualClock::now) is a no-op (the clock never runs
+    /// backwards). The crash-recovery harness uses this to re-seed a
+    /// surviving clock from the journal's last timestamp, so replayed
+    /// deadlines and the resumed live timeline agree.
+    pub fn advance_to(&self, t: Instant) {
+        let mut off = self.offset.lock().unwrap();
+        if t > self.base + *off {
+            *off = t - self.base;
+        }
+    }
 }
 
 // ─── fault plan ────────────────────────────────────────────────────────────
@@ -335,6 +347,19 @@ mod tests {
         let twin = clock.clone();
         twin.advance(Duration::from_secs(5));
         assert_eq!(clock.now(), t0 + Duration::from_secs(5), "clones share time");
+    }
+
+    #[test]
+    fn virtual_clock_advance_to_is_monotone() {
+        let clock = VirtualClock::new();
+        let t0 = clock.now();
+        clock.advance_to(t0 + Duration::from_secs(3));
+        assert_eq!(clock.now(), t0 + Duration::from_secs(3));
+        // advancing to the past (or present) never rewinds the clock
+        clock.advance_to(t0 + Duration::from_secs(1));
+        assert_eq!(clock.now(), t0 + Duration::from_secs(3));
+        clock.advance_to(t0 + Duration::from_secs(3));
+        assert_eq!(clock.now(), t0 + Duration::from_secs(3));
     }
 
     fn frames_of(deliveries: &[Deliver]) -> Vec<(usize, Vec<u8>)> {

@@ -1,0 +1,456 @@
+//! Crash-safe leader: the journal + replay proof.
+//!
+//! The headline is a **crash-point sweep**: a canonical three-tenant DRR
+//! mix (one run stalled by a site fault until the straggler deadline, one
+//! run's central deterministically slow behind a gate) is journaled once
+//! uninterrupted, and then re-run once per journal record index K,
+//! crashing the reactor the moment the log holds K records and recovering
+//! it with [`ChannelHarness::crash_and_restart`]. Every client-visible
+//! outcome — accepted run ids, queue positions and ETAs, failure texts,
+//! reports with per-link byte counters, pulled labels — plus the journal's
+//! own durable pop order must equal the uninterrupted twin's, bit for bit.
+//! CI runs this file under `DSC_THREADS=1` and `=4` (docs/TESTING.md).
+//!
+//! The corruption suite mirrors `properties.rs`'s truncation-rejection
+//! sweeps at the journal layer: a file cut at *every* byte offset recovers
+//! cleanly to the longest whole-record prefix (a torn tail is what a crash
+//! legitimately leaves behind), while a flipped byte or bad magic anywhere
+//! before the tail fails loudly naming the record and byte offset.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use common::pull_global;
+use dsc::config::PipelineConfig;
+use dsc::coordinator::harness::{
+    serve_channel_journaled, ChannelLink, HarnessOpts, HarnessTicker,
+};
+use dsc::coordinator::journal::{recover, JournalEvent};
+use dsc::coordinator::server::{JobClient, ServerOpts};
+use dsc::coordinator::{run_pipeline, spec_from_config};
+use dsc::data::gmm;
+use dsc::data::scenario::{self, Scenario, SitePart};
+use dsc::data::Dataset;
+use dsc::net::channel::Fault;
+use dsc::net::{JobSpec, LinkReport};
+use dsc::spectral::Bandwidth;
+
+fn workload() -> Vec<SitePart> {
+    // Small on purpose: the sweep replays the whole mix once per record.
+    let ds = gmm::paper_mixture_10d(600, 0.1, 21);
+    scenario::split(&ds, Scenario::D3, 2, 21)
+}
+
+fn datasets(parts: &[SitePart]) -> Vec<Dataset> {
+    parts.iter().map(|p| p.data.clone()).collect()
+}
+
+fn cfg_with_seed(seed: u64) -> PipelineConfig {
+    PipelineConfig {
+        total_codes: 32,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed,
+        ..Default::default()
+    }
+}
+
+fn spec(seed: u64, priority: u32) -> JobSpec {
+    let mut spec = spec_from_config(&cfg_with_seed(seed));
+    spec.priority = priority;
+    spec
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dsc-jr-{}-{tag}.journal", std::process::id()))
+}
+
+/// Two-phase central gate (same shape as `channel_harness.rs`): the worker
+/// announces it entered run 2's central, then blocks until the script
+/// opens it.
+struct Gate {
+    entered: Mutex<bool>,
+    entered_cv: Condvar,
+    open: Mutex<bool>,
+    open_cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate {
+            entered: Mutex::new(false),
+            entered_cv: Condvar::new(),
+            open: Mutex::new(false),
+            open_cv: Condvar::new(),
+        })
+    }
+
+    fn enter_and_wait(&self) {
+        *self.entered.lock().unwrap() = true;
+        self.entered_cv.notify_all();
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.open_cv.wait(open).unwrap();
+        }
+    }
+
+    fn wait_entered(&self) {
+        let mut entered = self.entered.lock().unwrap();
+        while !*entered {
+            entered = self.entered_cv.wait(entered).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.open_cv.notify_all();
+    }
+}
+
+/// Everything a client of the canonical mix can observe, in one
+/// `PartialEq` bundle. `central_ns` is deliberately absent: it is real
+/// compute wall time (the one nondeterministic field a report carries);
+/// everything else — including the virtual `wall_ns` and the modeled
+/// per-link counters — must reproduce exactly.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    run1: u32,
+    err1: String,
+    /// `(run, position, eta_ns)` of the four tracked accepts, send order.
+    tracked: Vec<(u32, u32, u64)>,
+    run6: u32,
+    /// `(run, n_codes, sigma, wall_ns, per_site)` per completed run.
+    reports: Vec<(u32, u32, f64, u64, Vec<LinkReport>)>,
+    /// `(run, global labels)` per completed run.
+    labels: Vec<(u32, Vec<u16>)>,
+}
+
+/// The canonical three-tenant mix, driven through three already-minted
+/// clients. Tenant A speaks the legacy dialect at priority 1 and its first
+/// run stalls (both sites' run-1 frames are swallowed — only the straggler
+/// deadline catches it); tenants B and C speak the modern dialect at DRR
+/// weights 2 and 4; run 2's central blocks on `gate` until the script has
+/// proven it stuck. Every client action is sequential, so the reactor's
+/// event order — and with it the journal — is a pure function of this
+/// script.
+fn drive_script(
+    clients: Vec<JobClient<ChannelLink>>,
+    ticker: HarnessTicker,
+    gate: Arc<Gate>,
+    parts: Arc<Vec<SitePart>>,
+) -> Outcome {
+    let mut clients = clients.into_iter();
+    let (a, b, c) = (
+        clients.next().unwrap(),
+        clients.next().unwrap(),
+        clients.next().unwrap(),
+    );
+    let run1 = a.submit(&spec(21, JobSpec::DEFAULT_PRIORITY)).unwrap();
+    let b1 = b.submit_tracked(&spec(33, 2)).unwrap();
+    let c1 = c.submit_tracked(&spec(55, 4)).unwrap();
+    let b2 = b.submit_tracked(&spec(34, 2)).unwrap();
+    let c2 = c.submit_tracked(&spec(56, 4)).unwrap();
+    let run6 = a.submit(&spec(22, JobSpec::DEFAULT_PRIORITY)).unwrap();
+
+    // Past run 1's collect deadline: it fails, freeing the single job slot
+    // for the DRR backlog built up above.
+    ticker.tick(Duration::from_secs(6));
+    let err1 = format!("{:#}", a.await_done(run1).unwrap_err());
+
+    // Run 2's central really blocked once, then history may flow.
+    gate.wait_entered();
+    gate.open();
+
+    let mut reports = Vec::new();
+    let mut labels = Vec::new();
+    for (client, run) in
+        [(&b, b1.run), (&c, c1.run), (&b, b2.run), (&c, c2.run), (&a, run6)]
+    {
+        let report = client.await_done(run).unwrap();
+        labels.push((run, pull_global(client, run, &report, &parts)));
+        reports.push((run, report.n_codes, report.sigma, report.wall_ns, report.per_site));
+    }
+    drop((a, b, c)); // all three tenants gone: the server may shut down
+    Outcome {
+        run1,
+        err1,
+        tracked: vec![
+            (b1.run, b1.position, b1.eta_ns),
+            (c1.run, c1.position, c1.eta_ns),
+            (b2.run, b2.position, b2.eta_ns),
+            (c2.run, c2.position, c2.eta_ns),
+        ],
+        run6,
+        reports,
+        labels,
+    }
+}
+
+fn mix_cfg() -> PipelineConfig {
+    let mut cfg = cfg_with_seed(0);
+    cfg.collect_timeout = Duration::from_secs(5); // virtual seconds
+    cfg.leader.fair_queue = true;
+    cfg
+}
+
+fn mix_opts(gate: &Arc<Gate>) -> HarnessOpts {
+    let hook = {
+        let gate = Arc::clone(gate);
+        Arc::new(move |run: u32| {
+            if run == 2 {
+                gate.enter_and_wait();
+            }
+        })
+    };
+    HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: true,
+            central_workers: 1,
+            client_limit: Some(3),
+        },
+        faults: vec![
+            Fault::DropRunFrames { site: 0, run: 1 },
+            Fault::DropRunFrames { site: 1, run: 1 },
+        ],
+        central_hook: Some(hook),
+    }
+}
+
+/// What one full execution of the mix left behind, journal included.
+struct Executed {
+    outcome: Outcome,
+    stats: (u64, u64, u64),
+    sessions: Vec<(usize, usize)>,
+    /// Queue pop order, from the durable `Started` annotations.
+    started: Vec<u32>,
+    /// `Admitted` run order and `Failed`/`Completed` orders.
+    admitted: Vec<u32>,
+    finished: Vec<(u32, bool)>,
+    records: u64,
+}
+
+/// Run the mix once against `journal_path`, crashing after `crash_after`
+/// records (and recovering) when given.
+fn execute(parts: &Arc<Vec<SitePart>>, journal_path: &PathBuf, crash_after: Option<u64>) -> Executed {
+    let _ = fs::remove_file(journal_path);
+    let gate = Gate::new();
+    let mut harness = serve_channel_journaled(
+        datasets(parts),
+        &mix_cfg(),
+        mix_opts(&gate),
+        journal_path,
+        crash_after,
+    )
+    .unwrap();
+    let clients = vec![harness.client(), harness.client(), harness.client()];
+    let ticker = harness.ticker();
+    let script = {
+        let parts = Arc::clone(parts);
+        let gate = Arc::clone(&gate);
+        std::thread::spawn(move || drive_script(clients, ticker, gate, parts))
+    };
+    if crash_after.is_some() {
+        // Blocks until the reactor hits its crash point mid-script, then
+        // replays the journal and resumes against the surviving world.
+        harness.crash_and_restart().unwrap();
+    }
+    let outcome = script.join().expect("script thread panicked");
+    let (stats, outcomes) = harness.join().unwrap();
+
+    let recovered = recover(journal_path).unwrap();
+    assert!(!recovered.torn, "a synced journal must not have a torn tail");
+    let mut started = Vec::new();
+    let mut admitted = Vec::new();
+    let mut finished = Vec::new();
+    for rec in &recovered.records {
+        match rec.event {
+            JournalEvent::Started { run } => started.push(run),
+            JournalEvent::Admitted { run, .. } => admitted.push(run),
+            JournalEvent::Completed { run } => finished.push((run, true)),
+            JournalEvent::Failed { run } => finished.push((run, false)),
+            _ => {}
+        }
+    }
+    Executed {
+        outcome,
+        stats: (stats.completed, stats.failed, stats.rejected),
+        sessions: outcomes.iter().map(|o| (o.runs_served, o.aborted_runs)).collect(),
+        started,
+        admitted,
+        finished,
+        records: recovered.records.len() as u64,
+    }
+}
+
+/// The headline: for every journal record index K of the canonical mix,
+/// crash-after-K + replay equals the uninterrupted execution — labels,
+/// per-link byte counters, queue pop order, and every client-visible
+/// reply, bit for bit.
+#[test]
+fn crash_point_sweep_replays_bit_identically() {
+    let parts = Arc::new(workload());
+    let path = temp_path("sweep");
+
+    let reference = execute(&parts, &path, None);
+    // Anchor the reference against the in-process pipeline: journaling on
+    // is not allowed to change what a job computes.
+    let base = run_pipeline(&parts, &cfg_with_seed(33)).unwrap();
+    let run2_labels =
+        &reference.outcome.labels.iter().find(|(run, _)| *run == 2).unwrap().1;
+    assert_eq!(run2_labels, &base.labels, "journaled run 2 vs pipeline");
+    assert_eq!(reference.stats, (5, 1, 0));
+    assert_eq!(reference.admitted, vec![1, 2, 3, 4, 5, 6]);
+    assert!(reference.records > 0);
+
+    for k in 1..=reference.records {
+        let replayed = execute(&parts, &path, Some(k));
+        assert_eq!(replayed.outcome, reference.outcome, "crash at record {k}");
+        assert_eq!(replayed.stats, reference.stats, "crash at record {k}: stats");
+        assert_eq!(
+            replayed.sessions, reference.sessions,
+            "crash at record {k}: site sessions"
+        );
+        assert_eq!(
+            replayed.started, reference.started,
+            "crash at record {k}: queue pop order"
+        );
+        assert_eq!(replayed.admitted, reference.admitted, "crash at record {k}");
+        assert_eq!(replayed.finished, reference.finished, "crash at record {k}");
+        assert_eq!(
+            replayed.records, reference.records,
+            "crash at record {k}: journal length"
+        );
+    }
+    let _ = fs::remove_file(&path);
+}
+
+// ─── journal corruption ────────────────────────────────────────────────────
+
+/// A single completed run's journal, for byte-level abuse.
+fn small_journal(path: &PathBuf) -> Vec<u8> {
+    let _ = fs::remove_file(path);
+    let ds = gmm::paper_mixture_10d(300, 0.1, 7);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 7);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 4,
+            allow_label_pull: false,
+            client_limit: Some(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut harness =
+        serve_channel_journaled(datasets(&parts), &cfg_with_seed(7), opts, path, None).unwrap();
+    let client = harness.client();
+    let run = client.submit(&spec(7, JobSpec::DEFAULT_PRIORITY)).unwrap();
+    client.await_done(run).unwrap();
+    drop(client);
+    harness.join().unwrap();
+    fs::read(path).unwrap()
+}
+
+/// Byte offsets where each record ends (the first entry is the end of the
+/// magic — a zero-record journal).
+fn record_bounds(bytes: &[u8]) -> Vec<usize> {
+    let mut bounds = vec![8usize];
+    let mut pos = 8;
+    while pos < bytes.len() {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 8 + len;
+        bounds.push(pos);
+    }
+    assert_eq!(pos, bytes.len(), "journal must end on a record boundary");
+    bounds
+}
+
+/// Truncating the file at *every* byte offset — the only damage a crash
+/// can legitimately inflict — recovers cleanly to the longest
+/// whole-record prefix, with `torn` flagged exactly when the cut is not
+/// on a record boundary (mirrors the `properties.rs` truncation sweeps).
+#[test]
+fn truncation_at_every_offset_recovers_the_prefix() {
+    let path = temp_path("torn");
+    let bytes = small_journal(&path);
+    let bounds = record_bounds(&bytes);
+    let full = recover(&path).unwrap();
+    assert!(full.records.len() >= 8, "mix too small to be interesting");
+
+    let cut = temp_path("torn-cut");
+    for off in 0..bytes.len() {
+        fs::write(&cut, &bytes[..off]).unwrap();
+        let rec = recover(&cut).unwrap_or_else(|e| {
+            panic!("cut at byte {off} must recover cleanly, got: {e:#}")
+        });
+        let whole = bounds.iter().filter(|&&b| b <= off).count().saturating_sub(1);
+        assert_eq!(rec.records.len(), whole, "records after a cut at byte {off}");
+        assert_eq!(
+            rec.records.as_slice(),
+            &full.records[..whole],
+            "the surviving prefix is bit-identical (cut at byte {off})"
+        );
+        let boundary = off == 0 || bounds.contains(&off);
+        assert_eq!(rec.torn, !boundary, "torn flag for a cut at byte {off}");
+    }
+    let _ = fs::remove_file(&path);
+    let _ = fs::remove_file(&cut);
+}
+
+/// Interior damage is *not* a crash artifact — a flipped byte or foreign
+/// header means the disk or an operator lied, and recovery must refuse
+/// loudly, naming the record and byte offset, rather than silently
+/// resurrecting half a history.
+#[test]
+fn interior_corruption_fails_loudly_with_the_offset() {
+    let path = temp_path("corrupt");
+    let bytes = small_journal(&path);
+    let bounds = record_bounds(&bytes);
+    let mangled = temp_path("corrupt-mangled");
+
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    fs::write(&mangled, &bad).unwrap();
+    let msg = format!("{:#}", recover(&mangled).unwrap_err());
+    assert!(msg.contains("bad journal magic at byte offset 0"), "{msg}");
+
+    // a flipped payload byte in an interior record: CRC catches it and the
+    // error names exactly which record at which offset
+    for rec_idx in [0, full_midpoint(&bounds)] {
+        let start = bounds[rec_idx];
+        let mut bad = bytes.clone();
+        bad[start + 8] ^= 0xFF; // first payload byte of that record
+        fs::write(&mangled, &bad).unwrap();
+        let msg = format!("{:#}", recover(&mangled).unwrap_err());
+        assert!(
+            msg.contains(&format!("CRC mismatch in record {rec_idx} at byte offset {start}")),
+            "record {rec_idx}: {msg}"
+        );
+    }
+
+    // an absurd length field mid-file is corruption, not a torn tail
+    let start = bounds[1];
+    let mut bad = bytes.clone();
+    bad[start..start + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    fs::write(&mangled, &bad).unwrap();
+    let msg = format!("{:#}", recover(&mangled).unwrap_err());
+    assert!(
+        msg.contains(&format!("record 1 at byte offset {start}")),
+        "length-field corruption: {msg}"
+    );
+
+    let _ = fs::remove_file(&path);
+    let _ = fs::remove_file(&mangled);
+}
+
+/// An interior record index, away from both ends.
+fn full_midpoint(bounds: &[usize]) -> usize {
+    (bounds.len().saturating_sub(1)) / 2
+}

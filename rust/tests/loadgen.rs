@@ -5,7 +5,7 @@
 //! `bench_out/BENCH_jobserver.json`) is built on; `docs/TESTING.md`
 //! explains how to read the numbers.
 
-use dsc::coordinator::loadgen::{run_channel_load, LoadMix};
+use dsc::coordinator::loadgen::{run_channel_load, run_channel_load_journaled, LoadMix};
 
 /// Determinism is the load generator's whole contract: virtual time,
 /// sequenced centrals and up-front submission make the report a pure
@@ -62,4 +62,32 @@ fn drr_beats_fifo_on_the_skewed_mix() {
     assert!(fifo.utilization > 0.999 && drr.utilization > 0.999);
     assert!(fifo.throughput_jobs_per_sec > 0.0);
     assert_eq!(fifo.makespan_ns, drr.makespan_ns);
+}
+
+/// Journaling spends wall time only — the virtual-time report must not
+/// move by a single bit when the reactor event-sources the run, and the
+/// journal it leaves behind must recover cleanly with every run's full
+/// admit→start→complete life cycle on record.
+#[test]
+fn journaling_does_not_move_the_report() {
+    let path = std::env::temp_dir()
+        .join(format!("dsc-loadgen-journal-{}.journal", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let plain = run_channel_load(&LoadMix::skewed_three(true)).unwrap();
+    let journaled =
+        run_channel_load_journaled(&LoadMix::skewed_three(true), &path, false).unwrap();
+    assert_eq!(journaled, plain, "journaling moved the deterministic report");
+
+    let recovered = dsc::coordinator::journal::recover(&path).unwrap();
+    assert!(!recovered.torn);
+    let count = |f: fn(&dsc::coordinator::journal::JournalEvent) -> bool| {
+        recovered.records.iter().filter(|r| f(&r.event)).count()
+    };
+    use dsc::coordinator::journal::JournalEvent as E;
+    assert_eq!(count(|e| matches!(e, E::Admitted { .. })), 21);
+    assert_eq!(count(|e| matches!(e, E::Started { .. })), 21);
+    assert_eq!(count(|e| matches!(e, E::Completed { .. })), 21);
+    assert_eq!(count(|e| matches!(e, E::Failed { .. })), 0);
+    let _ = std::fs::remove_file(&path);
 }
