@@ -55,8 +55,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::{Backend, PipelineConfig};
 use crate::data::Dataset;
-use crate::net::channel::{self, Deliver, Fault, FaultPlan, VirtualClock};
-use crate::net::SiteNet;
+use crate::net::channel::{self, Deliver, Fault, FaultPlan, HangupSite, VirtualClock};
+use crate::net::{SiteNet, SiteTransport};
 use crate::site::{self, SessionOutcome};
 
 use super::journal::Journal;
@@ -78,6 +78,13 @@ pub struct HarnessOpts {
     /// Called by a central worker with the run id before computing — block
     /// here to make one run's central arbitrarily slow, deterministically.
     pub central_hook: Option<CentralHook>,
+    /// Scripted site hangups, `(site, hang_before)`: site's transport is
+    /// wrapped in a [`HangupSite`] that drops its downlink just before its
+    /// `hang_before`-th uplink send. Unlike a fault-plan `Drop` (a severed
+    /// *uplink*, journaled as a `SiteDown` event), this makes the reactor
+    /// itself hit a failed downlink send mid-step — the lever for testing
+    /// journaled `SendFail` records.
+    pub hangups: Vec<(usize, u64)>,
 }
 
 /// In-process client link: frames out are decoded into reactor events by
@@ -293,9 +300,18 @@ fn serve_channel_inner(
     // for a job-serving leader, limits from `[site]` as in the daemon.
     let limits = cfg.site;
     let mut sites = Vec::with_capacity(n_sites);
-    for (end, data) in site_ends.into_iter().zip(datasets) {
+    for (site_id, (end, data)) in site_ends.into_iter().zip(datasets).enumerate() {
+        let hang = opts
+            .hangups
+            .iter()
+            .find(|&&(s, _)| s == site_id)
+            .map(|&(_, hang_before)| hang_before);
         sites.push(thread::spawn(move || {
-            let net = SiteNet::over(Box::new(end));
+            let transport: Box<dyn SiteTransport> = match hang {
+                Some(hang_before) => Box::new(HangupSite::over(end, hang_before)),
+                None => Box::new(end),
+            };
+            let net = SiteNet::over(transport);
             site::session(&net, &data, None, limits, |_| {})
         }));
     }
@@ -390,7 +406,16 @@ fn serve_channel_inner(
             }
             loop {
                 if let Some(k) = crash_after {
-                    if reactor.journal_records().unwrap_or(0) >= k {
+                    // A vanished journal means journaling self-disabled on
+                    // a write failure: the crash point can never be
+                    // reached, so fail loudly instead of serving forever.
+                    let Some(records) = reactor.journal_records() else {
+                        bail!(
+                            "the journal disabled itself before the staged crash \
+                             point ({k} records) was reached"
+                        );
+                    };
+                    if records >= k {
                         // Staged crash. The crash model is "every appended
                         // record survives", so force the tail durable
                         // (loudly — a sync failure must not masquerade as

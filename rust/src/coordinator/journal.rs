@@ -26,9 +26,11 @@
 //! `crc` is CRC-32 (IEEE) over `payload`; `t_ns` is the reactor clock at
 //! append time, as nanoseconds since the journal's epoch (virtual time in
 //! the channel harness, real time under TCP) — replay re-seeds clocks,
-//! deadlines and token buckets from it. Kinds 1–8 are replayable reactor
+//! deadlines and token buckets from it. Kinds 1–9 are replayable reactor
 //! events (8 marks a process restart, so link generations and run
-//! restarts carry across crashes); kinds ≥ 16 are **annotations** (queue
+//! restarts carry across crashes; 9 records a *local* send failure by its
+//! send ordinal, so replay re-fails the identical send — see
+//! `server.rs`); kinds ≥ 16 are **annotations** (queue
 //! admissions/rejections,
 //! run starts/completions) that replay skips but tests and operators use
 //! as a durable record of scheduling decisions.
@@ -53,6 +55,17 @@
 //! the hot path stays off the disk's critical path. The window this opens
 //! (events acknowledged but not yet synced) is documented in
 //! `docs/DEPLOY.md`.
+//!
+//! ## Poisoning
+//!
+//! When an append or sync fails mid-flight the leader keeps serving but
+//! stops journaling — and the log on disk, a perfectly valid-looking
+//! prefix of the history, must never be mistaken for the whole record on
+//! a later restart. [`Journal::poison`] moves the file aside
+//! (`<path>.poisoned`) and leaves a poison marker at the journal path, so
+//! [`recover`] fails loudly ("journal was poisoned…") instead of silently
+//! resurrecting a stale queue. Every step is best-effort (the disk is
+//! already failing) and logged.
 
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Seek, SeekFrom, Write};
@@ -74,6 +87,13 @@ const MAX_RECORD: u32 = 1 << 30;
 /// Smallest legal payload: `t_ns:u64 kind:u8` with an empty body.
 const MIN_RECORD: u32 = 9;
 
+/// The poison marker is a record header that can never be real: a length
+/// no record may claim, paired with a fixed sentinel where the CRC goes.
+/// [`Journal::poison`] writes it when journaling is disabled after a
+/// write failure; [`recover`] refuses the file loudly on sight of it.
+const POISON_LEN: u32 = u32::MAX;
+const POISON_CRC: u32 = 0x504F_4953; // "POIS"
+
 // Replayable reactor events.
 const K_CLIENT_SUBMIT: u8 = 1;
 const K_CLIENT_PULL: u8 = 2;
@@ -83,6 +103,7 @@ const K_SITE_DOWN: u8 = 5;
 const K_CENTRAL_DONE: u8 = 6;
 const K_TICK: u8 = 7;
 const K_RESTART: u8 = 8;
+const K_SEND_FAIL: u8 = 9;
 // Annotations (skipped by state replay).
 const K_ADMITTED: u8 = 16;
 const K_REJECTED: u8 = 17;
@@ -117,6 +138,14 @@ pub enum JournalEvent {
     /// link generations and fresh run machines the restarted leader had —
     /// which is what keeps a twice-crashed journal replayable.
     Restart,
+    /// A *local* send to a site link failed (TCP broken pipe, severed
+    /// channel) while processing the record before this one. `seq` is the
+    /// reactor's send ordinal — every outbound site frame increments it,
+    /// and it resets to 0 at each `Restart` — so replay, whose puppet
+    /// driver's sends otherwise always succeed, re-fails exactly this
+    /// send and takes the link down at the identical point of the
+    /// history. Written write-ahead of the takedown it triggers.
+    SendFail { seq: u64, site: usize, err: String },
     /// Annotation: a submit was admitted to the queue as `run`.
     Admitted { run: u32, client: u64 },
     /// Annotation: a submit was refused.
@@ -249,6 +278,14 @@ fn encode_payload(t_ns: u64, ev: &JournalEvent) -> Vec<u8> {
         }
         JournalEvent::Tick => w.u8(K_TICK),
         JournalEvent::Restart => w.u8(K_RESTART),
+        JournalEvent::SendFail { seq, site, err } => {
+            w.u8(K_SEND_FAIL);
+            w.u64(*seq);
+            w.u32(*site as u32);
+            let bytes = err.as_bytes();
+            w.u32(bytes.len() as u32);
+            w.buf.extend_from_slice(bytes);
+        }
         JournalEvent::Admitted { run, client } => {
             w.u8(K_ADMITTED);
             w.u32(*run);
@@ -351,6 +388,12 @@ fn decode_payload(payload: &[u8]) -> Result<Record> {
         }
         K_TICK => JournalEvent::Tick,
         K_RESTART => JournalEvent::Restart,
+        K_SEND_FAIL => {
+            let seq = r.u64()?;
+            let site = r.u32()? as usize;
+            let err = take_text(&mut r, "send-failure error")?;
+            JournalEvent::SendFail { seq, site, err }
+        }
         K_ADMITTED => {
             let run = r.u32()?;
             let client = r.u64()?;
@@ -415,6 +458,16 @@ pub fn recover(path: &Path) -> Result<Recovered> {
         }
         let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
         let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        if len == POISON_LEN && crc == POISON_CRC {
+            bail!(
+                "{}: journal was poisoned after an append/sync failure (marker at byte \
+                 offset {pos}, after {} record(s)) — its history is incomplete; inspect \
+                 {}.poisoned and remove both files to start fresh",
+                path.display(),
+                records.len(),
+                path.display()
+            );
+        }
         if len < MIN_RECORD || len > MAX_RECORD {
             bail!(
                 "{}: corrupt journal: record {} at byte offset {pos} claims {len} payload \
@@ -543,6 +596,72 @@ impl Journal {
     pub fn path(&self) -> &Path {
         &self.path
     }
+
+    /// Render this log unrecoverable-by-accident — called when a frontend
+    /// disables journaling after an append/sync failure. Without this the
+    /// on-disk file is a valid-looking *prefix* of the history, and a
+    /// later restart would replay it as if it were the whole record,
+    /// silently resurrecting a stale queue. The file is moved aside to
+    /// `<path>.poisoned` (forensics) and the journal path is left holding
+    /// a poison marker, so [`recover`] — and with it `Journal::open` on
+    /// the next restart — fails loudly naming the cause. Buffered,
+    /// unflushed records are discarded (exactly the crash contract: not
+    /// synced, not history). Every step is best-effort on an
+    /// already-failing disk, and logged rather than fatal.
+    pub fn poison(self) {
+        let Journal { w, path, .. } = self;
+        // Close the fd without flushing: the buffer's tail may be a
+        // half-written record from the very failure that got us here.
+        let (file, _discarded) = w.into_parts();
+        drop(file);
+        let mut aside = path.clone().into_os_string();
+        aside.push(".poisoned");
+        let aside = PathBuf::from(aside);
+        match fs::rename(&path, &aside) {
+            Ok(()) => {
+                eprintln!(
+                    "leader: journal moved aside to {} after a write failure",
+                    aside.display()
+                );
+                let marked = File::create(&path).and_then(|mut f| {
+                    f.write_all(&MAGIC)?;
+                    f.write_all(&POISON_LEN.to_le_bytes())?;
+                    f.write_all(&POISON_CRC.to_le_bytes())?;
+                    f.sync_data()
+                });
+                if let Err(e) = marked {
+                    eprintln!(
+                        "leader: could not leave a poison marker at {} ({e}); a restart \
+                         with --journal will start from an empty log",
+                        path.display()
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!(
+                    "leader: could not move the failed journal aside ({e}); poisoning it \
+                     in place"
+                );
+                // Appending the marker after a torn record would hide it
+                // behind clean torn-tail truncation: cut the file back to
+                // its last whole record first, where recover() will look.
+                let marked = recover(&path).and_then(|rec| {
+                    let mut f = OpenOptions::new().write(true).open(&path)?;
+                    f.set_len(rec.valid_bytes.max(MAGIC.len() as u64))?;
+                    f.seek(SeekFrom::End(0))?;
+                    f.write_all(&POISON_LEN.to_le_bytes())?;
+                    f.write_all(&POISON_CRC.to_le_bytes())?;
+                    f.sync_data()?;
+                    Ok(())
+                });
+                if let Err(e) = marked {
+                    // recover() erroring means the file already fails
+                    // loudly on its own; anything else is logged.
+                    eprintln!("leader: could not poison journal {} ({e:#})", path.display());
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -591,6 +710,7 @@ mod tests {
             },
             JournalEvent::Tick,
             JournalEvent::Restart,
+            JournalEvent::SendFail { seq: 17, site: 1, err: "site 1 hung up".into() },
             JournalEvent::Admitted { run: 7, client: 1 },
             JournalEvent::Rejected { client: 3 },
             JournalEvent::Started { run: 7 },
@@ -737,5 +857,35 @@ mod tests {
         fs::write(&path, &bad).unwrap();
         assert!(recover(&path).is_err());
         let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn poisoned_journal_fails_loudly_and_keeps_history_aside() {
+        let dir = std::env::temp_dir().join(format!("dsc-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("poison.journal");
+        let aside = dir.join("poison.journal.poisoned");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(&aside);
+
+        let (mut j, _) = Journal::open(&path, false).unwrap();
+        j.append(1, &JournalEvent::Tick).unwrap();
+        j.append(2, &JournalEvent::ClientDown { client: 4 }).unwrap();
+        j.sync().unwrap();
+        j.poison();
+
+        // The journal path now refuses recovery — and so Journal::open —
+        // loudly, naming the poisoning; a restart cannot silently replay
+        // the truncated history.
+        let err = format!("{:#}", recover(&path).unwrap_err());
+        assert!(err.contains("poisoned"), "{err}");
+        assert!(Journal::open(&path, false).is_err());
+
+        // The history itself survives aside, intact, for forensics.
+        let rec = recover(&aside).unwrap();
+        assert_eq!(rec.records.len(), 2);
+        assert_eq!(rec.records[0].t_ns, 1);
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(&aside);
     }
 }

@@ -351,6 +351,7 @@ fn run_channel_load_inner(mix: &LoadMix, journal: Option<(&Path, bool)>) -> Resu
         },
         faults: Vec::new(),
         central_hook: Some(hook),
+        hangups: vec![],
     };
     let mut harness = match journal {
         Some((path, _)) => serve_channel_journaled(load_workload(mix.seed), &cfg, opts, path, None)?,

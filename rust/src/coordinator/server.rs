@@ -486,6 +486,14 @@ struct Pull {
 /// Completed runs the leader remembers for label pulls.
 const COMPLETED_CAP: usize = 64;
 
+/// One journaled [`JournalEvent::SendFail`], queued for replay-time
+/// re-injection at its send ordinal.
+struct ReplayFail {
+    seq: u64,
+    site: usize,
+    err: String,
+}
+
 /// The transport-agnostic job-server core: run lifecycle, the job queue,
 /// per-run byte accounting, straggler deadlines, the pull plane — driven
 /// by [`Event`]s a frontend feeds it off its mailbox. See the module docs
@@ -528,10 +536,24 @@ pub(crate) struct Reactor<D: ServerDriver> {
     /// built without journaling.
     journal: Option<Journal>,
     /// The journal's epoch on this reactor's clock — record `t_ns` values
-    /// are offsets from it, so replay can rebuild every `Instant` (run
-    /// deadlines, token-bucket levels, backoff windows) in the original
-    /// timeline.
+    /// are offsets from it (plus `jbase_ns`), so replay can rebuild every
+    /// `Instant` (run deadlines, token-bucket levels, backoff windows) in
+    /// the original timeline.
     jepoch: Instant,
+    /// Added to every appended timestamp. 0 for a fresh log; the last
+    /// recovered `t_ns` when resuming one, so the log's timeline continues
+    /// monotonically. Kept as an offset rather than backdating `jepoch`:
+    /// `Instant` subtraction panics on underflow, and after a reboot the
+    /// monotonic clock restarts — a journal spanning longer than current
+    /// uptime would make recovery itself panic.
+    jbase_ns: u64,
+    /// Ordinal of the next outbound site frame (see
+    /// [`JournalEvent::SendFail`]); resets to 0 at a process restart.
+    send_seq: u64,
+    /// While replaying: journaled send failures of the current process
+    /// incarnation, in order — [`Reactor::send_site_frame`] re-fails the
+    /// send whose ordinal matches the front entry.
+    replay_fail: VecDeque<ReplayFail>,
     /// Replaying a recovered journal: suppress re-journaling (the records
     /// being applied are already on disk), let the [`ReplayDriver`]
     /// swallow re-sends, and skip re-offloading centrals — their
@@ -577,6 +599,9 @@ impl<D: ServerDriver> Reactor<D> {
             centrals_done: 0,
             journal: None,
             jepoch,
+            jbase_ns: 0,
+            send_seq: 0,
+            replay_fail: VecDeque::new(),
             replaying: false,
         })
     }
@@ -587,14 +612,19 @@ impl<D: ServerDriver> Reactor<D> {
     /// current reading (a fresh log: the next record is `t_ns = 0`).
     pub(crate) fn attach_journal(&mut self, journal: Journal) {
         self.jepoch = self.driver.now();
+        self.jbase_ns = 0;
         self.journal = Some(journal);
     }
 
     /// Resume journaling into a recovered log whose last record carried
-    /// `last_t_ns`: the epoch is backdated so appended records continue
-    /// the recovered timeline monotonically.
+    /// `last_t_ns`: appended records continue the recovered timeline
+    /// monotonically from there. The continuation is an additive offset on
+    /// a fresh epoch, *not* a backdated `Instant` — backdating would panic
+    /// on underflow whenever the journal spans longer than the monotonic
+    /// clock has been running (e.g. any recovery after a reboot).
     pub(crate) fn attach_journal_resumed(&mut self, journal: Journal, last_t_ns: u64) {
-        self.jepoch = self.driver.now() - Duration::from_nanos(last_t_ns);
+        self.jepoch = self.driver.now();
+        self.jbase_ns = last_t_ns;
         self.journal = Some(journal);
     }
 
@@ -605,6 +635,7 @@ impl<D: ServerDriver> Reactor<D> {
     /// log shares one absolute timeline.
     pub(crate) fn attach_journal_at(&mut self, journal: Journal, epoch: Instant) {
         self.jepoch = epoch;
+        self.jbase_ns = 0;
         self.journal = Some(journal);
     }
 
@@ -620,6 +651,9 @@ impl<D: ServerDriver> Reactor<D> {
             return;
         }
         self.append_journal(&JournalEvent::Restart);
+        // The send ordinal restarts with the process; replay mirrors this
+        // reset when it consumes the Restart record.
+        self.send_seq = 0;
     }
 
     /// Records in the attached journal, `None` when journaling is off.
@@ -637,12 +671,15 @@ impl<D: ServerDriver> Reactor<D> {
     /// appended since the last sync. Frontends call this once per mailbox
     /// drain — right before blocking — so durability is batched off the
     /// hot path. A sync failure disables journaling loudly rather than
-    /// taking the server down.
+    /// taking the server down; the on-disk log is poisoned on the way out
+    /// so a later recovery cannot mistake the truncated history for a
+    /// complete one (see [`Journal::poison`]).
     pub(crate) fn sync_journal(&mut self) {
-        if let Some(j) = self.journal.as_mut() {
-            if let Err(e) = j.sync() {
-                eprintln!("leader: journal sync failed ({e:#}); journaling disabled");
-                self.journal = None;
+        let Some(j) = self.journal.as_mut() else { return };
+        if let Err(e) = j.sync() {
+            eprintln!("leader: journal sync failed ({e:#}); journaling disabled");
+            if let Some(j) = self.journal.take() {
+                j.poison();
             }
         }
     }
@@ -689,12 +726,13 @@ impl<D: ServerDriver> Reactor<D> {
     }
 
     fn append_journal(&mut self, ev: &JournalEvent) {
-        let t_ns =
-            self.driver.now().saturating_duration_since(self.jepoch).as_nanos() as u64;
-        if let Some(j) = self.journal.as_mut() {
-            if let Err(e) = j.append(t_ns, ev) {
-                eprintln!("leader: journal write failed ({e:#}); journaling disabled");
-                self.journal = None;
+        let t_ns = self.jbase_ns
+            + self.driver.now().saturating_duration_since(self.jepoch).as_nanos() as u64;
+        let Some(j) = self.journal.as_mut() else { return };
+        if let Err(e) = j.append(t_ns, ev) {
+            eprintln!("leader: journal write failed ({e:#}); journaling disabled");
+            if let Some(j) = self.journal.take() {
+                j.poison();
             }
         }
     }
@@ -724,6 +762,7 @@ impl<D: ServerDriver> Reactor<D> {
             buckets,
             central_mean_ns,
             centrals_done,
+            send_seq,
             ..
         } = self;
         let parts = ReactorParts {
@@ -742,6 +781,7 @@ impl<D: ServerDriver> Reactor<D> {
             buckets,
             central_mean_ns,
             centrals_done,
+            send_seq,
         };
         (parts, driver, pool)
     }
@@ -777,6 +817,12 @@ impl<D: ServerDriver> Reactor<D> {
             centrals_done: parts.centrals_done,
             journal: None,
             jepoch,
+            jbase_ns: 0,
+            // The channel harness resumes the surviving incarnation's send
+            // stream mid-flight; the TCP path resets this via
+            // `journal_restart` right after re-arming.
+            send_seq: parts.send_seq,
+            replay_fail: VecDeque::new(),
             replaying: false,
         })
     }
@@ -1055,7 +1101,45 @@ impl<D: ServerDriver> Reactor<D> {
         if let Some(entry) = self.active.get_mut(&run) {
             entry.stats[site].account(false, frame.len(), &self.cfg.link);
         }
-        self.driver.send_site(site, &frame)
+        self.send_site_frame(site, &frame)
+    }
+
+    /// The single choke point for outbound site frames: every send gets
+    /// the next ordinal, and a *failed* live send is journaled as
+    /// [`JournalEvent::SendFail`] before the caller reacts (takes the link
+    /// down, fails runs) — so replay, whose puppet driver's sends always
+    /// succeed while the link is up, re-fails the send with the matching
+    /// ordinal and diverges nowhere. Replay consumes the queued failures
+    /// front-to-front; ordinals never repeat within an incarnation, so a
+    /// front mismatch just means this send succeeded live.
+    fn send_site_frame(&mut self, site: usize, frame: &[u8]) -> Result<()> {
+        let seq = self.send_seq;
+        self.send_seq += 1;
+        if self.replaying {
+            if self.replay_fail.front().is_some_and(|f| f.seq == seq) {
+                let f = self.replay_fail.pop_front().expect("checked non-empty");
+                debug_assert_eq!(
+                    f.site, site,
+                    "journaled send failure ordinal {seq} names site {} but replay sent to site {site}",
+                    f.site
+                );
+                return Err(anyhow!("{}", f.err));
+            }
+            return self.driver.send_site(site, frame);
+        }
+        match self.driver.send_site(site, frame) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if self.journal.is_some() {
+                    self.append_journal(&JournalEvent::SendFail {
+                        seq,
+                        site,
+                        err: format!("{e:#}"),
+                    });
+                }
+                Err(e)
+            }
+        }
     }
 
     /// A site link died: every active run spans it, so they all fail; the
@@ -1314,7 +1398,7 @@ impl<D: ServerDriver> Reactor<D> {
         }
         let frame = wire::encode(&Message::LabelsPull { run });
         for site in 0..n_sites {
-            if let Err(e) = self.driver.send_site(site, &frame) {
+            if let Err(e) = self.send_site_frame(site, &frame) {
                 self.site_down(site, &format!("{e:#}"));
                 self.reject_pull(client, run, format!("site {site} died during the pull: {e:#}"));
                 return;
@@ -1371,6 +1455,7 @@ pub(crate) struct ReactorParts {
     buckets: HashMap<u64, TokenBucket>,
     central_mean_ns: f64,
     centrals_done: u64,
+    send_seq: u64,
 }
 
 impl ReactorParts {
@@ -1499,17 +1584,50 @@ impl Reactor<ReplayDriver> {
     /// skipped (replay re-derives every scheduling decision), and the
     /// rest step the reactor exactly as the original events did. Call
     /// with [`Reactor::set_replaying`] on.
+    ///
+    /// [`JournalEvent::SendFail`] records are consumed out of band: they
+    /// describe sends that failed *while* an earlier record was being
+    /// processed, so they are pre-scanned into per-incarnation queues
+    /// (ordinals reset at each `Restart`) and re-injected by
+    /// [`Reactor::send_site_frame`] when replay reaches the matching
+    /// ordinal — the link goes down at the identical point of the history.
     pub(crate) fn replay(&mut self, records: &[Record]) {
+        let mut segments: VecDeque<VecDeque<ReplayFail>> = VecDeque::new();
+        segments.push_back(VecDeque::new());
+        for rec in records {
+            match &rec.event {
+                JournalEvent::Restart => segments.push_back(VecDeque::new()),
+                JournalEvent::SendFail { seq, site, err } => segments
+                    .back_mut()
+                    .expect("segments starts non-empty")
+                    .push_back(ReplayFail { seq: *seq, site: *site, err: err.clone() }),
+                _ => {}
+            }
+        }
+        self.send_seq = 0;
+        self.replay_fail = segments.pop_front().expect("segments starts non-empty");
         for rec in records {
             self.driver.set_now(rec.t_ns);
             if rec.event.is_annotation() {
                 continue;
             }
+            if let JournalEvent::SendFail { .. } = rec.event {
+                continue; // consumed by ordinal, pre-scanned above
+            }
             if let JournalEvent::Restart = rec.event {
                 // The leader process died and came back at this point in
                 // the history: re-enact the recovery itself so the records
                 // that follow land on the same link generations and fresh
-                // machines the restarted leader had.
+                // machines the restarted leader had. The next incarnation's
+                // failure queue must be armed *before* the restart resends
+                // anything, and its ordinals start over.
+                debug_assert!(
+                    self.replay_fail.is_empty(),
+                    "journaled send failures left unconsumed at a restart boundary"
+                );
+                self.send_seq = 0;
+                self.replay_fail =
+                    segments.pop_front().expect("one segment per Restart record");
                 self.driver.restart_links();
                 self.restart_active_runs();
                 continue;
@@ -1536,6 +1654,10 @@ impl Reactor<ReplayDriver> {
             };
             self.step(event);
         }
+        debug_assert!(
+            self.replay_fail.is_empty() && segments.is_empty(),
+            "journaled send failures left unconsumed at the end of replay"
+        );
     }
 
     /// The replayed link generations, for the harness's resume-time

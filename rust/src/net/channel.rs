@@ -17,6 +17,7 @@
 //! time explicitly instead of waiting it out. `docs/TESTING.md` shows how
 //! the pieces compose.
 
+use std::cell::{Cell, RefCell};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -98,6 +99,68 @@ impl SiteTransport for ChannelSite {
         // is no mid-frame state to tear (frames move whole), so hangup is
         // always at a frame boundary.
         Ok(self.from_leader.recv().ok())
+    }
+}
+
+/// A [`ChannelSite`] that hangs up on the leader at a scripted point: just
+/// before it sends its `hang_before`-th uplink frame (1-based), it drops
+/// its own downlink receiver. The uplink frame still goes out, so the
+/// leader processes it — and the leader's *reply* is the first send that
+/// fails, deterministically, with "site N hung up". This is the send-
+/// failure lever the crash sweep uses to exercise journaled
+/// `SendFail` records: unlike a fault-plan `Drop` (which severs via a
+/// mailbox event the reactor journals as `SiteDown`), a hangup makes the
+/// reactor *itself* hit a failed send mid-step.
+///
+/// Severing sender-side (here) instead of having the fault plan hang up
+/// the receiver matters for determinism: an mpsc send into a receiver
+/// that is dropped *concurrently* can either succeed (frame silently
+/// lost) or fail depending on thread timing, but a receiver dropped
+/// before the triggering uplink frame is even enqueued guarantees the
+/// leader's reply fails every execution at the same point.
+pub struct HangupSite {
+    site_id: usize,
+    to_leader: Sender<(usize, Vec<u8>)>,
+    from_leader: RefCell<Option<Receiver<Vec<u8>>>>,
+    hang_before: u64,
+    sent: Cell<u64>,
+}
+
+impl HangupSite {
+    /// Wrap `inner`, hanging up just before its `hang_before`-th uplink
+    /// send (1-based; 0 never hangs up).
+    pub fn over(inner: ChannelSite, hang_before: u64) -> HangupSite {
+        HangupSite {
+            site_id: inner.site_id,
+            to_leader: inner.to_leader,
+            from_leader: RefCell::new(Some(inner.from_leader)),
+            hang_before,
+            sent: Cell::new(0),
+        }
+    }
+}
+
+impl SiteTransport for HangupSite {
+    fn site_id(&self) -> usize {
+        self.site_id
+    }
+
+    fn send(&self, frame: Vec<u8>) -> Result<()> {
+        let n = self.sent.get() + 1;
+        self.sent.set(n);
+        if n == self.hang_before {
+            // Hang up *first*: the downlink is gone before the leader can
+            // even see this frame, so its reply fails deterministically.
+            self.from_leader.borrow_mut().take();
+        }
+        self.to_leader.send((self.site_id, frame)).context("leader channel closed")
+    }
+
+    fn recv_opt(&self) -> Result<Option<Vec<u8>>> {
+        match self.from_leader.borrow().as_ref() {
+            Some(rx) => Ok(rx.recv().ok()),
+            None => Ok(None), // we hung up on ourselves: a clean close
+        }
     }
 }
 

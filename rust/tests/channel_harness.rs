@@ -225,6 +225,7 @@ fn slow_central_for_one_run_does_not_block_another() {
         },
         faults: Vec::new(),
         central_hook: Some(hook),
+        hangups: vec![],
     };
     let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
 
@@ -290,6 +291,7 @@ fn deadline_fires_during_another_runs_central() {
             Fault::DropRunFrames { site: 1, run: 2 },
         ],
         central_hook: Some(hook),
+        hangups: vec![],
     };
     let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
 
@@ -586,6 +588,7 @@ fn tracked_accept_position_follows_the_backlog() {
         },
         faults: Vec::new(),
         central_hook: Some(hook),
+        hangups: vec![],
     };
     let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
     let client = harness.client();

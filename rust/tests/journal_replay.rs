@@ -219,6 +219,7 @@ fn mix_opts(gate: &Arc<Gate>) -> HarnessOpts {
             Fault::DropRunFrames { site: 1, run: 1 },
         ],
         central_hook: Some(hook),
+        hangups: vec![],
     }
 }
 
@@ -326,6 +327,127 @@ fn crash_point_sweep_replays_bit_identically() {
             replayed.records, reference.records,
             "crash at record {k}: journal length"
         );
+    }
+    let _ = fs::remove_file(&path);
+}
+
+// ─── send-failure sweep ────────────────────────────────────────────────────
+
+/// One site holding the whole dataset: the hangup lever needs a mix whose
+/// journal record count cannot depend on cross-site arrival races.
+fn severed_workload() -> Vec<SitePart> {
+    let ds = gmm::paper_mixture_10d(400, 0.1, 11);
+    let frac = vec![vec![1.0; ds.n_classes]];
+    scenario::split_by_fractions(&ds, &frac, 11)
+}
+
+fn severed_opts() -> HarnessOpts {
+    HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 4,
+            allow_label_pull: false,
+            central_workers: 1,
+            client_limit: Some(1),
+        },
+        faults: vec![],
+        central_hook: None,
+        // The site's third uplink frame is its RUNSITEINFO for run 2: it
+        // hangs up just before sending it, so the leader's RUNDMLREQUEST
+        // reply is the first send that fails — mid-step, after the
+        // triggering SITEFRAME record is already journaled.
+        hangups: vec![(0, 3)],
+    }
+}
+
+/// Everything the severed mix's one client observes, plus the stats.
+#[derive(Debug, PartialEq)]
+struct SeveredRun {
+    run1: u32,
+    /// `(n_codes, sigma, wall_ns, per_site)` of the completed run.
+    report1: (u32, f64, u64, Vec<LinkReport>),
+    run2: u32,
+    err2: String,
+    stats: (u64, u64, u64),
+    sessions: Vec<(usize, usize)>,
+    records: u64,
+    /// `SendFail` records in the recovered journal.
+    send_fails: u64,
+}
+
+fn execute_severed(
+    parts: &Arc<Vec<SitePart>>,
+    journal_path: &PathBuf,
+    crash_after: Option<u64>,
+) -> SeveredRun {
+    let _ = fs::remove_file(journal_path);
+    let mut harness = serve_channel_journaled(
+        datasets(parts),
+        &cfg_with_seed(11),
+        severed_opts(),
+        journal_path,
+        crash_after,
+    )
+    .unwrap();
+    let client = harness.client();
+    let script = std::thread::spawn(move || {
+        let run1 = client.submit(&spec(11, JobSpec::DEFAULT_PRIORITY)).unwrap();
+        let report = client.await_done(run1).unwrap();
+        let run2 = client.submit(&spec(12, JobSpec::DEFAULT_PRIORITY)).unwrap();
+        let err2 = format!("{:#}", client.await_done(run2).unwrap_err());
+        drop(client);
+        (run1, (report.n_codes, report.sigma, report.wall_ns, report.per_site), run2, err2)
+    });
+    if crash_after.is_some() {
+        harness.crash_and_restart().unwrap();
+    }
+    let (run1, report1, run2, err2) = script.join().expect("script thread panicked");
+    let (stats, outcomes) = harness.join().unwrap();
+
+    let recovered = recover(journal_path).unwrap();
+    assert!(!recovered.torn, "a synced journal must not have a torn tail");
+    let send_fails = recovered
+        .records
+        .iter()
+        .filter(|r| matches!(r.event, JournalEvent::SendFail { .. }))
+        .count() as u64;
+    SeveredRun {
+        run1,
+        report1,
+        run2,
+        err2,
+        stats: (stats.completed, stats.failed, stats.rejected),
+        sessions: outcomes.iter().map(|o| (o.runs_served, o.aborted_runs)).collect(),
+        records: recovered.records.len() as u64,
+        send_fails,
+    }
+}
+
+/// The send-failure twin of the headline sweep. A live send failure takes
+/// state down *mid-step* — something no journaled mailbox event can
+/// re-enact on its own, since the replay driver's sends succeed while a
+/// link is up. The journaled `SendFail` record (re-failed by send ordinal
+/// during replay) must make every crash point recover to the
+/// uninterrupted execution exactly: same failure text on the client, same
+/// link generations (checked inside `crash_and_restart`), same journal.
+#[test]
+fn severed_link_crash_sweep_replays_bit_identically() {
+    let parts = Arc::new(severed_workload());
+    let path = temp_path("severed");
+
+    let reference = execute_severed(&parts, &path, None);
+    assert_eq!(reference.stats, (1, 1, 0), "one completed, one failed by the hangup");
+    assert_eq!(reference.send_fails, 1, "the failed RUNDMLREQUEST send is journaled");
+    assert!(
+        reference.err2.contains("site 0 link failed"),
+        "run 2 fails on the severed link: {}",
+        reference.err2
+    );
+    assert!(reference.records > 0);
+
+    for k in 1..=reference.records {
+        let replayed = execute_severed(&parts, &path, Some(k));
+        assert_eq!(replayed, reference, "crash at record {k}");
     }
     let _ = fs::remove_file(&path);
 }
