@@ -15,6 +15,16 @@
 //! journaling may only spend wall clock, never virtual time — and the
 //! wall-clock delta is recorded alongside the deterministic numbers.
 //!
+//! Two hostile legs complete the trajectory: the **chaos** leg runs the
+//! six-job `run_chaos_mix` plan (straggler, mid-backlog site outage,
+//! staged leader crash-and-recover) against its fault-free twin — only
+//! the two faulted runs may fail and every survivor must match the twin
+//! bit for bit; the **adversarial** leg runs `run_adversarial_mix` with
+//! token-bucket admission on — the flood is clipped at the burst with
+//! typed `RateLimited` refusals and the paying tenants' p99 stays within
+//! 3× of the flooder-free twin. Both re-check their floors here so a
+//! regression cannot silently land in the recorded trajectory.
+//!
 //! `cargo bench --bench jobserver_load` — add `-- tcp` to also push the
 //! same mix through a real loopback TCP job server (wall-clock numbers,
 //! printed but deliberately kept out of the deterministic JSON).
@@ -25,7 +35,9 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 use dsc::bench::Table;
 use dsc::coordinator::loadgen::{
-    run_channel_load, run_channel_load_journaled, run_tcp_load, LoadMix, LoadReport,
+    run_adversarial_mix, run_channel_load, run_channel_load_journaled, run_chaos_mix,
+    run_chaos_twin, run_tcp_load, AdversarialMix, AdversarialReport, ChaosReport, ChaosRun,
+    LoadMix, LoadReport,
 };
 
 /// Sanity floors: a scheduling or harness regression trips these before
@@ -75,6 +87,77 @@ fn check_floors(fifo: &LoadReport, drr: &LoadReport) -> Result<()> {
     Ok(())
 }
 
+/// Floors for the chaos leg: the fault plan may cost exactly the two
+/// faulted runs, every survivor must match the fault-free twin bit for
+/// bit, and the recovered journal must have kept recording.
+fn check_chaos(chaos: &ChaosReport, twin: &ChaosReport) -> Result<()> {
+    if (twin.completed, twin.failed, twin.rejected) != (6, 0, 0) {
+        bail!("chaos twin: {}/{} completed/failed — the plan itself must be clean",
+            twin.completed, twin.failed);
+    }
+    if (chaos.completed, chaos.failed, chaos.rejected) != (4, 2, 0) {
+        bail!(
+            "chaos: {} completed, {} failed, {} rejected — exactly the two faulted runs may fail",
+            chaos.completed, chaos.failed, chaos.rejected
+        );
+    }
+    for (i, r) in chaos.results.iter().enumerate() {
+        if matches!(r, ChaosRun::Done { .. }) && r != &twin.results[i] {
+            bail!("chaos: survivor run {} diverged from its fault-free twin", i + 1);
+        }
+    }
+    for (site, s) in chaos.sessions.iter().enumerate() {
+        if s.0 != 4 {
+            bail!("chaos: site {site} served {} runs, expected all 4 survivors", s.0);
+        }
+    }
+    if chaos.journal_records <= 13 {
+        bail!(
+            "chaos: journal holds {} records — recovery must resume event-sourcing \
+             past the 13-record crash prefix",
+            chaos.journal_records
+        );
+    }
+    Ok(())
+}
+
+/// Floors for the adversarial leg: the flood clipped at the burst with
+/// typed rate-limit refusals, and the paying p99 within 3× of the
+/// flooder-free twin.
+fn check_adversarial(flood: &AdversarialReport, quiet: &AdversarialReport) -> Result<()> {
+    if flood.flooder_accepted != 8 || flood.flooder_rejects.len() != 12 {
+        bail!(
+            "adversarial: {} admitted / {} refused — the burst must clip the flood at 8/12",
+            flood.flooder_accepted,
+            flood.flooder_rejects.len()
+        );
+    }
+    for &(code, detail) in &flood.flooder_rejects {
+        if code != dsc::net::RejectCode::RateLimited || detail == 0 {
+            bail!("adversarial: refusal {code:?}/{detail} — every reject must be a typed \
+                   RateLimited with a positive wait");
+        }
+    }
+    if (flood.completed, flood.rejected) != (20, 12) || (quiet.completed, quiet.rejected) != (12, 0)
+    {
+        bail!("adversarial: completed/rejected {}/{} flooded, {}/{} quiet",
+            flood.completed, flood.rejected, quiet.completed, quiet.rejected);
+    }
+    for (p, q) in flood.paying.iter().zip(&quiet.paying) {
+        if p.p99_ns > 3 * q.p99_ns {
+            bail!(
+                "adversarial: paying client {} p99 {} ns vs {} ns quiet — the flood must \
+                 cost at most 3×",
+                p.client, p.p99_ns, q.p99_ns
+            );
+        }
+    }
+    if quiet.fairness < 0.95 {
+        bail!("adversarial: quiet fairness {} below the 0.95 floor", quiet.fairness);
+    }
+    Ok(())
+}
+
 fn indent(json: &str) -> String {
     json.replace('\n', "\n  ")
 }
@@ -111,6 +194,24 @@ fn main() -> Result<()> {
         bail!("journaling moved the deterministic report: journaled DRR leg disagreed");
     }
 
+    // The chaos leg: straggler + mid-backlog site outage + staged leader
+    // crash-and-recover over a six-job DRR plan, held to its fault-free
+    // twin (rust/tests/chaos_mix.rs is the full suite; the bench records
+    // the outcome counts and re-checks the floors).
+    let cpath = std::env::temp_dir()
+        .join(format!("dsc-bench-chaos-{}.journal", std::process::id()));
+    let _ = std::fs::remove_file(&cpath);
+    let chaos_twin = run_chaos_twin()?;
+    let chaos = run_chaos_mix(&cpath)?;
+    let _ = std::fs::remove_file(&cpath);
+    check_chaos(&chaos, &chaos_twin)?;
+
+    // The adversarial leg: a 20-submit flood against two paying tenants
+    // with token-bucket admission on, held to the flooder-free twin.
+    let adv_quiet = run_adversarial_mix(&AdversarialMix::canonical(false))?;
+    let adv_flood = run_adversarial_mix(&AdversarialMix::canonical(true))?;
+    check_adversarial(&adv_flood, &adv_quiet)?;
+
     let mut table = Table::new(
         "Job-server load: skewed 3-tenant mix (12×w1 / 6×w2 / 3×w4), virtual time",
         &["queue", "fairness", "jobs/s", "p95 w1", "p95 w2", "p95 w4"],
@@ -134,19 +235,56 @@ fn main() -> Result<()> {
         (wall_on.as_secs_f64() / wall_off.as_secs_f64().max(1e-9) - 1.0) * 100.0,
         journal_bytes
     );
+    println!(
+        "chaos leg: {}/6 completed under straggler+outage+crash (twin {}/6), \
+         survivors bit-identical to the twin, {} journal records after recovery",
+        chaos.completed, chaos_twin.completed, chaos.journal_records
+    );
+    println!(
+        "adversarial leg: flood clipped {}→{} admitted / {} RateLimited; \
+         paying p99 {:.1}ms/{:.1}ms flooded vs {:.1}ms/{:.1}ms quiet (≤3× floor)",
+        20,
+        adv_flood.flooder_accepted,
+        adv_flood.flooder_rejects.len(),
+        adv_flood.paying[0].p99_ns as f64 / 1e6,
+        adv_flood.paying[1].p99_ns as f64 / 1e6,
+        adv_quiet.paying[0].p99_ns as f64 / 1e6,
+        adv_quiet.paying[1].p99_ns as f64 / 1e6,
+    );
 
     let out_dir = std::env::var("DSC_BENCH_OUT").unwrap_or_else(|_| "bench_out".into());
     std::fs::create_dir_all(&out_dir)?;
     let path = std::path::Path::new(&out_dir).join("BENCH_jobserver.json");
+    // The chaos object records only virtual-time-deterministic outcomes:
+    // whether the severed pop's work order beat the site-down to the
+    // sites is a real-time race, so journal record and per-site DML
+    // counts stay out of the recorded trajectory.
+    let survivors_match = chaos
+        .results
+        .iter()
+        .enumerate()
+        .all(|(i, r)| !matches!(r, ChaosRun::Done { .. }) || r == &chaos_twin.results[i]);
     let body = format!(
         "{{\n  \"bench\": \"jobserver_load\",\n  \"mix\": \"skewed_three 12xw1/6xw2/3xw4\",\n  \
          \"fifo\": {},\n  \"drr\": {},\n  \"journal\": {{\n    \
          \"report_identical_to_drr\": true,\n    \"journal_bytes\": {journal_bytes},\n    \
-         \"wall_ms_off\": {:.3},\n    \"wall_ms_on\": {:.3}\n  }}\n}}\n",
+         \"wall_ms_off\": {:.3},\n    \"wall_ms_on\": {:.3}\n  }},\n  \
+         \"chaos\": {{\n    \"completed\": {},\n    \"failed\": {},\n    \"rejected\": {},\n    \
+         \"twin_completed\": {},\n    \"survivors_match_twin\": {},\n    \
+         \"runs_served_per_site\": [{}]\n  }},\n  \
+         \"adversarial\": {{\n    \"quiet\": {},\n    \"flood\": {}\n  }}\n}}\n",
         indent(&fifo.to_json()),
         indent(&drr.to_json()),
         wall_off.as_secs_f64() * 1e3,
         wall_on.as_secs_f64() * 1e3,
+        chaos.completed,
+        chaos.failed,
+        chaos.rejected,
+        chaos_twin.completed,
+        survivors_match,
+        chaos.sessions.iter().map(|s| s.0.to_string()).collect::<Vec<_>>().join(", "),
+        indent(&indent(&adv_quiet.to_json())),
+        indent(&indent(&adv_flood.to_json())),
     );
     std::fs::write(&path, body)?;
     println!("\nwrote {}", path.display());

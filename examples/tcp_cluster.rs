@@ -14,7 +14,13 @@
 //!    concurrent `dsc submit` jobs** through it — asserting both complete,
 //!    the job matching step 1's config reproduces its labels exactly
 //!    (pulled back through the leader via `LABELS_PULL`), and each site
-//!    served both runs over a single session.
+//!    served both runs over a single session;
+//! 5. restart the sites with `--ingest` (an extra tranche of the same
+//!    mixture, `[site] report_digest = true` so the `SITEINFO2` digest
+//!    frame rides the real TCP handshake), push a third submit through a
+//!    fresh job server, and assert every original **and** ingested point
+//!    comes back labelled — with the run-scoped frame counts unchanged,
+//!    because the digest frame is session-scoped.
 //!
 //! CI runs this as a blocking smoke step. It needs the `dsc` binary:
 //!
@@ -429,6 +435,167 @@ fn main() -> Result<()> {
         bail!("job 2 accuracy {acc2:.4} below the 0.9 floor");
     }
     drop(site_guards); // kill the persistent daemons
+
+    // ── phase 3: ingest-then-resubmit — streaming shards over real TCP ──
+    println!("\n=== ingest: sites restart with --ingest, a third submit labels every point ===");
+
+    // an extra tranche of the same mixture, split across the sites like
+    // the base set
+    let extra_ds = dsc::data::gmm::paper_mixture_10d(600, 0.1, 99);
+    let extra_parts = scenario::split(&extra_ds, Scenario::D3, SITES, SEED);
+    let mut extra_csvs = Vec::new();
+    for part in &extra_parts {
+        let csv = dir.join(format!("extra{}.csv", part.site_id));
+        csvio::save_dataset(&csv, &part.data, &["tcp_cluster example ingest tranche"])?;
+        extra_csvs.push(csv);
+    }
+    // digests on: the SITEINFO2 frame rides the real TCP handshake here
+    let site_toml = dir.join("site.toml");
+    std::fs::write(&site_toml, "[site]\nreport_digest = true\n").context("write site config")?;
+
+    let mut site_guards = Vec::new();
+    let mut addrs = Vec::new();
+    for s in 0..SITES {
+        let mut child = Command::new(&bin)
+            .arg("site")
+            .args(["--listen", "127.0.0.1:0"])
+            .args(["--data", csvs[s].to_str().unwrap()])
+            .args(["--ingest", extra_csvs[s].to_str().unwrap()])
+            .args(["--config", site_toml.to_str().unwrap()])
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn ingesting site {s}"))?;
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut reader = BufReader::new(stdout);
+        // `--ingest` reports before LISTENING: check the fold landed
+        let mut line = String::new();
+        reader.read_line(&mut line).context("read ingest banner")?;
+        let ingested = line
+            .trim()
+            .strip_prefix("INGESTED n_points=")
+            .and_then(|rest| rest.split_whitespace().next())
+            .and_then(|n| n.parse::<usize>().ok())
+            .ok_or_else(|| anyhow!("site {s} printed {line:?}, expected INGESTED n_points=…"))?;
+        if ingested != extra_parts[s].data.len() {
+            bail!("site {s} ingested {ingested} points, expected {}", extra_parts[s].data.len());
+        }
+        line.clear();
+        reader.read_line(&mut line).context("read site banner")?;
+        let addr = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .ok_or_else(|| anyhow!("site {s} printed {line:?}, expected LISTENING <addr>"))?
+            .to_string();
+        println!("site {s}: pid {} listening on {addr} (+{ingested} ingested points)", child.id());
+        addrs.push(addr);
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                sink.clear();
+            }
+        });
+        site_guards.push(ChildGuard { child, name: "dsc site" });
+    }
+
+    let mut leader_child = Command::new(&bin)
+        .arg("leader")
+        .args(["--sites", &addrs.join(",")])
+        .args(["--serve", "127.0.0.1:0"])
+        .args(["--serve-limit", "1"])
+        .args(["--config", server_toml.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawn job-serving leader (ingest phase)")?;
+    let leader_stdout = leader_child.stdout.take().expect("piped stdout");
+    let mut leader_reader = BufReader::new(leader_stdout);
+    let mut line = String::new();
+    leader_reader.read_line(&mut line).context("read leader banner")?;
+    let serve_addr = line
+        .trim()
+        .strip_prefix("SERVING ")
+        .ok_or_else(|| anyhow!("leader printed {line:?}, expected SERVING <addr>"))?
+        .to_string();
+    println!("leader: pid {} serving jobs on {serve_addr}", leader_child.id());
+    let leader_rest = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = leader_reader.read_to_string(&mut rest);
+        rest
+    });
+    let mut leader_guard = ChildGuard { child: leader_child, name: "dsc leader --serve" };
+
+    // same spec as job 1 — but the shards moved, so this is a fresh
+    // clustering over 12_600 points, not a replay of the reference labels
+    let pull3 = dir.join("pull3");
+    let out = Command::new(&bin)
+        .arg("submit")
+        .args(["--leader", &serve_addr])
+        .args(["--config", job_tomls[0].to_str().unwrap()])
+        .args(["--pull", pull3.to_str().unwrap()])
+        .output()
+        .context("run submit over the ingested shards")?;
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    print!("{stdout}");
+    if !out.status.success() {
+        bail!("ingest-phase submit exited with {}", out.status);
+    }
+    // the digest frame is session-scoped: the run dialect stays 2 up / 3 down
+    let reports = parse_netreports(&stdout)?;
+    if reports.len() != SITES {
+        bail!("ingest-phase submit: expected {SITES} NETREPORT lines, got {}", reports.len());
+    }
+    for (site, c) in &reports {
+        if c.up_frames != 2 || c.down_frames != 3 {
+            bail!(
+                "ingest-phase submit site {site}: expected 2 up / 3 down frames, got {} / {}",
+                c.up_frames,
+                c.down_frames
+            );
+        }
+    }
+    leader_guard.wait()?;
+    let rest = leader_rest.join().expect("leader stdout thread");
+    if !rest.contains("SERVED_JOBS completed=1") {
+        bail!("ingest-phase leader did not report 1 completed job:\n{rest}");
+    }
+
+    // every point — original shard plus ingested tranche — must come back
+    // labelled, and the clustering must still be accurate on the combined
+    // ground truth
+    let mut truth = Vec::new();
+    let mut pulled_all = Vec::new();
+    for s in 0..SITES {
+        let pulled = dsc::site::read_labels(&pull3.join(format!("labels_site{s}.txt")))?;
+        let expect = parts[s].data.len() + extra_parts[s].data.len();
+        if pulled.len() != expect {
+            bail!(
+                "ingest-phase site {s}: pulled {} labels for {expect} points ({} base + {} ingested)",
+                pulled.len(),
+                parts[s].data.len(),
+                extra_parts[s].data.len()
+            );
+        }
+        truth.extend_from_slice(&parts[s].data.labels);
+        truth.extend_from_slice(&extra_parts[s].data.labels);
+        pulled_all.extend_from_slice(&pulled);
+    }
+    if pulled_all.len() != ds.len() + extra_ds.len() {
+        bail!(
+            "ingest-phase pulled {} labels in total, expected {}",
+            pulled_all.len(),
+            ds.len() + extra_ds.len()
+        );
+    }
+    let acc3 = clustering_accuracy(&truth, &pulled_all);
+    println!(
+        "ingest phase: {} labels pulled ({} base + {} ingested), accuracy {acc3:.4}",
+        pulled_all.len(),
+        ds.len(),
+        extra_ds.len()
+    );
+    if acc3 < 0.9 {
+        bail!("ingest-phase accuracy {acc3:.4} below the 0.9 floor");
+    }
+    drop(site_guards); // kill the ingesting daemons
 
     std::fs::remove_dir_all(&dir).ok();
     println!("\ntcp_cluster: all parity checks passed");

@@ -121,7 +121,11 @@ SITE FLAGS (see docs/DEPLOY.md):
   --data FILE       local shard CSV: dim float columns + integer label
   --out FILE        write populated labels here after each run (one per line)
   --once            serve exactly one leader connection, then exit
-  --config FILE     TOML config ([net] timeouts/listen/max_idle_secs)
+  --ingest FILE     fold FILE's points into the shard at startup (same
+                    column layout as --data) before serving: the shard
+                    digest moves and cached DML results are invalidated
+  --config FILE     TOML config ([net] timeouts/listen/max_idle_secs and
+                    [site] caching/digest knobs)
 
 LEADER FLAGS (see docs/DEPLOY.md):
   --sites A,B,...   site addresses in site-id order (or [net] sites)
@@ -387,7 +391,7 @@ pub fn cmd_run(args: &[String]) -> Result<()> {
 /// one pipeline run per connection, and survives failed runs.
 pub fn cmd_site(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
-    flags.reject_unknown(&["listen", "data", "out", "once", "config", "help"])?;
+    flags.reject_unknown(&["listen", "data", "out", "once", "config", "ingest", "help"])?;
     if flags.bool("help") {
         println!("{USAGE}");
         return Ok(());
@@ -410,6 +414,20 @@ pub fn cmd_site(args: &[String]) -> Result<()> {
         bail!("{data_path}: empty shard");
     }
 
+    // The session owns the shard across connections: its DML result cache,
+    // shard digest, and live codebook survive leader reconnects.
+    let mut session = crate::site::Session::new(data, cfg.site);
+    if let Some(ingest_path) = flags.str("ingest") {
+        let extra = csvio::load_dataset(Path::new(ingest_path), "ingest", None)?;
+        let added = session.ingest(&extra)?;
+        println!(
+            "INGESTED n_points={added} total={} version={:016x}",
+            session.data().len(),
+            session.shard_version()
+        );
+        std::io::stdout().flush().ok();
+    }
+
     let listen = flags.str("listen").unwrap_or(&cfg.net.listen);
     let timeouts = cfg.net.tcp_timeouts();
     let listener = SiteListener::bind(listen)?;
@@ -417,9 +435,11 @@ pub fn cmd_site(args: &[String]) -> Result<()> {
     println!("LISTENING {addr}");
     std::io::stdout().flush().ok();
     eprintln!(
-        "site daemon: {} points × {} dims from {data_path}; waiting for a leader",
-        data.len(),
-        data.dim
+        "site daemon: {} points × {} dims from {data_path} (shard version {:016x}); \
+         waiting for a leader",
+        session.data().len(),
+        session.data().dim,
+        session.shard_version()
     );
 
     let once = flags.bool("once");
@@ -432,31 +452,36 @@ pub fn cmd_site(args: &[String]) -> Result<()> {
             let transport = listener.accept(&timeouts)?;
             if transport.session_mode() {
                 // A job-serving leader: persistent multi-run session over
-                // this one connection, shard served from memory each run.
+                // this one connection, served from the long-lived session —
+                // its DML result cache spans connections, so a leader that
+                // reconnects and resubmits an identical job gets a cached
+                // (bit-identical) codebook without a single DML pass.
                 let net = SiteNet::over(Box::new(transport));
-                let out = crate::site::session(
+                let out = session.serve(
                     &net,
-                    &data,
                     flags.str("out").map(Path::new),
-                    cfg.site,
                     |r| {
                         println!(
-                            "SERVED run={} n_points={} n_codes={} dml_s={:.3} distortion={:.6}",
+                            "SERVED run={} n_points={} n_codes={} dml_s={:.3} distortion={:.6} cache={}",
                             r.run,
                             r.n_points,
                             r.n_codes,
                             r.dml_time.as_secs_f64(),
                             r.distortion,
+                            if r.cache_hit { "hit" } else { "miss" },
                         );
                         std::io::stdout().flush().ok();
                     },
                 )?;
-                println!("SESSION runs={} aborted={}", out.runs_served, out.aborted_runs);
+                println!(
+                    "SESSION runs={} aborted={} dml_passes={} cache_hits={}",
+                    out.runs_served, out.aborted_runs, out.dml_passes, out.cache_hits
+                );
                 std::io::stdout().flush().ok();
             } else {
                 let net = SiteNet::over(Box::new(transport));
                 let site_id = net.site_id();
-                let out = crate::site::serve(&net, &data)?;
+                let out = crate::site::serve(&net, session.data())?;
                 if let Some(out_path) = flags.str("out") {
                     crate::site::write_labels(Path::new(out_path), &out.labels)?;
                 }

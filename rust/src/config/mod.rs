@@ -313,6 +313,12 @@ impl PipelineConfig {
     /// [site]
     /// label_cache_runs = 8      # completed runs kept for LABELSPULL
     /// max_open_runs = 64        # hostile-leader open-run backstop
+    /// cache_dml = true          # replay cached DML results while the shard
+    ///                           # version is unchanged
+    /// dml_cache_runs = 8        # cached DML results kept (oldest evicted)
+    /// digest_chunk = 1024       # points per shard-digest leaf chunk
+    /// report_digest = false     # volunteer SITEINFO2 at session start
+    ///                           # (needs a leader that knows the tag)
     /// ```
     pub fn from_toml(text: &str) -> Result<PipelineConfig> {
         let map = toml::parse(text)?;
@@ -555,6 +561,28 @@ impl PipelineConfig {
             }
             cfg.site.max_open_runs = n as usize;
         }
+        if let Some(v) = get("site.cache_dml") {
+            cfg.site.cache_dml =
+                v.as_bool().ok_or_else(|| anyhow!("site.cache_dml must be bool"))?;
+        }
+        if let Some(v) = get("site.dml_cache_runs") {
+            let n = v.as_i64().ok_or_else(|| anyhow!("site.dml_cache_runs must be an int"))?;
+            if n < 1 {
+                bail!("site.dml_cache_runs must be ≥ 1 (a cache needs at least one slot)");
+            }
+            cfg.site.dml_cache_runs = n as usize;
+        }
+        if let Some(v) = get("site.digest_chunk") {
+            let n = v.as_i64().ok_or_else(|| anyhow!("site.digest_chunk must be an int"))?;
+            if n < 1 {
+                bail!("site.digest_chunk must be ≥ 1 (points per digest leaf)");
+            }
+            cfg.site.digest_chunk = n as usize;
+        }
+        if let Some(v) = get("site.report_digest") {
+            cfg.site.report_digest =
+                v.as_bool().ok_or_else(|| anyhow!("site.report_digest must be bool"))?;
+        }
         Ok(cfg)
     }
 }
@@ -762,13 +790,22 @@ mod tests {
         let cfg = PipelineConfig::from_toml("").unwrap();
         assert_eq!(cfg.site.label_cache_runs, 8);
         assert_eq!(cfg.site.max_open_runs, 64);
+        assert!(cfg.site.cache_dml);
+        assert_eq!(cfg.site.dml_cache_runs, 8);
+        assert_eq!(cfg.site.digest_chunk, crate::site::digest::DEFAULT_DIGEST_CHUNK);
+        assert!(!cfg.site.report_digest);
 
         let cfg = PipelineConfig::from_toml(
-            "[site]\nlabel_cache_runs = 2\nmax_open_runs = 5",
+            "[site]\nlabel_cache_runs = 2\nmax_open_runs = 5\ncache_dml = false\n\
+             dml_cache_runs = 3\ndigest_chunk = 256\nreport_digest = true",
         )
         .unwrap();
         assert_eq!(cfg.site.label_cache_runs, 2);
         assert_eq!(cfg.site.max_open_runs, 5);
+        assert!(!cfg.site.cache_dml);
+        assert_eq!(cfg.site.dml_cache_runs, 3);
+        assert_eq!(cfg.site.digest_chunk, 256);
+        assert!(cfg.site.report_digest);
     }
 
     #[test]
@@ -778,6 +815,10 @@ mod tests {
         assert!(PipelineConfig::from_toml("[site]\nmax_open_runs = 0").is_err());
         assert!(PipelineConfig::from_toml("[site]\nlabel_cache_runs = -3").is_err());
         assert!(PipelineConfig::from_toml("[site]\nmax_open_runs = \"lots\"").is_err());
+        assert!(PipelineConfig::from_toml("[site]\ndml_cache_runs = 0").is_err());
+        assert!(PipelineConfig::from_toml("[site]\ndigest_chunk = 0").is_err());
+        assert!(PipelineConfig::from_toml("[site]\ncache_dml = 1").is_err());
+        assert!(PipelineConfig::from_toml("[site]\nreport_digest = \"yes\"").is_err());
     }
 
     #[test]

@@ -24,6 +24,19 @@
 //! ([`run_tcp_load`]) pushes the identical mix through a real loopback
 //! job server for wall-clock numbers (real, therefore *not* in the
 //! deterministic report). `docs/TESTING.md` has the how-to.
+//!
+//! Two hostile variants ride the same machinery:
+//!
+//! * the **chaos mix** ([`run_chaos_mix`] / [`run_chaos_twin`]) layers a
+//!   fault plan, a straggler, a mid-backlog site outage and a staged
+//!   leader crash-and-recover over a six-job, three-tenant DRR plan —
+//!   only the faulted runs may fail, and every survivor must match its
+//!   fault-free twin bit for bit;
+//! * the **adversarial mix** ([`run_adversarial_mix`]) pits a flooding
+//!   tenant against two paying ones with token-bucket admission on: the
+//!   flood is clipped at the burst with typed `REJECT2` rate-limit codes,
+//!   and the paying tenants' sojourns stay within a small factor of a
+//!   flooder-free run.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::Path;
@@ -35,12 +48,15 @@ use anyhow::{bail, Context, Result};
 use crate::config::PipelineConfig;
 use crate::data::scenario::{self, Scenario};
 use crate::data::{gmm, Dataset};
+use crate::net::channel::Fault;
 use crate::net::tcp::SiteListener;
-use crate::net::{JobSpec, SiteNet};
+use crate::net::{JobSpec, LinkReport, RejectCode, SiteNet};
 use crate::site;
 
 use super::harness::{serve_channel, serve_channel_journaled, HarnessOpts};
-use super::server::{serve_jobs, CentralHook, JobClient, ServerOpts, ServerStats};
+use super::server::{
+    serve_jobs, CentralHook, JobClient, ServerOpts, ServerStats, SubmitOutcome,
+};
 use super::spec_from_config;
 
 // ─── mixes ─────────────────────────────────────────────────────────────────
@@ -486,6 +502,461 @@ fn report_from_pops(
     }
 }
 
+// ─── the chaos mix ─────────────────────────────────────────────────────────
+
+/// How one chaos-mix run ended. `Done` keeps only the deterministic
+/// fields of a [`JobReport`](crate::net::JobReport) — `central_ns` and
+/// `wall_ns` are real time — so a survivor compares bit for bit against
+/// its fault-free twin.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChaosRun {
+    Done { n_codes: u32, sigma: f64, per_site: Vec<LinkReport> },
+    Failed { err: String },
+}
+
+/// The scripted six-job, three-tenant chaos plan, `(tenant, seed,
+/// priority)` per submission. Tenant 2 submits seed 55 twice so the
+/// surviving runs also exercise the sites' DML result cache under fire.
+const CHAOS_PLAN: [(usize, u64, u32); 6] =
+    [(0, 21, 1), (1, 33, 2), (2, 55, 4), (1, 34, 2), (2, 55, 4), (0, 22, 1)];
+
+/// What one chaos (or fault-free twin) pass observed.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// Run ids, submission order (the leader assigns 1..=6).
+    pub runs: Vec<u32>,
+    /// How each run ended, submission order.
+    pub results: Vec<ChaosRun>,
+    /// Central-entry order the sequencer observed: 6 in the twin; 4 under
+    /// faults (the straggler never registers, the severed run never
+    /// reaches its central).
+    pub pop_order: Vec<u32>,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    /// Per-site `(runs_served, aborted_runs, dml_passes, cache_hits)`.
+    pub sessions: Vec<(usize, usize, usize, usize)>,
+    /// Records the run journal held after the mix (0 for the twin, which
+    /// does not journal).
+    pub journal_records: u64,
+}
+
+fn chaos_cfg(seed: u64) -> PipelineConfig {
+    let mut cfg = PipelineConfig {
+        total_codes: 32,
+        k_clusters: 4,
+        seed,
+        ..Default::default()
+    };
+    // Armed straggler deadlines fire only when the script advances the
+    // virtual clock past them — 5 s is the window the chaos tick jumps.
+    cfg.collect_timeout = Duration::from_secs(5);
+    cfg.leader.fair_queue = true;
+    cfg
+}
+
+/// Run [`CHAOS_PLAN`] through a journaling channel leader under fire:
+/// both sites silently stall run 1 (the straggler deadline, not a
+/// site-down, must catch it), the leader is crashed and recovered the
+/// moment all six admissions are on record, and site 1's uplink is
+/// severed at the last pop of the recovered DRR backlog. Exactly the two
+/// faulted runs fail; the four survivors must match [`run_chaos_twin`]
+/// bit for bit.
+pub fn run_chaos_mix(journal_path: &Path) -> Result<ChaosReport> {
+    run_chaos_inner(Some(journal_path))
+}
+
+/// The fault-free twin of [`run_chaos_mix`]: same plan, same harness, no
+/// faults, no journal, no crash — the reference the survivors are held
+/// to, and the proof the plan itself is clean (six completions, one DML
+/// cache hit per site for the repeated seed-55 spec).
+pub fn run_chaos_twin() -> Result<ChaosReport> {
+    run_chaos_inner(None)
+}
+
+fn run_chaos_inner(journal: Option<&Path>) -> Result<ChaosReport> {
+    let cfg = chaos_cfg(CHAOS_PLAN[0].1);
+    let ds = gmm::paper_mixture_10d(600, 0.1, 21);
+    let datasets: Vec<Dataset> =
+        scenario::split(&ds, Scenario::D3, 2, 21).into_iter().map(|p| p.data).collect();
+
+    let seq = Sequencer::new();
+    let hook: CentralHook = {
+        let seq = Arc::clone(&seq);
+        Arc::new(move |run: u32| seq.enter_and_wait(run))
+    };
+    let chaos = journal.is_some();
+    let faults = if chaos {
+        vec![
+            // Run 1 stalls silently at both sites: the 6 s tick must fire
+            // its straggler deadline while five jobs sit in the backlog.
+            Fault::DropRunFrames { site: 0, run: 1 },
+            Fault::DropRunFrames { site: 1, run: 1 },
+            // Sever site 1 at its 10th uplink frame: the swallowed run-1
+            // registration (1) plus four fully served pops (2 frames
+            // each) put frame 10 at the *last* pop's registration. The
+            // outage must strike the final pop — a severed channel link
+            // never redials, so any job still queued behind it would wait
+            // forever.
+            Fault::DropSiteAfter { site: 1, frames: 10 },
+        ]
+    } else {
+        Vec::new()
+    };
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: false,
+            central_workers: 1,
+            client_limit: Some(3),
+        },
+        faults,
+        central_hook: Some(hook),
+        hangups: vec![],
+    };
+    let mut harness = match journal {
+        Some(path) => {
+            let _ = std::fs::remove_file(path);
+            // Crash as soon as the journal holds all six admissions —
+            // ClientSubmit+Admitted per job plus run 1's Started = 13
+            // records — so recovery must rebuild one active run (already
+            // expired on the journal's timeline) and a five-deep DRR
+            // backlog.
+            serve_channel_journaled(datasets, &cfg, opts, path, Some(13))?
+        }
+        None => serve_channel(datasets, &cfg, opts)?,
+    };
+
+    // Three tenants, mix order → client ids 1..=3.
+    let clients: Vec<_> = (0..3).map(|_| harness.client()).collect();
+    let ticker = harness.ticker();
+    let script = {
+        let seq = Arc::clone(&seq);
+        std::thread::spawn(move || -> Result<(Vec<u32>, Vec<u32>, Vec<ChaosRun>)> {
+            let mut runs = Vec::new();
+            for &(owner, seed, pri) in &CHAOS_PLAN {
+                let mut spec = spec_from_config(&chaos_cfg(seed));
+                spec.priority = pri;
+                let acc = clients[owner]
+                    .submit_tracked(&spec)
+                    .with_context(|| format!("chaos submit seed {seed}"))?;
+                runs.push(acc.run);
+            }
+            // Under faults run 1 is stalled at both sites, so jumping past
+            // the 5 s collect window fails it and frees the slot for the
+            // backlog. The twin must NOT tick: its run 1 is computing real
+            // DML and would race this same deadline until its codebooks
+            // arrive.
+            if chaos {
+                ticker.tick(Duration::from_secs(6));
+            }
+            let centrals = if chaos { 4 } else { CHAOS_PLAN.len() };
+            let mut pop_order = Vec::new();
+            for _ in 0..centrals {
+                let run = seq.wait_entered();
+                pop_order.push(run);
+                seq.release(run);
+            }
+            let mut results = Vec::new();
+            for (i, &run) in runs.iter().enumerate() {
+                let owner = CHAOS_PLAN[i].0;
+                results.push(match clients[owner].await_done(run) {
+                    Ok(r) => ChaosRun::Done {
+                        n_codes: r.n_codes,
+                        sigma: r.sigma,
+                        per_site: r.per_site,
+                    },
+                    Err(e) => ChaosRun::Failed { err: format!("{e:#}") },
+                });
+            }
+            drop(clients);
+            Ok((runs, pop_order, results))
+        })
+    };
+
+    if chaos {
+        harness.crash_and_restart()?;
+    }
+    let (runs, pop_order, results) =
+        script.join().map_err(|_| anyhow::anyhow!("chaos script thread panicked"))??;
+    let (stats, outcomes) = harness.join()?;
+
+    let journal_records = match journal {
+        Some(path) => super::journal::recover(path)?.records.len() as u64,
+        None => 0,
+    };
+    Ok(ChaosReport {
+        runs,
+        results,
+        pop_order,
+        completed: stats.completed,
+        failed: stats.failed,
+        rejected: stats.rejected,
+        sessions: outcomes
+            .iter()
+            .map(|o| (o.runs_served, o.aborted_runs, o.dml_passes, o.cache_hits))
+            .collect(),
+        journal_records,
+    })
+}
+
+// ─── the adversarial-tenant mix ────────────────────────────────────────────
+
+/// A flooding tenant against two paying ones, with per-client
+/// token-bucket admission (`[leader] admit_rate` / `admit_burst`) in
+/// front of the DRR queue.
+#[derive(Clone, Copy, Debug)]
+pub struct AdversarialMix {
+    /// Jobs each paying tenant submits (priority 4).
+    pub paying_jobs: usize,
+    /// Submits the flooder attempts (priority 1); 0 = the flooder-free
+    /// twin.
+    pub flood_submits: usize,
+    /// `[leader] admit_rate`, tokens per second per client.
+    pub admit_rate: f64,
+    /// `[leader] admit_burst` — the flood is clipped to exactly this many
+    /// admissions, since the virtual clock is frozen while submitting.
+    pub admit_burst: usize,
+    /// Virtual duration of one central step.
+    pub step: Duration,
+    /// Seed for the site dataset and the job specs.
+    pub seed: u64,
+}
+
+impl AdversarialMix {
+    /// The recorded scenario: 6 jobs per paying tenant, a 20-submit flood
+    /// clipped at a burst of 8, one token per second.
+    pub fn canonical(flood: bool) -> AdversarialMix {
+        AdversarialMix {
+            paying_jobs: 6,
+            flood_submits: if flood { 20 } else { 0 },
+            admit_rate: 1.0,
+            admit_burst: 8,
+            step: Duration::from_millis(10),
+            seed: 21,
+        }
+    }
+}
+
+/// What one adversarial pass measured. Deterministic like [`LoadReport`]:
+/// `PartialEq` is exact, including the fairness f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdversarialReport {
+    /// Flood submits the token bucket admitted (= `min(flood_submits,
+    /// admit_burst)` at a frozen clock).
+    pub flooder_accepted: usize,
+    /// One `(code, detail)` per refused flood submit, refusal order —
+    /// every one must be `RateLimited` with a positive nanosecond wait.
+    pub flooder_rejects: Vec<(RejectCode, u64)>,
+    /// Paying tenants' sojourn statistics (clients 1 and 2, priority 4).
+    pub paying: Vec<ClientLatency>,
+    /// The flooder's own statistics (client 3, priority 1; zeros in the
+    /// flooder-free twin).
+    pub flooder: ClientLatency,
+    pub completed: u64,
+    pub rejected: u64,
+    pub makespan_ns: u64,
+    /// Jain index over weight-normalized service at the first tenant
+    /// drain, flood-less tenants excluded.
+    pub fairness: f64,
+}
+
+impl AdversarialReport {
+    /// Stable hand-rolled JSON, same contract as [`LoadReport::to_json`].
+    pub fn to_json(&self) -> String {
+        let lat = |c: &ClientLatency| {
+            format!(
+                "{{\"client\": {}, \"priority\": {}, \"jobs\": {}, \
+                 \"mean_ns\": {}, \"p50_ns\": {}, \"p95_ns\": {}, \"p99_ns\": {}}}",
+                c.client, c.priority, c.jobs, c.mean_ns, c.p50_ns, c.p95_ns, c.p99_ns
+            )
+        };
+        let rejects: Vec<String> = self
+            .flooder_rejects
+            .iter()
+            .map(|(code, detail)| format!("{{\"code\": \"{code:?}\", \"detail_ns\": {detail}}}"))
+            .collect();
+        let paying: Vec<String> = self.paying.iter().map(|c| format!("    {}", lat(c))).collect();
+        format!(
+            "{{\n  \"flooder_accepted\": {},\n  \"flooder_rejects\": [{}],\n  \
+             \"paying\": [\n{}\n  ],\n  \"flooder\": {},\n  \"completed\": {},\n  \
+             \"rejected\": {},\n  \"makespan_ns\": {},\n  \"fairness\": {}\n}}",
+            self.flooder_accepted,
+            rejects.join(", "),
+            paying.join(",\n"),
+            lat(&self.flooder),
+            self.completed,
+            self.rejected,
+            self.makespan_ns,
+            self.fairness
+        )
+    }
+}
+
+const PAYING_PRIORITY: u32 = 4;
+const FLOODER_PRIORITY: u32 = 1;
+
+/// Drive `mix` through the channel leader with admission on: the flooder
+/// fires its whole volley first (worst case for the paying tenants —
+/// every admitted flood job is already queued when they arrive), then the
+/// paying tenants submit round-robin, and the drain stamps sojourns in
+/// virtual time exactly like [`run_channel_load`].
+pub fn run_adversarial_mix(mix: &AdversarialMix) -> Result<AdversarialReport> {
+    if mix.paying_jobs == 0 {
+        bail!("adversarial mix needs paying jobs — they are the measurement");
+    }
+    if mix.step.is_zero() {
+        bail!("adversarial mix step must be > 0");
+    }
+    if !mix.admit_rate.is_finite() || mix.admit_rate <= 0.0 {
+        bail!("adversarial mix admit_rate must be > 0 — admission off defeats the drill");
+    }
+    if mix.admit_burst < 1 {
+        bail!("adversarial mix admit_burst must be ≥ 1");
+    }
+    if mix.paying_jobs > mix.admit_burst {
+        bail!(
+            "paying tenants must fit the admission burst ({} jobs > burst {})",
+            mix.paying_jobs,
+            mix.admit_burst
+        );
+    }
+
+    let mut cfg = PipelineConfig {
+        total_codes: 16,
+        k_clusters: 2,
+        seed: mix.seed,
+        ..Default::default()
+    };
+    cfg.collect_timeout = Duration::from_secs(1 << 22);
+    cfg.leader.fair_queue = true;
+    cfg.leader.admit_rate = mix.admit_rate;
+    cfg.leader.admit_burst = mix.admit_burst;
+
+    let seq = Sequencer::new();
+    let hook: CentralHook = {
+        let seq = Arc::clone(&seq);
+        Arc::new(move |run: u32| seq.enter_and_wait(run))
+    };
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 2 * mix.paying_jobs + mix.flood_submits,
+            allow_label_pull: false,
+            central_workers: 1,
+            client_limit: Some(3),
+        },
+        faults: Vec::new(),
+        central_hook: Some(hook),
+        hangups: vec![],
+    };
+    let mut harness = serve_channel(load_workload(mix.seed), &cfg, opts)?;
+
+    // Client ids 1 and 2 pay; 3 floods.
+    let clients: Vec<_> = (0..3).map(|_| harness.client()).collect();
+    let spec_for = |priority: u32| {
+        let mut spec = spec_from_config(&cfg);
+        spec.priority = priority;
+        spec
+    };
+
+    // The flood: all attempts up front. The clock is frozen, so the
+    // bucket never refills mid-volley — exactly `admit_burst` admissions,
+    // then typed rate-limit refusals.
+    let mut run_owner: HashMap<u32, usize> = HashMap::new();
+    let mut flooder_rejects = Vec::new();
+    for _ in 0..mix.flood_submits {
+        match clients[2].try_submit_tracked(&spec_for(FLOODER_PRIORITY))? {
+            SubmitOutcome::Accepted(acc) => {
+                run_owner.insert(acc.run, 2);
+            }
+            SubmitOutcome::Rejected { code, detail, .. } => {
+                flooder_rejects.push((code, detail));
+            }
+        }
+    }
+    let flooder_accepted = run_owner.len();
+
+    // The paying tenants, round-robin; their budgets fit their buckets,
+    // so every submit must be admitted (submit_tracked errors otherwise).
+    for k in 0..2 * mix.paying_jobs {
+        let owner = k % 2;
+        let acc = clients[owner]
+            .submit_tracked(&spec_for(PAYING_PRIORITY))
+            .with_context(|| format!("paying tenant {} submit", owner + 1))?;
+        run_owner.insert(acc.run, owner);
+    }
+
+    // Drain every admitted job, one central per virtual step.
+    let step_ns = mix.step.as_nanos() as u64;
+    let total = run_owner.len();
+    let mut pops: Vec<(u32, u64)> = Vec::with_capacity(total);
+    for k in 0..total {
+        let run = seq.wait_entered();
+        harness.tick(mix.step);
+        pops.push((run, (k as u64 + 1) * step_ns));
+        seq.release(run);
+    }
+    for &(run, _) in &pops {
+        clients[run_owner[&run]]
+            .await_done(run)
+            .with_context(|| format!("adversarial run {run} failed"))?;
+    }
+    drop(clients);
+    let (stats, _outcomes) = harness.join()?;
+
+    let mut sojourns: Vec<Vec<u64>> = vec![Vec::new(); 3];
+    for &(run, stamp) in &pops {
+        sojourns[run_owner[&run]].push(stamp);
+    }
+    let budgets = [mix.paying_jobs, mix.paying_jobs, flooder_accepted];
+    let weights = [PAYING_PRIORITY, PAYING_PRIORITY, FLOODER_PRIORITY];
+
+    // Fairness window at the first tenant drain, as in the plain load
+    // report — but only over tenants that actually submitted.
+    let mut served = [0usize; 3];
+    let mut window = served;
+    for &(run, _) in &pops {
+        let i = run_owner[&run];
+        served[i] += 1;
+        if served[i] == budgets[i] {
+            window = served;
+            break;
+        }
+    }
+    let shares: Vec<f64> = (0..3)
+        .filter(|&i| budgets[i] > 0)
+        .map(|i| window[i] as f64 / weights[i] as f64)
+        .collect();
+
+    let latency = |i: usize| {
+        let mut s = sojourns[i].clone();
+        s.sort_unstable();
+        let mean = if s.is_empty() { 0 } else { s.iter().sum::<u64>() / s.len() as u64 };
+        ClientLatency {
+            client: i as u64 + 1,
+            priority: weights[i],
+            jobs: s.len(),
+            mean_ns: mean,
+            p50_ns: percentile(&s, 50.0),
+            p95_ns: percentile(&s, 95.0),
+            p99_ns: percentile(&s, 99.0),
+        }
+    };
+
+    Ok(AdversarialReport {
+        flooder_accepted,
+        flooder_rejects,
+        paying: vec![latency(0), latency(1)],
+        flooder: latency(2),
+        completed: stats.completed,
+        rejected: stats.rejected,
+        makespan_ns: pops.last().map(|&(_, t)| t).unwrap_or(0),
+        fairness: jain_index(&shares),
+    })
+}
+
 // ─── the TCP twin ──────────────────────────────────────────────────────────
 
 /// What the TCP twin measures: wall-clock numbers over real loopback
@@ -623,6 +1094,68 @@ mod tests {
             ..LoadMix::skewed_three(false)
         };
         assert!(check_mix(&bad).is_err());
+    }
+
+    #[test]
+    fn chaos_plan_shape() {
+        assert_eq!(CHAOS_PLAN.len(), 6);
+        for &(owner, _, pri) in &CHAOS_PLAN {
+            assert!(owner < 3);
+            assert!((1..=JobSpec::MAX_PRIORITY).contains(&pri));
+        }
+        // the repeated spec that exercises the sites' DML cache under fire
+        assert_eq!(CHAOS_PLAN.iter().filter(|&&(_, s, _)| s == 55).count(), 2);
+        // every tenant owns at least one surviving candidate
+        for owner in 0..3 {
+            assert!(CHAOS_PLAN.iter().any(|&(o, _, _)| o == owner));
+        }
+    }
+
+    #[test]
+    fn adversarial_mix_is_validated() {
+        let ok = AdversarialMix::canonical(true);
+        assert_eq!(ok.flood_submits, 20);
+        assert_eq!(AdversarialMix::canonical(false).flood_submits, 0);
+        let cases = [
+            AdversarialMix { paying_jobs: 0, ..ok },
+            AdversarialMix { step: Duration::ZERO, ..ok },
+            AdversarialMix { admit_rate: 0.0, ..ok },
+            AdversarialMix { admit_rate: f64::NAN, ..ok },
+            AdversarialMix { admit_burst: 0, ..ok },
+            // paying budgets must clear admission untouched
+            AdversarialMix { paying_jobs: 9, ..ok },
+        ];
+        for bad in cases {
+            assert!(run_adversarial_mix(&bad).is_err(), "{bad:?} should be refused");
+        }
+    }
+
+    #[test]
+    fn adversarial_json_is_stable() {
+        let lat = ClientLatency {
+            client: 1,
+            priority: 4,
+            jobs: 6,
+            mean_ns: 5,
+            p50_ns: 4,
+            p95_ns: 9,
+            p99_ns: 9,
+        };
+        let report = AdversarialReport {
+            flooder_accepted: 8,
+            flooder_rejects: vec![(RejectCode::RateLimited, 1_000_000_000)],
+            paying: vec![lat, ClientLatency { client: 2, ..lat }],
+            flooder: ClientLatency { client: 3, priority: 1, ..lat },
+            completed: 20,
+            rejected: 12,
+            makespan_ns: 200,
+            fairness: 0.5,
+        };
+        let a = report.to_json();
+        assert_eq!(a, report.clone().to_json());
+        assert!(a.contains("\"code\": \"RateLimited\""), "{a}");
+        assert!(a.contains("\"detail_ns\": 1000000000"), "{a}");
+        assert!(a.contains("\"fairness\": 0.5"), "{a}");
     }
 
     #[test]

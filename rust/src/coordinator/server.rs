@@ -130,6 +130,10 @@ pub struct ServerStats {
     pub failed: u64,
     /// Submissions refused outright (bad spec, queue full, rate limited).
     pub rejected: u64,
+    /// `SITEINFO2` shard-digest reports received (sites volunteering
+    /// `[site] report_digest`). Observability only — never accounted to a
+    /// run, so byte counters are identical whether sites report or not.
+    pub digests_seen: u64,
 }
 
 /// The reactor mailbox. Site/client reader threads, the acceptor, and the
@@ -525,6 +529,11 @@ pub(crate) struct Reactor<D: ServerDriver> {
     modern: HashSet<u64>,
     /// Per-client admission meters (`[leader] admit_rate` > 0 only).
     buckets: HashMap<u64, TokenBucket>,
+    /// Latest volunteered shard-digest root per site (`SITEINFO2`).
+    /// Observability state: re-learned when a site reconnects, never
+    /// journaled, never consulted by run machines — the DML result cache
+    /// it describes lives entirely on the site.
+    site_digests: HashMap<usize, u64>,
     /// Running mean of completed central durations — the ETA basis of
     /// JOBACCEPT2 (`eta_ns ≈ position × mean central`). 0 until the first
     /// run completes.
@@ -595,6 +604,7 @@ impl<D: ServerDriver> Reactor<D> {
             stats: ServerStats::default(),
             modern: HashSet::new(),
             buckets: HashMap::new(),
+            site_digests: HashMap::new(),
             central_mean_ns: 0.0,
             centrals_done: 0,
             journal: None,
@@ -813,6 +823,9 @@ impl<D: ServerDriver> Reactor<D> {
             stats: parts.stats,
             modern: parts.modern,
             buckets: parts.buckets,
+            // Sites re-volunteer their digest on every (re)connection, so
+            // recovery starts blank rather than trusting pre-crash reports.
+            site_digests: HashMap::new(),
             central_mean_ns: parts.central_mean_ns,
             centrals_done: parts.centrals_done,
             journal: None,
@@ -839,6 +852,7 @@ impl<D: ServerDriver> Reactor<D> {
         self.pulls.clear();
         self.modern.clear();
         self.buckets.clear();
+        self.site_digests.clear();
         self.redial_after = None;
         self.redial_backoff.reset();
         let mut runs: Vec<u32> = self.active.keys().copied().collect();
@@ -962,6 +976,23 @@ impl<D: ServerDriver> Reactor<D> {
                     len,
                     RunInput::Codebook { site, dim, codewords, weights },
                 );
+            }
+            // Digest plane: a streaming site volunteering its shard
+            // version at connection start (`[site] report_digest`).
+            // Recorded for observability and deliberately *not* accounted
+            // to any run — no run exists yet, and byte counters must be
+            // identical whether sites report or not.
+            Message::SiteInfo2 { site: s, n_points, dim, digest, chunks } => {
+                if s as usize != site {
+                    self.site_down(site, "site id mismatch on digest report frame");
+                    return;
+                }
+                eprintln!(
+                    "leader: site {site} shard digest {digest:016x} \
+                     ({n_points} points × {dim}d, {chunks} chunks)"
+                );
+                self.site_digests.insert(site, digest);
+                self.stats.digests_seen += 1;
             }
             // Pull plane: forwarded to the pulling client verbatim, and
             // deliberately *not* accounted to any run — the run's NetReport
@@ -2093,6 +2124,17 @@ pub struct Accepted {
     pub eta_ns: u64,
 }
 
+/// How the leader answered one tracked submit — see
+/// [`JobClient::try_submit_tracked`].
+#[derive(Clone, Debug)]
+pub enum SubmitOutcome {
+    /// The job is queued (or started); the accept carries position + ETA.
+    Accepted(Accepted),
+    /// Refused, with the typed REJECT2 code: `BadSpec`, `QueueFull`, or
+    /// `RateLimited` (where `detail` is nanoseconds until the next token).
+    Rejected { code: RejectCode, detail: u64, msg: String },
+}
+
 /// A client of a job-serving leader (`dsc submit`, tests, drills): typed
 /// submit / await / pull over one [`ClientLink`]. Out-of-order frames (a
 /// `JOBDONE` for an earlier job arriving while waiting for a `JOBACCEPT`)
@@ -2149,6 +2191,33 @@ impl<L: ClientLink> JobClient<L> {
             Message::JobAccept { run } => Ok(Accepted { run, position: 0, eta_ns: 0 }),
             Message::Reject { msg, .. } | Message::RejectCoded { msg, .. } => {
                 bail!("leader rejected the job: {msg}")
+            }
+            _ => unreachable!("filtered above"),
+        }
+    }
+
+    /// Like [`JobClient::submit_tracked`], but a refused submit is data,
+    /// not an error: the typed REJECT2 code and detail come back in
+    /// [`SubmitOutcome::Rejected`] (e.g. `RateLimited` with `detail` =
+    /// nanoseconds until the client's next admission token). Transport
+    /// failures are still `Err`. Load generators and admission drills use
+    /// this to keep flooding past refusals without tearing the link down.
+    pub fn try_submit_tracked(&self, spec: &JobSpec) -> Result<SubmitOutcome> {
+        self.conn.send(&wire::encode(&Message::SubmitPri(spec.clone())))?;
+        match self.next_accept()? {
+            Message::JobAcceptExt { run, position, eta_ns } => {
+                Ok(SubmitOutcome::Accepted(Accepted { run, position, eta_ns }))
+            }
+            Message::JobAccept { run } => {
+                Ok(SubmitOutcome::Accepted(Accepted { run, position: 0, eta_ns: 0 }))
+            }
+            Message::RejectCoded { code, detail, msg, .. } => {
+                Ok(SubmitOutcome::Rejected { code, detail, msg })
+            }
+            Message::Reject { msg, .. } => {
+                // A modern submit always gets a coded reply; a legacy
+                // REJECT here means the peer predates REJECT2.
+                Ok(SubmitOutcome::Rejected { code: RejectCode::BadSpec, detail: 0, msg })
             }
             _ => unreachable!("filtered above"),
         }

@@ -251,6 +251,28 @@ pub fn lloyd(data: &Dataset, k: usize, max_iters: usize, tol: f64, rng: &mut Rng
     Codebook { dim, codewords: centroids, weights, assign }
 }
 
+/// Mini-batch fold of points `new_from..` into an existing codebook: each
+/// new point joins its nearest codeword, whose centroid tracks the
+/// running mean of its (grown) group — `c += (x − c) / w`, the classic
+/// online update. One pass over the new points only; existing
+/// assignments are never revisited, so the fold is O(new · k · d).
+pub fn fold_in(cb: &mut Codebook, data: &Dataset, new_from: usize) {
+    let dim = cb.dim;
+    debug_assert_eq!(cb.assign.len(), new_from);
+    debug_assert!(cb.n_codes() > 0, "fold_in needs a non-empty codebook");
+    for i in new_from..data.len() {
+        let best = super::nearest_code(cb, data.point(i)) as usize;
+        cb.weights[best] += 1;
+        let w = cb.weights[best] as f32;
+        let p = data.point(i);
+        let row = &mut cb.codewords[best * dim..(best + 1) * dim];
+        for (c, &x) in row.iter_mut().zip(p) {
+            *c += (x - *c) / w;
+        }
+        cb.assign.push(best as u32);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,6 +372,23 @@ mod tests {
         let b = lloyd(&ds, 20, 15, 1e-9, &mut r2);
         assert_eq!(a.assign, b.assign);
         assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn fold_in_tracks_the_running_mean() {
+        let mut ds = Dataset::new("m", 1, 1);
+        for v in [0.0f32, 2.0] {
+            ds.push(&[v], 0);
+        }
+        let mut rng = Rng::new(1);
+        let mut cb = lloyd(&ds, 1, 10, 1e-9, &mut rng);
+        assert_eq!(cb.codeword(0), &[1.0]);
+        ds.push(&[4.0], 0);
+        fold_in(&mut cb, &ds, 2);
+        cb.validate(3).unwrap();
+        assert_eq!(cb.weights, vec![3]);
+        // running mean of {0, 2, 4}
+        assert!((cb.codeword(0)[0] - 2.0).abs() < 1e-6);
     }
 
     #[test]

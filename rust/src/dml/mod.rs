@@ -133,8 +133,11 @@ impl Codebook {
     }
 }
 
-/// Parameters shared by both DML implementations.
-#[derive(Clone, Debug)]
+/// Parameters shared by both DML implementations. `PartialEq` is exact —
+/// the streaming site keys its DML result cache on `(params, shard
+/// version)`, so two work orders compare equal iff a cached codebook can
+/// stand in for a recompute.
+#[derive(Clone, Debug, PartialEq)]
 pub struct DmlParams {
     pub kind: DmlKind,
     /// Codeword budget. For K-means this is the exact number of clusters;
@@ -173,6 +176,66 @@ pub fn apply(data: &Dataset, params: &DmlParams) -> Codebook {
             sample::build(data, params.target_codes.min(data.len().max(1)), &mut rng)
         }
     }
+}
+
+/// Fold points `new_from..data.len()` into an existing codebook
+/// incrementally — the streaming-site ingest path. No full rescan:
+///
+/// * K-means — each new point joins its nearest codeword, which tracks
+///   the running mean of its group (mini-batch refinement);
+/// * rpTrees — each new point joins its nearest leaf; a leaf that
+///   overflows the (recomputed) `ceil(n / target_codes)` cap is split
+///   in place via [`rptree::leaf_groups`] over its members only;
+/// * random sample — landmarks are real points and stay fixed; new
+///   points only join their nearest landmark's group.
+///
+/// An empty codebook (or `new_from == 0`) falls back to a fresh
+/// [`apply`] — there is nothing to fold into. The result always passes
+/// [`Codebook::validate`] for the extended shard; it is an *approximate*
+/// refresh, deliberately not bit-equal to a from-scratch rebuild (the
+/// site's result cache recomputes exactly when a job needs that).
+pub fn fold_in(cb: &mut Codebook, data: &Dataset, new_from: usize, params: &DmlParams) {
+    debug_assert_eq!(cb.assign.len(), new_from);
+    if cb.n_codes() == 0 || new_from == 0 {
+        *cb = apply(data, params);
+        return;
+    }
+    match params.kind {
+        DmlKind::KMeans => kmeans::fold_in(cb, data, new_from),
+        DmlKind::RpTree => {
+            let max_leaf = data.len().div_ceil(params.target_codes.max(1)).max(1);
+            // A distinct deterministic stream from the build's: fold-time
+            // splits must not replay the tree-construction randomness.
+            let mut rng = Rng::new(params.seed ^ 0x666f_6c64_2d69_6e21);
+            rptree::fold_in(cb, data, new_from, max_leaf, &mut rng);
+        }
+        DmlKind::RandomSample => {
+            for i in new_from..data.len() {
+                let best = nearest_code(cb, data.point(i));
+                cb.weights[best as usize] += 1;
+                cb.assign.push(best);
+            }
+        }
+    }
+    debug_assert!(cb.validate(data.len()).is_ok());
+}
+
+/// Index of the codeword nearest to `p` (squared Euclidean).
+pub(crate) fn nearest_code(cb: &Codebook, p: &[f32]) -> u32 {
+    let mut best = 0u32;
+    let mut best_d = f64::INFINITY;
+    for c in 0..cb.n_codes() {
+        let mut d2 = 0.0f64;
+        for (x, y) in p.iter().zip(cb.codeword(c)) {
+            let d = (*x - *y) as f64;
+            d2 += d * d;
+        }
+        if d2 < best_d {
+            best_d = d2;
+            best = c as u32;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -225,5 +288,51 @@ mod tests {
         assert_eq!(DmlKind::parse("kmeans"), Some(DmlKind::KMeans));
         assert_eq!(DmlKind::parse("rpTrees"), Some(DmlKind::RpTree));
         assert_eq!(DmlKind::parse("dbscan"), None);
+    }
+
+    /// The ingest fold keeps every codebook invariant and stays close to
+    /// a from-scratch rebuild in distortion, for each DML kind.
+    #[test]
+    fn fold_in_extends_every_kind_consistently() {
+        let full = gmm::paper_mixture_2d(1_200, 31);
+        let cut = 1_000;
+        let mut base = Dataset::new("base", full.dim, full.n_classes);
+        for i in 0..cut {
+            base.push(full.point(i), full.labels[i]);
+        }
+        for kind in [DmlKind::KMeans, DmlKind::RpTree, DmlKind::RandomSample] {
+            let params = DmlParams { kind, target_codes: 24, seed: 7, ..Default::default() };
+            let mut cb = apply(&base, &params);
+            let mut grown = base.clone();
+            for i in cut..full.len() {
+                grown.push(full.point(i), full.labels[i]);
+            }
+            fold_in(&mut cb, &grown, cut, &params);
+            cb.validate(grown.len()).unwrap();
+            assert_eq!(
+                cb.weights.iter().map(|&w| w as usize).sum::<usize>(),
+                grown.len(),
+                "{kind}: weights must cover the extended shard"
+            );
+            let folded = cb.distortion(&grown);
+            let scratch = apply(&grown, &params).distortion(&grown);
+            assert!(folded.is_finite() && folded >= 0.0);
+            assert!(
+                folded <= scratch * 5.0 + 1e-9,
+                "{kind}: folded distortion {folded} vs from-scratch {scratch}"
+            );
+        }
+    }
+
+    /// Folding into an empty codebook (empty original shard) rebuilds.
+    #[test]
+    fn fold_in_from_empty_rebuilds() {
+        let ds = gmm::paper_mixture_2d(200, 33);
+        let params = DmlParams { target_codes: 8, ..Default::default() };
+        let mut cb = apply(&Dataset::new("e", ds.dim, ds.n_classes), &params);
+        assert_eq!(cb.n_codes(), 0);
+        fold_in(&mut cb, &ds, 0, &params);
+        cb.validate(ds.len()).unwrap();
+        assert_eq!(cb.n_codes(), 8);
     }
 }

@@ -170,6 +170,87 @@ fn emit_leaf(
     weights.push(node.len() as u32);
 }
 
+/// Online fold of points `new_from..` into an rpTree codebook: each new
+/// point joins its nearest leaf (whose centroid tracks the running mean),
+/// then any leaf that overflowed `max_leaf` is re-split *in place* by
+/// running [`leaf_groups`] over just that leaf's members — the rest of
+/// the tree is untouched, so ingest costs O(new · codes · d) plus the
+/// split work of the overflowing leaves only.
+pub fn fold_in(
+    cb: &mut Codebook,
+    data: &Dataset,
+    new_from: usize,
+    max_leaf: usize,
+    rng: &mut Rng,
+) {
+    let dim = cb.dim;
+    debug_assert_eq!(cb.assign.len(), new_from);
+    debug_assert!(cb.n_codes() > 0, "fold_in needs a non-empty codebook");
+    let max_leaf = max_leaf.max(1);
+
+    let mut touched: Vec<u32> = Vec::new();
+    for i in new_from..data.len() {
+        let best = super::nearest_code(cb, data.point(i));
+        let b = best as usize;
+        cb.weights[b] += 1;
+        let w = cb.weights[b] as f32;
+        let p = data.point(i);
+        let row = &mut cb.codewords[b * dim..(b + 1) * dim];
+        for (c, &x) in row.iter_mut().zip(p) {
+            *c += (x - *c) / w;
+        }
+        cb.assign.push(best);
+        if cb.weights[b] as usize > max_leaf && !touched.contains(&best) {
+            touched.push(best);
+        }
+    }
+    touched.sort_unstable(); // split order is deterministic, not arrival order
+
+    for leaf in touched {
+        split_leaf(cb, data, leaf, max_leaf, rng);
+    }
+}
+
+/// Re-split one overflowing leaf: gather its members, partition them with
+/// [`leaf_groups`], keep the first group under the old code id and append
+/// the rest as fresh codewords (leaf means recomputed exactly, like
+/// [`emit_leaf`]). A constant (unsplittable) leaf stays oversized, the
+/// same concession [`build`] makes.
+fn split_leaf(cb: &mut Codebook, data: &Dataset, leaf: u32, max_leaf: usize, rng: &mut Rng) {
+    let dim = cb.dim;
+    let members: Vec<u32> =
+        (0..cb.assign.len() as u32).filter(|&i| cb.assign[i as usize] == leaf).collect();
+    let mut buf: Vec<f32> = Vec::with_capacity(members.len() * dim);
+    for &m in &members {
+        buf.extend_from_slice(data.point(m as usize));
+    }
+    let groups = leaf_groups(&buf, dim, max_leaf, rng);
+    if groups.len() <= 1 {
+        return; // constant node: cannot split, stays an oversized leaf
+    }
+    for (g_idx, group) in groups.iter().enumerate() {
+        let code = if g_idx == 0 { leaf } else { cb.weights.len() as u32 };
+        let mut mean = vec![0.0f64; dim];
+        for &local in group {
+            let i = members[local as usize] as usize;
+            for j in 0..dim {
+                mean[j] += data.point(i)[j] as f64;
+            }
+            cb.assign[i] = code;
+        }
+        let inv = 1.0 / group.len() as f64;
+        let row: Vec<f32> = mean.iter().map(|&s| (s * inv) as f32).collect();
+        if g_idx == 0 {
+            cb.codewords[leaf as usize * dim..(leaf as usize + 1) * dim]
+                .copy_from_slice(&row);
+            cb.weights[leaf as usize] = group.len() as u32;
+        } else {
+            cb.codewords.extend_from_slice(&row);
+            cb.weights.push(group.len() as u32);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +322,50 @@ mod tests {
         let b = build(&ds, 50, &mut r2);
         assert_eq!(a.assign, b.assign);
         assert_eq!(a.codewords, b.codewords);
+    }
+
+    #[test]
+    fn fold_in_splits_overflowing_leaves_only() {
+        let full = gmm::paper_mixture_2d(1_500, 27);
+        let cut = 1_200;
+        let mut base = Dataset::new("b", full.dim, full.n_classes);
+        for i in 0..cut {
+            base.push(full.point(i), full.labels[i]);
+        }
+        let mut rng = Rng::new(5);
+        let mut cb = build(&base, 30, &mut rng);
+        let before_codes = cb.n_codes();
+
+        let mut grown = base.clone();
+        for i in cut..full.len() {
+            grown.push(full.point(i), full.labels[i]);
+        }
+        let mut fold_rng = Rng::new(99);
+        fold_in(&mut cb, &grown, cut, 30, &mut fold_rng);
+        cb.validate(grown.len()).unwrap();
+        // continuous data: every leaf respects the cap after the fold
+        assert!(cb.weights.iter().all(|&w| w <= 30), "oversized leaf after fold");
+        // overflows were split, so the tree grew where the points landed
+        assert!(cb.n_codes() >= before_codes);
+    }
+
+    #[test]
+    fn fold_in_constant_leaf_stays_oversized() {
+        let mut ds = Dataset::new("c", 2, 1);
+        for _ in 0..10 {
+            ds.push(&[1.0, 1.0], 0);
+        }
+        let mut rng = Rng::new(3);
+        let mut cb = build(&ds, 10, &mut rng);
+        assert_eq!(cb.n_codes(), 1);
+        for _ in 0..5 {
+            ds.push(&[1.0, 1.0], 0);
+        }
+        let mut fold_rng = Rng::new(4);
+        fold_in(&mut cb, &ds, 10, 10, &mut fold_rng);
+        cb.validate(15).unwrap();
+        assert_eq!(cb.n_codes(), 1); // unsplittable: one oversized leaf
+        assert_eq!(cb.weights, vec![15]);
     }
 
     #[test]

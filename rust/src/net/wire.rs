@@ -127,6 +127,13 @@ pub enum Message {
     /// machine-readable quantity (see [`RejectCode`]), and `msg` stays a
     /// short human-readable sentence.
     RejectCoded { run: u32, code: RejectCode, detail: u64, msg: String },
+    /// Site → leader: shard shape *plus* the shard's merkle-style version
+    /// digest (`docs/PROTOCOL.md` §"The shard digest"). A streaming site
+    /// volunteers it once per session when `[site] report_digest` is on;
+    /// `digest` is the chunked-hash root and `chunks` the leaf count.
+    /// Legacy [`Message::SiteInfo`] stays byte-frozen — this is a new tag,
+    /// and leaders that predate it simply never see the frame.
+    SiteInfo2 { site: u32, n_points: u64, dim: u32, digest: u64, chunks: u32 },
 }
 
 /// Machine-readable refusal reason inside a [`Message::RejectCoded`].
@@ -264,6 +271,7 @@ const TAG_REJECT: u8 = 17;
 const TAG_SUBMIT_PRI: u8 = 18;
 const TAG_JOB_ACCEPT2: u8 = 19;
 const TAG_REJECT2: u8 = 20;
+const TAG_SITEINFO2: u8 = 21;
 
 /// Refusal messages are short human-readable sentences; anything larger is
 /// hostile.
@@ -595,6 +603,14 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u32(bytes.len() as u32);
             w.buf.extend_from_slice(bytes);
         }
+        Message::SiteInfo2 { site, n_points, dim, digest, chunks } => {
+            w.u8(TAG_SITEINFO2);
+            w.u32(*site);
+            w.u64(*n_points);
+            w.u32(*dim);
+            w.u64(*digest);
+            w.u32(*chunks);
+        }
     }
     w.buf
 }
@@ -764,6 +780,14 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
                 Err(_) => bail!("reject message is not UTF-8"),
             };
             Message::RejectCoded { run, code, detail, msg }
+        }
+        TAG_SITEINFO2 => {
+            let site = r.u32()?;
+            let n_points = r.u64()?;
+            let dim = r.u32()?;
+            let digest = r.u64()?;
+            let chunks = r.u32()?;
+            Message::SiteInfo2 { site, n_points, dim, digest, chunks }
         }
         t => bail!("unknown message tag {t}"),
     };
@@ -1107,12 +1131,40 @@ mod tests {
                 detail: 8,
                 msg: "x".into(),
             }),
+            encode(&Message::SiteInfo2 {
+                site: 0,
+                n_points: 5,
+                dim: 2,
+                digest: 0xDEAD_BEEF,
+                chunks: 1,
+            }),
         ];
         for frame in frames {
             for cut in 0..frame.len() {
                 assert!(decode(&frame[..cut]).is_err(), "cut at {cut} should fail");
             }
         }
+    }
+
+    #[test]
+    fn siteinfo2_roundtrip_and_legacy_frozen() {
+        let msg = Message::SiteInfo2 {
+            site: 3,
+            n_points: 1 << 40,
+            dim: 10,
+            digest: 0x0123_4567_89AB_CDEF,
+            chunks: 1_025,
+        };
+        let frame = encode(&msg);
+        assert_eq!(decode(&frame).unwrap(), msg);
+        // 1 + 4 + 8 + 4 + 8 + 4
+        assert_eq!(frame.len(), 29);
+        assert_eq!(frame[0], TAG_SITEINFO2);
+        // forward-compat rule: the digest report is a *new* tag; the legacy
+        // SITEINFO frame stays byte-identical (old leaders keep working)
+        let legacy = encode(&Message::SiteInfo { site: 3, n_points: 1 << 40, dim: 10 });
+        assert_eq!(legacy.len(), 17);
+        assert_eq!(&frame[1..17], &legacy[1..]);
     }
 
     #[test]

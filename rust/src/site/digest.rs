@@ -1,0 +1,189 @@
+//! Merkle-style shard digest — the version tag behind the site's DML
+//! result cache and the `SITEINFO2` report.
+//!
+//! The shard is hashed in fixed-size chunks of points; each chunk yields a
+//! 64-bit FNV-1a leaf hash over the raw point bytes (coordinates in
+//! little-endian f32 order, then the class label), and the root folds the
+//! leaf hashes together with the shard geometry (`n_points`, `dim`). The
+//! tree is merkle-*style*, not cryptographic: it exists so that ingesting
+//! points is O(tail + new chunks) — only the trailing partial chunk is
+//! rehashed and fresh chunks appended — never a full rescan, while any
+//! change to any point still flips the root.
+//!
+//! Determinism matters more than collision resistance here: the root is a
+//! cache key and a change detector between two honest ends of one link,
+//! and the same bytes must produce the same root on every platform (f32
+//! little-endian bytes are, unlike the float values' formatting, exact).
+
+use crate::data::Dataset;
+
+/// Default points per leaf chunk (`[site] digest_chunk`).
+pub const DEFAULT_DIGEST_CHUNK: usize = 1024;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Incrementally maintained chunked digest over one site's shard.
+#[derive(Clone, Debug)]
+pub struct ShardDigest {
+    chunk_points: usize,
+    /// One FNV-1a hash per chunk of `chunk_points` points (the last leaf
+    /// may cover a partial chunk and is rewritten as it fills).
+    leaves: Vec<u64>,
+    /// Points hashed so far — must track `Dataset::len()` of the shard.
+    n_points: usize,
+    dim: usize,
+}
+
+impl ShardDigest {
+    /// Hash the whole shard from scratch.
+    pub fn over(data: &Dataset, chunk_points: usize) -> ShardDigest {
+        let mut d = ShardDigest {
+            chunk_points: chunk_points.max(1),
+            leaves: Vec::new(),
+            n_points: 0,
+            dim: data.dim,
+        };
+        d.append(data, 0);
+        d
+    }
+
+    /// Fold points `from..data.len()` into the digest. `from` must equal
+    /// the number of points already hashed — appends are strictly
+    /// sequential, mirroring `Dataset::push`. Only the trailing partial
+    /// leaf is rehashed; full leaves behind it are never touched.
+    pub fn append(&mut self, data: &Dataset, from: usize) {
+        assert_eq!(
+            from, self.n_points,
+            "digest append must continue from the last hashed point"
+        );
+        assert_eq!(data.dim, self.dim, "digest append with a different dim");
+        assert!(from <= data.len());
+        // Drop the trailing partial leaf (if any): it is rehashed below
+        // together with the new points that extend it.
+        let first_dirty = from - (from % self.chunk_points);
+        self.leaves.truncate(first_dirty / self.chunk_points);
+
+        let mut i = first_dirty;
+        while i < data.len() {
+            let end = (i + self.chunk_points).min(data.len());
+            let mut h = FNV_OFFSET;
+            for p in i..end {
+                for &v in data.point(p) {
+                    h = fnv1a(h, &v.to_le_bytes());
+                }
+                h = fnv1a(h, &data.labels[p].to_le_bytes());
+            }
+            self.leaves.push(h);
+            i = end;
+        }
+        self.n_points = data.len();
+    }
+
+    /// The root: leaf hashes folded with the shard geometry. Two shards
+    /// with the same points in the same order (and the same chunking)
+    /// share a root; any ingested point moves it.
+    pub fn root(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, &(self.n_points as u64).to_le_bytes());
+        h = fnv1a(h, &(self.dim as u64).to_le_bytes());
+        for leaf in &self.leaves {
+            h = fnv1a(h, &leaf.to_le_bytes());
+        }
+        h
+    }
+
+    /// Leaf count (the `chunks` field of `SITEINFO2`).
+    pub fn chunks(&self) -> u32 {
+        self.leaves.len() as u32
+    }
+
+    /// Points hashed so far.
+    pub fn n_points(&self) -> usize {
+        self.n_points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm;
+
+    fn shard(n: usize, seed: u64) -> Dataset {
+        gmm::paper_mixture_2d(n, seed)
+    }
+
+    #[test]
+    fn append_equals_from_scratch_at_every_boundary() {
+        // The merkle property: growing the digest incrementally — in any
+        // number of installments, across chunk boundaries — produces the
+        // same root as hashing the final shard in one pass.
+        let full = shard(100, 3);
+        for chunk in [1usize, 4, 7, 100, 1000] {
+            for cut in [1usize, 3, 4, 5, 50, 99] {
+                let mut grown = Dataset::new("g", full.dim, full.n_classes);
+                for i in 0..cut {
+                    grown.push(full.point(i), full.labels[i]);
+                }
+                let mut d = ShardDigest::over(&grown, chunk);
+                let before = d.root();
+                for i in cut..full.len() {
+                    grown.push(full.point(i), full.labels[i]);
+                }
+                d.append(&grown, cut);
+                let scratch = ShardDigest::over(&full, chunk);
+                assert_eq!(d.root(), scratch.root(), "chunk={chunk} cut={cut}");
+                assert_eq!(d.chunks(), scratch.chunks());
+                assert_ne!(before, d.root(), "ingest must move the root");
+            }
+        }
+    }
+
+    #[test]
+    fn any_point_change_flips_the_root() {
+        let a = shard(64, 5);
+        let base = ShardDigest::over(&a, 16).root();
+        for i in [0usize, 15, 16, 40, 63] {
+            let mut b = a.clone();
+            b.points[i * b.dim] += 1.0;
+            assert_ne!(ShardDigest::over(&b, 16).root(), base, "point {i}");
+        }
+        // a label change alone flips it too: the digest covers the shard
+        let mut c = a.clone();
+        c.labels[20] ^= 1;
+        assert_ne!(ShardDigest::over(&c, 16).root(), base);
+    }
+
+    #[test]
+    fn chunk_size_changes_the_root_but_not_consistency() {
+        let a = shard(50, 7);
+        let d16 = ShardDigest::over(&a, 16);
+        let d8 = ShardDigest::over(&a, 8);
+        assert_eq!(d16.chunks(), 4); // 16+16+16+2
+        assert_eq!(d8.chunks(), 7); // 6×8 + 2
+        assert_ne!(d16.root(), d8.root());
+        // same data, same chunking → same root (it is a pure function)
+        assert_eq!(d16.root(), ShardDigest::over(&a, 16).root());
+    }
+
+    #[test]
+    fn empty_shard_has_a_stable_root() {
+        let e = Dataset::new("e", 3, 1);
+        let d = ShardDigest::over(&e, 4);
+        assert_eq!(d.chunks(), 0);
+        assert_eq!(d.n_points(), 0);
+        assert_eq!(d.root(), ShardDigest::over(&e, 4).root());
+        // geometry is part of the root: an empty 2-D shard differs
+        let e2 = Dataset::new("e2", 2, 1);
+        assert_ne!(d.root(), ShardDigest::over(&e2, 4).root());
+    }
+}

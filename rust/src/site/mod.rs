@@ -24,6 +24,19 @@
 //! (possibly single-core) host, scheduler contention between them must not
 //! leak into the max-over-sites elapsed model. See
 //! [`crate::metrics::thread_cpu_time`].
+//!
+//! [`Session`] is the *streaming* owner behind [`session`]: it holds the
+//! shard, its merkle-style [`ShardDigest`] version, and a DML result cache
+//! keyed by `(work-order params, shard version)`. New points arrive through
+//! [`Session::ingest`] (the `dsc site --ingest` seam) — they are folded
+//! into the live codebook incrementally ([`dml::fold_in`]) and move the
+//! digest, which invalidates every cached result at once. A repeat work
+//! order at an unchanged shard replays its cached codebook without a
+//! single DML pass; because DML is deterministic, the replay is
+//! bit-identical to a recompute, so nothing downstream (leader accounting,
+//! labels, byte counters) can tell the difference.
+
+pub mod digest;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -34,6 +47,8 @@ use anyhow::{bail, Context, Result};
 use crate::data::Dataset;
 use crate::dml::{self, DmlParams};
 use crate::net::{Message, SiteNet};
+
+pub use digest::ShardDigest;
 
 /// What one site produced and measured during a pipeline run.
 #[derive(Clone, Debug)]
@@ -153,8 +168,12 @@ pub struct RunServed {
     pub run: u32,
     pub n_points: usize,
     pub n_codes: usize,
+    /// Thread CPU time of the DML phase — [`Duration::ZERO`] on a cache
+    /// hit, which performed no DML at all.
     pub dml_time: Duration,
     pub distortion: f64,
+    /// Whether the work order was answered from the DML result cache.
+    pub cache_hit: bool,
 }
 
 /// How a [`session`] ended.
@@ -165,10 +184,15 @@ pub struct SessionOutcome {
     /// Runs still mid-flight when the leader went away (their state is
     /// discarded with the connection).
     pub aborted_runs: usize,
+    /// Full DML computations this session performed.
+    pub dml_passes: usize,
+    /// Work orders answered from the DML result cache (zero DML passes).
+    pub cache_hits: usize,
 }
 
-/// Limits on one multi-run [`session`] (config `[site]`, validated ≥ 1 at
-/// parse time — zero would silently refuse every pull or every run).
+/// Limits on one multi-run [`session`] (config `[site]`; the count knobs
+/// are validated ≥ 1 at parse time — zero would silently refuse every
+/// pull or every run, or hash the shard point by point).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SessionLimits {
     /// Completed runs whose populated labels are kept for `LABELSPULL`.
@@ -179,154 +203,362 @@ pub struct SessionLimits {
     /// calls it hostile — a sanity backstop sized far above any real
     /// `[leader] max_jobs`.
     pub max_open_runs: usize,
+    /// Answer repeat work orders from the shard-versioned DML result
+    /// cache (`[site] cache_dml`). Deterministic DML makes a cached
+    /// codebook bit-identical to a recompute, so this is on by default;
+    /// turning it off forces a full DML pass per work order.
+    pub cache_dml: bool,
+    /// Distinct DML results kept per site, oldest evicted first
+    /// (`[site] dml_cache_runs`).
+    pub dml_cache_runs: usize,
+    /// Points per leaf chunk of the shard digest
+    /// (`[site] digest_chunk`) — smaller chunks mean cheaper ingest
+    /// rehashing, more leaf hashes.
+    pub digest_chunk: usize,
+    /// Volunteer a `SITEINFO2` digest report at the start of each session
+    /// (`[site] report_digest`, default off: a leader that predates the
+    /// tag rejects unknown frames loudly — per the forward-compat rules —
+    /// so the site volunteers nothing unless the operator opts in).
+    pub report_digest: bool,
 }
 
 impl Default for SessionLimits {
     fn default() -> Self {
-        SessionLimits { label_cache_runs: 8, max_open_runs: 64 }
+        SessionLimits {
+            label_cache_runs: 8,
+            max_open_runs: 64,
+            cache_dml: true,
+            dml_cache_runs: 8,
+            digest_chunk: digest::DEFAULT_DIGEST_CHUNK,
+            report_digest: false,
+        }
     }
 }
 
-/// Serve a persistent multi-run session to a job-serving leader: the site
-/// side of the run-scoped dialect. Each `RUNSTART` is answered with a
-/// registration, each work order compresses the *same cached shard* (the
-/// daemon loads it once at startup — never per run or per connection), and
-/// each label frame completes one run, invoking `on_served`. Frames of
-/// different runs may interleave arbitrarily; per-run state is keyed by
-/// run id, bounded by `limits` ([`SessionLimits`], config `[site]`).
-/// Returns when the leader closes the link cleanly; errors on protocol
-/// violations or a dead/idle-past-deadline link, either of which sends the
-/// daemon back to its accept loop.
+/// One cached DML result: the codebook computed for `params` when the
+/// shard digest root was `version`. Valid exactly while both match.
+struct DmlCacheEntry {
+    params: DmlParams,
+    version: u64,
+    cb: dml::Codebook,
+    distortion: f64,
+}
+
+/// A streaming site: the shard, its version digest, the DML result cache
+/// and the live codebook, owned across connections and ingests.
+///
+/// The `dsc site` daemon builds one `Session` at startup and drives
+/// [`Session::serve`] once per accepted leader connection — the caches
+/// and the digest survive reconnects. [`Session::ingest`] is the seam
+/// through which data arrives after startup (`dsc site --ingest`, tests,
+/// embedders): it appends points, advances the digest incrementally, and
+/// folds the new points into the live codebook — never a full rescan.
+pub struct Session {
+    data: Dataset,
+    limits: SessionLimits,
+    digest: ShardDigest,
+    /// Cached per-work-order DML results, newest last, capped at
+    /// `dml_cache_runs`. Keyed by `(params, shard version)` — an ingest
+    /// moves the version and thereby invalidates every entry at once
+    /// (stale entries age out of the bounded queue).
+    dml_cache: Vec<DmlCacheEntry>,
+    /// The most recently computed codebook and its work order — the
+    /// streaming summary that ingests refine incrementally.
+    live: Option<(DmlParams, dml::Codebook)>,
+    /// Cumulative counters across every serve on this session.
+    total_dml_passes: usize,
+    total_cache_hits: usize,
+}
+
+impl Session {
+    /// Take ownership of the shard and hash it (chunked, per
+    /// `limits.digest_chunk`).
+    pub fn new(data: Dataset, limits: SessionLimits) -> Session {
+        let digest = ShardDigest::over(&data, limits.digest_chunk);
+        Session {
+            data,
+            limits,
+            digest,
+            dml_cache: Vec::new(),
+            live: None,
+            total_dml_passes: 0,
+            total_cache_hits: 0,
+        }
+    }
+
+    /// The shard as this site currently holds it.
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// The shard's current version — the digest root. Any ingested point
+    /// moves it.
+    pub fn shard_version(&self) -> u64 {
+        self.digest.root()
+    }
+
+    /// Leaf-chunk count of the digest (the `chunks` field of `SITEINFO2`).
+    pub fn digest_chunks(&self) -> u32 {
+        self.digest.chunks()
+    }
+
+    /// Cumulative `(dml_passes, cache_hits)` across every serve.
+    pub fn dml_stats(&self) -> (usize, usize) {
+        (self.total_dml_passes, self.total_cache_hits)
+    }
+
+    /// Ingest new points into the shard: append, advance the digest over
+    /// just the new tail, and fold the points into the live codebook
+    /// incrementally ([`dml::fold_in`] — mini-batch K-means refinement /
+    /// online rpTree leaf splits). Returns the number of points added.
+    ///
+    /// Takes `&mut self` — ingest happens *between* serves (the daemon's
+    /// accept loop) or before the first one (`--ingest`), never while a
+    /// connection is live on this session.
+    pub fn ingest(&mut self, points: &Dataset) -> Result<usize> {
+        if points.dim != self.data.dim {
+            bail!(
+                "ingest of {}-dim points into a {}-dim shard",
+                points.dim,
+                self.data.dim
+            );
+        }
+        let old_len = self.data.len();
+        for i in 0..points.len() {
+            self.data.push(points.point(i), points.labels[i]);
+        }
+        if points.len() == 0 {
+            return Ok(0); // digest (and caches) unchanged: nothing arrived
+        }
+        self.digest.append(&self.data, old_len);
+        if let Some((params, cb)) = self.live.as_mut() {
+            let params = params.clone();
+            dml::fold_in(cb, &self.data, old_len, &params);
+        }
+        Ok(points.len())
+    }
+
+    /// Serve one persistent multi-run connection from a job-serving
+    /// leader: the site side of the run-scoped dialect. Each `RUNSTART`
+    /// is answered with a registration, each work order compresses the
+    /// *same owned shard* (loaded once per daemon — never per run or per
+    /// connection) or replays a cached result when the shard version
+    /// still matches, and each label frame completes one run, invoking
+    /// `on_served`. Frames of different runs may interleave arbitrarily;
+    /// per-run state is keyed by run id, bounded by the session's
+    /// [`SessionLimits`]. Returns when the leader closes the link
+    /// cleanly; errors on protocol violations or a dead link, either of
+    /// which sends the daemon back to its accept loop (the session — and
+    /// its caches — survive).
+    pub fn serve(
+        &mut self,
+        net: &SiteNet,
+        out_path: Option<&Path>,
+        mut on_served: impl FnMut(&RunServed),
+    ) -> Result<SessionOutcome> {
+        struct OpenRun {
+            cb: dml::Codebook,
+            dml_time: Duration,
+            distortion: f64,
+            cache_hit: bool,
+        }
+
+        let site_id = net.site_id();
+        let limits = self.limits;
+        // Runs whose labels have not come back yet, by run id: the
+        // assignment table must survive until populate time.
+        let mut open: HashMap<u32, OpenRun> = HashMap::new();
+        // Completed runs' populated labels, newest last, for label pulls.
+        let mut cache: Vec<(u32, Vec<u16>)> = Vec::new();
+        let mut outcome = SessionOutcome::default();
+
+        if limits.report_digest {
+            // Volunteer the shard version once per connection. The frame
+            // is observability, not protocol: run budgets and the result
+            // cache never depend on the leader having seen it.
+            net.send(&Message::SiteInfo2 {
+                site: site_id as u32,
+                n_points: self.data.len() as u64,
+                dim: self.data.dim as u32,
+                digest: self.digest.root(),
+                chunks: self.digest.chunks(),
+            })
+            .context("send digest report")?;
+        }
+
+        loop {
+            let msg = match net.recv_opt().context("await next session frame")? {
+                Some(msg) => msg,
+                None => {
+                    outcome.aborted_runs = open.len();
+                    return Ok(outcome); // leader closed cleanly between frames
+                }
+            };
+            match msg {
+                Message::RunStart { run } => {
+                    // Register this shard for the new run; budgets come back
+                    // with the work order.
+                    net.send(&Message::RunSiteInfo {
+                        run,
+                        site: site_id as u32,
+                        n_points: self.data.len() as u64,
+                        dim: self.data.dim as u32,
+                    })
+                    .context("send run registration")?;
+                }
+                Message::RunDmlRequest { run, site, dml, target_codes, max_iters, tol, seed } => {
+                    if site as usize != site_id {
+                        bail!("dml request for run {run} addressed to site {site}, this is site {site_id}");
+                    }
+                    if open.contains_key(&run) {
+                        bail!("two dml requests for run {run}");
+                    }
+                    if open.len() >= limits.max_open_runs {
+                        bail!(
+                            "leader holds {} runs open on one session ([site] max_open_runs)",
+                            limits.max_open_runs
+                        );
+                    }
+                    let params = DmlParams {
+                        kind: dml,
+                        target_codes: target_codes as usize,
+                        max_iters: max_iters as usize,
+                        tol,
+                        seed,
+                    };
+                    let (cb, dml_time, distortion, cache_hit) = self.dml_for(&params);
+                    net.send(&Message::RunCodebook {
+                        run,
+                        site: site_id as u32,
+                        dim: cb.dim as u32,
+                        codewords: cb.codewords.clone(),
+                        weights: cb.weights.clone(),
+                    })
+                    .context("send run codebook")?;
+                    if cache_hit {
+                        outcome.cache_hits += 1;
+                    } else {
+                        outcome.dml_passes += 1;
+                    }
+                    // Stash per-run context for the populate phase (and the
+                    // DML cost, reported via the completion callback).
+                    cache.retain(|(r, _)| *r != run); // a reused id replaces its labels
+                    open.insert(run, OpenRun { cb, dml_time, distortion, cache_hit });
+                }
+                Message::RunLabels { run, site, labels } => {
+                    if site as usize != site_id {
+                        bail!("label frame for run {run} addressed to site {site}, this is site {site_id}");
+                    }
+                    let Some(o) = open.remove(&run) else {
+                        bail!("labels for run {run}, which is not open on this session");
+                    };
+                    if labels.len() != o.cb.n_codes() {
+                        bail!(
+                            "leader sent {} labels for {} codewords (run {run})",
+                            labels.len(),
+                            o.cb.n_codes()
+                        );
+                    }
+                    let (point_labels, _populate_time) = populate(&o.cb, &labels);
+                    if let Some(path) = out_path {
+                        write_labels(path, &point_labels)?;
+                    }
+                    on_served(&RunServed {
+                        run,
+                        n_points: self.data.len(),
+                        n_codes: o.cb.n_codes(),
+                        dml_time: o.dml_time,
+                        distortion: o.distortion,
+                        cache_hit: o.cache_hit,
+                    });
+                    cache.push((run, point_labels));
+                    if cache.len() > limits.label_cache_runs {
+                        cache.remove(0);
+                    }
+                    outcome.runs_served += 1;
+                }
+                Message::LabelsPull { run } => {
+                    match cache.iter().find(|(r, _)| *r == run) {
+                        Some((_, labels)) => net
+                            .send(&Message::SiteLabels {
+                                run,
+                                site: site_id as u32,
+                                labels: labels.clone(),
+                            })
+                            .context("send pulled labels")?,
+                        None => net
+                            .send(&Message::Reject {
+                                run,
+                                msg: format!(
+                                    "run {run} is not in this site's label cache \
+                                     (keeps the last {} runs — [site] label_cache_runs)",
+                                    limits.label_cache_runs
+                                ),
+                            })
+                            .context("send pull refusal")?,
+                    }
+                }
+                other => bail!("unexpected message in a multi-run session: {other:?}"),
+            }
+        }
+    }
+
+    /// Answer one work order: a cache hit replays the stored codebook
+    /// (zero DML passes, `dml_time` zero); a miss recomputes from scratch
+    /// — deterministically, so hit and miss are bit-interchangeable — and
+    /// caches the result under the current shard version.
+    fn dml_for(&mut self, params: &DmlParams) -> (dml::Codebook, Duration, f64, bool) {
+        let version = self.digest.root();
+        if self.limits.cache_dml {
+            if let Some(e) = self
+                .dml_cache
+                .iter()
+                .rev()
+                .find(|e| e.version == version && e.params == *params)
+            {
+                self.total_cache_hits += 1;
+                return (e.cb.clone(), Duration::ZERO, e.distortion, true);
+            }
+        }
+        let (cb, dml_time, distortion) = run_dml(&self.data, params);
+        self.total_dml_passes += 1;
+        self.live = Some((params.clone(), cb.clone()));
+        if self.limits.cache_dml {
+            self.dml_cache.push(DmlCacheEntry {
+                params: params.clone(),
+                version,
+                cb: cb.clone(),
+                distortion,
+            });
+            if self.dml_cache.len() > self.limits.dml_cache_runs {
+                self.dml_cache.remove(0);
+            }
+        }
+        (cb, dml_time, distortion, false)
+    }
+
+    /// The live codebook — the most recent DML result, refined in place
+    /// by every ingest since — with the work order it answers.
+    pub fn live_codebook(&self) -> Option<(&DmlParams, &dml::Codebook)> {
+        self.live.as_ref().map(|(p, cb)| (p, cb))
+    }
+}
+
+/// Serve one persistent multi-run session over a fresh [`Session`] that
+/// borrows nothing past the call: the historical entry point, used where
+/// the shard serves exactly one connection (the in-process harness's site
+/// threads, the TCP load twin). Daemons that outlive connections — and
+/// anything that ingests — hold a [`Session`] and call
+/// [`Session::serve`] per connection instead, keeping the result cache
+/// warm across reconnects.
 pub fn session(
     net: &SiteNet,
     data: &Dataset,
     out_path: Option<&Path>,
     limits: SessionLimits,
-    mut on_served: impl FnMut(&RunServed),
+    on_served: impl FnMut(&RunServed),
 ) -> Result<SessionOutcome> {
-    struct OpenRun {
-        cb: dml::Codebook,
-        dml_time: Duration,
-        distortion: f64,
-    }
-
-    let site_id = net.site_id();
-    // Runs whose labels have not come back yet, by run id: the assignment
-    // table must survive until populate time.
-    let mut open: HashMap<u32, OpenRun> = HashMap::new();
-    // Completed runs' populated labels, newest last, for label pulls.
-    let mut cache: Vec<(u32, Vec<u16>)> = Vec::new();
-    let mut outcome = SessionOutcome::default();
-
-    loop {
-        let msg = match net.recv_opt().context("await next session frame")? {
-            Some(msg) => msg,
-            None => {
-                outcome.aborted_runs = open.len();
-                return Ok(outcome); // leader closed cleanly between frames
-            }
-        };
-        match msg {
-            Message::RunStart { run } => {
-                // Register this shard for the new run; budgets come back
-                // with the work order.
-                net.send(&Message::RunSiteInfo {
-                    run,
-                    site: site_id as u32,
-                    n_points: data.len() as u64,
-                    dim: data.dim as u32,
-                })
-                .context("send run registration")?;
-            }
-            Message::RunDmlRequest { run, site, dml, target_codes, max_iters, tol, seed } => {
-                if site as usize != site_id {
-                    bail!("dml request for run {run} addressed to site {site}, this is site {site_id}");
-                }
-                if open.contains_key(&run) {
-                    bail!("two dml requests for run {run}");
-                }
-                if open.len() >= limits.max_open_runs {
-                    bail!(
-                        "leader holds {} runs open on one session ([site] max_open_runs)",
-                        limits.max_open_runs
-                    );
-                }
-                let params = DmlParams {
-                    kind: dml,
-                    target_codes: target_codes as usize,
-                    max_iters: max_iters as usize,
-                    tol,
-                    seed,
-                };
-                let (cb, dml_time, distortion) = run_dml(data, &params);
-                net.send(&Message::RunCodebook {
-                    run,
-                    site: site_id as u32,
-                    dim: cb.dim as u32,
-                    codewords: cb.codewords.clone(),
-                    weights: cb.weights.clone(),
-                })
-                .context("send run codebook")?;
-                // Stash per-run context for the populate phase (and the
-                // DML cost, reported via the completion callback).
-                cache.retain(|(r, _)| *r != run); // a reused id replaces its labels
-                open.insert(run, OpenRun { cb, dml_time, distortion });
-            }
-            Message::RunLabels { run, site, labels } => {
-                if site as usize != site_id {
-                    bail!("label frame for run {run} addressed to site {site}, this is site {site_id}");
-                }
-                let Some(o) = open.remove(&run) else {
-                    bail!("labels for run {run}, which is not open on this session");
-                };
-                if labels.len() != o.cb.n_codes() {
-                    bail!(
-                        "leader sent {} labels for {} codewords (run {run})",
-                        labels.len(),
-                        o.cb.n_codes()
-                    );
-                }
-                let (point_labels, _populate_time) = populate(&o.cb, &labels);
-                if let Some(path) = out_path {
-                    write_labels(path, &point_labels)?;
-                }
-                on_served(&RunServed {
-                    run,
-                    n_points: data.len(),
-                    n_codes: o.cb.n_codes(),
-                    dml_time: o.dml_time,
-                    distortion: o.distortion,
-                });
-                cache.push((run, point_labels));
-                if cache.len() > limits.label_cache_runs {
-                    cache.remove(0);
-                }
-                outcome.runs_served += 1;
-            }
-            Message::LabelsPull { run } => {
-                match cache.iter().find(|(r, _)| *r == run) {
-                    Some((_, labels)) => net
-                        .send(&Message::SiteLabels {
-                            run,
-                            site: site_id as u32,
-                            labels: labels.clone(),
-                        })
-                        .context("send pulled labels")?,
-                    None => net
-                        .send(&Message::Reject {
-                            run,
-                            msg: format!(
-                                "run {run} is not in this site's label cache \
-                                 (keeps the last {} runs — [site] label_cache_runs)",
-                                limits.label_cache_runs
-                            ),
-                        })
-                        .context("send pull refusal")?,
-                }
-            }
-            other => bail!("unexpected message in a multi-run session: {other:?}"),
-        }
-    }
+    Session::new(data.clone(), limits).serve(net, out_path, on_served)
 }
 
 /// Persist populated labels for the `dsc site --out` daemon flag: one
@@ -567,7 +799,7 @@ mod tests {
         let ds = gmm::paper_mixture_2d(80, 13);
         let (leader, mut sites) = star(1, LinkSpec::default());
         let site_net = sites.remove(0);
-        let limits = SessionLimits { label_cache_runs: 1, max_open_runs: 64 };
+        let limits = SessionLimits { label_cache_runs: 1, ..Default::default() };
         let worker = std::thread::spawn({
             let ds = ds.clone();
             move || session(&site_net, &ds, None, limits, |_| {})
@@ -626,7 +858,7 @@ mod tests {
         let ds = gmm::paper_mixture_2d(60, 17);
         let (leader, mut sites) = star(1, LinkSpec::default());
         let site_net = sites.remove(0);
-        let limits = SessionLimits { label_cache_runs: 8, max_open_runs: 2 };
+        let limits = SessionLimits { max_open_runs: 2, ..Default::default() };
         let worker = std::thread::spawn({
             let ds = ds.clone();
             move || session(&site_net, &ds, None, limits, |_| {})

@@ -1,0 +1,103 @@
+//! The chaos load mix (`coordinator::loadgen::run_chaos_mix`): one
+//! six-job, three-tenant DRR plan run under fire — both sites silently
+//! stall run 1 (the straggler deadline must catch it), the journaling
+//! leader is crashed and recovered the moment all six admissions are on
+//! record, and site 1's uplink is severed at the last pop of the
+//! recovered backlog. The contract: only the two faulted runs fail, and
+//! every survivor matches the fault-free twin bit for bit — including
+//! per-site link-byte counters and the DML result cache behaviour for
+//! the repeated seed-55 spec. `docs/TESTING.md` has the reading guide.
+
+use dsc::coordinator::loadgen::{run_chaos_mix, run_chaos_twin, ChaosRun};
+
+#[test]
+fn chaos_mix_fails_only_the_faulted_runs_and_survivors_match_the_twin() {
+    // ── the fault-free twin: the reference, and proof the plan is clean ──
+    let twin = run_chaos_twin().unwrap();
+    assert_eq!(twin.runs, vec![1, 2, 3, 4, 5, 6]);
+    assert_eq!((twin.completed, twin.failed, twin.rejected), (6, 0, 0));
+    assert_eq!(twin.pop_order.len(), 6);
+    assert_eq!(twin.pop_order[0], 1, "the first submit starts before any backlog forms");
+    assert_eq!(twin.journal_records, 0, "the twin does not journal");
+    for (site, s) in twin.sessions.iter().enumerate() {
+        assert_eq!(
+            *s,
+            (6, 0, 5, 1),
+            "site {site}: six served, five DML passes, one cache hit for the repeated spec"
+        );
+    }
+    // submissions 3 and 5 carry the same spec (seed 55): one computed,
+    // one replayed from the sites' DML cache — indistinguishable results
+    assert!(matches!(twin.results[2], ChaosRun::Done { .. }));
+    assert_eq!(twin.results[4], twin.results[2], "cache replay diverged from the compute");
+
+    // ── the same plan under the fault plan + crash ───────────────────────
+    let path = std::env::temp_dir()
+        .join(format!("dsc-chaos-mix-{}.journal", std::process::id()));
+    let chaos = run_chaos_mix(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(chaos.runs, twin.runs);
+    assert_eq!((chaos.completed, chaos.failed, chaos.rejected), (4, 2, 0));
+
+    // exactly two casualties, each with its own failure mode on record
+    let failed: Vec<usize> = chaos
+        .results
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| matches!(r, ChaosRun::Failed { .. }).then_some(i))
+        .collect();
+    assert_eq!(failed.len(), 2, "exactly the faulted runs may fail: {:?}", chaos.results);
+    assert_eq!(failed[0], 0, "run 1 is the stalled straggler");
+    match &chaos.results[0] {
+        ChaosRun::Failed { err } => {
+            assert!(err.contains("never reported"), "straggler error: {err}")
+        }
+        other => panic!("run 1 should fail on the collect deadline, got {other:?}"),
+    }
+    match &chaos.results[failed[1]] {
+        ChaosRun::Failed { err } => {
+            assert!(err.contains("site 1 link failed"), "outage error: {err}")
+        }
+        other => panic!("the severed run should fail on the site outage, got {other:?}"),
+    }
+
+    // every survivor matches its fault-free twin bit for bit — n_codes,
+    // sigma, and the per-site link-byte counters
+    for (i, r) in chaos.results.iter().enumerate() {
+        if matches!(r, ChaosRun::Done { .. }) {
+            assert_eq!(r, &twin.results[i], "survivor run {} diverged from its twin", i + 1);
+        }
+    }
+
+    // four pops reached their central, all from the recovered backlog —
+    // never the stalled run 1
+    assert_eq!(chaos.pop_order.len(), 4);
+    assert!(!chaos.pop_order.contains(&1));
+    assert!(chaos.pop_order.iter().all(|r| (2..=6).contains(r)));
+
+    // both sites fully served every survivor (labels delivered before the
+    // severance, which strikes the final pop's registration)
+    for (site, s) in chaos.sessions.iter().enumerate() {
+        assert_eq!(s.0, 4, "site {site} must fully serve all four survivors");
+    }
+
+    // the journal kept recording past the replayed 13-record prefix:
+    // recovery resumed event-sourcing, it did not fork a fresh log
+    assert!(chaos.journal_records > 13, "journal held {} records", chaos.journal_records);
+
+    // The DML cache under fire: when both seed-55 runs survive, the
+    // replay equals the compute and each site logged a hit. (Whether the
+    // severed fifth pop's work order reached the sites before the
+    // site-down is a real-time race, so per-site pass/hit totals are
+    // pinned only in the twin.)
+    if matches!(
+        (&chaos.results[2], &chaos.results[4]),
+        (ChaosRun::Done { .. }, ChaosRun::Done { .. })
+    ) {
+        assert_eq!(chaos.results[4], chaos.results[2]);
+        for (site, s) in chaos.sessions.iter().enumerate() {
+            assert!(s.3 >= 1, "site {site} should hit the cache for the repeated spec");
+        }
+    }
+}

@@ -363,7 +363,7 @@ mod wire_gen {
         )
     }
 
-    /// A random message carrying exactly wire tag `tag` (1–20).
+    /// A random message carrying exactly wire tag `tag` (1–21).
     pub fn message_with_tag(g: &mut Gen, tag: u8) -> Message {
         let site = g.usize_in(0, 7) as u32;
         let run = g.usize_in(1, 1_000_000) as u32;
@@ -428,6 +428,13 @@ mod wire_gen {
                 detail: g.rng().next_u64(),
                 msg: text(g, 60),
             },
+            21 => Message::SiteInfo2 {
+                site,
+                n_points: g.rng().next_u64() >> 20,
+                dim: 10,
+                digest: g.rng().next_u64(),
+                chunks: g.usize_in(0, 1 << 20) as u32,
+            },
             other => panic!("no message for tag {other}"),
         }
     }
@@ -439,10 +446,10 @@ fn prop_wire_roundtrip_every_tag() {
     // tag 0 was never assigned and must always be rejected, like any
     // unknown tag above the table
     assert!(decode(&[0u8]).is_err());
-    assert!(decode(&[21u8]).is_err());
+    assert!(decode(&[22u8]).is_err());
     assert!(decode(&[255u8]).is_err());
-    forall("encode→decode is identity for every tag 1–20", 25, 513, |g| {
-        for tag in 1u8..=20 {
+    forall("encode→decode is identity for every tag 1–21", 25, 513, |g| {
+        for tag in 1u8..=21 {
             let msg = wire_gen::message_with_tag(g, tag);
             let frame = encode(&msg);
             if frame[0] != tag {
@@ -464,7 +471,7 @@ fn prop_wire_truncation_rejected_at_every_offset() {
     // panic, no partial message, and (by the decoder's allocation rule) no
     // reservation beyond the bytes present.
     forall("truncation at every byte offset errors for every tag", 10, 514, |g| {
-        for tag in 1u8..=20 {
+        for tag in 1u8..=21 {
             let frame = encode(&wire_gen::message_with_tag(g, tag));
             for cut in 0..frame.len() {
                 if decode(&frame[..cut]).is_ok() {

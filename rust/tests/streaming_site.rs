@@ -1,0 +1,252 @@
+//! Streaming-site acceptance: incremental ingest, shard-versioned DML
+//! result caching, and the SITEINFO2 digest report.
+//!
+//! The contract under test (docs/PROTOCOL.md §"Shard digests",
+//! docs/CONFIG.md `[site]`):
+//!
+//! * a repeat work order at an unchanged shard is answered from the DML
+//!   result cache — **zero** DML passes, and the replayed codebook is
+//!   bit-identical to a recompute, so labels and per-link byte counters
+//!   are indistinguishable from a cache-off run;
+//! * one ingested point moves the shard digest, which invalidates the
+//!   cache; the post-ingest recompute equals a from-scratch build of the
+//!   grown shard bit for bit (the incremental `fold_in` path only feeds
+//!   the *live* codebook — cached results are never folded);
+//! * `[site] report_digest` volunteers a SITEINFO2 frame per connection,
+//!   observed by the leader but never accounted to any run.
+
+mod common;
+
+use common::pull_global;
+use dsc::config::PipelineConfig;
+use dsc::coordinator::harness::{serve_channel, HarnessOpts};
+use dsc::coordinator::server::ServerOpts;
+use dsc::coordinator::{run_pipeline, spec_from_config};
+use dsc::data::scenario::{self, Scenario, SitePart};
+use dsc::data::{gmm, Dataset};
+use dsc::dml::{self, DmlKind, DmlParams};
+use dsc::net::{star, LinkSpec, Message};
+use dsc::site::{Session, SessionLimits};
+use dsc::spectral::Bandwidth;
+
+fn workload() -> (Dataset, Vec<SitePart>) {
+    let ds = gmm::paper_mixture_10d(2_000, 0.1, 21);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 21);
+    (ds, parts)
+}
+
+fn cfg() -> PipelineConfig {
+    PipelineConfig {
+        total_codes: 64,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: 21,
+        ..Default::default()
+    }
+}
+
+/// Run the same spec twice through one channel harness (sequentially —
+/// `max_jobs = 1` — so the second work order arrives after the first
+/// result is cached) and return per-job `(labels, per-site LinkReports)`
+/// plus the per-site session outcomes.
+fn twice_through_harness(
+    parts: &[SitePart],
+    cfg: &PipelineConfig,
+) -> (Vec<(Vec<u16>, Vec<dsc::net::LinkReport>)>, Vec<dsc::site::SessionOutcome>) {
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: true,
+            client_limit: Some(2),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let datasets = parts.iter().map(|p| p.data.clone()).collect();
+    let mut harness = serve_channel(datasets, cfg, opts).unwrap();
+    let spec = spec_from_config(cfg);
+    let clients = [harness.client(), harness.client()];
+    let mut jobs = Vec::new();
+    for client in &clients {
+        let run = client.submit(&spec).unwrap();
+        let report = client.await_done(run).unwrap();
+        let labels = pull_global(client, run, &report, parts);
+        jobs.push((labels, report.per_site));
+    }
+    drop(clients);
+    let (stats, outcomes) = harness.join().unwrap();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 0);
+    (jobs, outcomes)
+}
+
+/// The headline: job 2 repeats job 1's spec against unchanged shards, so
+/// every site answers it from the cache — zero DML passes — and nothing
+/// downstream can tell: labels and per-run, per-link byte counters are
+/// bit-identical, and both match the in-process pipeline.
+#[test]
+fn repeat_job_replays_the_cache_bit_identically() {
+    let (_ds, parts) = workload();
+    let base = run_pipeline(&parts, &cfg()).unwrap();
+
+    let (jobs, outcomes) = twice_through_harness(&parts, &cfg());
+
+    assert_eq!(jobs[0].0, base.labels, "job 1 vs pipeline");
+    assert_eq!(jobs[1].0, jobs[0].0, "cached labels diverge from computed ones");
+    assert_eq!(jobs[1].1, jobs[0].1, "cached byte counters diverge");
+
+    for (site, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.runs_served, 2, "site {site} served both runs");
+        assert_eq!(o.dml_passes, 1, "site {site}: the repeat must not recompute");
+        assert_eq!(o.cache_hits, 1, "site {site}: the repeat must hit the cache");
+    }
+}
+
+/// `[site] cache_dml = false` forces a full DML pass per work order — and
+/// because DML is deterministic, the results are still identical, which is
+/// exactly why the cache is safe to leave on by default.
+#[test]
+fn cache_off_recomputes_with_identical_results() {
+    let (_ds, parts) = workload();
+    let mut off = cfg();
+    off.site.cache_dml = false;
+
+    let (jobs_on, _) = twice_through_harness(&parts, &cfg());
+    let (jobs_off, outcomes) = twice_through_harness(&parts, &off);
+
+    for (site, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.dml_passes, 2, "site {site}: cache off must recompute each run");
+        assert_eq!(o.cache_hits, 0, "site {site}: cache off must never hit");
+    }
+    assert_eq!(jobs_off[0].0, jobs_on[0].0, "labels depend on the cache setting");
+    assert_eq!(jobs_off[1].1, jobs_on[1].1, "byte counters depend on the cache setting");
+}
+
+/// Drive one streaming [`Session`] by hand through two connections with an
+/// ingest in between: the repeat inside connection 1 is a bit-identical
+/// cache replay; the ingest moves the digest, and the first work order
+/// after it recomputes — equal bit for bit to a from-scratch build over
+/// the grown shard.
+#[test]
+fn ingest_flips_the_digest_and_the_cache_misses() {
+    let ds = gmm::paper_mixture_2d(300, 9);
+    let extra = gmm::paper_mixture_2d(20, 33);
+    let params = DmlParams {
+        kind: DmlKind::KMeans,
+        target_codes: 8,
+        max_iters: 10,
+        tol: 1e-6,
+        seed: 5,
+    };
+    let order = |run: u32| Message::RunDmlRequest {
+        run,
+        site: 0,
+        dml: params.kind,
+        target_codes: params.target_codes as u32,
+        max_iters: params.max_iters as u32,
+        tol: params.tol,
+        seed: params.seed,
+    };
+    let codebook_of = |msg: Message| match msg {
+        Message::RunCodebook { codewords, weights, .. } => (codewords, weights),
+        other => panic!("expected a codebook, got {other:?}"),
+    };
+
+    let mut session = Session::new(ds.clone(), SessionLimits::default());
+    let v0 = session.shard_version();
+
+    // ── connection 1: the same work order twice ─────────────────────────
+    let (leader, mut sites) = star(1, LinkSpec::default());
+    let site_net = sites.remove(0);
+    let outcome = std::thread::scope(|s| {
+        let worker = s.spawn(|| session.serve(&site_net, None, |_| {}).unwrap());
+        let mut books = Vec::new();
+        for run in [1u32, 2] {
+            leader.send(0, &order(run)).unwrap();
+            books.push(codebook_of(leader.recv().unwrap().1));
+        }
+        assert_eq!(books[1], books[0], "cache replay must be bit-identical");
+        drop(leader);
+        worker.join().unwrap()
+    });
+    assert_eq!((outcome.dml_passes, outcome.cache_hits), (1, 1));
+
+    // ── ingest between connections ──────────────────────────────────────
+    assert_eq!(session.ingest(&extra).unwrap(), 20);
+    assert_eq!(session.data().len(), 320);
+    let v1 = session.shard_version();
+    assert_ne!(v1, v0, "ingested points must move the shard version");
+    // the live codebook was folded incrementally and still covers the shard
+    let (live_params, live_cb) = session.live_codebook().expect("live codebook after a run");
+    assert_eq!(live_params, &params);
+    assert_eq!(live_cb.assign.len(), 320);
+    live_cb.validate(320).unwrap();
+    // an ingest of mismatched dimensionality is refused loudly
+    let bad = gmm::paper_mixture_10d(5, 0.1, 1);
+    assert!(session.ingest(&bad).is_err());
+    assert_eq!(session.shard_version(), v1, "a refused ingest must not move the version");
+
+    // ── connection 2: the cache is stale, the recompute is from scratch ──
+    let expect = dml::apply(session.data(), &params);
+    let (leader, mut sites) = star(1, LinkSpec::default());
+    let site_net = sites.remove(0);
+    let outcome = std::thread::scope(|s| {
+        let worker = s.spawn(|| session.serve(&site_net, None, |_| {}).unwrap());
+        leader.send(0, &order(3)).unwrap();
+        let (codewords, weights) = codebook_of(leader.recv().unwrap().1);
+        assert_eq!(codewords, expect.codewords, "post-ingest rebuild must be from scratch");
+        assert_eq!(weights, expect.weights);
+        assert_eq!(weights.iter().map(|&w| w as usize).sum::<usize>(), 320);
+        // …and the repeat of *that* is a hit again
+        leader.send(0, &order(4)).unwrap();
+        let (cw2, _) = codebook_of(leader.recv().unwrap().1);
+        assert_eq!(cw2, codewords);
+        drop(leader);
+        worker.join().unwrap()
+    });
+    assert_eq!((outcome.dml_passes, outcome.cache_hits), (1, 1));
+    assert_eq!(session.dml_stats(), (2, 2), "cumulative counters span connections");
+}
+
+/// `[site] report_digest = true`: every site volunteers one SITEINFO2 at
+/// session start. The leader records it (`ServerStats::digests_seen`) but
+/// never accounts it to a run — per-link byte counters are identical to a
+/// run with reporting off, and the legacy SITEINFO framing is untouched.
+#[test]
+fn digest_report_reaches_the_leader_without_touching_counters() {
+    let (_ds, parts) = workload();
+    let mut reporting = cfg();
+    reporting.site.report_digest = true;
+
+    let run_once = |cfg: &PipelineConfig| {
+        let opts = HarnessOpts {
+            server: ServerOpts {
+                max_jobs: 1,
+                queue_depth: 8,
+                allow_label_pull: false,
+                client_limit: Some(1),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let datasets = parts.iter().map(|p| p.data.clone()).collect();
+        let mut harness = serve_channel(datasets, cfg, opts).unwrap();
+        let client = harness.client();
+        let run = client.submit(&spec_from_config(cfg)).unwrap();
+        let report = client.await_done(run).unwrap();
+        drop(client);
+        let (stats, _) = harness.join().unwrap();
+        (report.per_site, stats)
+    };
+
+    let (quiet_links, quiet_stats) = run_once(&cfg());
+    let (loud_links, loud_stats) = run_once(&reporting);
+
+    assert_eq!(quiet_stats.digests_seen, 0);
+    assert_eq!(loud_stats.digests_seen, parts.len() as u64, "one report per site");
+    assert_eq!(
+        loud_links, quiet_links,
+        "a digest report must never be accounted to a run"
+    );
+}
