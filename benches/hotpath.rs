@@ -12,12 +12,29 @@
 //!
 //! Filter: `cargo bench --bench hotpath -- assign|affinity|spmv|lanczos|xla|pipeline`.
 //! `DSC_THREADS` pins the pool for scaling curves.
+//!
+//! **Recorded trajectory mode** — `cargo bench --bench hotpath -- --json`:
+//! runs the four SIMD-kernel arms (`assign`, `affinity`, `spmv`, `lanczos`)
+//! twice each in one process — once forced to the scalar kernel arm
+//! (`kernels::set_mode(Scalar)`) and once under runtime dispatch (`Auto`,
+//! AVX2 where the CPU has it) — verifies the two outputs are **bit
+//! identical** (any divergence fails the bench: the kernels promise parity
+//! by construction, and the trajectory must never record a number produced
+//! by a kernel that broke that promise), then writes
+//! `BENCH_hotpath.json` (to `DSC_BENCH_OUT`, default `bench_out/`): per-arm
+//! mean times, throughput in point·dims/µs, the dispatched/scalar speedup,
+//! plus the detected CPU features and `DSC_THREADS` so the snapshot names
+//! the hardware it was measured on. This is the compute-side twin of
+//! `BENCH_jobserver.json` — the baseline ROADMAP item 4(b)'s XLA work has
+//! to beat.
 
 use std::time::Duration;
 
+use anyhow::bail;
 use dsc::bench::{time_it, Table};
 use dsc::data::gmm;
 use dsc::dml::{self, DmlKind, DmlParams};
+use dsc::linalg::kernels::{self, SimdMode};
 use dsc::prelude::*;
 use dsc::rng::Rng;
 use dsc::spectral::{affinity, njw, sparse};
@@ -26,27 +43,267 @@ fn want(filter: &Option<String>, key: &str) -> bool {
     filter.as_deref().map(|f| key.contains(f)).unwrap_or(true)
 }
 
-fn main() -> anyhow::Result<()> {
-    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+/// Tile an `n × src_dim` row-major point block to `n × d` by repeating
+/// coordinates — the throughput arms sweep arbitrary dims over the same
+/// 10-d mixture (geometry is irrelevant to a throughput number; shared
+/// here so each new arm doesn't grow its own inline copy).
+fn retile(src: &[f32], n: usize, src_dim: usize, d: usize) -> Vec<f32> {
+    let mut pts = vec![0.0f32; n * d];
+    for i in 0..n {
+        for j in 0..d {
+            pts[i * d + j] = src[i * src_dim + (j % src_dim)];
+        }
+    }
+    pts
+}
+
+/// One SIMD-trajectory arm: timings and throughput for the scalar and
+/// dispatched kernel arms over the identical workload, with the bitwise
+/// output fingerprints already verified equal.
+struct ArmRecord {
+    name: &'static str,
+    config: String,
+    /// point·dims per run — the unit the throughput is quoted in.
+    ops: f64,
+    scalar_ms: f64,
+    dispatched_ms: f64,
+}
+
+impl ArmRecord {
+    fn speedup(&self) -> f64 {
+        self.scalar_ms / self.dispatched_ms.max(1e-12)
+    }
+    /// point·dims/µs at the given mean milliseconds.
+    fn throughput(&self, ms: f64) -> f64 {
+        self.ops / (ms.max(1e-12) * 1e3)
+    }
+    fn to_json(&self) -> String {
+        format!(
+            "{{\n    \"config\": \"{}\",\n    \"point_dims_per_run\": {:.0},\n    \
+             \"scalar_ms\": {:.3},\n    \"dispatched_ms\": {:.3},\n    \
+             \"throughput_scalar_pd_per_us\": {:.2},\n    \
+             \"throughput_dispatched_pd_per_us\": {:.2},\n    \
+             \"speedup\": {:.3},\n    \"parity\": \"bit-identical\"\n  }}",
+            self.config,
+            self.ops,
+            self.scalar_ms,
+            self.dispatched_ms,
+            self.throughput(self.scalar_ms),
+            self.throughput(self.dispatched_ms),
+            self.speedup(),
+        )
+    }
+}
+
+/// Time `f` under the scalar arm, then under runtime dispatch, in this
+/// process; bail if their bitwise output fingerprints differ. `f` must be
+/// deterministic given the kernel arm (every arm below is).
+fn time_both_arms<T: PartialEq>(
+    name: &'static str,
+    config: String,
+    ops: f64,
+    warmup: usize,
+    samples: usize,
+    mut f: impl FnMut() -> T,
+) -> anyhow::Result<ArmRecord> {
+    kernels::set_mode(SimdMode::Scalar);
+    let mut out_scalar = None;
+    let s_stats = time_it(warmup, samples, || out_scalar = Some(f()));
+    kernels::set_mode(SimdMode::Auto);
+    let mut out_auto = None;
+    let a_stats = time_it(warmup, samples, || out_auto = Some(f()));
+    kernels::set_mode(SimdMode::Auto);
+    if out_scalar != out_auto {
+        bail!(
+            "{name}: scalar and dispatched kernel arms produced different bits — \
+             parity violated, refusing to record a trajectory"
+        );
+    }
+    Ok(ArmRecord {
+        name,
+        config,
+        ops,
+        scalar_ms: s_stats.mean_secs() * 1e3,
+        dispatched_ms: a_stats.mean_secs() * 1e3,
+    })
+}
+
+/// The recorded-trajectory mode: four arms, scalar vs dispatched, bitwise
+/// parity enforced, JSON written for CI to upload.
+fn json_mode() -> anyhow::Result<()> {
+    let mut arms: Vec<ArmRecord> = Vec::new();
+
+    // assign — one Lloyd sweep over retiled 16-d points, the per-site hot
+    // loop (kernels: axpy_f32 for the score sweep, sqdist_f32 in seeding).
+    {
+        let (n, k, d) = (20_000usize, 256usize, 16usize);
+        let base = gmm::paper_mixture_10d(n, 0.3, 3);
+        let mut ds = base;
+        ds.points = retile(&ds.points, n, 10, d);
+        ds.dim = d;
+        let params =
+            DmlParams { kind: DmlKind::KMeans, target_codes: k, max_iters: 1, tol: 0.0, seed: 1 };
+        arms.push(time_both_arms(
+            "assign",
+            format!("n={n} k={k} d={d} sweeps=1"),
+            (n * k * d) as f64,
+            1,
+            3,
+            || {
+                let cb = dml::apply(&ds, &params);
+                let cw_bits: Vec<u32> = cb.codewords.iter().map(|v| v.to_bits()).collect();
+                (cb.assign, cw_bits)
+            },
+        )?);
+    }
+
+    // affinity — the central O(n²d) build (kernel: dot_f32 inside the
+    // expanded-form distance).
+    {
+        let (n, d) = (1_500usize, 16usize);
+        let base = gmm::paper_mixture_10d(n, 0.3, 5);
+        let pts = retile(&base.points, n, 10, d);
+        let w = vec![1.0f32; n];
+        arms.push(time_both_arms(
+            "affinity",
+            format!("n={n} d={d}"),
+            (n * n * d) as f64,
+            1,
+            3,
+            || {
+                let a = affinity::build(&pts, d, &w, 1.5);
+                a.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+            },
+        )?);
+    }
+
+    // spmv — dense normalized mat-vec (kernel: dot_f32_f64) and the CSR
+    // gather twin (kernel: spmv_row_f64), Lanczos' entire inner loop.
+    {
+        let m = 2_000usize;
+        let ds = gmm::paper_mixture_10d(m, 0.3, 17);
+        let w = vec![1.0f32; m];
+        let dense = affinity::build(&ds.points, 10, &w, 1.5);
+        let x: Vec<f64> =
+            (0..m).map(|i| ((i.wrapping_mul(2_654_435_761)) % 1000) as f64 / 1000.0).collect();
+        arms.push(time_both_arms(
+            "spmv_dense",
+            format!("m={m}"),
+            (m * m) as f64,
+            2,
+            9,
+            || {
+                let mut y = vec![0.0f64; m];
+                dense.normalized_matvec(&x, &mut y);
+                y.iter().map(|v| v.to_bits()).collect::<Vec<u64>>()
+            },
+        )?);
+
+        let ms = 8_000usize;
+        let dss = gmm::paper_mixture_10d(ms, 0.3, 23);
+        let ws = vec![1.0f32; ms];
+        let mut grng = Rng::new(29);
+        let sp = sparse::build_knn(&dss.points, 10, &ws, 1.5, 32, &mut grng);
+        let nnz = sp.nnz();
+        let xs: Vec<f64> =
+            (0..ms).map(|i| ((i.wrapping_mul(2_654_435_761)) % 1000) as f64 / 1000.0).collect();
+        arms.push(time_both_arms(
+            "spmv_sparse",
+            format!("m={ms} k=32 nnz={nnz}"),
+            nnz as f64,
+            2,
+            9,
+            || {
+                let mut y = vec![0.0f64; ms];
+                sp.normalized_matvec(&xs, &mut y);
+                y.iter().map(|v| v.to_bits()).collect::<Vec<u64>>()
+            },
+        )?);
+    }
+
+    // lanczos — top-2 eigenvalues through NormalizedOp; end-to-end
+    // deterministic because only the kernels touch the data between the
+    // f64-serial Lanczos recurrences. ops: one matvec is m² point·dims and
+    // the iteration count varies, so throughput is quoted per-matvec-size
+    // and the speedup is the meaningful number.
+    {
+        let n = 1_500usize;
+        let ds = gmm::paper_mixture_10d(n, 0.3, 7);
+        let w = vec![1.0f32; n];
+        let aff = affinity::build(&ds.points, 10, &w, 2.0);
+        arms.push(time_both_arms(
+            "lanczos",
+            format!("n={n} top=2"),
+            (n * n) as f64,
+            1,
+            3,
+            || {
+                let mut rng = Rng::new(9);
+                let evals = njw::top_eigenvalues(&aff, 2, &mut rng);
+                evals.iter().map(|v| v.to_bits()).collect::<Vec<u64>>()
+            },
+        )?);
+    }
+
+    let features = kernels::detected_features();
+    let threads = dsc::par::threads();
+    kernels::set_mode(SimdMode::Auto);
+    let dispatched = kernels::active_arm();
+
     let mut table = Table::new(
-        format!("Hot paths ({} threads)", dsc::par::threads()),
+        format!("SIMD kernel trajectory ({threads} threads, dispatch={dispatched})"),
+        &["arm", "config", "scalar ms", "dispatched ms", "speedup"],
+    );
+    for a in &arms {
+        table.row(&[
+            a.name.into(),
+            a.config.clone(),
+            format!("{:.3}", a.scalar_ms),
+            format!("{:.3}", a.dispatched_ms),
+            format!("{:.3}x", a.speedup()),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let out_dir = std::env::var("DSC_BENCH_OUT").unwrap_or_else(|_| "bench_out".into());
+    std::fs::create_dir_all(&out_dir)?;
+    let path = std::path::Path::new(&out_dir).join("BENCH_hotpath.json");
+    let arm_objs: Vec<String> =
+        arms.iter().map(|a| format!("  \"{}\": {}", a.name, a.to_json())).collect();
+    let body = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"executed\": true,\n  \
+         \"threads\": {threads},\n  \"cpu_features\": \"{features}\",\n  \
+         \"dispatched_arm\": \"{dispatched}\",\n  \
+         \"throughput_unit\": \"point*dims/us\",\n{}\n}}\n",
+        arm_objs.join(",\n"),
+    );
+    std::fs::write(&path, body)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--json") {
+        return json_mode();
+    }
+    let filter = args.into_iter().find(|a| !a.starts_with('-'));
+    let mut table = Table::new(
+        format!(
+            "Hot paths ({} threads, simd={})",
+            dsc::par::threads(),
+            kernels::active_arm()
+        ),
         &["bench", "config", "mean", "throughput"],
     );
 
     if want(&filter, "assign") {
         for (n, k, d) in [(40_000usize, 338usize, 42usize), (40_000, 1000, 10), (100_000, 500, 28)]
         {
-            let ds = gmm::paper_mixture_10d(n, 0.3, 3);
-            let mut ds = ds;
+            let mut ds = gmm::paper_mixture_10d(n, 0.3, 3);
             // reshape to arbitrary d by tiling (throughput test only)
             if d != 10 {
-                let mut pts = vec![0.0f32; n * d];
-                for i in 0..n {
-                    for j in 0..d {
-                        pts[i * d + j] = ds.points[i * 10 + (j % 10)];
-                    }
-                }
-                ds.points = pts;
+                ds.points = retile(&ds.points, n, 10, d);
                 ds.dim = d;
             }
             let params =
@@ -68,17 +325,7 @@ fn main() -> anyhow::Result<()> {
     if want(&filter, "affinity") {
         for (n, d) in [(500usize, 10usize), (1000, 10), (2000, 28)] {
             let ds = gmm::paper_mixture_10d(n, 0.3, 5);
-            let pts = if d == 10 {
-                ds.points.clone()
-            } else {
-                let mut p = vec![0.0f32; n * d];
-                for i in 0..n {
-                    for j in 0..d {
-                        p[i * d + j] = ds.points[i * 10 + (j % 10)];
-                    }
-                }
-                p
-            };
+            let pts = retile(&ds.points, n, 10, d);
             let w = vec![1.0f32; n];
             let stats = time_it(1, 7, || {
                 let _ = affinity::build(&pts, d, &w, 1.5);

@@ -19,6 +19,7 @@
 use std::sync::Mutex;
 
 use crate::data::Dataset;
+use crate::linalg::kernels;
 use crate::par;
 use crate::rng::Rng;
 
@@ -83,12 +84,7 @@ fn seed_centroids(data: &Dataset, k: usize, rng: &mut Rng) -> Vec<f32> {
 
 #[inline]
 fn sqdist(a: &[f32], b: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        let d = (*x - *y) as f64;
-        acc += d * d;
-    }
-    acc
+    kernels::sqdist_f32(a, b)
 }
 
 /// Per-chunk partial statistics for the update step.
@@ -156,9 +152,7 @@ pub fn lloyd(data: &Dataset, k: usize, max_iters: usize, tol: f64, rng: &mut Rng
                 for (j, &pj) in p.iter().enumerate() {
                     let coef = -2.0 * pj;
                     let row = &centroids_t_ref[j * k..(j + 1) * k];
-                    for (s, &cv) in scores.iter_mut().zip(row) {
-                        *s += coef * cv;
-                    }
+                    kernels::axpy_f32(&mut scores, coef, row);
                 }
                 let mut best = 0u32;
                 let mut best_score = f32::INFINITY;

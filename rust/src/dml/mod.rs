@@ -225,11 +225,7 @@ pub(crate) fn nearest_code(cb: &Codebook, p: &[f32]) -> u32 {
     let mut best = 0u32;
     let mut best_d = f64::INFINITY;
     for c in 0..cb.n_codes() {
-        let mut d2 = 0.0f64;
-        for (x, y) in p.iter().zip(cb.codeword(c)) {
-            let d = (*x - *y) as f64;
-            d2 += d * d;
-        }
+        let d2 = crate::linalg::kernels::sqdist_f32(p, cb.codeword(c));
         if d2 < best_d {
             best_d = d2;
             best = c as u32;

@@ -18,6 +18,7 @@
 //! sizes. O(n·k·d) — same assignment cost as one Lloyd sweep.
 
 use crate::data::Dataset;
+use crate::linalg::kernels;
 use crate::par;
 use crate::rng::Rng;
 
@@ -63,9 +64,7 @@ pub fn build(data: &Dataset, k: usize, rng: &mut Rng) -> Codebook {
             for (j, &pj) in p.iter().enumerate() {
                 let coef = -2.0 * pj;
                 let row = &lt[j * k..(j + 1) * k];
-                for (s, &cv) in scores.iter_mut().zip(row) {
-                    *s += coef * cv;
-                }
+                kernels::axpy_f32(&mut scores, coef, row);
             }
             let mut best = 0u32;
             let mut best_score = f32::INFINITY;

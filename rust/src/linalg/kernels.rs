@@ -1,0 +1,583 @@
+//! Explicit-width SIMD kernels for the central hot path, with runtime
+//! dispatch — ROADMAP item 4(a).
+//!
+//! Five inner loops account for essentially all compute in the pipeline:
+//!
+//! * [`dot_f32`] — the f32 dot inside the O(n²d) affinity row build and
+//!   the k-NN candidate distance scans (`spectral::{affinity, sparse}`);
+//! * [`dot_f32_f64`] — the widened f32×f64 dot that *is* the dense
+//!   `normalized_matvec`, Lanczos' entire inner loop;
+//! * [`spmv_row_f64`] — the gathered CSR twin of the above
+//!   (`SparseAffinity::normalized_matvec`);
+//! * [`axpy_f32`] — the rank-1 score update of the K-means / landmark
+//!   assignment sweep (`dml::{kmeans, sample}`);
+//! * [`sqdist_f32`] — widened squared Euclidean distance (k-means++
+//!   seeding, `dml::nearest_code`, streaming fold-in).
+//!
+//! Each kernel has two arms selected at runtime: an AVX2 `core::arch`
+//! path (no FMA — see below) and a scalar fallback. The two arms are
+//! **bit-identical by construction**, which is what lets the repo's
+//! bit-parity discipline (`sparse_parity`, the crash/chaos twins, the
+//! streaming result cache) survive vectorization:
+//!
+//! * the scalar arm uses the *same* 4-lane (f64) / 8-lane (f32)
+//!   accumulator tree as the vector arm — lane `l` accumulates elements
+//!   `l mod LANES`, exactly like a SIMD register does;
+//! * the horizontal reduction mirrors the AVX2 shuffle sequence exactly
+//!   (`(a₀+a₄)+(a₂+a₆)` then `(a₁+a₅)+(a₃+a₇)` for 8 lanes,
+//!   `(a₀+a₂)+(a₁+a₃)` for 4) — *not* a left-to-right fold;
+//! * every multiply is followed by a separate IEEE-754 add — **FMA is
+//!   deliberately excluded**, because a fused multiply-add rounds once
+//!   where `mul`+`add` rounds twice, and that single rounding difference
+//!   would break scalar/SIMD bit parity;
+//! * tails (length `mod` lane count) run serially after the reduced
+//!   vector sum, in both arms, in the same order.
+//!
+//! `is_x86_feature_detected!` never selects an arm the CPU lacks; on
+//! non-x86_64 targets the scalar arm is the only arm. `DSC_SIMD`
+//! (`off`/`scalar` force the scalar arm, `auto`/`on` or unset detect)
+//! pins dispatch process-wide for tests and benches, mirroring
+//! `DSC_THREADS`; [`set_mode`] overrides it at runtime so the `hotpath`
+//! bench can time both arms in one process.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Kernel dispatch policy (`DSC_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Always run the scalar arm (the `DSC_SIMD=off|scalar` override).
+    Scalar,
+    /// Use the widest arm the CPU supports (AVX2 today), scalar otherwise.
+    Auto,
+}
+
+/// 0 = unset (read `DSC_SIMD` lazily), 1 = scalar, 2 = auto.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Parse a `DSC_SIMD` value. `None` for unrecognized strings (the
+/// initializer falls back to [`SimdMode::Auto`], like `par::threads()`
+/// ignores an unparseable `DSC_THREADS`).
+pub fn parse_mode(s: &str) -> Option<SimdMode> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" | "scalar" => Some(SimdMode::Scalar),
+        "auto" | "on" => Some(SimdMode::Auto),
+        _ => None,
+    }
+}
+
+/// The dispatch mode in effect (env-initialized, [`set_mode`]-overridable).
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => SimdMode::Scalar,
+        2 => SimdMode::Auto,
+        _ => {
+            let m = std::env::var("DSC_SIMD")
+                .ok()
+                .and_then(|v| parse_mode(&v))
+                .unwrap_or(SimdMode::Auto);
+            set_mode(m);
+            m
+        }
+    }
+}
+
+/// Override the dispatch mode process-wide. The `hotpath` bench uses this
+/// to time the scalar and dispatched arms in one process; the parity
+/// suite uses it to pin an end-to-end run to each arm.
+pub fn set_mode(m: SimdMode) {
+    MODE.store(
+        match m {
+            SimdMode::Scalar => 1,
+            SimdMode::Auto => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// Whether the AVX2 arm is selected right now.
+#[inline]
+fn use_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        mode() == SimdMode::Auto && is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Name of the arm dispatch resolves to right now (`"avx2"`/`"scalar"`).
+pub fn active_arm() -> &'static str {
+    if use_avx2() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// Comma-separated SIMD feature sets the CPU reports, independent of the
+/// dispatch mode — recorded in `BENCH_hotpath.json` so a trajectory
+/// snapshot names the hardware it was measured on. FMA is listed when
+/// present even though the kernels never use it (bit-parity policy).
+pub fn detected_features() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut feats = Vec::new();
+        if is_x86_feature_detected!("sse2") {
+            feats.push("sse2");
+        }
+        if is_x86_feature_detected!("avx") {
+            feats.push("avx");
+        }
+        if is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+        if feats.is_empty() {
+            "none".into()
+        } else {
+            feats.join(",")
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        format!("non-x86_64 ({})", std::env::consts::ARCH)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// `Σ a[j]·b[j]` in f32 — the affinity-build / k-NN-scan dot.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support verified by `use_avx2`.
+        return unsafe { avx2::dot_f32(a, b) };
+    }
+    scalar::dot_f32(a, b)
+}
+
+/// `Σ (a[j] as f64)·z[j]` — the dense normalized-matvec row dot.
+#[inline]
+pub fn dot_f32_f64(a: &[f32], z: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), z.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support verified by `use_avx2`.
+        return unsafe { avx2::dot_f32_f64(a, z) };
+    }
+    scalar::dot_f32_f64(a, z)
+}
+
+/// `Σ (vals[t] as f64)·z[cols[t]]` — one CSR row of the sparse
+/// normalized matvec. Every `cols[t]` must index into `z`.
+#[inline]
+pub fn spmv_row_f64(vals: &[f32], cols: &[u32], z: &[f64]) -> f64 {
+    debug_assert_eq!(vals.len(), cols.len());
+    #[cfg(target_arch = "x86_64")]
+    // The AVX2 gather sign-extends i32 indices, so it only covers vectors
+    // the i32 index space can address — far beyond any codebook here, but
+    // the scalar arm is the correct fallback rather than a debug assert.
+    if use_avx2() && z.len() <= i32::MAX as usize {
+        // SAFETY: AVX2 support verified by `use_avx2`; column bounds are
+        // the caller's CSR invariant (checked below in debug builds).
+        debug_assert!(cols.iter().all(|&c| (c as usize) < z.len()));
+        return unsafe { avx2::spmv_row_f64(vals, cols, z) };
+    }
+    scalar::spmv_row_f64(vals, cols, z)
+}
+
+/// `out[c] += coef · row[c]` — the assignment sweep's rank-1 update.
+/// Element-wise (no reduction), so any lane width is bit-identical; the
+/// AVX2 arm exists purely for speed.
+#[inline]
+pub fn axpy_f32(out: &mut [f32], coef: f32, row: &[f32]) {
+    debug_assert_eq!(out.len(), row.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support verified by `use_avx2`.
+        unsafe { avx2::axpy_f32(out, coef, row) };
+        return;
+    }
+    scalar::axpy_f32(out, coef, row);
+}
+
+/// `Σ ((a[j] − b[j]) as f64)²` — squared Euclidean distance with the
+/// subtraction in f32 and the squaring/accumulation widened to f64,
+/// exactly the arithmetic the dml callers have always used (the f64
+/// square of an f32 value is exact — ≤ 48 mantissa bits — so only the
+/// accumulation order distinguishes implementations).
+#[inline]
+pub fn sqdist_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support verified by `use_avx2`.
+        return unsafe { avx2::sqdist_f32(a, b) };
+    }
+    scalar::sqdist_f32(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar arm — the lane-structured reference every vector arm must equal
+// bit for bit. The 4/8-lane accumulator arrays and the shuffle-mirroring
+// reductions below are the contract; do not "simplify" them into serial
+// folds.
+// ---------------------------------------------------------------------------
+
+pub mod scalar {
+    /// Reduce an 8-lane f32 accumulator exactly like the AVX2 sequence
+    /// `add(lo128, hi128)` → `add(q, movehl(q))` → `add_ss(d, shuffle(d, 1))`.
+    #[inline]
+    fn reduce8(acc: [f32; 8]) -> f32 {
+        let q = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+        let d = [q[0] + q[2], q[1] + q[3]];
+        d[0] + d[1]
+    }
+
+    /// Reduce a 4-lane f64 accumulator exactly like the AVX2 sequence
+    /// `add(lo128, hi128)` → `add_sd(q, unpackhi(q))`.
+    #[inline]
+    fn reduce4(acc: [f64; 4]) -> f64 {
+        (acc[0] + acc[2]) + (acc[1] + acc[3])
+    }
+
+    /// See [`super::dot_f32`].
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = [0.0f32; 8];
+        for c in 0..chunks {
+            let ra = &a[c * 8..c * 8 + 8];
+            let rb = &b[c * 8..c * 8 + 8];
+            for l in 0..8 {
+                acc[l] += ra[l] * rb[l];
+            }
+        }
+        let mut sum = reduce8(acc);
+        for j in chunks * 8..n {
+            sum += a[j] * b[j];
+        }
+        sum
+    }
+
+    /// See [`super::dot_f32_f64`].
+    pub fn dot_f32_f64(a: &[f32], z: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = [0.0f64; 4];
+        for c in 0..chunks {
+            let ra = &a[c * 4..c * 4 + 4];
+            let rz = &z[c * 4..c * 4 + 4];
+            for l in 0..4 {
+                acc[l] += ra[l] as f64 * rz[l];
+            }
+        }
+        let mut sum = reduce4(acc);
+        for j in chunks * 4..n {
+            sum += a[j] as f64 * z[j];
+        }
+        sum
+    }
+
+    /// See [`super::spmv_row_f64`].
+    pub fn spmv_row_f64(vals: &[f32], cols: &[u32], z: &[f64]) -> f64 {
+        let n = vals.len();
+        let chunks = n / 4;
+        let mut acc = [0.0f64; 4];
+        for c in 0..chunks {
+            for l in 0..4 {
+                let t = c * 4 + l;
+                acc[l] += vals[t] as f64 * z[cols[t] as usize];
+            }
+        }
+        let mut sum = reduce4(acc);
+        for t in chunks * 4..n {
+            sum += vals[t] as f64 * z[cols[t] as usize];
+        }
+        sum
+    }
+
+    /// See [`super::axpy_f32`].
+    pub fn axpy_f32(out: &mut [f32], coef: f32, row: &[f32]) {
+        for (o, &r) in out.iter_mut().zip(row) {
+            *o += coef * r;
+        }
+    }
+
+    /// See [`super::sqdist_f32`].
+    pub fn sqdist_f32(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = [0.0f64; 4];
+        for c in 0..chunks {
+            let ra = &a[c * 4..c * 4 + 4];
+            let rb = &b[c * 4..c * 4 + 4];
+            for l in 0..4 {
+                let d = (ra[l] - rb[l]) as f64; // f32 sub, like the callers always did
+                acc[l] += d * d;
+            }
+        }
+        let mut sum = reduce4(acc);
+        for j in chunks * 4..n {
+            let d = (a[j] - b[j]) as f64;
+            sum += d * d;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 arm. Unaligned loads throughout (`loadu`); the f32→f64 widening
+// (`cvtps_pd`) is exact, so the only rounding ops are the same mul/add
+// pairs the scalar arm performs, lane for lane.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of 8 f32 lanes; the scalar `reduce8` mirrors this
+    /// exact shuffle sequence.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce8(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let q = _mm_add_ps(lo, hi); // [a0+a4, a1+a5, a2+a6, a3+a7]
+        let d = _mm_add_ps(q, _mm_movehl_ps(q, q)); // [q0+q2, q1+q3, ..]
+        let r = _mm_add_ss(d, _mm_shuffle_ps::<0b01>(d, d)); // d0+d1
+        _mm_cvtss_f32(r)
+    }
+
+    /// Horizontal sum of 4 f64 lanes; the scalar `reduce4` mirrors this.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce4(acc: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(acc);
+        let hi = _mm256_extractf128_pd::<1>(acc);
+        let q = _mm_add_pd(lo, hi); // [a0+a2, a1+a3]
+        let r = _mm_add_sd(q, _mm_unpackhi_pd(q, q)); // q0+q1
+        _mm_cvtsd_f64(r)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb)); // no FMA
+        }
+        let mut sum = reduce8(acc);
+        for j in chunks * 8..n {
+            sum += a[j] * b[j];
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32_f64(a: &[f32], z: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(c * 4)));
+            let vz = _mm256_loadu_pd(z.as_ptr().add(c * 4));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vz)); // no FMA
+        }
+        let mut sum = reduce4(acc);
+        for j in chunks * 4..n {
+            sum += a[j] as f64 * z[j];
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn spmv_row_f64(vals: &[f32], cols: &[u32], z: &[f64]) -> f64 {
+        let n = vals.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let vv = _mm256_cvtps_pd(_mm_loadu_ps(vals.as_ptr().add(c * 4)));
+            let vidx = _mm_loadu_si128(cols.as_ptr().add(c * 4) as *const __m128i);
+            let vz = _mm256_i32gather_pd::<8>(z.as_ptr(), vidx);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(vv, vz)); // no FMA
+        }
+        let mut sum = reduce4(acc);
+        for t in chunks * 4..n {
+            sum += vals[t] as f64 * z[cols[t] as usize];
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32(out: &mut [f32], coef: f32, row: &[f32]) {
+        let n = out.len();
+        let chunks = n / 8;
+        let vc = _mm256_set1_ps(coef);
+        for c in 0..chunks {
+            let vo = _mm256_loadu_ps(out.as_ptr().add(c * 8));
+            let vr = _mm256_loadu_ps(row.as_ptr().add(c * 8));
+            let upd = _mm256_add_ps(vo, _mm256_mul_ps(vc, vr)); // no FMA
+            _mm256_storeu_ps(out.as_mut_ptr().add(c * 8), upd);
+        }
+        for j in chunks * 8..n {
+            out[j] += coef * row[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sqdist_f32(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let va = _mm_loadu_ps(a.as_ptr().add(c * 4));
+            let vb = _mm_loadu_ps(b.as_ptr().add(c * 4));
+            // subtract in f32 first (caller semantics), then widen exactly
+            let d = _mm256_cvtps_pd(_mm_sub_ps(va, vb));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d)); // no FMA
+        }
+        let mut sum = reduce4(acc);
+        for j in chunks * 4..n {
+            let d = (a[j] - b[j]) as f64;
+            sum += d * d;
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic, sign-varied, non-trivially-rounding test vector.
+    fn pat(len: usize, salt: u32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let h = (i as u32).wrapping_mul(2_654_435_761).wrapping_add(salt);
+                ((h % 2000) as f32 - 1000.0) / 97.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parse_mode_values() {
+        assert_eq!(parse_mode("off"), Some(SimdMode::Scalar));
+        assert_eq!(parse_mode("scalar"), Some(SimdMode::Scalar));
+        assert_eq!(parse_mode("SCALAR"), Some(SimdMode::Scalar));
+        assert_eq!(parse_mode("auto"), Some(SimdMode::Auto));
+        assert_eq!(parse_mode("on"), Some(SimdMode::Auto));
+        assert_eq!(parse_mode("avx999"), None);
+    }
+
+    #[test]
+    fn active_arm_is_consistent_with_mode() {
+        // only observe; other tests in this binary may run concurrently,
+        // so don't flip the global mode here (the hotpath bench and the
+        // simd_kernels integration suite own that).
+        let arm = active_arm();
+        assert!(arm == "avx2" || arm == "scalar", "{arm}");
+        if mode() == SimdMode::Scalar {
+            assert_eq!(arm, "scalar");
+        }
+    }
+
+    #[test]
+    fn detected_features_nonempty() {
+        let f = detected_features();
+        assert!(!f.is_empty());
+    }
+
+    #[test]
+    fn scalar_dot_matches_serial_reference() {
+        for len in [0usize, 1, 3, 7, 8, 9, 31, 64, 67] {
+            let a = pat(len, 1);
+            let b = pat(len, 2);
+            let serial: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+            let got = scalar::dot_f32(&a, &b) as f64;
+            let tol = 1e-4 * serial.abs().max(1.0);
+            assert!((got - serial).abs() < tol, "len {len}: {got} vs {serial}");
+        }
+    }
+
+    #[test]
+    fn scalar_reduction_tree_is_pinned() {
+        // 8 lanes of exactly one element each: the reduce must be
+        // ((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7)) — the AVX2 shuffle order —
+        // pinned here so a "cleanup" to a serial fold fails loudly.
+        let a: Vec<f32> = (0..8).map(|i| (10f32).powi(i - 4)).collect();
+        let b = vec![1.0f32; 8];
+        let lanes: Vec<f32> = a.clone();
+        let want = ((lanes[0] + lanes[4]) + (lanes[2] + lanes[6]))
+            + ((lanes[1] + lanes[5]) + (lanes[3] + lanes[7]));
+        assert_eq!(scalar::dot_f32(&a, &b).to_bits(), want.to_bits());
+
+        // 4-lane f64 twin: (a0+a2) + (a1+a3)
+        let z = vec![1.0f64; 4];
+        let a4: Vec<f32> = (0..4).map(|i| (10f32).powi(i * 3 - 5)).collect();
+        let want4 = ((a4[0] as f64 + a4[2] as f64)) + ((a4[1] as f64 + a4[3] as f64));
+        assert_eq!(scalar::dot_f32_f64(&a4, &z).to_bits(), want4.to_bits());
+    }
+
+    #[test]
+    fn dispatched_equals_scalar_bitwise() {
+        // Whatever arm dispatch resolves to (AVX2 on a capable CPU in auto
+        // mode, scalar otherwise), it must equal the scalar arm bit for
+        // bit. The full 0..=67 sweep lives in rust/tests/simd_kernels.rs.
+        for len in [0usize, 5, 8, 16, 33, 67] {
+            let a = pat(len, 3);
+            let b = pat(len, 4);
+            let z: Vec<f64> = pat(len, 5).iter().map(|&v| v as f64).collect();
+            assert_eq!(dot_f32(&a, &b).to_bits(), scalar::dot_f32(&a, &b).to_bits());
+            assert_eq!(dot_f32_f64(&a, &z).to_bits(), scalar::dot_f32_f64(&a, &z).to_bits());
+            assert_eq!(sqdist_f32(&a, &b).to_bits(), scalar::sqdist_f32(&a, &b).to_bits());
+            let cols: Vec<u32> =
+                (0..len).map(|i| ((i * 13 + 5) % len.max(1)) as u32).collect();
+            let zbig: Vec<f64> = pat(len.max(1), 6).iter().map(|&v| v as f64).collect();
+            assert_eq!(
+                spmv_row_f64(&a, &cols, &zbig).to_bits(),
+                scalar::spmv_row_f64(&a, &cols, &zbig).to_bits()
+            );
+            let mut o1 = pat(len, 7);
+            let mut o2 = o1.clone();
+            axpy_f32(&mut o1, -1.75, &b);
+            scalar::axpy_f32(&mut o2, -1.75, &b);
+            assert_eq!(
+                o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                o2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_by_element() {
+        let row = pat(19, 8);
+        let mut out = pat(19, 9);
+        let before = out.clone();
+        scalar::axpy_f32(&mut out, 0.5, &row);
+        for i in 0..19 {
+            assert_eq!(out[i].to_bits(), (before[i] + 0.5 * row[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn sqdist_is_zero_on_identical_inputs() {
+        let a = pat(41, 10);
+        assert_eq!(sqdist_f32(&a, &a), 0.0);
+        assert_eq!(scalar::sqdist_f32(&a, &a), 0.0);
+    }
+}

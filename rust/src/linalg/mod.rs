@@ -17,6 +17,7 @@
 //! (codebooks are ≤ a few thousand rows; the raw data never enters linalg).
 
 pub mod eigen;
+pub mod kernels;
 
 /// A symmetric linear operator exposed only through its action `y = A x`.
 ///

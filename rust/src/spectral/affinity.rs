@@ -10,6 +10,7 @@
 //! median-distance heuristic (the paper greps σ ∈ (0, 200] per dataset;
 //! see [`Bandwidth`]).
 
+use crate::linalg::kernels;
 use crate::par;
 use crate::rng::Rng;
 
@@ -21,9 +22,24 @@ pub struct Affinity {
     pub data: Vec<f32>,
     /// Degree `d_i = Σ_j A[i,j]` (f64 accumulation).
     pub deg: Vec<f64>,
+    /// Cached `1/√d_i` (0 for isolated vertices): the normalized mat-vec is
+    /// Lanczos' inner loop, so this is precomputed once at construction
+    /// rather than per call — same scheme as `SparseAffinity`.
+    pub inv_sqrt_deg: Vec<f64>,
 }
 
 impl Affinity {
+    /// Finish construction from assembled weights and degrees: compute the
+    /// cached `1/√d` table. Every constructor funnels through here so the
+    /// field can't be forgotten.
+    fn finish(n: usize, data: Vec<f32>, deg: Vec<f64>) -> Affinity {
+        debug_assert_eq!(data.len(), n * n);
+        debug_assert_eq!(deg.len(), n);
+        let inv_sqrt_deg: Vec<f64> =
+            deg.iter().map(|&d| if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+        Affinity { n, data, deg, inv_sqrt_deg }
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.n..(i + 1) * self.n]
@@ -32,35 +48,20 @@ impl Affinity {
     /// y = M x where `M = D^{-1/2} A D^{-1/2}` (the normalized affinity
     /// whose top eigenvectors normalized cuts needs). Zero-degree rows act
     /// as isolated vertices.
+    ///
+    /// The row dot is [`kernels::dot_f32_f64`] — Lanczos' entire inner loop
+    /// (EXPERIMENTS.md §Perf, change 5) — and the `D^{-1/2} x` pre-scale
+    /// reuses a thread-local scratch buffer instead of allocating per call.
     pub fn normalized_matvec(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        let inv_sqrt: Vec<f64> =
-            self.deg.iter().map(|&d| if d > 1e-300 { 1.0 / d.sqrt() } else { 0.0 }).collect();
-        // scale input once: z = D^{-1/2} x
-        let z: Vec<f64> = x.iter().zip(&inv_sqrt).map(|(v, s)| v * s).collect();
-        par::par_chunks_mut(y, 256, |start, chunk| {
-            for (off, out) in chunk.iter_mut().enumerate() {
-                let i = start + off;
-                let row = self.row(i);
-                // 4 independent accumulators: the f64 reduction chain is
-                // otherwise serial and this dot is Lanczos' entire inner
-                // loop (EXPERIMENTS.md §Perf, change 5).
-                let mut acc = [0.0f64; 4];
-                let chunks = row.len() / 4;
-                for c in 0..chunks {
-                    let ra = &row[c * 4..c * 4 + 4];
-                    let za = &z[c * 4..c * 4 + 4];
-                    for l in 0..4 {
-                        acc[l] += ra[l] as f64 * za[l];
-                    }
+        super::with_scaled_scratch(x, &self.inv_sqrt_deg, |z| {
+            par::par_chunks_mut(y, 256, |start, chunk| {
+                for (off, out) in chunk.iter_mut().enumerate() {
+                    let i = start + off;
+                    *out = kernels::dot_f32_f64(self.row(i), z) * self.inv_sqrt_deg[i];
                 }
-                let mut tail = 0.0f64;
-                for j in chunks * 4..row.len() {
-                    tail += row[j] as f64 * z[j];
-                }
-                *out = ((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail) * inv_sqrt[i];
-            }
+            });
         });
     }
 
@@ -80,7 +81,7 @@ impl Affinity {
         for r in 0..m {
             deg[r] = data[r * m..(r + 1) * m].iter().map(|&v| v as f64).sum();
         }
-        Affinity { n: m, data, deg }
+        Affinity::finish(m, data, deg)
     }
 
     /// Total edge weight between `a`-side and `b`-side of a bipartition
@@ -133,10 +134,9 @@ pub fn build(points: &[f32], dim: usize, w: &[f32], sigma: f64) -> Affinity {
             let wi = w[i];
             for (j, slot) in row.iter_mut().enumerate() {
                 let pj = &points[j * dim..(j + 1) * dim];
-                let mut dot = 0.0f32;
-                for k in 0..dim {
-                    dot += pi[k] * pj[k];
-                }
+                // kernels::dot_f32 — the same kernel the sparse k-NN scan
+                // uses, which is what keeps full-k sparse/dense bit parity
+                let dot = kernels::dot_f32(pi, pj);
                 let d2 = (sqi + sq[j] - 2.0 * dot).max(0.0);
                 *slot = wi * w[j] * (-d2 * inv_two_sigma2).exp();
             }
@@ -152,7 +152,7 @@ pub fn build(points: &[f32], dim: usize, w: &[f32], sigma: f64) -> Affinity {
         }
     });
 
-    Affinity { n, data, deg }
+    Affinity::finish(n, data, deg)
 }
 
 impl super::Graph for Affinity {
@@ -286,6 +286,20 @@ mod tests {
         for i in 0..4 {
             assert!((y[i] - x[i]).abs() < 1e-9, "{} vs {}", y[i], x[i]);
         }
+    }
+
+    #[test]
+    fn inv_sqrt_deg_cached_at_construction() {
+        let (pts, dim) = toy_points();
+        let w = vec![1.0f32; 4];
+        let a = build(&pts, dim, &w, 1.0);
+        for i in 0..4 {
+            assert_eq!(a.inv_sqrt_deg[i].to_bits(), (1.0 / a.deg[i].sqrt()).to_bits());
+        }
+        // every constructor goes through finish(), including submatrix
+        let sub = a.submatrix(&[1, 3]);
+        assert_eq!(sub.inv_sqrt_deg.len(), 2);
+        assert_eq!(sub.inv_sqrt_deg[0].to_bits(), (1.0 / sub.deg[0].sqrt()).to_bits());
     }
 
     #[test]

@@ -65,6 +65,31 @@ pub trait Graph: Sized {
     fn subgraph(&self, idx: &[usize]) -> Self;
 }
 
+/// Run `f` against `z = scale ⊙ x` built in a thread-local scratch buffer —
+/// the `D^{-1/2} x` pre-scaling both graph storages perform at the top of
+/// every `normalized_matvec`. One reused buffer per thread keeps Lanczos'
+/// per-iteration allocations at zero; `take`/`replace` (rather than holding
+/// a `RefCell` borrow across `f`) lets a re-entrant call degrade to a fresh
+/// allocation instead of panicking.
+pub(crate) fn with_scaled_scratch<R>(
+    x: &[f64],
+    scale: &[f64],
+    f: impl FnOnce(&[f64]) -> R,
+) -> R {
+    use std::cell::RefCell;
+    thread_local! {
+        static SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    }
+    SCRATCH.with(|cell| {
+        let mut buf = cell.take();
+        buf.clear();
+        buf.extend(x.iter().zip(scale).map(|(v, s)| v * s));
+        let out = f(&buf);
+        cell.replace(buf);
+        out
+    })
+}
+
 /// Adapter exposing a [`Graph`]'s normalized affinity `D^{-1/2} A D^{-1/2}`
 /// as a [`crate::linalg::SymOp`], so
 /// [`crate::linalg::eigen::lanczos_topk_op`] runs identically against dense

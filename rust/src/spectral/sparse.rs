@@ -20,6 +20,7 @@
 //! NJW embedding and the Lanczos eigensolver run on it unchanged.
 
 use crate::dml::rptree;
+use crate::linalg::kernels;
 use crate::par;
 use crate::rng::Rng;
 
@@ -84,22 +85,20 @@ impl SparseAffinity {
     }
 
     /// y = M x where `M = D^{-1/2} A D^{-1/2}` — Lanczos' entire inner
-    /// loop, parallel over row chunks like the dense twin.
+    /// loop, parallel over row chunks like the dense twin. Each row is a
+    /// [`kernels::spmv_row_f64`] gather; the `D^{-1/2} x` pre-scale reuses
+    /// a thread-local scratch buffer instead of allocating per call.
     pub fn normalized_matvec(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        // scale input once: z = D^{-1/2} x
-        let z: Vec<f64> = x.iter().zip(&self.inv_sqrt_deg).map(|(v, s)| v * s).collect();
-        par::par_chunks_mut(y, 512, |start, chunk| {
-            for (off, out) in chunk.iter_mut().enumerate() {
-                let i = start + off;
-                let (cols, vals) = self.row(i);
-                let mut acc = 0.0f64;
-                for (c, v) in cols.iter().zip(vals) {
-                    acc += *v as f64 * z[*c as usize];
+        super::with_scaled_scratch(x, &self.inv_sqrt_deg, |z| {
+            par::par_chunks_mut(y, 512, |start, chunk| {
+                for (off, out) in chunk.iter_mut().enumerate() {
+                    let i = start + off;
+                    let (cols, vals) = self.row(i);
+                    *out = kernels::spmv_row_f64(vals, cols, z) * self.inv_sqrt_deg[i];
                 }
-                *out = acc * self.inv_sqrt_deg[i];
-            }
+            });
         });
     }
 
@@ -257,10 +256,9 @@ pub fn knn_topology(points: &[f32], dim: usize, k: usize, rng: &mut Rng) -> KnnT
                     continue;
                 }
                 let pj = &points[j * dim..(j + 1) * dim];
-                let mut dot = 0.0f32;
-                for l in 0..dim {
-                    dot += pi[l] * pj[l];
-                }
+                // same kernel as the dense builder's row dot — the bit-parity
+                // tests compare the two entry for entry at full k
+                let dot = kernels::dot_f32(pi, pj);
                 let d2 = (sq[i] + sq[j] - 2.0 * dot).max(0.0);
                 scored.push((d2, ju));
             }

@@ -1,0 +1,243 @@
+//! SIMD kernel parity suite — the forced-off matrix for the kernel layer
+//! (`linalg::kernels`).
+//!
+//! The kernels promise **bit parity by construction** between the scalar
+//! arm and whatever arm runtime dispatch selects (AVX2 on capable x86_64,
+//! scalar everywhere else): same lane-structured accumulators, same
+//! shuffle-mirroring reduction trees, mul-then-add with no FMA
+//! contraction. This suite is the enforcement:
+//!
+//! * a sweep of every kernel over lengths 0..=67 — covering the empty
+//!   case, sub-lane lengths, exact lane multiples, and every tail residue
+//!   of both the 4-wide f64 and 8-wide f32 paths — plus deliberately
+//!   unaligned slices (offset 1..3 into a larger buffer, which `loadu`
+//!   must not care about but an aligned-load bug would);
+//! * an end-to-end pin: `run_pipeline` on the quickstart GMM under
+//!   `DSC_SIMD=scalar` and under runtime dispatch must produce identical
+//!   labels, accuracy bits, and byte counters.
+//!
+//! The dispatch mode is process-global, so every test that flips it holds
+//! `MODE_LOCK` and restores `Auto` on exit; the sweep tests compare the
+//! *dispatched* entry points against the explicit `kernels::scalar` arm,
+//! which exercises AVX2-vs-scalar parity exactly on the hardware that has
+//! AVX2 and degenerates to scalar-vs-scalar (trivially green) elsewhere.
+
+use std::sync::Mutex;
+
+use dsc::config::PipelineConfig;
+use dsc::coordinator::run_pipeline;
+use dsc::data::gmm;
+use dsc::data::scenario::{self, Scenario};
+use dsc::linalg::kernels::{self, scalar, SimdMode};
+use dsc::spectral::Bandwidth;
+
+/// Serializes tests that touch the process-global dispatch mode. Poison is
+/// ignored — a failed parity test must not cascade into lock panics.
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Deterministic, sign-varied f32 pattern with enough mantissa variety
+/// that any reduction-order difference shows up in the low bits.
+fn pat(len: usize, salt: u32) -> Vec<f32> {
+    (0..len)
+        .map(|i| {
+            let h = (i as u32).wrapping_mul(2_654_435_761).wrapping_add(salt.wrapping_mul(97));
+            ((h % 8000) as f32 - 4000.0) / 321.0
+        })
+        .collect()
+}
+
+fn pat_f64(len: usize, salt: u32) -> Vec<f64> {
+    pat(len, salt).iter().map(|&v| v as f64 * 1.0625).collect()
+}
+
+/// Sweep every kernel over 0..=67 with the dispatched arm pinned to Auto.
+#[test]
+fn kernel_sweep_dispatched_matches_scalar_bitwise() {
+    let _guard = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    kernels::set_mode(SimdMode::Auto);
+
+    for len in 0..=67usize {
+        let a = pat(len, 1);
+        let b = pat(len, 2);
+        let z = pat_f64(len, 3);
+
+        assert_eq!(
+            kernels::dot_f32(&a, &b).to_bits(),
+            scalar::dot_f32(&a, &b).to_bits(),
+            "dot_f32 len {len}"
+        );
+        assert_eq!(
+            kernels::dot_f32_f64(&a, &z).to_bits(),
+            scalar::dot_f32_f64(&a, &z).to_bits(),
+            "dot_f32_f64 len {len}"
+        );
+        assert_eq!(
+            kernels::sqdist_f32(&a, &b).to_bits(),
+            scalar::sqdist_f32(&a, &b).to_bits(),
+            "sqdist_f32 len {len}"
+        );
+
+        // gather: scrambled but in-bounds columns over a z larger than the
+        // row, like a real CSR row
+        let zbig = pat_f64(len.max(1) * 3 + 5, 4);
+        let cols: Vec<u32> =
+            (0..len).map(|i| ((i * 29 + 11) % zbig.len()) as u32).collect();
+        assert_eq!(
+            kernels::spmv_row_f64(&a, &cols, &zbig).to_bits(),
+            scalar::spmv_row_f64(&a, &cols, &zbig).to_bits(),
+            "spmv_row_f64 len {len}"
+        );
+
+        let mut o1 = pat(len, 5);
+        let mut o2 = o1.clone();
+        kernels::axpy_f32(&mut o1, -2.625, &b);
+        scalar::axpy_f32(&mut o2, -2.625, &b);
+        assert_eq!(
+            o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            o2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "axpy_f32 len {len}"
+        );
+    }
+}
+
+/// Same sweep on unaligned slices: every input starts 1–3 floats into a
+/// larger buffer, so a kernel that assumed 16/32-byte alignment would
+/// fault or read the wrong lanes.
+#[test]
+fn kernel_sweep_survives_unaligned_slices() {
+    let _guard = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    kernels::set_mode(SimdMode::Auto);
+
+    for len in [1usize, 4, 7, 8, 9, 15, 16, 17, 31, 33, 64, 67] {
+        for off in 1..=3usize {
+            let abuf = pat(len + off, 6);
+            let bbuf = pat(len + off, 7);
+            let zbuf = pat_f64(len + off, 8);
+            let (a, b, z) = (&abuf[off..], &bbuf[off..], &zbuf[off..]);
+
+            assert_eq!(
+                kernels::dot_f32(a, b).to_bits(),
+                scalar::dot_f32(a, b).to_bits(),
+                "dot_f32 len {len} off {off}"
+            );
+            assert_eq!(
+                kernels::dot_f32_f64(a, z).to_bits(),
+                scalar::dot_f32_f64(a, z).to_bits(),
+                "dot_f32_f64 len {len} off {off}"
+            );
+            assert_eq!(
+                kernels::sqdist_f32(a, b).to_bits(),
+                scalar::sqdist_f32(a, b).to_bits(),
+                "sqdist_f32 len {len} off {off}"
+            );
+
+            let zbig = pat_f64(len * 2 + 9, 9);
+            let colbuf: Vec<u32> =
+                (0..len + off).map(|i| ((i * 13 + 3) % zbig.len()) as u32).collect();
+            let cols = &colbuf[off..];
+            assert_eq!(
+                kernels::spmv_row_f64(a, cols, &zbig).to_bits(),
+                scalar::spmv_row_f64(a, cols, &zbig).to_bits(),
+                "spmv_row_f64 len {len} off {off}"
+            );
+
+            let mut o1 = pat(len, 10);
+            let mut o2 = o1.clone();
+            kernels::axpy_f32(&mut o1, 0.8125, b);
+            scalar::axpy_f32(&mut o2, 0.8125, b);
+            assert_eq!(
+                o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                o2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "axpy_f32 len {len} off {off}"
+            );
+        }
+    }
+}
+
+/// Hostile values the tails and reduction trees must not mishandle:
+/// infinities, zeros of both signs, denormal-adjacent magnitudes.
+#[test]
+fn kernel_sweep_special_values() {
+    let _guard = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    kernels::set_mode(SimdMode::Auto);
+
+    let specials: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1e30,
+        -1e30,
+        1e-30,
+        3.5,
+        -7.25,
+        f32::MAX / 4.0,
+        0.1,
+    ];
+    let b: Vec<f32> = specials.iter().rev().copied().collect();
+    let z: Vec<f64> = specials.iter().map(|&v| v as f64).collect();
+
+    assert_eq!(
+        kernels::dot_f32(&specials, &b).to_bits(),
+        scalar::dot_f32(&specials, &b).to_bits()
+    );
+    assert_eq!(
+        kernels::dot_f32_f64(&specials, &z).to_bits(),
+        scalar::dot_f32_f64(&specials, &z).to_bits()
+    );
+    assert_eq!(
+        kernels::sqdist_f32(&specials, &b).to_bits(),
+        scalar::sqdist_f32(&specials, &b).to_bits()
+    );
+}
+
+/// The end-to-end pin: the full pipeline — DML, affinity, Lanczos, ncut,
+/// label population — must not move a single bit between the forced-scalar
+/// and dispatched kernel arms. This is the property that lets `DSC_SIMD`
+/// default to `auto` without invalidating any recorded twin or journal.
+#[test]
+fn pipeline_labels_identical_scalar_vs_dispatched() {
+    let _guard = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    let ds = gmm::paper_mixture_10d(6_000, 0.1, 7);
+    let parts = scenario::split(&ds, Scenario::D3, 2, 7);
+    let cfg = PipelineConfig {
+        total_codes: 150,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: 7,
+        ..Default::default()
+    };
+
+    kernels::set_mode(SimdMode::Scalar);
+    let scalar_run = run_pipeline(&parts, &cfg).expect("scalar-arm pipeline");
+    kernels::set_mode(SimdMode::Auto);
+    let auto_run = run_pipeline(&parts, &cfg).expect("dispatched-arm pipeline");
+
+    assert_eq!(scalar_run.labels, auto_run.labels, "labels diverged between kernel arms");
+    assert_eq!(
+        scalar_run.accuracy.to_bits(),
+        auto_run.accuracy.to_bits(),
+        "accuracy diverged between kernel arms"
+    );
+    assert_eq!(scalar_run.n_codes, auto_run.n_codes);
+    assert_eq!(
+        scalar_run.net.total_bytes(),
+        auto_run.net.total_bytes(),
+        "wire bytes diverged between kernel arms"
+    );
+    assert_eq!(scalar_run.sigma.to_bits(), auto_run.sigma.to_bits());
+}
+
+/// `DSC_SIMD` parsing contract (the env override mirrors `DSC_THREADS`).
+#[test]
+fn dsc_simd_values_parse() {
+    assert_eq!(kernels::parse_mode("off"), Some(SimdMode::Scalar));
+    assert_eq!(kernels::parse_mode("scalar"), Some(SimdMode::Scalar));
+    assert_eq!(kernels::parse_mode("auto"), Some(SimdMode::Auto));
+    assert_eq!(kernels::parse_mode("on"), Some(SimdMode::Auto));
+    assert_eq!(kernels::parse_mode("sse9"), None);
+    assert_eq!(kernels::parse_mode(""), None);
+}
