@@ -1,0 +1,376 @@
+//! Warm-standby leader failover over real processes: SIGKILL the primary
+//! mid-run, let the standby promote, pull identical labels from it.
+//!
+//! `examples/crash_recovery.rs` proves the journal survives a leader that
+//! *restarts in place*; this example proves the replicated path the
+//! standby mode (`dsc leader --serve --standby`) exists for — recovery
+//! with **no shared disk**, on a different process holding its own copy
+//! of the journal:
+//!
+//! 1. run the workload **in-process** — the uninterrupted twin whose
+//!    labels the promoted standby must reproduce exactly;
+//! 2. spawn two persistent `dsc site` daemons, a journaling primary
+//!    (`dsc leader --serve --journal P`), and a warm standby replicating
+//!    that journal over the job socket into its own file
+//!    (`--standby --primary <addr> --journal S`);
+//! 3. submit a job to the primary and **SIGKILL the primary** while the
+//!    run is in flight — the submitting client's connection dies with it;
+//! 4. the standby's replication link goes silent past `--standby-timeout`,
+//!    so it promotes: replays its replicated journal, re-dials the
+//!    surviving site daemons, restarts the orphaned run, and binds its
+//!    own job socket (`PROMOTED` then `SERVING` on stdout);
+//! 5. a **fresh** client pulls the resumed run's labels through the
+//!    promoted standby and asserts them identical to the twin's, and the
+//!    standby's journal must hold the replicated submit plus the
+//!    promotion's restart marker.
+//!
+//! CI runs this as a blocking smoke step. It needs the `dsc` binary:
+//!
+//! ```bash
+//! cargo build --release && cargo run --release --example failover
+//! ```
+//!
+//! (`DSC_BIN=/path/to/dsc` overrides binary discovery.)
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+use dsc::coordinator::journal::{recover, JournalEvent};
+use dsc::coordinator::server::JobClient;
+use dsc::coordinator::spec_from_config;
+use dsc::data::csvio;
+use dsc::prelude::*;
+
+const SITES: usize = 2;
+const SEED: u64 = 23;
+/// Replication-link silence that triggers promotion. Short, so the
+/// example stays fast; the primary heartbeats at a quarter of it, so a
+/// *live* primary is never mistaken for a dead one.
+const STANDBY_TIMEOUT_S: &str = "2";
+
+/// Kills the child on drop so a failed assertion never leaves daemon
+/// processes behind.
+struct ChildGuard {
+    child: Child,
+    name: &'static str,
+}
+
+impl ChildGuard {
+    fn wait(&mut self) -> Result<()> {
+        let status = self.child.wait().with_context(|| format!("wait for {}", self.name))?;
+        if !status.success() {
+            bail!("{} exited with {status}", self.name);
+        }
+        Ok(())
+    }
+
+    /// The point of the exercise: SIGKILL, no warning, no flush.
+    fn kill(&mut self) -> Result<()> {
+        self.child.kill().with_context(|| format!("kill {}", self.name))?;
+        self.child.wait().with_context(|| format!("reap {}", self.name))?;
+        Ok(())
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Locate the `dsc` binary next to this example (`target/<profile>/dsc`).
+fn dsc_bin() -> Result<PathBuf> {
+    if let Some(p) = std::env::var_os("DSC_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().context("current_exe")?;
+    let profile_dir = exe
+        .parent() // …/examples
+        .and_then(Path::parent) // …/<profile>
+        .ok_or_else(|| anyhow!("cannot locate target dir from {}", exe.display()))?;
+    let bin = profile_dir.join(format!("dsc{}", std::env::consts::EXE_SUFFIX));
+    if !bin.exists() {
+        bail!(
+            "{} not found — build the CLI first (`cargo build --release`) or set DSC_BIN",
+            bin.display()
+        );
+    }
+    Ok(bin)
+}
+
+/// Spawn a persistent `dsc site` daemon, parse its `LISTENING <addr>`
+/// banner, and keep its stdout drained.
+fn spawn_site(bin: &Path, csv: &Path, s: usize) -> Result<(ChildGuard, String)> {
+    let mut child = Command::new(bin)
+        .arg("site")
+        .args(["--listen", "127.0.0.1:0"])
+        .args(["--data", csv.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .with_context(|| format!("spawn site {s}"))?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read site banner")?;
+    let addr = line
+        .trim()
+        .strip_prefix("LISTENING ")
+        .ok_or_else(|| anyhow!("site {s} printed {line:?}, expected LISTENING <addr>"))?
+        .to_string();
+    println!("site {s}: pid {} listening on {addr} (persistent)", child.id());
+    // keep draining the pipe so the child can never block on a full one
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+    Ok((ChildGuard { child, name: "dsc site" }, addr))
+}
+
+/// Spawn the journaling primary and parse its `SERVING <addr>` banner.
+fn spawn_primary(
+    bin: &Path,
+    sites: &str,
+    config: &Path,
+    journal: &Path,
+) -> Result<(ChildGuard, String)> {
+    let mut child = Command::new(bin)
+        .arg("leader")
+        .args(["--sites", sites])
+        .args(["--serve", "127.0.0.1:0"])
+        .args(["--journal", journal.to_str().unwrap()])
+        .args(["--config", config.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawn primary leader")?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read primary banner")?;
+    let addr = line
+        .trim()
+        .strip_prefix("SERVING ")
+        .ok_or_else(|| anyhow!("primary printed {line:?}, expected SERVING <addr>"))?
+        .to_string();
+    println!("primary: pid {} serving jobs on {addr}", child.id());
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+    Ok((ChildGuard { child, name: "dsc leader --serve (primary)" }, addr))
+}
+
+/// Spawn the warm standby and parse its `STANDBY …` banner. Its stdout
+/// reader is returned: the `PROMOTED` / `SERVING` lines only appear after
+/// the primary dies, so the caller reads them when the time comes.
+fn spawn_standby(
+    bin: &Path,
+    sites: &str,
+    config: &Path,
+    primary_addr: &str,
+    journal: &Path,
+) -> Result<(ChildGuard, BufReader<ChildStdout>)> {
+    let mut child = Command::new(bin)
+        .arg("leader")
+        .args(["--sites", sites])
+        .args(["--serve", "127.0.0.1:0"])
+        .arg("--standby")
+        .args(["--primary", primary_addr])
+        .args(["--standby-timeout", STANDBY_TIMEOUT_S])
+        .args(["--journal", journal.to_str().unwrap()])
+        .args(["--serve-limit", "1"])
+        .args(["--config", config.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawn standby leader")?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read standby banner")?;
+    if !line.trim().starts_with("STANDBY ") {
+        bail!("standby printed {line:?}, expected STANDBY primary=…");
+    }
+    println!("standby: pid {} replicating from {primary_addr}", child.id());
+    Ok((ChildGuard { child, name: "dsc leader --serve --standby" }, reader))
+}
+
+/// Block until the promoted standby prints `SERVING <addr>`, checking the
+/// `PROMOTED records=…` line comes first.
+fn await_promotion(reader: &mut BufReader<ChildStdout>) -> Result<String> {
+    let mut promoted = false;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).context("read standby stdout")? == 0 {
+            bail!("standby exited before promoting");
+        }
+        let line = line.trim();
+        if line.starts_with("PROMOTED ") {
+            println!("standby: {line}");
+            promoted = true;
+        } else if let Some(addr) = line.strip_prefix("SERVING ") {
+            if !promoted {
+                bail!("standby printed SERVING before PROMOTED — it must never serve unpromoted");
+            }
+            return Ok(addr.to_string());
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let bin = dsc_bin()?;
+
+    // ── the uninterrupted twin: in-process, channel transport ───────────
+    let ds = dsc::data::gmm::paper_mixture_10d(6_000, 0.1, SEED);
+    let parts = scenario::split(&ds, Scenario::D3, SITES, SEED);
+    let cfg = PipelineConfig {
+        total_codes: 150,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: SEED,
+        ..Default::default()
+    };
+    println!("=== uninterrupted twin: in-process run ===");
+    let base = run_pipeline(&parts, &cfg)?;
+    println!("twin: accuracy {:.4}, {} codewords", base.accuracy, base.n_codes);
+
+    // ── stage shards + configs + the two journal paths ──────────────────
+    let dir = std::env::temp_dir().join(format!("dsc_failover_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).context("create scratch dir")?;
+    let mut csvs = Vec::new();
+    for part in &parts {
+        let csv = dir.join(format!("site{}.csv", part.site_id));
+        csvio::save_dataset(&csv, &part.data, &["failover example shard"])?;
+        csvs.push(csv);
+    }
+    let server_toml = dir.join("server.toml");
+    std::fs::write(
+        &server_toml,
+        "[pipeline]\ncollect_timeout_s = 120\n\n[leader]\nallow_label_pull = true\n",
+    )
+    .context("write server config")?;
+    let primary_journal = dir.join("primary.journal");
+    let standby_journal = dir.join("standby.journal");
+
+    // ── two persistent site daemons; they outlive the primary ───────────
+    println!("\n=== failover run: {SITES} persistent sites + primary + warm standby ===");
+    let mut site_guards = Vec::new();
+    let mut addrs = Vec::new();
+    for (s, csv) in csvs.iter().enumerate() {
+        let (guard, addr) = spawn_site(&bin, csv, s)?;
+        site_guards.push(guard);
+        addrs.push(addr);
+    }
+    let sites_arg = addrs.join(",");
+
+    // ── primary + standby, then a job, then SIGKILL the primary ─────────
+    let (mut primary, primary_addr) =
+        spawn_primary(&bin, &sites_arg, &server_toml, &primary_journal)?;
+    let (mut standby, mut standby_out) =
+        spawn_standby(&bin, &sites_arg, &server_toml, &primary_addr, &standby_journal)?;
+    // Let the replication link establish before the submit exists, so the
+    // record stream (not just catch-up) is exercised.
+    std::thread::sleep(Duration::from_millis(400));
+
+    let timeouts = cfg.net.tcp_timeouts();
+    let client1 = JobClient::connect(&primary_addr, &timeouts).context("connect client 1")?;
+    let accepted = client1.submit_tracked(&spec_from_config(&cfg))?;
+    println!("client 1: run {} accepted — killing the primary", accepted.run);
+    // Give the group commit a moment to ship the submit to the standby
+    // (sync first, then replicate — the standby never leads the disk),
+    // then kill -9 mid-run.
+    std::thread::sleep(Duration::from_millis(300));
+    primary.kill()?;
+    drop(client1); // its connection died with the primary
+
+    // ── the standby notices the silence and promotes ────────────────────
+    println!("\n=== promotion: standby takes over after {STANDBY_TIMEOUT_S}s of silence ===");
+    let standby_addr = await_promotion(&mut standby_out)?;
+    println!("standby: serving jobs on {standby_addr}");
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(standby_out.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+
+    // One fresh client (it is the whole --serve-limit): pull the resumed
+    // run's labels, retrying while the run is still being recomputed.
+    let client2 = JobClient::connect(&standby_addr, &timeouts).context("connect client 2")?;
+    let mut pulled = None;
+    for _ in 0..200 {
+        match client2.pull_labels(accepted.run, SITES) {
+            Ok(p) => {
+                pulled = Some(p);
+                break;
+            }
+            Err(e) if format!("{e:#}").contains("not a completed run") => {
+                std::thread::sleep(Duration::from_millis(150));
+            }
+            Err(e) => return Err(e.context("pull resumed run's labels")),
+        }
+    }
+    let pulled = pulled.ok_or_else(|| {
+        anyhow!("run {} never completed on the promoted standby", accepted.run)
+    })?;
+    drop(client2);
+    standby.wait()?;
+
+    // ── the resumed run must equal the uninterrupted twin, exactly ──────
+    let mut labels = vec![0u16; ds.len()];
+    for (site, site_labels) in &pulled {
+        let part = &parts[*site];
+        if site_labels.len() != part.data.len() {
+            bail!(
+                "site {site}: pulled {} labels for {} points",
+                site_labels.len(),
+                part.data.len()
+            );
+        }
+        for (local, &g) in part.global_idx.iter().enumerate() {
+            labels[g as usize] = site_labels[local];
+        }
+    }
+    if labels != base.labels {
+        let diverged = labels.iter().zip(&base.labels).filter(|(a, b)| a != b).count();
+        bail!(
+            "promoted standby diverges from the uninterrupted twin: {diverged}/{} labels differ",
+            ds.len()
+        );
+    }
+    println!("promoted standby's labels: identical to the uninterrupted twin ✓");
+    let accuracy = clustering_accuracy(&ds.labels, &labels);
+    println!("accuracy (promoted standby): {accuracy:.4}");
+    if accuracy < 0.9 {
+        bail!("promoted accuracy {accuracy:.4} below the 0.9 quickstart floor");
+    }
+
+    // ── and the standby's journal must tell the story ───────────────────
+    let log = recover(&standby_journal)?;
+    let submits =
+        log.records.iter().filter(|r| matches!(r.event, JournalEvent::ClientSubmit { .. })).count();
+    let restarts =
+        log.records.iter().filter(|r| matches!(r.event, JournalEvent::Restart)).count();
+    if submits != 1 || restarts != 1 {
+        bail!(
+            "standby journal should hold the replicated submit and the promotion's restart \
+             marker, got {submits} submits / {restarts} restarts in {} records",
+            log.records.len()
+        );
+    }
+    println!(
+        "standby journal: {} records, 1 replicated submit, 1 promotion restart ✓",
+        log.records.len()
+    );
+
+    drop(site_guards); // kill the persistent daemons
+    std::fs::remove_dir_all(&dir).ok();
+    println!("\nfailover: the primary died and the standby finished its work");
+    Ok(())
+}

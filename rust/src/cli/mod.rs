@@ -26,7 +26,9 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::config::{Backend, PipelineConfig, TransportKind};
-use crate::coordinator::server::{serve_jobs, JobClient, ServerOpts};
+use crate::coordinator::server::{
+    replicate_standby, serve_jobs, JobClient, ServerOpts, ETA_UNKNOWN_NS,
+};
 use crate::coordinator::{run_leader_tcp, run_pipeline, spec_from_config};
 use crate::data::scenario::{self, Scenario};
 use crate::data::{csvio, gmm, iris, uci_proxy, Dataset};
@@ -42,7 +44,8 @@ pub struct Flags {
 }
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] = &["weighted", "full-scale", "once", "fair-queue", "journal-fsync", "help"];
+const BOOL_FLAGS: &[&str] =
+    &["weighted", "full-scale", "once", "fair-queue", "journal-fsync", "standby", "help"];
 
 pub fn parse_flags(args: &[String]) -> Result<Flags> {
     let mut map = BTreeMap::new();
@@ -151,11 +154,22 @@ LEADER FLAGS (see docs/DEPLOY.md):
                     the queue and every incomplete run, and resumes serving
   --journal-fsync   fsync the journal at every group commit ([leader]
                     journal_fsync; durable across power loss, slower)
+  --standby         warm standby: replicate the primary's journal over the
+                    job socket instead of serving, and promote — replay,
+                    re-dial the sites, bind --serve — once the primary
+                    has been silent past the standby timeout. Needs
+                    --serve, --journal, and --primary ([leader] standby_of)
+  --primary ADDR    the serving primary's job address to replicate from
+                    (--standby only; overrides [leader] standby_of)
+  --standby-timeout SECS  silence on the replication link that triggers
+                    promotion ([leader] standby_timeout_s, default 10)
   plus the central-step RUN FLAGS: --dml --codes --k --algo --graph
   --knn-k --backend --bandwidth --weighted --seed
 
 SUBMIT FLAGS (see docs/DEPLOY.md):
-  --leader ADDR     the leader's --serve address
+  --leader A[,B,…]  leader job addresses, tried in order (primary first,
+                    then standbys) with capped-backoff retry sweeps until
+                    one accepts the dial — submit-time failover
   --config FILE     TOML pipeline config for the job (flags override it)
   --pull DIR        after the run, pull populated labels through the leader
                     into DIR/labels_site<id>.txt (needs [leader]
@@ -542,8 +556,8 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
     flags.reject_unknown(&[
         "sites", "config", "serve", "max-jobs", "queue-depth", "central-workers",
         "serve-limit", "fair-queue", "admit-rate", "admit-burst", "journal", "journal-fsync",
-        "dml", "codes", "k", "algo", "graph", "knn-k", "backend", "bandwidth", "weighted",
-        "seed", "help",
+        "standby", "primary", "standby-timeout", "dml", "codes", "k", "algo", "graph",
+        "knn-k", "backend", "bandwidth", "weighted", "seed", "help",
     ])?;
     if flags.bool("help") {
         println!("{USAGE}");
@@ -594,6 +608,36 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
             }
             cfg.leader.journal_fsync = true;
         }
+        let standby = flags.bool("standby");
+        if let Some(p) = flags.str("primary") {
+            if !standby {
+                bail!("--primary only makes sense with --standby");
+            }
+            if p.is_empty() {
+                bail!("--primary needs a non-empty address");
+            }
+            cfg.leader.standby_of = Some(p.to_string());
+        }
+        if let Some(secs) = flags.f64("standby-timeout")? {
+            if !standby {
+                bail!("--standby-timeout only makes sense with --standby");
+            }
+            if !secs.is_finite() || secs <= 0.0 {
+                bail!("--standby-timeout must be finite and > 0 seconds");
+            }
+            cfg.leader.standby_timeout = std::time::Duration::from_secs_f64(secs);
+        }
+        if standby {
+            if cfg.leader.standby_of.is_none() {
+                bail!("--standby needs --primary ADDR (or [leader] standby_of)");
+            }
+            if cfg.leader.journal_path.is_none() {
+                bail!(
+                    "--standby needs --journal PATH (or [leader] journal_path) — \
+                     the replicated copy it promotes from"
+                );
+            }
+        }
         let mut opts = ServerOpts::from_config(&cfg);
         if let Some(n) = flags.usize("max-jobs")? {
             if n == 0 {
@@ -612,6 +656,24 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
             opts.central_workers = n;
         }
         opts.client_limit = flags.u64("serve-limit")?;
+
+        if standby {
+            // Warm standby: no listener yet — a standby that accepted
+            // clients before promotion would be a split brain. Replicate
+            // until the primary goes silent, then fall through to the
+            // normal serve path: `serve_jobs` finds the replicated journal
+            // on disk and performs exactly the crash-restart recovery
+            // (replay, re-dial the sites, resume incomplete runs).
+            let primary = cfg.leader.standby_of.as_deref().unwrap_or("?").to_string();
+            println!(
+                "STANDBY primary={primary} journal={}",
+                cfg.leader.journal_path.as_deref().map(|p| p.display().to_string()).unwrap(),
+            );
+            std::io::stdout().flush().ok();
+            let records = replicate_standby(&cfg)?;
+            println!("PROMOTED records={records}");
+            std::io::stdout().flush().ok();
+        }
 
         let listener = std::net::TcpListener::bind(serve_addr)
             .with_context(|| format!("bind job socket {serve_addr}"))?;
@@ -641,6 +703,11 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
             stats.completed, stats.failed, stats.rejected
         );
         return Ok(());
+    }
+
+    if flags.bool("standby") || flags.str("primary").is_some() || flags.str("standby-timeout").is_some()
+    {
+        bail!("--standby needs --serve ADDR (the address the promoted leader serves on)");
     }
 
     println!(
@@ -679,6 +746,40 @@ pub fn cmd_leader(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Dial sweeps a submit makes over its `--leader` failover chain before
+/// giving up. With the capped-exponential `Backoff` between sweeps this
+/// spans comfortably more than a default `standby_timeout` (10 s), so a
+/// client that arrives mid-failover outlives the standby's promotion.
+const SUBMIT_DIAL_SWEEPS: usize = 8;
+
+/// Try each leader in order; on a full sweep of refusals, back off and
+/// sweep again. The first address is the primary — a connect that lands
+/// anywhere else is a failover and says so on stderr.
+fn dial_leaders(leaders: &[String], cfg: &PipelineConfig) -> Result<JobClient> {
+    let timeouts = cfg.net.tcp_timeouts();
+    let mut backoff = Backoff::new(cfg.seed ^ addr_salt(&leaders.join(",")));
+    let mut last_err = anyhow!("no leader addresses");
+    for sweep in 0..SUBMIT_DIAL_SWEEPS {
+        if sweep > 0 {
+            std::thread::sleep(backoff.next_delay());
+        }
+        for (i, addr) in leaders.iter().enumerate() {
+            match JobClient::connect(addr, &timeouts) {
+                Ok(client) => {
+                    if i > 0 || sweep > 0 {
+                        eprintln!("submit: connected to {addr} (failover, sweep {sweep})");
+                    }
+                    return Ok(client);
+                }
+                Err(e) => last_err = e.context(format!("dial leader {addr}")),
+            }
+        }
+    }
+    Err(last_err.context(format!(
+        "no leader reachable after {SUBMIT_DIAL_SWEEPS} sweeps of {leaders:?}"
+    )))
+}
+
 /// The `dsc submit` subcommand: enqueue one clustering job on a serving
 /// leader (`dsc leader --serve`) and wait for the result.
 ///
@@ -707,6 +808,13 @@ pub fn cmd_submit(args: &[String]) -> Result<()> {
     let addr = flags
         .str("leader")
         .ok_or_else(|| anyhow!("dsc submit needs --leader <addr> (the leader's --serve address)"))?;
+    // A comma-separated list is a failover chain: primary first, then the
+    // standby(s) that will promote if it dies.
+    let leaders: Vec<String> =
+        addr.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect();
+    if leaders.is_empty() {
+        bail!("--leader needs at least one address");
+    }
 
     let mut spec = spec_from_config(&cfg);
     // Validate before dialing so a bad flag fails fast and offline.
@@ -720,18 +828,25 @@ pub fn cmd_submit(args: &[String]) -> Result<()> {
         }
         None => false,
     };
-    let client = JobClient::connect(addr, &cfg.net.tcp_timeouts())?;
+    let client = dial_leaders(&leaders, &cfg)?;
     let run = if tracked {
         // The priority dialect: the accept carries queue position and an
         // ETA estimate, so surface them. The plain `SUBMITTED run=<id>`
-        // line stays untouched for legacy scripts.
+        // line stays untouched for legacy scripts. A cold server has no
+        // completed run to extrapolate from; the wire says so with the
+        // u64::MAX sentinel, and inventing `0.000` here would read as
+        // "immediate" — print the honest answer instead.
         let acc = client.submit_tracked(&spec)?;
-        println!(
-            "SUBMITTED run={} position={} eta_s={:.3}",
-            acc.run,
-            acc.position,
-            acc.eta_ns as f64 / 1e9
-        );
+        if acc.eta_ns == ETA_UNKNOWN_NS {
+            println!("SUBMITTED run={} position={} eta_s=unknown", acc.run, acc.position);
+        } else {
+            println!(
+                "SUBMITTED run={} position={} eta_s={:.3}",
+                acc.run,
+                acc.position,
+                acc.eta_ns as f64 / 1e9
+            );
+        }
         acc.run
     } else {
         let run = client.submit(&spec)?;
@@ -1026,6 +1141,60 @@ mod tests {
                 .collect();
         let err = cmd_leader(&args).unwrap_err();
         assert!(err.to_string().contains("--journal-fsync needs --journal"), "{err}");
+    }
+
+    fn leader_args(extra: &[&str]) -> Vec<String> {
+        ["--sites", "127.0.0.1:1", "--serve", "127.0.0.1:0"]
+            .iter()
+            .chain(extra)
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Every standby misconfiguration fails offline, before any socket
+    /// is touched — the validation order is part of the CLI contract.
+    #[test]
+    fn standby_flags_validated() {
+        // standby is a warm *server* mode: it needs a --serve address to
+        // promote onto
+        let args: Vec<String> =
+            ["--sites", "127.0.0.1:1", "--standby"].iter().map(|s| s.to_string()).collect();
+        let err = cmd_leader(&args).unwrap_err();
+        assert!(err.to_string().contains("--standby needs --serve"), "{err}");
+
+        // no primary to replicate from
+        let err = cmd_leader(&leader_args(&["--standby", "--journal", "/tmp/dsc-s.j"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--primary"), "{err}");
+
+        // no journal to replicate into
+        let err = cmd_leader(&leader_args(&["--standby", "--primary", "127.0.0.1:9"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--journal"), "{err}");
+
+        // replication knobs without --standby are a loud error, not a no-op
+        let err = cmd_leader(&leader_args(&["--primary", "127.0.0.1:9"])).unwrap_err();
+        assert!(err.to_string().contains("--primary only makes sense"), "{err}");
+        let err = cmd_leader(&leader_args(&["--standby-timeout", "5"])).unwrap_err();
+        assert!(err.to_string().contains("--standby-timeout only makes sense"), "{err}");
+
+        // the promotion deadline must be a positive duration
+        for bad in ["0", "-3", "inf"] {
+            let err = cmd_leader(&leader_args(&[
+                "--standby", "--primary", "127.0.0.1:9", "--journal", "/tmp/dsc-s.j",
+                "--standby-timeout", bad,
+            ]))
+            .unwrap_err();
+            assert!(err.to_string().contains("--standby-timeout"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn submit_rejects_an_empty_leader_list() {
+        let args: Vec<String> =
+            ["--leader", ",,"].iter().map(|s| s.to_string()).collect();
+        let err = cmd_submit(&args).unwrap_err();
+        assert!(err.to_string().contains("at least one address"), "{err}");
     }
 
     #[test]

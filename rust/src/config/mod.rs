@@ -134,6 +134,19 @@ pub struct LeaderConfig {
     /// crash; only power loss can drop acknowledged events (see
     /// docs/DEPLOY.md for the exact durability window).
     pub journal_fsync: bool,
+    /// The serving primary's job-socket address a `dsc leader --standby`
+    /// process dials for journal replication (`dsc leader --primary`
+    /// overrides). Standby mode requires it — and a journal path to
+    /// replicate into. `None` (the default) on a serving primary, which
+    /// *accepts* standbys on its job socket whenever journaling is on.
+    pub standby_of: Option<String>,
+    /// Standby promotion deadline: how long the replication link may go
+    /// with no frame at all (records or heartbeats) before the standby
+    /// presumes the primary dead and promotes itself. The primary
+    /// heartbeats the link at a quarter of this, so a healthy-but-idle
+    /// primary never trips it. Also used as the re-dial cap while the
+    /// standby has never reached the primary.
+    pub standby_timeout: Duration,
 }
 
 /// `min(2, cores)` — enough to overlap one long central with another run's
@@ -154,6 +167,8 @@ impl Default for LeaderConfig {
             admit_burst: 4,
             journal_path: None,
             journal_fsync: false,
+            standby_of: None,
+            standby_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -309,6 +324,8 @@ impl PipelineConfig {
     /// admit_burst = 4           # token-bucket burst above admit_rate
     /// journal_path = "leader.journal"  # crash-recovery event log (unset = off)
     /// journal_fsync = false     # fsync each group commit (power-loss durability)
+    /// standby_of = "10.0.0.1:7100"  # primary address a --standby replicates from
+    /// standby_timeout_s = 10.0  # silent replication link ⇒ standby promotes
     ///
     /// [site]
     /// label_cache_runs = 8      # completed runs kept for LABELSPULL
@@ -545,6 +562,21 @@ impl PipelineConfig {
             cfg.leader.journal_fsync =
                 v.as_bool().ok_or_else(|| anyhow!("leader.journal_fsync must be bool"))?;
         }
+        if let Some(v) = get("leader.standby_of") {
+            let s = v.as_str().ok_or_else(|| anyhow!("leader.standby_of must be a string"))?;
+            if s.is_empty() {
+                bail!("leader.standby_of must not be empty (omit the key on a primary)");
+            }
+            cfg.leader.standby_of = Some(s.to_string());
+        }
+        if let Some(v) = get("leader.standby_timeout_s") {
+            let secs =
+                v.as_f64().ok_or_else(|| anyhow!("leader.standby_timeout_s must be a number"))?;
+            if !(secs > 0.0) || !secs.is_finite() {
+                bail!("leader.standby_timeout_s must be finite and > 0");
+            }
+            cfg.leader.standby_timeout = Duration::from_secs_f64(secs);
+        }
 
         if let Some(v) = get("site.label_cache_runs") {
             let n =
@@ -743,13 +775,20 @@ mod tests {
         // journaling off by default: the pre-journal server, byte for byte
         assert_eq!(cfg.leader.journal_path, None);
         assert!(!cfg.leader.journal_fsync);
+        // failover off by default: no primary to replicate from, 10 s
+        // promotion deadline once one is configured
+        assert_eq!(cfg.leader.standby_of, None);
+        assert_eq!(cfg.leader.standby_timeout, Duration::from_secs(10));
 
         let cfg = PipelineConfig::from_toml(
             "[leader]\nmax_jobs = 2\nqueue_depth = 8\nallow_label_pull = true\n\
              central_workers = 3\nfair_queue = true\nadmit_rate = 2.5\nadmit_burst = 7\n\
-             journal_path = \"leader.journal\"\njournal_fsync = true",
+             journal_path = \"leader.journal\"\njournal_fsync = true\n\
+             standby_of = \"10.0.0.1:7100\"\nstandby_timeout_s = 2.5",
         )
         .unwrap();
+        assert_eq!(cfg.leader.standby_of.as_deref(), Some("10.0.0.1:7100"));
+        assert_eq!(cfg.leader.standby_timeout, Duration::from_millis(2500));
         assert_eq!(cfg.leader.max_jobs, 2);
         assert_eq!(cfg.leader.queue_depth, 8);
         assert!(cfg.leader.allow_label_pull);
@@ -783,6 +822,11 @@ mod tests {
         assert!(PipelineConfig::from_toml("[leader]\njournal_path = \"\"").is_err());
         assert!(PipelineConfig::from_toml("[leader]\njournal_path = 7").is_err());
         assert!(PipelineConfig::from_toml("[leader]\njournal_fsync = \"yes\"").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nstandby_of = \"\"").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nstandby_of = 7").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nstandby_timeout_s = 0").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nstandby_timeout_s = -2").is_err());
+        assert!(PipelineConfig::from_toml("[leader]\nstandby_timeout_s = \"soon\"").is_err());
     }
 
     #[test]

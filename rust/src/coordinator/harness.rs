@@ -43,9 +43,17 @@
 //! replay it against a puppet driver, and resume serving the surviving
 //! mailbox. `rust/tests/journal_replay.rs` sweeps the crash point over
 //! every record index and pins replayed == uninterrupted, bit for bit.
+//!
+//! **Failover** ([`ChannelHarness::crash_and_failover`]): the warm-standby
+//! twin of the above — the crashed primary's journal is replicated through
+//! the real `JREPLRECORD` codec into a second journal file, checked
+//! byte-identical, and the reactor is promoted *from the standby's copy*,
+//! exactly as `dsc leader --standby` takes over a dead primary.
+//! `rust/tests/failover.rs` sweeps the kill point over every record index.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
@@ -56,10 +64,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::{Backend, PipelineConfig};
 use crate::data::Dataset;
 use crate::net::channel::{self, Deliver, Fault, FaultPlan, HangupSite, VirtualClock};
-use crate::net::{SiteNet, SiteTransport};
+use crate::net::{wire, Message, SiteNet, SiteTransport};
 use crate::site::{self, SessionOutcome};
 
-use super::journal::Journal;
+use super::journal::{self, Journal};
 use super::server::{
     client_frame_to_event, CentralHook, CentralPool, ClientLink, Event, JobClient, Reactor,
     ReplayDriver, ServerDriver, ServerOpts, ServerStats,
@@ -126,6 +134,11 @@ struct ChannelDriver {
     to_sites: Vec<Option<Sender<Vec<u8>>>>,
     gens: Vec<u64>,
     clients: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>>,
+    /// Re-dial attempts on a degraded star (shared with
+    /// [`ChannelHarness::redial_attempts`]) — the channel world can never
+    /// actually revive a link, so the *attempt* is the observable that
+    /// pins the reactor's re-dial schedule.
+    redials: Arc<AtomicU64>,
 }
 
 impl ServerDriver for ChannelDriver {
@@ -157,6 +170,7 @@ impl ServerDriver for ChannelDriver {
 
     fn ensure_links(&mut self) -> Result<()> {
         if let Some(site) = self.to_sites.iter().position(|s| s.is_none()) {
+            self.redials.fetch_add(1, Ordering::Relaxed);
             bail!("site {site} is a channel link — severed links cannot be re-dialed");
         }
         Ok(())
@@ -233,6 +247,7 @@ pub struct ChannelHarness {
     reactor: Option<JoinHandle<Result<ReactorOutcome>>>,
     sites: Vec<JoinHandle<Result<SessionOutcome>>>,
     restart: Option<RestartState>,
+    redials: Arc<AtomicU64>,
 }
 
 /// Stand up the channel job server: one [`crate::site::session`] thread
@@ -348,11 +363,13 @@ fn serve_channel_inner(
     let clock = VirtualClock::new();
     let clients: Arc<Mutex<HashMap<u64, Sender<Vec<u8>>>>> =
         Arc::new(Mutex::new(HashMap::new()));
+    let redials = Arc::new(AtomicU64::new(0));
     let driver = ChannelDriver {
         clock: clock.clone(),
         to_sites: down_txs.into_iter().map(Some).collect(),
         gens: vec![0; n_sites],
         clients: Arc::clone(&clients),
+        redials: Arc::clone(&redials),
     };
     // Same offload gate as the TCP server: pool on the native backend only.
     let workers =
@@ -454,6 +471,7 @@ fn serve_channel_inner(
         reactor: Some(reactor),
         sites,
         restart,
+        redials,
     })
 }
 
@@ -481,6 +499,15 @@ impl ChannelHarness {
         self.clock.clone()
     }
 
+    /// How many times the reactor has tried to re-dial a severed site
+    /// link. Channel links can never actually be revived, so the attempt
+    /// count is what pins the re-dial *schedule*: it must keep growing on
+    /// ticks even when the server is otherwise idle (see
+    /// `severed_site_is_redialed_on_schedule_while_idle`).
+    pub fn redial_attempts(&self) -> u64 {
+        self.redials.load(Ordering::Relaxed)
+    }
+
     /// A detached [`ChannelHarness::tick`] handle: a crash-recovery test
     /// drives its client script (and the clock) from a second thread while
     /// the main thread sits in [`ChannelHarness::crash_and_restart`], so
@@ -506,18 +533,95 @@ impl ChannelHarness {
             .as_ref()
             .ok_or_else(|| anyhow!("crash_and_restart needs a serve_channel_journaled harness"))?
             .clone();
+        let (driver, pool, ev_rx) = self.join_crashed()?;
+        let path = rs.path.clone();
+        self.resume_reactor(rs, path, driver, pool, ev_rx);
+        Ok(())
+    }
+
+    /// Crash the primary at its staged crash point and promote a warm
+    /// standby in its place. The crashed reactor's journal is replicated
+    /// record by record into `standby_path` through the real JREPL wire
+    /// codec — each framed record rides `JREPLRECORD` encode → decode →
+    /// [`Journal::append_framed`], the exact apply path a live standby
+    /// runs — and the two files are checked byte-identical before the
+    /// promoted reactor recovers from the *standby's* copy: replay,
+    /// resume, and journal onward into the standby journal. The surviving
+    /// channel world (sites, mailbox, clients, clock) carries over, so
+    /// post-promotion traffic continues where the journal ends — the
+    /// socket-free twin of `dsc leader --standby` taking over a SIGKILLed
+    /// primary. `standby_path` must start empty (a warm standby whose
+    /// catch-up streamed the whole history).
+    pub fn crash_and_failover(&mut self, standby_path: &Path) -> Result<()> {
+        let rs = self
+            .restart
+            .as_ref()
+            .ok_or_else(|| anyhow!("crash_and_failover needs a serve_channel_journaled harness"))?
+            .clone();
+        let (driver, pool, ev_rx) = self.join_crashed()?;
+        let (frames, _) = journal::framed_records(&rs.path)?;
+        let (mut standby, existing) = Journal::open(standby_path, rs.fsync)?;
+        if !existing.is_empty() {
+            bail!(
+                "{}: the standby journal must start empty ({} records found)",
+                standby_path.display(),
+                existing.len()
+            );
+        }
+        for framed in frames {
+            let frame = wire::encode(&Message::JreplRecord { framed });
+            let Message::JreplRecord { framed } = wire::decode(&frame)? else {
+                unreachable!("JREPLRECORD decodes to itself");
+            };
+            standby.append_framed(&framed)?;
+        }
+        standby.sync()?;
+        drop(standby);
+        if std::fs::read(&rs.path)? != std::fs::read(standby_path)? {
+            bail!(
+                "replicated standby journal {} is not byte-identical to the \
+                 primary's {}",
+                standby_path.display(),
+                rs.path.display()
+            );
+        }
+        let path = standby_path.to_path_buf();
+        self.resume_reactor(rs, path, driver, pool, ev_rx);
+        Ok(())
+    }
+
+    /// Join the reactor thread at its staged crash point and take the
+    /// surviving world (driver, pool, mailbox) off its hands.
+    fn join_crashed(&mut self) -> Result<(ChannelDriver, CentralPool, Receiver<Event>)> {
         let handle = self
             .reactor
             .take()
             .ok_or_else(|| anyhow!("the reactor handle is already gone"))?;
         let outcome = handle.join().map_err(|_| anyhow!("reactor thread panicked"))??;
-        let ReactorOutcome::Crashed { driver, pool, ev_rx } = outcome else {
-            bail!("the reactor finished instead of crashing — crash_after was never reached");
-        };
+        match outcome {
+            ReactorOutcome::Crashed { driver, pool, ev_rx } => Ok((driver, pool, ev_rx)),
+            ReactorOutcome::Finished(_) => bail!(
+                "the reactor finished instead of crashing — crash_after was never reached"
+            ),
+        }
+    }
+
+    /// Second half of crash recovery and of failover promotion: recover
+    /// the journal at `path`, replay it on the log's timeline, and spawn
+    /// a fresh reactor around the replayed state serving the surviving
+    /// mailbox (journaling onward into the same file).
+    fn resume_reactor(
+        &mut self,
+        rs: RestartState,
+        path: PathBuf,
+        driver: ChannelDriver,
+        pool: CentralPool,
+        ev_rx: Receiver<Event>,
+    ) {
         let clock = self.clock.clone();
         let handle = thread::spawn(move || -> Result<ReactorOutcome> {
             // Read back what survived "on disk"…
-            let (journal, records) = Journal::open(&rs.path, rs.fsync)?;
+            let (journal, records) = Journal::open(&path, rs.fsync)?;
             let last_t_ns = records.last().map(|r| r.t_ns).unwrap_or(0);
             // …make sure the surviving clock is not behind the journal
             // (it cannot be — every record was stamped from it — but the
@@ -559,7 +663,6 @@ impl ChannelHarness {
             }
         });
         self.reactor = Some(handle);
-        Ok(())
     }
 
     /// Wait for the server to finish (every `client_limit` client done),

@@ -311,6 +311,68 @@ fn encode_payload(t_ns: u64, ev: &JournalEvent) -> Vec<u8> {
     w.buf
 }
 
+/// Build one complete on-disk frame — `len:u32 crc:u32 payload` — for a
+/// record. This is the *only* serialization of a journal record in the
+/// codebase: [`Journal::append`] writes exactly these bytes, and the
+/// `JREPL` replication path (`net/wire.rs` tag 24) ships them to a warm
+/// standby verbatim, so primary and standby journals are byte-identical
+/// by construction.
+pub(crate) fn frame_record(t_ns: u64, ev: &JournalEvent) -> Vec<u8> {
+    let payload = encode_payload(t_ns, ev);
+    let crc = crc32(&payload);
+    let mut frame = Vec::with_capacity(8 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&crc.to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Decode one complete frame as produced by [`frame_record`] (and as laid
+/// out on disk): length header, CRC check, payload decode, no trailing
+/// bytes. The standby validates every replicated record through this
+/// before appending it to its own journal.
+pub(crate) fn decode_framed(framed: &[u8]) -> Result<Record> {
+    if framed.len() < 8 {
+        bail!("framed journal record of {} bytes is shorter than its header", framed.len());
+    }
+    let len = u32::from_le_bytes(framed[..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(framed[4..8].try_into().unwrap());
+    if len < MIN_RECORD || len > MAX_RECORD {
+        bail!("framed journal record claims {len} payload bytes");
+    }
+    if framed.len() != 8 + len as usize {
+        bail!(
+            "framed journal record claims {len} payload bytes but carries {}",
+            framed.len() - 8
+        );
+    }
+    let payload = &framed[8..];
+    if crc32(payload) != crc {
+        bail!("framed journal record CRC mismatch");
+    }
+    decode_payload(payload)
+}
+
+/// Read back the valid prefix of a journal file as raw frames — each
+/// element is one record's `len crc payload` bytes exactly as on disk —
+/// plus the prefix length in bytes. Same recovery rules as [`recover`]
+/// (torn tail tolerated, interior corruption and poisoning loud); the
+/// primary uses this to stream catch-up history to a connecting standby
+/// without re-encoding anything.
+pub fn framed_records(path: &Path) -> Result<(Vec<Vec<u8>>, u64)> {
+    let rec = recover(path)?;
+    let buf = fs::read(path).with_context(|| format!("read journal {}", path.display()))?;
+    let mut frames = Vec::with_capacity(rec.records.len());
+    let mut pos = MAGIC.len();
+    for _ in 0..rec.records.len() {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        frames.push(buf[pos..pos + 8 + len].to_vec());
+        pos += 8 + len;
+    }
+    debug_assert_eq!(pos as u64, rec.valid_bytes.max(MAGIC.len() as u64));
+    Ok((frames, rec.valid_bytes))
+}
+
 /// Refusal/error strings inside records stay short sentences; anything
 /// larger is corruption (same posture as the wire codec's reject cap).
 const MAX_TEXT: u32 = 64 * 1024;
@@ -559,14 +621,24 @@ impl Journal {
     /// Append one record; returns the record count after the append. The
     /// bytes are buffered — not durable until [`Journal::sync`].
     pub fn append(&mut self, t_ns: u64, event: &JournalEvent) -> Result<u64> {
-        let payload = encode_payload(t_ns, event);
-        let crc = crc32(&payload);
-        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
-        self.w.write_all(&crc.to_le_bytes())?;
-        self.w.write_all(&payload)?;
+        let frame = frame_record(t_ns, event);
+        self.w.write_all(&frame)?;
         self.records += 1;
         self.dirty = true;
         Ok(self.records)
+    }
+
+    /// Append one already-framed record (`len crc payload`) verbatim,
+    /// after validating it end to end with [`decode_framed`] — the standby
+    /// side of journal replication, which must write the primary's exact
+    /// bytes so the two files stay byte-identical. Returns the record
+    /// count after the append; buffered like [`Journal::append`].
+    pub fn append_framed(&mut self, framed: &[u8]) -> Result<(Record, u64)> {
+        let record = decode_framed(framed).context("replicated journal record")?;
+        self.w.write_all(framed)?;
+        self.records += 1;
+        self.dirty = true;
+        Ok((record, self.records))
     }
 
     /// Flush buffered records (and `fsync` when configured). No-op when
@@ -747,6 +819,61 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn frame_record_roundtrips_through_decode_framed() {
+        for (i, ev) in sample_events().into_iter().enumerate() {
+            let t_ns = 7_000 + i as u64;
+            let frame = frame_record(t_ns, &ev);
+            // The frame is exactly header + payload, CRC included.
+            assert_eq!(frame.len(), 8 + encode_payload(t_ns, &ev).len());
+            let rec = decode_framed(&frame).unwrap();
+            assert_eq!(rec, Record { t_ns, event: ev.clone() });
+            // Truncation at every cut and a flipped payload byte both fail.
+            for cut in 0..frame.len() {
+                assert!(decode_framed(&frame[..cut]).is_err(), "cut at {cut} of {ev:?}");
+            }
+            let mut bad = frame.clone();
+            bad[8] ^= 0xFF;
+            assert!(format!("{:#}", decode_framed(&bad).unwrap_err()).contains("CRC"));
+        }
+    }
+
+    #[test]
+    fn append_framed_reproduces_append_byte_for_byte() {
+        let dir = std::env::temp_dir().join(format!("dsc-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let native = dir.join("framed-native.journal");
+        let copy = dir.join("framed-copy.journal");
+        let _ = fs::remove_file(&native);
+        let _ = fs::remove_file(&copy);
+
+        let (mut j, _) = Journal::open(&native, false).unwrap();
+        for (i, ev) in sample_events().iter().enumerate() {
+            j.append(10 + i as u64, ev).unwrap();
+        }
+        j.sync().unwrap();
+        drop(j);
+
+        // Replicate the file frame by frame through the standby path: the
+        // result must be byte-identical, and each frame must decode to the
+        // record it carries.
+        let (frames, valid_bytes) = framed_records(&native).unwrap();
+        assert_eq!(frames.len(), sample_events().len());
+        assert_eq!(valid_bytes, fs::metadata(&native).unwrap().len());
+        let (mut standby, old) = Journal::open(&copy, false).unwrap();
+        assert!(old.is_empty());
+        for (i, frame) in frames.iter().enumerate() {
+            let (rec, count) = standby.append_framed(frame).unwrap();
+            assert_eq!(count, i as u64 + 1);
+            assert_eq!(rec.t_ns, 10 + i as u64);
+        }
+        standby.sync().unwrap();
+        drop(standby);
+        assert_eq!(fs::read(&native).unwrap(), fs::read(&copy).unwrap());
+        let _ = fs::remove_file(&native);
+        let _ = fs::remove_file(&copy);
     }
 
     #[test]

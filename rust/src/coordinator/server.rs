@@ -58,6 +58,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -69,7 +70,7 @@ use crate::config::{Backend, PipelineConfig};
 use crate::net::tcp::{self, Backoff, TcpClient, TcpTimeouts};
 use crate::net::{wire, JobReport, JobSpec, LinkStats, Message, RejectCode};
 
-use super::journal::{Journal, JournalEvent, Record};
+use super::journal::{self, Journal, JournalEvent, Record};
 use super::machine::{Advance, OutMsg, RunInput, RunMachine};
 use super::{central_cluster, check_graph_backend_kinds, resolve_xla};
 
@@ -381,6 +382,64 @@ impl<T> DrrQueue<T> {
             return Some(item);
         }
     }
+
+    /// How many queued jobs DRR would serve before a job `client` pushes
+    /// *now* with scheduling weight `weight` — the honest JOBACCEPT2 queue
+    /// position under `fair_queue`, where the global backlog count lies
+    /// (a light client's first job overtakes a flooder's lane). Read-only:
+    /// replays [`DrrQueue::pop`]'s exact schedule on a weight-only copy of
+    /// the ring (current deficits included) with the probe job appended.
+    pub fn position_of_next(&self, client: u64, weight: u32) -> usize {
+        let weight = weight.max(1);
+        struct SimLane {
+            client: u64,
+            /// `(weight, is_probe)` in arrival order.
+            jobs: VecDeque<(u32, bool)>,
+            deficit: u32,
+        }
+        let mut ring: VecDeque<SimLane> = self
+            .ring
+            .iter()
+            .map(|l| SimLane {
+                client: l.client,
+                jobs: l.jobs.iter().map(|&(w, _)| (w, false)).collect(),
+                deficit: l.deficit,
+            })
+            .collect();
+        if let Some(lane) = ring.iter_mut().find(|l| l.client == client) {
+            lane.jobs.push_back((weight, true));
+        } else {
+            let mut jobs = VecDeque::new();
+            jobs.push_back((weight, true));
+            ring.push_back(SimLane { client, jobs, deficit: 0 });
+        }
+        let mut served = 0usize;
+        loop {
+            let Some(lane) = ring.front_mut() else {
+                unreachable!("the probe job is always in the ring until served");
+            };
+            let Some(&(w, probe)) = lane.jobs.front() else {
+                ring.pop_front();
+                continue;
+            };
+            if lane.deficit == 0 {
+                lane.deficit = w;
+            }
+            lane.deficit -= 1;
+            lane.jobs.pop_front().expect("checked non-empty");
+            if probe {
+                return served;
+            }
+            served += 1;
+            if lane.deficit == 0 || lane.jobs.is_empty() {
+                let mut lane = ring.pop_front().expect("front exists");
+                lane.deficit = 0;
+                if !lane.jobs.is_empty() {
+                    ring.push_back(lane);
+                }
+            }
+        }
+    }
 }
 
 /// Per-client token-bucket admission meter (`[leader] admit_rate` /
@@ -416,6 +475,15 @@ impl TokenBucket {
         } else {
             Err(Duration::from_secs_f64((1.0 - self.tokens) / self.rate))
         }
+    }
+
+    /// Return one token (capped at `burst`): a submit that was charged and
+    /// then refused for a reason the client did not spend server work on
+    /// (bad spec, full queue) must not also burn admission allowance —
+    /// during overload that would rate-starve a well-behaved client on
+    /// rejections it never caused.
+    pub fn refund(&mut self) {
+        self.tokens = (self.tokens + 1.0).min(self.burst);
     }
 }
 
@@ -460,6 +528,16 @@ impl JobQueue {
         match self {
             JobQueue::Fifo(q) => q.pop_front(),
             JobQueue::Fair(q) => q.pop(),
+        }
+    }
+
+    /// Queued jobs the scheduler will serve before a job `client` pushes
+    /// next with weight `weight`: the whole backlog under FIFO, the lane
+    /// schedule's answer under DRR.
+    fn position_for(&self, client: u64, weight: u32) -> usize {
+        match self {
+            JobQueue::Fifo(q) => q.len(),
+            JobQueue::Fair(q) => q.position_of_next(client, weight),
         }
     }
 }
@@ -568,6 +646,16 @@ pub(crate) struct Reactor<D: ServerDriver> {
     /// swallow re-sends, and skip re-offloading centrals — their
     /// journaled `CentralDone` advances the machine instead.
     replaying: bool,
+    /// Journal replication to a warm standby: the sender thread's inbox
+    /// ([`spawn_replicator`]). `None` — no journal, the channel harness,
+    /// or a replication-free build — keeps the event path byte-identical
+    /// to the pre-failover server.
+    repl: Option<Sender<ReplEvent>>,
+    /// Framed records appended since the last group commit, with their
+    /// record indices. Handed to the sender thread only *after* the sync
+    /// that made them durable, so the standby can never hold a record the
+    /// primary's own disk does not.
+    repl_pending: Vec<(u64, Vec<u8>)>,
 }
 
 impl<D: ServerDriver> Reactor<D> {
@@ -613,6 +701,8 @@ impl<D: ServerDriver> Reactor<D> {
             send_seq: 0,
             replay_fail: VecDeque::new(),
             replaying: false,
+            repl: None,
+            repl_pending: Vec::new(),
         })
     }
 
@@ -677,19 +767,45 @@ impl<D: ServerDriver> Reactor<D> {
         self.journal.take()
     }
 
+    /// Arm journal replication: every framed append is handed to `tx`
+    /// (the [`spawn_replicator`] sender thread) right after the group
+    /// commit that made it durable here.
+    pub(crate) fn attach_repl(&mut self, tx: Sender<ReplEvent>) {
+        self.repl = Some(tx);
+    }
+
     /// Group commit: flush (and fsync when configured) everything
     /// appended since the last sync. Frontends call this once per mailbox
     /// drain — right before blocking — so durability is batched off the
     /// hot path. A sync failure disables journaling loudly rather than
     /// taking the server down; the on-disk log is poisoned on the way out
     /// so a later recovery cannot mistake the truncated history for a
-    /// complete one (see [`Journal::poison`]).
+    /// complete one (see [`Journal::poison`]). Replication ships strictly
+    /// behind this commit: staged frames go to the standby only once the
+    /// sync succeeds, and a disabled journal disables the stream with it.
     pub(crate) fn sync_journal(&mut self) {
         let Some(j) = self.journal.as_mut() else { return };
         if let Err(e) = j.sync() {
             eprintln!("leader: journal sync failed ({e:#}); journaling disabled");
             if let Some(j) = self.journal.take() {
                 j.poison();
+            }
+            self.repl = None;
+            self.repl_pending.clear();
+            return;
+        }
+        if self.repl.is_some() && !self.repl_pending.is_empty() {
+            let tx = self.repl.as_ref().expect("checked above");
+            let mut sender_gone = false;
+            for (index, framed) in self.repl_pending.drain(..) {
+                if tx.send(ReplEvent::Record(index, framed)).is_err() {
+                    sender_gone = true;
+                    break;
+                }
+            }
+            if sender_gone {
+                self.repl = None;
+                self.repl_pending.clear();
             }
         }
     }
@@ -739,10 +855,22 @@ impl<D: ServerDriver> Reactor<D> {
         let t_ns = self.jbase_ns
             + self.driver.now().saturating_duration_since(self.jepoch).as_nanos() as u64;
         let Some(j) = self.journal.as_mut() else { return };
-        if let Err(e) = j.append(t_ns, ev) {
-            eprintln!("leader: journal write failed ({e:#}); journaling disabled");
-            if let Some(j) = self.journal.take() {
-                j.poison();
+        match j.append(t_ns, ev) {
+            Ok(index) => {
+                if self.repl.is_some() {
+                    // Stage the identical framed bytes for the standby;
+                    // they leave for the sender thread only after the
+                    // group commit that makes them durable (`sync_journal`).
+                    self.repl_pending.push((index, journal::frame_record(t_ns, ev)));
+                }
+            }
+            Err(e) => {
+                eprintln!("leader: journal write failed ({e:#}); journaling disabled");
+                if let Some(j) = self.journal.take() {
+                    j.poison();
+                }
+                self.repl = None;
+                self.repl_pending.clear();
             }
         }
     }
@@ -837,6 +965,8 @@ impl<D: ServerDriver> Reactor<D> {
             send_seq: parts.send_seq,
             replay_fail: VecDeque::new(),
             replaying: false,
+            repl: None,
+            repl_pending: Vec::new(),
         })
     }
 
@@ -936,10 +1066,15 @@ impl<D: ServerDriver> Reactor<D> {
     /// collect phase (a run whose central is in flight has no deadline —
     /// [`RunMachine::collect_deadline`] hides the stale one, else it
     /// would spin this wait at zero for the whole central), or the
-    /// re-dial retry time while jobs wait out a site outage.
+    /// re-dial retry time while dead site links wait out a backoff. The
+    /// re-dial deadline holds even with an empty queue: a pull, a label
+    /// cache, and the next submit all want the star healthy, and an idle
+    /// server has no other event to wake it (pinned by
+    /// `severed_site_is_redialed_on_schedule_while_idle` in
+    /// `rust/tests/channel_harness.rs`).
     pub(crate) fn next_deadline(&self) -> Option<Instant> {
         let runs = self.active.values().filter_map(|e| e.machine.collect_deadline()).min();
-        let redial = if self.queue.is_empty() { None } else { self.redial_after };
+        let redial = self.redial_after;
         match (runs, redial) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -1179,6 +1314,15 @@ impl<D: ServerDriver> Reactor<D> {
         if self.driver.take_down(site) {
             eprintln!("leader: site {site} link down: {err}");
         }
+        // Schedule the re-dial *now*, not at the next submit: an idle
+        // server has no other reason to call `redial_links`, and the next
+        // client should find the star already healed rather than pay the
+        // dial latency (see `next_deadline`, which turns this into a
+        // wakeup).
+        if self.redial_after.is_none() {
+            let delay = self.redial_backoff.next_delay();
+            self.redial_after = Some(self.driver.now() + delay);
+        }
         let mut runs: Vec<u32> = self.active.keys().copied().collect();
         runs.sort_unstable();
         for run in runs {
@@ -1226,12 +1370,22 @@ impl<D: ServerDriver> Reactor<D> {
         // Client input is untrusted: refuse specs the pipeline would panic
         // or misbehave on *now*, not after every site has done DML work —
         // and never let one bad job take the reactor (and every other
-        // client's runs) down.
+        // client's runs) down. These rejections refund the admission token
+        // charged above: the client spent no server work, and during
+        // overload a burned token per refusal would rate-starve a
+        // well-behaved tenant on rejections it never caused (only
+        // `RateLimited` itself keeps the charge — that *is* the meter).
         if let Err(e) = validate_spec(&spec, self.cfg.backend) {
+            if let Some(bucket) = self.buckets.get_mut(&client) {
+                bucket.refund();
+            }
             self.reject_submit(client, RejectCode::BadSpec, 0, format!("bad job spec: {e:#}"));
             return;
         }
         if self.queue.len() >= self.opts.queue_depth {
+            if let Some(bucket) = self.buckets.get_mut(&client) {
+                bucket.refund();
+            }
             self.reject_submit(
                 client,
                 RejectCode::QueueFull,
@@ -1243,9 +1397,19 @@ impl<D: ServerDriver> Reactor<D> {
         let run = self.next_run;
         self.next_run = self.next_run.wrapping_add(1).max(1); // run 0 = "no run"
         if self.modern.contains(&client) {
-            // jobs ahead of this one = everything running + everything queued
-            let position = (self.active.len() + self.queue.len()) as u32;
-            let eta_ns = (self.central_mean_ns * position as f64) as u64;
+            // Jobs ahead of this one: everything running, plus the queued
+            // jobs the scheduler will serve first — the whole backlog under
+            // FIFO, this client's lane-schedule position under DRR. The ETA
+            // is honest about having no data: until a first central
+            // completes there is no mean to extrapolate, and 0 would read
+            // as "runs immediately" at any position.
+            let position =
+                (self.active.len() + self.queue.position_for(client, spec.priority)) as u32;
+            let eta_ns = if self.centrals_done == 0 {
+                ETA_UNKNOWN_NS
+            } else {
+                (self.central_mean_ns * position as f64) as u64
+            };
             self.send_client(client, &Message::JobAcceptExt { run, position, eta_ns });
         } else {
             self.send_client(client, &Message::JobAccept { run });
@@ -1270,6 +1434,25 @@ impl<D: ServerDriver> Reactor<D> {
         self.annotate(JournalEvent::Rejected { client });
     }
 
+    /// Revive dead site links now, scheduling the next attempt (capped,
+    /// jittered backoff) on failure. Returns whether the star is healthy.
+    fn redial_links(&mut self) -> bool {
+        if let Err(e) = self.driver.ensure_links() {
+            let delay = self.redial_backoff.next_delay();
+            eprintln!(
+                "leader: sites unreachable ({e:#}); {} queued job(s) wait, retrying \
+                 in {delay:?}",
+                self.queue.len()
+            );
+            self.redial_after = Some(self.driver.now() + delay);
+            false
+        } else {
+            self.redial_after = None;
+            self.redial_backoff.reset();
+            true
+        }
+    }
+
     /// Start queued jobs while slots are free. Called after every event.
     /// A failed re-dial does *not* reject the queue: the jobs stay queued
     /// and the next attempt waits out a capped, jittered backoff (the
@@ -1277,24 +1460,24 @@ impl<D: ServerDriver> Reactor<D> {
     /// site outage must not destroy every pending job, and back-to-back
     /// dial timeouts must not wedge the reactor.
     fn try_start_jobs(&mut self) {
+        // A pending re-dial fires on schedule even when no start is
+        // possible (empty queue, full slots): nothing else would wake the
+        // star back up on an idle server, and `next_deadline` arms the
+        // Tick for exactly this moment.
+        if self.redial_after.is_some_and(|t| self.driver.now() >= t)
+            && (self.queue.is_empty() || self.active.len() >= self.opts.max_jobs)
+        {
+            self.redial_links();
+        }
         while self.active.len() < self.opts.max_jobs && !self.queue.is_empty() {
             if let Some(not_before) = self.redial_after {
                 if self.driver.now() < not_before {
                     return; // still backing off; jobs wait in the queue
                 }
             }
-            if let Err(e) = self.driver.ensure_links() {
-                let delay = self.redial_backoff.next_delay();
-                eprintln!(
-                    "leader: sites unreachable ({e:#}); {} queued job(s) wait, retrying \
-                     in {delay:?}",
-                    self.queue.len()
-                );
-                self.redial_after = Some(self.driver.now() + delay);
+            if !self.redial_links() {
                 return;
             }
-            self.redial_after = None;
-            self.redial_backoff.reset();
             let job = self.queue.pop().expect("checked non-empty");
             self.annotate(JournalEvent::Started { run: job.run });
             let n_sites = self.driver.n_sites();
@@ -1767,6 +1950,236 @@ pub(crate) fn client_frame_to_event(client: u64, frame: &[u8]) -> Result<Event> 
     }
 }
 
+// ─── journal replication (warm standby) ────────────────────────────────────
+
+/// What feeds the replication sender thread ([`spawn_replicator`]): the
+/// reactor after each group commit, and the acceptor when a role-4 peer
+/// handshakes on the job socket.
+pub(crate) enum ReplEvent {
+    /// One journal record became durable: `(record index, framed bytes)`.
+    /// Indices at or below what catch-up already streamed are skipped.
+    Record(u64, Vec<u8>),
+    /// A standby completed the role-4 handshake and wants the journal.
+    Standby(TcpStream),
+}
+
+/// The primary's replication sender: owns the (single, fenced) standby
+/// link off the reactor thread, so a slow or dead standby can never stall
+/// serving. Durable records arrive via `rx` and are streamed as
+/// `JREPLRECORD`; an idle link gets a `JREPLHEARTBEAT` every `heartbeat`
+/// (a quarter of `[leader] standby_timeout`, so the standby's idle
+/// deadline only fires when the primary is truly gone); a send failure
+/// drops the standby link and nothing else. A newly connected standby is
+/// caught up from the journal file and *replaces* any previous one —
+/// newest wins, the fenced single-standby design (`docs/DEPLOY.md`).
+fn spawn_replicator(path: PathBuf, heartbeat: Duration, rx: Receiver<ReplEvent>) {
+    thread::spawn(move || {
+        // the live standby link and the highest record index shipped on it
+        let mut standby: Option<(TcpStream, u64)> = None;
+        loop {
+            match rx.recv_timeout(heartbeat) {
+                Ok(ReplEvent::Record(index, framed)) => {
+                    let Some((stream, shipped)) = standby.as_mut() else { continue };
+                    if index <= *shipped {
+                        continue; // catch-up already streamed it from the file
+                    }
+                    let frame = wire::encode(&Message::JreplRecord { framed });
+                    if let Err(e) = tcp::send_frame(stream, &frame) {
+                        eprintln!("leader: standby link lost ({e:#}); replication paused");
+                        standby = None;
+                    } else {
+                        *shipped = index;
+                    }
+                }
+                Ok(ReplEvent::Standby(stream)) => match catch_up_standby(&path, stream) {
+                    Ok(caught_up) => {
+                        if standby.is_some() {
+                            eprintln!(
+                                "leader: a new standby connected; fencing out the old \
+                                 one (single-standby replication, newest wins)"
+                            );
+                        }
+                        eprintln!(
+                            "leader: standby attached, {} journal record(s) replicated",
+                            caught_up.1
+                        );
+                        standby = Some(caught_up);
+                    }
+                    Err(e) => eprintln!("leader: standby catch-up failed: {e:#}"),
+                },
+                Err(RecvTimeoutError::Timeout) => {
+                    let Some((stream, _)) = standby.as_mut() else { continue };
+                    if let Err(e) =
+                        tcp::send_frame(stream, &wire::encode(&Message::JreplHeartbeat))
+                    {
+                        eprintln!("leader: standby link lost ({e:#}); replication paused");
+                        standby = None;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return, // server is done
+            }
+        }
+    });
+}
+
+/// Anti-entropy on standby connect: read its `JREPLHELLO` claim
+/// `(records, valid_bytes)`, and if that claim is a byte prefix of this
+/// journal — the record count fits and the framed sizes up to it sum to
+/// exactly its valid length — resume streaming at the suffix
+/// (`JREPLSTART{records}`); otherwise restart it from record 0 and stream
+/// everything. A standby journal is only ever a verbatim prefix of its
+/// primary's lineage by construction (it is written solely by this
+/// stream), so the size check is the cheap honest test; re-pointing a
+/// standby at an unrelated cluster calls for clearing its journal first
+/// (`docs/DEPLOY.md`). Returns the stream and the records it now holds.
+fn catch_up_standby(path: &Path, stream: TcpStream) -> Result<(TcpStream, u64)> {
+    let hello = match tcp::recv_frame(&stream)? {
+        Some(frame) => wire::decode(&frame)?,
+        None => bail!("standby closed before its JREPLHELLO"),
+    };
+    let Message::JreplHello { records, valid_bytes } = hello else {
+        bail!("standby opened the replication link with {hello:?} (expected JREPLHELLO)");
+    };
+    let (frames, _) = journal::framed_records(path)
+        .with_context(|| format!("read journal {} for standby catch-up", path.display()))?;
+    let prefix_ok = records <= frames.len() as u64 && {
+        let bytes: u64 = journal::MAGIC.len() as u64
+            + frames[..records as usize].iter().map(|f| f.len() as u64).sum::<u64>();
+        bytes == valid_bytes
+    };
+    let start = if prefix_ok { records } else { 0 };
+    tcp::send_frame(&stream, &wire::encode(&Message::JreplStart { from_record: start }))?;
+    for framed in &frames[start as usize..] {
+        let frame = wire::encode(&Message::JreplRecord { framed: framed.clone() });
+        tcp::send_frame(&stream, &frame)?;
+    }
+    Ok((stream, frames.len() as u64))
+}
+
+/// `dsc leader --standby`: follow the primary's journal over JREPL
+/// replication until the primary dies, then return — the caller promotes
+/// by serving from the replicated journal, which is exactly the
+/// crash-restart recovery [`serve_jobs`] already performs. Blocks for the
+/// whole standby lifetime; a primary that cannot be reached (yet) is
+/// re-dialed forever on a capped backoff. Returns the number of records
+/// the local journal holds at promotion.
+pub fn replicate_standby(cfg: &PipelineConfig) -> Result<u64> {
+    let primary = cfg.leader.standby_of.clone().ok_or_else(|| {
+        anyhow!("standby mode needs [leader] standby_of (the primary's job address)")
+    })?;
+    let path = cfg.leader.journal_path.clone().ok_or_else(|| {
+        anyhow!("standby mode needs [leader] journal_path (the journal being replicated)")
+    })?;
+    let timeouts = cfg.net.tcp_timeouts();
+    let idle = cfg.leader.standby_timeout;
+    let mut backoff = Backoff::new(cfg.seed ^ 0x57B7);
+    loop {
+        match follow_primary_once(&primary, &path, cfg.leader.journal_fsync, &timeouts, idle)
+        {
+            Ok(records) => {
+                eprintln!(
+                    "standby: primary {primary} is gone; promoting with {records} \
+                     journaled record(s)"
+                );
+                return Ok(records);
+            }
+            Err(e) => {
+                let delay = backoff.next_delay();
+                eprintln!("standby: {e:#}; retrying in {delay:?}");
+                thread::sleep(delay);
+            }
+        }
+    }
+}
+
+/// One replication session against the primary. `Ok(records)` means the
+/// session *established* (JREPLSTART received) and the link then died —
+/// idle past `[leader] standby_timeout` with the primary heartbeating at
+/// a quarter of it, an EOF, or a read error all mean the primary is gone
+/// and the standby's job is to promote, not to re-dial a ghost. `Err`
+/// means the session never established (connect refused, handshake
+/// failure): keep dialing.
+fn follow_primary_once(
+    primary: &str,
+    path: &Path,
+    fsync: bool,
+    timeouts: &TcpTimeouts,
+    idle: Duration,
+) -> Result<u64> {
+    // Local tail first: `open` truncates any torn tail, so after a sync
+    // the (records, valid_bytes) claim is exactly what is on disk.
+    let (mut journal, records) = Journal::open(path, fsync)?;
+    journal.sync().with_context(|| format!("sync journal {}", path.display()))?;
+    let valid_bytes = std::fs::metadata(path)
+        .with_context(|| format!("stat journal {}", path.display()))?
+        .len();
+    let stream = tcp::connect_standby(primary, timeouts, Some(idle))?;
+    let hello = Message::JreplHello { records: records.len() as u64, valid_bytes };
+    tcp::send_frame(&stream, &wire::encode(&hello)).context("send JREPLHELLO")?;
+    let start = match tcp::recv_frame(&stream).context("await JREPLSTART")? {
+        Some(frame) => match wire::decode(&frame)? {
+            Message::JreplStart { from_record } => from_record,
+            other => bail!("primary answered JREPLHELLO with {other:?}"),
+        },
+        None => bail!(
+            "primary closed the link before JREPLSTART — is replication enabled \
+             there ([leader] journal_path)?"
+        ),
+    };
+    let mut held = records.len() as u64;
+    if start != held {
+        if start != 0 {
+            bail!(
+                "primary wants to resume replication at record {start}, but this \
+                 standby holds {held}"
+            );
+        }
+        // Anti-entropy said this file is not a prefix of the primary's
+        // history: reset it and take the full stream.
+        eprintln!(
+            "standby: journal {} diverged from the primary ({held} local record(s)); \
+             resetting and taking the full stream",
+            path.display()
+        );
+        drop(journal);
+        std::fs::remove_file(path)
+            .with_context(|| format!("reset journal {}", path.display()))?;
+        let (fresh, recovered) = Journal::open(path, fsync)?;
+        debug_assert!(recovered.is_empty());
+        journal = fresh;
+        held = 0;
+    }
+    eprintln!("standby: following {primary} from record {held}");
+    loop {
+        let frame = match tcp::recv_frame(&stream) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => {
+                eprintln!("standby: primary closed the replication link");
+                break;
+            }
+            Err(e) => {
+                eprintln!("standby: replication link died: {e:#}");
+                break;
+            }
+        };
+        match wire::decode(&frame).context("decode replication frame")? {
+            Message::JreplRecord { framed } => {
+                let (_, count) = journal
+                    .append_framed(&framed)
+                    .with_context(|| format!("apply replicated record {}", held + 1))?;
+                // Per-record durability: the whole point of standing by is
+                // surviving the primary's death at any instant.
+                journal.sync()?;
+                held = count;
+            }
+            Message::JreplHeartbeat => {} // the read itself reset the idle clock
+            other => bail!("primary sent {other:?} on the replication link"),
+        }
+    }
+    journal.sync()?;
+    Ok(held)
+}
+
 // ─── TCP frontend ──────────────────────────────────────────────────────────
 
 struct SiteLink {
@@ -1918,6 +2331,17 @@ pub fn serve_jobs(
         journal = Some(j);
     }
 
+    // Replication plane: with a journal configured, a sender thread owns
+    // the (single, fenced) standby link — the acceptor hands role-4
+    // connections over, the reactor hands framed records over after each
+    // group commit, and the thread heartbeats the link when idle so the
+    // standby's promotion deadline only fires on a truly dead primary.
+    let repl_tx = cfg.leader.journal_path.as_ref().map(|path| {
+        let (rtx, rrx) = mpsc::channel::<ReplEvent>();
+        spawn_replicator(path.clone(), cfg.leader.standby_timeout / 4, rrx);
+        rtx
+    });
+
     // Dial every site concurrently in the session dialect, then hand each
     // connection's read half to a reader thread.
     let conns = tcp::dial_sites(&cfg.net.sites, &timeouts, true)?;
@@ -1940,6 +2364,7 @@ pub fn serve_jobs(
         first_client,
         tx.clone(),
         Arc::clone(&clients),
+        repl_tx.clone(),
     );
 
     let driver = TcpDriver { timeouts, tx: tx.clone(), links, clients };
@@ -1954,6 +2379,13 @@ pub fn serve_jobs(
             if let Some(j) = journal.take() {
                 reactor.attach_journal_resumed(j, last_t_ns);
             }
+            // Replication must be armed before the first append below: a
+            // record appended unarmed is never staged for the standby, and
+            // one caught up from the file just beforehand would be left
+            // with a permanent gap.
+            if let Some(rtx) = repl_tx {
+                reactor.attach_repl(rtx);
+            }
             // Mark the restart durably, then act it out: the old process's
             // in-flight runs restart from scratch on the fresh links (their
             // old sites, workers and clients died with it); completed runs
@@ -1966,6 +2398,9 @@ pub fn serve_jobs(
             let mut reactor = Reactor::new(cfg.clone(), opts.clone(), driver, pool)?;
             if let Some(j) = journal.take() {
                 reactor.attach_journal(j);
+            }
+            if let Some(rtx) = repl_tx {
+                reactor.attach_repl(rtx);
             }
             reactor
         }
@@ -2021,11 +2456,11 @@ fn spawn_site_reader(stream: TcpStream, site: usize, gen: u64, tx: Sender<Event>
     });
 }
 
-/// Accept thread for the client socket: handshakes, registers the write
-/// half with the driver's client map, and spawns a per-connection reader.
-/// Handshake failures (port scans, version skew) are logged and never take
-/// the server down; persistent accept errors back off like the site
-/// daemon.
+/// Accept thread for the job socket: handshakes, registers a client's
+/// write half with the driver's client map and spawns its reader — or
+/// hands a role-4 standby to the replication sender. Handshake failures
+/// (port scans, version skew) are logged and never take the server down;
+/// persistent accept errors back off like the site daemon.
 fn spawn_acceptor(
     listener: TcpListener,
     timeouts: TcpTimeouts,
@@ -2033,13 +2468,14 @@ fn spawn_acceptor(
     first_client: u64,
     tx: Sender<Event>,
     clients: Arc<Mutex<HashMap<u64, Arc<TcpStream>>>>,
+    repl: Option<Sender<ReplEvent>>,
 ) {
     thread::spawn(move || {
         let mut next_client = first_client;
         let mut backoff = Backoff::new(seed ^ 0x5EE1);
         loop {
-            match tcp::accept_client(&listener, &timeouts) {
-                Ok(stream) => {
+            match tcp::accept_job_peer(&listener, &timeouts) {
+                Ok(tcp::JobPeer::Client(stream)) => {
                     backoff.reset();
                     let client = next_client;
                     next_client += 1;
@@ -2052,6 +2488,25 @@ fn spawn_acceptor(
                     };
                     clients.lock().unwrap().insert(client, Arc::new(stream));
                     spawn_client_reader(rd, client, tx.clone());
+                }
+                Ok(tcp::JobPeer::Standby(stream)) => {
+                    backoff.reset();
+                    match &repl {
+                        Some(rtx) => {
+                            if rtx.send(ReplEvent::Standby(stream)).is_err() {
+                                eprintln!(
+                                    "leader: replication sender is gone; dropping standby"
+                                );
+                            }
+                        }
+                        // dropping the stream EOFs the standby, which keeps
+                        // re-dialing and logging — the misconfiguration is
+                        // visible on both ends
+                        None => eprintln!(
+                            "leader: refusing a standby — no journal configured, \
+                             nothing to replicate (set [leader] journal_path)"
+                        ),
+                    }
                 }
                 Err(e) => {
                     eprintln!("leader: client accept failed: {e:#}");
@@ -2110,17 +2565,27 @@ impl ClientLink for TcpClient {
     }
 }
 
+/// JOBACCEPT2's `eta_ns` before the leader has completed a single central:
+/// there is no duration mean to extrapolate yet, and `0` would be
+/// indistinguishable from "starts immediately". Clients print "unknown"
+/// (or similar) for this value instead of a time.
+pub const ETA_UNKNOWN_NS: u64 = u64::MAX;
+
 /// What a modern-dialect accept (JOBACCEPT2) carries — returned by
 /// [`JobClient::submit_tracked`].
 #[derive(Clone, Copy, Debug)]
 pub struct Accepted {
     /// Assigned run id.
     pub run: u32,
-    /// Jobs ahead of this one (active + queued) when the leader accepted
-    /// it.
+    /// Jobs ahead of this one when the leader accepted it: everything
+    /// running plus the queued jobs the scheduler will serve first (the
+    /// whole backlog under FIFO; this client's DRR lane-schedule position
+    /// under `[leader] fair_queue`).
     pub position: u32,
     /// Estimated nanoseconds until this job starts, from the leader's
-    /// running mean of central durations; 0 until a first run completes.
+    /// running mean of central durations; [`ETA_UNKNOWN_NS`] (`u64::MAX`)
+    /// until a first run completes — an honest "no data yet", not a
+    /// promise of immediacy.
     pub eta_ns: u64,
 }
 
@@ -2405,5 +2870,88 @@ mod tests {
         assert!(b.try_take(t1).is_ok());
         assert!(b.try_take(t1).is_ok());
         assert!(b.try_take(t1).is_err());
+    }
+
+    #[test]
+    fn token_bucket_refund_restores_a_charge() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(1.0, 2.0, t0);
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_err(), "burst of 2 is spent");
+        // a charge-then-refund round trip is a no-op on the balance:
+        // refunding twice restores both burst tokens with no time passing
+        b.refund();
+        b.refund();
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_err());
+    }
+
+    #[test]
+    fn token_bucket_refund_never_exceeds_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(1.0, 2.0, t0);
+        // refunding a full bucket must not bank a third token
+        b.refund();
+        b.refund();
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_ok());
+        assert!(b.try_take(t0).is_err());
+    }
+
+    #[test]
+    fn drr_position_of_next_matches_actual_pop_order() {
+        // Every (client, weight) probe against a mixed backlog: the
+        // prediction must equal the pop count observed when the probe job
+        // is actually pushed and the queue drained for real.
+        let backlogs: &[&[(u64, u32)]] = &[
+            &[],
+            &[(1, 1)],
+            &[(1, 3), (1, 3), (2, 1)],
+            &[(1, 1), (2, 2), (1, 1), (3, 4), (2, 2)],
+            &[(5, 16), (5, 16), (6, 1), (7, 2), (6, 1)],
+        ];
+        for (case, backlog) in backlogs.iter().enumerate() {
+            for &(probe_client, probe_weight) in
+                &[(1u64, 1u32), (1, 5), (2, 1), (9, 1), (9, 16)]
+            {
+                let mut q = DrrQueue::new();
+                for (i, &(c, w)) in backlog.iter().enumerate() {
+                    q.push(c, w, (c, i as u32));
+                }
+                let predicted = q.position_of_next(probe_client, probe_weight);
+                q.push(probe_client, probe_weight, (probe_client, u32::MAX));
+                let mut served = 0usize;
+                while let Some((c, i)) = q.pop() {
+                    if (c, i) == (probe_client, u32::MAX) {
+                        break;
+                    }
+                    served += 1;
+                }
+                assert_eq!(
+                    predicted, served,
+                    "case {case}: probe ({probe_client}, w{probe_weight})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drr_position_of_next_is_read_only_and_respects_mid_visit_deficit() {
+        let mut q = DrrQueue::new();
+        for i in 0..4 {
+            q.push(1, 3, (1u64, i)); // weight-3 lane
+        }
+        q.push(2, 1, (2u64, 0));
+        // serve one job: lane 1 is mid-visit with deficit 2 remaining
+        assert_eq!(q.pop(), Some((1, 0)));
+        // a new client-2 job waits for the rest of lane 1's visit (2 jobs),
+        // the client-2 job already queued ahead in its own lane, and lane
+        // 1's next one-job visit before client 2's lane comes around again
+        assert_eq!(q.position_of_next(2, 1), 4);
+        // the probe must not have mutated the schedule
+        let order: Vec<(u64, i32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(1, 1), (1, 2), (2, 0), (1, 3)]);
     }
 }

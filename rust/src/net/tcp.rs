@@ -55,6 +55,12 @@ const ROLE_CLIENT: u8 = 2;
 /// knows *at handshake time* whether to speak the one-shot or the session
 /// dialect — and so a pre-session build fails loudly on the role check.
 const ROLE_JOB_LEADER: u8 = 3;
+/// A warm standby (`dsc leader --standby`) dialing a serving primary's job
+/// socket to receive journal replication (JREPL frames, wire tags 22–25).
+/// A new role rather than a flag on [`ROLE_CLIENT`], so a pre-failover
+/// primary refuses the connection loudly at handshake time instead of
+/// misreading replication hellos as job submissions.
+const ROLE_STANDBY: u8 = 4;
 const HELLO_LEN: usize = 11;
 
 /// Socket deadlines for the TCP backend (config `[net]`).
@@ -537,10 +543,19 @@ impl TcpClient {
     }
 }
 
-/// Leader side: accept + handshake one client connection on the job
-/// socket. Returns the raw stream (the job server splits it into a reader
-/// thread and a reactor-owned writer).
-pub fn accept_client(listener: &TcpListener, t: &TcpTimeouts) -> Result<TcpStream> {
+/// What a completed handshake on the leader's job socket turned out to be:
+/// a submitting client (role 2) or a warm standby asking for journal
+/// replication (role 4).
+pub enum JobPeer {
+    Client(TcpStream),
+    Standby(TcpStream),
+}
+
+/// Leader side: accept + handshake one connection on the job socket.
+/// Returns the raw stream tagged with what the peer is (the job server
+/// splits a client into a reader thread and a reactor-owned writer, and
+/// hands a standby to the replication sender).
+pub fn accept_job_peer(listener: &TcpListener, t: &TcpTimeouts) -> Result<JobPeer> {
     let (mut stream, peer) = listener.accept().context("accept client")?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
@@ -549,10 +564,58 @@ pub fn accept_client(listener: &TcpListener, t: &TcpTimeouts) -> Result<TcpStrea
     // Same reply-before-validate convention as the site listener.
     stream.write_all(&encode_hello(ROLE_LEADER, hello.site_id)).context("send hello")?;
     check_version(hello.version)?;
-    if hello.role != ROLE_CLIENT {
-        bail!("peer {peer} presented role {} (expected a client)", hello.role);
-    }
+    let standby = match hello.role {
+        ROLE_CLIENT => false,
+        ROLE_STANDBY => true,
+        ROLE_SITE => bail!(
+            "peer {peer} is a dsc site — the leader dials sites from its --sites \
+             list; sites do not dial the job socket"
+        ),
+        other => bail!("peer {peer} presented role {other} (expected a client)"),
+    };
     stream.set_read_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    stream.set_write_timeout(opt_timeout(t.io)).context("set io timeout")?;
+    Ok(if standby { JobPeer::Standby(stream) } else { JobPeer::Client(stream) })
+}
+
+/// Leader side: accept + handshake one *client* connection on the job
+/// socket — [`accept_job_peer`] for callers with no replication plane,
+/// which refuse a standby loudly.
+pub fn accept_client(listener: &TcpListener, t: &TcpTimeouts) -> Result<TcpStream> {
+    match accept_job_peer(listener, t)? {
+        JobPeer::Client(stream) => Ok(stream),
+        JobPeer::Standby(_) => {
+            bail!("peer is a dsc standby, but this leader has no replication plane")
+        }
+    }
+}
+
+/// Standby side: dial a serving primary's job socket and run the role-4
+/// handshake. `idle_limit` is the standby's promotion deadline — reads on
+/// the returned stream must wake at least that often for the idle clock to
+/// fire (same rule as [`SiteListener::accept`]), so the socket read
+/// timeout is clamped to it.
+pub fn connect_standby(
+    addr: &str,
+    t: &TcpTimeouts,
+    idle_limit: Option<Duration>,
+) -> Result<TcpStream> {
+    let mut stream =
+        connect_one(addr, t).with_context(|| format!("connect to primary at {addr}"))?;
+    stream.set_read_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    stream.set_write_timeout(opt_timeout(t.connect)).context("set handshake timeout")?;
+    stream.write_all(&encode_hello(ROLE_STANDBY, 0)).context("send hello")?;
+    let hello = read_hello(&mut stream)?;
+    check_version(hello.version)?;
+    if hello.role != ROLE_LEADER {
+        bail!("peer at {addr} answered with role {} (expected a leader)", hello.role);
+    }
+    let read_timeout = match (opt_timeout(t.io), idle_limit) {
+        (io, None) => io,
+        (None, Some(idle)) => Some(idle),
+        (Some(io), Some(idle)) => Some(io.min(idle)),
+    };
+    stream.set_read_timeout(read_timeout).context("set io timeout")?;
     stream.set_write_timeout(opt_timeout(t.io)).context("set io timeout")?;
     Ok(stream)
 }
@@ -704,5 +767,38 @@ mod tests {
     fn zero_io_timeout_means_disabled() {
         assert_eq!(opt_timeout(Duration::ZERO), None);
         assert_eq!(opt_timeout(Duration::from_secs(3)), Some(Duration::from_secs(3)));
+    }
+
+    #[test]
+    fn job_socket_dispatches_clients_and_standbys_by_role() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = TcpTimeouts::default();
+
+        // A role-4 hello lands as a standby peer…
+        let dial_addr = addr.clone();
+        let dialer = thread::spawn(move || {
+            connect_standby(&dial_addr, &TcpTimeouts::default(), None).map(|_| ())
+        });
+        assert!(matches!(accept_job_peer(&listener, &t).unwrap(), JobPeer::Standby(_)));
+        dialer.join().unwrap().unwrap();
+
+        // …a role-2 hello as a client…
+        let dial_addr = addr.clone();
+        let dialer =
+            thread::spawn(move || connect_client(&dial_addr, &TcpTimeouts::default()).map(|_| ()));
+        assert!(matches!(accept_job_peer(&listener, &t).unwrap(), JobPeer::Client(_)));
+        dialer.join().unwrap().unwrap();
+
+        // …and a replication-less accept refuses the standby loudly, after
+        // the reply-before-validate hello (so the dialer handshake itself
+        // succeeds and the refusal is the leader's, not a protocol error).
+        let dial_addr = addr;
+        let dialer = thread::spawn(move || {
+            connect_standby(&dial_addr, &TcpTimeouts::default(), None).map(|_| ())
+        });
+        let err = accept_client(&listener, &t).unwrap_err();
+        assert!(err.to_string().contains("no replication plane"), "{err}");
+        dialer.join().unwrap().unwrap();
     }
 }

@@ -48,6 +48,25 @@
 //! legacy SUBMIT(14) keep getting byte-identical JOBACCEPT(15)/REJECT(17),
 //! so pre-existing deployments see no change on the wire.
 //!
+//! Tags 22–25 are the **journal replication** (`JREPL`) family spoken on
+//! the link between a serving primary and a `dsc leader --standby`:
+//!
+//! ```text
+//! JREPLHELLO(22)  := records:u64 valid_bytes:u64   (standby → primary)
+//! JREPLSTART(23)  := from_record:u64               (primary → standby)
+//! JREPLRECORD(24) := len:u32 framed:[u8; len]      (primary → standby)
+//! JREPLBEAT(25)   :=                               (primary → standby)
+//! ```
+//!
+//! JREPLRECORD carries one of the run journal's own CRC-framed records
+//! (`coordinator/journal.rs`: `len crc payload`) **verbatim** — there is
+//! no second serialization of journal history, so a standby's journal file
+//! is byte-identical to the primary's by construction. JREPLHELLO opens
+//! the anti-entropy exchange (what the standby already holds), JREPLSTART
+//! names the record index streaming resumes from (0 orders a full resync),
+//! and JREPLBEAT keeps the link's idle deadline — the standby's promotion
+//! trigger — honest while the primary has nothing to commit.
+//!
 //! Codebook frames are exactly what the paper transmits (codewords + group
 //! sizes); label frames are the populated memberships coming back. SiteInfo
 //! and DmlRequest are the small control handshake that lets the leader size
@@ -117,10 +136,13 @@ pub enum Message {
     /// [`Message::JobAcceptExt`] / [`Message::RejectCoded`] replies.
     SubmitPri(JobSpec),
     /// Leader → client (modern dialect): the job was queued under this run
-    /// id; `position` counts the jobs ahead of it (active + queued at
-    /// accept time) and `eta_ns` is a start-time estimate from the
-    /// leader's running mean of central-step durations (0 = no estimate
-    /// yet).
+    /// id; `position` counts the jobs ahead of it at accept time (under
+    /// `[leader] fair_queue` it follows the client's own DRR lane
+    /// schedule, not the global arrival order) and `eta_ns` is a
+    /// start-time estimate from the leader's running mean of central-step
+    /// durations. Until the first central completes the leader has no
+    /// sample to extrapolate from and sends the documented *unknown*
+    /// sentinel `u64::MAX` — `0` means "starts now", never "no estimate".
     JobAcceptExt { run: u32, position: u32, eta_ns: u64 },
     /// Leader → client (modern dialect): structured refusal. `code` says
     /// *why* without string matching, `detail` is a per-code
@@ -134,6 +156,26 @@ pub enum Message {
     /// Legacy [`Message::SiteInfo`] stays byte-frozen — this is a new tag,
     /// and leaders that predate it simply never see the frame.
     SiteInfo2 { site: u32, n_points: u64, dim: u32, digest: u64, chunks: u32 },
+    /// Standby → primary: opens journal replication by stating what the
+    /// standby already holds — its journal's record count and valid byte
+    /// length — so the primary can stream only the missing suffix
+    /// (anti-entropy), or order a full resync if the two histories
+    /// diverged.
+    JreplHello { records: u64, valid_bytes: u64 },
+    /// Primary → standby: streaming starts at this record index. When it
+    /// is lower than what the standby announced (normally `0`), the
+    /// standby's journal does not prefix-match the primary's and must be
+    /// truncated before the stream is applied.
+    JreplStart { from_record: u64 },
+    /// Primary → standby: one run-journal record, as the journal's own
+    /// CRC-framed bytes (`len crc payload`) **verbatim**. The standby
+    /// validates the frame end to end and appends the identical bytes to
+    /// its journal, keeping the two files byte-identical by construction.
+    JreplRecord { framed: Vec<u8> },
+    /// Primary → standby: an "I am alive" beat sent while there is nothing
+    /// to commit, so the standby's idle deadline — its promotion trigger —
+    /// only fires when the primary is actually gone.
+    JreplHeartbeat,
 }
 
 /// Machine-readable refusal reason inside a [`Message::RejectCoded`].
@@ -272,10 +314,18 @@ const TAG_SUBMIT_PRI: u8 = 18;
 const TAG_JOB_ACCEPT2: u8 = 19;
 const TAG_REJECT2: u8 = 20;
 const TAG_SITEINFO2: u8 = 21;
+const TAG_JREPL_HELLO: u8 = 22;
+const TAG_JREPL_START: u8 = 23;
+const TAG_JREPL_RECORD: u8 = 24;
+const TAG_JREPL_BEAT: u8 = 25;
 
 /// Refusal messages are short human-readable sentences; anything larger is
 /// hostile.
 const MAX_REJECT_MSG: u32 = 64 * 1024;
+/// A replicated journal record may not claim more than the journal's own
+/// record ceiling (`coordinator/journal.rs` `MAX_RECORD` plus its 8-byte
+/// frame header); a larger length is hostile, not data.
+const MAX_JREPL_RECORD: u32 = (1 << 30) + 8;
 /// More sites than this in one report is hostile (the star tops out far
 /// lower).
 const MAX_REPORT_SITES: u32 = 100_000;
@@ -611,6 +661,22 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u64(*digest);
             w.u32(*chunks);
         }
+        Message::JreplHello { records, valid_bytes } => {
+            w.u8(TAG_JREPL_HELLO);
+            w.u64(*records);
+            w.u64(*valid_bytes);
+        }
+        Message::JreplStart { from_record } => {
+            w.u8(TAG_JREPL_START);
+            w.u64(*from_record);
+        }
+        Message::JreplRecord { framed } => {
+            assert!(framed.len() as u64 <= MAX_JREPL_RECORD as u64);
+            w.u8(TAG_JREPL_RECORD);
+            w.u32(framed.len() as u32);
+            w.buf.extend_from_slice(framed);
+        }
+        Message::JreplHeartbeat => w.u8(TAG_JREPL_BEAT),
     }
     w.buf
 }
@@ -789,6 +855,21 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             let chunks = r.u32()?;
             Message::SiteInfo2 { site, n_points, dim, digest, chunks }
         }
+        TAG_JREPL_HELLO => {
+            let records = r.u64()?;
+            let valid_bytes = r.u64()?;
+            Message::JreplHello { records, valid_bytes }
+        }
+        TAG_JREPL_START => Message::JreplStart { from_record: r.u64()? },
+        TAG_JREPL_RECORD => {
+            let len = r.u32()?;
+            if len > MAX_JREPL_RECORD {
+                bail!("replicated journal record of {len} bytes");
+            }
+            let framed = r.take(len as usize)?.to_vec();
+            Message::JreplRecord { framed }
+        }
+        TAG_JREPL_BEAT => Message::JreplHeartbeat,
         t => bail!("unknown message tag {t}"),
     };
     if !r.done() {
@@ -1271,6 +1352,59 @@ mod tests {
         frame.extend_from_slice(&0u32.to_le_bytes());
         frame.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&frame).is_err());
+    }
+
+    #[test]
+    fn jrepl_frames_roundtrip_with_exact_sizes() {
+        let hello = Message::JreplHello { records: 17, valid_bytes: 1 << 20 };
+        let frame = encode(&hello);
+        assert_eq!(decode(&frame).unwrap(), hello);
+        // 1 + 8 + 8
+        assert_eq!(frame.len(), 17);
+        assert_eq!(frame[0], TAG_JREPL_HELLO);
+
+        let start = Message::JreplStart { from_record: 9 };
+        let frame = encode(&start);
+        assert_eq!(decode(&frame).unwrap(), start);
+        // 1 + 8
+        assert_eq!(frame.len(), 9);
+
+        // A replicated record crosses the wire verbatim: the payload bytes
+        // come back untouched, wrapped only by tag + length.
+        let framed = vec![0xAAu8, 0xBB, 0xCC, 0x01, 0x02, 0x03, 0x04, 0x05, 0x06];
+        let rec = Message::JreplRecord { framed: framed.clone() };
+        let frame = encode(&rec);
+        assert_eq!(decode(&frame).unwrap(), rec);
+        assert_eq!(frame.len(), 1 + 4 + framed.len());
+        assert_eq!(&frame[5..], &framed[..]);
+
+        let beat = Message::JreplHeartbeat;
+        let frame = encode(&beat);
+        assert_eq!(decode(&frame).unwrap(), beat);
+        assert_eq!(frame, vec![TAG_JREPL_BEAT]);
+    }
+
+    #[test]
+    fn jrepl_frames_reject_truncation_and_hostile_length() {
+        let frames = [
+            encode(&Message::JreplHello { records: 3, valid_bytes: 99 }),
+            encode(&Message::JreplStart { from_record: 1 }),
+            encode(&Message::JreplRecord { framed: vec![1, 2, 3] }),
+        ];
+        for frame in frames {
+            for cut in 0..frame.len() {
+                assert!(decode(&frame[..cut]).is_err(), "cut at {cut} should fail");
+            }
+        }
+        // a hostile record length fails outright, allocating nothing
+        let mut f = vec![TAG_JREPL_RECORD];
+        f.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&f).is_err());
+        // and a plausible length with missing bytes fails on truncation
+        let mut f = vec![TAG_JREPL_RECORD];
+        f.extend_from_slice(&1_000u32.to_le_bytes());
+        f.push(7);
+        assert!(decode(&f).is_err());
     }
 
     #[test]

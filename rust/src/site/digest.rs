@@ -149,6 +149,48 @@ mod tests {
     }
 
     #[test]
+    fn every_split_of_three_chunks_appends_to_the_scratch_root() {
+        // Exhaustive boundary sweep: for shards of every size up to three
+        // full chunks and *every* split point — including cut = 0 (grow
+        // from empty), cut = n (a zero-point append), and cuts landing
+        // exactly on leaf boundaries — the incremental root equals the
+        // from-scratch root bit for bit. The selected-cut test above
+        // samples this space; this one closes it for small chunks, where
+        // the partial-leaf truncation arithmetic has all its edge cases.
+        let source = shard(64, 11);
+        for chunk in [1usize, 4, 5] {
+            for n in 0..=3 * chunk {
+                let mut full = Dataset::new("f", source.dim, source.n_classes);
+                for i in 0..n {
+                    full.push(source.point(i), source.labels[i]);
+                }
+                let scratch = ShardDigest::over(&full, chunk);
+                for cut in 0..=n {
+                    let mut grown = Dataset::new("g", source.dim, source.n_classes);
+                    for i in 0..cut {
+                        grown.push(source.point(i), source.labels[i]);
+                    }
+                    let mut d = ShardDigest::over(&grown, chunk);
+                    for i in cut..n {
+                        grown.push(source.point(i), source.labels[i]);
+                    }
+                    d.append(&grown, cut);
+                    assert_eq!(
+                        d.root(),
+                        scratch.root(),
+                        "chunk={chunk} n={n} cut={cut}"
+                    );
+                    assert_eq!(d.chunks(), scratch.chunks(), "chunk={chunk} n={n} cut={cut}");
+                    assert_eq!(d.n_points(), n);
+                    // a second zero-point append is a no-op on the root
+                    d.append(&grown, n);
+                    assert_eq!(d.root(), scratch.root(), "idempotent tail rehash");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn any_point_change_flips_the_root() {
         let a = shard(64, 5);
         let base = ShardDigest::over(&a, 16).root();

@@ -7,8 +7,16 @@
 //! tenants' p99 sojourn stays within a small constant factor of the
 //! flooder-free twin — DRR plus admission contains the blast radius.
 
+use std::sync::{Arc, Condvar, Mutex};
+
+use dsc::config::PipelineConfig;
+use dsc::coordinator::harness::{serve_channel, HarnessOpts};
 use dsc::coordinator::loadgen::{run_adversarial_mix, AdversarialMix};
+use dsc::coordinator::server::{ServerOpts, SubmitOutcome};
+use dsc::coordinator::spec_from_config;
+use dsc::data::{gmm, scenario, scenario::Scenario};
 use dsc::net::RejectCode;
+use dsc::spectral::Bandwidth;
 
 #[test]
 fn flood_is_clipped_with_rate_limit_codes_and_paying_tenants_survive() {
@@ -68,4 +76,110 @@ fn flood_is_clipped_with_rate_limit_codes_and_paying_tenants_survive() {
     // determinism: the drill is a pure function of the mix, bit for bit
     let again = run_adversarial_mix(&AdversarialMix::canonical(true)).unwrap();
     assert_eq!(again, flood);
+}
+
+/// A latch the central hook blocks on until the test opens it (and then
+/// stays open for every later run).
+#[derive(Default)]
+struct Latch {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn enter_and_wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A queue-full storm must not rate-starve the tenant that paid for it:
+/// a submit refused with `QueueFull` (or `BadSpec`) spent no server work,
+/// so its admission token is refunded — only `RateLimited` refusals keep
+/// the charge. Pre-fix, every storm reject burned a token, so a tenant
+/// probing a briefly-full queue came back to find its own allowance gone.
+#[test]
+fn queue_full_storm_does_not_burn_admission_tokens() {
+    let ds = gmm::paper_mixture_10d(400, 0.1, 51);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 51);
+    let datasets: Vec<_> = parts.iter().map(|p| p.data.clone()).collect();
+    let mut cfg = PipelineConfig {
+        total_codes: 64,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed: 51,
+        ..Default::default()
+    };
+    // 4 tokens, no refill: the virtual clock is never advanced, so the
+    // whole test runs on the initial burst — every charge is visible
+    cfg.leader.admit_rate = 1.0;
+    cfg.leader.admit_burst = 4;
+    let spec = spec_from_config(&cfg);
+
+    let latch = Arc::new(Latch::default());
+    let hook = {
+        let latch = Arc::clone(&latch);
+        Arc::new(move |_run: u32| latch.enter_and_wait())
+    };
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 1, // one queued job fills it
+            allow_label_pull: false,
+            central_workers: 1,
+            client_limit: Some(1),
+        },
+        faults: Vec::new(),
+        central_hook: Some(hook),
+        hangups: vec![],
+    };
+    let mut harness = serve_channel(datasets, &cfg, opts).unwrap();
+    let client = harness.client();
+
+    // two tokens spent for real work: run 1 active (held at its central),
+    // run 2 fills the depth-1 queue
+    let run1 = client.submit(&spec).unwrap();
+    let run2 = client.submit(&spec).unwrap();
+
+    // the storm: five submits against the full queue. Every refusal must
+    // be typed QueueFull — pre-fix the third one came back RateLimited,
+    // because the first two storm rejects had silently burned the
+    // tenant's remaining tokens
+    for i in 0..5 {
+        match client.try_submit_tracked(&spec).unwrap() {
+            SubmitOutcome::Rejected { code: RejectCode::QueueFull, .. } => {}
+            other => panic!("storm submit {i}: expected QueueFull, got {other:?}"),
+        }
+    }
+
+    // drain, then spend the two remaining tokens on real work: both are
+    // admitted, so the storm cost the tenant nothing
+    latch.open();
+    client.await_done(run1).unwrap();
+    client.await_done(run2).unwrap();
+    let run3 = client.submit(&spec).unwrap();
+    let run4 = client.submit(&spec).unwrap();
+
+    // the bucket is now genuinely empty, and a RateLimited refusal keeps
+    // its charge — the meter still meters
+    match client.try_submit_tracked(&spec).unwrap() {
+        SubmitOutcome::Rejected { code: RejectCode::RateLimited, detail, .. } => {
+            assert!(detail > 0, "RateLimited must carry the wait until the next token");
+        }
+        other => panic!("expected RateLimited on the empty bucket, got {other:?}"),
+    }
+
+    client.await_done(run3).unwrap();
+    client.await_done(run4).unwrap();
+    drop(client);
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.rejected, 6, "5 QueueFull + 1 RateLimited");
 }

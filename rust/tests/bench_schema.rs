@@ -1,0 +1,146 @@
+//! Schema lock on `BENCH_hotpath.json` — the recorded SIMD trajectory.
+//!
+//! The committed snapshot at the repo root and the file
+//! `cargo bench --bench hotpath -- --json` writes must stay structurally
+//! interchangeable: same top-level fields, same five kernel arms, same
+//! per-arm fields, so trend tooling reading the artifact never has to
+//! care which one it got. The writer lives in `benches/hotpath.rs`
+//! (`ArmRecord::to_json` + `json_mode`); this test is its schema twin —
+//! change one and the other must follow.
+//!
+//! By default the test checks the committed snapshot. CI points it at the
+//! freshly measured file too (`DSC_BENCH_JSON=bench_out/BENCH_hotpath.json`),
+//! so writer drift fails the build even though the snapshot is committed
+//! from an authoring environment that may predate the change.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use dsc::runtime::json::{self, Value};
+
+/// The five arms `json_mode` measures, in writer order.
+const ARMS: &[&str] = &["assign", "affinity", "spmv_dense", "spmv_sparse", "lanczos"];
+
+/// Top-level fields the writer emits. The committed placeholder may add
+/// `note`; nothing else is allowed.
+const TOP_FIELDS: &[&str] =
+    &["bench", "executed", "threads", "cpu_features", "dispatched_arm", "throughput_unit"];
+
+/// Per-arm fields, exactly as `ArmRecord::to_json` prints them.
+const ARM_FIELDS: &[&str] = &[
+    "config",
+    "point_dims_per_run",
+    "scalar_ms",
+    "dispatched_ms",
+    "throughput_scalar_pd_per_us",
+    "throughput_dispatched_pd_per_us",
+    "speedup",
+    "parity",
+];
+
+fn object(v: &Value, what: &str) -> BTreeMap<String, Value> {
+    match v {
+        Value::Object(m) => m.clone(),
+        other => panic!("{what} must be a JSON object, got {other:?}"),
+    }
+}
+
+/// A measured file carries numbers; the committed placeholder is allowed
+/// `null` until someone regenerates it on a machine with a toolchain.
+fn check_number(v: &Value, executed: bool, what: &str) {
+    match v {
+        Value::Num(x) => assert!(x.is_finite(), "{what} must be finite, got {x}"),
+        Value::Null => assert!(!executed, "{what} is null in a file claiming executed=true"),
+        other => panic!("{what} must be a number{}, got {other:?}", if executed { "" } else { " or null" }),
+    }
+}
+
+fn check_schema(text: &str, origin: &str) {
+    let doc = json::parse(text).unwrap_or_else(|e| panic!("{origin}: not valid JSON: {e:#}"));
+    let top = object(&doc, origin);
+
+    let executed = match top.get("executed") {
+        Some(Value::Bool(b)) => *b,
+        other => panic!("{origin}: executed must be a bool, got {other:?}"),
+    };
+
+    // key inventory: writer fields + the five arms, `note` optional
+    for key in TOP_FIELDS.iter().chain(ARMS) {
+        assert!(top.contains_key(*key), "{origin}: missing top-level key {key:?}");
+    }
+    for key in top.keys() {
+        let known = TOP_FIELDS.contains(&key.as_str())
+            || ARMS.contains(&key.as_str())
+            || key == "note";
+        assert!(known, "{origin}: unexpected top-level key {key:?} — writer and schema diverged");
+    }
+
+    assert_eq!(top["bench"].as_str(), Some("hotpath"), "{origin}: bench tag");
+    assert_eq!(
+        top["throughput_unit"].as_str(),
+        Some("point*dims/us"),
+        "{origin}: throughput unit is part of the schema"
+    );
+    // threads / cpu_features / dispatched_arm name the hardware; a
+    // measured file must fill them in
+    check_number(&top["threads"], executed, &format!("{origin}: threads"));
+    for key in ["cpu_features", "dispatched_arm"] {
+        match &top[key] {
+            Value::Str(s) => assert!(!s.is_empty(), "{origin}: {key} must be non-empty"),
+            Value::Null => assert!(!executed, "{origin}: {key} null with executed=true"),
+            other => panic!("{origin}: {key} must be a string or null, got {other:?}"),
+        }
+    }
+
+    for arm in ARMS {
+        let a = object(&top[*arm], &format!("{origin}: arm {arm}"));
+        for key in ARM_FIELDS {
+            assert!(a.contains_key(*key), "{origin}: arm {arm} missing {key:?}");
+        }
+        for key in a.keys() {
+            assert!(
+                ARM_FIELDS.contains(&key.as_str()),
+                "{origin}: arm {arm} has unexpected key {key:?}"
+            );
+        }
+        match &a["config"] {
+            Value::Str(s) => assert!(!s.is_empty(), "{origin}: arm {arm} config"),
+            other => panic!("{origin}: arm {arm} config must be a string, got {other:?}"),
+        }
+        assert_eq!(
+            a["parity"].as_str(),
+            Some("bit-identical"),
+            "{origin}: arm {arm} — the bench refuses to write anything else"
+        );
+        for key in
+            ["scalar_ms", "dispatched_ms", "throughput_scalar_pd_per_us",
+             "throughput_dispatched_pd_per_us", "speedup"]
+        {
+            check_number(&a[key], executed, &format!("{origin}: arm {arm} {key}"));
+        }
+        // point_dims_per_run may be "(measured)"-dependent in the
+        // placeholder (nnz is workload-derived), so null passes unexecuted
+        check_number(&a["point_dims_per_run"], executed, &format!("{origin}: arm {arm} ops"));
+    }
+}
+
+/// The committed repo-root snapshot always validates.
+#[test]
+fn committed_hotpath_snapshot_matches_the_writer_schema() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    check_schema(&text, "BENCH_hotpath.json (committed)");
+}
+
+/// CI sets `DSC_BENCH_JSON` to the file the bench just wrote, closing the
+/// loop against the live writer; locally without the env var this is a
+/// no-op.
+#[test]
+fn measured_hotpath_output_matches_the_writer_schema() {
+    let Ok(path) = std::env::var("DSC_BENCH_JSON") else {
+        return;
+    };
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    check_schema(&text, "DSC_BENCH_JSON (measured)");
+}

@@ -18,7 +18,7 @@ use std::time::Duration;
 use common::pull_global;
 use dsc::config::PipelineConfig;
 use dsc::coordinator::harness::{serve_channel, HarnessOpts};
-use dsc::coordinator::server::ServerOpts;
+use dsc::coordinator::server::{ServerOpts, ETA_UNKNOWN_NS};
 use dsc::coordinator::{run_pipeline, spec_from_config};
 use dsc::data::gmm;
 use dsc::data::scenario::{self, Scenario, SitePart};
@@ -563,9 +563,11 @@ fn admission_rate_limits_on_the_virtual_clock() {
 
 /// JOBACCEPT2's queue position is the live backlog: it climbs 0,1,2,3 as
 /// a burst lands behind a gated central, decreases strictly monotonically
-/// for probes submitted as the queue drains, and the ETA turns nonzero
-/// once the leader has a central-duration mean. Every run's central is
-/// individually gated, so each probe lands at an exactly known backlog.
+/// for probes submitted as the queue drains, and the ETA is the
+/// documented "unknown" sentinel (`ETA_UNKNOWN_NS` = `u64::MAX`) until
+/// the leader has a central-duration mean — never a fake `0` that reads
+/// as "immediate". Every run's central is individually gated, so each
+/// probe lands at an exactly known backlog.
 #[test]
 fn tracked_accept_position_follows_the_backlog() {
     let ds = gmm::paper_mixture_10d(400, 0.1, 51);
@@ -594,15 +596,19 @@ fn tracked_accept_position_follows_the_backlog() {
     let client = harness.client();
 
     // fill: positions climb with the backlog; no central has completed,
-    // so every ETA is still 0
+    // so every ETA is the unknown sentinel, not a bogus "0 ns from now"
     let a1 = client.submit_tracked(&spec).unwrap();
-    assert_eq!((a1.run, a1.position, a1.eta_ns), (1, 0, 0));
+    assert_eq!((a1.run, a1.position, a1.eta_ns), (1, 0, ETA_UNKNOWN_NS));
     gates[0].wait_entered(); // run 1 is mid-central and held
     let accepts: Vec<_> =
         (0..3).map(|_| client.submit_tracked(&spec).unwrap()).collect();
     for (i, a) in accepts.iter().enumerate() {
         assert_eq!(a.position as usize, i + 1, "fill position of run {}", a.run);
-        assert_eq!(a.eta_ns, 0, "no central mean yet for run {}", a.run);
+        assert_eq!(
+            a.eta_ns, ETA_UNKNOWN_NS,
+            "no central mean yet for run {} — the ETA must say so, not claim 0",
+            a.run
+        );
     }
 
     // drain, probing between completions: each probe sees a strictly
@@ -625,7 +631,11 @@ fn tracked_accept_position_follows_the_backlog() {
         "probe positions must decrease as the queue drains"
     );
     for a in &probes {
-        assert!(a.eta_ns > 0, "run {}: mean central is known, ETA must be > 0", a.run);
+        assert!(
+            a.eta_ns > 0 && a.eta_ns != ETA_UNKNOWN_NS,
+            "run {}: mean central is known, ETA must be a real estimate",
+            a.run
+        );
     }
 
     // release everything still held (runs 6 and 7 are mid-central or
@@ -648,6 +658,135 @@ fn tracked_accept_position_follows_the_backlog() {
     let (stats, _) = harness.join().unwrap();
     assert_eq!(stats.completed, 8);
     assert_eq!(stats.rejected, 0);
+}
+
+/// Under `[leader] fair_queue`, JOBACCEPT2's position is the client's
+/// place in the *DRR lane schedule*, not the raw backlog count: a fresh
+/// tenant submitting behind another tenant's pile is served at the next
+/// round-robin visit, and the accept frame must say so. Here tenant A
+/// queues three jobs behind its own gated run; tenant B's first submit
+/// then lands at position 2 (one active + one A job ahead), where the
+/// backlog-blind count would claim position 4.
+#[test]
+fn fair_queue_accept_position_follows_the_drr_schedule() {
+    let ds = gmm::paper_mixture_10d(400, 0.1, 51);
+    let parts = scenario::split(&ds, Scenario::D3, 1, 51);
+    let spec = spec_from_config(&cfg_with_seed(51));
+
+    let gates: Vec<Arc<Gate>> = (0..5).map(|_| Gate::new()).collect();
+    let hook = {
+        let gates = gates.clone();
+        Arc::new(move |run: u32| gates[(run - 1) as usize].enter_and_wait())
+    };
+    let mut cfg = cfg_with_seed(51);
+    cfg.leader.fair_queue = true;
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: false,
+            central_workers: 1,
+            client_limit: Some(2),
+        },
+        faults: Vec::new(),
+        central_hook: Some(hook),
+        hangups: vec![],
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+    let client_a = harness.client();
+    let client_b = harness.client();
+
+    // tenant A: run 1 starts and is held mid-central; runs 2..4 queue up
+    // in A's lane — a single lane is FIFO, so positions climb 1,2,3
+    let a1 = client_a.submit_tracked(&spec).unwrap();
+    assert_eq!((a1.run, a1.position), (1, 0));
+    gates[0].wait_entered();
+    for expect in 1..=3u32 {
+        let a = client_a.submit_tracked(&spec).unwrap();
+        assert_eq!(a.position, expect, "fill position of run {}", a.run);
+    }
+
+    // tenant B's first job: the backlog holds 3 A jobs, but DRR serves B
+    // at the very next lane visit — one active run + one A job ahead
+    let b = client_b.submit_tracked(&spec).unwrap();
+    assert_eq!(
+        b.position, 2,
+        "run {}: DRR schedule puts a fresh tenant at the next visit, \
+         not behind the whole backlog",
+        b.run
+    );
+    assert_eq!(b.eta_ns, ETA_UNKNOWN_NS, "no central mean yet");
+
+    // let everything finish (pop order is DRR: 1, 2, 5, 3, 4 — the gates
+    // are per-run, so opening them all up front is order-independent)
+    for g in &gates {
+        g.open();
+    }
+    for run in [1, 2, 3, 4] {
+        client_a.await_done(run).unwrap();
+    }
+    client_b.await_done(b.run).unwrap();
+    drop(client_a);
+    drop(client_b);
+    let (stats, _) = harness.join().unwrap();
+    assert_eq!(stats.completed, 5);
+}
+
+/// A site link that dies on an otherwise idle server is re-dialed on the
+/// backoff schedule, not at the next submit: `site_down` arms the retry
+/// deadline, `next_deadline` turns it into a wakeup, and `try_start_jobs`
+/// fires the re-dial even with an empty queue. Channel links can never
+/// actually be revived, so the observable is the harness's attempt
+/// counter — pre-fix it stays at zero forever because nothing ever wakes
+/// the star back up.
+#[test]
+fn severed_site_is_redialed_on_schedule_while_idle() {
+    let parts = workload();
+    let spec = spec_from_config(&cfg_with_seed(21));
+
+    let cfg = cfg_with_seed(0);
+    let opts = HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: false,
+            client_limit: Some(1),
+            ..Default::default()
+        },
+        // site 1 dies right after delivering run 1's codebook
+        faults: vec![Fault::DropSiteAfter { site: 1, frames: 2 }],
+        ..Default::default()
+    };
+    let mut harness = serve_channel(datasets(&parts), &cfg, opts).unwrap();
+
+    let client = harness.client();
+    let run = client.submit(&spec).unwrap();
+    let err = client.await_done(run).unwrap_err();
+    assert!(format!("{err:#}").contains("site 1"), "{err:#}");
+
+    // the server is now idle (nothing queued, nothing active) with a dead
+    // link; every tick past the armed deadline must attempt a re-dial.
+    // 20 virtual seconds clears the backoff cap (10s) each time.
+    for _ in 0..5 {
+        harness.tick(Duration::from_secs(20));
+    }
+    // ticks are asynchronous: wait (in real time) for the reactor to have
+    // drained them rather than racing it
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while harness.redial_attempts() < 5 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        harness.redial_attempts() >= 5,
+        "idle server re-dialed only {} time(s) across 5 expired backoff windows",
+        harness.redial_attempts()
+    );
+
+    drop(client);
+    let (stats, outcomes) = harness.join().unwrap();
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.failed, 1);
+    assert_eq!(outcomes[1].aborted_runs, 1);
 }
 
 /// Reuse-of-harness sanity: the typed client API is the same one `dsc

@@ -1,0 +1,350 @@
+//! Warm-standby failover: the kill-point sweep.
+//!
+//! The canonical three-tenant DRR mix from `journal_replay.rs` (one run
+//! stalled until the straggler deadline, one central gated) is executed
+//! once uninterrupted, then once per journal record index K with the
+//! primary reactor killed the moment its journal holds K records. Instead
+//! of restarting the same process, each kill promotes a **warm standby**:
+//! the primary's journal is replicated record by record through the real
+//! `JREPLRECORD` wire codec into a second journal file, the copy is
+//! checked byte-identical, and [`ChannelHarness::crash_and_failover`]
+//! resumes the reactor from the *standby's* journal — replay, re-attach
+//! to the surviving world, keep serving the still-unprocessed mailbox.
+//! Every client-visible outcome — accepted run ids, queue positions and
+//! ETAs, failure texts, reports with per-link byte counters, pulled
+//! labels — plus the durable queue pop order must equal the uninterrupted
+//! twin's, bit for bit, at **every** K. CI runs this file under
+//! `DSC_THREADS=1` and `=4` alongside the crash-restart sweep;
+//! `examples/failover.rs` re-proves the flow over TCP with a SIGKILLed
+//! primary process.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use common::pull_global;
+use dsc::config::PipelineConfig;
+use dsc::coordinator::harness::{
+    serve_channel_journaled, ChannelLink, HarnessOpts, HarnessTicker,
+};
+use dsc::coordinator::journal::{recover, JournalEvent};
+use dsc::coordinator::server::{JobClient, ServerOpts};
+use dsc::coordinator::{run_pipeline, spec_from_config};
+use dsc::data::gmm;
+use dsc::data::scenario::{self, Scenario, SitePart};
+use dsc::data::Dataset;
+use dsc::net::channel::Fault;
+use dsc::net::{JobSpec, LinkReport};
+use dsc::spectral::Bandwidth;
+
+fn workload() -> Vec<SitePart> {
+    // Small on purpose: the sweep re-runs the whole mix once per record.
+    let ds = gmm::paper_mixture_10d(600, 0.1, 21);
+    scenario::split(&ds, Scenario::D3, 2, 21)
+}
+
+fn datasets(parts: &[SitePart]) -> Vec<Dataset> {
+    parts.iter().map(|p| p.data.clone()).collect()
+}
+
+fn cfg_with_seed(seed: u64) -> PipelineConfig {
+    PipelineConfig {
+        total_codes: 32,
+        k_clusters: 4,
+        bandwidth: Bandwidth::MedianScale(0.5),
+        seed,
+        ..Default::default()
+    }
+}
+
+fn spec(seed: u64, priority: u32) -> JobSpec {
+    let mut spec = spec_from_config(&cfg_with_seed(seed));
+    spec.priority = priority;
+    spec
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dsc-fo-{}-{tag}.journal", std::process::id()))
+}
+
+/// Two-phase central gate (same shape as `journal_replay.rs`): the worker
+/// announces it entered run 2's central, then blocks until the script
+/// opens it.
+struct Gate {
+    entered: Mutex<bool>,
+    entered_cv: Condvar,
+    open: Mutex<bool>,
+    open_cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate {
+            entered: Mutex::new(false),
+            entered_cv: Condvar::new(),
+            open: Mutex::new(false),
+            open_cv: Condvar::new(),
+        })
+    }
+
+    fn enter_and_wait(&self) {
+        *self.entered.lock().unwrap() = true;
+        self.entered_cv.notify_all();
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.open_cv.wait(open).unwrap();
+        }
+    }
+
+    fn wait_entered(&self) {
+        let mut entered = self.entered.lock().unwrap();
+        while !*entered {
+            entered = self.entered_cv.wait(entered).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.open_cv.notify_all();
+    }
+}
+
+/// Everything a client of the mix can observe, in one `PartialEq` bundle
+/// (`central_ns` deliberately absent — it is real compute wall time, the
+/// one nondeterministic field a report carries).
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    run1: u32,
+    err1: String,
+    /// `(run, position, eta_ns)` of the four tracked accepts, send order.
+    tracked: Vec<(u32, u32, u64)>,
+    run6: u32,
+    /// `(run, n_codes, sigma, wall_ns, per_site)` per completed run.
+    reports: Vec<(u32, u32, f64, u64, Vec<LinkReport>)>,
+    /// `(run, global labels)` per completed run.
+    labels: Vec<(u32, Vec<u16>)>,
+}
+
+/// The canonical three-tenant mix (identical to `journal_replay.rs`, so
+/// the two sweeps prove restart and failover over the same history).
+fn drive_script(
+    clients: Vec<JobClient<ChannelLink>>,
+    ticker: HarnessTicker,
+    gate: Arc<Gate>,
+    parts: Arc<Vec<SitePart>>,
+) -> Outcome {
+    let mut clients = clients.into_iter();
+    let (a, b, c) = (
+        clients.next().unwrap(),
+        clients.next().unwrap(),
+        clients.next().unwrap(),
+    );
+    let run1 = a.submit(&spec(21, JobSpec::DEFAULT_PRIORITY)).unwrap();
+    let b1 = b.submit_tracked(&spec(33, 2)).unwrap();
+    let c1 = c.submit_tracked(&spec(55, 4)).unwrap();
+    let b2 = b.submit_tracked(&spec(34, 2)).unwrap();
+    let c2 = c.submit_tracked(&spec(56, 4)).unwrap();
+    let run6 = a.submit(&spec(22, JobSpec::DEFAULT_PRIORITY)).unwrap();
+
+    // Past run 1's collect deadline: it fails, freeing the single job slot
+    // for the DRR backlog built up above.
+    ticker.tick(Duration::from_secs(6));
+    let err1 = format!("{:#}", a.await_done(run1).unwrap_err());
+
+    // Run 2's central really blocked once, then history may flow.
+    gate.wait_entered();
+    gate.open();
+
+    let mut reports = Vec::new();
+    let mut labels = Vec::new();
+    for (client, run) in
+        [(&b, b1.run), (&c, c1.run), (&b, b2.run), (&c, c2.run), (&a, run6)]
+    {
+        let report = client.await_done(run).unwrap();
+        labels.push((run, pull_global(client, run, &report, &parts)));
+        reports.push((run, report.n_codes, report.sigma, report.wall_ns, report.per_site));
+    }
+    drop((a, b, c)); // all three tenants gone: the server may shut down
+    Outcome {
+        run1,
+        err1,
+        tracked: vec![
+            (b1.run, b1.position, b1.eta_ns),
+            (c1.run, c1.position, c1.eta_ns),
+            (b2.run, b2.position, b2.eta_ns),
+            (c2.run, c2.position, c2.eta_ns),
+        ],
+        run6,
+        reports,
+        labels,
+    }
+}
+
+fn mix_cfg() -> PipelineConfig {
+    let mut cfg = cfg_with_seed(0);
+    cfg.collect_timeout = Duration::from_secs(5); // virtual seconds
+    cfg.leader.fair_queue = true;
+    cfg
+}
+
+fn mix_opts(gate: &Arc<Gate>) -> HarnessOpts {
+    let hook = {
+        let gate = Arc::clone(gate);
+        Arc::new(move |run: u32| {
+            if run == 2 {
+                gate.enter_and_wait();
+            }
+        })
+    };
+    HarnessOpts {
+        server: ServerOpts {
+            max_jobs: 1,
+            queue_depth: 8,
+            allow_label_pull: true,
+            central_workers: 1,
+            client_limit: Some(3),
+        },
+        faults: vec![
+            Fault::DropRunFrames { site: 0, run: 1 },
+            Fault::DropRunFrames { site: 1, run: 1 },
+        ],
+        central_hook: Some(hook),
+        hangups: vec![],
+    }
+}
+
+/// What one full execution of the mix left behind, harvested from the
+/// journal the *surviving* reactor wrote (the standby's copy after a
+/// failover, the primary's when the run was uninterrupted).
+struct Executed {
+    outcome: Outcome,
+    stats: (u64, u64, u64),
+    sessions: Vec<(usize, usize)>,
+    /// Queue pop order, from the durable `Started` annotations.
+    started: Vec<u32>,
+    admitted: Vec<u32>,
+    finished: Vec<(u32, bool)>,
+    records: u64,
+}
+
+/// Run the mix once. With `kill_after = Some(k)`, the primary is killed
+/// at its K-record crash point and the warm standby (journaling into
+/// `standby_path`) is promoted in its place.
+fn execute(
+    parts: &Arc<Vec<SitePart>>,
+    primary_path: &PathBuf,
+    standby_path: &PathBuf,
+    kill_after: Option<u64>,
+) -> Executed {
+    let _ = fs::remove_file(primary_path);
+    let _ = fs::remove_file(standby_path);
+    let gate = Gate::new();
+    let mut harness = serve_channel_journaled(
+        datasets(parts),
+        &mix_cfg(),
+        mix_opts(&gate),
+        primary_path,
+        kill_after,
+    )
+    .unwrap();
+    let clients = vec![harness.client(), harness.client(), harness.client()];
+    let ticker = harness.ticker();
+    let script = {
+        let parts = Arc::clone(parts);
+        let gate = Arc::clone(&gate);
+        std::thread::spawn(move || drive_script(clients, ticker, gate, parts))
+    };
+    if kill_after.is_some() {
+        // Blocks until the primary dies mid-script, then replicates its
+        // journal into the standby (real JREPL codec, byte-identity
+        // checked inside) and promotes the standby reactor against the
+        // surviving world.
+        harness.crash_and_failover(standby_path).unwrap();
+    }
+    let outcome = script.join().expect("script thread panicked");
+    let (stats, outcomes) = harness.join().unwrap();
+
+    let survivor = if kill_after.is_some() { standby_path } else { primary_path };
+    if kill_after.is_some() {
+        // The dead primary's journal is frozen at the kill point; the
+        // promoted standby started from a byte-identical copy and only
+        // appended — so the primary's file is a byte-prefix of the
+        // standby's.
+        let primary = fs::read(primary_path).unwrap();
+        let standby = fs::read(standby_path).unwrap();
+        assert!(
+            standby.len() >= primary.len() && standby[..primary.len()] == primary[..],
+            "the dead primary's journal must be a byte-prefix of the standby's"
+        );
+    }
+    let recovered = recover(survivor).unwrap();
+    assert!(!recovered.torn, "a synced journal must not have a torn tail");
+    let mut started = Vec::new();
+    let mut admitted = Vec::new();
+    let mut finished = Vec::new();
+    for rec in &recovered.records {
+        match rec.event {
+            JournalEvent::Started { run } => started.push(run),
+            JournalEvent::Admitted { run, .. } => admitted.push(run),
+            JournalEvent::Completed { run } => finished.push((run, true)),
+            JournalEvent::Failed { run } => finished.push((run, false)),
+            _ => {}
+        }
+    }
+    Executed {
+        outcome,
+        stats: (stats.completed, stats.failed, stats.rejected),
+        sessions: outcomes.iter().map(|o| (o.runs_served, o.aborted_runs)).collect(),
+        started,
+        admitted,
+        finished,
+        records: recovered.records.len() as u64,
+    }
+}
+
+/// The headline: killing the primary at **every** journal record index K
+/// and promoting the warm standby yields the uninterrupted execution —
+/// labels, per-link byte counters, queue pop order, and every
+/// client-visible reply, bit for bit.
+#[test]
+fn failover_sweep_promotes_bit_identically() {
+    let parts = Arc::new(workload());
+    let primary = temp_path("primary");
+    let standby = temp_path("standby");
+
+    let reference = execute(&parts, &primary, &standby, None);
+    // Anchor the reference against the in-process pipeline: replication
+    // and promotion are not allowed to change what a job computes.
+    let base = run_pipeline(&parts, &cfg_with_seed(33)).unwrap();
+    let run2_labels =
+        &reference.outcome.labels.iter().find(|(run, _)| *run == 2).unwrap().1;
+    assert_eq!(run2_labels, &base.labels, "reference run 2 vs pipeline");
+    assert_eq!(reference.stats, (5, 1, 0));
+    assert_eq!(reference.admitted, vec![1, 2, 3, 4, 5, 6]);
+    assert!(reference.records > 0);
+
+    for k in 1..=reference.records {
+        let promoted = execute(&parts, &primary, &standby, Some(k));
+        assert_eq!(promoted.outcome, reference.outcome, "kill at record {k}");
+        assert_eq!(promoted.stats, reference.stats, "kill at record {k}: stats");
+        assert_eq!(
+            promoted.sessions, reference.sessions,
+            "kill at record {k}: site sessions"
+        );
+        assert_eq!(
+            promoted.started, reference.started,
+            "kill at record {k}: queue pop order"
+        );
+        assert_eq!(promoted.admitted, reference.admitted, "kill at record {k}");
+        assert_eq!(promoted.finished, reference.finished, "kill at record {k}");
+        assert_eq!(
+            promoted.records, reference.records,
+            "kill at record {k}: journal length"
+        );
+    }
+    let _ = fs::remove_file(&primary);
+    let _ = fs::remove_file(&standby);
+}
